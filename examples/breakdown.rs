@@ -1,0 +1,75 @@
+//! Online-phase breakdown (Fig 14 in miniature): time each stage of the
+//! TARDIS FFN pipeline — folded matmul, predictor, top-K aux, result
+//! fixing — on the tardis80 variant, and print the share decomposition.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example breakdown
+//! ```
+
+use anyhow::Result;
+use tardis::config::Manifest;
+use tardis::runtime::engine::{buffer_to_f32, buffer_to_i32};
+use tardis::runtime::Engine;
+use tardis::util::stats::Samples;
+
+fn time_stage<F: FnMut() -> Result<()>>(iters: usize, mut f: F) -> Result<f64> {
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f()?;
+        s.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(s.mean())
+}
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(&Manifest::default_path())?;
+    let engine = Engine::cpu()?;
+    let v = engine.load_variant(
+        &manifest, "tardis80",
+        Some(&["ffn_dense", "ffn_folded", "ffn_predictor", "ffn_aux",
+               "ffn_fix"]))?;
+    let d = manifest.model.d_model;
+    let x = engine.upload_f32(&vec![0.1f32; manifest.batch * d],
+                              &[manifest.batch, d])?;
+
+    let score = v.exec("ffn_predictor")?.run(&[&x])?;
+    let aux = v.exec("ffn_aux")?.run(&[&score[0]])?;
+    let iters = 40;
+
+    let t_dense = time_stage(iters, || {
+        let o = v.exec("ffn_dense")?.run(&[&x])?;
+        buffer_to_f32(&o[0]).map(|_| ())
+    })?;
+    let t_fold = time_stage(iters, || {
+        let o = v.exec("ffn_folded")?.run(&[&x])?;
+        buffer_to_f32(&o[0]).map(|_| ())
+    })?;
+    let t_pred = time_stage(iters, || {
+        let o = v.exec("ffn_predictor")?.run(&[&x])?;
+        buffer_to_f32(&o[0]).map(|_| ())
+    })?;
+    let t_aux = time_stage(iters, || {
+        let o = v.exec("ffn_aux")?.run(&[&score[0]])?;
+        buffer_to_i32(&o[0]).map(|_| ())
+    })?;
+    let t_fix = time_stage(iters, || {
+        let o = v.exec("ffn_fix")?.run(&[&x, &aux[0], &aux[1]])?;
+        buffer_to_f32(&o[0]).map(|_| ())
+    })?;
+
+    let total = t_fold + t_pred + t_aux + t_fix;
+    println!("TARDIS FFN online-phase breakdown (tardis80, K={}):",
+             v.spec.fix_capacity);
+    println!("  folded matmul  {:7.3} ms  {:5.1}%  (paper ~22%)",
+             t_fold, 100.0 * t_fold / total);
+    println!("  predictor      {:7.3} ms  {:5.1}%  (paper ~12%)",
+             t_pred, 100.0 * t_pred / total);
+    println!("  aux (top-K)    {:7.3} ms  {:5.1}%",
+             t_aux, 100.0 * t_aux / total);
+    println!("  result fixing  {:7.3} ms  {:5.1}%  (paper: dominant)",
+             t_fix, 100.0 * t_fix / total);
+    println!("  -- total       {:7.3} ms  vs dense FFN {:7.3} ms ({:.2}x)",
+             total, t_dense, t_dense / total);
+    Ok(())
+}

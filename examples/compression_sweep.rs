@@ -1,0 +1,50 @@
+//! Compression-ratio sweep on the live runtime: for each exported variant,
+//! generate the same prompt and report tokens/s, decode latency, and the
+//! modeled 4090 speedup side by side — a minimal Fig 13 you can eyeball.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example compression_sweep
+//! ```
+
+use anyhow::Result;
+use tardis::config::Manifest;
+use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::model::PjrtModel;
+use tardis::coordinator::request::SamplingParams;
+use tardis::costmodel;
+use tardis::runtime::Engine;
+use tardis::server::protocol::encode_text;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(&Manifest::default_path())?;
+    let engine = Engine::cpu()?;
+    let params = SamplingParams { max_tokens: 64, ..Default::default() };
+
+    println!("{:10} {:>7} {:>9} {:>12} {:>14}",
+             "variant", "ratio", "tok/s", "decode ms", "4090 e2e model");
+    let mut base_tps = None;
+    for v in manifest.variant_names() {
+        let variant = engine.load_variant(&manifest, v,
+                                          Some(&["decode", "prefill16"]))?;
+        let ratio = variant.spec.compression_ratio;
+        let model = PjrtModel::new(&engine, variant, manifest.batch,
+                                   manifest.model.max_seq,
+                                   manifest.model.vocab, vec![16])?;
+        let mut ie = InferenceEngine::new(model, EngineConfig::default());
+        let t0 = std::time::Instant::now();
+        let c = ie.generate_sequential(encode_text("the quick "), params)?;
+        let tps = c.tokens.len() as f64 / t0.elapsed().as_secs_f64();
+        if base_tps.is_none() {
+            base_tps = Some(tps);
+        }
+        let (_, e2e) = if ratio > 0.0 {
+            costmodel::tardis_speedup(&costmodel::FALCON_7B,
+                                      &costmodel::RTX_4090, 1, 128, ratio, 0.05)
+        } else {
+            (1.0, 1.0)
+        };
+        println!("{:10} {:6.1}% {:9.1} {:12.2} {:13.2}x",
+                 v, ratio * 100.0, tps, ie.decode_latency_ms.mean(), e2e);
+    }
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: load the TARDIS-folded model, generate text, compare with
+//! the dense baseline.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use tardis::config::Manifest;
+use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::model::PjrtModel;
+use tardis::coordinator::request::SamplingParams;
+use tardis::runtime::Engine;
+use tardis::server::protocol::{decode_tokens, encode_text};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(&Manifest::default_path())?;
+    let engine = Engine::cpu()?;
+    println!("platform: {}", engine.platform());
+    println!("model: {} ({} layers, d={}, act={})",
+             manifest.model.name, manifest.model.n_layers,
+             manifest.model.d_model, manifest.model.act);
+
+    let prompt = "the falcon ";
+    let params = SamplingParams { max_tokens: 40, ..Default::default() };
+
+    for variant in ["dense", "tardis80"] {
+        let v = engine.load_variant(&manifest, variant,
+                                    Some(&["decode", "prefill16"]))?;
+        let ratio = v.spec.compression_ratio;
+        let model = PjrtModel::new(&engine, v, manifest.batch,
+                                   manifest.model.max_seq,
+                                   manifest.model.vocab, vec![16])?;
+        let mut ie = InferenceEngine::new(model, EngineConfig::default());
+        let t0 = std::time::Instant::now();
+        let c = ie.generate_sequential(encode_text(prompt), params)?;
+        let dt = t0.elapsed().as_secs_f64();
+        println!();
+        println!("[{variant}] (FFN compression {:.1}%)", ratio * 100.0);
+        println!("  {}{}", prompt, decode_tokens(&c.tokens));
+        println!("  {} tokens, {:.2} tok/s, decode mean {:.2} ms",
+                 c.tokens.len(), c.tokens.len() as f64 / dt,
+                 ie.decode_latency_ms.mean());
+    }
+    Ok(())
+}

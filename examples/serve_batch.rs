@@ -1,0 +1,89 @@
+//! Serving demo: start the TCP server over two variants (dense +
+//! tardis80), fire a batch of concurrent clients at it, and report
+//! latency/throughput per variant — the paper's deployment story
+//! (§7.4's vLLM integration) end to end.
+//!
+//! PJRT buffers are not Send, so the engine/router stay on the main
+//! thread (serve() runs here) while clients drive from a worker pool.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_batch
+//! ```
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+use tardis::config::Manifest;
+use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::model::PjrtModel;
+use tardis::coordinator::router::Router;
+use tardis::runtime::Engine;
+use tardis::server::tcp::{client_roundtrip, serve};
+use tardis::util::stats::Samples;
+use tardis::util::threadpool::ThreadPool;
+
+const N_REQUESTS: usize = 12;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(&Manifest::default_path())?;
+    let engine = Engine::cpu()?;
+    let mut replicas = Vec::new();
+    for vname in ["dense", "tardis80"] {
+        eprintln!("loading {vname} ...");
+        let v = engine.load_variant(&manifest, vname,
+                                    Some(&["decode", "prefill16"]))?;
+        let model = PjrtModel::new(&engine, v, manifest.batch,
+                                   manifest.model.max_seq,
+                                   manifest.model.vocab, vec![16])?;
+        replicas.push((vname.to_string(),
+                       InferenceEngine::new(model, EngineConfig::default())));
+    }
+    let router = Router::new(replicas);
+
+    // pick an ephemeral port
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    drop(listener);
+
+    // clients on a separate thread (plain TCP, Send-safe);
+    // the PJRT-backed server loop runs on this thread below.
+    let lat: Arc<Mutex<Vec<(String, f64)>>> = Arc::new(Mutex::new(Vec::new()));
+    let client_addr = addr.clone();
+    let client_lat = Arc::clone(&lat);
+    let clients = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(400));
+        let pool = ThreadPool::new(6);
+        let t0 = std::time::Instant::now();
+        pool.map((0..N_REQUESTS).collect::<Vec<_>>(), move |i| {
+            let variant = if i % 2 == 0 { "dense" } else { "tardis80" };
+            let req = format!(
+                r#"{{"op":"generate","prompt":"the {} ","max_tokens":24,"variant":"{variant}"}}"#,
+                ["falcon", "river", "market", "engine"][i % 4]
+            );
+            let t = std::time::Instant::now();
+            let resp = client_roundtrip(&client_addr, &req).expect("roundtrip");
+            let ms = t.elapsed().as_secs_f64() * 1e3;
+            assert!(resp.contains("\"ok\":true"), "{resp}");
+            client_lat.lock().unwrap().push((variant.to_string(), ms));
+        });
+        t0.elapsed().as_secs_f64()
+    });
+
+    let served = serve(router, &addr, Some(N_REQUESTS))?;
+    let wall = clients.join().expect("clients thread");
+
+    println!();
+    println!("served {served} requests in {wall:.2}s \
+              ({:.2} req/s, {} tokens total)",
+             served as f64 / wall, served * 24);
+    for variant in ["dense", "tardis80"] {
+        let mut s = Samples::new();
+        for (v, ms) in lat.lock().unwrap().iter() {
+            if v == variant {
+                s.push(*ms);
+            }
+        }
+        println!("  {variant:9} latency: {}", s.summary());
+    }
+    Ok(())
+}

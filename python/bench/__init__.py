@@ -1,0 +1,6 @@
+"""Table/figure regeneration harness (see DESIGN.md experiment index).
+
+Each module regenerates one paper table/figure on the synthetic testbed
+and appends its output to ``artifacts/results/<name>.txt``. ``run_all``
+executes every bench in dependency order.
+"""

@@ -1,0 +1,108 @@
+"""Shared bench plumbing: cached models, calibration, folds, and output
+capture (every bench writes artifacts/results/<name>.txt and prints)."""
+
+from __future__ import annotations
+
+import contextlib
+import io
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[2]
+ARTIFACTS = REPO / "artifacts"
+RESULTS = ARTIFACTS / "results"
+
+sys.path.insert(0, str(REPO / "python"))
+
+from compile import evalsuite  # noqa: E402
+from compile.baselines import METHODS  # noqa: E402
+from compile.model import ModelConfig  # noqa: E402
+from compile.tardis import calibration, pipeline  # noqa: E402
+from compile.train import MODEL_ZOO, get_or_train  # noqa: E402
+
+_CACHE: dict = {}
+
+
+def model(name: str = "tiny-gelu"):
+    """(cfg, params) for a zoo model, trained/cached under artifacts."""
+    if name not in _CACHE:
+        _CACHE[name] = get_or_train(name, ARTIFACTS / "weights",
+                                    verbose=True)
+    return _CACHE[name]
+
+
+def calib(name: str = "tiny-gelu", dataset: str = "c4-syn", n_samples=8):
+    key = ("calib", name, dataset, n_samples)
+    if key not in _CACHE:
+        cfg, params = model(name)
+        _CACHE[key] = calibration.collect(params, cfg, dataset=dataset,
+                                          n_samples=n_samples)
+    return _CACHE[key]
+
+
+def fold(name: str = "tiny-gelu", ratio: float | None = None,
+         target_t: float | None = None, bits: int = 2, dataset="c4-syn",
+         **kw):
+    """Folded params + report, cached per configuration."""
+    cfg, params = model(name)
+    if target_t is None:
+        target_t = pipeline.threshold_for_ratio(cfg, ratio, bits)
+    key = ("fold", name, round(target_t, 4), bits, dataset,
+           tuple(sorted(kw.items())))
+    if key not in _CACHE:
+        _CACHE[key] = pipeline.fold_model(
+            params, cfg, target_t=target_t, bits=bits,
+            stats=calib(name, dataset), **kw)
+    return _CACHE[key]
+
+
+def pruned(name: str, method: str, ratio: float):
+    key = ("prune", name, method, ratio)
+    if key not in _CACHE:
+        cfg, params = model(name)
+        _CACHE[key] = METHODS[method](params, calib(name), ratio)
+    return _CACHE[key]
+
+
+@contextlib.contextmanager
+def bench_output(bench_name: str):
+    """Tee stdout to artifacts/results/<bench_name>.txt."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    buf = io.StringIO()
+    orig = sys.stdout
+
+    class Tee:
+        def write(self, s):
+            orig.write(s)
+            buf.write(s)
+
+        def flush(self):
+            orig.flush()
+
+    sys.stdout = Tee()
+    t0 = time.time()
+    try:
+        yield
+    finally:
+        sys.stdout = orig
+        out = buf.getvalue()
+        (RESULTS / f"{bench_name}.txt").write_text(
+            out + f"\n[wall time: {time.time() - t0:.1f}s]\n")
+
+
+def ppl(params, cfg: ModelConfig, dataset: str, **kw) -> float:
+    return evalsuite.perplexity(params, cfg, dataset=dataset,
+                                max_windows=kw.pop("max_windows", 24), **kw)
+
+
+def acc(params, cfg: ModelConfig, task: str, **kw) -> float:
+    return evalsuite.zero_shot_accuracy(
+        params, cfg, task=task, n_items=kw.pop("n_items", 48), **kw)
+
+
+def fmt_row(cells, widths=None):
+    widths = widths or [12] * len(cells)
+    return "  ".join(str(c)[:w].ljust(w) for c, w in zip(cells, widths))

@@ -1,0 +1,69 @@
+"""Fig 6: layer-wise and neuron-wise linear-approximation error
+distributions (+ the adaptive-vs-uniform thresholding ablation that
+motivates the two-level allocator)."""
+
+import numpy as np
+
+from . import common
+from compile.tardis import ranges, thresholds
+
+
+def run(ablate: bool = True):
+    with common.bench_output("fig06_error_dist"):
+        cfg, params = common.model("tiny-gelu")
+        stats = common.calib("tiny-gelu")
+        w2n = [np.linalg.norm(np.asarray(lp["w2"]), axis=1)
+               for lp in params["layers"]]
+
+        print("Fig 6a — per-layer FFN approximation error vs coverage "
+              "threshold:")
+        header = ["layer"] + [f"t={t:.2f}" for t in (0.65, 0.75, 0.85, 0.95)]
+        print(common.fmt_row(header, [6] + [10] * 4))
+        layer_err_at_085 = []
+        for li in range(cfg.n_layers):
+            z = stats.z[li]
+            cells = [f"L{li}"]
+            for t in (0.65, 0.75, 0.85, 0.95):
+                lo, hi = ranges.quantile_ranges(z, np.full(z.shape[1], t))
+                err = ranges.approx_error(z, cfg.act, lo, hi, w2n[li]).sum()
+                cells.append(f"{err:.2e}")
+                if t == 0.85:
+                    layer_err_at_085.append(err)
+            print(common.fmt_row(cells, [6] + [10] * 4))
+        spread = max(layer_err_at_085) / (min(layer_err_at_085) + 1e-12)
+        print(f"layer error spread at t=0.85: {spread:.1f}x "
+              "(paper: ~10x between layers)")
+
+        print("\nFig 6b — neuron-wise error distribution (layer 0, t=0.85):")
+        z = stats.z[0]
+        lo, hi = ranges.quantile_ranges(z, np.full(z.shape[1], 0.85))
+        nerr = ranges.approx_error(z, cfg.act, lo, hi, w2n[0])
+        nz = nerr[nerr > 0]
+        qs = np.percentile(nz, [1, 25, 50, 75, 99])
+        print("  error percentiles (1/25/50/75/99): " +
+              " ".join(f"{q:.2e}" for q in qs))
+        print(f"  dynamic range: {qs[-1] / (qs[0] + 1e-300):.0f}x "
+              "(paper: ~3 orders of magnitude)")
+
+        if ablate:
+            print("\nablation — adaptive vs uniform thresholding "
+                  "(total weighted error at mean t=0.85):")
+            total_uniform, total_adaptive = 0.0, 0.0
+            t_layers = thresholds.layer_thresholds(layer_err_at_085, 0.85)
+            for li in range(cfg.n_layers):
+                z = stats.z[li]
+                h = z.shape[1]
+                lo, hi = ranges.quantile_ranges(z, np.full(h, 0.85))
+                nerr = ranges.approx_error(z, cfg.act, lo, hi, w2n[li])
+                total_uniform += nerr.sum()
+                t_n = thresholds.neuron_thresholds(nerr, float(t_layers[li]))
+                lo2, hi2 = ranges.quantile_ranges(z, t_n)
+                total_adaptive += ranges.approx_error(
+                    z, cfg.act, lo2, hi2, w2n[li]).sum()
+            print(f"  uniform : {total_uniform:.3e}")
+            print(f"  adaptive: {total_adaptive:.3e} "
+                  f"({100 * (1 - total_adaptive / total_uniform):+.1f}% error)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Fig 11 (+ Fig 2): fine-grained compression-ratio sweep of perplexity
+and zero-shot accuracy for TARDIS vs pruning baselines, plus the top-K
+fix-capacity ablation (DESIGN.md ablation #3)."""
+
+from . import common
+from compile.tardis import pipeline
+
+RATIOS = (0.1, 0.3, 0.5, 0.6, 0.7, 0.8)
+
+
+def run(capacity_ablation: bool = True):
+    with common.bench_output("fig11_sweep"):
+        name = "tiny-gelu"
+        cfg, params = common.model(name)
+        ds, task = "wiki-syn", "agree-syn"
+        print("Fig 11 — ratio sweep on tiny-gelu "
+              f"(ppl on {ds}, acc on {task})\n")
+        print(common.fmt_row(
+            ["ratio", "wanda ppl", "ria ppl", "tardis ppl",
+             "wanda acc", "tardis acc"], [7, 10, 10, 10, 10, 10]))
+        for r in RATIOS:
+            wanda = common.pruned(name, "wanda", r)
+            ria = common.pruned(name, "ria", r)
+            fp, rep = common.fold(name, ratio=r)
+            tcfg = cfg.with_mode("tardis_pred_dense")
+            print(common.fmt_row([
+                f"{int(r*100)}%",
+                f"{common.ppl(wanda, cfg, ds):.2f}",
+                f"{common.ppl(ria, cfg, ds):.2f}",
+                f"{common.ppl(fp, tcfg, ds):.2f}",
+                f"{common.acc(wanda, cfg, task)*100:.1f}%",
+                f"{common.acc(fp, tcfg, task)*100:.1f}%",
+            ], [7, 10, 10, 10, 10, 10]))
+
+        if capacity_ablation:
+            print("\nablation — top-K fix capacity at ratio 80% "
+                  "(kernel path, K vs quality):")
+            fp, rep = common.fold(name, ratio=0.8)
+            k_star = pipeline.fix_capacity_for(cfg, rep.mean_oor_rate)
+            for k in sorted({4, k_star // 2, k_star, 2 * k_star, 128}):
+                k = max(1, min(int(k), cfg.d_ff))
+                kcfg = cfg.with_mode("tardis", fix_capacity=k)
+                print(f"  K={k:4d}: ppl {common.ppl(fp, kcfg, ds, max_windows=8):.2f}"
+                      + ("   <- calibrated capacity" if k == k_star else ""))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Fig 12 + §7.3: calibration-set size vs perplexity and achieved in-range
+coverage (precision of the range assignment), plus offline-pipeline
+wall-time (the paper reports 30 min/layer; our vectorized Algorithm 1 is
+seconds/layer)."""
+
+import time
+
+from . import common
+from compile import evalsuite
+from compile.tardis import pipeline
+
+
+def run(sizes=(1, 2, 4, 8, 16, 32), target_t: float = 0.85):
+    with common.bench_output("fig12_calibration"):
+        name = "tiny-gelu"
+        cfg, params = common.model(name)
+        print(f"Fig 12 — calibration-set size sweep (target t={target_t})\n")
+        print(common.fmt_row(
+            ["samples", "achieved cov", "|cov - t|", "ppl wiki-syn",
+             "search s/layer"], [8, 12, 10, 12, 14]))
+        for n in sizes:
+            stats = common.calib(name, n_samples=n)
+            t0 = time.time()
+            fp, rep = pipeline.fold_model(params, cfg, target_t=target_t,
+                                          stats=stats)
+            dt = (time.time() - t0) / cfg.n_layers
+            ppl = evalsuite.perplexity(
+                fp, cfg.with_mode("tardis_pred_dense"),
+                dataset="wiki-syn", max_windows=12)
+            print(common.fmt_row([
+                n, f"{rep.achieved_coverage:.3f}",
+                f"{abs(rep.achieved_coverage - target_t):.3f}",
+                f"{ppl:.3f}", f"{dt:.1f}",
+            ], [8, 12, 10, 12, 14]))
+        print("\npaper: coverage within 1.8% of target from 8 samples; "
+              "ppl stable (<0.06 drift) over 8-64 samples.")
+        print("paper offline cost: ~30 min/layer; ours (vectorized "
+              "Algorithm 1): seconds/layer — see column above.")
+
+
+if __name__ == "__main__":
+    run()

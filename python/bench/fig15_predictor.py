@@ -1,0 +1,35 @@
+"""Fig 15: predictor size (quantization bits) vs perplexity, plus the
+predictor precision/recall stats behind it."""
+
+from . import common
+from compile import evalsuite
+
+
+def run(bits_list=(2, 3, 4, 8), ratio: float = 0.7):
+    with common.bench_output("fig15_predictor"):
+        name = "tiny-gelu"
+        cfg, params = common.model(name)
+        print(f"Fig 15 — predictor bits vs perplexity "
+              f"(TARDIS @ {int(ratio*100)}%)\n")
+        print(common.fmt_row(
+            ["bits", "ppl wiki-syn", "recall", "precision", "size (f32-eq)"],
+            [5, 12, 8, 10, 14]))
+        rows = []
+        for bits in bits_list:
+            fp, rep = common.fold(name, ratio=ratio, bits=bits)
+            ppl = evalsuite.perplexity(
+                fp, cfg.with_mode("tardis_pred_dense"),
+                dataset="wiki-syn", max_windows=16)
+            ps = rep.layers[0].pred_stats
+            size = cfg.d_model * cfg.d_ff * bits / 32.0
+            rows.append(ppl)
+            print(common.fmt_row(
+                [bits, f"{ppl:.3f}", f"{ps.recall:.2f}",
+                 f"{ps.precision:.2f}", f"{size:.0f}"],
+                [5, 12, 8, 10, 14]))
+        print(f"\nppl range over bits: {max(rows) - min(rows):.3f} "
+              "(paper: max difference 0.12 — small predictors suffice)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Run every python-side table/figure bench in dependency order.
+
+`python -m bench.run_all [--fast]` — --fast trims the expensive grids
+(single model, fewer ratios) for smoke runs.
+"""
+
+import argparse
+import sys
+import time
+
+from . import (fig05_density, fig06_error_dist, fig09_blowup,
+               fig11_sweep, fig12_calibration, fig15_predictor,
+               tab01_skew, tab03_perplexity, tab04_zeroshot,
+               tab05_sensitivity, tab06_tab07_precision)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (e.g. tab03,fig11)")
+    args = ap.parse_args()
+
+    benches = [
+        ("tab01", lambda: tab01_skew.run()),
+        ("fig05", lambda: fig05_density.run()),
+        ("fig06", lambda: fig06_error_dist.run()),
+        ("fig09", lambda: fig09_blowup.run()),
+        ("tab03", lambda: tab03_perplexity.run(
+            models=("tiny-gelu",) if args.fast else
+            ("tiny-gelu", "tiny-relu"))),
+        ("tab04", lambda: tab04_zeroshot.run()),
+        ("fig11", lambda: fig11_sweep.run(
+            capacity_ablation=not args.fast)),
+        ("fig12", lambda: fig12_calibration.run(
+            sizes=(2, 8) if args.fast else (1, 2, 4, 8, 16, 32))),
+        ("tab05", lambda: tab05_sensitivity.run()),
+        ("fig15", lambda: fig15_predictor.run(
+            bits_list=(2, 8) if args.fast else (2, 3, 4, 8))),
+        ("tab0607", lambda: tab06_tab07_precision.run()),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+    t0 = time.time()
+    for name, fn in benches:
+        if only and name not in only:
+            continue
+        print(f"\n######## {name} ########", flush=True)
+        fn()
+    print(f"\nall benches done in {time.time() - t0:.0f}s; outputs in "
+          "artifacts/results/", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Table 4: zero-shot accuracy on the three synthetic tasks for dense /
+Wanda / RIA / TARDIS at 50/70/80% FFN compression."""
+
+from . import common
+from compile import corpus
+
+RATIOS = (0.5, 0.7, 0.8)
+TASKS = tuple(sorted(corpus.TASKS))
+
+
+def run(models=("tiny-gelu",), methods=("wanda", "ria")):
+    with common.bench_output("tab04_zeroshot"):
+        print("Table 4 — zero-shot accuracy (%) (higher is better); "
+              "chance = 50%\n")
+        for name in models:
+            cfg, params = common.model(name)
+            print(f"== {name} ==")
+            hdr = ["task", "method"] + [f"{int(r*100)}%" for r in RATIOS]
+            print(common.fmt_row(hdr, [10, 8, 8, 8, 8]))
+            for task in TASKS:
+                dense = common.acc(params, cfg, task)
+                print(common.fmt_row(
+                    [task, "dense", f"{dense*100:.1f}", "", ""],
+                    [10, 8, 8, 8, 8]))
+                for m in methods:
+                    cells = [task, m]
+                    for r in RATIOS:
+                        pp = common.pruned(name, m, r)
+                        cells.append(f"{common.acc(pp, cfg, task)*100:.1f}")
+                    print(common.fmt_row(cells, [10, 8, 8, 8, 8]))
+                cells = [task, "tardis"]
+                for r in RATIOS:
+                    fp, _ = common.fold(name, ratio=r)
+                    cells.append(
+                        f"{common.acc(fp, cfg.with_mode('tardis_pred_dense'), task)*100:.1f}")
+                print(common.fmt_row(cells, [10, 8, 8, 8, 8]))
+            print()
+        print("verdict target (paper): TARDIS holds accuracy at 80% while "
+              "pruning collapses toward chance.")
+
+
+if __name__ == "__main__":
+    run()

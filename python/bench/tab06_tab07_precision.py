@@ -1,0 +1,65 @@
+"""Tables 6 & 7: numerical effects of FFN reordering.
+
+Table 6: fold with different intermediate dtypes -> FFN MSE + perplexity.
+Table 7: fold MSE vs FFN scale (x1 / x4 / x8 synthetic enlargement).
+"""
+
+import numpy as np
+
+from . import common
+from compile import evalsuite
+from compile.tardis import folding
+
+
+def run():
+    with common.bench_output("tab06_tab07_precision"):
+        name = "tiny-gelu"
+        cfg, params = common.model(name)
+
+        print("Table 6 — intermediate dtype during folding "
+              "(TARDIS @ t=0.9)\n")
+        dense_ppl = common.ppl(params, cfg, "wiki-syn")
+        print(common.fmt_row(["dtype", "fold MSE", "ppl wiki-syn"],
+                             [10, 12, 12]))
+        print(common.fmt_row(["(dense)", "0", f"{dense_ppl:.3f}"],
+                             [10, 12, 12]))
+        for dt in ("bfloat16", "float16", "float32", "float64"):
+            fp, rep = common.fold(name, target_t=0.9, intermediate_dtype=dt)
+            ppl = evalsuite.perplexity(fp, cfg.with_mode("tardis_exact"),
+                                       dataset="wiki-syn", max_windows=16)
+            print(common.fmt_row([dt, f"{rep.fold_mse:.2e}", f"{ppl:.3f}"],
+                                 [10, 12, 12]))
+        print("\npaper: only bfloat16 shows a visible ppl gap; "
+              "f16/f32/f64 within 0.1%.\n")
+
+        print("Table 7 — fold MSE vs FFN scale (intermediate = float64)\n")
+        rng = np.random.default_rng(0)
+        lp = params["layers"][0]
+        w1 = np.asarray(lp["w1"])
+        w2 = np.asarray(lp["w2"])
+        b1 = np.asarray(lp["b1"])
+        d, h = w1.shape
+        x = np.asarray(common.calib(name).ffn_in[0][:128])
+        print(common.fmt_row(["scale", "d x h", "MSE"], [6, 12, 12]))
+        for scale in (1, 4, 8):
+            # enlarge by tiling + jitter (paper scales the FFN synthetically)
+            w1s = np.tile(w1, (scale, scale)) + \
+                rng.normal(0, 1e-3, (d * scale, h * scale)).astype(np.float32)
+            w2s = np.tile(w2, (scale, scale)) + \
+                rng.normal(0, 1e-3, (h * scale, d * scale)).astype(np.float32)
+            b1s = np.tile(b1, scale)
+            a = rng.normal(0.3, 0.1, h * scale).astype(np.float32)
+            b = rng.normal(0, 0.05, h * scale).astype(np.float32)
+            xs = np.tile(x, (1, scale)).astype(np.float32) / scale
+            mse = folding.fold_mse(w1s, b1s, w2s,
+                                   np.zeros(d * scale, np.float32), a, b,
+                                   None, xs, "float64")
+            print(common.fmt_row(
+                [f"x{scale}", f"{d*scale} x {h*scale}", f"{mse:.2e}"],
+                [6, 12, 12]))
+        print("\npaper: MSE stays < 1e-6 at x8 — reordering error "
+              "negligible at scale.")
+
+
+if __name__ == "__main__":
+    run()

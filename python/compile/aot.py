@@ -1,0 +1,254 @@
+"""AOT export: train → fold → lower → artifacts/ (the `make artifacts` entry).
+
+Python runs exactly once here and never on the request path. Outputs:
+
+  artifacts/
+    manifest.json            everything rust needs: model config, variants,
+                             executables (+ parameter order), weight tables
+    <variant>.weights.bin    raw little-endian arrays, offsets in manifest
+    <variant>.decode.hlo.txt           batched decode step (B = 8)
+    <variant>.prefill<S>.hlo.txt       prefill buckets (batch 1, slot-indexed)
+    <variant>.ffn_*.hlo.txt            FFN micro-executables (Figs 13/14)
+    weights/<model>.pkl                trained dense checkpoints (cache)
+
+Variants: ``dense`` plus ``tardis@{50,70,80}`` (the paper's headline
+ratios). Pruned (Wanda/RIA) variants are *accuracy* baselines evaluated by
+the python bench harness — their dense-shaped matmuls have identical
+runtime cost, so the rust serving benches only need dense + tardis.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from functools import partial
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import hloutil, model as M
+from .kernels import ref as kref
+from .model import ModelConfig
+from .tardis import calibration, pipeline
+
+BATCH = 8
+PREFILL_BUCKETS = (16, 64)
+TARDIS_RATIOS = (0.5, 0.7, 0.8)
+
+_DT = {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32",
+       np.dtype(np.int8): "i8"}
+
+
+def _weights_table(names, arrays, bin_path: Path):
+    """Write raw weights and return the manifest parameter table."""
+    table = []
+    off = 0
+    with open(bin_path, "wb") as f:
+        for name, arr in zip(names, arrays):
+            a = np.asarray(arr)
+            if a.dtype == np.float64:
+                a = a.astype(np.float32)
+            data = np.ascontiguousarray(a).tobytes()
+            table.append({"name": name, "dtype": _DT[a.dtype],
+                          "shape": list(a.shape), "offset": off,
+                          "nbytes": len(data)})
+            f.write(data)
+            off += len(data)
+    return table
+
+
+def _export_variant(vdir: Path, vname: str, cfg: ModelConfig, params,
+                    extra: dict) -> dict:
+    """Lower decode/prefill/FFN micro fns for one variant."""
+    names = M.param_names(params)
+    flat = M.flatten_params(params)
+    # The decode/prefill signatures drop b2 for folded layers (absorbed
+    # into fold_b, DCE'd by jax) — but the ffn_dense micro-executable
+    # still reads it, so the weight *table* keeps every b2.
+    extra_names, extra_flat = [], []
+    for li, lp in enumerate(params["layers"]):
+        if "fold_c" in lp:
+            extra_names.append(f"layer{li}.b2")
+            extra_flat.append(lp["b2"])
+    table = _weights_table(names + extra_names, flat + extra_flat,
+                           vdir / f"{vname}.weights.bin")
+
+    kv_spec = jnp.zeros((cfg.n_layers, 2, BATCH, cfg.max_seq, cfg.n_heads,
+                         cfg.d_head), jnp.float32)
+    execs = {}
+
+    def lower(tag, fn, args):
+        path = vdir / f"{vname}.{tag}.hlo.txt"
+        hloutil.export_hlo(fn, args, path)
+        return str(path.name)
+
+    # --- decode step: (params..., tokens[B], pos[B], kv) -> logits, kv ---
+    def decode_fn(*args):
+        ps = M.unflatten_params(names, list(args[:-3]), cfg.n_layers)
+        tokens, pos, kv = args[-3:]
+        return M.decode_step(ps, tokens, pos, kv, cfg)
+
+    execs["decode"] = {
+        "file": lower("decode", decode_fn,
+                      (*flat, jnp.zeros((BATCH,), jnp.int32),
+                       jnp.zeros((BATCH,), jnp.int32), kv_spec)),
+        "weight_params": names,
+        "inputs": [f"tokens:i32[{BATCH}]", f"pos:i32[{BATCH}]", "kv"],
+        "outputs": ["logits", "kv"],
+        "flops": hloutil.flop_estimate(
+            decode_fn, (*flat, jnp.zeros((BATCH,), jnp.int32),
+                        jnp.zeros((BATCH,), jnp.int32), kv_spec)),
+    }
+
+    # --- prefill buckets: (params..., tokens[T], kv, slot, pos0) ---
+    for T in PREFILL_BUCKETS:
+        def prefill_fn(*args, T=T):
+            ps = M.unflatten_params(names, list(args[:-4]), cfg.n_layers)
+            tokens, kv, slot, pos0 = args[-4:]
+            return M.prefill_step(ps, tokens, kv, slot, pos0, cfg)
+
+        execs[f"prefill{T}"] = {
+            "file": lower(f"prefill{T}", prefill_fn,
+                          (*flat, jnp.zeros((T,), jnp.int32), kv_spec,
+                           jnp.int32(0), jnp.int32(0))),
+            "weight_params": names,
+            "inputs": [f"tokens:i32[{T}]", "kv", "slot:i32", "pos0:i32"],
+            "outputs": ["logits", "kv"],
+        }
+
+    # --- FFN micro-executables on layer 0 (Figs 13/14 harness) ---
+    lp0 = params["layers"][0]
+    x_spec = jnp.zeros((BATCH, cfg.d_model), jnp.float32)
+
+    def micro(tag, fn, wkeys, args, inputs, outputs):
+        wnames = [f"layer0.{k}" for k in wkeys]
+        execs[tag] = {"file": lower(tag, fn, args),
+                      "weight_params": wnames, "inputs": inputs,
+                      "outputs": outputs}
+
+    micro("ffn_dense",
+          lambda w1, b1, w2, b2, x: (
+              kref.dense_ffn_ref(x, w1, b1, w2, b2, cfg.act),),
+          ("w1", "b1", "w2", "b2"),
+          (lp0["w1"], lp0["b1"], lp0["w2"], lp0["b2"], x_spec),
+          [f"x:f32[{BATCH},{cfg.d_model}]"], ["y"])
+
+    if "fold_c" in lp0:
+        from .kernels import (fix_gather, folded_ffn, predictor_scores,
+                              select_topk)
+        K = cfg.fix_capacity
+
+        micro("ffn_folded",
+              lambda c, b, x: (folded_ffn(x, c, b),),
+              ("fold_c", "fold_b"), (lp0["fold_c"], lp0["fold_b"], x_spec),
+              [f"x:f32[{BATCH},{cfg.d_model}]"], ["y"])
+
+        micro("ffn_predictor",
+              lambda codes, scales, b1, lo, hi, x: (
+                  predictor_scores(x, codes, scales, b1, lo, hi,
+                                   group_size=cfg.pred_group),),
+              ("pred_codes", "pred_scales", "b1", "lo", "hi"),
+              (lp0["pred_codes"], lp0["pred_scales"], lp0["b1"],
+               lp0["lo"], lp0["hi"], x_spec),
+              [f"x:f32[{BATCH},{cfg.d_model}]"], ["score"])
+
+        micro("ffn_aux",
+              lambda score: select_topk(score, K),
+              (), (jnp.zeros((BATCH, cfg.d_ff), jnp.float32),),
+              [f"score:f32[{BATCH},{cfg.d_ff}]"], ["idx", "valid"])
+
+        micro("ffn_fix",
+              lambda w1, b1, w2, a, b, x, idx, valid: (
+                  fix_gather(x, idx, valid, w1, b1, w2, a, b,
+                             act=cfg.act),),
+              ("w1", "b1", "w2", "lin_a", "lin_b"),
+              (lp0["w1"], lp0["b1"], lp0["w2"], lp0["lin_a"], lp0["lin_b"],
+               x_spec, jnp.zeros((BATCH, K), jnp.int32),
+               jnp.zeros((BATCH, K), jnp.float32)),
+              [f"x:f32[{BATCH},{cfg.d_model}]", f"idx:i32[{BATCH},{K}]",
+               f"valid:f32[{BATCH},{K}]"], ["corr"])
+
+    return {
+        "name": vname,
+        "ffn_mode": cfg.ffn_mode,
+        "act": cfg.act,
+        "fix_capacity": cfg.fix_capacity if "fold_c" in lp0 else 0,
+        "weights_file": f"{vname}.weights.bin",
+        "params": table,
+        "executables": execs,
+        **extra,
+    }
+
+
+def build_artifacts(out_dir: Path, model_name: str = "tiny-gelu",
+                    ratios=TARDIS_RATIOS, bits: int = 2,
+                    verbose: bool = True) -> dict:
+    from .train import get_or_train
+    out_dir.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+    cfg, params = get_or_train(model_name, out_dir / "weights",
+                               verbose=verbose)
+    stats = calibration.collect(params, cfg, dataset="c4-syn", n_samples=8)
+
+    variants = []
+    if verbose:
+        print(f"[aot] exporting dense ({time.time() - t0:.0f}s)")
+    variants.append(_export_variant(
+        out_dir, "dense", cfg, params,
+        {"compression_ratio": 0.0, "target_threshold": 1.0}))
+
+    for ratio in ratios:
+        t = pipeline.threshold_for_ratio(cfg, ratio, bits)
+        fparams, rep = pipeline.fold_model(params, cfg, target_t=t,
+                                           stats=stats, bits=bits)
+        K = pipeline.fix_capacity_for(cfg, rep.mean_oor_rate)
+        vcfg = cfg.with_mode("tardis", fix_capacity=K)
+        vname = f"tardis{int(ratio * 100)}"
+        if verbose:
+            print(f"[aot] exporting {vname}: t={t:.3f} "
+                  f"cov={rep.achieved_coverage:.3f} K={K} "
+                  f"ratio={rep.compression_ratio:.3f} "
+                  f"({time.time() - t0:.0f}s)")
+        variants.append(_export_variant(
+            out_dir, vname, vcfg, fparams,
+            {"compression_ratio": rep.compression_ratio,
+             "target_threshold": t,
+             "achieved_coverage": rep.achieved_coverage,
+             "predictor_bits": bits}))
+
+    manifest = {
+        "model": {"name": cfg.name, "vocab": cfg.vocab,
+                  "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+                  "n_heads": cfg.n_heads, "d_ff": cfg.d_ff,
+                  "max_seq": cfg.max_seq, "act": cfg.act},
+        "batch": BATCH,
+        "prefill_buckets": list(PREFILL_BUCKETS),
+        "kv_shape": [cfg.n_layers, 2, BATCH, cfg.max_seq, cfg.n_heads,
+                     cfg.d_head],
+        "variants": variants,
+        "built_unix": int(time.time()),
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if verbose:
+        print(f"[aot] wrote manifest with {len(variants)} variants "
+              f"in {time.time() - t0:.0f}s")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory")
+    ap.add_argument("--model", default="tiny-gelu")
+    ap.add_argument("--bits", type=int, default=2)
+    ap.add_argument("--ratios", default="0.5,0.7,0.8")
+    args = ap.parse_args()
+    ratios = tuple(float(r) for r in args.ratios.split(","))
+    build_artifacts(Path(args.out), model_name=args.model,
+                    ratios=ratios, bits=args.bits)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Pruning baselines the paper compares against (Wanda, RIA, magnitude).
+
+All baselines prune the FFN blocks only (matching §7.1: "we compress the
+FFN blocks ... while keeping the attention blocks intact"). Pruned weights
+are zeroed in place; the compression ratio equals the pruning ratio
+(paper: "pruned weights considered compressed").
+"""
+
+from .magnitude import prune_magnitude
+from .ria import prune_ria
+from .wanda import prune_wanda
+
+METHODS = {
+    "wanda": prune_wanda,
+    "ria": prune_ria,
+    "magnitude": prune_magnitude,
+}
+
+__all__ = ["prune_wanda", "prune_ria", "prune_magnitude", "METHODS"]

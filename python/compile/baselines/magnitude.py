@@ -1,0 +1,26 @@
+"""Magnitude pruning: the classic |W| criterion (sanity baseline)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _prune_matrix(w: np.ndarray, ratio: float) -> np.ndarray:
+    k = int(round(ratio * w.size))
+    if k <= 0:
+        return w.copy()
+    cut = np.partition(np.abs(w).ravel(), k - 1)[k - 1]
+    return np.where(np.abs(w) > cut, w, 0.0)
+
+
+def prune_magnitude(params: dict, stats, ratio: float) -> dict:
+    """stats accepted (and ignored) for a uniform baseline interface."""
+    new = {k: v for k, v in params.items() if k != "layers"}
+    new["layers"] = []
+    for lp in params["layers"]:
+        nlp = dict(lp)
+        nlp["w1"] = jnp.asarray(_prune_matrix(np.asarray(lp["w1"]), ratio))
+        nlp["w2"] = jnp.asarray(_prune_matrix(np.asarray(lp["w2"]), ratio))
+        new["layers"].append(nlp)
+    return new

@@ -1,0 +1,46 @@
+"""RIA pruning (Zhang et al., ICLR 2024): Relative Importance + Activation.
+
+Score(W_ij) = ( |W_ij| / sum_i |W_ij|  +  |W_ij| / sum_j |W_ij| )
+              * (||x_i||_2)^alpha ,  alpha = 0.5
+
+i.e. the weight's share of both its input row and output column, scaled by
+a softened activation norm. Pruned per output unit like Wanda.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _ria_scores(w: np.ndarray, x_norm: np.ndarray,
+                alpha: float = 0.5) -> np.ndarray:
+    aw = np.abs(w)
+    row_share = aw / (aw.sum(axis=1, keepdims=True) + 1e-12)
+    col_share = aw / (aw.sum(axis=0, keepdims=True) + 1e-12)
+    return (row_share + col_share) * (x_norm[:, None] ** alpha)
+
+
+def _prune_matrix(w: np.ndarray, x_norm: np.ndarray, ratio: float,
+                  alpha: float = 0.5) -> np.ndarray:
+    score = _ria_scores(w, x_norm, alpha)
+    k = int(round(ratio * w.shape[0]))
+    if k <= 0:
+        return w.copy()
+    cut = np.partition(score, k - 1, axis=0)[k - 1]
+    return np.where(score > cut[None, :], w, 0.0)
+
+
+def prune_ria(params: dict, stats, ratio: float, alpha: float = 0.5) -> dict:
+    new = {k: v for k, v in params.items() if k != "layers"}
+    new["layers"] = []
+    for li, lp in enumerate(params["layers"]):
+        n1 = np.linalg.norm(stats.ffn_in[li], axis=0)
+        n2 = np.linalg.norm(stats.act_out[li], axis=0)
+        nlp = dict(lp)
+        nlp["w1"] = jnp.asarray(
+            _prune_matrix(np.asarray(lp["w1"]), n1, ratio, alpha))
+        nlp["w2"] = jnp.asarray(
+            _prune_matrix(np.asarray(lp["w2"]), n2, ratio, alpha))
+        new["layers"].append(nlp)
+    return new

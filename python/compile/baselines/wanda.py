@@ -1,0 +1,48 @@
+"""Wanda pruning (Sun et al., ICLR 2024): prune by |W| * ||x||_2.
+
+Weight importance is the product of the weight magnitude and the L2 norm
+of its input feature across the calibration set; weights are compared and
+removed *per output unit* (Wanda's per-output comparison group), which the
+paper found essential at LLM scale.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _prune_matrix(w: np.ndarray, x_norm: np.ndarray, ratio: float
+                  ) -> np.ndarray:
+    """Zero the lowest-scoring ``ratio`` of each output column.
+
+    w: [in, out]; x_norm: [in] L2 norms of the input features.
+    """
+    score = np.abs(w) * x_norm[:, None]
+    k = int(round(ratio * w.shape[0]))
+    if k <= 0:
+        return w.copy()
+    # indices of the k smallest scores per column
+    cut = np.partition(score, k - 1, axis=0)[k - 1]
+    mask = score > cut[None, :]
+    # keep exactly (in - k) per column even with ties
+    out = np.where(mask, w, 0.0)
+    return out
+
+
+def prune_wanda(params: dict, stats, ratio: float) -> dict:
+    """Prune FFN W1/W2 of every layer. stats: calibration.CalibStats."""
+    new = {k: v for k, v in params.items() if k != "layers"}
+    new["layers"] = []
+    for li, lp in enumerate(params["layers"]):
+        x_in = stats.ffn_in[li]          # [T, d] inputs to W1
+        act = stats.act_out[li]          # [T, h] inputs to W2
+        n1 = np.linalg.norm(x_in, axis=0)
+        n2 = np.linalg.norm(act, axis=0)
+        nlp = dict(lp)
+        nlp["w1"] = jnp.asarray(
+            _prune_matrix(np.asarray(lp["w1"]), n1, ratio))
+        nlp["w2"] = jnp.asarray(
+            _prune_matrix(np.asarray(lp["w2"]), n2, ratio))
+        new["layers"].append(nlp)
+    return new

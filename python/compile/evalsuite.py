@@ -1,0 +1,93 @@
+"""Evaluation suite: perplexity and zero-shot accuracy (paper §7.1).
+
+Mirrors lm-evaluation-harness mechanics on our synthetic benchmarks:
+
+* ``perplexity``      — exp(mean NLL) over held-out windows of a corpus.
+* ``zero_shot_accuracy`` — for each ChoiceItem, score every choice by the
+  sum of its token log-likelihoods given the context and pick the argmax
+  (exactly how PIQA/Lambada/ARC-C are scored in the harness).
+
+Both take an ``ffn_mode``-configured ModelConfig, so the same functions
+evaluate dense, TARDIS-folded (exact or predictor-driven), and pruned
+models.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import ModelConfig, forward
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _window_nll(params, tokens, cfg: ModelConfig):
+    """tokens: [B, S+1] -> (sum NLL, token count)."""
+    logits = forward(params, tokens[:, :-1], cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll), nll.size
+
+
+def perplexity(params, cfg: ModelConfig, dataset: str = "wiki-syn",
+               seq: int = 64, max_windows: int = 48, batch: int = 8,
+               seed: int = 0) -> float:
+    """Held-out perplexity on ``dataset`` (lower is better)."""
+    _, ev = corpus.train_eval_split(dataset, seed=seed)
+    toks = np.asarray(ev, np.int32)
+    n = min((len(toks) - 1) // seq, max_windows)
+    wins = np.stack([toks[i * seq:i * seq + seq + 1] for i in range(n)])
+    total, count = 0.0, 0
+    for i in range(0, n, batch):
+        chunk = wins[i:i + batch]
+        s, c = _window_nll(params, jnp.asarray(chunk), cfg)
+        total += float(s)
+        count += int(c)
+    return float(np.exp(total / max(count, 1)))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _seq_logprob(params, tokens, start, cfg: ModelConfig):
+    """Sum log p(tokens[i] | tokens[<i]) for i >= start. tokens: [S]."""
+    logits = forward(params, tokens[None, :-1], cfg)[0]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tok_lp = jnp.take_along_axis(logp, tokens[1:, None], axis=-1)[:, 0]
+    idx = jnp.arange(tok_lp.shape[0])
+    return jnp.sum(jnp.where(idx >= start - 1, tok_lp, 0.0))
+
+
+def _score_choice(params, cfg, context: str, choice: str) -> float:
+    ctx = corpus.encode(context)
+    full = ctx + corpus.encode(choice)
+    full = full[: cfg.max_seq]
+    toks = jnp.asarray(np.asarray(full, np.int32))
+    return float(_seq_logprob(params, toks, min(len(ctx), len(full) - 1),
+                              cfg))
+
+
+def zero_shot_accuracy(params, cfg: ModelConfig, task: str = "agree-syn",
+                       n_items: int = 64, seed: int = 0,
+                       dataset: str = "wiki-syn") -> float:
+    items = corpus.TASKS[task](n_items, seed=seed, dataset=dataset)
+    correct = 0
+    for it in items:
+        scores = [_score_choice(params, cfg, it.context, ch)
+                  for ch in it.choices]
+        correct += int(int(np.argmax(scores)) == it.answer)
+    return correct / len(items)
+
+
+def eval_grid(params, cfg: ModelConfig, datasets=("wiki-syn",),
+              tasks=("agree-syn",), **kw) -> dict:
+    """Convenience: {metric_name: value} over datasets and tasks."""
+    out = {}
+    for ds in datasets:
+        out[f"ppl/{ds}"] = perplexity(params, cfg, dataset=ds, **kw)
+    for tk in tasks:
+        out[f"acc/{tk}"] = zero_shot_accuracy(params, cfg, task=tk)
+    return out

@@ -1,0 +1,47 @@
+"""HLO-text lowering helpers (the AOT interchange with rust).
+
+HLO *text* — not serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs are lowered *untupled* (``return_tuple=False``) so the rust runtime
+receives one PjRtBuffer per result and can thread the KV cache back into
+the next step without a host round-trip.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn, example_args, return_tuple: bool = False) -> str:
+    """Lower ``jax.jit(fn)`` at the example args' shapes to HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple)
+    return comp.as_hlo_text()
+
+
+def export_hlo(fn, example_args, out_path: Path,
+               return_tuple: bool = False) -> Path:
+    out_path = Path(out_path)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(lower_to_hlo_text(fn, example_args, return_tuple))
+    return out_path
+
+
+def flop_estimate(fn, example_args) -> float:
+    """XLA cost-analysis FLOPs of the lowered module (L2 §Perf metric)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    try:
+        analysis = lowered.compile().cost_analysis()
+        if isinstance(analysis, list):
+            analysis = analysis[0]
+        return float(analysis.get("flops", -1.0))
+    except Exception:
+        return -1.0

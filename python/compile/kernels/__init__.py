@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles (ref.py)."""
+
+from .folded_ffn import folded_ffn
+from .predictor_mm import predictor_scores
+from .fix_gather import fix_gather, select_topk
+
+__all__ = ["folded_ffn", "predictor_scores", "fix_gather", "select_topk"]

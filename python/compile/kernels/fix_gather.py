@@ -1,0 +1,165 @@
+"""L1 Pallas kernel: top-K selective result fixing.
+
+The paper's CUDA kernel does *selective loading* of the W1 columns / W2
+rows belonging to the (few) neurons the predictor flagged out-of-range,
+then replaces their linear approximation with the true activation:
+
+    z      = x @ W1[:, idx] + b1[idx]
+    delta  = valid * (sigma(z) - (a[idx] * z + b[idx]))
+    corr   = delta @ W2[idx, :]
+
+Dynamic sparsity does not fit XLA's static shapes, so we adapt the kernel
+to a *static capacity* K (DESIGN.md §Hardware-Adaptation): the model layer
+always hands us K indices per row (top-k over the predictor score); rows
+flagged fewer than K times pad with valid=0 slots whose contribution is
+exactly zero, preserving correctness.
+
+Two implementations:
+
+* :func:`fix_gather` (default) — fully *vectorized* gathers: one batched
+  `w1[:, idx]` / `w2[idx, :]` gather plus two einsums. This is the Pallas
+  analogue of the paper's memory-coalesced + vectorized-shared-memory CUDA
+  kernel, and what the exported decode executables use (perf log in
+  EXPERIMENTS.md §Perf: the original per-row loop serialised the whole fix
+  path and made TARDIS *slower* than dense on CPU).
+* :func:`fix_gather_looped` — the naive one-neuron-at-a-time loop kept for
+  the §Perf before/after comparison and as the closest structural analogue
+  of a scalar gather loop.
+
+On a real TPU this kernel would use ``PrefetchScalarGridSpec`` so the
+scalar core prefetches ``idx`` and drives the W1/W2 block index_maps
+directly (documented as the Mosaic deployment plan; interpret mode keeps
+the explicit-gather form that CPU PJRT can execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import activation
+
+
+# ---------------------------------------------------------------------------
+# Vectorized kernel (default).
+# ---------------------------------------------------------------------------
+
+def _fix_kernel_vec(x_ref, idx_ref, valid_ref, w1_ref, b1_ref, w2_ref,
+                    a_ref, b_ref, o_ref, *, act: str):
+    """Whole batch in one program: batched gathers + MXU einsums."""
+    sigma = activation(act)
+    x = x_ref[...]                                  # [B, d]
+    idx = idx_ref[...]                              # [B, K]
+    valid = valid_ref[...]                          # [B, K]
+    w1g = w1_ref[...][:, idx]                       # [d, B, K] gather
+    z = jnp.einsum("bd,dbk->bk", x, w1g,
+                   preferred_element_type=jnp.float32)
+    z = z + b1_ref[...][idx]
+    delta = (sigma(z) - (a_ref[...][idx] * z + b_ref[...][idx])) * valid
+    w2g = w2_ref[...][idx, :]                       # [B, K, d] gather
+    corr = jnp.einsum("bk,bkd->bd", delta, w2g,
+                      preferred_element_type=jnp.float32)
+    o_ref[...] = corr.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def fix_gather(x, idx, valid, w1, b1, w2, a, b, *, act: str = "gelu"):
+    """Selective correction (vectorized). x: [B, d], idx: [B, K] int32,
+    valid: [B, K] float32 (0/1), w1: [d, h], w2: [h, d] -> corr [B, d]."""
+    m, d = x.shape
+    _, n_k = idx.shape
+    h, d_out = w2.shape
+    assert w1.shape == (d, h) and valid.shape == idx.shape
+    return pl.pallas_call(
+        functools.partial(_fix_kernel_vec, act=act),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((m, n_k), lambda i: (0, 0)),
+            pl.BlockSpec((m, n_k), lambda i: (0, 0)),
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m, d_out), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d_out), x.dtype),
+        interpret=True,
+    )(x, idx, valid, w1, b1, w2, a, b)
+
+
+# ---------------------------------------------------------------------------
+# Looped kernel (perf baseline; EXPERIMENTS.md §Perf "before").
+# ---------------------------------------------------------------------------
+
+def _fix_kernel_loop(x_ref, idx_ref, valid_ref, w1_ref, b1_ref, w2_ref,
+                     a_ref, b_ref, o_ref, *, n_k: int, act: str):
+    """One batch row per grid step: walk K indices with dynamic slices."""
+    sigma = activation(act)
+    x = x_ref[...]                       # [1, d]
+    d_out = o_ref.shape[-1]
+
+    def body(k, acc):
+        nid = idx_ref[0, k]
+        v = valid_ref[0, k]
+        w1col = pl.load(w1_ref, (slice(None), pl.dslice(nid, 1)))  # [d, 1]
+        z = jnp.sum(x[0, :] * w1col[:, 0]) + b1_ref[nid]
+        delta = (sigma(z) - (a_ref[nid] * z + b_ref[nid])) * v
+        w2row = pl.load(w2_ref, (pl.dslice(nid, 1), slice(None)))  # [1, d]
+        return acc + delta * w2row[0, :]
+
+    acc0 = jnp.zeros((d_out,), jnp.float32)
+    o_ref[0, :] = jax.lax.fori_loop(0, n_k, body, acc0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def fix_gather_looped(x, idx, valid, w1, b1, w2, a, b, *, act: str = "gelu"):
+    """Naive per-neuron loop variant (kept for the perf ablation)."""
+    m, d = x.shape
+    _, n_k = idx.shape
+    h, d_out = w2.shape
+    assert w1.shape == (d, h) and valid.shape == idx.shape
+    return pl.pallas_call(
+        functools.partial(_fix_kernel_loop, n_k=n_k, act=act),
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_k), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_k), lambda i: (i, 0)),
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d_out), x.dtype),
+        interpret=True,
+    )(x, idx, valid, w1, b1, w2, a, b)
+
+
+def select_topk(score, k: int):
+    """Pick the K worst out-of-range neurons per row from predictor scores.
+
+    Returns (idx [B, K] int32, valid [B, K] float32). valid masks padding
+    slots (score == 0 means the neuron was in range — nothing to fix).
+
+    NOTE: implemented with argsort rather than ``jax.lax.top_k`` — top_k
+    lowers to a dedicated `topk` HLO instruction that the xla_extension
+    0.5.1 text parser predates; argsort lowers to the classic `sort` op,
+    which round-trips through HLO text cleanly.
+    """
+    order = jnp.argsort(-score, axis=-1)[:, :k]          # [B, K]
+    vals = jnp.take_along_axis(score, order, axis=-1)
+    valid = (vals > 0.0).astype(jnp.float32)
+    return order.astype(jnp.int32), valid
+
+
+def hbm_bytes_moved(d: int, k: int, dtype_bytes: int = 4) -> int:
+    """Bytes of original FFN weights touched per row by the fix path —
+    the selective-loading saving vs the dense 2*d*h the paper targets."""
+    return 2 * d * k * dtype_bytes

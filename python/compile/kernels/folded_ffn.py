@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: the folded-FFN speculative matmul  y = x @ C + B.
+
+This is TARDIS's replacement for the whole FFN block on the hot path: a
+single ``[B, d] @ [d, d]`` matmul plus bias, versus the original
+``[B, d] @ [d, h]``, activation, ``[B, h] @ [h, d]`` (h = 4d).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel tiles the output
+into ``(bm, bn)`` blocks and marches over the contraction dimension in
+``bk`` steps; each step stages an x-tile and a C-tile through VMEM and
+feeds the MXU via ``jnp.dot`` with a float32 accumulator held in the
+output block (the out index_map is independent of the k grid axis, so the
+block stays resident across the k-march — the standard Pallas accumulate
+pattern). Block sizes default to MXU-friendly 128 but shrink to the
+problem size for the tiny models used in tests.
+
+Pallas runs with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode lowers the kernel to plain HLO that
+both pytest and the rust runtime can run. Real-TPU efficiency is estimated
+analytically (see ``vmem_footprint_bytes`` / ``mxu_utilization_estimate``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(dim: int, pref: int) -> int:
+    """Largest block <= pref that divides dim (keeps the grid exact)."""
+    b = min(pref, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _folded_kernel(x_ref, c_ref, b_ref, o_ref, *, n_k: int):
+    """One (bm, bn) output tile; grid = (m/bm, n/bn, k/bk), k innermost."""
+    k = pl.program_id(2)
+    part = jnp.dot(x_ref[...], c_ref[...],
+                   preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = part + b_ref[...].astype(o_ref.dtype)[None, :]
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def folded_ffn(x, c, bias, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """y = x @ c + bias. x: [B, d], c: [d, d], bias: [d] -> [B, d]."""
+    m, k = x.shape
+    k2, n = c.shape
+    assert k == k2 and bias.shape == (n,), (x.shape, c.shape, bias.shape)
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_folded_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bn,), lambda i, j, s: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, c, bias)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int,
+                         dtype_bytes: int = 4) -> int:
+    """VMEM bytes resident per grid step: x-tile + C-tile + bias + out."""
+    return (bm * bk + bk * bn + bn) * dtype_bytes + bm * bn * 4
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int,
+                             bm: int = 128, bn: int = 128,
+                             bk: int = 128) -> float:
+    """Fraction of 128x128 MXU lanes busy given tile shapes (padding waste).
+
+    The MXU processes 128x128 tiles; a (bm, bn, bk) block wastes the
+    fraction of each dimension that pads up to the systolic array size.
+    """
+    def eff(b, t=128):
+        b = min(b, t)
+        return b / t
+    return eff(min(bm, m)) * eff(min(bn, n)) * eff(min(bk, k))

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: the k-bit quantized out-of-range predictor.
+
+TARDIS's online phase must know which neurons received activation inputs
+outside their linearly-approximated hot range, *without* paying for the
+full ``x @ W1`` matmul. The paper compresses W1 with GPTQ to 2 bits; we
+store a from-scratch symmetric group quantization (int8 codes + per-group
+scales — the *modeled* size is ``bits``/param, see tardis/predictor.py)
+and fuse dequantization into the matmul:
+
+    z_hat  = x @ (codes * scale) + b1
+    score  = relu(lo - z_hat) + relu(z_hat - hi)
+
+``score > 0``  <=>  the neuron is predicted out-of-range; the magnitude is
+how far outside, which the model layer uses to pick the top-K neurons to
+fix.
+
+TPU mapping: grid over (batch tiles, neuron tiles); the code tile is
+dequantized in VMEM registers right before the MXU dot, so HBM traffic is
+``bits/32`` of the float W1 traffic — the entire point of the predictor.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(dim: int, pref: int) -> int:
+    b = min(pref, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _predictor_kernel(x_ref, codes_ref, scales_ref, b1_ref, lo_ref, hi_ref,
+                      score_ref, *, group_size: int):
+    x = x_ref[...]                                   # [bm, d]
+    codes = codes_ref[...].astype(jnp.float32)       # [d, bn]
+    scales = scales_ref[...]                         # [d/g, bn]
+    d = codes.shape[0]
+    # Dequantize: broadcast each group's scale over its group_size rows.
+    s = jnp.repeat(scales, group_size, axis=0)[:d]   # [d, bn]
+    w_hat = codes * s
+    z_hat = jnp.dot(x, w_hat, preferred_element_type=jnp.float32)
+    z_hat = z_hat + b1_ref[...][None, :]
+    lo = lo_ref[...][None, :]
+    hi = hi_ref[...][None, :]
+    score = jnp.maximum(lo - z_hat, 0.0) + jnp.maximum(z_hat - hi, 0.0)
+    score_ref[...] = score.astype(score_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "bm", "bn"))
+def predictor_scores(x, codes, scales, b1, lo, hi, *, group_size: int = 32,
+                     bm: int = 128, bn: int = 128):
+    """x: [B, d], codes: [d, h] int8, scales: [d/g, h] -> score [B, h]."""
+    m, d = x.shape
+    d2, h = codes.shape
+    assert d == d2 and d % group_size == 0, (x.shape, codes.shape, group_size)
+    assert scales.shape == (d // group_size, h)
+    bm, bn = _block(m, bm), _block(h, bn)
+    grid = (m // bm, h // bn)
+    return pl.pallas_call(
+        functools.partial(_predictor_kernel, group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((d // group_size, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, h), jnp.float32),
+        interpret=True,
+    )(x, codes, scales, b1, lo, hi)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, d: int, group_size: int,
+                         bits: int) -> int:
+    """Modeled VMEM bytes per grid step with packed codes on a real TPU."""
+    return (bm * d * 4                      # x tile (f32)
+            + d * bn * bits // 8            # packed code tile
+            + (d // group_size) * bn * 4    # scales
+            + 3 * bn * 4                    # b1 / lo / hi
+            + bm * bn * 4)                  # score out

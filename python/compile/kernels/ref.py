@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here;
+``python/tests`` asserts ``allclose`` between the two over hypothesis-driven
+shape/dtype sweeps. The oracles are also used directly by the offline
+pipeline (accuracy evaluation doesn't need the kernels' tiling).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Activation functions (shared by L1 kernels, L2 model, offline pipeline).
+# ---------------------------------------------------------------------------
+
+def gelu(x):
+    """tanh-approximated GELU (the variant used by GPT-2/Falcon)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x ** 3)))
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+ACTIVATIONS = {"gelu": gelu, "relu": relu, "silu": silu}
+
+
+def activation(name: str):
+    try:
+        return ACTIVATIONS[name]
+    except KeyError:
+        raise ValueError(f"unknown activation {name!r}; "
+                         f"choose one of {sorted(ACTIVATIONS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Oracle: folded FFN (speculative approximation)  y = x @ C + B
+# ---------------------------------------------------------------------------
+
+def folded_ffn_ref(x, c, bias):
+    """x: [B, d], c: [d, d], bias: [d] -> [B, d]."""
+    return x @ c + bias[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Oracle: k-bit quantized predictor.
+#
+# W1 is stored as signed integer codes with per-(group, neuron) scales:
+#   w_hat[i, n] = codes[i, n] * scales[i // group_size, n]
+# The predictor computes z_hat = x @ w_hat + b1 and an out-of-range score
+#   score = relu(lo - z_hat) + relu(z_hat - hi)
+# score == 0  <=>  the (dequantized) activation input is inside [lo, hi).
+# ---------------------------------------------------------------------------
+
+def dequantize_ref(codes, scales, group_size: int):
+    """codes: [d, h] int8, scales: [d/group_size, h] -> [d, h] float32."""
+    d, h = codes.shape
+    s = jnp.repeat(scales, group_size, axis=0)[:d]
+    return codes.astype(jnp.float32) * s
+
+
+def predictor_ref(x, codes, scales, b1, lo, hi, group_size: int):
+    """x: [B, d] -> (z_hat [B, h], score [B, h])."""
+    w_hat = dequantize_ref(codes, scales, group_size)
+    z_hat = x @ w_hat + b1[None, :]
+    score = relu(lo[None, :] - z_hat) + relu(z_hat - hi[None, :])
+    return z_hat, score
+
+
+# ---------------------------------------------------------------------------
+# Oracle: top-K result fixing (selective correction).
+#
+# For the K selected neurons per row:  z = x @ W1[:, idx] + b1[idx]
+#   correction = valid * (sigma(z) - (a*z + b)) @ W2[idx, :]
+# `valid` masks padding slots (top-k always yields K indices; slots whose
+# predictor score was 0 contribute nothing, keeping exactness).
+# ---------------------------------------------------------------------------
+
+def fix_gather_ref(x, idx, valid, w1, b1, w2, a, b, act: str):
+    """x: [B, d], idx: [B, K] int32, valid: [B, K] -> [B, d]."""
+    sigma = activation(act)
+
+    def one_row(xr, ir, vr):
+        w1g = w1[:, ir]              # [d, K]
+        z = xr @ w1g + b1[ir]        # [K]
+        delta = (sigma(z) - (a[ir] * z + b[ir])) * vr
+        return delta @ w2[ir, :]     # [d]
+
+    return jax.vmap(one_row)(x, idx, valid)
+
+
+# ---------------------------------------------------------------------------
+# Oracle: full dense FFN (the uncompressed baseline the kernels replace).
+# ---------------------------------------------------------------------------
+
+def dense_ffn_ref(x, w1, b1, w2, b2, act: str):
+    sigma = activation(act)
+    return sigma(x @ w1 + b1[None, :]) @ w2 + b2[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Oracle: TARDIS FFN with *exact* (unbounded-capacity) fixing. This is the
+# semantic ground truth of the paper's online phase: speculative folded
+# matmul, then subtract the linear approximation and re-add the true
+# activation for every neuron whose activation input left its hot range.
+# ---------------------------------------------------------------------------
+
+def tardis_ffn_exact_ref(x, c, bias, w1, b1, w2, a, b, lo, hi, act: str,
+                         out_of_range=None):
+    """out_of_range: optional [B, h] bool mask overriding the true range
+    test (used to inject *predictor* decisions instead of ground truth)."""
+    sigma = activation(act)
+    z = x @ w1 + b1[None, :]
+    if out_of_range is None:
+        out_of_range = (z < lo[None, :]) | (z >= hi[None, :])
+    spec = x @ c + bias[None, :]
+    delta = jnp.where(out_of_range, sigma(z) - (a[None, :] * z + b[None, :]),
+                      0.0)
+    return spec + delta @ w2

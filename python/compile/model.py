@@ -1,0 +1,346 @@
+"""L2: the JAX transformer (decoder-only LM) with pluggable FFN modes.
+
+This is the compute graph the rust coordinator serves. Everything here is
+pure-functional JAX over an explicit parameter pytree so that
+
+* ``train.py`` can differentiate ``loss_fn`` directly,
+* the TARDIS offline pipeline can read/replace FFN weights,
+* ``aot.py`` can lower ``prefill_step`` / ``decode_step`` to HLO text with
+  the parameters as positional inputs (the rust runtime keeps them
+  device-resident and threads the KV cache through without host copies).
+
+FFN modes
+---------
+``dense``             sigma(x W1 + b1) W2 + b2                 (baseline)
+``tardis``            folded_ffn + predictor + top-K fix       (the paper's
+                      online phase; L1 Pallas kernels on the hot path)
+``tardis_exact``      folded matmul + *unbounded* exact fixing (semantic
+                      ground truth; used for accuracy tables)
+``tardis_pred_dense`` folded matmul + dense fixing driven by the quantized
+                      predictor's decisions (isolates predictor error)
+
+The KV cache is one array ``[L, 2, B, S, H, Dh]`` (2 = keys/values; S
+before H so single-position scatters write contiguous [H, Dh] rows — see
+EXPERIMENTS.md §Perf) and the runtime threads a single buffer per step.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import folded_ffn, predictor_scores, fix_gather, select_topk
+from .kernels import ref as kref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny-gelu"
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512           # = 4 * d_model, the paper's h = 4d
+    max_seq: int = 256
+    act: str = "gelu"
+    # TARDIS online knobs (ignored for dense/pruned variants):
+    ffn_mode: str = "dense"
+    fix_capacity: int = 64    # K: static top-K fix slots per token
+    pred_group: int = 32      # predictor quantization group size
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def with_mode(self, mode: str, **kw) -> "ModelConfig":
+        return replace(self, ffn_mode=mode, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization.
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """GPT-2-style init: N(0, 0.02), residual projections scaled by depth."""
+    k = iter(jax.random.split(key, 6 + 12 * cfg.n_layers))
+    sd = 0.02
+    res = sd / np.sqrt(2 * cfg.n_layers)
+    d, h, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_seq
+
+    def norm(shape, scale=sd):
+        return jax.random.normal(next(k), shape, jnp.float32) * scale
+
+    params: dict[str, Any] = {
+        "embed": norm((v, d)),
+        "pos": norm((s, d)),
+        "lnf_g": jnp.ones((d,)),
+        "lnf_b": jnp.zeros((d,)),
+        "head": norm((d, v)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "ln1_g": jnp.ones((d,)), "ln1_b": jnp.zeros((d,)),
+            "wq": norm((d, d)), "wk": norm((d, d)), "wv": norm((d, d)),
+            "wo": norm((d, d), res),
+            "ln2_g": jnp.ones((d,)), "ln2_b": jnp.zeros((d,)),
+            "w1": norm((d, h)), "b1": jnp.zeros((h,)),
+            "w2": norm((h, d), res), "b2": jnp.zeros((d,)),
+        })
+    return params
+
+
+def empty_kv(cfg: ModelConfig, batch: int) -> jnp.ndarray:
+    return jnp.zeros((cfg.n_layers, 2, batch, cfg.max_seq, cfg.n_heads,
+                      cfg.d_head), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks.
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def ffn_apply(lp: dict, x, cfg: ModelConfig):
+    """Apply the FFN in the configured mode. x: [..., d] -> [..., d]."""
+    mode = cfg.ffn_mode
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    if mode == "dense":
+        y = kref.dense_ffn_ref(x2, lp["w1"], lp["b1"], lp["w2"], lp["b2"],
+                               cfg.act)
+    elif mode == "tardis":
+        # Hot path: L1 Pallas kernels end to end.
+        spec = folded_ffn(x2, lp["fold_c"], lp["fold_b"])
+        score = predictor_scores(x2, lp["pred_codes"], lp["pred_scales"],
+                                 lp["b1"], lp["lo"], lp["hi"],
+                                 group_size=cfg.pred_group)
+        idx, valid = select_topk(score, cfg.fix_capacity)
+        corr = fix_gather(x2, idx, valid, lp["w1"], lp["b1"], lp["w2"],
+                          lp["lin_a"], lp["lin_b"], act=cfg.act)
+        y = spec + corr
+    elif mode == "tardis_exact":
+        y = kref.tardis_ffn_exact_ref(
+            x2, lp["fold_c"], lp["fold_b"], lp["w1"], lp["b1"], lp["w2"],
+            lp["lin_a"], lp["lin_b"], lp["lo"], lp["hi"], cfg.act)
+    elif mode == "tardis_pred_dense":
+        _, score = kref.predictor_ref(x2, lp["pred_codes"],
+                                      lp["pred_scales"], lp["b1"],
+                                      lp["lo"], lp["hi"], cfg.pred_group)
+        y = kref.tardis_ffn_exact_ref(
+            x2, lp["fold_c"], lp["fold_b"], lp["w1"], lp["b1"], lp["w2"],
+            lp["lin_a"], lp["lin_b"], lp["lo"], lp["hi"], cfg.act,
+            out_of_range=score > 0.0)
+    else:
+        raise ValueError(f"unknown ffn_mode {mode!r}")
+    return y.reshape(shp)
+
+
+def _attn_full(lp: dict, x, cfg: ModelConfig):
+    """Training-time full-sequence causal attention. x: [B, S, d]."""
+    B, S, d = x.shape
+    H, Dh = cfg.n_heads, cfg.d_head
+
+    def split(w):
+        return (x @ w).reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+
+    q, k, v = split(lp["wq"]), split(lp["wk"]), split(lp["wv"])
+    scores = q @ k.transpose(0, 1, 3, 2) / np.sqrt(Dh)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    out = jax.nn.softmax(scores, axis=-1) @ v
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, d)
+    return out @ lp["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Training / full-sequence forward (no cache).
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, tokens, cfg: ModelConfig):
+    """tokens: [B, S] int32 -> logits [B, S, V]."""
+    B, S = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :S]
+    for lp in params["layers"]:
+        x = x + _attn_full(lp, layer_norm(x, lp["ln1_g"], lp["ln1_b"]), cfg)
+        x = x + ffn_apply(lp, layer_norm(x, lp["ln2_g"], lp["ln2_b"]), cfg)
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["head"]
+
+
+def loss_fn(params: dict, tokens, cfg: ModelConfig):
+    """Next-token cross entropy. tokens: [B, S+1]."""
+    logits = forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Serving-time forward with KV cache (what aot.py lowers for rust).
+# ---------------------------------------------------------------------------
+
+def _attn_cached(lp: dict, x, kv_l, pos, cfg: ModelConfig):
+    """Cached attention for a block of new tokens in one sequence slot.
+
+    x: [T, d] new-token activations; kv_l: [2, S, H, Dh] this layer+slot's
+    cache; pos: [T] absolute positions. Returns (out [T, d], new kv_l).
+    """
+    T, d = x.shape
+    H, Dh, S = cfg.n_heads, cfg.d_head, cfg.max_seq
+
+    def split(w):
+        return (x @ w).reshape(T, H, Dh)
+
+    q, k, v = split(lp["wq"]), split(lp["wk"]), split(lp["wv"])
+    # Scatter new K/V into the cache at their absolute positions.
+    # S-major layout: each scattered position writes a contiguous [H, Dh].
+    kv_l = kv_l.at[0, pos, :, :].set(k, mode="drop")
+    kv_l = kv_l.at[1, pos, :, :].set(v, mode="drop")
+    keys, vals = kv_l[0], kv_l[1]                    # [S, H, Dh]
+    scores = jnp.einsum("thd,shd->hts", q, keys) / np.sqrt(Dh)
+    key_pos = jnp.arange(S)[None, None, :]           # [1, 1, S]
+    visible = key_pos <= pos[None, :, None]          # causal, per new token
+    scores = jnp.where(visible, scores, -1e30)
+    out = jnp.einsum("hts,shd->thd", jax.nn.softmax(scores, -1), vals)
+    return out.reshape(T, d) @ lp["wo"], kv_l
+
+
+def _block_forward(params, x, kv_slot, pos, cfg):
+    """x: [T, d], kv_slot: [L, 2, S, H, Dh], pos: [T]."""
+    new_kv = []
+    for li, lp in enumerate(params["layers"]):
+        a, kv_l = _attn_cached(lp, layer_norm(x, lp["ln1_g"], lp["ln1_b"]),
+                               kv_slot[li], pos, cfg)
+        x = x + a
+        x = x + ffn_apply(lp, layer_norm(x, lp["ln2_g"], lp["ln2_b"]), cfg)
+        new_kv.append(kv_l)
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["head"], jnp.stack(new_kv)
+
+
+def prefill_step(params: dict, tokens, kv, slot, pos0, cfg: ModelConfig):
+    """Prefill one sequence slot with a chunk of prompt tokens.
+
+    tokens: [T] int32 — a chunk padded with 0 beyond the real length `n`.
+    Returns (logits [T, V], kv'): the caller reads row ``n - 1`` (padding
+    rows are pad-query outputs and must be ignored). Pad positions write
+    garbage K/V beyond the frontier, but every position is overwritten by
+    the chunk/decode step that owns it *before* any query can attend to it
+    (queries only see key_pos <= their own position), so the cache stays
+    consistent. kv: [L, 2, B, S, H, Dh]; slot, pos0: scalars.
+    """
+    T = tokens.shape[0]
+    pos = pos0 + jnp.arange(T)
+    x = params["embed"][tokens] + jnp.take(params["pos"], pos, axis=0)
+    kv_slot = kv[:, :, slot]                         # [L, 2, S, H, Dh]
+    logits, kv_slot = _block_forward(params, x, kv_slot, pos, cfg)
+    kv = kv.at[:, :, slot].set(kv_slot)
+    return logits, kv
+
+
+def _attn_decode_batch(lp: dict, x, kv_l, pos, cfg: ModelConfig):
+    """Batched single-token cached attention across all slots.
+
+    x: [B, d] (one new token per slot), kv_l: [2, B, S, H, Dh], pos: [B].
+    One einsum per projection instead of a per-slot vmap — this keeps the
+    whole decode step as a handful of batch-wide ops, which matters for
+    the TARDIS FFN (one kernel launch per layer, not one per slot); see
+    EXPERIMENTS.md §Perf.
+    """
+    B, d = x.shape
+    H, Dh, S = cfg.n_heads, cfg.d_head, cfg.max_seq
+
+    def split(w):
+        return (x @ w).reshape(B, H, Dh)
+
+    q, k, v = split(lp["wq"]), split(lp["wk"]), split(lp["wv"])
+    bidx = jnp.arange(B)
+    # (bidx, pos) are adjacent leading axes: the scatter writes one
+    # contiguous [H, Dh] row per slot, no layout transpose.
+    kv_l = kv_l.at[0, bidx, pos].set(k, mode="drop")
+    kv_l = kv_l.at[1, bidx, pos].set(v, mode="drop")
+    keys, vals = kv_l[0], kv_l[1]                    # [B, S, H, Dh]
+    scores = jnp.einsum("bhd,bshd->bhs", q, keys) / np.sqrt(Dh)
+    visible = jnp.arange(S)[None, None, :] <= pos[:, None, None]
+    scores = jnp.where(visible, scores, -1e30)
+    out = jnp.einsum("bhs,bshd->bhd", jax.nn.softmax(scores, -1), vals)
+    return out.reshape(B, d) @ lp["wo"], kv_l
+
+
+def decode_step(params: dict, tokens, pos, kv, cfg: ModelConfig):
+    """One token per active slot. tokens: [B] int32, pos: [B] int32
+    (position to write; inactive slots pass pos >= max_seq, dropped by the
+    scatter and masked out by causality). Returns (logits [B, V], kv')."""
+    x = params["embed"][tokens] + jnp.take(
+        params["pos"], jnp.clip(pos, 0, cfg.max_seq - 1), axis=0)
+    new_kv = []
+    for li, lp in enumerate(params["layers"]):
+        a, kv_l = _attn_decode_batch(
+            lp, layer_norm(x, lp["ln1_g"], lp["ln1_b"]), kv[li], pos, cfg)
+        x = x + a
+        x = x + ffn_apply(lp, layer_norm(x, lp["ln2_g"], lp["ln2_b"]), cfg)
+        new_kv.append(kv_l)
+    x = layer_norm(x, params["lnf_g"], params["lnf_b"])
+    return x @ params["head"], jnp.stack(new_kv)
+
+
+# ---------------------------------------------------------------------------
+# Parameter flattening for AOT export (stable ordering shared with rust).
+# ---------------------------------------------------------------------------
+
+TARDIS_LAYER_KEYS = ("fold_c", "fold_b", "pred_codes", "pred_scales",
+                     "lo", "hi", "lin_a", "lin_b")
+DENSE_LAYER_KEYS = ("ln1_g", "ln1_b", "wq", "wk", "wv", "wo",
+                    "ln2_g", "ln2_b", "w1", "b1", "w2", "b2")
+TOP_KEYS = ("embed", "pos", "lnf_g", "lnf_b", "head")
+
+
+def _layer_keys(lp: dict) -> list[str]:
+    """Parameter keys a layer contributes to the AOT interface.
+
+    Folded layers drop ``b2``: it is absorbed into ``fold_b`` and no
+    executable reads it, and jax.jit DCEs unused parameters out of the
+    lowered HLO — the flat list must match the executable's signature
+    exactly or the rust runtime would feed phantom buffers.
+    """
+    dense = [k for k in DENSE_LAYER_KEYS
+             if not (k == "b2" and "fold_c" in lp)]
+    return dense + [k for k in TARDIS_LAYER_KEYS if k in lp]
+
+
+def param_names(params: dict) -> list[str]:
+    """Deterministic flat parameter naming: top-level then per-layer."""
+    names = [f"top.{k}" for k in TOP_KEYS]
+    for li, lp in enumerate(params["layers"]):
+        names += [f"layer{li}.{k}" for k in _layer_keys(lp)]
+    return names
+
+
+def flatten_params(params: dict) -> list[jnp.ndarray]:
+    out = [params[k.split(".", 1)[1]] for k in
+           (f"top.{t}" for t in TOP_KEYS)]
+    for lp in params["layers"]:
+        out += [lp[k] for k in _layer_keys(lp)]
+    return out
+
+
+def unflatten_params(names: list[str], arrays: list, n_layers: int) -> dict:
+    params: dict[str, Any] = {"layers": [{} for _ in range(n_layers)]}
+    for name, arr in zip(names, arrays):
+        scope, key = name.split(".", 1)
+        if scope == "top":
+            params[key] = arr
+        else:
+            params["layers"][int(scope[5:])][key] = arr
+    return params

@@ -1,0 +1,7 @@
+"""TARDIS offline pipeline: calibrate → threshold → range-search → fold →
+predictor. The output of :func:`pipeline.fold_model` is a parameter pytree
+the L2 model can run in ``tardis`` / ``tardis_exact`` modes."""
+
+from .pipeline import FoldReport, fold_model
+
+__all__ = ["fold_model", "FoldReport"]

@@ -1,0 +1,100 @@
+"""Calibration: collect per-neuron activation-input statistics (§4.1).
+
+Runs the dense model over a small calibration set and records, for every
+FFN layer, the *activation inputs* ``z = ln2(x) @ W1 + b1`` (one column of
+``z`` per neuron) plus the FFN block inputs (needed by the Wanda/RIA
+baselines). Mirrors the paper's setup: a handful of samples (default 8 x
+2048-token in the paper; we scale tokens to our tiny models) is enough
+because nothing is backpropagated.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import corpus
+from ..model import ModelConfig, layer_norm, _attn_full
+
+
+@dataclass
+class CalibStats:
+    """Per-layer calibration capture.
+
+    z[l]      : [T, h]  activation inputs (pre-activation) of layer l
+    ffn_in[l] : [T, d]  FFN block inputs (post-ln2), for pruning baselines
+    act_out[l]: [T, h]  activation outputs sigma(z), for W2 pruning scores
+    """
+    z: list[np.ndarray]
+    ffn_in: list[np.ndarray]
+    act_out: list[np.ndarray]
+    n_tokens: int
+
+
+def _capture_forward(params, tokens, cfg: ModelConfig):
+    """Dense forward that also returns per-layer (ffn_in, z)."""
+    from ..kernels.ref import activation, dense_ffn_ref
+    sigma = activation(cfg.act)
+    B, S = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :S]
+    caps = []
+    for lp in params["layers"]:
+        x = x + _attn_full(lp, layer_norm(x, lp["ln1_g"], lp["ln1_b"]), cfg)
+        xin = layer_norm(x, lp["ln2_g"], lp["ln2_b"])
+        z = xin @ lp["w1"] + lp["b1"][None, None, :]
+        caps.append((xin, z))
+        x = x + (sigma(z) @ lp["w2"] + lp["b2"][None, None, :])
+    return caps
+
+
+def collect(params, cfg: ModelConfig, dataset: str = "c4-syn",
+            n_samples: int = 8, sample_len: int = 256, seed: int = 0,
+            max_tokens: int = 4096) -> CalibStats:
+    """Run calibration. n_samples windows of sample_len tokens each."""
+    from ..kernels.ref import activation
+    sigma = activation(cfg.act)
+    toks = np.asarray(corpus.token_stream(dataset, seed=seed,
+                                          n_sentences=2000), np.int32)
+    rng = np.random.default_rng(seed)
+    sample_len = min(sample_len, cfg.max_seq)
+    starts = rng.integers(0, len(toks) - sample_len, n_samples)
+    batch = np.stack([toks[s:s + sample_len] for s in starts])
+
+    caps = jax.jit(_capture_forward, static_argnames=("cfg",))(
+        params, jnp.asarray(batch), cfg)
+    z_list, in_list, out_list = [], [], []
+    total = batch.shape[0] * batch.shape[1]
+    keep = min(total, max_tokens)
+    sel = rng.choice(total, keep, replace=False) if keep < total \
+        else np.arange(total)
+    for xin, z in caps:
+        zf = np.asarray(z, np.float32).reshape(total, -1)[sel]
+        xf = np.asarray(xin, np.float32).reshape(total, -1)[sel]
+        z_list.append(zf)
+        in_list.append(xf)
+        out_list.append(np.asarray(sigma(jnp.asarray(zf)), np.float32))
+    return CalibStats(z=z_list, ffn_in=in_list, act_out=out_list,
+                      n_tokens=keep)
+
+
+# ---------------------------------------------------------------------------
+# Distribution skewness metric (Table 1 / Fig 5).
+# ---------------------------------------------------------------------------
+
+def hot_range_fraction(z: np.ndarray, mass: float = 0.65) -> np.ndarray:
+    """Per neuron: length of the shortest interval holding ``mass`` of the
+    inputs, relative to the total observed input range (paper Table 1:
+    ~18-20% for real LLMs). z: [T, h] -> fractions [h]."""
+    zs = np.sort(z, axis=0)
+    t, h = zs.shape
+    k = max(1, int(np.ceil(mass * t)))
+    if k >= t:
+        return np.ones(h)
+    # window [i, i+k): width of the shortest window containing k samples
+    widths = zs[k - 1:, :] - zs[: t - k + 1, :]       # [t-k+1, h]
+    shortest = widths.min(axis=0)
+    total = zs[-1] - zs[0] + 1e-12
+    return shortest / total

@@ -1,0 +1,99 @@
+"""Constant-folded matrix generation (paper §5.2, Fig 3).
+
+With each neuron's activation replaced by ``phi_n(z) = a_n z + b_n`` on its
+hot range, the FFN collapses by matrix associativity:
+
+    sigma(x W1 + b1) W2 + b2
+      ~ ((x W1 + b1) * a + b) W2 + b2
+      = x (W1 diag(a) W2)  +  (a * b1 + b) W2 + b2
+      = x C + B
+
+``C`` is d x d (vs the original 2dh = 8d^2 for h = 4d: the paper's 87.5%
+theoretical reduction), and ``B`` absorbs both the activation intercepts
+and the original biases. ``intermediate_dtype`` reproduces Table 6: the
+fold is computed in the requested precision, then cast back to float32.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+DTYPES = {
+    "bfloat16": None,   # emulated below (numpy has no native bf16)
+    "float16": np.float16,
+    "float32": np.float32,
+    "float64": np.float64,
+}
+
+
+def _to_bf16(x: np.ndarray) -> np.ndarray:
+    """Round-to-nearest-even truncation of f32 to bfloat16, kept in f32."""
+    u = x.astype(np.float32).view(np.uint32)
+    rounding = 0x7FFF + ((u >> 16) & 1)
+    return ((u + rounding) & 0xFFFF0000).view(np.float32)
+
+
+def _cast(x: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype == "bfloat16":
+        return _to_bf16(np.asarray(x, np.float32))
+    return np.asarray(x, DTYPES[dtype])
+
+
+def fold(w1: np.ndarray, b1: np.ndarray, w2: np.ndarray, b2: np.ndarray,
+         a: np.ndarray, b: np.ndarray,
+         intermediate_dtype: str = "float32"
+         ) -> tuple[np.ndarray, np.ndarray]:
+    """Constant-fold one FFN layer. Returns (C [d, d], B [d]) in f32.
+
+    w1: [d, h], b1: [h], w2: [h, d], b2: [d], a/b: [h] per-neuron linear
+    coefficients.
+    """
+    if intermediate_dtype not in DTYPES:
+        raise ValueError(f"unknown dtype {intermediate_dtype!r}")
+    w1c = _cast(w1, intermediate_dtype)
+    w2c = _cast(w2, intermediate_dtype)
+    ac = _cast(a, intermediate_dtype)
+    bc = _cast(b, intermediate_dtype)
+    b1c = _cast(b1, intermediate_dtype)
+    if intermediate_dtype == "bfloat16":
+        # bf16 storage, f32 accumulate (matches TPU matmul semantics).
+        c = (w1c * ac[None, :]) @ w2c
+        bias = (ac * b1c + bc) @ w2c
+    else:
+        c = (w1c * ac[None, :].astype(w1c.dtype)) @ w2c
+        bias = (ac * b1c + bc).astype(w2c.dtype) @ w2c
+    c = np.asarray(c, np.float32)
+    bias = np.asarray(bias, np.float32) + np.asarray(b2, np.float32)
+    return c, bias
+
+
+def fold_mse(w1, b1, w2, b2, a, b, z_samples: np.ndarray,
+             x_samples: np.ndarray, intermediate_dtype: str = "float32"
+             ) -> float:
+    """MSE between folded and unfolded *linear* FFN paths (Tables 6/7).
+
+    Compares x C + B against ((x W1 + b1) * a + b) W2 + b2 computed
+    sequentially in f32 — isolating the reassociation/rounding error of the
+    fold itself (both sides use the linear activation).
+    """
+    c, bias = fold(w1, b1, w2, b2, a, b, intermediate_dtype)
+    folded = x_samples @ c + bias[None, :]
+    z = x_samples @ w1 + b1[None, :]
+    seq = (z * a[None, :] + b[None, :]) @ w2 + b2[None, :]
+    return float(np.mean((folded - seq) ** 2))
+
+
+def theoretical_reduction(d: int, h: int) -> float:
+    """Paper §3.1: parameter reduction of folding 2dh into d^2."""
+    return 1.0 - d * d / (2.0 * d * h)
+
+
+def glu_fold_blowup(d: int, h: int) -> float:
+    """§9 limitation: folding a gated FFN sigma(xW1) .* (xW2) W3 yields a
+    quadratic form per output — d*(d+1)/2 parameters per output unit vs the
+    3dh of the original GLU, i.e. a multiplicative blow-up. Returns the
+    parameter ratio folded/original (>> 1, the paper reports 254x for
+    LLaMA-2-7B)."""
+    folded = d * (d + 1) / 2.0 * d      # one quadratic form per output dim
+    return folded / (3.0 * d * h)

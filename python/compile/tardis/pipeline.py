@@ -1,0 +1,177 @@
+"""The TARDIS offline pipeline (paper Fig 7): model + calibration set +
+threshold t  →  folded matrices, ranges, predictor, and a report.
+
+Steps per FFN layer (§5):
+  1. calibrate          — capture activation inputs z = ln2(x) W1 + b1
+  2. layer thresholds   — error-aware allocation of t across layers
+  3. neuron thresholds  — same within the layer
+  4. greedy range search— Algorithm 1 (vectorized) → lo/hi/a/b per neuron
+  5. constant folding   — C = W1 diag(a) W2, B = (a b1 + b) W2 + b2
+  6. predictor          — k-bit quantized W1
+
+The returned parameter pytree contains the original dense weights *plus*
+the tardis keys, so the same pytree runs in any ffn_mode. Compression-
+ratio accounting (paper §7.1) counts C+B, the predictor, and the expected
+resident original weights for fixing against the dense FFN size.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..model import ModelConfig
+from . import calibration, folding, kde, predictor, ranges, thresholds
+
+
+@dataclass
+class LayerReport:
+    threshold: float
+    coverage: float           # achieved mean in-range fraction
+    mean_err: float
+    oor_rate: float           # 1 - coverage (true out-of-range rate)
+    pred_stats: predictor.PredictorStats | None = None
+
+
+@dataclass
+class FoldReport:
+    target_threshold: float
+    bits: int
+    layers: list[LayerReport] = field(default_factory=list)
+    compression_ratio: float = 0.0
+    achieved_coverage: float = 0.0
+    wall_time_s: float = 0.0
+    fold_mse: float = 0.0
+
+    @property
+    def mean_oor_rate(self) -> float:
+        return float(np.mean([l.oor_rate for l in self.layers]))
+
+
+def compression_ratio(cfg: ModelConfig, mean_oor: float, bits: int,
+                      group_size: int | None = None) -> float:
+    """Paper §7.1 accounting, per FFN layer, in f32-param equivalents:
+
+      kept = C (d^2) + B (d) + predictor (bits/32 * dh + f16 scales)
+             + resident original neuron weights for fixing
+               (out-of-range rate * 2dh, cf. §5.4 Memory Footprint)
+      ratio = 1 - kept / (2dh + h + d)
+    """
+    d, h = cfg.d_model, cfg.d_ff
+    g = group_size or cfg.pred_group
+    orig = 2.0 * d * h + h + d
+    pred_sz = d * h * bits / 32.0 + (d // g) * h / 2.0
+    kept = d * d + d + pred_sz + mean_oor * (2.0 * d * h + h)
+    return 1.0 - kept / orig
+
+
+def threshold_for_ratio(cfg: ModelConfig, target_ratio: float, bits: int,
+                        slack: float = 0.0) -> float:
+    """Invert the ratio accounting: coverage threshold t giving the ratio.
+
+    Assumes achieved out-of-range rate ~ (1 - t) (validated in Fig 12: the
+    range search hits its coverage target within <2%).
+    """
+    lo_t, hi_t = 0.50, 0.999
+    for _ in range(40):
+        mid = 0.5 * (lo_t + hi_t)
+        r = compression_ratio(cfg, (1.0 - mid) * (1.0 + slack), bits)
+        if r < target_ratio:
+            lo_t = mid
+        else:
+            hi_t = mid
+    return 0.5 * (lo_t + hi_t)
+
+
+def fold_model(params: dict, cfg: ModelConfig, target_t: float,
+               dataset: str = "c4-syn", n_samples: int = 8,
+               bits: int = 2, intermediate_dtype: str = "float32",
+               seed: int = 0, stats: calibration.CalibStats | None = None,
+               n_steps: int = 64) -> tuple[dict, FoldReport]:
+    """Run the offline pipeline; returns (augmented params, report)."""
+    t0 = time.time()
+    if stats is None:
+        stats = calibration.collect(params, cfg, dataset=dataset,
+                                    n_samples=n_samples, seed=seed)
+    L = cfg.n_layers
+    w2norms = [np.linalg.norm(np.asarray(lp["w2"]), axis=1)
+               for lp in params["layers"]]
+
+    # ---- layer-level thresholds (error at uniform target as proxy) ----
+    layer_err = []
+    for li in range(L):
+        z = stats.z[li]
+        lo, hi = ranges.quantile_ranges(z, np.full(z.shape[1], target_t))
+        layer_err.append(float(ranges.approx_error(
+            z, cfg.act, lo, hi, w2norms[li]).sum()))
+    t_layers = thresholds.layer_thresholds(layer_err, target_t)
+
+    report = FoldReport(target_threshold=target_t, bits=bits)
+    new_params = {k: v for k, v in params.items() if k != "layers"}
+    new_params["layers"] = []
+
+    for li, lp in enumerate(params["layers"]):
+        z = stats.z[li].astype(np.float64)
+        h = z.shape[1]
+        # ---- neuron-level thresholds ----
+        lo_q, hi_q = ranges.quantile_ranges(z, np.full(h, t_layers[li]))
+        nerr = ranges.approx_error(z, cfg.act, lo_q, hi_q, w2norms[li])
+        t_neurons = thresholds.neuron_thresholds(nerr, float(t_layers[li]))
+        # ---- Algorithm 1 ----
+        centroids = kde.find_centroids(z.astype(np.float32), seed=seed)
+        spec = ranges.greedy_search(z, cfg.act, t_neurons, centroids,
+                                    w2norms[li], n_steps=n_steps)
+        # ---- constant folding ----
+        w1 = np.asarray(lp["w1"], np.float32)
+        b1 = np.asarray(lp["b1"], np.float32)
+        w2 = np.asarray(lp["w2"], np.float32)
+        b2 = np.asarray(lp["b2"], np.float32)
+        c, bias = folding.fold(w1, b1, w2, b2,
+                               spec.a.astype(np.float32),
+                               spec.b.astype(np.float32),
+                               intermediate_dtype)
+        report.fold_mse += folding.fold_mse(
+            w1, b1, w2, b2, spec.a.astype(np.float32),
+            spec.b.astype(np.float32), stats.z[li][:256],
+            stats.ffn_in[li][:256], intermediate_dtype) / L
+        # ---- predictor ----
+        qp = predictor.quantize(w1, bits=bits, group_size=cfg.pred_group)
+        pstats = predictor.evaluate(qp, stats.ffn_in[li][:512], w1, b1,
+                                    spec.lo.astype(np.float32),
+                                    spec.hi.astype(np.float32))
+        nlp = dict(lp)
+        nlp.update({
+            "fold_c": jnp.asarray(c),
+            "fold_b": jnp.asarray(bias),
+            "pred_codes": jnp.asarray(qp.codes),
+            "pred_scales": jnp.asarray(qp.scales),
+            "lo": jnp.asarray(spec.lo, jnp.float32),
+            "hi": jnp.asarray(spec.hi, jnp.float32),
+            "lin_a": jnp.asarray(spec.a, jnp.float32),
+            "lin_b": jnp.asarray(spec.b, jnp.float32),
+        })
+        new_params["layers"].append(nlp)
+        report.layers.append(LayerReport(
+            threshold=float(t_layers[li]),
+            coverage=float(spec.coverage.mean()),
+            mean_err=float(spec.err.mean()),
+            oor_rate=float(1.0 - spec.coverage.mean()),
+            pred_stats=pstats,
+        ))
+
+    report.achieved_coverage = float(
+        np.mean([l.coverage for l in report.layers]))
+    report.compression_ratio = compression_ratio(
+        cfg, report.mean_oor_rate, bits)
+    report.wall_time_s = time.time() - t0
+    return new_params, report
+
+
+def fix_capacity_for(cfg: ModelConfig, mean_oor: float,
+                     safety: float = 2.0) -> int:
+    """Static top-K capacity from the calibration out-of-range rate."""
+    k = int(np.ceil(mean_oor * cfg.d_ff * safety))
+    return int(np.clip(k, 4, cfg.d_ff))

@@ -1,0 +1,85 @@
+"""Out-of-range predictor (paper §5.3): a k-bit quantized copy of W1.
+
+The online phase must know which neurons' activation inputs left their hot
+range. Computing that exactly needs the full ``x @ W1`` — the very matmul
+folding eliminated — so TARDIS instead keeps a heavily *quantized* W1
+(GPTQ 2-bit in the paper; a from-scratch symmetric group quantizer here)
+that is just accurate enough to answer the binary in/out question.
+
+Size accounting models the deployed format: ``bits`` per code plus one
+float16 scale per (group, neuron); the int8 ``codes`` array here is the
+unpacked working representation the interpret-mode kernel consumes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class QuantizedPredictor:
+    codes: np.ndarray     # [d, h] int8 (values in [-qmax, qmax])
+    scales: np.ndarray    # [d/group, h] float32
+    bits: int
+    group_size: int
+
+    @property
+    def size_params_f32(self) -> float:
+        """Size in float32-parameter equivalents (for ratio accounting)."""
+        d, h = self.codes.shape
+        return d * h * self.bits / 32.0 + self.scales.size / 2.0
+
+    def dequantize(self) -> np.ndarray:
+        s = np.repeat(self.scales, self.group_size, axis=0)
+        return self.codes.astype(np.float32) * s[: self.codes.shape[0]]
+
+
+def quantize(w1: np.ndarray, bits: int = 2, group_size: int = 32
+             ) -> QuantizedPredictor:
+    """Symmetric per-(group, neuron) quantization of W1 [d, h]."""
+    if not 2 <= bits <= 8:
+        raise ValueError(f"bits must be in [2, 8], got {bits}")
+    d, h = w1.shape
+    if d % group_size:
+        raise ValueError(f"d={d} not divisible by group_size={group_size}")
+    qmax = float(2 ** (bits - 1) - 1)
+    g = w1.reshape(d // group_size, group_size, h)
+    absmax = np.abs(g).max(axis=1)                      # [d/g, h]
+    scales = np.maximum(absmax / qmax, 1e-12).astype(np.float32)
+    codes = np.clip(np.rint(g / scales[:, None, :]), -qmax, qmax)
+    return QuantizedPredictor(
+        codes=codes.reshape(d, h).astype(np.int8),
+        scales=scales, bits=bits, group_size=group_size)
+
+
+def predict_out_of_range(pred: QuantizedPredictor, x: np.ndarray,
+                         b1: np.ndarray, lo: np.ndarray, hi: np.ndarray
+                         ) -> np.ndarray:
+    """Predicted out-of-range mask [T, h] from FFN inputs x [T, d]."""
+    z_hat = x @ pred.dequantize() + b1[None, :]
+    return (z_hat < lo[None, :]) | (z_hat >= hi[None, :])
+
+
+@dataclass
+class PredictorStats:
+    precision: float      # flagged & truly-out / flagged
+    recall: float         # flagged & truly-out / truly-out
+    flag_rate: float      # fraction of (token, neuron) pairs flagged
+    true_oor_rate: float  # ground-truth out-of-range rate
+
+
+def evaluate(pred: QuantizedPredictor, x: np.ndarray, w1: np.ndarray,
+             b1: np.ndarray, lo: np.ndarray, hi: np.ndarray
+             ) -> PredictorStats:
+    z = x @ w1 + b1[None, :]
+    truth = (z < lo[None, :]) | (z >= hi[None, :])
+    flagged = predict_out_of_range(pred, x, b1, lo, hi)
+    tp = float((flagged & truth).sum())
+    return PredictorStats(
+        precision=tp / max(float(flagged.sum()), 1.0),
+        recall=tp / max(float(truth.sum()), 1.0),
+        flag_rate=float(flagged.mean()),
+        true_oor_rate=float(truth.mean()),
+    )

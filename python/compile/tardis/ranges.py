@@ -1,0 +1,135 @@
+"""Range search: Algorithm 1, vectorized across neurons.
+
+For each neuron we find one input interval ``[lo, hi)`` and a linear fit
+``y = a*z + b`` of the activation on that interval, such that at least the
+neuron's coverage threshold of calibration inputs land inside. The search
+is the paper's greedy expansion — start at the KDE centroid, repeatedly
+extend the cheaper side — but evaluated for *all h neurons of a layer at
+once* with closed-form least-squares statistics, which turns the paper's
+30-minutes-per-layer loop into seconds (EXPERIMENTS.md §7.3).
+
+Error metric (paper §5.1): per-neuron L2 distance between true and
+approximated FFN contribution, i.e. the activation-space SSE scaled by
+``||W2[n, :]||_2``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..kernels.ref import activation as act_fn
+
+
+@dataclass
+class RangeSpec:
+    """Per-neuron linear approximation of one FFN layer."""
+    lo: np.ndarray        # [h] inclusive lower bound
+    hi: np.ndarray        # [h] exclusive upper bound
+    a: np.ndarray         # [h] slope
+    b: np.ndarray         # [h] intercept
+    coverage: np.ndarray  # [h] fraction of calibration inputs in range
+    err: np.ndarray       # [h] weighted SSE of the fit (importance score)
+
+
+def linfit_masked(z: np.ndarray, y: np.ndarray, mask: np.ndarray
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Closed-form least squares per neuron over masked samples.
+
+    z, y, mask: [T, h]. Returns (a, b, sse) each [h]. Neurons with < 2
+    in-range samples degrade to (a=0, b=mean y) with sse over the mask.
+    """
+    m = mask.astype(np.float64)
+    n = m.sum(axis=0)
+    sx = (z * m).sum(axis=0)
+    sy = (y * m).sum(axis=0)
+    sxx = (z * z * m).sum(axis=0)
+    sxy = (z * y * m).sum(axis=0)
+    syy = (y * y * m).sum(axis=0)
+    denom = n * sxx - sx * sx
+    ok = (n >= 2) & (np.abs(denom) > 1e-12)
+    a = np.where(ok, (n * sxy - sx * sy) / np.where(ok, denom, 1.0), 0.0)
+    b = np.where(n > 0, (sy - a * sx) / np.maximum(n, 1.0), 0.0)
+    sse = (syy + a * a * sxx + n * b * b
+           - 2 * a * sxy - 2 * b * sy + 2 * a * b * sx)
+    return a, b, np.maximum(sse, 0.0)
+
+
+def quantile_ranges(z: np.ndarray, t_n: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Cheap proxy ranges: the shortest window holding t_n mass per neuron.
+
+    Used for the *error estimation* passes of the adaptive thresholding
+    (the paper's ``estimate_error_layers`` / ``estimate_error_neurons``);
+    the final ranges come from :func:`greedy_search`.
+    """
+    t, h = z.shape
+    zs = np.sort(z, axis=0)
+    lo = np.empty(h)
+    hi = np.empty(h)
+    for n in range(h):
+        k = int(np.ceil(np.clip(t_n[n], 0.0, 1.0) * t))
+        k = min(max(k, 2), t)
+        widths = zs[k - 1:, n] - zs[: t - k + 1, n]
+        i = int(widths.argmin())
+        lo[n] = zs[i, n]
+        hi[n] = zs[i + k - 1, n]
+    # Exclusive upper bound: nudge past the last included sample.
+    span = zs[-1] - zs[0]
+    return lo, hi + 1e-6 * (span + 1.0)
+
+
+def approx_error(z: np.ndarray, act: str, lo: np.ndarray, hi: np.ndarray,
+                 w2norm: np.ndarray) -> np.ndarray:
+    """Weighted in-range SSE of the best linear fit (importance score)."""
+    y = act_fn(act)(z)
+    mask = (z >= lo[None, :]) & (z < hi[None, :])
+    _, _, sse = linfit_masked(z, np.asarray(y), mask)
+    return sse * (w2norm ** 2)
+
+
+def greedy_search(z: np.ndarray, act: str, t_n: np.ndarray,
+                  centroids: np.ndarray, w2norm: np.ndarray,
+                  n_steps: int = 64, max_iters: int | None = None
+                  ) -> RangeSpec:
+    """Algorithm 1, all neurons of a layer simultaneously.
+
+    z: [T, h] calibration activation inputs; t_n: [h] coverage thresholds;
+    centroids: [h] KDE modes; w2norm: [h] L2 norms of W2 rows.
+    """
+    t, h = z.shape
+    y = np.asarray(act_fn(act)(z), np.float64)
+    z = z.astype(np.float64)
+    zmin, zmax = z.min(axis=0), z.max(axis=0)
+    step = np.maximum((zmax - zmin) / n_steps, 1e-9)
+    lo = np.clip(centroids - 0.5 * step, zmin, zmax)
+    hi = np.clip(centroids + 0.5 * step, zmin, zmax)
+    max_iters = max_iters or (2 * n_steps + 8)
+
+    coverage = np.zeros(h)
+    for _ in range(max_iters):
+        inr = (z >= lo[None, :]) & (z < hi[None, :])
+        coverage = inr.mean(axis=0)
+        active = coverage < t_n
+        if not active.any():
+            break
+        lo_l = np.where(active, lo - step, lo)
+        hi_r = np.where(active, hi + step, hi)
+        # Candidate error when extending left vs right (Alg. 1 l.20-25).
+        m_l = (z >= lo_l[None, :]) & (z < hi[None, :])
+        m_r = (z >= lo[None, :]) & (z < hi_r[None, :])
+        _, _, sse_l = linfit_masked(z, y, m_l)
+        _, _, sse_r = linfit_masked(z, y, m_r)
+        go_left = sse_l <= sse_r
+        # Never expand past the data (the other side keeps making progress).
+        go_left = np.where(lo - step < zmin - step, False, go_left)
+        go_left = np.where(hi + step > zmax + step, True, go_left)
+        lo = np.where(active & go_left, lo - step, lo)
+        hi = np.where(active & ~go_left, hi + step, hi)
+
+    inr = (z >= lo[None, :]) & (z < hi[None, :])
+    coverage = inr.mean(axis=0)
+    a, b, sse = linfit_masked(z, y, inr)
+    return RangeSpec(lo=lo, hi=hi, a=a, b=b, coverage=coverage,
+                     err=sse * (w2norm ** 2))

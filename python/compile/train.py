@@ -1,0 +1,161 @@
+"""Training loop for the tiny LMs (pure JAX Adam, deterministic).
+
+We cannot download Falcon/BLOOM/GPT-2, so `make artifacts` trains three
+small decoder-only LMs from scratch on the synthetic corpus — one per
+activation family the paper evaluates (GELU / ReLU / SiLU). Training is a
+build-time step and its outputs are cached under ``artifacts/weights``.
+"""
+
+from __future__ import annotations
+
+import functools
+import pickle
+import time
+from dataclasses import dataclass
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import ModelConfig, forward, init_params, loss_fn
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 350
+    batch: int = 16
+    seq: int = 64
+    lr: float = 3e-3
+    warmup: int = 30
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    seed: int = 0
+    dataset: str = "wiki-syn"
+    log_every: int = 50
+
+
+def make_batches(tokens: np.ndarray, tc: TrainConfig):
+    """Deterministic random windows of length seq+1."""
+    rng = np.random.default_rng(tc.seed)
+    n = len(tokens) - tc.seq - 1
+    for _ in range(tc.steps):
+        starts = rng.integers(0, n, tc.batch)
+        yield np.stack([tokens[s:s + tc.seq + 1] for s in starts])
+
+
+def _lr_at(step, tc: TrainConfig):
+    warm = jnp.minimum(step / max(tc.warmup, 1), 1.0)
+    # cosine decay to 10%
+    prog = jnp.clip((step - tc.warmup) / max(tc.steps - tc.warmup, 1), 0, 1)
+    return tc.lr * warm * (0.55 + 0.45 * jnp.cos(jnp.pi * prog))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "tc"))
+def train_step(params, opt_state, tokens, step, cfg: ModelConfig,
+               tc: TrainConfig):
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, cfg)
+    # global-norm clip
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, tc.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    m, v = opt_state
+    lr = _lr_at(step, tc)
+    t = step + 1
+
+    def upd(m_, v_, g):
+        m_ = tc.beta1 * m_ + (1 - tc.beta1) * g
+        v_ = tc.beta2 * v_ + (1 - tc.beta2) * g * g
+        return m_, v_
+
+    new_m = jax.tree_util.tree_map(lambda m_, g: tc.beta1 * m_ +
+                                   (1 - tc.beta1) * g, m, grads)
+    new_v = jax.tree_util.tree_map(lambda v_, g: tc.beta2 * v_ +
+                                   (1 - tc.beta2) * g * g, v, grads)
+    mhat = jax.tree_util.tree_map(lambda m_: m_ / (1 - tc.beta1 ** t), new_m)
+    vhat = jax.tree_util.tree_map(lambda v_: v_ / (1 - tc.beta2 ** t), new_v)
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + tc.eps),
+        params, mhat, vhat)
+    return params, (new_m, new_v), loss
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, verbose: bool = True):
+    """Train from scratch; returns (params, loss_history)."""
+    toks_train, _ = corpus.train_eval_split(tc.dataset, seed=tc.seed)
+    toks = np.asarray(toks_train, np.int32)
+    params = init_params(cfg, jax.random.PRNGKey(tc.seed))
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    opt_state = (zeros, jax.tree_util.tree_map(jnp.zeros_like, params))
+    hist = []
+    t0 = time.time()
+    for step, batch in enumerate(make_batches(toks, tc)):
+        params, opt_state, loss = train_step(
+            params, opt_state, jnp.asarray(batch), step, cfg, tc)
+        hist.append(float(loss))
+        if verbose and (step % tc.log_every == 0 or step == tc.steps - 1):
+            print(f"[train {cfg.name}] step {step:4d} "
+                  f"loss {float(loss):.4f} ({time.time() - t0:.0f}s)")
+    return params, hist
+
+
+def eval_perplexity(params, cfg: ModelConfig, tokens: np.ndarray,
+                    seq: int = 64, max_windows: int = 64) -> float:
+    """Perplexity over non-overlapping windows of the eval stream."""
+    n = (len(tokens) - 1) // seq
+    n = min(n, max_windows)
+    tok = np.stack([tokens[i * seq:i * seq + seq + 1] for i in range(n)])
+    nll = float(loss_fn(params, jnp.asarray(tok, jnp.int32), cfg))
+    return float(np.exp(nll))
+
+
+def save_params(params, path: Path):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    host = jax.tree_util.tree_map(np.asarray, params)
+    with open(path, "wb") as f:
+        pickle.dump(host, f)
+
+
+def load_params(path: Path):
+    with open(path, "rb") as f:
+        host = pickle.load(f)
+    return jax.tree_util.tree_map(jnp.asarray, host)
+
+
+MODEL_ZOO = {
+    "tiny-gelu": ModelConfig(name="tiny-gelu", act="gelu"),
+    "tiny-relu": ModelConfig(name="tiny-relu", act="relu"),
+    "tiny-silu": ModelConfig(name="tiny-silu", act="silu"),
+}
+
+
+def get_or_train(name: str, cache_dir: Path, tc: TrainConfig | None = None,
+                 verbose: bool = True):
+    """Load cached weights or train + cache. Returns (cfg, params)."""
+    cfg = MODEL_ZOO[name]
+    tc = tc or TrainConfig()
+    path = cache_dir / f"{name}.pkl"
+    if path.exists():
+        return cfg, load_params(path)
+    params, hist = train(cfg, tc, verbose=verbose)
+    save_params(params, path)
+    (cache_dir / f"{name}.loss.txt").write_text(
+        "\n".join(f"{i} {v:.5f}" for i, v in enumerate(hist)))
+    return cfg, params
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="tiny-gelu", choices=MODEL_ZOO)
+    ap.add_argument("--cache", default="../artifacts/weights")
+    ap.add_argument("--steps", type=int, default=TrainConfig.steps)
+    args = ap.parse_args()
+    cfg, params = get_or_train(args.model, Path(args.cache),
+                               TrainConfig(steps=args.steps))
+    _, ev = corpus.train_eval_split("wiki-syn")
+    print("eval ppl:", eval_perplexity(params, cfg, np.asarray(ev)))

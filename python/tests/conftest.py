@@ -1,0 +1,49 @@
+"""Shared fixtures: a small trained model is expensive, so tests that need
+real weights reuse the artifacts/weights cache when present and otherwise
+fall back to a random-init model (distributional tests only need shapes)."""
+
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.model import ModelConfig, init_params  # noqa: E402
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    return ModelConfig(name="tiny-gelu", act="gelu")
+
+
+@pytest.fixture(scope="session")
+def random_params(tiny_cfg):
+    return init_params(tiny_cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="session")
+def trained(tiny_cfg):
+    """(cfg, params) with trained weights if cached, else random."""
+    from compile.train import load_params
+    path = ARTIFACTS / "weights" / "tiny-gelu.pkl"
+    if path.exists():
+        return tiny_cfg, load_params(path)
+    return tiny_cfg, init_params(tiny_cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="session")
+def calib_stats(trained):
+    from compile.tardis import calibration
+    cfg, params = trained
+    return calibration.collect(params, cfg, dataset="c4-syn", n_samples=4,
+                               max_tokens=1024)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,55 @@
+"""Calibration capture + the skewness statistics behind Table 1 / Fig 5."""
+
+import numpy as np
+
+from compile.tardis import calibration
+
+
+def test_collect_shapes(trained, calib_stats):
+    cfg, params = trained
+    s = calib_stats
+    assert len(s.z) == cfg.n_layers
+    assert len(s.ffn_in) == cfg.n_layers
+    for z, xin, act in zip(s.z, s.ffn_in, s.act_out):
+        assert z.shape == (s.n_tokens, cfg.d_ff)
+        assert xin.shape == (s.n_tokens, cfg.d_model)
+        assert act.shape == z.shape
+        assert np.isfinite(z).all()
+
+
+def test_act_out_is_activation_of_z(trained, calib_stats):
+    import jax.numpy as jnp
+    from compile.kernels.ref import activation
+    cfg, _ = trained
+    sigma = activation(cfg.act)
+    for z, act in zip(calib_stats.z, calib_stats.act_out):
+        np.testing.assert_allclose(np.asarray(sigma(jnp.asarray(z[:32]))),
+                                   act[:32], rtol=1e-5, atol=1e-5)
+
+
+def test_hot_range_fraction_uniform_vs_skewed():
+    rng = np.random.default_rng(0)
+    uniform = rng.uniform(-1, 1, (2000, 4))
+    skewed = rng.standard_t(2, (2000, 4))  # heavy tails, tight core
+    f_u = calibration.hot_range_fraction(uniform, 0.65)
+    f_s = calibration.hot_range_fraction(skewed, 0.65)
+    # uniform: 65% of mass needs ~65% of the range; skewed: much less
+    assert np.all(f_u > 0.55)
+    assert np.all(f_s < 0.35)
+
+
+def test_hot_range_fraction_on_real_activations(trained, calib_stats):
+    """Insight 1 (Table 1): trained-FFN activation inputs are skewed —
+    65% of inputs occupy well under half the observed range."""
+    fracs = [calibration.hot_range_fraction(z, 0.65).mean()
+             for z in calib_stats.z]
+    assert all(f < 0.5 for f in fracs), fracs
+
+
+def test_hot_range_fraction_edge_cases():
+    ones = np.ones((100, 3))
+    f = calibration.hot_range_fraction(ones, 0.65)
+    assert np.all(f <= 1.0)
+    tiny = np.random.default_rng(1).normal(0, 1, (3, 2))
+    f2 = calibration.hot_range_fraction(tiny, 0.99)
+    assert np.all((f2 >= 0) & (f2 <= 1.0 + 1e-9))

@@ -1,0 +1,153 @@
+"""Corpus generators, task generators, evaluation suite, and baselines."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus, evalsuite
+from compile.baselines import METHODS, prune_magnitude, prune_ria, prune_wanda
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# corpus
+# ---------------------------------------------------------------------------
+
+def test_corpora_deterministic():
+    a = corpus.token_stream("wiki-syn", seed=3, n_sentences=50)
+    b = corpus.token_stream("wiki-syn", seed=3, n_sentences=50)
+    assert a == b
+
+
+def test_corpora_differ_across_datasets_and_seeds():
+    a = corpus.token_stream("wiki-syn", seed=0, n_sentences=50)
+    b = corpus.token_stream("c4-syn", seed=0, n_sentences=50)
+    c = corpus.token_stream("wiki-syn", seed=1, n_sentences=50)
+    assert a != b and a != c
+
+
+def test_tokens_are_bytes():
+    toks = corpus.token_stream("ptb-syn", n_sentences=20)
+    assert all(0 <= t < 256 for t in toks)
+    assert corpus.encode(corpus.decode(toks)) == toks
+
+
+def test_unknown_dataset_raises():
+    with pytest.raises(ValueError):
+        corpus.generate_text(corpus.CorpusConfig(dataset="nope"))
+
+
+def test_split_disjoint_and_ordered():
+    tr, ev = corpus.train_eval_split("wiki-syn", n_sentences=200)
+    assert len(tr) > len(ev) > 0
+    whole = corpus.token_stream("wiki-syn", n_sentences=200)
+    assert tr + ev == whole
+
+
+@settings(**SETTINGS)
+@given(task=st.sampled_from(sorted(corpus.TASKS)),
+       seed=st.integers(0, 1000))
+def test_task_items_well_formed(task, seed):
+    items = corpus.TASKS[task](8, seed=seed)
+    assert len(items) == 8
+    for it in items:
+        assert len(it.choices) == 2
+        assert 0 <= it.answer < 2
+        assert it.choices[0] != it.choices[1]
+        assert len(it.context) > 0
+
+
+def test_recall_items_contain_the_answer_in_context():
+    for it in corpus.make_recall_items(16, seed=1):
+        answer_word = it.choices[it.answer].strip(" .")
+        assert answer_word in it.context
+
+
+# ---------------------------------------------------------------------------
+# evalsuite
+# ---------------------------------------------------------------------------
+
+def test_perplexity_of_trained_model_beats_uniform(trained):
+    cfg, params = trained
+    ppl = evalsuite.perplexity(params, cfg, dataset="wiki-syn",
+                               max_windows=8)
+    assert ppl < 256  # uniform byte model has ppl 256
+    assert ppl > 1.0
+
+
+def test_perplexity_worse_on_shifted_distribution(trained):
+    cfg, params = trained
+    ppl_in = evalsuite.perplexity(params, cfg, dataset="wiki-syn",
+                                  max_windows=8)
+    ppl_out = evalsuite.perplexity(params, cfg, dataset="ptb-syn",
+                                   max_windows=8)
+    assert ppl_out > ppl_in  # trained on wiki-syn
+
+
+def test_zero_shot_accuracy_above_chance(trained):
+    cfg, params = trained
+    acc = evalsuite.zero_shot_accuracy(params, cfg, task="agree-syn",
+                                       n_items=32)
+    assert acc >= 0.6, acc  # binary task; chance = 0.5
+
+
+# ---------------------------------------------------------------------------
+# pruning baselines
+# ---------------------------------------------------------------------------
+
+def _sparsity(w):
+    w = np.asarray(w)
+    return float((w == 0).mean())
+
+
+@settings(**SETTINGS)
+@given(ratio=st.sampled_from([0.25, 0.5, 0.8]),
+       method=st.sampled_from(sorted(METHODS)))
+def test_pruning_hits_target_sparsity(trained, calib_stats, ratio, method):
+    cfg, params = trained
+    pruned = METHODS[method](params, calib_stats, ratio)
+    for lp, orig in zip(pruned["layers"], params["layers"]):
+        s1 = _sparsity(lp["w1"])
+        assert abs(s1 - ratio) < 0.05, (method, ratio, s1)
+        # attention untouched (paper compresses FFN only)
+        np.testing.assert_array_equal(lp["wq"], orig["wq"])
+
+
+def test_wanda_keeps_high_scoring_weights(trained, calib_stats):
+    cfg, params = trained
+    pruned = prune_wanda(params, calib_stats, 0.5)
+    w_orig = np.asarray(params["layers"][0]["w1"])
+    w_new = np.asarray(pruned["layers"][0]["w1"])
+    norms = np.linalg.norm(calib_stats.ffn_in[0], axis=0)
+    score = np.abs(w_orig) * norms[:, None]
+    # per column, the kept set must be the top-scoring half (up to ties)
+    col = 7
+    kept = w_new[:, col] != 0
+    thresh = np.median(score[:, col])
+    assert score[kept, col].min() >= thresh * 0.99
+
+
+def test_pruned_model_quality_degrades_monotonically(trained, calib_stats):
+    cfg, params = trained
+    ppls = []
+    for ratio in (0.0, 0.5, 0.8):
+        p = prune_wanda(params, calib_stats, ratio) if ratio else params
+        ppls.append(evalsuite.perplexity(p, cfg, dataset="wiki-syn",
+                                         max_windows=6))
+    assert ppls[0] <= ppls[1] <= ppls[2], ppls
+
+
+def test_magnitude_ignores_stats(trained, calib_stats):
+    cfg, params = trained
+    a = prune_magnitude(params, calib_stats, 0.5)
+    b = prune_magnitude(params, None, 0.5)
+    np.testing.assert_array_equal(a["layers"][0]["w1"], b["layers"][0]["w1"])
+
+
+def test_ria_differs_from_wanda(trained, calib_stats):
+    cfg, params = trained
+    w = prune_wanda(params, calib_stats, 0.5)
+    r = prune_ria(params, calib_stats, 0.5)
+    assert not np.array_equal(np.asarray(w["layers"][0]["w1"]),
+                              np.asarray(r["layers"][0]["w1"]))

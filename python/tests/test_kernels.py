@@ -1,0 +1,203 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes/dtypes; every kernel must match its oracle to
+float32 tolerance across the sweep (interpret=True lowers to the same HLO
+the rust runtime executes, so this is also the runtime's numerics gate).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (fix_gather, folded_ffn, predictor_scores,
+                             select_topk)
+from compile.kernels import ref
+from compile.kernels.folded_ffn import (mxu_utilization_estimate,
+                                        vmem_footprint_bytes)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# folded_ffn
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 3, 8, 16]),
+    d=st.sampled_from([8, 32, 128]),
+    n=st.sampled_from([8, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_folded_ffn_matches_ref(m, d, n, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, m, d)
+    c = _arr(rng, d, n, scale=0.1)
+    b = _arr(rng, n)
+    out = folded_ffn(x, c, b)
+    np.testing.assert_allclose(out, ref.folded_ffn_ref(x, c, b),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_folded_ffn_blocking_invariant(bm, bk, seed):
+    """Different tilings must not change the numerics."""
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, 16, 128)
+    c = _arr(rng, 128, 128, scale=0.1)
+    b = _arr(rng, 128)
+    base = folded_ffn(x, c, b)
+    tiled = folded_ffn(x, c, b, bm=bm, bk=bk, bn=64)
+    np.testing.assert_allclose(base, tiled, rtol=2e-5, atol=2e-5)
+
+
+def test_vmem_and_mxu_estimators():
+    # 128-aligned tiles fill the MXU completely
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    # small tiles waste lanes proportionally
+    assert abs(mxu_utilization_estimate(8, 128, 128) - 8 / 128) < 1e-9
+    fp = vmem_footprint_bytes(128, 128, 128)
+    assert fp == (128 * 128 + 128 * 128 + 128) * 4 + 128 * 128 * 4
+    assert fp < 16 * 2**20, "tile set must fit VMEM"
+
+
+# ---------------------------------------------------------------------------
+# predictor
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 4, 8]),
+    d=st.sampled_from([32, 64, 128]),
+    h=st.sampled_from([64, 256]),
+    g=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_predictor_matches_ref(m, d, h, g, seed):
+    rng = np.random.default_rng(seed)
+    x = _arr(rng, m, d)
+    codes = jnp.asarray(rng.integers(-127, 128, (d, h)), jnp.int8)
+    scales = jnp.asarray(np.abs(rng.standard_normal((d // g, h))) * 0.01,
+                         jnp.float32)
+    b1 = _arr(rng, h, scale=0.1)
+    lo = -jnp.abs(_arr(rng, h))
+    hi = jnp.abs(_arr(rng, h))
+    out = predictor_scores(x, codes, scales, b1, lo, hi, group_size=g)
+    _, want = ref.predictor_ref(x, codes, scales, b1, lo, hi, g)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_predictor_score_semantics(rng):
+    """score == 0 iff z_hat inside [lo, hi)."""
+    d, h, g = 32, 64, 16
+    x = _arr(rng, 4, d)
+    codes = jnp.asarray(rng.integers(-127, 128, (d, h)), jnp.int8)
+    scales = jnp.asarray(np.abs(rng.standard_normal((d // g, h))) * 0.01,
+                         jnp.float32)
+    b1 = jnp.zeros((h,), jnp.float32)
+    lo = jnp.full((h,), -1e9, jnp.float32)
+    hi = jnp.full((h,), 1e9, jnp.float32)
+    score = predictor_scores(x, codes, scales, b1, lo, hi, group_size=g)
+    assert float(jnp.max(score)) == 0.0  # everything in the huge range
+
+
+# ---------------------------------------------------------------------------
+# fix_gather + select_topk
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    act=st.sampled_from(["gelu", "relu", "silu"]),
+    k=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fix_gather_matches_ref(act, k, seed):
+    rng = np.random.default_rng(seed)
+    B, d, h = 4, 32, 128
+    x = _arr(rng, B, d)
+    w1 = _arr(rng, d, h, scale=0.2)
+    w2 = _arr(rng, h, d, scale=0.2)
+    b1 = _arr(rng, h, scale=0.1)
+    a = _arr(rng, h, scale=0.3)
+    b = _arr(rng, h, scale=0.1)
+    score = jnp.abs(_arr(rng, B, h)) * jnp.asarray(
+        rng.random((B, h)) < 0.2, jnp.float32)
+    idx, valid = select_topk(score, k)
+    out = fix_gather(x, idx, valid, w1, b1, w2, a, b, act=act)
+    want = ref.fix_gather_ref(x, idx, valid, w1, b1, w2, a, b, act)
+    np.testing.assert_allclose(out, want, rtol=3e-4, atol=3e-4)
+
+
+def test_select_topk_picks_largest(rng):
+    score = jnp.asarray([[0.0, 5.0, 1.0, 0.0, 3.0]], jnp.float32)
+    idx, valid = select_topk(score, 3)
+    assert set(np.asarray(idx[0]).tolist()) == {1, 4, 2}
+    assert valid.tolist() == [[1.0, 1.0, 1.0]]
+
+
+def test_select_topk_masks_padding(rng):
+    score = jnp.asarray([[0.0, 2.0, 0.0, 0.0]], jnp.float32)
+    idx, valid = select_topk(score, 3)
+    assert int(idx[0, 0]) == 1
+    # only one real out-of-range neuron; the rest are padding
+    assert valid[0].tolist() == [1.0, 0.0, 0.0]
+
+
+def test_fix_gather_zero_valid_is_noop(rng):
+    B, d, h, k = 2, 16, 32, 4
+    x = _arr(rng, B, d)
+    out = fix_gather(
+        x, jnp.zeros((B, k), jnp.int32), jnp.zeros((B, k), jnp.float32),
+        _arr(rng, d, h), _arr(rng, h), _arr(rng, h, d),
+        _arr(rng, h), _arr(rng, h), act="gelu")
+    np.testing.assert_allclose(out, np.zeros((B, d)), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# TARDIS FFN semantics: folded + exact fixing == dense when every neuron
+# is fixed; == pure linear when none are.
+# ---------------------------------------------------------------------------
+
+def test_tardis_exact_full_fix_equals_dense(rng):
+    from compile.tardis import folding
+    B, d, h = 4, 32, 128
+    x = _arr(rng, B, d)
+    w1, b1 = _arr(rng, d, h, scale=0.2), _arr(rng, h, scale=0.1)
+    w2, b2 = _arr(rng, h, d, scale=0.2), _arr(rng, d, scale=0.1)
+    a, b = _arr(rng, h, scale=0.3), _arr(rng, h, scale=0.1)
+    c, bias = folding.fold(np.asarray(w1), np.asarray(b1), np.asarray(w2),
+                           np.asarray(b2), np.asarray(a), np.asarray(b))
+    # empty hot range => every neuron out-of-range => exact fixing
+    lo = jnp.full((h,), 1e9, jnp.float32)
+    hi = jnp.full((h,), 1e9, jnp.float32)
+    got = ref.tardis_ffn_exact_ref(x, jnp.asarray(c), jnp.asarray(bias),
+                                   w1, b1, w2, a, b, lo, hi, "gelu")
+    want = ref.dense_ffn_ref(x, w1, b1, w2, b2, "gelu")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_tardis_exact_no_fix_is_pure_linear(rng):
+    from compile.tardis import folding
+    B, d, h = 4, 32, 128
+    x = _arr(rng, B, d)
+    w1, b1 = _arr(rng, d, h, scale=0.2), _arr(rng, h, scale=0.1)
+    w2, b2 = _arr(rng, h, d, scale=0.2), _arr(rng, d, scale=0.1)
+    a, b = _arr(rng, h, scale=0.3), _arr(rng, h, scale=0.1)
+    c, bias = folding.fold(np.asarray(w1), np.asarray(b1), np.asarray(w2),
+                           np.asarray(b2), np.asarray(a), np.asarray(b))
+    lo = jnp.full((h,), -1e9, jnp.float32)
+    hi = jnp.full((h,), 1e9, jnp.float32)
+    got = ref.tardis_ffn_exact_ref(x, jnp.asarray(c), jnp.asarray(bias),
+                                   w1, b1, w2, a, b, lo, hi, "gelu")
+    want = x @ jnp.asarray(c) + jnp.asarray(bias)[None, :]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,163 @@
+"""L2 model invariants: causality, cache consistency, FFN-mode agreement,
+parameter flattening contract (the AOT interface rust depends on)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (DENSE_LAYER_KEYS, ModelConfig, TOP_KEYS,
+                           decode_step, empty_kv, flatten_params, forward,
+                           init_params, loss_fn, param_names, prefill_step,
+                           unflatten_params)
+
+SETTINGS = dict(max_examples=6, deadline=None)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = ModelConfig(name="t", d_model=32, n_layers=2, n_heads=2, d_ff=128,
+                      max_seq=32, vocab=64)
+    return cfg, init_params(cfg, jax.random.PRNGKey(1))
+
+
+def test_forward_shapes(small):
+    cfg, params = small
+    toks = jnp.zeros((3, 10), jnp.int32)
+    assert forward(params, toks, cfg).shape == (3, 10, cfg.vocab)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_causality(small, seed):
+    """Changing token t must not change logits before t."""
+    cfg, params = small
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
+    base = forward(params, toks, cfg)
+    poked = forward(params, toks.at[0, 7].set(0), cfg)
+    np.testing.assert_allclose(base[0, :7], poked[0, :7], atol=1e-5)
+    assert not np.allclose(base[0, 7:], poked[0, 7:], atol=1e-5)
+
+
+def test_prefill_matches_forward(small):
+    cfg, params = small
+    rng = np.random.default_rng(0)
+    seq = jnp.asarray(rng.integers(0, cfg.vocab, 9), jnp.int32)
+    kv = empty_kv(cfg, 4)
+    logits, kv = prefill_step(params, seq, kv, 2, 0, cfg)
+    full = forward(params, seq[None], cfg)[0]
+    np.testing.assert_allclose(logits[len(seq) - 1], full[-1], atol=1e-3)
+
+
+def test_decode_matches_forward_token_by_token(small):
+    cfg, params = small
+    rng = np.random.default_rng(2)
+    seq = np.asarray(rng.integers(0, cfg.vocab, 6), np.int32)
+    kv = empty_kv(cfg, 2)
+    # prefill first 3 tokens into slot 1
+    _, kv = prefill_step(params, jnp.asarray(seq[:3]), kv, 1, 0, cfg)
+    # feed the rest through decode
+    for i in range(3, 6):
+        tokens = jnp.zeros((2,), jnp.int32).at[1].set(int(seq[i]))
+        pos = jnp.full((2,), cfg.max_seq, jnp.int32).at[1].set(i)
+        logits, kv = decode_step(params, tokens, pos, kv, cfg)
+    full = forward(params, jnp.asarray(seq)[None], cfg)[0]
+    np.testing.assert_allclose(logits[1], full[-1], atol=1e-3)
+
+
+def test_decode_slots_are_isolated(small):
+    """Activity in slot 0 must not change slot 1's logits."""
+    cfg, params = small
+    rng = np.random.default_rng(3)
+    seq = jnp.asarray(rng.integers(0, cfg.vocab, 4), jnp.int32)
+    kv_a = empty_kv(cfg, 2)
+    _, kv_a = prefill_step(params, seq, kv_a, 1, 0, cfg)
+    kv_b = empty_kv(cfg, 2)
+    _, kv_b = prefill_step(params, seq, kv_b, 1, 0, cfg)
+    # slot 0 busy in run B only
+    other = jnp.asarray(rng.integers(0, cfg.vocab, 4), jnp.int32)
+    _, kv_b = prefill_step(params, other, kv_b, 0, 0, cfg)
+    tok = jnp.asarray([5, 7], jnp.int32)
+    pos_a = jnp.asarray([cfg.max_seq, 4], jnp.int32)
+    pos_b = jnp.asarray([4, 4], jnp.int32)
+    la, _ = decode_step(params, tok, pos_a, kv_a, cfg)
+    lb, _ = decode_step(params, tok, pos_b, kv_b, cfg)
+    np.testing.assert_allclose(la[1], lb[1], atol=1e-4)
+
+
+def test_padded_prefill_rows_do_not_corrupt(small):
+    """Pad tokens beyond the real chunk must not affect the real rows or
+    subsequent decodes (the rust scheduler pads chunks to buckets)."""
+    cfg, params = small
+    rng = np.random.default_rng(4)
+    seq = jnp.asarray(rng.integers(0, cfg.vocab, 5), jnp.int32)
+    kv1 = empty_kv(cfg, 1)
+    l1, kv1 = prefill_step(params, seq, kv1, 0, 0, cfg)
+    # same prompt padded to 12 with zeros
+    padded = jnp.concatenate([seq, jnp.zeros((7,), jnp.int32)])
+    kv2 = empty_kv(cfg, 1)
+    l2, kv2 = prefill_step(params, padded, kv2, 0, 0, cfg)
+    np.testing.assert_allclose(l1[4], l2[4], atol=1e-4)
+    # next decode at pos 5 must agree (overwrites the garbage K/V at 5)
+    tok = jnp.asarray([3], jnp.int32)
+    pos = jnp.asarray([5], jnp.int32)
+    d1, _ = decode_step(params, tok, pos, kv1, cfg)
+    d2, _ = decode_step(params, tok, pos, kv2, cfg)
+    np.testing.assert_allclose(d1[0], d2[0], atol=1e-4)
+
+
+def test_loss_decreases_on_training_signal(small):
+    cfg, params = small
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (4, 17)), jnp.int32)
+    l0 = loss_fn(params, toks, cfg)
+    g = jax.grad(loss_fn)(params, toks, cfg)
+    params2 = jax.tree_util.tree_map(lambda p, gi: p - 0.5 * gi, params, g)
+    l1 = loss_fn(params2, toks, cfg)
+    assert float(l1) < float(l0)
+
+
+def test_param_flattening_roundtrip(small):
+    cfg, params = small
+    names = param_names(params)
+    flat = flatten_params(params)
+    assert len(names) == len(flat) == len(TOP_KEYS) + \
+        cfg.n_layers * len(DENSE_LAYER_KEYS)
+    back = unflatten_params(names, flat, cfg.n_layers)
+    for k in TOP_KEYS:
+        np.testing.assert_array_equal(params[k], back[k])
+    for lp, bp in zip(params["layers"], back["layers"]):
+        for k in DENSE_LAYER_KEYS:
+            np.testing.assert_array_equal(lp[k], bp[k])
+
+
+def test_tardis_mode_requires_tardis_params(small):
+    cfg, params = small
+    toks = jnp.zeros((1, 4), jnp.int32)
+    with pytest.raises(KeyError):
+        forward(params, toks, cfg.with_mode("tardis_exact"))
+
+
+def test_unknown_ffn_mode_raises(small):
+    cfg, params = small
+    toks = jnp.zeros((1, 4), jnp.int32)
+    with pytest.raises(ValueError):
+        forward(params, toks, cfg.with_mode("bogus"))
+
+
+def test_tardis_topk_close_to_exact(trained, calib_stats):
+    """The capacity-K kernel path must track the exact-fix semantics."""
+    from compile.tardis import pipeline
+    cfg, params = trained
+    fp, rep = pipeline.fold_model(params, cfg, target_t=0.9,
+                                  stats=calib_stats)
+    K = pipeline.fix_capacity_for(cfg, rep.mean_oor_rate, safety=3.0)
+    rng = np.random.default_rng(6)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 16)), jnp.int32)
+    exact = forward(fp, toks, cfg.with_mode("tardis_exact"))
+    topk = forward(fp, toks, cfg.with_mode("tardis", fix_capacity=K))
+    # same argmax on most positions (predictor noise allows a few flips)
+    agree = np.mean(np.argmax(exact[0], -1) == np.argmax(topk[0], -1))
+    assert agree >= 0.75, agree

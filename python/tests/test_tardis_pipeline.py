@@ -1,0 +1,266 @@
+"""Offline pipeline components: thresholds, KDE, ranges, folding, predictor,
+and the end-to-end fold_model contract."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import ModelConfig
+from compile.tardis import (calibration, folding, kde, pipeline, predictor,
+                            ranges, thresholds)
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# thresholds
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(2, 64),
+    target=st.floats(0.55, 0.98),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_thresholds_mean_and_monotonicity(n, target, seed):
+    rng = np.random.default_rng(seed)
+    errors = np.abs(rng.standard_normal(n)) * 10.0 ** rng.integers(-8, 0)
+    t = thresholds.error_aware_thresholds(errors, target)
+    assert abs(t.mean() - target) < 1e-6, "sum constraint violated"
+    assert (t >= 0.5 - 1e-9).all() and (t <= 0.995 + 1e-9).all()
+    # monotone: larger error -> no larger threshold
+    order = np.argsort(errors)
+    assert (np.diff(t[order]) <= 1e-9).all()
+
+
+def test_thresholds_uniform_when_equal_errors():
+    t = thresholds.error_aware_thresholds(np.ones(8), 0.85)
+    # rank-based: ties get spread, but the mean must hold exactly
+    assert abs(t.mean() - 0.85) < 1e-9
+
+
+def test_thresholds_single_component():
+    t = thresholds.error_aware_thresholds(np.array([3.0]), 0.9)
+    assert t.shape == (1,) and abs(t[0] - 0.9) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# KDE
+# ---------------------------------------------------------------------------
+
+def test_kde_finds_the_mode():
+    rng = np.random.default_rng(1)
+    # bimodal with the heavy mode at +2
+    z = np.concatenate([
+        rng.normal(2.0, 0.2, (800, 3)),
+        rng.normal(-1.0, 0.2, (200, 3)),
+    ])
+    c = kde.find_centroids(z)
+    assert np.all(np.abs(c - 2.0) < 0.4), c
+
+
+def test_kde_density_positive_and_normalized_ish():
+    rng = np.random.default_rng(2)
+    z = rng.normal(0, 1, (500, 4))
+    grid, dens = kde.kde_grid(z, grid_points=64)
+    assert (dens >= 0).all()
+    # trapezoid-ish integral over the grid span should be close to 1
+    dx = grid[1] - grid[0]              # per-neuron grid step [4]
+    mass = (dens[:-1] * dx[None, :]).sum(axis=0)
+    assert np.all((mass > 0.7) & (mass < 1.1)), mass
+
+
+# ---------------------------------------------------------------------------
+# ranges
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1),
+       t=st.floats(0.6, 0.95))
+def test_greedy_search_meets_coverage(seed, t):
+    rng = np.random.default_rng(seed)
+    z = rng.normal(0, 1, (400, 8))
+    spec = ranges.greedy_search(
+        z, "gelu", np.full(8, t), kde.find_centroids(z.astype(np.float32)),
+        np.ones(8))
+    assert (spec.coverage >= t - 0.01).all(), spec.coverage
+    assert (spec.lo < spec.hi).all()
+
+
+def test_linfit_exact_on_linear_data():
+    rng = np.random.default_rng(3)
+    z = rng.normal(0, 1, (200, 4))
+    y = 2.5 * z - 0.7
+    a, b, sse = ranges.linfit_masked(z, y, np.ones_like(z, bool))
+    assert np.allclose(a, 2.5) and np.allclose(b, -0.7)
+    assert np.all(sse < 1e-9)
+
+
+def test_linfit_handles_empty_mask():
+    z = np.zeros((10, 2))
+    y = np.zeros((10, 2))
+    a, b, sse = ranges.linfit_masked(z, y, np.zeros_like(z, bool))
+    assert np.all(np.isfinite(a)) and np.all(np.isfinite(b))
+    assert np.all(sse >= 0)
+
+
+def test_quantile_ranges_cover_requested_mass():
+    rng = np.random.default_rng(4)
+    z = rng.normal(0, 1, (1000, 6))
+    lo, hi = ranges.quantile_ranges(z, np.full(6, 0.8))
+    cov = ((z >= lo) & (z < hi)).mean(axis=0)
+    assert np.all(cov >= 0.79), cov
+
+
+def test_relu_ranges_are_cheap():
+    """ReLU's negative half-line is exactly linear: a hot range there must
+    fit with ~zero error (the OPT-6.7B observation in §7.2)."""
+    rng = np.random.default_rng(5)
+    z = -np.abs(rng.normal(0, 1, (300, 4)))  # all negative
+    spec = ranges.greedy_search(
+        z, "relu", np.full(4, 0.9), kde.find_centroids(z.astype(np.float32)),
+        np.ones(4))
+    assert np.all(spec.err < 1e-8), spec.err
+    assert np.allclose(spec.a, 0.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# folding
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_folding_is_exact_in_f64(seed):
+    """x C + B must equal the sequential linear path (Table 7's point)."""
+    rng = np.random.default_rng(seed)
+    d, h = 16, 64
+    w1 = rng.standard_normal((d, h)).astype(np.float32) * 0.2
+    b1 = rng.standard_normal(h).astype(np.float32) * 0.1
+    w2 = rng.standard_normal((h, d)).astype(np.float32) * 0.2
+    b2 = rng.standard_normal(d).astype(np.float32) * 0.1
+    a = rng.standard_normal(h).astype(np.float32) * 0.5
+    b = rng.standard_normal(h).astype(np.float32) * 0.1
+    x = rng.standard_normal((32, d)).astype(np.float32)
+    mse = folding.fold_mse(w1, b1, w2, b2, a, b, None, x, "float64")
+    assert mse < 1e-10, mse
+
+
+def test_folding_dtype_error_ordering():
+    """Table 6's shape: bf16 fold error >> f32/f64 fold error."""
+    rng = np.random.default_rng(7)
+    d, h = 32, 128
+    w1 = rng.standard_normal((d, h)).astype(np.float32) * 0.2
+    b1 = rng.standard_normal(h).astype(np.float32) * 0.1
+    w2 = rng.standard_normal((h, d)).astype(np.float32) * 0.2
+    b2 = np.zeros(d, np.float32)
+    a = rng.standard_normal(h).astype(np.float32) * 0.5
+    b = np.zeros(h, np.float32)
+    x = rng.standard_normal((64, d)).astype(np.float32)
+    mses = {dt: folding.fold_mse(w1, b1, w2, b2, a, b, None, x, dt)
+            for dt in ("bfloat16", "float16", "float32", "float64")}
+    assert mses["bfloat16"] > mses["float16"] > mses["float64"]
+    assert mses["float32"] <= mses["float16"]
+
+
+def test_theoretical_reduction_matches_paper():
+    # h = 4d -> 87.5% (paper §3.1)
+    assert abs(folding.theoretical_reduction(128, 512) - 0.875) < 1e-9
+
+
+def test_glu_blowup_is_large():
+    # §9: folding a gated FFN explodes parameters (254x for LLaMA-2-7B)
+    assert folding.glu_fold_blowup(4096, 11008) > 50
+
+
+def test_bf16_cast_roundtrip_error_bounded():
+    x = np.float32(1.0 + 2**-9)
+    y = folding._to_bf16(np.asarray([x]))[0]
+    assert abs(y - x) <= 2**-8  # bf16 has 8 total mantissa bits
+
+
+# ---------------------------------------------------------------------------
+# predictor
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(bits=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_quantize_roundtrip_error_scales_with_bits(bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((64, 32)).astype(np.float32)
+    q = predictor.quantize(w, bits=bits, group_size=16)
+    err = np.abs(q.dequantize() - w).max()
+    qmax = 2 ** (bits - 1) - 1
+    # symmetric quantization: error bounded by half a step per group
+    assert err <= np.abs(w).max() / qmax + 1e-6
+
+
+def test_more_bits_never_hurt():
+    rng = np.random.default_rng(11)
+    w = rng.standard_normal((64, 32)).astype(np.float32)
+    errs = [np.abs(predictor.quantize(w, bits=b, group_size=16)
+                   .dequantize() - w).mean() for b in (2, 4, 8)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_predictor_size_accounting():
+    q = predictor.quantize(np.ones((128, 512), np.float32), bits=2,
+                           group_size=32)
+    # 2-bit codes + f16 scales, in f32-equivalents
+    assert q.size_params_f32 == 128 * 512 * 2 / 32 + (128 // 32) * 512 / 2
+
+
+def test_predictor_rejects_bad_args():
+    w = np.ones((64, 32), np.float32)
+    with pytest.raises(ValueError):
+        predictor.quantize(w, bits=1)
+    with pytest.raises(ValueError):
+        predictor.quantize(w, bits=4, group_size=48)
+
+
+def test_predictor_recall_reasonable(trained, calib_stats):
+    """On real weights the 2-bit predictor must catch most true
+    out-of-range events (the paper's whole accuracy story rests on it)."""
+    cfg, params = trained
+    w1 = np.asarray(params["layers"][0]["w1"])
+    b1 = np.asarray(params["layers"][0]["b1"])
+    z = calib_stats.z[0]
+    lo, hi = ranges.quantile_ranges(z, np.full(z.shape[1], 0.85))
+    q = predictor.quantize(w1, bits=2, group_size=32)
+    stats = predictor.evaluate(q, calib_stats.ffn_in[0][:256], w1, b1,
+                               lo.astype(np.float32), hi.astype(np.float32))
+    assert stats.recall > 0.55, stats
+    assert stats.true_oor_rate < 0.35, stats
+
+
+# ---------------------------------------------------------------------------
+# end-to-end pipeline
+# ---------------------------------------------------------------------------
+
+def test_fold_model_contract(trained, calib_stats):
+    cfg, params = trained
+    fp, rep = pipeline.fold_model(params, cfg, target_t=0.85,
+                                  stats=calib_stats)
+    assert len(rep.layers) == cfg.n_layers
+    assert abs(rep.achieved_coverage - 0.85) < 0.05, rep.achieved_coverage
+    for lp in fp["layers"]:
+        assert lp["fold_c"].shape == (cfg.d_model, cfg.d_model)
+        assert lp["fold_b"].shape == (cfg.d_model,)
+        assert lp["pred_codes"].dtype == np.int8
+        assert np.all(np.asarray(lp["lo"]) < np.asarray(lp["hi"]))
+    assert 0.3 < rep.compression_ratio < 0.95
+    assert rep.fold_mse < 1e-6
+
+
+def test_threshold_for_ratio_inverts_accounting():
+    cfg = ModelConfig()
+    for ratio in (0.5, 0.7, 0.8):
+        t = pipeline.threshold_for_ratio(cfg, ratio, bits=2)
+        got = pipeline.compression_ratio(cfg, 1.0 - t, bits=2)
+        assert abs(got - ratio) < 0.01, (ratio, t, got)
+
+
+def test_fix_capacity_scales_with_oor():
+    cfg = ModelConfig()
+    k_low = pipeline.fix_capacity_for(cfg, 0.01)
+    k_high = pipeline.fix_capacity_for(cfg, 0.30)
+    assert k_low < k_high <= cfg.d_ff

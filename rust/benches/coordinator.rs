@@ -1,0 +1,85 @@
+//! Coordinator micro-benchmarks: the L3 contribution in isolation (mock
+//! model, zero compute) — scheduler iteration rate, batcher assembly,
+//! sampler throughput, slot allocator churn, queue admission, JSON
+//! protocol parse/render. These bound the coordinator overhead per decode
+//! step (it must stay far below the model step time; see EXPERIMENTS.md
+//! §Perf).
+//!
+//! Run: `cargo bench --bench coordinator`.
+
+use tardis::bench::{black_box, Bench};
+use tardis::coordinator::batcher::Batcher;
+use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::kv::SlotAllocator;
+use tardis::coordinator::model::MockModel;
+use tardis::coordinator::request::SamplingParams;
+use tardis::coordinator::sampler::sample;
+use tardis::server::protocol::{parse_request, render_error};
+use tardis::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("coordinator");
+
+    // Full engine loop on a zero-cost model: requests/s through the
+    // scheduler with continuous batching (1000 tokens per iteration call).
+    b.run("engine_loop/64req_x16tok", || {
+        let model = MockModel::new(8, 128, 256, vec![16, 64]);
+        let mut ie = InferenceEngine::new(model, EngineConfig {
+            queue_capacity: 128,
+            ..Default::default()
+        });
+        for i in 0..64 {
+            ie.submit(vec![1 + (i % 200) as i32; 9],
+                      SamplingParams { max_tokens: 16, ..Default::default() })
+                .unwrap();
+        }
+        let done = ie.run_to_completion().unwrap();
+        assert_eq!(done.len(), 64);
+    });
+
+    // Batcher input assembly (hot per decode step).
+    let mut batcher = Batcher::new(64, 4096);
+    for s in 0..48 {
+        batcher.occupy(s, s as u64, s * 3, 7);
+    }
+    b.run("batcher/decode_inputs_64slots", || {
+        let (t, p) = batcher.decode_inputs();
+        black_box((t, p));
+    });
+
+    // Sampler over a vocab-50k logits row (greedy and temperature).
+    let mut rng = Rng::new(7);
+    let logits: Vec<f32> = (0..50_000).map(|_| rng.normal() as f32).collect();
+    let greedy = SamplingParams::default();
+    b.run("sampler/greedy_50k", || {
+        black_box(sample(&logits, &greedy, &mut rng));
+    });
+    let stochastic = SamplingParams {
+        temperature: 0.8,
+        top_k: 40,
+        ..Default::default()
+    };
+    b.run("sampler/topk40_t0.8_50k", || {
+        black_box(sample(&logits, &stochastic, &mut rng));
+    });
+
+    // Slot allocator churn.
+    let mut alloc = SlotAllocator::new(64);
+    b.run("kv/alloc_release_x64", || {
+        let slots: Vec<_> = (0..64).map(|_| alloc.alloc().unwrap()).collect();
+        for s in slots {
+            alloc.release(s);
+        }
+    });
+
+    // Wire protocol.
+    let line = r#"{"op":"generate","prompt":"the quick brown fox","max_tokens":64,"temperature":0.7,"top_k":40,"variant":"tardis80"}"#;
+    b.run("protocol/parse_generate", || {
+        black_box(parse_request(line).unwrap());
+    });
+    b.run("protocol/render_error", || {
+        black_box(render_error("queue full (backpressure)"));
+    });
+
+    b.report();
+}

@@ -1,0 +1,150 @@
+//! Fig 13: FFN-level and end-to-end inference speedup vs compression
+//! ratio, on the vLLM-like (continuous batching) and HF-like (sequential)
+//! runtimes.
+//!
+//! Paper protocol (§7.4): generate starting from 8 prompt tokens, produce
+//! 192 output tokens; report FFN speedup and end-to-end speedup per
+//! compression ratio. We additionally print the analytic I/O-bound
+//! prediction for the paper's 4090 testbed next to our measured
+//! (compute-bound CPU) numbers so the shape comparison is explicit.
+//!
+//! Run: `cargo bench --bench fig13_speedup` (needs `make artifacts`).
+
+use tardis::bench::Bench;
+use tardis::config::Manifest;
+use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::model::PjrtModel;
+use tardis::coordinator::request::SamplingParams;
+use tardis::costmodel;
+use tardis::runtime::Engine;
+
+const PROMPT_TOKENS: usize = 8;
+const GEN_TOKENS: usize = 192;
+
+fn main() {
+    let path = Manifest::default_path();
+    if !path.exists() {
+        eprintln!("SKIP fig13: no artifacts at {} (run `make artifacts`)",
+                  path.display());
+        return;
+    }
+    let manifest = Manifest::load(&path).expect("manifest");
+    let engine = Engine::cpu().expect("cpu client");
+    let mut b = Bench::new("fig13_speedup");
+    b.opts.min_iters = 3;
+    b.opts.max_iters = 5;
+    b.opts.warmup_iters = 1;
+
+    let variants = ["dense", "tardis50", "tardis70", "tardis80"];
+    let prompt: Vec<i32> = (0..PROMPT_TOKENS).map(|i| 97 + i as i32).collect();
+    let params = SamplingParams { max_tokens: GEN_TOKENS, ..Default::default() };
+
+    // -- FFN-level microbenches: dense FFN vs full TARDIS FFN pipeline --
+    let mut ffn_rows = Vec::new();
+    for vname in &variants {
+        let execs: &[&str] = if *vname == "dense" {
+            &["ffn_dense"]
+        } else {
+            &["ffn_dense", "ffn_folded", "ffn_predictor", "ffn_aux", "ffn_fix"]
+        };
+        let v = engine.load_variant(&manifest, vname, Some(execs)).expect("load");
+        let d = manifest.model.d_model;
+        let x = engine
+            .upload_f32(&vec![0.1f32; manifest.batch * d], &[manifest.batch, d])
+            .expect("x");
+        if *vname == "dense" {
+            b.run("ffn/dense", || {
+                let out = v.exec("ffn_dense").unwrap().run(&[&x]).unwrap();
+                let _ = tardis::runtime::engine::buffer_to_f32(&out[0]).unwrap();
+            });
+            ffn_rows.push((vname.to_string(), 0.0,
+                           b.mean_ms("ffn/dense").unwrap()));
+        } else {
+            let name = format!("ffn/{vname}");
+            // the full online FFN path: folded mm + predictor + top-k + fix
+            b.run(&name, || {
+                let spec = v.exec("ffn_folded").unwrap().run(&[&x]).unwrap();
+                let score = v.exec("ffn_predictor").unwrap().run(&[&x]).unwrap();
+                let aux = v.exec("ffn_aux").unwrap().run(&[&score[0]]).unwrap();
+                let corr = v
+                    .exec("ffn_fix")
+                    .unwrap()
+                    .run(&[&x, &aux[0], &aux[1]])
+                    .unwrap();
+                let _ = tardis::runtime::engine::buffer_to_f32(&spec[0]).unwrap();
+                let _ = tardis::runtime::engine::buffer_to_f32(&corr[0]).unwrap();
+            });
+            ffn_rows.push((vname.to_string(), v.spec.compression_ratio,
+                           b.mean_ms(&name).unwrap()));
+        }
+    }
+
+    // -- end-to-end: vLLM-like (batched, 4 concurrent) + HF-like (seq) --
+    let mut e2e_rows = Vec::new();
+    for vname in &variants {
+        let v = engine
+            .load_variant(&manifest, vname,
+                          Some(&["decode", "prefill16", "prefill64"]))
+            .expect("load");
+        let ratio = v.spec.compression_ratio;
+        let model = PjrtModel::new(&engine, v, manifest.batch,
+                                   manifest.model.max_seq,
+                                   manifest.model.vocab,
+                                   manifest.prefill_buckets.clone())
+            .expect("model");
+        let mut ie = InferenceEngine::new(model, EngineConfig::default());
+
+        // HF-like: one sequential request.
+        let name_hf = format!("e2e_hf/{vname}");
+        b.run(&name_hf, || {
+            ie.model.reset_kv().unwrap();
+            let _ = ie.generate_sequential(prompt.clone(), params).unwrap();
+        });
+
+        // vLLM-like: 4 concurrent requests (continuous batching amortizes
+        // each decode step across requests).
+        let name_vllm = format!("e2e_vllm/{vname}");
+        b.run(&name_vllm, || {
+            ie.model.reset_kv().unwrap();
+            for r in 0..4 {
+                let mut p = prompt.clone();
+                p[0] += r;
+                ie.submit(p, params).unwrap();
+            }
+            let done = ie.run_to_completion().unwrap();
+            assert_eq!(done.len(), 4);
+        });
+        e2e_rows.push((vname.to_string(), ratio,
+                       b.mean_ms(&name_hf).unwrap(),
+                       b.mean_ms(&name_vllm).unwrap() / 4.0));
+    }
+
+    // -- the figure --
+    println!();
+    println!("Fig 13 — speedup vs compression ratio ({PROMPT_TOKENS} prompt + {GEN_TOKENS} generated tokens)");
+    println!("{:10} {:>7} {:>10} {:>10} {:>10} {:>12} {:>12}",
+             "variant", "ratio", "ffn x", "hf x", "vllm x",
+             "4090 ffn x", "4090 e2e x");
+    let ffn_base = ffn_rows[0].2;
+    let hf_base = e2e_rows[0].2;
+    let vllm_base = e2e_rows[0].3;
+    for i in 0..ffn_rows.len() {
+        let (name, ratio, ffn_ms) = &ffn_rows[i];
+        let (_, _, hf_ms, vllm_ms) = &e2e_rows[i];
+        let (model_ffn, model_e2e) = if *ratio > 0.0 {
+            costmodel::tardis_speedup(&costmodel::FALCON_7B,
+                                      &costmodel::RTX_4090, 1, 128, *ratio,
+                                      0.05)
+        } else {
+            (1.0, 1.0)
+        };
+        println!("{:10} {:6.1}% {:9.2}x {:9.2}x {:9.2}x {:11.2}x {:11.2}x",
+                 name, ratio * 100.0, ffn_base / ffn_ms, hf_base / hf_ms,
+                 vllm_base / vllm_ms, model_ffn, model_e2e);
+    }
+    println!("(paper @80%: FFN 1.86x, HF 1.39x, vLLM 1.59x on an RTX 4090 —");
+    println!(" our testbed is a single-core CPU where FFN weight I/O is not");
+    println!(" the bottleneck; the '4090' columns give the analytic I/O-bound");
+    println!(" prediction from the same cost model that reproduces Fig 1b.)");
+    b.report();
+}

@@ -1,0 +1,85 @@
+//! Fig 14: performance breakdown of the TARDIS FFN online phase.
+//!
+//! Paper (§7.5, threshold 0.85): result fixing dominates, predictor ~12%,
+//! folded matmul ~22%, the rest is auxiliary ops (mask generation / index
+//! conversion). We time the four micro-executables separately and print
+//! the same share decomposition for each tardis variant.
+//!
+//! Run: `cargo bench --bench fig14_breakdown` (needs `make artifacts`).
+
+use tardis::bench::Bench;
+use tardis::config::Manifest;
+use tardis::runtime::engine::buffer_to_f32;
+use tardis::runtime::Engine;
+
+fn main() {
+    let path = Manifest::default_path();
+    if !path.exists() {
+        eprintln!("SKIP fig14: no artifacts at {} (run `make artifacts`)",
+                  path.display());
+        return;
+    }
+    let manifest = Manifest::load(&path).expect("manifest");
+    let engine = Engine::cpu().expect("cpu client");
+    let mut b = Bench::new("fig14_breakdown");
+
+    for vname in ["tardis50", "tardis70", "tardis80"] {
+        let Ok(v) = engine.load_variant(
+            &manifest, vname,
+            Some(&["ffn_folded", "ffn_predictor", "ffn_aux", "ffn_fix"]))
+        else {
+            eprintln!("SKIP {vname}: not in manifest");
+            continue;
+        };
+        let d = manifest.model.d_model;
+        let x = engine
+            .upload_f32(&vec![0.1f32; manifest.batch * d], &[manifest.batch, d])
+            .expect("x");
+
+        // Stage inputs once so each stage is timed in isolation.
+        let score = v.exec("ffn_predictor").unwrap().run(&[&x]).unwrap();
+        let aux = v.exec("ffn_aux").unwrap().run(&[&score[0]]).unwrap();
+
+        let t_folded = b
+            .run(&format!("{vname}/folded_matmul"), || {
+                let out = v.exec("ffn_folded").unwrap().run(&[&x]).unwrap();
+                let _ = buffer_to_f32(&out[0]).unwrap();
+            })
+            .summary
+            .mean;
+        let t_pred = b
+            .run(&format!("{vname}/predictor"), || {
+                let out = v.exec("ffn_predictor").unwrap().run(&[&x]).unwrap();
+                let _ = buffer_to_f32(&out[0]).unwrap();
+            })
+            .summary
+            .mean;
+        let t_aux = b
+            .run(&format!("{vname}/aux_topk"), || {
+                let out = v.exec("ffn_aux").unwrap().run(&[&score[0]]).unwrap();
+                let _ = tardis::runtime::engine::buffer_to_i32(&out[0]).unwrap();
+            })
+            .summary
+            .mean;
+        let t_fix = b
+            .run(&format!("{vname}/result_fixing"), || {
+                let out = v
+                    .exec("ffn_fix")
+                    .unwrap()
+                    .run(&[&x, &aux[0], &aux[1]])
+                    .unwrap();
+                let _ = buffer_to_f32(&out[0]).unwrap();
+            })
+            .summary
+            .mean;
+
+        let total = t_folded + t_pred + t_aux + t_fix;
+        println!();
+        println!("Fig 14 — {vname} (fix capacity K = {}):", v.spec.fix_capacity);
+        println!("  folded matmul  {:5.1}%   (paper ~22%)", 100.0 * t_folded / total);
+        println!("  predictor      {:5.1}%   (paper ~12%)", 100.0 * t_pred / total);
+        println!("  result fixing  {:5.1}%   (paper: dominant)", 100.0 * t_fix / total);
+        println!("  auxiliary ops  {:5.1}%", 100.0 * t_aux / total);
+    }
+    b.report();
+}

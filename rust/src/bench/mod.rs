@@ -1,0 +1,154 @@
+//! Criterion-lite: the micro-benchmark harness behind `cargo bench`
+//! (criterion itself is not in the offline vendor set).
+//!
+//! Usage in a `harness = false` bench target:
+//! ```no_run
+//! use tardis::bench::Bench;
+//! let mut b = Bench::new("fig13_speedup");
+//! b.run("decode/dense", || { /* one iteration */ });
+//! b.report();
+//! ```
+//! Each case is warmed up, then timed for a minimum number of iterations
+//! *and* a minimum wall-clock window; mean/p50/p99 are reported and the
+//! raw rows are appended to `target/bench_results.csv` for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{Samples, Summary};
+
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 2000,
+            min_time: Duration::from_millis(300),
+        }
+    }
+}
+
+pub struct CaseResult {
+    pub name: String,
+    pub summary: Summary,
+    /// iterations per second from the mean
+    pub rate: f64,
+}
+
+pub struct Bench {
+    pub suite: String,
+    pub opts: BenchOpts,
+    pub results: Vec<CaseResult>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        println!("== bench suite: {suite} ==");
+        Bench { suite: suite.to_string(), opts: BenchOpts::default(), results: Vec::new() }
+    }
+
+    pub fn with_opts(suite: &str, opts: BenchOpts) -> Self {
+        println!("== bench suite: {suite} ==");
+        Bench { suite: suite.to_string(), opts, results: Vec::new() }
+    }
+
+    /// Time one case; `f` runs a single iteration.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &CaseResult {
+        for _ in 0..self.opts.warmup_iters {
+            f();
+        }
+        let mut samples = Samples::new();
+        let started = Instant::now();
+        let mut iters = 0usize;
+        while (iters < self.opts.min_iters
+            || started.elapsed() < self.opts.min_time)
+            && iters < self.opts.max_iters
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3); // ms
+            iters += 1;
+        }
+        let summary = samples.summary();
+        let rate = if summary.mean > 0.0 { 1000.0 / summary.mean } else { f64::NAN };
+        println!(
+            "{:40} mean {:9.4} ms  p50 {:9.4}  p99 {:9.4}  ({} iters, {:.1}/s)",
+            name, summary.mean, summary.p50, summary.p99, summary.n, rate
+        );
+        self.results.push(CaseResult { name: name.to_string(), summary, rate });
+        self.results.last().unwrap()
+    }
+
+    /// Mean time in ms of the most recent case with this name.
+    pub fn mean_ms(&self, name: &str) -> Option<f64> {
+        self.results.iter().rev().find(|r| r.name == name).map(|r| r.summary.mean)
+    }
+
+    /// Append rows to target/bench_results.csv and print a footer.
+    pub fn report(&self) {
+        let path = std::path::Path::new("target").join("bench_results.csv");
+        let mut rows = String::new();
+        let header_needed = !path.exists();
+        if header_needed {
+            rows.push_str("suite,case,n,mean_ms,p50_ms,p99_ms,rate_per_s\n");
+        }
+        for r in &self.results {
+            rows.push_str(&format!(
+                "{},{},{},{:.6},{:.6},{:.6},{:.3}\n",
+                self.suite, r.name, r.summary.n, r.summary.mean,
+                r.summary.p50, r.summary.p99, r.rate
+            ));
+        }
+        if let Some(dir) = path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        use std::io::Write;
+        if let Ok(mut f) =
+            std::fs::OpenOptions::new().create(true).append(true).open(&path)
+        {
+            let _ = f.write_all(rows.as_bytes());
+        }
+        println!("== {}: {} cases, rows appended to {} ==",
+                 self.suite, self.results.len(), path.display());
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std-only black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_case() {
+        let mut b = Bench::with_opts(
+            "selftest",
+            BenchOpts {
+                warmup_iters: 1,
+                min_iters: 5,
+                max_iters: 10,
+                min_time: Duration::from_millis(1),
+            },
+        );
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(r.summary.n >= 5);
+        assert!(r.summary.mean >= 0.0);
+        assert_eq!(b.mean_ms("spin").is_some(), true);
+    }
+}

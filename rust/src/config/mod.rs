@@ -1,0 +1,294 @@
+//! Manifest + configuration loading.
+//!
+//! `artifacts/manifest.json` is the contract between the python compile
+//! path and the rust runtime: the model shape, the KV-cache layout, and
+//! for each compression variant the HLO executables, their input
+//! signatures, and the weight table into `<variant>.weights.bin`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub act: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "i8" => DType::I8,
+            other => bail!("unknown dtype {other:?} in manifest"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecSpec {
+    pub file: String,
+    pub weight_params: Vec<String>,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    pub ffn_mode: String,
+    pub fix_capacity: usize,
+    pub compression_ratio: f64,
+    pub weights_file: String,
+    pub params: Vec<ParamEntry>,
+    pub executables: BTreeMap<String, ExecSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub batch: usize,
+    pub prefill_buckets: Vec<usize>,
+    pub kv_shape: Vec<usize>,
+    pub variants: Vec<VariantSpec>,
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest missing key {key:?}"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    req(j, key)?.as_usize().ok_or_else(|| anyhow!("{key:?} not a usize"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(req(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("{key:?} not a string"))?
+        .to_string())
+}
+
+fn str_list(j: &Json, key: &str) -> Result<Vec<String>> {
+    Ok(req(j, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{key:?} not an array"))?
+        .iter()
+        .filter_map(|v| v.as_str().map(str::to_string))
+        .collect())
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let dir = path
+            .parent()
+            .ok_or_else(|| anyhow!("manifest has no parent dir"))?
+            .to_path_buf();
+
+        let m = req(&j, "model")?;
+        let model = ModelInfo {
+            name: req_str(m, "name")?,
+            vocab: req_usize(m, "vocab")?,
+            d_model: req_usize(m, "d_model")?,
+            n_layers: req_usize(m, "n_layers")?,
+            n_heads: req_usize(m, "n_heads")?,
+            d_ff: req_usize(m, "d_ff")?,
+            max_seq: req_usize(m, "max_seq")?,
+            act: req_str(m, "act")?,
+        };
+
+        let kv_shape = req(&j, "kv_shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("kv_shape not an array"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect::<Vec<_>>();
+        let prefill_buckets = req(&j, "prefill_buckets")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("prefill_buckets not an array"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect::<Vec<_>>();
+
+        let mut variants = Vec::new();
+        for v in req(&j, "variants")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("variants not an array"))?
+        {
+            let mut params = Vec::new();
+            for p in req(v, "params")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("params not an array"))?
+            {
+                params.push(ParamEntry {
+                    name: req_str(p, "name")?,
+                    dtype: DType::parse(&req_str(p, "dtype")?)?,
+                    shape: req(p, "shape")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("shape not an array"))?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                    offset: req_usize(p, "offset")?,
+                    nbytes: req_usize(p, "nbytes")?,
+                });
+            }
+            let mut executables = BTreeMap::new();
+            for (tag, e) in req(v, "executables")?
+                .as_obj()
+                .ok_or_else(|| anyhow!("executables not an object"))?
+            {
+                executables.insert(
+                    tag.clone(),
+                    ExecSpec {
+                        file: req_str(e, "file")?,
+                        weight_params: str_list(e, "weight_params")?,
+                        inputs: str_list(e, "inputs")?,
+                        outputs: str_list(e, "outputs")?,
+                    },
+                );
+            }
+            variants.push(VariantSpec {
+                name: req_str(v, "name")?,
+                ffn_mode: req_str(v, "ffn_mode")?,
+                fix_capacity: req_usize(v, "fix_capacity")?,
+                compression_ratio: req(v, "compression_ratio")?
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("compression_ratio not a number"))?,
+                weights_file: req_str(v, "weights_file")?,
+                params,
+                executables,
+            });
+        }
+
+        Ok(Manifest {
+            dir,
+            model,
+            batch: req_usize(&j, "batch")?,
+            prefill_buckets,
+            kv_shape,
+            variants,
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "variant {name:?} not in manifest (have: {})",
+                    self.variants
+                        .iter()
+                        .map(|v| v.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    pub fn variant_names(&self) -> Vec<&str> {
+        self.variants.iter().map(|v| v.name.as_str()).collect()
+    }
+
+    /// Default artifacts location: `$TARDIS_ARTIFACTS` or `artifacts/`.
+    pub fn default_path() -> PathBuf {
+        std::env::var("TARDIS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+            .join("manifest.json")
+    }
+}
+
+impl VariantSpec {
+    pub fn param(&self, name: &str) -> Result<&ParamEntry> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .ok_or_else(|| anyhow!("param {name:?} not in weight table"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_roundtrip() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("i8").unwrap().size(), 1);
+        assert!(DType::parse("f16").is_err());
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let tmp = std::env::temp_dir().join("tardis_manifest_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let path = tmp.join("manifest.json");
+        std::fs::write(
+            &path,
+            r#"{
+              "model": {"name":"m","vocab":256,"d_model":8,"n_layers":1,
+                        "n_heads":2,"d_ff":32,"max_seq":16,"act":"gelu"},
+              "batch": 2,
+              "prefill_buckets": [4],
+              "kv_shape": [1,2,2,2,16,4],
+              "variants": [
+                {"name":"dense","ffn_mode":"dense","fix_capacity":0,
+                 "compression_ratio":0.0,"weights_file":"dense.weights.bin",
+                 "params":[{"name":"top.embed","dtype":"f32","shape":[256,8],
+                            "offset":0,"nbytes":8192}],
+                 "executables":{"decode":{"file":"d.hlo.txt",
+                   "weight_params":["top.embed"],
+                   "inputs":["tokens:i32[2]"],"outputs":["logits","kv"]}}}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.model.d_model, 8);
+        assert_eq!(m.batch, 2);
+        assert_eq!(m.variant_names(), vec!["dense"]);
+        let v = m.variant("dense").unwrap();
+        assert_eq!(v.param("top.embed").unwrap().nbytes, 8192);
+        assert!(m.variant("nope").is_err());
+        assert!(v.param("nope").is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Continuous batching: tracks which request occupies which KV slot and
+//! assembles the per-iteration decode inputs (one token per active slot,
+//! sentinel (0, max_seq) for idle slots, which the executable masks out).
+
+use super::request::RequestId;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlotState {
+    pub req: RequestId,
+    /// Next KV position to write (== tokens already in the cache).
+    pub next_pos: usize,
+    /// The token to feed at the next decode step.
+    pub pending_token: i32,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    slots: Vec<Option<SlotState>>,
+    max_seq: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, max_seq: usize) -> Self {
+        Batcher { slots: vec![None; batch], max_seq }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.active() == 0
+    }
+
+    pub fn occupy(&mut self, slot: usize, req: RequestId, next_pos: usize,
+                  pending_token: i32) {
+        assert!(self.slots[slot].is_none(), "slot {slot} already occupied");
+        self.slots[slot] = Some(SlotState { req, next_pos, pending_token });
+    }
+
+    pub fn vacate(&mut self, slot: usize) -> Option<SlotState> {
+        self.slots[slot].take()
+    }
+
+    pub fn slot_of(&self, req: RequestId) -> Option<usize> {
+        self.slots
+            .iter()
+            .position(|s| s.map(|st| st.req) == Some(req))
+    }
+
+    pub fn state(&self, slot: usize) -> Option<&SlotState> {
+        self.slots[slot].as_ref()
+    }
+
+    /// After sampling, feed the next token and advance the position.
+    pub fn advance(&mut self, slot: usize, token: i32) {
+        let st = self.slots[slot].as_mut().expect("advance on empty slot");
+        st.next_pos += 1;
+        st.pending_token = token;
+    }
+
+    /// Build the decode-step inputs. Inactive slots get the sentinel
+    /// (token 0, pos = max_seq) the executable drops and masks.
+    pub fn decode_inputs(&self) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = Vec::with_capacity(self.slots.len());
+        let mut pos = Vec::with_capacity(self.slots.len());
+        for s in &self.slots {
+            match s {
+                Some(st) => {
+                    tokens.push(st.pending_token);
+                    pos.push(st.next_pos as i32);
+                }
+                None => {
+                    tokens.push(0);
+                    pos.push(self.max_seq as i32);
+                }
+            }
+        }
+        (tokens, pos)
+    }
+
+    /// Slots that took part in a decode step (active, in-range).
+    pub fn active_slots(&self) -> Vec<usize> {
+        (0..self.slots.len())
+            .filter(|&i| {
+                self.slots[i]
+                    .map(|st| st.next_pos < self.max_seq)
+                    .unwrap_or(false)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::property;
+
+    #[test]
+    fn occupy_advance_vacate() {
+        let mut b = Batcher::new(4, 32);
+        assert!(b.is_idle());
+        b.occupy(2, 77, 5, 9);
+        assert_eq!(b.active(), 1);
+        assert_eq!(b.slot_of(77), Some(2));
+        let (toks, pos) = b.decode_inputs();
+        assert_eq!(toks, vec![0, 0, 9, 0]);
+        assert_eq!(pos, vec![32, 32, 5, 32]);
+        b.advance(2, 11);
+        let (toks, pos) = b.decode_inputs();
+        assert_eq!(toks[2], 11);
+        assert_eq!(pos[2], 6);
+        let st = b.vacate(2).unwrap();
+        assert_eq!(st.req, 77);
+        assert!(b.is_idle());
+    }
+
+    #[test]
+    #[should_panic(expected = "already occupied")]
+    fn double_occupy_panics() {
+        let mut b = Batcher::new(2, 8);
+        b.occupy(0, 1, 0, 0);
+        b.occupy(0, 2, 0, 0);
+    }
+
+    #[test]
+    fn prop_inputs_consistent() {
+        property("decode inputs match slot states", 150, |rng| {
+            let n = 1 + rng.usize_below(8);
+            let max_seq = 16 + rng.usize_below(64);
+            let mut b = Batcher::new(n, max_seq);
+            let mut occupied = vec![false; n];
+            for step in 0..50 {
+                let slot = rng.usize_below(n);
+                if occupied[slot] {
+                    if rng.bool(0.3) {
+                        b.vacate(slot);
+                        occupied[slot] = false;
+                    } else {
+                        b.advance(slot, rng.below(255) as i32);
+                    }
+                } else if rng.bool(0.6) {
+                    b.occupy(slot, step as u64, rng.usize_below(max_seq),
+                             rng.below(255) as i32);
+                    occupied[slot] = true;
+                }
+                let (toks, pos) = b.decode_inputs();
+                prop_assert!(toks.len() == n && pos.len() == n);
+                for i in 0..n {
+                    if occupied[i] {
+                        let st = b.state(i).unwrap();
+                        prop_assert!(pos[i] == st.next_pos as i32);
+                        prop_assert!(toks[i] == st.pending_token);
+                    } else {
+                        prop_assert!(pos[i] == max_seq as i32,
+                                     "idle slot {i} pos {}", pos[i]);
+                    }
+                }
+                prop_assert!(b.active()
+                             == occupied.iter().filter(|&&o| o).count());
+            }
+            Ok(())
+        });
+    }
+}

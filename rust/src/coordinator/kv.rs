@@ -1,0 +1,118 @@
+//! KV slot allocator.
+//!
+//! The decode executable runs at a fixed batch `B`; the KV cache is one
+//! device buffer `[L, 2, B, H, S, Dh]`. Each in-flight request owns one
+//! batch slot from prefill start to finish. (The paged-attention
+//! generalization would subdivide S; with a fixed S per slot this is the
+//! vLLM "one sequence = one block span" degenerate case, which is what
+//! our exported executables support.)
+
+#[derive(Debug)]
+pub struct SlotAllocator {
+    n: usize,
+    free: Vec<usize>,
+    in_use: Vec<bool>,
+}
+
+impl SlotAllocator {
+    pub fn new(n: usize) -> Self {
+        SlotAllocator {
+            n,
+            free: (0..n).rev().collect(),
+            in_use: vec![false; n],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.n
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used(&self) -> usize {
+        self.n - self.free.len()
+    }
+
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        debug_assert!(!self.in_use[slot], "allocator invariant violated");
+        self.in_use[slot] = true;
+        Some(slot)
+    }
+
+    pub fn release(&mut self, slot: usize) {
+        assert!(slot < self.n, "slot {slot} out of range");
+        assert!(self.in_use[slot], "double free of slot {slot}");
+        self.in_use[slot] = false;
+        self.free.push(slot);
+    }
+
+    pub fn is_in_use(&self, slot: usize) -> bool {
+        self.in_use[slot]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::property;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut a = SlotAllocator::new(3);
+        assert_eq!(a.available(), 3);
+        let s0 = a.alloc().unwrap();
+        let s1 = a.alloc().unwrap();
+        let s2 = a.alloc().unwrap();
+        assert_ne!(s0, s1);
+        assert_ne!(s1, s2);
+        assert_eq!(a.alloc(), None);
+        a.release(s1);
+        assert_eq!(a.alloc(), Some(s1));
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = SlotAllocator::new(2);
+        let s = a.alloc().unwrap();
+        a.release(s);
+        a.release(s);
+    }
+
+    /// Property: under random alloc/release traffic the allocator never
+    /// hands out a slot that is already in use, and available+used == n.
+    #[test]
+    fn prop_no_double_allocation() {
+        property("slot allocator soundness", 200, |rng: &mut Rng| {
+            let n = 1 + rng.usize_below(8);
+            let mut a = SlotAllocator::new(n);
+            let mut held: Vec<usize> = Vec::new();
+            for _ in 0..100 {
+                if rng.bool(0.5) {
+                    if let Some(s) = a.alloc() {
+                        prop_assert!(
+                            !held.contains(&s),
+                            "slot {s} double-allocated (held: {held:?})"
+                        );
+                        held.push(s);
+                    } else {
+                        prop_assert!(held.len() == n,
+                                     "alloc failed with {} held of {n}", held.len());
+                    }
+                } else if !held.is_empty() {
+                    let i = rng.usize_below(held.len());
+                    let s = held.swap_remove(i);
+                    a.release(s);
+                }
+                prop_assert!(a.available() + a.used() == n);
+                prop_assert!(a.used() == held.len());
+            }
+            Ok(())
+        });
+    }
+}

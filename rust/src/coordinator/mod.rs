@@ -1,0 +1,27 @@
+//! L3: the serving coordinator (the paper integrates TARDIS into vLLM and
+//! HuggingFace; this is our from-scratch equivalent).
+//!
+//! Components:
+//! * [`model`]       — the step-model abstraction (PJRT-backed or mock)
+//! * [`request`]     — request lifecycle + sampling params
+//! * [`queue`]       — bounded admission queue with backpressure
+//! * [`kv`]          — KV slot allocator over the fixed decode batch
+//! * [`batcher`]     — continuous batching of decode steps
+//! * [`scheduler`]   — iteration-level prefill/decode interleaving
+//! * [`sampler`]     — greedy / temperature / top-k token sampling
+//! * [`engine_loop`] — ties the above into a serving engine
+//! * [`router`]      — routes requests across variants/replicas
+
+pub mod batcher;
+pub mod engine_loop;
+pub mod kv;
+pub mod model;
+pub mod queue;
+pub mod request;
+pub mod router;
+pub mod sampler;
+pub mod scheduler;
+
+pub use engine_loop::{EngineConfig, EngineStats, InferenceEngine};
+pub use model::{MockModel, PjrtModel, StepModel};
+pub use request::{FinishReason, Request, RequestId, SamplingParams};

@@ -1,0 +1,265 @@
+//! The step-model abstraction the coordinator schedules against.
+//!
+//! `PjrtModel` wraps a loaded [`crate::runtime::Variant`] and owns the
+//! device-resident KV cache, threading it through prefill/decode calls.
+//! `MockModel` is a deterministic pure-rust stand-in so every coordinator
+//! test and bench runs without artifacts.
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, Variant};
+
+pub trait StepModel {
+    /// Fixed decode batch (number of KV slots).
+    fn batch(&self) -> usize;
+    fn max_seq(&self) -> usize;
+    fn vocab(&self) -> usize;
+    /// Ascending prefill chunk sizes the model was exported with.
+    fn prefill_buckets(&self) -> &[usize];
+
+    /// Prefill `tokens` (padded to `bucket`; the first `real_len` are
+    /// real) into `slot` starting at absolute position `pos0`. Returns
+    /// the logits of the last *real* token, `[vocab]`.
+    fn prefill(&mut self, bucket: usize, tokens: &[i32], real_len: usize,
+               slot: usize, pos0: usize) -> Result<Vec<f32>>;
+
+    /// One decode step over all slots. `tokens[b]`/`pos[b]` for inactive
+    /// slots carry (0, max_seq) sentinels. Returns logits `[batch*vocab]`.
+    fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>>;
+
+    /// Smallest bucket that fits `n` tokens (or the largest bucket).
+    fn bucket_for(&self, n: usize) -> usize {
+        let buckets = self.prefill_buckets();
+        for &b in buckets {
+            if n <= b {
+                return b;
+            }
+        }
+        *buckets.last().expect("no prefill buckets")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-backed model.
+// ---------------------------------------------------------------------------
+
+pub struct PjrtModel<'e> {
+    engine: &'e Engine,
+    variant: Variant,
+    kv: xla::PjRtBuffer,
+    batch: usize,
+    max_seq: usize,
+    vocab: usize,
+    buckets: Vec<usize>,
+    pub decode_steps: u64,
+    pub prefill_chunks: u64,
+}
+
+impl<'e> PjrtModel<'e> {
+    pub fn new(engine: &'e Engine, variant: Variant, batch: usize,
+               max_seq: usize, vocab: usize, buckets: Vec<usize>)
+               -> Result<Self> {
+        let kv = variant.fresh_kv(engine)?;
+        Ok(PjrtModel {
+            engine,
+            variant,
+            kv,
+            batch,
+            max_seq,
+            vocab,
+            buckets,
+            decode_steps: 0,
+            prefill_chunks: 0,
+        })
+    }
+
+    pub fn variant_name(&self) -> &str {
+        &self.variant.spec.name
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        self.variant.spec.compression_ratio
+    }
+
+    /// Reset the KV cache (between benchmark phases).
+    pub fn reset_kv(&mut self) -> Result<()> {
+        self.kv = self.variant.fresh_kv(self.engine)?;
+        Ok(())
+    }
+}
+
+impl<'e> StepModel for PjrtModel<'e> {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn prefill(&mut self, bucket: usize, tokens: &[i32], real_len: usize,
+               slot: usize, pos0: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(real_len >= 1 && real_len <= bucket,
+                        "real_len {real_len} not in 1..={bucket}");
+        let (logits, kv) = self.variant.prefill(
+            self.engine, bucket, tokens, &self.kv, slot as i32, pos0 as i32)?;
+        self.kv = kv;
+        self.prefill_chunks += 1;
+        // The executable returns logits for every chunk row; pad-query
+        // rows are garbage — keep only the last real token's row.
+        let row = real_len - 1;
+        Ok(logits[row * self.vocab..(row + 1) * self.vocab].to_vec())
+    }
+
+    fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let (logits, kv) =
+            self.variant.decode(self.engine, tokens, pos, &self.kv)?;
+        self.kv = kv;
+        self.decode_steps += 1;
+        Ok(logits)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic mock model (tests + coordinator benches).
+// ---------------------------------------------------------------------------
+
+/// Produces logits that deterministically depend on (slot, last token,
+/// position): `argmax = (token + position) % vocab`. This makes generated
+/// sequences predictable so scheduler tests can assert exact outputs, and
+/// lets tests detect cross-slot contamination (a wrong slot's state would
+/// change the argmax).
+pub struct MockModel {
+    batch: usize,
+    max_seq: usize,
+    vocab: usize,
+    buckets: Vec<usize>,
+    /// last (token, pos) per slot — emulates per-slot KV state.
+    state: Vec<Option<(i32, usize)>>,
+    pub decode_steps: u64,
+    pub prefill_chunks: u64,
+    /// artificial per-call cost knob for scheduler benches
+    pub spin_per_call: std::time::Duration,
+}
+
+impl MockModel {
+    pub fn new(batch: usize, max_seq: usize, vocab: usize,
+               buckets: Vec<usize>) -> Self {
+        MockModel {
+            batch,
+            max_seq,
+            vocab,
+            buckets,
+            state: vec![None; batch],
+            decode_steps: 0,
+            prefill_chunks: 0,
+            spin_per_call: std::time::Duration::ZERO,
+        }
+    }
+
+    fn logits_for(&self, token: i32, pos: usize) -> Vec<f32> {
+        let mut l = vec![0f32; self.vocab];
+        let target = ((token as usize) + pos) % self.vocab;
+        l[target] = 10.0;
+        l
+    }
+
+    /// The token the mock will deterministically emit for (token, pos).
+    pub fn expected_next(&self, token: i32, pos: usize) -> i32 {
+        (((token as usize) + pos) % self.vocab) as i32
+    }
+}
+
+impl StepModel for MockModel {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn prefill(&mut self, bucket: usize, tokens: &[i32], real_len: usize,
+               slot: usize, pos0: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == bucket, "tokens not padded to bucket");
+        anyhow::ensure!(slot < self.batch, "slot out of range");
+        anyhow::ensure!(real_len >= 1 && real_len <= bucket);
+        if !self.spin_per_call.is_zero() {
+            std::thread::sleep(self.spin_per_call);
+        }
+        let last_tok = tokens[real_len - 1];
+        let last_pos = pos0 + real_len - 1;
+        self.state[slot] = Some((last_tok, last_pos));
+        self.prefill_chunks += 1;
+        Ok(self.logits_for(last_tok, last_pos))
+    }
+
+    fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == self.batch && pos.len() == self.batch);
+        if !self.spin_per_call.is_zero() {
+            std::thread::sleep(self.spin_per_call);
+        }
+        let mut out = Vec::with_capacity(self.batch * self.vocab);
+        for b in 0..self.batch {
+            if (pos[b] as usize) < self.max_seq {
+                self.state[b] = Some((tokens[b], pos[b] as usize));
+                out.extend(self.logits_for(tokens[b], pos[b] as usize));
+            } else {
+                out.extend(std::iter::repeat(0f32).take(self.vocab));
+            }
+        }
+        self.decode_steps += 1;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic() {
+        let mut m = MockModel::new(2, 32, 16, vec![4, 8]);
+        let l1 = m.prefill(4, &[1, 2, 3, 0], 3, 0, 0).unwrap();
+        let l2 = m.prefill(4, &[1, 2, 3, 0], 3, 1, 0).unwrap();
+        assert_eq!(l1, l2);
+        // last real token 3 at pos 2 -> argmax (3+2)%16 = 5
+        let am = crate::coordinator::sampler::argmax(&l1);
+        assert_eq!(am, 5);
+        assert_eq!(m.expected_next(3, 2), 5);
+    }
+
+    #[test]
+    fn bucket_for_picks_smallest_fit() {
+        let m = MockModel::new(2, 32, 16, vec![4, 8, 16]);
+        assert_eq!(m.bucket_for(1), 4);
+        assert_eq!(m.bucket_for(4), 4);
+        assert_eq!(m.bucket_for(5), 8);
+        assert_eq!(m.bucket_for(100), 16); // clamped to largest
+    }
+
+    #[test]
+    fn decode_masks_inactive_slots() {
+        let mut m = MockModel::new(2, 8, 4, vec![4]);
+        let logits = m.decode(&[1, 0], &[2, 8]).unwrap(); // slot 1 inactive
+        assert_eq!(logits.len(), 8);
+        assert!(logits[4..].iter().all(|&v| v == 0.0));
+        assert!(logits[..4].iter().any(|&v| v > 0.0));
+    }
+}

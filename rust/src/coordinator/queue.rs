@@ -1,0 +1,123 @@
+//! Bounded admission queue with backpressure.
+//!
+//! Requests wait here until the scheduler can claim a KV slot for them.
+//! `push` refuses above capacity — the server maps that to an explicit
+//! "try later" response instead of unbounded memory growth.
+
+use std::collections::VecDeque;
+
+use super::request::Request;
+
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    cap: usize,
+    q: VecDeque<Request>,
+    rejected: u64,
+    admitted: u64,
+}
+
+#[derive(Debug)]
+pub struct QueueFull(pub Request);
+
+impl AdmissionQueue {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        AdmissionQueue { cap, q: VecDeque::new(), rejected: 0, admitted: 0 }
+    }
+
+    pub fn push(&mut self, r: Request) -> Result<(), QueueFull> {
+        if self.q.len() >= self.cap {
+            self.rejected += 1;
+            return Err(QueueFull(r));
+        }
+        self.admitted += 1;
+        self.q.push_back(r);
+        Ok(())
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.q.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&Request> {
+        self.q.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Backpressure signal in [0, 1]: how full the queue is.
+    pub fn pressure(&self) -> f64 {
+        self.q.len() as f64 / self.cap as f64
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// Cancel a queued request by id; returns it if found.
+    pub fn cancel(&mut self, id: u64) -> Option<Request> {
+        let idx = self.q.iter().position(|r| r.id == id)?;
+        self.q.remove(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::SamplingParams;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![1, 2, 3], SamplingParams::default())
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = AdmissionQueue::new(4);
+        q.push(req(1)).unwrap();
+        q.push(req(2)).unwrap();
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn backpressure_at_capacity() {
+        let mut q = AdmissionQueue::new(2);
+        q.push(req(1)).unwrap();
+        q.push(req(2)).unwrap();
+        assert_eq!(q.pressure(), 1.0);
+        let err = q.push(req(3)).unwrap_err();
+        assert_eq!(err.0.id, 3);
+        assert_eq!(q.rejected(), 1);
+        assert_eq!(q.admitted(), 2);
+        q.pop().unwrap();
+        q.push(req(3)).unwrap(); // space again
+    }
+
+    #[test]
+    fn cancel_removes_by_id() {
+        let mut q = AdmissionQueue::new(4);
+        q.push(req(1)).unwrap();
+        q.push(req(2)).unwrap();
+        q.push(req(3)).unwrap();
+        assert_eq!(q.cancel(2).unwrap().id, 2);
+        assert!(q.cancel(2).is_none());
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 3);
+    }
+}

@@ -1,0 +1,167 @@
+//! Request lifecycle: a request enters the admission queue, is prefilled
+//! chunk by chunk into a KV slot, decodes one token per engine iteration,
+//! and finishes on length / stop-token / cancellation.
+
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 = greedy argmax.
+    pub temperature: f32,
+    /// 0 = no top-k restriction.
+    pub top_k: usize,
+    pub max_tokens: usize,
+    pub stop_token: Option<i32>,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            max_tokens: 64,
+            stop_token: None,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// hit max_tokens
+    Length,
+    /// produced the stop token
+    Stop,
+    /// ran out of KV positions
+    ContextOverflow,
+    Cancelled,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestState {
+    Queued,
+    /// `next` = how many prompt tokens are already in the KV cache.
+    Prefilling { slot: usize, next: usize },
+    Decoding { slot: usize },
+    Finished(FinishReason),
+}
+
+#[derive(Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub params: SamplingParams,
+    pub state: RequestState,
+    pub generated: Vec<i32>,
+    pub enqueued_at: Instant,
+    pub first_token_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, params: SamplingParams) -> Self {
+        assert!(!prompt.is_empty(), "empty prompt");
+        Request {
+            id,
+            prompt,
+            params,
+            state: RequestState::Queued,
+            generated: Vec::new(),
+            enqueued_at: Instant::now(),
+            first_token_at: None,
+            finished_at: None,
+        }
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.state, RequestState::Finished(_))
+    }
+
+    /// Total sequence length so far (prompt + generated).
+    pub fn seq_len(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    pub fn record_token(&mut self, tok: i32) {
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(Instant::now());
+        }
+        self.generated.push(tok);
+    }
+
+    pub fn finish(&mut self, reason: FinishReason) {
+        self.state = RequestState::Finished(reason);
+        self.finished_at = Some(Instant::now());
+    }
+
+    /// Why (if at all) this request must stop after the latest token.
+    pub fn stop_reason(&self, max_seq: usize) -> Option<FinishReason> {
+        if let Some(stop) = self.params.stop_token {
+            if self.generated.last() == Some(&stop) {
+                return Some(FinishReason::Stop);
+            }
+        }
+        if self.generated.len() >= self.params.max_tokens {
+            return Some(FinishReason::Length);
+        }
+        if self.seq_len() >= max_seq {
+            return Some(FinishReason::ContextOverflow);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt_len: usize, params: SamplingParams) -> Request {
+        Request::new(1, vec![7; prompt_len], params)
+    }
+
+    #[test]
+    fn lifecycle() {
+        let mut r = req(4, SamplingParams { max_tokens: 2, ..Default::default() });
+        assert_eq!(r.state, RequestState::Queued);
+        assert!(!r.is_finished());
+        r.record_token(5);
+        assert!(r.first_token_at.is_some());
+        assert_eq!(r.stop_reason(100), None);
+        r.record_token(6);
+        assert_eq!(r.stop_reason(100), Some(FinishReason::Length));
+        r.finish(FinishReason::Length);
+        assert!(r.is_finished());
+        assert!(r.finished_at.is_some());
+    }
+
+    #[test]
+    fn stop_token_wins() {
+        let mut r = req(2, SamplingParams {
+            max_tokens: 10,
+            stop_token: Some(0),
+            ..Default::default()
+        });
+        r.record_token(3);
+        assert_eq!(r.stop_reason(100), None);
+        r.record_token(0);
+        assert_eq!(r.stop_reason(100), Some(FinishReason::Stop));
+    }
+
+    #[test]
+    fn context_overflow() {
+        let mut r = req(6, SamplingParams { max_tokens: 100, ..Default::default() });
+        r.record_token(1);
+        r.record_token(2);
+        assert_eq!(r.stop_reason(8), Some(FinishReason::ContextOverflow));
+        assert_eq!(r.stop_reason(9), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn rejects_empty_prompt() {
+        let _ = Request::new(1, vec![], SamplingParams::default());
+    }
+}

@@ -1,0 +1,178 @@
+//! Request router: spreads requests across model replicas/variants.
+//!
+//! Each replica is its own [`InferenceEngine`] (own KV cache, own queue).
+//! Routing policy: an explicit variant tag on the request wins; otherwise
+//! least-queue-pressure, tie-broken round-robin. This is the multi-variant
+//! deployment story for TARDIS: e.g. a `dense` replica for quality-pinned
+//! traffic and a `tardis80` replica for latency-pinned traffic.
+
+use anyhow::{anyhow, Result};
+
+use super::engine_loop::{Completion, InferenceEngine};
+use super::model::StepModel;
+use super::request::{RequestId, SamplingParams};
+use super::scheduler::Action;
+
+pub struct Replica<M: StepModel> {
+    pub name: String,
+    pub engine: InferenceEngine<M>,
+}
+
+pub struct Router<M: StepModel> {
+    replicas: Vec<Replica<M>>,
+    rr: usize,
+    pub routed: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteTicket {
+    pub replica: usize,
+    pub request: RequestId,
+}
+
+impl<M: StepModel> Router<M> {
+    pub fn new(replicas: Vec<(String, InferenceEngine<M>)>) -> Self {
+        assert!(!replicas.is_empty());
+        Router {
+            replicas: replicas
+                .into_iter()
+                .map(|(name, engine)| Replica { name, engine })
+                .collect(),
+            rr: 0,
+            routed: 0,
+        }
+    }
+
+    pub fn replica_names(&self) -> Vec<&str> {
+        self.replicas.iter().map(|r| r.name.as_str()).collect()
+    }
+
+    pub fn replica(&mut self, idx: usize) -> &mut Replica<M> {
+        &mut self.replicas[idx]
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn pick(&mut self, variant: Option<&str>) -> Result<usize> {
+        if let Some(v) = variant {
+            return self
+                .replicas
+                .iter()
+                .position(|r| r.name == v)
+                .ok_or_else(|| anyhow!("no replica for variant {v:?}"));
+        }
+        // least pressure, round-robin tie-break
+        let n = self.replicas.len();
+        let mut best = None;
+        for off in 0..n {
+            let i = (self.rr + off) % n;
+            let p = self.replicas[i].engine.queue_pressure();
+            match best {
+                None => best = Some((i, p)),
+                Some((_, bp)) if p < bp - 1e-12 => best = Some((i, p)),
+                _ => {}
+            }
+        }
+        let (idx, _) = best.expect("non-empty replicas");
+        self.rr = (idx + 1) % n;
+        Ok(idx)
+    }
+
+    pub fn submit(&mut self, variant: Option<&str>, prompt: Vec<i32>,
+                  params: SamplingParams) -> Result<RouteTicket> {
+        let idx = self.pick(variant)?;
+        let id = self.replicas[idx].engine.submit(prompt, params)?;
+        self.routed += 1;
+        Ok(RouteTicket { replica: idx, request: id })
+    }
+
+    /// One scheduler iteration on every replica. Returns true if any
+    /// replica did work.
+    pub fn step_all(&mut self) -> Result<bool> {
+        let mut busy = false;
+        for r in &mut self.replicas {
+            if !r.engine.is_idle() {
+                busy |= r.engine.step()? != Action::Idle;
+            }
+        }
+        Ok(busy)
+    }
+
+    pub fn run_to_completion(&mut self) -> Result<Vec<(String, Completion)>> {
+        let mut out = Vec::new();
+        loop {
+            let busy = self.step_all()?;
+            for r in &mut self.replicas {
+                for c in r.engine.take_completions() {
+                    out.push((r.name.clone(), c));
+                }
+            }
+            if !busy && self.replicas.iter().all(|r| r.engine.is_idle()) {
+                break;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine_loop::EngineConfig;
+    use crate::coordinator::model::MockModel;
+
+    fn router(n: usize) -> Router<MockModel> {
+        Router::new(
+            (0..n)
+                .map(|i| {
+                    (
+                        format!("v{i}"),
+                        InferenceEngine::new(
+                            MockModel::new(2, 64, 16, vec![4, 8]),
+                            EngineConfig::default(),
+                        ),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn explicit_variant_routing() {
+        let mut r = router(3);
+        let t = r
+            .submit(Some("v1"), vec![1, 2], SamplingParams::default())
+            .unwrap();
+        assert_eq!(t.replica, 1);
+        assert!(r.submit(Some("nope"), vec![1], SamplingParams::default()).is_err());
+    }
+
+    #[test]
+    fn least_loaded_spreads() {
+        let mut r = router(2);
+        let mut counts = [0usize; 2];
+        for i in 0..8 {
+            let t = r
+                .submit(None, vec![1 + i],
+                        SamplingParams { max_tokens: 2, ..Default::default() })
+                .unwrap();
+            counts[t.replica] += 1;
+        }
+        assert!(counts[0] >= 3 && counts[1] >= 3, "unbalanced {counts:?}");
+    }
+
+    #[test]
+    fn run_to_completion_drains_all() {
+        let mut r = router(2);
+        for i in 0..6 {
+            r.submit(None, vec![1 + i, 2],
+                     SamplingParams { max_tokens: 3, ..Default::default() })
+                .unwrap();
+        }
+        let done = r.run_to_completion().unwrap();
+        assert_eq!(done.len(), 6);
+        assert!(done.iter().all(|(_, c)| c.tokens.len() == 3));
+    }
+}

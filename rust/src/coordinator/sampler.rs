@@ -1,0 +1,125 @@
+//! Token sampling over the decode step's logits: greedy argmax,
+//! temperature softmax, and top-k restriction, all deterministic given
+//! the request's seed.
+
+use crate::util::rng::Rng;
+
+use super::request::SamplingParams;
+
+/// Sample one token from a `[vocab]` logits slice.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> i32 {
+    assert!(!logits.is_empty());
+    if params.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Collect the candidate set (top-k or everything).
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if params.top_k > 0 && params.top_k < logits.len() {
+        idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        idx.truncate(params.top_k);
+    }
+    // Softmax with temperature over candidates (max-subtracted).
+    let t = params.temperature;
+    let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> =
+        idx.iter().map(|&i| (((logits[i] - m) / t) as f64).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut u = rng.f64() * total;
+    for (k, w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return idx[k] as i32;
+        }
+    }
+    *idx.last().unwrap() as i32
+}
+
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Log-softmax probability of `token` (used by tests and the evaluation
+/// endpoints of the server).
+pub fn log_prob(logits: &[f32], token: usize) -> f64 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let z: f64 = logits.iter().map(|&v| ((v as f64) - m).exp()).sum();
+    (logits[token] as f64) - m - z.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::property;
+
+    #[test]
+    fn greedy_is_argmax() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let p = SamplingParams { temperature: 0.0, ..Default::default() };
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&logits, &p, &mut rng), 1);
+    }
+
+    #[test]
+    fn top1_equals_greedy_at_any_temperature() {
+        let logits = vec![0.5, 3.0, -2.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 1, ..Default::default() };
+        let mut rng = Rng::new(9);
+        for _ in 0..20 {
+            assert_eq!(sample(&logits, &p, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let logits = vec![1.0, 1.0, 1.0, 1.0];
+        let p = SamplingParams { temperature: 1.0, ..Default::default() };
+        let mut rng = Rng::new(4);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[sample(&logits, &p, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn log_prob_normalizes() {
+        let logits = vec![0.3, -1.2, 2.0, 0.0];
+        let total: f64 =
+            (0..4).map(|i| log_prob(&logits, i).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9, "total {total}");
+    }
+
+    #[test]
+    fn prop_sample_in_candidate_set() {
+        property("sampled token is a valid top-k candidate", 200, |rng| {
+            let v = 2 + rng.usize_below(30);
+            let logits: Vec<f32> =
+                (0..v).map(|_| rng.normal() as f32).collect();
+            let k = 1 + rng.usize_below(v);
+            let p = SamplingParams {
+                temperature: 0.1 + rng.f32(),
+                top_k: k,
+                ..Default::default()
+            };
+            let tok = sample(&logits, &p, rng) as usize;
+            prop_assert!(tok < v, "token {tok} out of vocab {v}");
+            // token must be among the k largest logits
+            let mut sorted: Vec<f32> = logits.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let cutoff = sorted[k - 1];
+            prop_assert!(
+                logits[tok] >= cutoff,
+                "token {tok} (logit {}) below top-{k} cutoff {cutoff}",
+                logits[tok]
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,273 @@
+//! Analytic roofline cost model (reproduces Fig 1b and the theoretical
+//! side of Fig 13).
+//!
+//! The paper's motivating breakdown runs Falcon-7B on an RTX 4090 and
+//! shows parameter-loading I/O dominating auto-regressive decode, with
+//! FFN I/O alone at 78.2% of inference time. We model each transformer
+//! block as (bytes moved, flops executed) per token and take
+//! `time = max(bytes / bandwidth, flops / peak_flops)` per component
+//! (I/O and compute overlap on GPUs; the paper's Figure 1b reports the
+//! two sides separately, which we also expose).
+
+/// Hardware description. Defaults model the paper's RTX 4090:
+/// ~1 TB/s VRAM bandwidth, ~82.6 TFLOP/s fp16 tensor throughput.
+#[derive(Debug, Clone, Copy)]
+pub struct HwSpec {
+    pub name: &'static str,
+    pub mem_bw_gbs: f64,
+    pub peak_tflops: f64,
+}
+
+pub const RTX_4090: HwSpec =
+    HwSpec { name: "rtx4090", mem_bw_gbs: 1008.0, peak_tflops: 82.6 };
+
+/// This repo's actual testbed (single-core CPU PJRT). Rough numbers used
+/// only for sanity overlays, never for paper claims.
+pub const CPU_1CORE: HwSpec =
+    HwSpec { name: "cpu-1core", mem_bw_gbs: 20.0, peak_tflops: 0.05 };
+
+/// Transformer shape. `dtype_bytes` = 2 for the fp16 deployments the
+/// paper measures.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub dtype_bytes: usize,
+    /// attention projection parameter count per layer as a multiple of
+    /// d^2 (4 for full MHA; ~2.06 for Falcon's multi-query attention:
+    /// query d^2 + fused dense d^2 + a single 64-wide K/V head).
+    pub attn_param_factor: f64,
+    /// per-token K (or V) cache width: d_model for MHA, one head (64)
+    /// for Falcon-style multi-query attention.
+    pub kv_dim: usize,
+}
+
+pub const FALCON_7B: ModelSpec = ModelSpec {
+    name: "falcon-7b",
+    n_layers: 32,
+    d_model: 4544,
+    d_ff: 4 * 4544,
+    vocab: 65024,
+    dtype_bytes: 2,
+    attn_param_factor: 2.06,
+    kv_dim: 64,
+};
+
+pub const TINY_GELU: ModelSpec = ModelSpec {
+    name: "tiny-gelu",
+    n_layers: 4,
+    d_model: 128,
+    d_ff: 512,
+    vocab: 256,
+    dtype_bytes: 4,
+    attn_param_factor: 4.0,
+    kv_dim: 128,
+};
+
+impl ModelSpec {
+    pub fn attn_params_per_layer(&self) -> f64 {
+        self.attn_param_factor * (self.d_model as f64) * (self.d_model as f64)
+    }
+
+    pub fn ffn_params_per_layer(&self) -> f64 {
+        2.0 * self.d_model as f64 * self.d_ff as f64
+    }
+
+    pub fn total_params(&self) -> f64 {
+        let per_layer = self.attn_params_per_layer() + self.ffn_params_per_layer();
+        // tied input/output embedding counted once (Falcon/GPT-2 style)
+        self.n_layers as f64 * per_layer
+            + self.d_model as f64 * self.vocab as f64
+    }
+
+    pub fn ffn_param_fraction(&self) -> f64 {
+        self.n_layers as f64 * self.ffn_params_per_layer() / self.total_params()
+    }
+}
+
+/// Per-component cost of one generation step over a batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BlockCost {
+    pub io_s: f64,
+    pub compute_s: f64,
+}
+
+impl BlockCost {
+    pub fn bound(&self) -> f64 {
+        self.io_s.max(self.compute_s)
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepBreakdown {
+    pub attn: BlockCost,
+    pub ffn: BlockCost,
+}
+
+impl StepBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.attn.bound() + self.ffn.bound()
+    }
+}
+
+/// Cost of one auto-regressive decode step: every parameter is loaded
+/// once; each parameter contributes 2 flops per token in the batch.
+pub fn decode_step(model: &ModelSpec, hw: &HwSpec, batch: usize,
+                   ctx_len: usize) -> StepBreakdown {
+    let b = batch as f64;
+    let attn_p = model.n_layers as f64 * model.attn_params_per_layer();
+    let ffn_p = model.n_layers as f64 * model.ffn_params_per_layer();
+    // KV cache reads for attention over the context.
+    let kv_bytes = model.n_layers as f64
+        * 2.0
+        * b
+        * ctx_len as f64
+        * model.kv_dim as f64
+        * model.dtype_bytes as f64;
+    let bw = hw.mem_bw_gbs * 1e9;
+    let fl = hw.peak_tflops * 1e12;
+    let attn = BlockCost {
+        io_s: (attn_p * model.dtype_bytes as f64 + kv_bytes) / bw,
+        compute_s: (2.0 * attn_p * b
+            + 2.0 * model.n_layers as f64 * 2.0 * b * ctx_len as f64
+                * model.d_model as f64)
+            / fl,
+    };
+    let ffn = BlockCost {
+        io_s: ffn_p * model.dtype_bytes as f64 / bw,
+        compute_s: 2.0 * ffn_p * b / fl,
+    };
+    StepBreakdown { attn, ffn }
+}
+
+/// Cost of prefilling `prompt` tokens (parameters loaded once; compute
+/// scales with prompt length).
+pub fn prefill(model: &ModelSpec, hw: &HwSpec, batch: usize,
+               prompt: usize) -> StepBreakdown {
+    let tokens = (batch * prompt) as f64;
+    let attn_p = model.n_layers as f64 * model.attn_params_per_layer();
+    let ffn_p = model.n_layers as f64 * model.ffn_params_per_layer();
+    let bw = hw.mem_bw_gbs * 1e9;
+    let fl = hw.peak_tflops * 1e12;
+    let attn = BlockCost {
+        io_s: attn_p * model.dtype_bytes as f64 / bw,
+        compute_s: (2.0 * attn_p * tokens
+            + 2.0 * model.n_layers as f64 * (prompt as f64)
+                * tokens * model.d_model as f64)
+            / fl,
+    };
+    let ffn = BlockCost {
+        io_s: ffn_p * model.dtype_bytes as f64 / bw,
+        compute_s: 2.0 * ffn_p * tokens / fl,
+    };
+    StepBreakdown { attn, ffn }
+}
+
+/// Fig 1b: fraction of end-to-end time per (block, io/compute) cell for a
+/// `prompt`-token prefill plus `gen` decode steps.
+#[derive(Debug, Clone, Copy)]
+pub struct InferenceBreakdown {
+    pub attn_io: f64,
+    pub attn_compute: f64,
+    pub ffn_io: f64,
+    pub ffn_compute: f64,
+    pub total_s: f64,
+}
+
+pub fn inference_breakdown(model: &ModelSpec, hw: &HwSpec, batch: usize,
+                           prompt: usize, gen: usize) -> InferenceBreakdown {
+    let pre = prefill(model, hw, batch, prompt);
+    let mut attn = BlockCost { io_s: pre.attn.io_s, compute_s: pre.attn.compute_s };
+    let mut ffn = BlockCost { io_s: pre.ffn.io_s, compute_s: pre.ffn.compute_s };
+    for step in 0..gen {
+        let d = decode_step(model, hw, batch, prompt + step);
+        attn.io_s += d.attn.io_s;
+        attn.compute_s += d.attn.compute_s;
+        ffn.io_s += d.ffn.io_s;
+        ffn.compute_s += d.ffn.compute_s;
+    }
+    let total = attn.io_s + attn.compute_s + ffn.io_s + ffn.compute_s;
+    InferenceBreakdown {
+        attn_io: attn.io_s / total,
+        attn_compute: attn.compute_s / total,
+        ffn_io: ffn.io_s / total,
+        ffn_compute: ffn.compute_s / total,
+        total_s: total,
+    }
+}
+
+/// Theoretical FFN + end-to-end speedup of a TARDIS fold at `ratio`
+/// FFN-parameter compression (the model for Fig 13's upper envelope).
+/// `fix_fraction` = expected share of original FFN weights touched by the
+/// result-fixing path per step.
+pub fn tardis_speedup(model: &ModelSpec, hw: &HwSpec, batch: usize,
+                      ctx: usize, ratio: f64, fix_fraction: f64)
+                      -> (f64, f64) {
+    let base = decode_step(model, hw, batch, ctx);
+    let ffn_scale = (1.0 - ratio) + fix_fraction;
+    let folded_ffn = BlockCost {
+        io_s: base.ffn.io_s * ffn_scale,
+        compute_s: base.ffn.compute_s * ffn_scale,
+    };
+    let ffn_speedup = base.ffn.bound() / folded_ffn.bound();
+    let e2e = (base.attn.bound() + base.ffn.bound())
+        / (base.attn.bound() + folded_ffn.bound());
+    (ffn_speedup, e2e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn falcon_ffn_fraction_matches_paper() {
+        // Paper Table 2: ~80% of Falcon-7B parameters are FFN.
+        let f = FALCON_7B.ffn_param_fraction();
+        assert!(f > 0.70 && f < 0.85, "fraction {f}");
+    }
+
+    #[test]
+    fn falcon_param_count_near_7b() {
+        let p = FALCON_7B.total_params();
+        assert!(p > 6.0e9 && p < 8.5e9, "params {p}");
+    }
+
+    #[test]
+    fn decode_is_io_bound_on_4090() {
+        let d = decode_step(&FALCON_7B, &RTX_4090, 1, 128);
+        assert!(d.ffn.io_s > d.ffn.compute_s * 10.0);
+        assert!(d.attn.io_s > d.attn.compute_s);
+    }
+
+    #[test]
+    fn fig1b_ffn_io_dominates() {
+        // Paper: FFN I/O alone is 78.2% of inference time (91 + 178 tok).
+        let b = inference_breakdown(&FALCON_7B, &RTX_4090, 1, 91, 178);
+        assert!(b.ffn_io > 0.65 && b.ffn_io < 0.90, "ffn_io {}", b.ffn_io);
+        assert!(b.ffn_io > b.attn_io);
+        assert!((b.attn_io + b.attn_compute + b.ffn_io + b.ffn_compute - 1.0)
+            .abs() < 1e-9);
+    }
+
+    #[test]
+    fn tardis_speedup_increases_with_ratio() {
+        let (f50, e50) = tardis_speedup(&FALCON_7B, &RTX_4090, 1, 128, 0.5, 0.05);
+        let (f80, e80) = tardis_speedup(&FALCON_7B, &RTX_4090, 1, 128, 0.8, 0.05);
+        assert!(f80 > f50 && f50 > 1.0);
+        assert!(e80 > e50 && e50 > 1.0);
+        // Paper's headline region: ~1.86x FFN, ~1.6x e2e at 80%.
+        assert!(f80 > 1.5 && f80 < 6.0, "ffn speedup {f80}");
+        assert!(e80 > 1.2, "e2e speedup {e80}");
+    }
+
+    #[test]
+    fn prefill_compute_grows_with_prompt() {
+        let short = prefill(&FALCON_7B, &RTX_4090, 1, 16);
+        let long = prefill(&FALCON_7B, &RTX_4090, 1, 512);
+        assert!(long.ffn.compute_s > short.ffn.compute_s * 20.0);
+        assert_eq!(long.ffn.io_s, short.ffn.io_s); // params loaded once
+    }
+}

@@ -1,0 +1,20 @@
+//! TARDIS: accelerating LLM inference via partially-linear feed-forward
+//! networks (constant folding), reproduced as a three-layer rust + JAX +
+//! Pallas stack. See DESIGN.md for the architecture and EXPERIMENTS.md
+//! for the paper-vs-measured record.
+//!
+//! Layer map:
+//! * [`runtime`]     — PJRT engine running the AOT artifacts (L2/L1 output)
+//! * [`coordinator`] — the serving system (router, batcher, scheduler, KV)
+//! * [`costmodel`]   — analytic roofline reproduction of Fig 1b
+//! * [`config`]      — manifest contract with the python compile path
+//! * [`util`], [`bench`], [`testing`] — std-only substrates (no network)
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod runtime;
+pub mod server;
+pub mod testing;
+pub mod util;

@@ -1,0 +1,227 @@
+//! `tardis` CLI — the L3 entrypoint.
+//!
+//! Subcommands:
+//!   generate   — load a variant, generate from a prompt, print text+stats
+//!   serve      — TCP server (line-delimited JSON) over one or more variants
+//!   costmodel  — print the Fig 1b analytic breakdown (paper-scale model)
+//!   variants   — list manifest variants and their compression ratios
+//!   bench-decode — quick per-variant decode-step timing (full Fig 13 lives
+//!                  in `cargo bench --bench fig13_speedup`)
+
+use anyhow::{anyhow, Result};
+
+use tardis::config::Manifest;
+use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::model::{PjrtModel, StepModel};
+use tardis::coordinator::request::SamplingParams;
+use tardis::coordinator::router::Router;
+use tardis::costmodel;
+use tardis::runtime::Engine;
+use tardis::server::protocol::{decode_tokens, encode_text};
+use tardis::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: tardis <generate|serve|costmodel|variants|bench-decode> [flags]
+  common flags:
+    --artifacts DIR        artifacts directory (default: artifacts or $TARDIS_ARTIFACTS)
+    --variant NAME         model variant (default: tardis80)
+  generate:
+    --prompt TEXT          prompt (default: \"the quick \")
+    --max-tokens N         tokens to generate (default 48)
+    --temperature T        sampling temperature (default 0 = greedy)
+  serve:
+    --addr HOST:PORT       listen address (default 127.0.0.1:7437)
+    --variants A,B         variants to load as replicas (default dense,tardis80)
+    --max-requests N       exit after N served requests (for scripted runs)
+  bench-decode:
+    --steps N              decode steps to time (default 32)"
+    );
+    std::process::exit(2);
+}
+
+fn load_engine<'e>(
+    engine: &'e Engine,
+    manifest: &Manifest,
+    variant: &str,
+    execs: Option<&[&str]>,
+) -> Result<InferenceEngine<PjrtModel<'e>>> {
+    let v = engine.load_variant(manifest, variant, execs)?;
+    let model = PjrtModel::new(
+        engine,
+        v,
+        manifest.batch,
+        manifest.model.max_seq,
+        manifest.model.vocab,
+        manifest.prefill_buckets.clone(),
+    )?;
+    Ok(InferenceEngine::new(model, EngineConfig::default()))
+}
+
+fn main_exec_tags(manifest: &Manifest) -> Vec<&'static str> {
+    let mut tags = vec!["decode"];
+    // prefill tags are static strings in the manifest ("prefill16", ...)
+    // but we need 'static for the filter; map known buckets.
+    for b in &manifest.prefill_buckets {
+        match b {
+            16 => tags.push("prefill16"),
+            64 => tags.push("prefill64"),
+            _ => {}
+        }
+    }
+    tags
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&manifest_path(args))?;
+    let variant = args.str("variant", "tardis80");
+    let engine = Engine::cpu()?;
+    eprintln!("[generate] platform={} variant={variant}", engine.platform());
+    let mut ie = load_engine(&engine, &manifest, &variant,
+                             Some(&main_exec_tags(&manifest)))?;
+    let prompt = args.str("prompt", "the quick ");
+    let params = SamplingParams {
+        temperature: args.f64("temperature", 0.0)? as f32,
+        top_k: args.usize("top-k", 0)?,
+        max_tokens: args.usize("max-tokens", 48)?,
+        stop_token: None,
+        seed: args.usize("seed", 0)? as u64,
+    };
+    let t0 = std::time::Instant::now();
+    let c = ie.generate_sequential(encode_text(&prompt), params)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}{}", prompt, decode_tokens(&c.tokens));
+    eprintln!(
+        "[generate] {} tokens in {:.2}s ({:.1} tok/s, decode mean {:.2} ms, \
+         compression ratio {:.1}%)",
+        c.tokens.len(),
+        dt,
+        c.tokens.len() as f64 / dt,
+        ie.decode_latency_ms.mean(),
+        ie.model.compression_ratio() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&manifest_path(args))?;
+    let engine = Engine::cpu()?;
+    let variants = args.list("variants", &["dense", "tardis80"]);
+    let mut replicas = Vec::new();
+    for v in &variants {
+        eprintln!("[serve] loading {v} ...");
+        replicas.push((
+            v.clone(),
+            load_engine(&engine, &manifest, v, Some(&main_exec_tags(&manifest)))?,
+        ));
+    }
+    let router = Router::new(replicas);
+    let addr = args.str("addr", "127.0.0.1:7437");
+    let max_requests = args.opt_str("max-requests")
+        .map(|s| s.parse::<usize>())
+        .transpose()
+        .map_err(|_| anyhow!("--max-requests expects an integer"))?;
+    let served = tardis::server::tcp::serve(router, &addr, max_requests)?;
+    eprintln!("[serve] done, served {served} requests");
+    Ok(())
+}
+
+fn cmd_costmodel(_args: &Args) -> Result<()> {
+    let b = costmodel::inference_breakdown(
+        &costmodel::FALCON_7B, &costmodel::RTX_4090, 1, 91, 178);
+    println!("Fig 1b reproduction — Falcon-7B on RTX 4090, 91 prompt + 178 generated tokens");
+    println!("  component      share of inference time");
+    println!("  MHA I/O        {:5.1}%", b.attn_io * 100.0);
+    println!("  MHA compute    {:5.1}%", b.attn_compute * 100.0);
+    println!("  FFN I/O        {:5.1}%   (paper: 78.2%)", b.ffn_io * 100.0);
+    println!("  FFN compute    {:5.1}%", b.ffn_compute * 100.0);
+    println!("  modeled total  {:.2}s", b.total_s);
+    println!();
+    println!("TARDIS theoretical speedups (decode, ctx 128):");
+    for ratio in [0.3, 0.5, 0.7, 0.8] {
+        let (ffn, e2e) = costmodel::tardis_speedup(
+            &costmodel::FALCON_7B, &costmodel::RTX_4090, 1, 128, ratio, 0.05);
+        println!("  ratio {:.0}%: FFN {:.2}x, end-to-end {:.2}x",
+                 ratio * 100.0, ffn, e2e);
+    }
+    Ok(())
+}
+
+fn cmd_variants(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&manifest_path(args))?;
+    println!("model {} (d={}, L={}, h={}, act={}), batch {}, max_seq {}",
+             manifest.model.name, manifest.model.d_model,
+             manifest.model.n_layers, manifest.model.d_ff,
+             manifest.model.act, manifest.batch, manifest.model.max_seq);
+    for v in &manifest.variants {
+        println!(
+            "  {:10} mode={:6} ratio={:5.1}% fix_capacity={:4} execs={}",
+            v.name,
+            v.ffn_mode,
+            v.compression_ratio * 100.0,
+            v.fix_capacity,
+            v.executables.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench_decode(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&manifest_path(args))?;
+    let engine = Engine::cpu()?;
+    let steps = args.usize("steps", 32)?;
+    let variants = args.list("variants", &["dense", "tardis50", "tardis70", "tardis80"]);
+    println!("decode-step latency ({} steps, batch {}):", steps, manifest.batch);
+    let mut dense_mean = None;
+    for vname in &variants {
+        let v = engine.load_variant(&manifest, vname, Some(&["decode"]))?;
+        let mut model = PjrtModel::new(&engine, v, manifest.batch,
+                                       manifest.model.max_seq,
+                                       manifest.model.vocab,
+                                       manifest.prefill_buckets.clone())?;
+        let tokens = vec![1i32; manifest.batch];
+        let mut lat = tardis::util::stats::Samples::new();
+        for s in 0..steps {
+            let pos: Vec<i32> = vec![s as i32; manifest.batch];
+            let t0 = std::time::Instant::now();
+            let _ = model.decode(&tokens, &pos)?;
+            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mean = lat.mean();
+        if vname == "dense" {
+            dense_mean = Some(mean);
+        }
+        let speedup = dense_mean.map(|d| d / mean).unwrap_or(f64::NAN);
+        println!("  {:10} mean {:8.2} ms  p50 {:8.2}  speedup vs dense {:.2}x",
+                 vname, mean, lat.percentile(50.0), speedup);
+    }
+    Ok(())
+}
+
+fn manifest_path(args: &Args) -> std::path::PathBuf {
+    args.opt_str("artifacts")
+        .map(|d| std::path::PathBuf::from(d).join("manifest.json"))
+        .unwrap_or_else(Manifest::default_path)
+}
+
+fn main() {
+    let args = match Args::from_env(true) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            usage();
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("costmodel") => cmd_costmodel(&args),
+        Some("variants") => cmd_variants(&args),
+        Some("bench-decode") => cmd_bench_decode(&args),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

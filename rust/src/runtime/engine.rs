@@ -1,0 +1,277 @@
+//! PJRT engine: compile HLO-text artifacts, keep weights device-resident,
+//! thread the KV cache between steps without host round-trips.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//! Every executable's inputs are `weights... , runtime inputs...` in the
+//! manifest's declared order; weights are uploaded once per variant and
+//! shared across its executables where names coincide.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{Manifest, VariantSpec};
+
+use super::weights::{xla_element_type, WeightFile};
+
+pub struct Engine {
+    pub client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+    }
+
+    /// Upload a host f32 array as a device buffer.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32: {e}"))
+    }
+
+    /// Upload a host i32 array as a device buffer.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32: {e}"))
+    }
+
+    /// Upload an i32 scalar.
+    pub fn upload_i32_scalar(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[v], &[], None)
+            .map_err(|e| anyhow!("upload scalar: {e}"))
+    }
+
+    /// Zero-filled f32 literal (host side). Upload with
+    /// [`Engine::upload_literal`]; the literal must outlive the buffer's
+    /// first use because the host->device copy is asynchronous.
+    pub fn zeros_literal(&self, dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        let bytes = vec![0u8; n * 4];
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32, dims, &bytes)
+        .map_err(|e| anyhow!("zeros literal: {e}"))
+    }
+
+    pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("upload literal: {e}"))
+    }
+
+    /// Load one variant: weights → device, executables → compiled.
+    /// `execs` limits which executables to compile (None = all).
+    pub fn load_variant(
+        &self,
+        manifest: &Manifest,
+        name: &str,
+        execs: Option<&[&str]>,
+    ) -> Result<Variant> {
+        let spec = manifest.variant(name)?.clone();
+        let wf = WeightFile::load(&manifest.dir, &spec)?;
+        // Upload each named weight once.
+        let mut weight_bufs: BTreeMap<String, Arc<xla::PjRtBuffer>> = BTreeMap::new();
+        let mut weight_literals = Vec::new();
+        for p in &spec.params {
+            // NOTE: go through a Literal rather than
+            // `buffer_from_host_raw_bytes` — the latter passes the
+            // ElementType *ordinal* where the C API expects a
+            // PrimitiveType, silently mislabeling F32 data as F16.
+            // The upload is ASYNC and captures the literal's pointer, so
+            // the literal must stay alive as long as the variant.
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla_element_type(p.dtype),
+                &p.shape,
+                wf.bytes(p),
+            )
+            .map_err(|e| anyhow!("literal for weight {}: {e}", p.name))?;
+            let buf = self
+                .client
+                .buffer_from_host_literal(None, &lit)
+                .map_err(|e| anyhow!("upload weight {}: {e}", p.name))?;
+            weight_bufs.insert(p.name.clone(), Arc::new(buf));
+            weight_literals.push(lit);
+        }
+        let mut loaded = BTreeMap::new();
+        for (tag, espec) in &spec.executables {
+            if let Some(filter) = execs {
+                if !filter.contains(&tag.as_str()) {
+                    continue;
+                }
+            }
+            let exe = self.compile(&manifest.dir.join(&espec.file))?;
+            let weights = espec
+                .weight_params
+                .iter()
+                .map(|n| {
+                    weight_bufs
+                        .get(n)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("exec {tag} wants unknown weight {n}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            loaded.insert(
+                tag.clone(),
+                LoadedExec {
+                    tag: tag.clone(),
+                    exe,
+                    weights,
+                    n_outputs: espec.outputs.len(),
+                },
+            );
+        }
+        let kv_zeros = self.zeros_literal(&manifest.kv_shape)?;
+        Ok(Variant {
+            spec,
+            execs: loaded,
+            kv_shape: manifest.kv_shape.clone(),
+            kv_zeros,
+            _weight_literals: weight_literals,
+        })
+    }
+}
+
+/// One compiled executable plus its device-resident weight inputs.
+pub struct LoadedExec {
+    pub tag: String,
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<Arc<xla::PjRtBuffer>>,
+    n_outputs: usize,
+}
+
+impl LoadedExec {
+    /// Execute with the given runtime inputs appended after the weights.
+    pub fn run(&self, runtime_inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut args: Vec<&xla::PjRtBuffer> =
+            self.weights.iter().map(|a| a.as_ref()).collect();
+        args.extend_from_slice(runtime_inputs);
+        let mut out = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("executing {}: {e}", self.tag))?;
+        if out.is_empty() {
+            bail!("executing {}: no replica outputs", self.tag);
+        }
+        let outputs = out.swap_remove(0);
+        if outputs.len() != self.n_outputs {
+            bail!(
+                "executing {}: expected {} outputs, got {}",
+                self.tag,
+                self.n_outputs,
+                outputs.len()
+            );
+        }
+        Ok(outputs)
+    }
+}
+
+/// A fully-loaded model variant: decode step, prefill buckets, and the
+/// FFN micro-executables for breakdown benches.
+pub struct Variant {
+    pub spec: VariantSpec,
+    pub execs: BTreeMap<String, LoadedExec>,
+    pub kv_shape: Vec<usize>,
+    /// Cached zero KV literal: `fresh_kv` re-uploads it; it must outlive
+    /// the async host->device copies it feeds.
+    kv_zeros: xla::Literal,
+    /// Host mirrors of the uploaded weights; the async host->device copy
+    /// holds raw pointers into these, so they live as long as the variant.
+    _weight_literals: Vec<xla::Literal>,
+}
+
+impl Variant {
+    pub fn exec(&self, tag: &str) -> Result<&LoadedExec> {
+        self.execs.get(tag).ok_or_else(|| {
+            anyhow!(
+                "variant {} has no executable {tag:?} loaded (have: {})",
+                self.spec.name,
+                self.execs.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    pub fn fresh_kv(&self, engine: &Engine) -> Result<xla::PjRtBuffer> {
+        engine.upload_literal(&self.kv_zeros)
+    }
+
+    /// Batched decode: one token per slot. Returns (logits [B*V], kv').
+    pub fn decode(
+        &self,
+        engine: &Engine,
+        tokens: &[i32],
+        pos: &[i32],
+        kv: &xla::PjRtBuffer,
+    ) -> Result<(Vec<f32>, xla::PjRtBuffer)> {
+        let exec = self.exec("decode")?;
+        let t = engine.upload_i32(tokens, &[tokens.len()])?;
+        let p = engine.upload_i32(pos, &[pos.len()])?;
+        let mut out = exec.run(&[&t, &p, kv])?;
+        let kv_new = out.pop().ok_or_else(|| anyhow!("missing kv output"))?;
+        let logits_buf = out.pop().ok_or_else(|| anyhow!("missing logits"))?;
+        let logits = buffer_to_f32(&logits_buf)?;
+        Ok((logits, kv_new))
+    }
+
+    /// Prefill one slot with a token chunk using bucket `bucket`.
+    /// `tokens` is padded to the bucket length by the caller.
+    pub fn prefill(
+        &self,
+        engine: &Engine,
+        bucket: usize,
+        tokens: &[i32],
+        kv: &xla::PjRtBuffer,
+        slot: i32,
+        pos0: i32,
+    ) -> Result<(Vec<f32>, xla::PjRtBuffer)> {
+        if tokens.len() != bucket {
+            bail!("prefill bucket {bucket} got {} tokens", tokens.len());
+        }
+        let exec = self.exec(&format!("prefill{bucket}"))?;
+        let t = engine.upload_i32(tokens, &[bucket])?;
+        let s = engine.upload_i32_scalar(slot)?;
+        let p0 = engine.upload_i32_scalar(pos0)?;
+        let mut out = exec.run(&[&t, kv, &s, &p0])?;
+        let kv_new = out.pop().ok_or_else(|| anyhow!("missing kv output"))?;
+        let logits_buf = out.pop().ok_or_else(|| anyhow!("missing logits"))?;
+        let logits = buffer_to_f32(&logits_buf)?;
+        Ok((logits, kv_new))
+    }
+}
+
+/// Copy a device buffer's f32 contents to the host.
+pub fn buffer_to_f32(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    let lit = buf
+        .to_literal_sync()
+        .map_err(|e| anyhow!("buffer to literal: {e}"))?;
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to vec: {e}"))
+}
+
+/// Copy a device buffer's i32 contents to the host.
+pub fn buffer_to_i32(buf: &xla::PjRtBuffer) -> Result<Vec<i32>> {
+    let lit = buf
+        .to_literal_sync()
+        .map_err(|e| anyhow!("buffer to literal: {e}"))?;
+    lit.to_vec::<i32>().map_err(|e| anyhow!("literal to vec: {e}"))
+}

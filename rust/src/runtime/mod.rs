@@ -1,0 +1,7 @@
+//! The PJRT runtime: loads AOT artifacts (HLO text + weights) and executes
+//! them with device-resident state. Python never runs here.
+
+pub mod engine;
+pub mod weights;
+
+pub use engine::{Engine, LoadedExec, Variant};

@@ -1,0 +1,133 @@
+//! `<variant>.weights.bin` reader: raw little-endian arrays addressed by
+//! the manifest's parameter table, uploaded once as device buffers.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{DType, ParamEntry, VariantSpec};
+
+/// The raw weight blob for one variant.
+pub struct WeightFile {
+    data: Vec<u8>,
+}
+
+impl WeightFile {
+    pub fn load(dir: &Path, variant: &VariantSpec) -> Result<WeightFile> {
+        let path = dir.join(&variant.weights_file);
+        let data = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        // Validate the table against the blob before anything touches it.
+        for p in &variant.params {
+            let elems: usize = p.shape.iter().product();
+            if elems * p.dtype.size() != p.nbytes {
+                bail!("param {} table inconsistent: shape {:?} x {}B != {}B",
+                      p.name, p.shape, p.dtype.size(), p.nbytes);
+            }
+            if p.offset + p.nbytes > data.len() {
+                bail!("param {} overruns weight file ({} + {} > {})",
+                      p.name, p.offset, p.nbytes, data.len());
+            }
+        }
+        Ok(WeightFile { data })
+    }
+
+    pub fn bytes(&self, p: &ParamEntry) -> &[u8] {
+        &self.data[p.offset..p.offset + p.nbytes]
+    }
+
+    pub fn f32_slice(&self, p: &ParamEntry) -> Result<Vec<f32>> {
+        if p.dtype != DType::F32 {
+            bail!("param {} is not f32", p.name);
+        }
+        let b = self.bytes(p);
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+pub fn xla_element_type(dt: DType) -> xla::ElementType {
+    match dt {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+        DType::I8 => xla::ElementType::S8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DType, ExecSpec, ParamEntry, VariantSpec};
+    use std::collections::BTreeMap;
+
+    fn spec(params: Vec<ParamEntry>) -> VariantSpec {
+        VariantSpec {
+            name: "t".into(),
+            ffn_mode: "dense".into(),
+            fix_capacity: 0,
+            compression_ratio: 0.0,
+            weights_file: "t.weights.bin".into(),
+            params,
+            executables: BTreeMap::<String, ExecSpec>::new(),
+        }
+    }
+
+    #[test]
+    fn reads_f32_params() {
+        let dir = std::env::temp_dir().join("tardis_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<f32> = vec![1.0, -2.5, 3.25, 0.0];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("t.weights.bin"), &bytes).unwrap();
+        let v = spec(vec![ParamEntry {
+            name: "w".into(),
+            dtype: DType::F32,
+            shape: vec![2, 2],
+            offset: 0,
+            nbytes: 16,
+        }]);
+        let wf = WeightFile::load(&dir, &v).unwrap();
+        assert_eq!(wf.f32_slice(&v.params[0]).unwrap(), vals);
+    }
+
+    #[test]
+    fn rejects_inconsistent_table() {
+        let dir = std::env::temp_dir().join("tardis_weights_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.weights.bin"), [0u8; 8]).unwrap();
+        // shape says 4 f32 = 16 bytes but nbytes says 8
+        let v = spec(vec![ParamEntry {
+            name: "w".into(),
+            dtype: DType::F32,
+            shape: vec![4],
+            offset: 0,
+            nbytes: 8,
+        }]);
+        assert!(WeightFile::load(&dir, &v).is_err());
+    }
+
+    #[test]
+    fn rejects_overrun() {
+        let dir = std::env::temp_dir().join("tardis_weights_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.weights.bin"), [0u8; 8]).unwrap();
+        let v = spec(vec![ParamEntry {
+            name: "w".into(),
+            dtype: DType::F32,
+            shape: vec![4],
+            offset: 4,
+            nbytes: 16,
+        }]);
+        assert!(WeightFile::load(&dir, &v).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Line-delimited-JSON TCP protocol + server plumbing.
+//!
+//! Request:  `{"op":"generate","prompt":"text","max_tokens":32,
+//!             "temperature":0.0,"variant":"tardis80"}`
+//! Response: `{"ok":true,"id":1,"text":"...","tokens":[...],
+//!             "reason":"length","total_ms":12.3}`
+//! Also: `{"op":"stats"}`, `{"op":"ping"}`.
+//!
+//! The server thread owns the engine (the PJRT buffers are not Sync);
+//! connection handlers forward requests over channels. Token encoding is
+//! byte-level (vocab 256), matching the python corpus module.
+
+pub mod protocol;
+pub mod tcp;
+
+pub use protocol::{parse_request, render_completion, render_error, ServerRequest};

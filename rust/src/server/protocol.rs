@@ -1,0 +1,164 @@
+//! Wire protocol: one JSON object per line, both directions.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::engine_loop::Completion;
+use crate::coordinator::request::{FinishReason, SamplingParams};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerRequest {
+    Generate {
+        prompt: Vec<i32>,
+        params: SamplingParams,
+        variant: Option<String>,
+    },
+    Stats,
+    Ping,
+}
+
+/// Byte-level tokenization (vocab = 256), mirroring python corpus.encode.
+pub fn encode_text(s: &str) -> Vec<i32> {
+    s.as_bytes().iter().map(|&b| b as i32).collect()
+}
+
+pub fn decode_tokens(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+pub fn parse_request(line: &str) -> Result<ServerRequest> {
+    let j = Json::parse(line.trim()).map_err(|e| anyhow!("bad json: {e}"))?;
+    let op = j
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing \"op\""))?;
+    match op {
+        "ping" => Ok(ServerRequest::Ping),
+        "stats" => Ok(ServerRequest::Stats),
+        "generate" => {
+            let prompt = match (j.get("prompt").and_then(Json::as_str),
+                                j.get("prompt_tokens").and_then(Json::as_arr)) {
+                (Some(text), _) => encode_text(text),
+                (None, Some(arr)) => arr
+                    .iter()
+                    .map(|v| {
+                        v.as_i64()
+                            .map(|x| x as i32)
+                            .ok_or_else(|| anyhow!("non-integer token"))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                _ => return Err(anyhow!("generate needs prompt or prompt_tokens")),
+            };
+            if prompt.is_empty() {
+                return Err(anyhow!("empty prompt"));
+            }
+            let params = SamplingParams {
+                temperature: j
+                    .get("temperature")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0) as f32,
+                top_k: j.get("top_k").and_then(Json::as_usize).unwrap_or(0),
+                max_tokens: j
+                    .get("max_tokens")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(32),
+                stop_token: j
+                    .get("stop_token")
+                    .and_then(Json::as_i64)
+                    .map(|v| v as i32),
+                seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+            };
+            let variant = j
+                .get("variant")
+                .and_then(Json::as_str)
+                .map(str::to_string);
+            Ok(ServerRequest::Generate { prompt, params, variant })
+        }
+        other => Err(anyhow!("unknown op {other:?}")),
+    }
+}
+
+fn reason_str(r: FinishReason) -> &'static str {
+    match r {
+        FinishReason::Length => "length",
+        FinishReason::Stop => "stop",
+        FinishReason::ContextOverflow => "context_overflow",
+        FinishReason::Cancelled => "cancelled",
+    }
+}
+
+pub fn render_completion(c: &Completion, variant: &str) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::num(c.id as f64)),
+        ("variant", Json::str(variant)),
+        ("text", Json::str(&decode_tokens(&c.tokens))),
+        ("tokens", Json::arr(c.tokens.iter().map(|&t| Json::num(t as f64)))),
+        ("reason", Json::str(reason_str(c.reason))),
+        ("first_token_ms", Json::num(c.first_token_ms)),
+        ("total_ms", Json::num(c.total_ms)),
+    ])
+    .render()
+}
+
+pub fn render_error(msg: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))]).render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generate_text() {
+        let r = parse_request(
+            r#"{"op":"generate","prompt":"hi","max_tokens":4,"temperature":0.5}"#,
+        )
+        .unwrap();
+        match r {
+            ServerRequest::Generate { prompt, params, variant } => {
+                assert_eq!(prompt, vec![104, 105]);
+                assert_eq!(params.max_tokens, 4);
+                assert!((params.temperature - 0.5).abs() < 1e-6);
+                assert!(variant.is_none());
+            }
+            _ => panic!("wrong request"),
+        }
+    }
+
+    #[test]
+    fn parses_generate_tokens_and_variant() {
+        let r = parse_request(
+            r#"{"op":"generate","prompt_tokens":[1,2,3],"variant":"tardis80"}"#,
+        )
+        .unwrap();
+        match r {
+            ServerRequest::Generate { prompt, variant, .. } => {
+                assert_eq!(prompt, vec![1, 2, 3]);
+                assert_eq!(variant.as_deref(), Some("tardis80"));
+            }
+            _ => panic!("wrong request"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"op":"nope"}"#).is_err());
+        assert!(parse_request(r#"{"op":"generate"}"#).is_err());
+        assert!(parse_request(r#"{"op":"generate","prompt":""}"#).is_err());
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let s = "the falcon folds";
+        assert_eq!(decode_tokens(&encode_text(s)), s);
+    }
+
+    #[test]
+    fn ping_and_stats() {
+        assert_eq!(parse_request(r#"{"op":"ping"}"#).unwrap(), ServerRequest::Ping);
+        assert_eq!(parse_request(r#"{"op":"stats"}"#).unwrap(), ServerRequest::Stats);
+    }
+}

@@ -1,0 +1,182 @@
+//! TCP front-end: accept loop on a worker pool, engine on its own thread.
+//!
+//! The engine thread multiplexes: it drains the inbound channel into the
+//! router (admission), steps the router, and dispatches completions back
+//! to the originating connection's channel. PJRT buffers never cross a
+//! thread boundary.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::model::StepModel;
+use crate::coordinator::router::Router;
+use crate::util::threadpool::ThreadPool;
+
+use super::protocol::{parse_request, render_completion, render_error,
+                      ServerRequest};
+
+enum ToEngine {
+    Generate {
+        line_req: ServerRequest,
+        reply: Sender<String>,
+    },
+    Shutdown,
+}
+
+/// Serve `router` on `addr` until `max_requests` generate calls complete
+/// (None = forever). Returns the number of requests served.
+pub fn serve<M: StepModel>(
+    mut router: Router<M>,
+    addr: &str,
+    max_requests: Option<usize>,
+) -> Result<usize> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    eprintln!("[server] listening on {local}");
+    let (tx, rx): (Sender<ToEngine>, Receiver<ToEngine>) = channel();
+
+    // Accept loop on the pool; engine loop on this thread.
+    let pool = ThreadPool::new(4);
+    let accept_tx = tx.clone();
+    let served_target = max_requests;
+    std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let tx = accept_tx.clone();
+            pool.execute(move || handle_conn(stream, tx));
+        }
+    });
+
+    let mut served = 0usize;
+    // ticket -> (reply channel, replica name)
+    let mut waiting: HashMap<(usize, u64), Sender<String>> = HashMap::new();
+    loop {
+        // Admit whatever has arrived.
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                ToEngine::Shutdown => return Ok(served),
+                ToEngine::Generate { line_req, reply } => {
+                    if let ServerRequest::Generate { prompt, params, variant } =
+                        line_req
+                    {
+                        match router.submit(variant.as_deref(), prompt, params) {
+                            Ok(t) => {
+                                waiting.insert((t.replica, t.request), reply);
+                            }
+                            Err(e) => {
+                                let _ = reply.send(render_error(&e.to_string()));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Make progress.
+        let busy = router.step_all()?;
+        for i in 0..router.n_replicas() {
+            let name = router.replica(i).name.clone();
+            for c in router.replica(i).engine.take_completions() {
+                if let Some(reply) = waiting.remove(&(i, c.id)) {
+                    let _ = reply.send(render_completion(&c, &name));
+                    served += 1;
+                }
+            }
+        }
+        if let Some(target) = served_target {
+            if served >= target {
+                return Ok(served);
+            }
+        }
+        if !busy && waiting.is_empty() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<ToEngine>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match parse_request(&line) {
+            Err(e) => render_error(&e.to_string()),
+            Ok(ServerRequest::Ping) => r#"{"ok":true,"pong":true}"#.to_string(),
+            Ok(ServerRequest::Stats) => r#"{"ok":true}"#.to_string(),
+            Ok(req @ ServerRequest::Generate { .. }) => {
+                let (reply_tx, reply_rx) = channel();
+                if tx
+                    .send(ToEngine::Generate { line_req: req, reply: reply_tx })
+                    .is_err()
+                {
+                    render_error("engine shut down")
+                } else {
+                    match reply_rx.recv_timeout(Duration::from_secs(120)) {
+                        Ok(r) => r,
+                        Err(_) => render_error("timeout"),
+                    }
+                }
+            }
+        };
+        if writer.write_all(response.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Minimal client for tests/examples: send one line, read one line.
+pub fn client_roundtrip(addr: &str, line: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut reader = BufReader::new(stream);
+    let mut response = String::new();
+    reader.read_line(&mut response)?;
+    Ok(response.trim().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+    use crate::coordinator::model::MockModel;
+
+    #[test]
+    fn serves_generate_over_tcp() {
+        let router = Router::new(vec![(
+            "mock".to_string(),
+            InferenceEngine::new(MockModel::new(2, 64, 256, vec![4, 8]),
+                                 EngineConfig::default()),
+        )]);
+        // Port 0 = ephemeral; learn the port via a pre-bound listener.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let addr2 = addr.clone();
+        let h = std::thread::spawn(move || serve(router, &addr2, Some(1)));
+        std::thread::sleep(Duration::from_millis(100));
+        let resp = client_roundtrip(
+            &addr,
+            r#"{"op":"generate","prompt":"ab","max_tokens":3}"#,
+        )
+        .unwrap();
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+        assert!(resp.contains("\"reason\":\"length\""), "{resp}");
+        let served = h.join().unwrap().unwrap();
+        assert_eq!(served, 1);
+    }
+}

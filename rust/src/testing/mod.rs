@@ -1,0 +1,106 @@
+//! Proptest-lite: seeded random-input property testing (the real proptest
+//! crate is not in the offline vendor set).
+//!
+//! ```no_run
+//! use tardis::testing::property;
+//! property("alloc never double-allocates", 200, |rng| {
+//!     // build random input from rng, assert the invariant, return
+//!     // Err(description) to fail.
+//!     Ok(())
+//! });
+//! ```
+//! On failure the seed of the failing case is printed so it can be
+//! replayed with `property_seeded`.
+
+use crate::util::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+/// Run `f` over `cases` independently-seeded random cases; panic with the
+/// failing seed + message on the first failure.
+pub fn property<F: FnMut(&mut Rng) -> PropResult>(name: &str, cases: u64, f: F) {
+    property_base(name, cases, 0xDEC0DE, f)
+}
+
+/// Replay a specific failing seed.
+pub fn property_seeded<F: FnMut(&mut Rng) -> PropResult>(
+    name: &str,
+    seed: u64,
+    mut f: F,
+) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property '{name}' failed at seed {seed:#x}: {msg}");
+    }
+}
+
+fn property_base<F: FnMut(&mut Rng) -> PropResult>(
+    name: &str,
+    cases: u64,
+    base_seed: u64,
+    mut f: F,
+) {
+    for case in 0..cases {
+        let seed = base_seed ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{cases} \
+                 (replay with property_seeded(_, {seed:#x}, _)): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("trivial", 50, |rng| {
+            count += 1;
+            let v = rng.below(10);
+            prop_assert!(v < 10, "v = {v}");
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        property("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn seeded_replay_is_deterministic() {
+        let mut first = None;
+        property_seeded("replay", 0x1234, |rng| {
+            first = Some(rng.next_u64());
+            Ok(())
+        });
+        let mut second = None;
+        property_seeded("replay", 0x1234, |rng| {
+            second = Some(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,154 @@
+//! Minimal argument parser (no `clap` in the offline vendor set).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with typed accessors and generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw argv (without the program name). `with_subcommand`
+    /// treats the first bare word as a subcommand.
+    pub fn parse<I, S>(argv: I, with_subcommand: bool) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().map(|s| s.into()).peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` ends flag parsing
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // value if the next token isn't a flag; else boolean
+                    match it.peek() {
+                        Some(nxt) if !nxt.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(stripped.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else if with_subcommand && out.subcommand.is_none()
+                && out.positional.is_empty()
+            {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(with_subcommand: bool) -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1), with_subcommand)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key} expects a number, got {v:?}"))),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.flags.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(args: &[&str]) -> Args {
+        Args::parse(args.iter().copied(), true).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = p(&["serve", "--port", "8080", "--verbose", "--name=x"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize("port", 0).unwrap(), 8080);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.str("name", ""), "x");
+    }
+
+    #[test]
+    fn positional_after_double_dash() {
+        let a = p(&["run", "--x", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = p(&["cmd"]);
+        assert_eq!(a.usize("missing", 7).unwrap(), 7);
+        assert_eq!(a.f64("missing", 1.5).unwrap(), 1.5);
+        assert!(!a.bool("missing"));
+        assert_eq!(a.list("ratios", &["a", "b"]), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = p(&["cmd", "--ratios", "50,70,80"]);
+        assert_eq!(a.list("ratios", &[]), vec!["50", "70", "80"]);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = p(&["cmd", "--n", "abc"]);
+        assert!(a.usize("n", 0).is_err());
+    }
+}

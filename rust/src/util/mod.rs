@@ -1,0 +1,7 @@
+//! std-only substrates: JSON, CLI parsing, RNG, statistics, thread pool.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,222 @@
+//! Latency/throughput statistics: streaming summaries and percentile
+//! estimation for the serving metrics and the bench harness.
+
+/// A simple reservoir of raw samples with summary queries. For the scales
+/// this repo benches (<= millions of samples) exact percentiles are fine.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.xs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, q in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.xs.len();
+        let rank = (q / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let w = rank - lo as f64;
+            self.xs[lo] * (1.0 - w) + self.xs[hi] * w
+        }
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.percentile(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.percentile(100.0)
+    }
+
+    pub fn summary(&mut self) -> Summary {
+        Summary {
+            n: self.len(),
+            mean: self.mean(),
+            stddev: self.stddev(),
+            min: self.min(),
+            p50: self.percentile(50.0),
+            p90: self.percentile(90.0),
+            p99: self.percentile(99.0),
+            max: self.max(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} mean={:.3} sd={:.3} min={:.3} p50={:.3} p90={:.3} p99={:.3} max={:.3}",
+            self.n, self.mean, self.stddev, self.min, self.p50, self.p90,
+            self.p99, self.max
+        )
+    }
+}
+
+/// Fixed-bucket histogram (log-spaced) for cheap streaming distributions.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// bucket i covers [base * 2^i, base * 2^(i+1))
+    base: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    total: u64,
+}
+
+impl LogHistogram {
+    pub fn new(base: f64, buckets: usize) -> Self {
+        assert!(base > 0.0 && buckets > 0);
+        LogHistogram { base, counts: vec![0; buckets], underflow: 0, total: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.base {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x / self.base).log2().floor() as usize)
+            .min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Upper bound of the bucket holding quantile q (conservative).
+    pub fn quantile_upper(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut seen = self.underflow;
+        if seen >= target {
+            return self.base;
+        }
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.base * 2f64.powi(i as i32 + 1);
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_percentiles() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+        assert!((s.percentile(99.0) - 99.01).abs() < 0.1);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut s = Samples::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn stddev_known() {
+        let mut s = Samples::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.stddev() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = LogHistogram::new(1.0, 20);
+        for i in 1..=1000 {
+            h.record(i as f64);
+        }
+        let q50 = h.quantile_upper(0.5);
+        assert!(q50 >= 500.0 && q50 <= 1024.0, "q50 {}", q50);
+        assert_eq!(h.total(), 1000);
+    }
+
+    #[test]
+    fn summary_display() {
+        let mut s = Samples::new();
+        s.push(1.0);
+        s.push(2.0);
+        let sum = s.summary();
+        assert_eq!(sum.n, 2);
+        assert!(format!("{}", sum).contains("n=2"));
+    }
+}
