@@ -5,7 +5,15 @@
 //! step (it must stay far below the model step time; see EXPERIMENTS.md
 //! §Perf).
 //!
+//! Also: a bursty-arrival workload that compares scheduling policies on
+//! time-to-first-token and decode occupancy — the seed's single-prefill
+//! FIFO baseline vs the StepPlan multi-prefill pipeline (FIFO and
+//! shortest-prompt-first). A mock model with a fixed per-call cost makes
+//! the numbers wall-clock-meaningful without PJRT artifacts.
+//!
 //! Run: `cargo bench --bench coordinator`.
+
+use std::time::Duration;
 
 use tardis::bench::{black_box, Bench};
 use tardis::coordinator::batcher::Batcher;
@@ -14,8 +22,72 @@ use tardis::coordinator::kv::SlotAllocator;
 use tardis::coordinator::model::MockModel;
 use tardis::coordinator::request::SamplingParams;
 use tardis::coordinator::sampler::sample;
+use tardis::coordinator::scheduler::{PolicyKind, SchedulerConfig};
 use tardis::server::protocol::{parse_request, render_error};
 use tardis::util::rng::Rng;
+use tardis::util::stats::Samples;
+
+const BURSTS: usize = 4;
+const BURST_SIZE: usize = 8;
+/// Wall-clock spacing between bursts: arrival times are identical across
+/// scheduler configs (pacing by iteration count would hand configs that
+/// do more work per iteration a different offered load).
+const BURST_GAP: Duration = Duration::from_millis(10);
+
+/// Deterministic mixed-length prompt set: roughly half short prompts
+/// (single chunk) and half long multi-chunk prompts — the regime where
+/// single-prefill FIFO serializes short prompts behind long ones.
+fn bursty_prompts() -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(0x7A2D15);
+    (0..BURSTS * BURST_SIZE)
+        .map(|_| {
+            let len = if rng.bool(0.5) {
+                4 + rng.usize_below(10)
+            } else {
+                100 + rng.usize_below(60)
+            };
+            (0..len).map(|i| 1 + (i % 200) as i32).collect()
+        })
+        .collect()
+}
+
+/// Drive one engine through the bursty arrival schedule; returns
+/// (mean TTFT ms, p95 TTFT ms, mean decode occupancy).
+fn run_bursty(cfg: EngineConfig) -> (f64, f64, f64) {
+    let mut model = MockModel::new(8, 512, 256, vec![16, 64]);
+    model.spin_per_call = Duration::from_micros(150);
+    let mut ie = InferenceEngine::new(model, cfg);
+    let prompts = bursty_prompts();
+    let mut next = 0usize;
+    let t0 = std::time::Instant::now();
+    while next < prompts.len() || !ie.is_idle() {
+        // Burst b (all BURST_SIZE requests at once) arrives at t0 + b*gap.
+        while next < prompts.len()
+            && t0.elapsed() >= BURST_GAP * (next / BURST_SIZE) as u32
+        {
+            ie.submit(
+                prompts[next].clone(),
+                SamplingParams { max_tokens: 24, ..Default::default() },
+            )
+            .unwrap();
+            next += 1;
+        }
+        if ie.is_idle() {
+            // Drained before the next burst is due: idle-wait instead of
+            // spinning through no-op iterations.
+            std::thread::sleep(Duration::from_micros(100));
+            continue;
+        }
+        ie.step().unwrap();
+    }
+    let done = ie.take_completions();
+    assert_eq!(done.len(), BURSTS * BURST_SIZE);
+    let mut ttft = Samples::new();
+    for c in &done {
+        ttft.push(c.first_token_ms);
+    }
+    (ttft.mean(), ttft.percentile(95.0), ie.stats.mean_occupancy())
+}
 
 fn main() {
     let mut b = Bench::new("coordinator");
@@ -82,4 +154,54 @@ fn main() {
     });
 
     b.report();
+
+    // -- bursty arrivals: scheduling policy comparison ---------------------
+    // Not a Bench::run case (each config is one long deterministic run,
+    // not a tight loop): the table is the result. The seed baseline is
+    // SchedulerConfig::single_prefill() — one prefill job in flight, one
+    // chunk per iteration, FIFO admission.
+    println!();
+    println!(
+        "bursty arrivals — {} requests in {} bursts {}ms apart (≈half \
+         4-13 tok prompts, half 100-159 tok), 24 generated tokens each, \
+         150µs/model-call mock:",
+        BURSTS * BURST_SIZE,
+        BURSTS,
+        BURST_GAP.as_millis()
+    );
+    let cases: Vec<(&str, EngineConfig)> = vec![
+        (
+            "seed fifo (1 prefill)",
+            EngineConfig {
+                scheduler: SchedulerConfig::single_prefill(),
+                ..Default::default()
+            },
+        ),
+        ("stepplan fifo (2 prefill)", EngineConfig::default()),
+        (
+            "stepplan spf (2 prefill)",
+            EngineConfig {
+                scheduler: SchedulerConfig::with_policy(
+                    PolicyKind::ShortestPromptFirst,
+                ),
+                ..Default::default()
+            },
+        ),
+    ];
+    println!("  {:28} {:>14} {:>13} {:>11}",
+             "config", "ttft mean ms", "ttft p95 ms", "occupancy");
+    let mut rows = Vec::new();
+    for (name, cfg) in cases {
+        let (mean, p95, occ) = run_bursty(cfg);
+        println!("  {name:28} {mean:>14.2} {p95:>13.2} {occ:>11.2}");
+        rows.push((name, mean, occ));
+    }
+    let (_, seed_ttft, seed_occ) = rows[0];
+    for (name, mean, occ) in rows.iter().skip(1) {
+        println!(
+            "  {name}: ttft {:+.1}% occupancy {:+.1}% vs seed baseline",
+            (mean / seed_ttft - 1.0) * 100.0,
+            (occ / seed_occ - 1.0) * 100.0
+        );
+    }
 }

@@ -1,17 +1,21 @@
-//! The serving engine: queue → scheduler → step-model → sampler, one
-//! iteration at a time (so callers — CLI, server, benches — control
+//! The serving engine: queue → scheduler plan → step-model → sampler,
+//! one iteration at a time (so callers — CLI, server, benches — control
 //! pacing and can interleave with I/O).
 //!
 //! This is the "vLLM-like" runtime of Fig 13: continuous batching with
-//! slot-level admission. The "HF-like" sequential baseline is
+//! slot-level admission, driven by the [`StepPlan`] a pluggable
+//! [`crate::coordinator::scheduler::SchedulerPolicy`] emits each
+//! iteration. Several prefill jobs ride in flight concurrently (the
+//! [`PrefillSet`]), so one long prompt no longer serializes every prompt
+//! behind it. The "HF-like" sequential baseline is
 //! [`InferenceEngine::generate_sequential`], which runs one request at a
 //! time with batch occupancy 1 — the difference between the two is the
 //! serving-system contribution the paper piggybacks on.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::util::rng::Rng;
 use crate::util::stats::Samples;
@@ -23,17 +27,22 @@ use super::queue::{AdmissionQueue, QueueFull};
 use super::request::{FinishReason, Request, RequestId, RequestState,
                      SamplingParams};
 use super::sampler::sample;
-use super::scheduler::{Action, Scheduler, SchedulerPolicy};
+use super::scheduler::{Admission, ChunkSpec, DecodeBatch, PrefillView,
+                       QueuedRequest, SchedView, Scheduler, SchedulerConfig,
+                       StepOutcome, StepPlan};
 
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub queue_capacity: usize,
-    pub scheduler: SchedulerPolicy,
+    pub scheduler: SchedulerConfig,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { queue_capacity: 64, scheduler: SchedulerPolicy::default() }
+        EngineConfig {
+            queue_capacity: 64,
+            scheduler: SchedulerConfig::default(),
+        }
     }
 }
 
@@ -43,18 +52,39 @@ pub struct EngineStats {
     pub decode_steps: u64,
     pub prefill_chunks: u64,
     pub tokens_generated: u64,
+    pub admitted: u64,
     pub finished: u64,
-    /// decode-batch occupancy per decode step (continuous-batching win)
-    pub occupancy: Vec<usize>,
+    /// Summed decode-batch occupancy over all decode steps (streaming —
+    /// a long-running server's stats stay O(1) in time and space; the
+    /// continuous-batching win is the mean, `occupancy_sum/decode_steps`)
+    pub occupancy_sum: u64,
+    /// High-water mark of concurrently in-flight prefill jobs.
+    pub max_concurrent_prefills: usize,
 }
 
 impl EngineStats {
     pub fn mean_occupancy(&self) -> f64 {
-        if self.occupancy.is_empty() {
+        if self.decode_steps == 0 {
             return 0.0;
         }
-        self.occupancy.iter().sum::<usize>() as f64 / self.occupancy.len() as f64
+        self.occupancy_sum as f64 / self.decode_steps as f64
     }
+}
+
+/// Point-in-time engine state for the server's `stats` op and for tests.
+#[derive(Debug, Clone)]
+pub struct EngineSnapshot {
+    pub policy: &'static str,
+    pub queue_depth: usize,
+    pub queue_pressure: f64,
+    pub active_slots: usize,
+    pub inflight_prefills: usize,
+    pub slots_total: usize,
+    pub mean_occupancy: f64,
+    pub tokens_generated: u64,
+    pub admitted: u64,
+    pub finished: u64,
+    pub iterations: u64,
 }
 
 /// A finished request handed back to the caller.
@@ -64,6 +94,9 @@ pub struct Completion {
     pub prompt: Vec<i32>,
     pub tokens: Vec<i32>,
     pub reason: FinishReason,
+    /// Time spent waiting in the admission queue (enqueue → slot
+    /// admission). Distinct from `first_token_ms`, which also includes
+    /// the prefill itself.
     pub queue_ms: f64,
     pub first_token_ms: f64,
     pub total_ms: f64,
@@ -77,6 +110,47 @@ struct PrefillJob {
     next: usize,
 }
 
+/// The concurrently in-flight prefill jobs, keyed by KV slot (sorted, so
+/// every traversal is deterministic). Replaces the seed's single
+/// `Option<PrefillJob>` — the scheduler may interleave chunks of several
+/// prompts.
+#[derive(Default)]
+pub struct PrefillSet {
+    jobs: BTreeMap<usize, PrefillJob>,
+}
+
+impl PrefillSet {
+    fn insert(&mut self, job: PrefillJob) {
+        debug_assert!(!self.jobs.contains_key(&job.slot),
+                      "slot {} already prefilling", job.slot);
+        self.jobs.insert(job.slot, job);
+    }
+
+    fn remove(&mut self, slot: usize) -> Option<PrefillJob> {
+        self.jobs.remove(&slot)
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Scheduler-facing view, slot-sorted.
+    fn views(&self) -> Vec<PrefillView> {
+        self.jobs
+            .values()
+            .map(|j| PrefillView {
+                request: j.req.id,
+                slot: j.slot,
+                remaining: j.req.prompt.len() - j.next,
+            })
+            .collect()
+    }
+}
+
 pub struct InferenceEngine<M: StepModel> {
     pub model: M,
     cfg: EngineConfig,
@@ -86,9 +160,8 @@ pub struct InferenceEngine<M: StepModel> {
     scheduler: Scheduler,
     /// requests currently decoding, by slot
     active: HashMap<usize, Request>,
-    /// at most one multi-chunk prefill in flight (matches the exported
-    /// batch-1 prefill executables)
-    prefilling: Option<PrefillJob>,
+    /// concurrently in-flight multi-chunk prefills, by slot
+    prefilling: PrefillSet,
     completions: VecDeque<Completion>,
     next_id: RequestId,
     rngs: HashMap<RequestId, Rng>,
@@ -106,7 +179,7 @@ impl<M: StepModel> InferenceEngine<M> {
             batcher: Batcher::new(batch, max_seq),
             scheduler: Scheduler::new(cfg.scheduler.clone()),
             active: HashMap::new(),
-            prefilling: None,
+            prefilling: PrefillSet::default(),
             completions: VecDeque::new(),
             next_id: 1,
             rngs: HashMap::new(),
@@ -119,6 +192,22 @@ impl<M: StepModel> InferenceEngine<M> {
 
     pub fn queue_pressure(&self) -> f64 {
         self.queue.pressure()
+    }
+
+    pub fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            policy: self.scheduler.policy_name(),
+            queue_depth: self.queue.len(),
+            queue_pressure: self.queue.pressure(),
+            active_slots: self.active.len(),
+            inflight_prefills: self.prefilling.len(),
+            slots_total: self.slots.capacity(),
+            mean_occupancy: self.stats.mean_occupancy(),
+            tokens_generated: self.stats.tokens_generated,
+            admitted: self.stats.admitted,
+            finished: self.stats.finished,
+            iterations: self.stats.iterations,
+        }
     }
 
     /// Submit a request; fails with backpressure when the queue is full.
@@ -144,24 +233,16 @@ impl<M: StepModel> InferenceEngine<M> {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.active.is_empty() && self.prefilling.is_none()
+        self.queue.is_empty() && self.active.is_empty()
+            && self.prefilling.is_empty()
     }
 
-    /// Run one scheduler iteration. Returns the action taken.
-    pub fn step(&mut self) -> Result<Action> {
+    /// Run one scheduler iteration: build a [`StepPlan`] from the current
+    /// state and execute it. Returns what the plan actually did.
+    pub fn step(&mut self) -> Result<StepOutcome> {
         self.stats.iterations += 1;
-        let action = self.scheduler.decide(
-            self.queue.len(),
-            self.active.len(),
-            self.slots.available(),
-            self.prefilling.is_some(),
-        );
-        match action {
-            Action::Idle => {}
-            Action::Prefill => self.do_prefill_chunk()?,
-            Action::Decode => self.do_decode_step()?,
-        }
-        Ok(action)
+        let plan = self.make_plan();
+        self.execute_plan(plan)
     }
 
     /// Drive until every submitted request has finished.
@@ -174,22 +255,96 @@ impl<M: StepModel> InferenceEngine<M> {
 
     // -- internals ----------------------------------------------------------
 
-    fn do_prefill_chunk(&mut self) -> Result<()> {
-        if self.prefilling.is_none() {
-            // Admit the queue head into a fresh slot.
-            let mut req = self
-                .queue
-                .pop()
-                .ok_or_else(|| anyhow!("scheduler bug: prefill with empty queue"))?;
-            let slot = self
-                .slots
-                .alloc()
-                .ok_or_else(|| anyhow!("scheduler bug: prefill with no free slot"))?;
-            req.state = RequestState::Prefilling { slot, next: 0 };
-            self.rngs.insert(req.id, Rng::new(req.params.seed ^ req.id));
-            self.prefilling = Some(PrefillJob { req, slot, next: 0 });
+    fn make_plan(&mut self) -> StepPlan {
+        let free_slots = self.slots.free_slots();
+        // Snapshotting (and policy-ranking) the queue is only worth it
+        // when an admission could actually happen this iteration; under
+        // a deep backlog with full slots this keeps the per-step cost
+        // independent of queue depth.
+        let concurrency =
+            self.scheduler.config().max_concurrent_prefills.max(1);
+        let admissible =
+            !free_slots.is_empty() && self.prefilling.len() < concurrency;
+        let queued: Vec<QueuedRequest> = if admissible {
+            self.queue
+                .iter()
+                .enumerate()
+                .map(|(arrival, r)| QueuedRequest {
+                    id: r.id,
+                    prompt_len: r.prompt.len(),
+                    priority: r.params.priority,
+                    arrival,
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let inflight = self.prefilling.views();
+        let active_slots = self.batcher.active_slots();
+        let view = SchedView {
+            queued: &queued,
+            free_slots: &free_slots,
+            inflight: &inflight,
+            active_slots: &active_slots,
+        };
+        self.scheduler.plan(&view)
+    }
+
+    fn execute_plan(&mut self, plan: StepPlan) -> Result<StepOutcome> {
+        let outcome = StepOutcome {
+            admitted: plan.admissions.len(),
+            prefill_chunks: plan.prefill_chunks.len(),
+            decoded_slots: plan
+                .decode
+                .as_ref()
+                .map(|d| d.slots.len())
+                .unwrap_or(0),
+        };
+        self.model.plan_begin(&plan);
+        for adm in &plan.admissions {
+            self.admit(adm)?;
         }
-        let mut job = self.prefilling.take().expect("prefill job");
+        self.stats.max_concurrent_prefills = self
+            .stats
+            .max_concurrent_prefills
+            .max(self.prefilling.len());
+        for chunk in &plan.prefill_chunks {
+            self.run_prefill_chunk(chunk)?;
+        }
+        if let Some(batch) = &plan.decode {
+            self.do_decode_step(batch)?;
+        }
+        self.model.plan_end(&outcome);
+        Ok(outcome)
+    }
+
+    /// Move a queued request into the KV slot the plan assigned it.
+    fn admit(&mut self, adm: &Admission) -> Result<()> {
+        let mut req = self.queue.take(adm.request).ok_or_else(|| {
+            anyhow!("scheduler bug: admission of unqueued request {}",
+                    adm.request)
+        })?;
+        ensure!(self.slots.claim(adm.slot),
+                "scheduler bug: admission into unavailable slot {}", adm.slot);
+        req.state = RequestState::Prefilling { slot: adm.slot, next: 0 };
+        req.admitted_at = Some(Instant::now());
+        self.rngs.insert(req.id, Rng::new(req.params.seed ^ req.id));
+        self.stats.admitted += 1;
+        self.prefilling
+            .insert(PrefillJob { req, slot: adm.slot, next: 0 });
+        Ok(())
+    }
+
+    /// Run one prompt chunk for the prefill job in `spec.slot`; on the
+    /// final chunk, sample the first token and hand the request to the
+    /// decode batcher.
+    fn run_prefill_chunk(&mut self, spec: &ChunkSpec) -> Result<()> {
+        let mut job = self.prefilling.remove(spec.slot).ok_or_else(|| {
+            anyhow!("scheduler bug: prefill chunk for idle slot {}", spec.slot)
+        })?;
+        ensure!(job.req.id == spec.request,
+                "scheduler bug: slot {} runs request {} not {}",
+                spec.slot, job.req.id, spec.request);
         let prompt = &job.req.prompt;
         let remaining = prompt.len() - job.next;
         let bucket = self.model.bucket_for(remaining);
@@ -200,9 +355,10 @@ impl<M: StepModel> InferenceEngine<M> {
             self.model.prefill(bucket, &chunk, take, job.slot, job.next)?;
         self.stats.prefill_chunks += 1;
         job.next += take;
-        if job.next < prompt.len() {
-            job.req.state = RequestState::Prefilling { slot: job.slot, next: job.next };
-            self.prefilling = Some(job);
+        if job.next < job.req.prompt.len() {
+            job.req.state =
+                RequestState::Prefilling { slot: job.slot, next: job.next };
+            self.prefilling.insert(job);
             return Ok(());
         }
         // Prompt complete: sample the first generated token from the
@@ -222,17 +378,22 @@ impl<M: StepModel> InferenceEngine<M> {
         Ok(())
     }
 
-    fn do_decode_step(&mut self) -> Result<()> {
+    fn do_decode_step(&mut self, batch: &DecodeBatch) -> Result<()> {
         let (tokens, pos) = self.batcher.decode_inputs();
         let t0 = Instant::now();
         let logits = self.model.decode(&tokens, &pos)?;
         self.decode_latency_ms.push(t0.elapsed().as_secs_f64() * 1e3);
         self.stats.decode_steps += 1;
-        self.stats.occupancy.push(self.active.len());
+        self.stats.occupancy_sum += batch.slots.len() as u64;
         let vocab = self.model.vocab();
-        let slots: Vec<usize> = self.active.keys().copied().collect();
-        for slot in slots {
-            let req = self.active.get_mut(&slot).expect("active req");
+        // The plan's slot list is sorted: sampling order (and therefore
+        // per-request RNG consumption) is deterministic, not HashMap
+        // iteration order.
+        for &slot in &batch.slots {
+            let Some(req) = self.active.get_mut(&slot) else {
+                return Err(anyhow!(
+                    "scheduler bug: decode batch names idle slot {slot}"));
+            };
             let row = &logits[slot * vocab..(slot + 1) * vocab];
             let rng = self.rngs.get_mut(&req.id).expect("rng");
             let tok = sample(row, &req.params, rng);
@@ -256,19 +417,15 @@ impl<M: StepModel> InferenceEngine<M> {
         self.slots.release(slot);
         self.rngs.remove(&req.id);
         self.stats.finished += 1;
-        let now = Instant::now();
         self.completions.push_back(Completion {
             id: req.id,
             prompt: req.prompt.clone(),
             tokens: req.generated.clone(),
             reason,
-            queue_ms: 0.0f64.max(
-                req.first_token_at
-                    .unwrap_or(now)
-                    .duration_since(req.enqueued_at)
-                    .as_secs_f64()
-                    * 1e3,
-            ),
+            queue_ms: req
+                .admitted_at
+                .map(|t| t.duration_since(req.enqueued_at).as_secs_f64() * 1e3)
+                .unwrap_or(f64::NAN),
             first_token_ms: req
                 .first_token_at
                 .map(|t| t.duration_since(req.enqueued_at).as_secs_f64() * 1e3)
@@ -301,6 +458,7 @@ impl<M: StepModel> InferenceEngine<M> {
 mod tests {
     use super::*;
     use crate::coordinator::model::MockModel;
+    use crate::coordinator::scheduler::PolicyKind;
 
     fn engine(batch: usize) -> InferenceEngine<MockModel> {
         InferenceEngine::new(MockModel::new(batch, 64, 16, vec![4, 8]),
@@ -426,5 +584,79 @@ mod tests {
         let done = e2.run_to_completion().unwrap();
         let c2 = done.iter().find(|c| c.id == id).unwrap();
         assert_eq!(c1.tokens, c2.tokens, "batching must not change outputs");
+    }
+
+    #[test]
+    fn queue_ms_measures_admission_not_first_token() {
+        // One slow-prefill request hogs the engine while a second waits
+        // in the queue: its queue_ms must be <= first_token_ms, and both
+        // must be finite.
+        let mut model = MockModel::new(1, 64, 16, vec![4]);
+        model.spin_per_call = std::time::Duration::from_millis(2);
+        let mut e = InferenceEngine::new(model, EngineConfig::default());
+        e.submit(vec![1; 12],
+                 SamplingParams { max_tokens: 2, ..Default::default() })
+            .unwrap();
+        e.submit(vec![2; 12],
+                 SamplingParams { max_tokens: 2, ..Default::default() })
+            .unwrap();
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        for c in &done {
+            assert!(c.queue_ms.is_finite(), "queue_ms {}", c.queue_ms);
+            assert!(c.first_token_ms.is_finite());
+            assert!(c.queue_ms <= c.first_token_ms + 1e-9,
+                    "queue {} > first token {}", c.queue_ms, c.first_token_ms);
+        }
+        // The second request waited for the first's 3-chunk prefill and
+        // 2 decode steps (batch=1 serializes): its prefill alone takes
+        // ~3 spins, so queue time must be clearly below first-token time.
+        let second = done.iter().find(|c| c.prompt[0] == 2).unwrap();
+        assert!(second.first_token_ms > second.queue_ms,
+                "first token {} should exceed queue {}",
+                second.first_token_ms, second.queue_ms);
+    }
+
+    #[test]
+    fn snapshot_reports_live_state() {
+        let mut e = engine(2);
+        for i in 0..4 {
+            e.submit(vec![1 + i, 2, 3],
+                     SamplingParams { max_tokens: 4, ..Default::default() })
+                .unwrap();
+        }
+        let s = e.snapshot();
+        assert_eq!(s.queue_depth, 4);
+        assert_eq!(s.policy, "fifo");
+        assert_eq!(s.slots_total, 2);
+        assert_eq!(s.active_slots, 0);
+        e.run_to_completion().unwrap();
+        let s = e.snapshot();
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.finished, 4);
+        assert!(s.tokens_generated >= 16);
+    }
+
+    #[test]
+    fn non_fifo_policy_selected_via_config() {
+        let mut cfg = EngineConfig::default();
+        cfg.scheduler.policy = PolicyKind::ShortestPromptFirst;
+        cfg.scheduler.max_concurrent_prefills = 1; // serialize admissions
+        cfg.scheduler.chunk_budget = 1;
+        let model = MockModel::new(1, 64, 16, vec![4]);
+        let mut e = InferenceEngine::new(model, cfg);
+        // Long prompt first, short prompt second: SPF admits the short
+        // one first, so it finishes first despite arriving later.
+        let long = e
+            .submit(vec![1; 20],
+                    SamplingParams { max_tokens: 1, ..Default::default() })
+            .unwrap();
+        let short = e
+            .submit(vec![2, 3],
+                    SamplingParams { max_tokens: 1, ..Default::default() })
+            .unwrap();
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(done[0].id, short);
+        assert_eq!(done[1].id, long);
     }
 }

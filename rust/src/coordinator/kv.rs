@@ -42,6 +42,31 @@ impl SlotAllocator {
         Some(slot)
     }
 
+    /// Free slots in ascending order — the scheduler plans admissions
+    /// against this deterministic snapshot.
+    pub fn free_slots(&self) -> Vec<usize> {
+        let mut v = self.free.clone();
+        v.sort_unstable();
+        v
+    }
+
+    /// Claim the specific slot a [`crate::coordinator::scheduler::StepPlan`]
+    /// assigned. Returns false if the slot is out of range or already in
+    /// use (a scheduler bug the engine turns into an error).
+    pub fn claim(&mut self, slot: usize) -> bool {
+        if slot >= self.n || self.in_use[slot] {
+            return false;
+        }
+        let idx = self
+            .free
+            .iter()
+            .position(|&s| s == slot)
+            .expect("free list inconsistent with in_use");
+        self.free.swap_remove(idx);
+        self.in_use[slot] = true;
+        true
+    }
+
     pub fn release(&mut self, slot: usize) {
         assert!(slot < self.n, "slot {slot} out of range");
         assert!(self.in_use[slot], "double free of slot {slot}");
@@ -73,6 +98,26 @@ mod tests {
         assert_eq!(a.alloc(), None);
         a.release(s1);
         assert_eq!(a.alloc(), Some(s1));
+    }
+
+    #[test]
+    fn claim_specific_slots() {
+        let mut a = SlotAllocator::new(4);
+        assert_eq!(a.free_slots(), vec![0, 1, 2, 3]);
+        assert!(a.claim(2));
+        assert!(!a.claim(2), "double claim must fail");
+        assert!(!a.claim(9), "out of range must fail");
+        assert_eq!(a.free_slots(), vec![0, 1, 3]);
+        assert!(a.is_in_use(2));
+        // alloc never hands out a claimed slot
+        let mut handed = Vec::new();
+        while let Some(s) = a.alloc() {
+            handed.push(s);
+        }
+        handed.sort_unstable();
+        assert_eq!(handed, vec![0, 1, 3]);
+        a.release(2);
+        assert_eq!(a.free_slots(), vec![2]);
     }
 
     #[test]

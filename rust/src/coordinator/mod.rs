@@ -7,9 +7,13 @@
 //! * [`queue`]       — bounded admission queue with backpressure
 //! * [`kv`]          — KV slot allocator over the fixed decode batch
 //! * [`batcher`]     — continuous batching of decode steps
-//! * [`scheduler`]   — iteration-level prefill/decode interleaving
+//! * [`scheduler`]   — per-iteration [`scheduler::StepPlan`] assembly:
+//!   a pluggable [`scheduler::SchedulerPolicy`] ranks admissions, the
+//!   policy-independent driver interleaves concurrent prefills with
+//!   decode under a starvation guard
 //! * [`sampler`]     — greedy / temperature / top-k token sampling
-//! * [`engine_loop`] — ties the above into a serving engine
+//! * [`engine_loop`] — executes the plans: multi-prefill [`engine_loop::PrefillSet`],
+//!   decode batching, accounting
 //! * [`router`]      — routes requests across variants/replicas
 
 pub mod batcher;
@@ -22,6 +26,11 @@ pub mod router;
 pub mod sampler;
 pub mod scheduler;
 
-pub use engine_loop::{EngineConfig, EngineStats, InferenceEngine};
-pub use model::{MockModel, PjrtModel, StepModel};
+pub use engine_loop::{EngineConfig, EngineSnapshot, EngineStats,
+                      InferenceEngine};
+pub use model::{MockModel, StepModel};
+#[cfg(feature = "pjrt")]
+pub use model::PjrtModel;
 pub use request::{FinishReason, Request, RequestId, SamplingParams};
+pub use scheduler::{PolicyKind, SchedulerConfig, SchedulerPolicy, StepOutcome,
+                    StepPlan};

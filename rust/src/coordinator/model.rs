@@ -1,12 +1,16 @@
 //! The step-model abstraction the coordinator schedules against.
 //!
-//! `PjrtModel` wraps a loaded [`crate::runtime::Variant`] and owns the
-//! device-resident KV cache, threading it through prefill/decode calls.
-//! `MockModel` is a deterministic pure-rust stand-in so every coordinator
-//! test and bench runs without artifacts.
+//! `PjrtModel` (behind the `pjrt` feature) wraps a loaded
+//! [`crate::runtime::Variant`] and owns the device-resident KV cache,
+//! threading it through prefill/decode calls. `MockModel` is a
+//! deterministic pure-rust stand-in so every coordinator test and bench
+//! runs without artifacts.
 
 use anyhow::Result;
 
+use super::scheduler::{StepOutcome, StepPlan};
+
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Variant};
 
 pub trait StepModel {
@@ -16,6 +20,15 @@ pub trait StepModel {
     fn vocab(&self) -> usize;
     /// Ascending prefill chunk sizes the model was exported with.
     fn prefill_buckets(&self) -> &[usize];
+
+    /// Plan-level hook: called once per engine iteration with the
+    /// [`StepPlan`] about to execute, before any prefill/decode dispatch.
+    /// Backends can stage uploads for the whole iteration or record
+    /// scheduling telemetry. Default: no-op.
+    fn plan_begin(&mut self, _plan: &StepPlan) {}
+
+    /// Plan-level hook: called after the plan's work has executed.
+    fn plan_end(&mut self, _outcome: &StepOutcome) {}
 
     /// Prefill `tokens` (padded to `bucket`; the first `real_len` are
     /// real) into `slot` starting at absolute position `pos0`. Returns
@@ -43,6 +56,7 @@ pub trait StepModel {
 // PJRT-backed model.
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "pjrt")]
 pub struct PjrtModel<'e> {
     engine: &'e Engine,
     variant: Variant,
@@ -53,8 +67,13 @@ pub struct PjrtModel<'e> {
     buckets: Vec<usize>,
     pub decode_steps: u64,
     pub prefill_chunks: u64,
+    /// Plan-hook telemetry: iterations seen, and how many planned >1
+    /// concurrent prefill chunk (multi-prefill actually exercised).
+    pub plans_seen: u64,
+    pub multi_prefill_plans: u64,
 }
 
+#[cfg(feature = "pjrt")]
 impl<'e> PjrtModel<'e> {
     pub fn new(engine: &'e Engine, variant: Variant, batch: usize,
                max_seq: usize, vocab: usize, buckets: Vec<usize>)
@@ -70,6 +89,8 @@ impl<'e> PjrtModel<'e> {
             buckets,
             decode_steps: 0,
             prefill_chunks: 0,
+            plans_seen: 0,
+            multi_prefill_plans: 0,
         })
     }
 
@@ -88,6 +109,7 @@ impl<'e> PjrtModel<'e> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl<'e> StepModel for PjrtModel<'e> {
     fn batch(&self) -> usize {
         self.batch
@@ -103,6 +125,13 @@ impl<'e> StepModel for PjrtModel<'e> {
 
     fn prefill_buckets(&self) -> &[usize] {
         &self.buckets
+    }
+
+    fn plan_begin(&mut self, plan: &StepPlan) {
+        self.plans_seen += 1;
+        if plan.prefill_chunks.len() > 1 {
+            self.multi_prefill_plans += 1;
+        }
     }
 
     fn prefill(&mut self, bucket: usize, tokens: &[i32], real_len: usize,
@@ -146,6 +175,13 @@ pub struct MockModel {
     state: Vec<Option<(i32, usize)>>,
     pub decode_steps: u64,
     pub prefill_chunks: u64,
+    /// Every prefill call as (slot, pos0): scheduler tests assert that
+    /// chunks of concurrent prompts genuinely interleave.
+    pub prefill_log: Vec<(usize, usize)>,
+    /// Plan-hook telemetry (see [`StepModel::plan_begin`]).
+    pub plans_seen: u64,
+    pub max_planned_prefills: usize,
+    pub plan_ends_seen: u64,
     /// artificial per-call cost knob for scheduler benches
     pub spin_per_call: std::time::Duration,
 }
@@ -161,6 +197,10 @@ impl MockModel {
             state: vec![None; batch],
             decode_steps: 0,
             prefill_chunks: 0,
+            prefill_log: Vec::new(),
+            plans_seen: 0,
+            max_planned_prefills: 0,
+            plan_ends_seen: 0,
             spin_per_call: std::time::Duration::ZERO,
         }
     }
@@ -195,6 +235,22 @@ impl StepModel for MockModel {
         &self.buckets
     }
 
+    fn plan_begin(&mut self, plan: &StepPlan) {
+        self.plans_seen += 1;
+        let distinct = {
+            let mut slots: Vec<usize> =
+                plan.prefill_chunks.iter().map(|c| c.slot).collect();
+            slots.sort_unstable();
+            slots.dedup();
+            slots.len()
+        };
+        self.max_planned_prefills = self.max_planned_prefills.max(distinct);
+    }
+
+    fn plan_end(&mut self, _outcome: &StepOutcome) {
+        self.plan_ends_seen += 1;
+    }
+
     fn prefill(&mut self, bucket: usize, tokens: &[i32], real_len: usize,
                slot: usize, pos0: usize) -> Result<Vec<f32>> {
         anyhow::ensure!(tokens.len() == bucket, "tokens not padded to bucket");
@@ -207,6 +263,7 @@ impl StepModel for MockModel {
         let last_pos = pos0 + real_len - 1;
         self.state[slot] = Some((last_tok, last_pos));
         self.prefill_chunks += 1;
+        self.prefill_log.push((slot, pos0));
         Ok(self.logits_for(last_tok, last_pos))
     }
 
@@ -243,6 +300,7 @@ mod tests {
         let am = crate::coordinator::sampler::argmax(&l1);
         assert_eq!(am, 5);
         assert_eq!(m.expected_next(3, 2), 5);
+        assert_eq!(m.prefill_log, vec![(0, 0), (1, 0)]);
     }
 
     #[test]
@@ -261,5 +319,24 @@ mod tests {
         assert_eq!(logits.len(), 8);
         assert!(logits[4..].iter().all(|&v| v == 0.0));
         assert!(logits[..4].iter().any(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn plan_hooks_record_concurrency() {
+        use crate::coordinator::scheduler::ChunkSpec;
+        let mut m = MockModel::new(2, 8, 4, vec![4]);
+        let plan = StepPlan {
+            admissions: vec![],
+            prefill_chunks: vec![
+                ChunkSpec { request: 1, slot: 0 },
+                ChunkSpec { request: 2, slot: 1 },
+            ],
+            decode: None,
+        };
+        m.plan_begin(&plan);
+        m.plan_end(&StepOutcome::default());
+        assert_eq!(m.plans_seen, 1);
+        assert_eq!(m.plan_ends_seen, 1);
+        assert_eq!(m.max_planned_prefills, 2);
     }
 }

@@ -43,6 +43,19 @@ impl AdmissionQueue {
         self.q.front()
     }
 
+    /// Iterate queued requests oldest-first (the scheduler's snapshot
+    /// source; the iteration index is the FIFO arrival key).
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.q.iter()
+    }
+
+    /// Remove a queued request by id (plan admission may pick any queued
+    /// request, not just the head). Returns it if present.
+    pub fn take(&mut self, id: u64) -> Option<Request> {
+        let idx = self.q.iter().position(|r| r.id == id)?;
+        self.q.remove(idx)
+    }
+
     pub fn len(&self) -> usize {
         self.q.len()
     }
@@ -70,8 +83,7 @@ impl AdmissionQueue {
 
     /// Cancel a queued request by id; returns it if found.
     pub fn cancel(&mut self, id: u64) -> Option<Request> {
-        let idx = self.q.iter().position(|r| r.id == id)?;
-        self.q.remove(idx)
+        self.take(id)
     }
 }
 
@@ -106,6 +118,20 @@ mod tests {
         assert_eq!(q.admitted(), 2);
         q.pop().unwrap();
         q.push(req(3)).unwrap(); // space again
+    }
+
+    #[test]
+    fn take_removes_mid_queue() {
+        let mut q = AdmissionQueue::new(4);
+        q.push(req(1)).unwrap();
+        q.push(req(2)).unwrap();
+        q.push(req(3)).unwrap();
+        let ids: Vec<u64> = q.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+        assert_eq!(q.take(2).unwrap().id, 2);
+        assert!(q.take(2).is_none());
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 3);
     }
 
     #[test]

@@ -15,6 +15,9 @@ pub struct SamplingParams {
     pub max_tokens: usize,
     pub stop_token: Option<i32>,
     pub seed: u64,
+    /// Admission urgency: larger = sooner under the priority scheduling
+    /// policy; ignored by FIFO. Never affects sampling, only ordering.
+    pub priority: i32,
 }
 
 impl Default for SamplingParams {
@@ -25,6 +28,7 @@ impl Default for SamplingParams {
             max_tokens: 64,
             stop_token: None,
             seed: 0,
+            priority: 0,
         }
     }
 }
@@ -57,6 +61,9 @@ pub struct Request {
     pub state: RequestState,
     pub generated: Vec<i32>,
     pub enqueued_at: Instant,
+    /// When the scheduler moved this request from the queue into a KV
+    /// slot; `None` while still queued. Basis for `Completion::queue_ms`.
+    pub admitted_at: Option<Instant>,
     pub first_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
 }
@@ -71,6 +78,7 @@ impl Request {
             state: RequestState::Queued,
             generated: Vec::new(),
             enqueued_at: Instant::now(),
+            admitted_at: None,
             first_token_at: None,
             finished_at: None,
         }

@@ -8,10 +8,9 @@
 
 use anyhow::{anyhow, Result};
 
-use super::engine_loop::{Completion, InferenceEngine};
+use super::engine_loop::{Completion, EngineSnapshot, InferenceEngine};
 use super::model::StepModel;
 use super::request::{RequestId, SamplingParams};
-use super::scheduler::Action;
 
 pub struct Replica<M: StepModel> {
     pub name: String,
@@ -94,10 +93,18 @@ impl<M: StepModel> Router<M> {
         let mut busy = false;
         for r in &mut self.replicas {
             if !r.engine.is_idle() {
-                busy |= r.engine.step()? != Action::Idle;
+                busy |= r.engine.step()?.did_work();
             }
         }
         Ok(busy)
+    }
+
+    /// Per-replica live stats (the server's `stats` op).
+    pub fn stats_snapshot(&self) -> Vec<(String, EngineSnapshot)> {
+        self.replicas
+            .iter()
+            .map(|r| (r.name.clone(), r.engine.snapshot()))
+            .collect()
     }
 
     pub fn run_to_completion(&mut self) -> Result<Vec<(String, Completion)>> {
@@ -161,6 +168,24 @@ mod tests {
             counts[t.replica] += 1;
         }
         assert!(counts[0] >= 3 && counts[1] >= 3, "unbalanced {counts:?}");
+    }
+
+    #[test]
+    fn stats_snapshot_covers_every_replica() {
+        let mut r = router(2);
+        r.submit(Some("v1"), vec![1, 2],
+                 SamplingParams { max_tokens: 2, ..Default::default() })
+            .unwrap();
+        let stats = r.stats_snapshot();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].0, "v0");
+        assert_eq!(stats[1].0, "v1");
+        assert_eq!(stats[1].1.queue_depth, 1);
+        assert_eq!(stats[0].1.queue_depth, 0);
+        r.run_to_completion().unwrap();
+        let stats = r.stats_snapshot();
+        assert_eq!(stats[1].1.finished, 1);
+        assert_eq!(stats[1].1.queue_depth, 0);
     }
 
     #[test]

@@ -1,88 +1,378 @@
-//! Iteration-level scheduling policy (Orca/vLLM-style).
+//! Iteration-level planning (Orca/vLLM-style continuous batching).
 //!
-//! Every engine iteration the scheduler picks ONE action:
-//!  * `Prefill` — admit the queue head into a free KV slot and run one
-//!    prompt chunk (prefill-prioritized keeps slots full, which maximizes
-//!    decode-batch occupancy — the whole point of continuous batching);
-//!  * `Decode`  — one batched decode step for all active slots;
-//!  * `Idle`    — nothing to do.
+//! Every engine iteration the scheduler inspects a [`SchedView`] — the
+//! admission queue, free KV slots, in-flight prefill jobs, and active
+//! decodes — and emits one composite [`StepPlan`]:
+//!  * `admissions`      — queued requests to move into free slots now;
+//!  * `prefill_chunks`  — one prompt chunk per in-flight prefill job to
+//!    run this iteration (several jobs may be in flight concurrently, so
+//!    a short prompt is not serialized behind a long one);
+//!  * `decode`          — one batched decode step over the active slots,
+//!    listed in sorted order so sampling is deterministic.
 //!
-//! A starvation guard caps consecutive prefill actions so a flood of new
-//! prompts cannot stall in-flight decodes indefinitely (the paper's Fig 13
-//! measures exactly this interleaved decode regime).
+//! Which queued requests are admitted first is the pluggable part: a
+//! [`SchedulerPolicy`] ranks the queue snapshot ([`Fifo`],
+//! [`ShortestPromptFirst`], [`PriorityFirst`]). Everything else — the
+//! prefill/decode interleaving and the starvation guard that caps
+//! consecutive prefill-only iterations so a flood of new prompts cannot
+//! stall in-flight decodes (the regime the paper's Fig 13 measures) — is
+//! policy-independent, which is what keeps batching invariance (same
+//! tokens for a request regardless of policy or batch-mates) easy to
+//! preserve: policies reorder *work*, never *sampling*.
 
+use super::request::RequestId;
+
+// ---------------------------------------------------------------------------
+// What the scheduler sees.
+// ---------------------------------------------------------------------------
+
+/// Snapshot of one queued (not yet admitted) request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Action {
-    /// Run a prefill chunk for the queue head (slot to use, whether this
-    /// is a fresh admission needing a slot).
-    Prefill,
-    /// Run one batched decode step.
-    Decode,
-    Idle,
+pub struct QueuedRequest {
+    pub id: RequestId,
+    pub prompt_len: usize,
+    /// Larger = more urgent. Carried on [`super::request::SamplingParams`].
+    pub priority: i32,
+    /// Position in the admission queue (0 = oldest): the FIFO key.
+    pub arrival: usize,
 }
 
-#[derive(Debug, Clone)]
-pub struct SchedulerPolicy {
-    /// Max prefill actions in a row while decodes are pending.
-    pub max_consecutive_prefills: usize,
+/// Snapshot of one in-flight prefill job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillView {
+    pub request: RequestId,
+    pub slot: usize,
+    /// Prompt tokens not yet written to the KV cache.
+    pub remaining: usize,
 }
 
-impl Default for SchedulerPolicy {
-    fn default() -> Self {
-        SchedulerPolicy { max_consecutive_prefills: 4 }
+/// Everything a plan is built from. Borrowed snapshots: the scheduler
+/// never touches engine state directly.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedView<'a> {
+    pub queued: &'a [QueuedRequest],
+    /// Free KV slots, ascending.
+    pub free_slots: &'a [usize],
+    /// In-flight prefill jobs, slot-ascending (the engine's `PrefillSet`
+    /// is keyed by slot); the plan's chunk order follows this order.
+    pub inflight: &'a [PrefillView],
+    /// Slots currently decoding, ascending.
+    pub active_slots: &'a [usize],
+}
+
+// ---------------------------------------------------------------------------
+// What the scheduler emits.
+// ---------------------------------------------------------------------------
+
+/// Admit `request` from the queue into KV slot `slot`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Admission {
+    pub request: RequestId,
+    pub slot: usize,
+}
+
+/// Run one prompt chunk for the prefill job occupying `slot`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkSpec {
+    pub request: RequestId,
+    pub slot: usize,
+}
+
+/// One batched decode step; `slots` is sorted ascending and sampling
+/// follows that order (deterministic, not HashMap iteration order).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct DecodeBatch {
+    pub slots: Vec<usize>,
+}
+
+/// The composite plan for one engine iteration. Admissions execute
+/// first (so a chunk may target a request admitted by the same plan),
+/// then prefill chunks, then the decode step.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct StepPlan {
+    pub admissions: Vec<Admission>,
+    pub prefill_chunks: Vec<ChunkSpec>,
+    pub decode: Option<DecodeBatch>,
+}
+
+impl StepPlan {
+    pub fn is_idle(&self) -> bool {
+        self.admissions.is_empty()
+            && self.prefill_chunks.is_empty()
+            && self.decode.is_none()
     }
 }
 
-#[derive(Debug)]
+/// What one executed plan actually did (returned by the engine's `step`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StepOutcome {
+    pub admitted: usize,
+    pub prefill_chunks: usize,
+    pub decoded_slots: usize,
+}
+
+impl StepOutcome {
+    pub fn did_work(&self) -> bool {
+        self.admitted > 0 || self.prefill_chunks > 0 || self.decoded_slots > 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Policies: how the admission queue is ranked.
+// ---------------------------------------------------------------------------
+
+/// Ranks queued requests for admission. Policies only order work — the
+/// plan assembly, chunking, and starvation guard live in [`Scheduler`] —
+/// so a request's token stream cannot depend on the policy in force.
+pub trait SchedulerPolicy: Send {
+    fn name(&self) -> &'static str;
+    /// Request ids in admission order, most urgent first. Must be a
+    /// permutation of `queued`.
+    fn admission_order(&mut self, queued: &[QueuedRequest]) -> Vec<RequestId>;
+}
+
+/// Seed-compatible first-come-first-served admission.
+#[derive(Debug, Default)]
+pub struct Fifo;
+
+impl SchedulerPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn admission_order(&mut self, queued: &[QueuedRequest]) -> Vec<RequestId> {
+        // The engine's snapshot is already arrival-ordered (arrival is
+        // the queue index), so FIFO is the identity permutation.
+        queued.iter().map(|r| r.id).collect()
+    }
+}
+
+/// Shortest prompt first (ties broken by arrival): minimizes mean
+/// time-to-first-token under bursty mixed-length traffic, at the price
+/// of long prompts waiting out bursts of short ones.
+#[derive(Debug, Default)]
+pub struct ShortestPromptFirst;
+
+impl SchedulerPolicy for ShortestPromptFirst {
+    fn name(&self) -> &'static str {
+        "spf"
+    }
+
+    fn admission_order(&mut self, queued: &[QueuedRequest]) -> Vec<RequestId> {
+        let mut q: Vec<&QueuedRequest> = queued.iter().collect();
+        q.sort_by_key(|r| (r.prompt_len, r.arrival));
+        q.into_iter().map(|r| r.id).collect()
+    }
+}
+
+/// Highest `SamplingParams::priority` first (ties broken by arrival):
+/// the quality-vs-latency variant-routing story — latency-pinned traffic
+/// jumps the queue.
+#[derive(Debug, Default)]
+pub struct PriorityFirst;
+
+impl SchedulerPolicy for PriorityFirst {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn admission_order(&mut self, queued: &[QueuedRequest]) -> Vec<RequestId> {
+        let mut q: Vec<&QueuedRequest> = queued.iter().collect();
+        q.sort_by_key(|r| (std::cmp::Reverse(r.priority), r.arrival));
+        q.into_iter().map(|r| r.id).collect()
+    }
+}
+
+/// Config-friendly policy selector (the trait object itself is not
+/// Clone, so [`super::engine_loop::EngineConfig`] carries this instead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyKind {
+    #[default]
+    Fifo,
+    ShortestPromptFirst,
+    Priority,
+}
+
+impl PolicyKind {
+    pub fn build(self) -> Box<dyn SchedulerPolicy> {
+        match self {
+            PolicyKind::Fifo => Box::new(Fifo),
+            PolicyKind::ShortestPromptFirst => Box::new(ShortestPromptFirst),
+            PolicyKind::Priority => Box::new(PriorityFirst),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::ShortestPromptFirst => "spf",
+            PolicyKind::Priority => "priority",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "fifo" => Some(PolicyKind::Fifo),
+            "spf" | "shortest-prompt-first" => Some(PolicyKind::ShortestPromptFirst),
+            "priority" => Some(PolicyKind::Priority),
+            _ => None,
+        }
+    }
+
+    /// Every shipped policy (batching-invariance tests sweep this).
+    pub fn all() -> [PolicyKind; 3] {
+        [PolicyKind::Fifo, PolicyKind::ShortestPromptFirst, PolicyKind::Priority]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The policy-independent plan assembly.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub policy: PolicyKind,
+    /// Starvation guard: max consecutive prefill *chunks* (model calls)
+    /// while decodes are pending — the same unit as the seed's
+    /// single-chunk iterations, so the decode-stall bound does not grow
+    /// with `chunk_budget`.
+    pub max_consecutive_prefills: usize,
+    /// How many prefill jobs may be in flight at once (the PrefillSet
+    /// size cap). 1 reproduces the seed single-prefill behavior.
+    pub max_concurrent_prefills: usize,
+    /// How many prefill chunks (distinct jobs) run per iteration.
+    pub chunk_budget: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            policy: PolicyKind::Fifo,
+            max_consecutive_prefills: 4,
+            max_concurrent_prefills: 2,
+            chunk_budget: 2,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// The seed engine's behavior: FIFO, at most one prefill job in
+    /// flight, one chunk per iteration. Benchmarks use this baseline.
+    pub fn single_prefill() -> Self {
+        SchedulerConfig {
+            max_concurrent_prefills: 1,
+            chunk_budget: 1,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_policy(policy: PolicyKind) -> Self {
+        SchedulerConfig { policy, ..Default::default() }
+    }
+}
+
 pub struct Scheduler {
-    policy: SchedulerPolicy,
+    cfg: SchedulerConfig,
+    policy: Box<dyn SchedulerPolicy>,
+    /// Prefill chunks issued since the last decode turn (guard counter).
     consecutive_prefills: usize,
-    pub prefill_actions: u64,
-    pub decode_actions: u64,
+    /// Round-robin cursor so jobs beyond the chunk budget are not starved.
+    chunk_rr: usize,
 }
 
 impl Scheduler {
-    pub fn new(policy: SchedulerPolicy) -> Self {
-        Scheduler {
-            policy,
-            consecutive_prefills: 0,
-            prefill_actions: 0,
-            decode_actions: 0,
-        }
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        let policy = cfg.policy.build();
+        Scheduler { cfg, policy, consecutive_prefills: 0, chunk_rr: 0 }
     }
 
-    /// Decide the next action given the observable state.
-    pub fn decide(&mut self, queued: usize, active_decodes: usize,
-                  free_slots: usize, pending_prefill: bool) -> Action {
-        // An in-flight multi-chunk prefill always continues first: its
-        // slot is claimed and useless until the prompt is in the cache.
-        let want_prefill = pending_prefill || (queued > 0 && free_slots > 0);
-        let starving = active_decodes > 0
-            && self.consecutive_prefills >= self.policy.max_consecutive_prefills;
-        let action = if want_prefill && !starving {
-            Action::Prefill
-        } else if active_decodes > 0 {
-            Action::Decode
-        } else if want_prefill {
-            // nothing to decode; starvation guard is moot
-            Action::Prefill
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    /// Build the next iteration's plan. Mirrors the seed decision tree:
+    /// prefill-bearing iterations are prioritized (slots fill fastest,
+    /// maximizing decode occupancy) until the starvation guard trips,
+    /// then the pending decodes get a turn.
+    pub fn plan(&mut self, view: &SchedView) -> StepPlan {
+        let concurrency = self.cfg.max_concurrent_prefills.max(1);
+        let can_admit = !view.queued.is_empty()
+            && !view.free_slots.is_empty()
+            && view.inflight.len() < concurrency;
+        let want_prefill = !view.inflight.is_empty() || can_admit;
+        let active = view.active_slots.len();
+        let starving = active > 0
+            && self.consecutive_prefills >= self.cfg.max_consecutive_prefills;
+
+        let mut plan = StepPlan::default();
+        if want_prefill && !starving {
+            // While decodes are pending, never issue more chunks than the
+            // guard has left (so the stall bound is exactly the guard, not
+            // guard + chunk_budget - 1); with nothing to decode the guard
+            // is moot and the budget alone caps the plan.
+            let allowance = if active > 0 {
+                self.cfg
+                    .max_consecutive_prefills
+                    .saturating_sub(self.consecutive_prefills)
+            } else {
+                usize::MAX
+            };
+            self.fill_prefill(view, &mut plan, allowance);
+        } else if active > 0 {
+            plan.decode = Some(DecodeBatch { slots: view.active_slots.to_vec() });
+        }
+
+        if !plan.prefill_chunks.is_empty() {
+            self.consecutive_prefills += plan.prefill_chunks.len();
         } else {
-            Action::Idle
-        };
-        match action {
-            Action::Prefill => {
-                self.consecutive_prefills += 1;
-                self.prefill_actions += 1;
-            }
-            Action::Decode => {
-                self.consecutive_prefills = 0;
-                self.decode_actions += 1;
-            }
-            Action::Idle => {
-                self.consecutive_prefills = 0;
+            self.consecutive_prefills = 0;
+        }
+        plan
+    }
+
+    fn fill_prefill(&mut self, view: &SchedView, plan: &mut StepPlan,
+                    allowance: usize) {
+        let concurrency = self.cfg.max_concurrent_prefills.max(1);
+        let budget = self.cfg.chunk_budget.max(1).min(allowance.max(1));
+
+        // Jobs to advance this iteration: in-flight first (the view's
+        // slot order — ascending per the SchedView contract — keeps this
+        // deterministic), then fresh admissions chosen by the policy.
+        let mut jobs: Vec<(RequestId, usize)> = view
+            .inflight
+            .iter()
+            .map(|j| (j.request, j.slot))
+            .collect();
+
+        let mut free = view.free_slots.iter().copied();
+        if jobs.len() < concurrency && !view.queued.is_empty() {
+            for id in self.policy.admission_order(view.queued) {
+                if jobs.len() >= concurrency {
+                    break;
+                }
+                let Some(slot) = free.next() else { break };
+                plan.admissions.push(Admission { request: id, slot });
+                jobs.push((id, slot));
             }
         }
-        action
+
+        // One chunk per job, up to the budget, rotating the starting job
+        // across iterations so a wide PrefillSet shares the budget fairly.
+        if jobs.is_empty() {
+            return;
+        }
+        let n = jobs.len();
+        let take = n.min(budget);
+        let start = self.chunk_rr % n;
+        for k in 0..take {
+            let (request, slot) = jobs[(start + k) % n];
+            plan.prefill_chunks.push(ChunkSpec { request, slot });
+        }
+        self.chunk_rr = (start + take) % n.max(1);
     }
 }
 
@@ -92,69 +382,256 @@ mod tests {
     use crate::prop_assert;
     use crate::testing::property;
 
+    fn queued(specs: &[(RequestId, usize, i32)]) -> Vec<QueuedRequest> {
+        specs
+            .iter()
+            .enumerate()
+            .map(|(arrival, &(id, prompt_len, priority))| QueuedRequest {
+                id,
+                prompt_len,
+                priority,
+                arrival,
+            })
+            .collect()
+    }
+
     #[test]
     fn idle_when_nothing_to_do() {
-        let mut s = Scheduler::new(SchedulerPolicy::default());
-        assert_eq!(s.decide(0, 0, 8, false), Action::Idle);
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let plan = s.plan(&SchedView {
+            queued: &[],
+            free_slots: &[0, 1],
+            inflight: &[],
+            active_slots: &[],
+        });
+        assert!(plan.is_idle());
     }
 
     #[test]
-    fn prefill_prioritized_until_guard() {
-        let mut s = Scheduler::new(SchedulerPolicy { max_consecutive_prefills: 2 });
-        // active decodes exist, queue is deep, slots free
-        assert_eq!(s.decide(10, 3, 5, false), Action::Prefill);
-        assert_eq!(s.decide(10, 3, 5, false), Action::Prefill);
-        // guard trips -> decode gets a turn
-        assert_eq!(s.decide(10, 3, 5, false), Action::Decode);
-        // counter reset -> prefill again
-        assert_eq!(s.decide(10, 3, 5, false), Action::Prefill);
+    fn admits_multiple_requests_up_to_concurrency() {
+        let mut s = Scheduler::new(SchedulerConfig::default()); // concurrency 2
+        let q = queued(&[(1, 8, 0), (2, 8, 0), (3, 8, 0)]);
+        let plan = s.plan(&SchedView {
+            queued: &q,
+            free_slots: &[0, 1, 2, 3],
+            inflight: &[],
+            active_slots: &[],
+        });
+        assert_eq!(
+            plan.admissions,
+            vec![
+                Admission { request: 1, slot: 0 },
+                Admission { request: 2, slot: 1 }
+            ]
+        );
+        assert_eq!(plan.prefill_chunks.len(), 2);
+        assert!(plan.decode.is_none());
     }
 
     #[test]
-    fn decode_when_no_free_slots() {
-        let mut s = Scheduler::new(SchedulerPolicy::default());
-        assert_eq!(s.decide(5, 8, 0, false), Action::Decode);
+    fn continues_inflight_even_with_no_free_slots() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let inflight = [PrefillView { request: 7, slot: 3, remaining: 4 }];
+        let plan = s.plan(&SchedView {
+            queued: &[],
+            free_slots: &[],
+            inflight: &inflight,
+            active_slots: &[0, 1],
+        });
+        assert_eq!(plan.prefill_chunks,
+                   vec![ChunkSpec { request: 7, slot: 3 }]);
+        assert!(plan.admissions.is_empty());
     }
 
     #[test]
-    fn pending_prefill_continues_even_with_full_slots() {
-        let mut s = Scheduler::new(SchedulerPolicy::default());
-        assert_eq!(s.decide(0, 3, 0, true), Action::Prefill);
+    fn starvation_guard_gives_decodes_a_turn() {
+        // Guard of 4 *chunks* with 2-chunk plans: two prefill plans, then
+        // the pending decodes get a turn.
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_consecutive_prefills: 4,
+            ..Default::default()
+        });
+        let q = queued(&[(1, 64, 0), (2, 64, 0), (3, 64, 0), (4, 64, 0)]);
+        let view = SchedView {
+            queued: &q,
+            free_slots: &[4, 5, 6, 7],
+            inflight: &[],
+            active_slots: &[0, 1, 2],
+        };
+        assert_eq!(s.plan(&view).prefill_chunks.len(), 2);
+        assert_eq!(s.plan(&view).prefill_chunks.len(), 2);
+        // Guard trips: decode-only plan, sorted slots.
+        let p3 = s.plan(&view);
+        assert!(p3.prefill_chunks.is_empty());
+        assert_eq!(p3.decode, Some(DecodeBatch { slots: vec![0, 1, 2] }));
+        // Counter reset: prefill again.
+        assert!(!s.plan(&view).prefill_chunks.is_empty());
+    }
+
+    #[test]
+    fn starvation_guard_counts_chunks_not_iterations() {
+        // One 2-chunk plan already reaches a guard of 2: the seed's
+        // decode-stall bound (in model calls) survives chunk_budget > 1.
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_consecutive_prefills: 2,
+            ..Default::default()
+        });
+        let q = queued(&[(1, 64, 0), (2, 64, 0)]);
+        let view = SchedView {
+            queued: &q,
+            free_slots: &[4, 5],
+            inflight: &[],
+            active_slots: &[0],
+        };
+        assert_eq!(s.plan(&view).prefill_chunks.len(), 2);
+        assert!(s.plan(&view).decode.is_some(),
+                "2 chunks hit the guard of 2");
+    }
+
+    #[test]
+    fn decode_when_no_prefill_possible() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let q = queued(&[(9, 4, 0)]);
+        let plan = s.plan(&SchedView {
+            queued: &q,
+            free_slots: &[], // queue deep but no slot: decode
+            inflight: &[],
+            active_slots: &[2, 5],
+        });
+        assert_eq!(plan.decode, Some(DecodeBatch { slots: vec![2, 5] }));
+        assert!(plan.admissions.is_empty());
     }
 
     #[test]
     fn prefill_allowed_when_no_decodes_regardless_of_guard() {
-        let mut s = Scheduler::new(SchedulerPolicy { max_consecutive_prefills: 1 });
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_consecutive_prefills: 1,
+            ..Default::default()
+        });
+        let q = queued(&[(1, 4, 0), (2, 4, 0), (3, 4, 0)]);
         for _ in 0..5 {
-            assert_eq!(s.decide(3, 0, 2, false), Action::Prefill);
+            let inflight = [PrefillView { request: 1, slot: 0, remaining: 64 }];
+            let plan = s.plan(&SchedView {
+                queued: &q,
+                free_slots: &[1, 2],
+                inflight: &inflight,
+                active_slots: &[],
+            });
+            assert!(!plan.prefill_chunks.is_empty());
         }
     }
 
     #[test]
+    fn policies_rank_admissions() {
+        // id 1: long prompt, low priority, first in.
+        // id 2: short prompt, mid priority.
+        // id 3: mid prompt, high priority, last in.
+        let q = queued(&[(1, 32, 0), (2, 4, 1), (3, 16, 9)]);
+        assert_eq!(Fifo.admission_order(&q), vec![1, 2, 3]);
+        assert_eq!(ShortestPromptFirst.admission_order(&q), vec![2, 3, 1]);
+        assert_eq!(PriorityFirst.admission_order(&q), vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn policy_kind_parses() {
+        assert_eq!(PolicyKind::parse("fifo"), Some(PolicyKind::Fifo));
+        assert_eq!(PolicyKind::parse("spf"),
+                   Some(PolicyKind::ShortestPromptFirst));
+        assert_eq!(PolicyKind::parse("shortest-prompt-first"),
+                   Some(PolicyKind::ShortestPromptFirst));
+        assert_eq!(PolicyKind::parse("priority"), Some(PolicyKind::Priority));
+        assert_eq!(PolicyKind::parse("nope"), None);
+        for kind in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(kind.name()), Some(kind));
+            // The trait impl's name must agree with the enum's, or the
+            // stats op would report a policy that --policy rejects.
+            assert_eq!(kind.build().name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn chunk_budget_rotates_across_jobs() {
+        // 3 in-flight jobs, budget 2: over two iterations every job gets
+        // at least one chunk.
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_concurrent_prefills: 3,
+            chunk_budget: 2,
+            ..Default::default()
+        });
+        let inflight = [
+            PrefillView { request: 1, slot: 0, remaining: 64 },
+            PrefillView { request: 2, slot: 1, remaining: 64 },
+            PrefillView { request: 3, slot: 2, remaining: 64 },
+        ];
+        let view = SchedView {
+            queued: &[],
+            free_slots: &[],
+            inflight: &inflight,
+            active_slots: &[],
+        };
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..2 {
+            for c in s.plan(&view).prefill_chunks {
+                seen.insert(c.request);
+            }
+        }
+        assert_eq!(seen.len(), 3, "every job chunked within two iterations");
+    }
+
+    #[test]
     fn prop_no_starvation() {
-        // Under any adversarial (queued, free) stream, between any two
-        // decode opportunities with active decodes, at most
-        // max_consecutive_prefills prefills happen.
+        // Under any adversarial view stream with decodes always pending,
+        // at most `guard` consecutive prefill-bearing plans occur between
+        // decode plans, and the scheduler never goes idle.
         property("decode starvation bounded", 100, |rng| {
             let guard = 1 + rng.usize_below(6);
-            let mut s = Scheduler::new(SchedulerPolicy {
+            let mut s = Scheduler::new(SchedulerConfig {
                 max_consecutive_prefills: guard,
+                max_concurrent_prefills: 1 + rng.usize_below(4),
+                chunk_budget: 1 + rng.usize_below(4),
+                ..Default::default()
             });
             let mut run = 0usize;
-            for _ in 0..200 {
-                let queued = rng.usize_below(10);
-                let free = rng.usize_below(4);
-                let active = 1 + rng.usize_below(8); // decodes always pending
-                match s.decide(queued, active, free, rng.bool(0.2)) {
-                    Action::Prefill => {
-                        run += 1;
-                        prop_assert!(run <= guard,
-                                     "{run} consecutive prefills > guard {guard}");
-                    }
-                    Action::Decode => run = 0,
-                    Action::Idle => {
-                        prop_assert!(false, "idle while decodes active");
-                    }
+            for iter in 0..200u64 {
+                let q: Vec<QueuedRequest> = (0..rng.usize_below(10))
+                    .map(|i| QueuedRequest {
+                        id: iter * 100 + i as u64,
+                        prompt_len: 1 + rng.usize_below(64),
+                        priority: rng.below(5) as i32,
+                        arrival: i,
+                    })
+                    .collect();
+                let free: Vec<usize> =
+                    (8..8 + rng.usize_below(4)).collect();
+                let inflight: Vec<PrefillView> = (0..rng.usize_below(3))
+                    .map(|i| PrefillView {
+                        request: iter * 100 + 50 + i as u64,
+                        slot: 20 + i,
+                        remaining: 1 + rng.usize_below(32),
+                    })
+                    .collect();
+                let n_active = 1 + rng.usize_below(8); // always pending
+                let active: Vec<usize> = (0..n_active).collect();
+                let plan = s.plan(&SchedView {
+                    queued: &q,
+                    free_slots: &free,
+                    inflight: &inflight,
+                    active_slots: &active,
+                });
+                prop_assert!(!plan.is_idle(), "idle while decodes active");
+                if !plan.prefill_chunks.is_empty() {
+                    // A prefill plan is only issued while the chunk count
+                    // since the last decode is under the guard, and its
+                    // chunks never push the total past the guard.
+                    prop_assert!(run < guard,
+                                 "prefill planned at {run} chunks >= guard {guard}");
+                    run += plan.prefill_chunks.len();
+                    prop_assert!(run <= guard,
+                                 "{run} chunks since last decode > guard {guard}");
+                } else {
+                    prop_assert!(plan.decode.is_some(),
+                                 "plan neither prefills nor decodes");
+                    run = 0;
                 }
             }
             Ok(())

@@ -4,8 +4,16 @@
 //! for the paper-vs-measured record.
 //!
 //! Layer map:
-//! * [`runtime`]     — PJRT engine running the AOT artifacts (L2/L1 output)
-//! * [`coordinator`] — the serving system (router, batcher, scheduler, KV)
+//! * [`runtime`]     — PJRT engine running the AOT artifacts (L2/L1
+//!   output); behind the off-by-default `pjrt` cargo feature so the
+//!   default build is std-only
+//! * [`coordinator`] — the serving system. Each iteration a pluggable
+//!   [`coordinator::scheduler::SchedulerPolicy`] turns a
+//!   [`coordinator::scheduler::SchedView`] of the queue/slots/in-flight
+//!   work into one composite [`coordinator::scheduler::StepPlan`]
+//!   (admissions + concurrent prefill chunks + decode batch) that the
+//!   engine executes and accounts — vLLM/Orca-style continuous batching
+//!   with multiple prefills in flight
 //! * [`costmodel`]   — analytic roofline reproduction of Fig 1b
 //! * [`config`]      — manifest contract with the python compile path
 //! * [`util`], [`bench`], [`testing`] — std-only substrates (no network)
@@ -14,6 +22,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod costmodel;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
 pub mod testing;

@@ -1,129 +1,117 @@
 //! `tardis` CLI — the L3 entrypoint.
 //!
 //! Subcommands:
+//!   costmodel  — print the Fig 1b analytic breakdown (paper-scale model)
+//!   serve-mock — TCP server over deterministic mock replicas (std-only;
+//!                exercises the scheduler/serving stack without artifacts)
+//! With `--features pjrt`:
 //!   generate   — load a variant, generate from a prompt, print text+stats
 //!   serve      — TCP server (line-delimited JSON) over one or more variants
-//!   costmodel  — print the Fig 1b analytic breakdown (paper-scale model)
 //!   variants   — list manifest variants and their compression ratios
 //!   bench-decode — quick per-variant decode-step timing (full Fig 13 lives
 //!                  in `cargo bench --bench fig13_speedup`)
 
 use anyhow::{anyhow, Result};
 
-use tardis::config::Manifest;
 use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
-use tardis::coordinator::model::{PjrtModel, StepModel};
-use tardis::coordinator::request::SamplingParams;
+use tardis::coordinator::model::MockModel;
 use tardis::coordinator::router::Router;
+use tardis::coordinator::scheduler::PolicyKind;
 use tardis::costmodel;
-use tardis::runtime::Engine;
-use tardis::server::protocol::{decode_tokens, encode_text};
 use tardis::util::cli::Args;
+
+#[cfg(feature = "pjrt")]
+use tardis::config::Manifest;
+#[cfg(feature = "pjrt")]
+use tardis::coordinator::model::{PjrtModel, StepModel};
+#[cfg(feature = "pjrt")]
+use tardis::coordinator::request::SamplingParams;
+#[cfg(feature = "pjrt")]
+use tardis::runtime::Engine;
+#[cfg(feature = "pjrt")]
+use tardis::server::protocol::{decode_tokens, encode_text};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tardis <generate|serve|costmodel|variants|bench-decode> [flags]
+        "usage: tardis <costmodel|serve-mock|generate|serve|variants|bench-decode> [flags]
+  (generate/serve/variants/bench-decode need a build with --features pjrt)
   common flags:
     --artifacts DIR        artifacts directory (default: artifacts or $TARDIS_ARTIFACTS)
     --variant NAME         model variant (default: tardis80)
+  scheduling flags (serve / serve-mock / generate):
+    --policy NAME          admission policy: fifo|spf|priority (default fifo)
+    --max-prefills N       concurrent prefill jobs (default 2)
+    --chunk-budget N       prefill chunks per iteration (default 2)
+    --queue-capacity N     admission queue depth before backpressure (default 64)
   generate:
     --prompt TEXT          prompt (default: \"the quick \")
     --max-tokens N         tokens to generate (default 48)
     --temperature T        sampling temperature (default 0 = greedy)
-  serve:
+    --priority N           admission priority (default 0)
+  serve / serve-mock:
     --addr HOST:PORT       listen address (default 127.0.0.1:7437)
-    --variants A,B         variants to load as replicas (default dense,tardis80)
+    --variants A,B         replicas to load (serve default dense,tardis80;
+                           serve-mock default mock)
     --max-requests N       exit after N served requests (for scripted runs)
+  serve-mock:
+    --slots N              KV slots per mock replica (default 4)
+    --max-seq N            mock context length (default 256)
   bench-decode:
     --steps N              decode steps to time (default 32)"
     );
     std::process::exit(2);
 }
 
-fn load_engine<'e>(
-    engine: &'e Engine,
-    manifest: &Manifest,
-    variant: &str,
-    execs: Option<&[&str]>,
-) -> Result<InferenceEngine<PjrtModel<'e>>> {
-    let v = engine.load_variant(manifest, variant, execs)?;
-    let model = PjrtModel::new(
-        engine,
-        v,
-        manifest.batch,
-        manifest.model.max_seq,
-        manifest.model.vocab,
-        manifest.prefill_buckets.clone(),
-    )?;
-    Ok(InferenceEngine::new(model, EngineConfig::default()))
-}
-
-fn main_exec_tags(manifest: &Manifest) -> Vec<&'static str> {
-    let mut tags = vec!["decode"];
-    // prefill tags are static strings in the manifest ("prefill16", ...)
-    // but we need 'static for the filter; map known buckets.
-    for b in &manifest.prefill_buckets {
-        match b {
-            16 => tags.push("prefill16"),
-            64 => tags.push("prefill64"),
-            _ => {}
-        }
+/// Shared scheduler/engine config from the CLI flags.
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let mut cfg = EngineConfig::default();
+    if let Some(p) = args.opt_str("policy") {
+        cfg.scheduler.policy = PolicyKind::parse(&p).ok_or_else(|| {
+            anyhow!("unknown policy {p:?} (expected fifo|spf|priority)")
+        })?;
     }
-    tags
+    cfg.scheduler.max_concurrent_prefills =
+        args.usize("max-prefills", cfg.scheduler.max_concurrent_prefills)?;
+    cfg.scheduler.chunk_budget =
+        args.usize("chunk-budget", cfg.scheduler.chunk_budget)?;
+    cfg.queue_capacity = args.usize("queue-capacity", cfg.queue_capacity)?;
+    Ok(cfg)
 }
 
-fn cmd_generate(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&manifest_path(args))?;
-    let variant = args.str("variant", "tardis80");
-    let engine = Engine::cpu()?;
-    eprintln!("[generate] platform={} variant={variant}", engine.platform());
-    let mut ie = load_engine(&engine, &manifest, &variant,
-                             Some(&main_exec_tags(&manifest)))?;
-    let prompt = args.str("prompt", "the quick ");
-    let params = SamplingParams {
-        temperature: args.f64("temperature", 0.0)? as f32,
-        top_k: args.usize("top-k", 0)?,
-        max_tokens: args.usize("max-tokens", 48)?,
-        stop_token: None,
-        seed: args.usize("seed", 0)? as u64,
-    };
-    let t0 = std::time::Instant::now();
-    let c = ie.generate_sequential(encode_text(&prompt), params)?;
-    let dt = t0.elapsed().as_secs_f64();
-    println!("{}{}", prompt, decode_tokens(&c.tokens));
-    eprintln!(
-        "[generate] {} tokens in {:.2}s ({:.1} tok/s, decode mean {:.2} ms, \
-         compression ratio {:.1}%)",
-        c.tokens.len(),
-        dt,
-        c.tokens.len() as f64 / dt,
-        ie.decode_latency_ms.mean(),
-        ie.model.compression_ratio() * 100.0
-    );
-    Ok(())
-}
-
-fn cmd_serve(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&manifest_path(args))?;
-    let engine = Engine::cpu()?;
-    let variants = args.list("variants", &["dense", "tardis80"]);
-    let mut replicas = Vec::new();
-    for v in &variants {
-        eprintln!("[serve] loading {v} ...");
-        replicas.push((
-            v.clone(),
-            load_engine(&engine, &manifest, v, Some(&main_exec_tags(&manifest)))?,
-        ));
-    }
+/// std-only server: mock replicas with the full scheduler stack, for
+/// protocol/scheduling experiments without PJRT artifacts.
+fn cmd_serve_mock(args: &Args) -> Result<()> {
+    let cfg = engine_config(args)?;
+    let slots = args.usize("slots", 4)?;
+    let max_seq = args.usize("max-seq", 256)?;
+    let names = args.list("variants", &["mock"]);
+    let replicas = names
+        .iter()
+        .map(|name| {
+            (
+                name.clone(),
+                InferenceEngine::new(
+                    MockModel::new(slots, max_seq, 256, vec![16, 64]),
+                    cfg.clone(),
+                ),
+            )
+        })
+        .collect();
     let router = Router::new(replicas);
     let addr = args.str("addr", "127.0.0.1:7437");
-    let max_requests = args.opt_str("max-requests")
+    let max_requests = parse_max_requests(args)?;
+    eprintln!("[serve-mock] policy={} replicas={names:?}",
+              cfg.scheduler.policy.name());
+    let served = tardis::server::tcp::serve(router, &addr, max_requests)?;
+    eprintln!("[serve-mock] done, served {served} requests");
+    Ok(())
+}
+
+fn parse_max_requests(args: &Args) -> Result<Option<usize>> {
+    args.opt_str("max-requests")
         .map(|s| s.parse::<usize>())
         .transpose()
-        .map_err(|_| anyhow!("--max-requests expects an integer"))?;
-    let served = tardis::server::tcp::serve(router, &addr, max_requests)?;
-    eprintln!("[serve] done, served {served} requests");
-    Ok(())
+        .map_err(|_| anyhow!("--max-requests expects an integer"))
 }
 
 fn cmd_costmodel(_args: &Args) -> Result<()> {
@@ -147,6 +135,108 @@ fn cmd_costmodel(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// PJRT-backed subcommands (need the real runtime).
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+fn load_engine<'e>(
+    engine: &'e Engine,
+    manifest: &Manifest,
+    variant: &str,
+    execs: Option<&[&str]>,
+    cfg: EngineConfig,
+) -> Result<InferenceEngine<PjrtModel<'e>>> {
+    let v = engine.load_variant(manifest, variant, execs)?;
+    let model = PjrtModel::new(
+        engine,
+        v,
+        manifest.batch,
+        manifest.model.max_seq,
+        manifest.model.vocab,
+        manifest.prefill_buckets.clone(),
+    )?;
+    Ok(InferenceEngine::new(model, cfg))
+}
+
+#[cfg(feature = "pjrt")]
+fn main_exec_tags(manifest: &Manifest) -> Vec<&'static str> {
+    let mut tags = vec!["decode"];
+    // prefill tags are static strings in the manifest ("prefill16", ...)
+    // but we need 'static for the filter; map known buckets.
+    for b in &manifest.prefill_buckets {
+        match b {
+            16 => tags.push("prefill16"),
+            64 => tags.push("prefill64"),
+            _ => {}
+        }
+    }
+    tags
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_generate(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&manifest_path(args))?;
+    let variant = args.str("variant", "tardis80");
+    let engine = Engine::cpu()?;
+    eprintln!("[generate] platform={} variant={variant}", engine.platform());
+    let mut ie = load_engine(&engine, &manifest, &variant,
+                             Some(&main_exec_tags(&manifest)),
+                             engine_config(args)?)?;
+    let prompt = args.str("prompt", "the quick ");
+    let params = SamplingParams {
+        temperature: args.f64("temperature", 0.0)? as f32,
+        top_k: args.usize("top-k", 0)?,
+        max_tokens: args.usize("max-tokens", 48)?,
+        stop_token: None,
+        seed: args.usize("seed", 0)? as u64,
+        priority: match args.opt_str("priority") {
+            None => 0,
+            Some(s) => s.parse::<i32>().map_err(|_| {
+                anyhow!("--priority expects an integer, got {s:?}")
+            })?,
+        },
+    };
+    let t0 = std::time::Instant::now();
+    let c = ie.generate_sequential(encode_text(&prompt), params)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}{}", prompt, decode_tokens(&c.tokens));
+    eprintln!(
+        "[generate] {} tokens in {:.2}s ({:.1} tok/s, decode mean {:.2} ms, \
+         compression ratio {:.1}%)",
+        c.tokens.len(),
+        dt,
+        c.tokens.len() as f64 / dt,
+        ie.decode_latency_ms.mean(),
+        ie.model.compression_ratio() * 100.0
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_serve(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&manifest_path(args))?;
+    let engine = Engine::cpu()?;
+    let cfg = engine_config(args)?;
+    let variants = args.list("variants", &["dense", "tardis80"]);
+    let mut replicas = Vec::new();
+    for v in &variants {
+        eprintln!("[serve] loading {v} ...");
+        replicas.push((
+            v.clone(),
+            load_engine(&engine, &manifest, v, Some(&main_exec_tags(&manifest)),
+                        cfg.clone())?,
+        ));
+    }
+    let router = Router::new(replicas);
+    let addr = args.str("addr", "127.0.0.1:7437");
+    let max_requests = parse_max_requests(args)?;
+    let served = tardis::server::tcp::serve(router, &addr, max_requests)?;
+    eprintln!("[serve] done, served {served} requests");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_variants(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&manifest_path(args))?;
     println!("model {} (d={}, L={}, h={}, act={}), batch {}, max_seq {}",
@@ -166,6 +256,7 @@ fn cmd_variants(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_bench_decode(args: &Args) -> Result<()> {
     let manifest = Manifest::load(&manifest_path(args))?;
     let engine = Engine::cpu()?;
@@ -198,6 +289,7 @@ fn cmd_bench_decode(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn manifest_path(args: &Args) -> std::path::PathBuf {
     args.opt_str("artifacts")
         .map(|d| std::path::PathBuf::from(d).join("manifest.json"))
@@ -213,11 +305,23 @@ fn main() {
         }
     };
     let result = match args.subcommand.as_deref() {
-        Some("generate") => cmd_generate(&args),
-        Some("serve") => cmd_serve(&args),
         Some("costmodel") => cmd_costmodel(&args),
+        Some("serve-mock") => cmd_serve_mock(&args),
+        #[cfg(feature = "pjrt")]
+        Some("generate") => cmd_generate(&args),
+        #[cfg(feature = "pjrt")]
+        Some("serve") => cmd_serve(&args),
+        #[cfg(feature = "pjrt")]
         Some("variants") => cmd_variants(&args),
+        #[cfg(feature = "pjrt")]
         Some("bench-decode") => cmd_bench_decode(&args),
+        #[cfg(not(feature = "pjrt"))]
+        Some(cmd @ ("generate" | "serve" | "variants" | "bench-decode")) => {
+            Err(anyhow!(
+                "subcommand {cmd:?} needs the PJRT runtime; rebuild with \
+                 `cargo build --features pjrt` (and real xla bindings)"
+            ))
+        }
         _ => usage(),
     };
     if let Err(e) = result {

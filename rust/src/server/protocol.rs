@@ -2,7 +2,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::engine_loop::Completion;
+use crate::coordinator::engine_loop::{Completion, EngineSnapshot};
 use crate::coordinator::request::{FinishReason, SamplingParams};
 use crate::util::json::Json;
 
@@ -68,6 +68,10 @@ pub fn parse_request(line: &str) -> Result<ServerRequest> {
                     .and_then(Json::as_i64)
                     .map(|v| v as i32),
                 seed: j.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+                priority: j
+                    .get("priority")
+                    .and_then(Json::as_i64)
+                    .unwrap_or(0) as i32,
             };
             let variant = j
                 .get("variant")
@@ -96,8 +100,39 @@ pub fn render_completion(c: &Completion, variant: &str) -> String {
         ("text", Json::str(&decode_tokens(&c.tokens))),
         ("tokens", Json::arr(c.tokens.iter().map(|&t| Json::num(t as f64)))),
         ("reason", Json::str(reason_str(c.reason))),
+        ("queue_ms", Json::num(c.queue_ms)),
         ("first_token_ms", Json::num(c.first_token_ms)),
         ("total_ms", Json::num(c.total_ms)),
+    ])
+    .render()
+}
+
+/// Render the `stats` op response: one object per replica with live
+/// queue/slot/throughput numbers.
+pub fn render_stats(replicas: &[(String, EngineSnapshot)]) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "replicas",
+            Json::arr(replicas.iter().map(|(name, s)| {
+                Json::obj(vec![
+                    ("variant", Json::str(name)),
+                    ("policy", Json::str(s.policy)),
+                    ("queue_depth", Json::num(s.queue_depth as f64)),
+                    ("queue_pressure", Json::num(s.queue_pressure)),
+                    ("active_slots", Json::num(s.active_slots as f64)),
+                    ("inflight_prefills",
+                     Json::num(s.inflight_prefills as f64)),
+                    ("slots_total", Json::num(s.slots_total as f64)),
+                    ("mean_occupancy", Json::num(s.mean_occupancy)),
+                    ("tokens_generated",
+                     Json::num(s.tokens_generated as f64)),
+                    ("admitted", Json::num(s.admitted as f64)),
+                    ("finished", Json::num(s.finished as f64)),
+                    ("iterations", Json::num(s.iterations as f64)),
+                ])
+            })),
+        ),
     ])
     .render()
 }
@@ -140,6 +175,56 @@ mod tests {
             }
             _ => panic!("wrong request"),
         }
+    }
+
+    #[test]
+    fn parses_priority() {
+        let r = parse_request(
+            r#"{"op":"generate","prompt":"hi","priority":7}"#,
+        )
+        .unwrap();
+        match r {
+            ServerRequest::Generate { params, .. } => {
+                assert_eq!(params.priority, 7);
+            }
+            _ => panic!("wrong request"),
+        }
+        let r = parse_request(r#"{"op":"generate","prompt":"hi"}"#).unwrap();
+        match r {
+            ServerRequest::Generate { params, .. } => {
+                assert_eq!(params.priority, 0, "priority defaults to 0");
+            }
+            _ => panic!("wrong request"),
+        }
+    }
+
+    #[test]
+    fn renders_stats() {
+        let snap = EngineSnapshot {
+            policy: "spf",
+            queue_depth: 3,
+            queue_pressure: 0.25,
+            active_slots: 2,
+            inflight_prefills: 1,
+            slots_total: 8,
+            mean_occupancy: 1.5,
+            tokens_generated: 42,
+            admitted: 6,
+            finished: 5,
+            iterations: 99,
+        };
+        let s = render_stats(&[("dense".to_string(), snap)]);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        let reps = j.get("replicas").and_then(Json::as_arr).unwrap();
+        assert_eq!(reps.len(), 1);
+        assert_eq!(reps[0].get("variant").and_then(Json::as_str),
+                   Some("dense"));
+        assert_eq!(reps[0].get("policy").and_then(Json::as_str), Some("spf"));
+        assert_eq!(reps[0].get("queue_depth").and_then(Json::as_usize),
+                   Some(3));
+        assert_eq!(reps[0].get("tokens_generated").and_then(Json::as_usize),
+                   Some(42));
     }
 
     #[test]

@@ -18,11 +18,14 @@ use crate::coordinator::router::Router;
 use crate::util::threadpool::ThreadPool;
 
 use super::protocol::{parse_request, render_completion, render_error,
-                      ServerRequest};
+                      render_stats, ServerRequest};
 
 enum ToEngine {
     Generate {
         line_req: ServerRequest,
+        reply: Sender<String>,
+    },
+    Stats {
         reply: Sender<String>,
     },
     Shutdown,
@@ -60,6 +63,9 @@ pub fn serve<M: StepModel>(
         while let Ok(msg) = rx.try_recv() {
             match msg {
                 ToEngine::Shutdown => return Ok(served),
+                ToEngine::Stats { reply } => {
+                    let _ = reply.send(render_stats(&router.stats_snapshot()));
+                }
                 ToEngine::Generate { line_req, reply } => {
                     if let ServerRequest::Generate { prompt, params, variant } =
                         line_req
@@ -113,7 +119,19 @@ fn handle_conn(stream: TcpStream, tx: Sender<ToEngine>) {
         let response = match parse_request(&line) {
             Err(e) => render_error(&e.to_string()),
             Ok(ServerRequest::Ping) => r#"{"ok":true,"pong":true}"#.to_string(),
-            Ok(ServerRequest::Stats) => r#"{"ok":true}"#.to_string(),
+            Ok(ServerRequest::Stats) => {
+                // The engine thread owns the router; ask it for a
+                // snapshot the same way generate results flow back.
+                let (reply_tx, reply_rx) = channel();
+                if tx.send(ToEngine::Stats { reply: reply_tx }).is_err() {
+                    render_error("engine shut down")
+                } else {
+                    match reply_rx.recv_timeout(Duration::from_secs(10)) {
+                        Ok(r) => r,
+                        Err(_) => render_error("timeout"),
+                    }
+                }
+            }
             Ok(req @ ServerRequest::Generate { .. }) => {
                 let (reply_tx, reply_rx) = channel();
                 if tx
@@ -176,6 +194,37 @@ mod tests {
         .unwrap();
         assert!(resp.contains("\"ok\":true"), "{resp}");
         assert!(resp.contains("\"reason\":\"length\""), "{resp}");
+        let served = h.join().unwrap().unwrap();
+        assert_eq!(served, 1);
+    }
+
+    #[test]
+    fn stats_over_tcp_reports_replicas() {
+        let router = Router::new(vec![(
+            "mock".to_string(),
+            InferenceEngine::new(MockModel::new(2, 64, 256, vec![4, 8]),
+                                 EngineConfig::default()),
+        )]);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let addr2 = addr.clone();
+        let h = std::thread::spawn(move || serve(router, &addr2, Some(1)));
+        std::thread::sleep(Duration::from_millis(100));
+        let resp = client_roundtrip(&addr, r#"{"op":"stats"}"#).unwrap();
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+        assert!(resp.contains("\"replicas\""), "{resp}");
+        assert!(resp.contains("\"variant\":\"mock\""), "{resp}");
+        assert!(resp.contains("\"policy\":\"fifo\""), "{resp}");
+        assert!(resp.contains("\"queue_depth\":0"), "{resp}");
+        assert!(resp.contains("\"slots_total\":2"), "{resp}");
+        // One generate terminates the server (stats don't count).
+        let resp = client_roundtrip(
+            &addr,
+            r#"{"op":"generate","prompt":"ab","max_tokens":2}"#,
+        )
+        .unwrap();
+        assert!(resp.contains("\"ok\":true"), "{resp}");
         let served = h.join().unwrap().unwrap();
         assert_eq!(served, 1);
     }

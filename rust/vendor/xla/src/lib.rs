@@ -1,0 +1,156 @@
+//! API-compatible stub for the `xla` (xla-rs) PJRT bindings.
+//!
+//! The container image does not ship the real XLA/PJRT shared libraries,
+//! so this crate provides the exact type/method surface the `tardis`
+//! runtime layer compiles against (`cargo build --features pjrt`
+//! type-checks end to end) while every entry point that would touch a
+//! device fails fast with a descriptive error. To run on real hardware,
+//! point the `xla` path dependency in `rust/Cargo.toml` at the actual
+//! xla-rs checkout — no source change in `tardis` is needed.
+
+use std::fmt;
+
+const STUB_MSG: &str =
+    "xla stub: built without real PJRT bindings (swap rust/vendor/xla for xla-rs)";
+
+/// Error type mirroring xla-rs's: printable, nothing more is relied on.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err<T>() -> Result<T> {
+    Err(Error(STUB_MSG.to_string()))
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F16,
+    S32,
+    S8,
+    U8,
+    Pred,
+}
+
+pub struct PjRtDevice {
+    _private: (),
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        stub_err()
+    }
+}
+
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        stub_err()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        stub_err()
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        stub_err()
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        stub_err()
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        stub_err()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        stub_err()
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        stub_err()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        stub_err()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_fails_with_the_stub_message() {
+        assert!(PjRtClient::cpu().unwrap_err().to_string().contains("xla stub"));
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[0u8; 16]
+        )
+        .is_err());
+    }
+}
