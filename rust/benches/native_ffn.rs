@@ -1,0 +1,133 @@
+//! Native FFN fold benchmark: dense vs TARDIS-folded forward at several
+//! fold ratios (TINY_GELU shape), plus full decode steps through the
+//! NativeModel, cross-validated against `costmodel::tardis_speedup`.
+//!
+//! Run: `cargo bench --bench native_ffn`
+
+use std::sync::Arc;
+
+use tardis::bench::{black_box, Bench};
+use tardis::config::{FfnMode, NativeModelConfig, TardisFfnConfig};
+use tardis::coordinator::model::{NativeModel, StepModel};
+use tardis::costmodel;
+use tardis::ffn::linalg::norm;
+use tardis::ffn::{DenseFfn, FoldedFfn};
+use tardis::util::rng::Rng;
+
+fn tiny_dense(rng: &mut Rng, d: usize, h: usize) -> DenseFfn {
+    let scale = 1.0 / (d as f64).sqrt();
+    DenseFfn::new(
+        Arc::new((0..d * h).map(|_| (rng.normal() * scale) as f32).collect()),
+        Arc::new(vec![0.0; h]),
+        Arc::new((0..h * d).map(|_| (rng.normal() * scale) as f32).collect()),
+        Arc::new(vec![0.0; d]),
+        d,
+        h,
+    )
+}
+
+fn main() {
+    let mut b = Bench::new("native_ffn");
+    let spec = costmodel::TINY_GELU;
+    let (d, h) = (spec.d_model, spec.d_ff);
+    let batch = 4;
+    let mut rng = Rng::new(0xBEEF);
+
+    // ---- FFN-level: dense vs folded forward ----------------------------
+    let dense = tiny_dense(&mut rng, d, h);
+    let x_dir: Vec<f32> = (0..batch * d).map(|_| rng.normal() as f32).collect();
+    let mk_rows = |radius: f32| {
+        let mut x = x_dir.clone();
+        for row in x.chunks_mut(d) {
+            let n = norm(row).max(1e-6);
+            for v in row.iter_mut() {
+                *v *= radius / n;
+            }
+        }
+        x
+    };
+
+    let xd = mk_rows(1.0);
+    b.run("ffn/dense", || {
+        black_box(dense.forward(None, &xd, batch));
+    });
+
+    let mut measured: Vec<(f64, f64)> = Vec::new(); // (ratio, speedup)
+    for pct in [50u32, 70, 80] {
+        let cfg = TardisFfnConfig {
+            fold_ratio: pct as f64 / 100.0,
+            ..TardisFfnConfig::default()
+        };
+        let mut folded = FoldedFfn::new(dense.clone(), &cfg);
+        // rows inside the provable radius: the folded path dominates
+        let xf = mk_rows(0.9 * folded.predictor.safe_radius());
+        let case = format!("ffn/tardis{pct}");
+        b.run(&case, || {
+            black_box(folded.forward(None, &xf, batch));
+        });
+        let (dm, fm) = (
+            b.mean_ms("ffn/dense").unwrap(),
+            b.mean_ms(&case).unwrap(),
+        );
+        measured.push((folded.compression_ratio(), dm / fm));
+    }
+
+    // ---- model-level: full decode steps --------------------------------
+    let model_cfg = NativeModelConfig::tiny_gelu();
+    let mut decode_means: Vec<(String, f64)> = Vec::new();
+    for (name, mode) in [
+        ("dense".to_string(), FfnMode::Dense),
+        (
+            "tardis80".to_string(),
+            FfnMode::Tardis(TardisFfnConfig::with_ratio(0.8)),
+        ),
+    ] {
+        let mut model = NativeModel::new(model_cfg.clone(), &mode);
+        let tokens: Vec<i32> = (0..model_cfg.batch as i32).collect();
+        // warm up the KV cache and the online predictor
+        for s in 0..8 {
+            let pos = vec![s; model_cfg.batch];
+            model.decode(&tokens, &pos).unwrap();
+        }
+        let mut s = 8i32;
+        let case = format!("decode/{name}");
+        b.run(&case, || {
+            let pos = vec![s % model_cfg.max_seq as i32; model_cfg.batch];
+            black_box(model.decode(&tokens, &pos).unwrap());
+            s += 1;
+        });
+        decode_means.push((name, b.mean_ms(&case).unwrap()));
+        if let Some(t) = model.ffn_telemetry() {
+            println!(
+                "  [{case}] fallback rate {:.2}%",
+                t.fallback_rate().unwrap_or(0.0) * 100.0
+            );
+        }
+    }
+
+    // ---- cross-validation against the analytic cost model --------------
+    println!();
+    println!("fold ratio vs costmodel (TINY_GELU on cpu-1core):");
+    for (ratio, speedup) in &measured {
+        let (ffn_t, e2e_t) = costmodel::tardis_speedup(
+            &spec,
+            &costmodel::CPU_1CORE,
+            batch,
+            64,
+            *ratio,
+            0.0,
+        );
+        println!(
+            "  compression {:5.1}%: measured ffn {speedup:5.2}x, \
+             theory ffn {ffn_t:5.2}x (e2e {e2e_t:5.2}x)",
+            ratio * 100.0
+        );
+    }
+    if decode_means.len() == 2 {
+        println!(
+            "decode-step speedup tardis80 vs dense: {:.2}x",
+            decode_means[0].1 / decode_means[1].1
+        );
+    }
+    b.report();
+}

@@ -1,9 +1,17 @@
-//! Manifest + configuration loading.
+//! Manifest + configuration loading, and the backend axis.
 //!
 //! `artifacts/manifest.json` is the contract between the python compile
 //! path and the rust runtime: the model shape, the KV-cache layout, and
 //! for each compression variant the HLO executables, their input
 //! signatures, and the weight table into `<variant>.weights.bin`.
+//!
+//! The std-only side of this module defines the serving stack's backend
+//! matrix ([`BackendKind`]: mock / native / pjrt), the native model shape
+//! ([`NativeModelConfig`]) and the per-variant TARDIS fold parameters
+//! ([`TardisFfnConfig`]: fold ratio, linear-range bounds, predictor
+//! threshold) — shared by the manifest parser, the CLI and the native
+//! backend, so "which backend" is a first-class configuration axis
+//! instead of a cfg-gated special case.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -11,6 +19,185 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Backend axis.
+// ---------------------------------------------------------------------------
+
+/// Which step-model implementation the serving stack runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust tiny GELU transformer with dense or TARDIS FFNs
+    /// (std-only, no artifacts).
+    #[default]
+    Native,
+    /// Deterministic mock (scheduler tests and protocol experiments).
+    Mock,
+    /// PJRT runtime over exported artifacts (`--features pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "native" => Some(BackendKind::Native),
+            "mock" => Some(BackendKind::Mock),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Mock => "mock",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Per-variant TARDIS fold parameters (the knobs the python pipeline
+/// calibrates; uniform across units in the native backend).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TardisFfnConfig {
+    /// Fraction of hidden units folded into the `d×d` map.
+    pub fold_ratio: f64,
+    /// Approximated linear range `[lo, hi)` of the activation.
+    pub linear_lo: f32,
+    pub linear_hi: f32,
+    /// Online outlier predictor margin (see
+    /// [`crate::ffn::OutlierPredictor`]); 1.0 = fold only norms at or
+    /// below observed/provable in-range norms.
+    pub predictor_threshold: f32,
+}
+
+impl TardisFfnConfig {
+    pub fn with_ratio(fold_ratio: f64) -> TardisFfnConfig {
+        TardisFfnConfig { fold_ratio, ..TardisFfnConfig::default() }
+    }
+}
+
+impl Default for TardisFfnConfig {
+    fn default() -> Self {
+        TardisFfnConfig {
+            fold_ratio: 0.8,
+            linear_lo: -6.0,
+            linear_hi: 6.0,
+            predictor_threshold: 1.05,
+        }
+    }
+}
+
+/// FFN execution mode of a native variant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FfnMode {
+    /// Pure GELU dense FFN (baseline).
+    Dense,
+    /// Folded partially-linear FFN with online outlier fallback.
+    Tardis(TardisFfnConfig),
+    /// Dense math with the same partial linearization as the fold — the
+    /// semantic reference the folded path must reproduce (tests).
+    TardisReference(TardisFfnConfig),
+}
+
+impl FfnMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FfnMode::Dense => "dense",
+            FfnMode::Tardis(_) => "tardis",
+            FfnMode::TardisReference(_) => "tardis_reference",
+        }
+    }
+}
+
+/// Resolve a native variant name to its FFN mode: `dense`,
+/// `tardis<PCT>` (e.g. `tardis80` = fold ratio 0.80) or
+/// `tardis-ref<PCT>` (the unfolded reference at the same linearization).
+pub fn native_ffn_mode(name: &str) -> Option<FfnMode> {
+    if name == "dense" {
+        return Some(FfnMode::Dense);
+    }
+    if let Some(pct) = name.strip_prefix("tardis-ref") {
+        let p: u32 = pct.parse().ok()?;
+        if p == 0 || p > 100 {
+            return None;
+        }
+        return Some(FfnMode::TardisReference(TardisFfnConfig::with_ratio(
+            p as f64 / 100.0,
+        )));
+    }
+    if let Some(pct) = name.strip_prefix("tardis") {
+        let p: u32 = pct.parse().ok()?;
+        if p == 0 || p > 100 {
+            return None;
+        }
+        return Some(FfnMode::Tardis(TardisFfnConfig::with_ratio(
+            p as f64 / 100.0,
+        )));
+    }
+    None
+}
+
+/// The native variants the CLI serves/benches by default.
+pub fn builtin_native_variants() -> Vec<(String, FfnMode)> {
+    ["dense", "tardis50", "tardis70", "tardis80"]
+        .iter()
+        .map(|n| (n.to_string(), native_ffn_mode(n).expect("builtin")))
+        .collect()
+}
+
+/// Shape + execution knobs of the native backend. Defaults to the
+/// costmodel's `TINY_GELU` shape so every native path runs without
+/// artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NativeModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    /// Decode batch (KV slots).
+    pub batch: usize,
+    pub prefill_buckets: Vec<usize>,
+    /// Weight synthesis seed.
+    pub seed: u64,
+    /// Worker threads for matmuls (0 = serial).
+    pub threads: usize,
+}
+
+impl NativeModelConfig {
+    pub fn tiny_gelu() -> NativeModelConfig {
+        NativeModelConfig {
+            vocab: 256,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 512,
+            max_seq: 256,
+            batch: 4,
+            prefill_buckets: vec![16, 64],
+            seed: 0x7A9D15,
+            threads: 0,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        assert!(
+            self.n_heads > 0 && self.d_model % self.n_heads == 0,
+            "d_model {} not divisible by n_heads {}",
+            self.d_model,
+            self.n_heads
+        );
+        self.d_model / self.n_heads
+    }
+}
+
+impl Default for NativeModelConfig {
+    fn default() -> Self {
+        NativeModelConfig::tiny_gelu()
+    }
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelInfo {
@@ -75,6 +262,10 @@ pub struct VariantSpec {
     pub weights_file: String,
     pub params: Vec<ParamEntry>,
     pub executables: BTreeMap<String, ExecSpec>,
+    /// TARDIS fold parameters, when the variant declares a `fold_ratio`
+    /// (optional manifest keys: `fold_ratio`, `linear_lo`, `linear_hi`,
+    /// `predictor_threshold`).
+    pub tardis: Option<TardisFfnConfig>,
 }
 
 #[derive(Debug, Clone)]
@@ -185,6 +376,27 @@ impl Manifest {
                     },
                 );
             }
+            let tardis = v.get("fold_ratio").and_then(Json::as_f64).map(|r| {
+                let d = TardisFfnConfig::default();
+                TardisFfnConfig {
+                    fold_ratio: r,
+                    linear_lo: v
+                        .get("linear_lo")
+                        .and_then(Json::as_f64)
+                        .map(|x| x as f32)
+                        .unwrap_or(d.linear_lo),
+                    linear_hi: v
+                        .get("linear_hi")
+                        .and_then(Json::as_f64)
+                        .map(|x| x as f32)
+                        .unwrap_or(d.linear_hi),
+                    predictor_threshold: v
+                        .get("predictor_threshold")
+                        .and_then(Json::as_f64)
+                        .map(|x| x as f32)
+                        .unwrap_or(d.predictor_threshold),
+                }
+            });
             variants.push(VariantSpec {
                 name: req_str(v, "name")?,
                 ffn_mode: req_str(v, "ffn_mode")?,
@@ -195,6 +407,7 @@ impl Manifest {
                 weights_file: req_str(v, "weights_file")?,
                 params,
                 executables,
+                tardis,
             });
         }
 
@@ -288,7 +501,81 @@ mod tests {
         assert_eq!(m.variant_names(), vec!["dense"]);
         let v = m.variant("dense").unwrap();
         assert_eq!(v.param("top.embed").unwrap().nbytes, 8192);
+        assert!(v.tardis.is_none(), "no fold_ratio key => no tardis config");
         assert!(m.variant("nope").is_err());
         assert!(v.param("nope").is_err());
+    }
+
+    #[test]
+    fn parses_variant_tardis_fields() {
+        let tmp = std::env::temp_dir().join("tardis_manifest_test_fold");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let path = tmp.join("manifest.json");
+        std::fs::write(
+            &path,
+            r#"{
+              "model": {"name":"m","vocab":256,"d_model":8,"n_layers":1,
+                        "n_heads":2,"d_ff":32,"max_seq":16,"act":"gelu"},
+              "batch": 2,
+              "prefill_buckets": [4],
+              "kv_shape": [1,2,2,2,16,4],
+              "variants": [
+                {"name":"tardis80","ffn_mode":"tardis","fix_capacity":8,
+                 "compression_ratio":0.8,"weights_file":"t.weights.bin",
+                 "fold_ratio":0.8,"linear_lo":-4.0,"linear_hi":4.5,
+                 "params":[],"executables":{}}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&path).unwrap();
+        let t = m.variant("tardis80").unwrap().tardis.expect("tardis cfg");
+        assert!((t.fold_ratio - 0.8).abs() < 1e-12);
+        assert!((t.linear_lo + 4.0).abs() < 1e-6);
+        assert!((t.linear_hi - 4.5).abs() < 1e-6);
+        // unspecified key falls back to the default
+        let d = TardisFfnConfig::default();
+        assert!((t.predictor_threshold - d.predictor_threshold).abs() < 1e-6);
+    }
+
+    #[test]
+    fn backend_kind_roundtrip() {
+        for k in [BackendKind::Native, BackendKind::Mock, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("gpu"), None);
+        assert_eq!(BackendKind::default(), BackendKind::Native);
+    }
+
+    #[test]
+    fn native_variant_names_resolve() {
+        assert_eq!(native_ffn_mode("dense"), Some(FfnMode::Dense));
+        match native_ffn_mode("tardis80") {
+            Some(FfnMode::Tardis(t)) => {
+                assert!((t.fold_ratio - 0.8).abs() < 1e-12)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match native_ffn_mode("tardis-ref65") {
+            Some(FfnMode::TardisReference(t)) => {
+                assert!((t.fold_ratio - 0.65).abs() < 1e-12)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(native_ffn_mode("tardis0"), None);
+        assert_eq!(native_ffn_mode("tardis101"), None);
+        assert_eq!(native_ffn_mode("mock"), None);
+        let builtins = builtin_native_variants();
+        assert_eq!(builtins.len(), 4);
+        assert_eq!(builtins[0].0, "dense");
+    }
+
+    #[test]
+    fn native_config_defaults_to_tiny_gelu() {
+        let c = NativeModelConfig::default();
+        assert_eq!(c.d_model, 128);
+        assert_eq!(c.d_ff, 512);
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.vocab, 256);
     }
 }

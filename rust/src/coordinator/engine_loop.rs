@@ -60,6 +60,12 @@ pub struct EngineStats {
     pub occupancy_sum: u64,
     /// High-water mark of concurrently in-flight prefill jobs.
     pub max_concurrent_prefills: usize,
+    /// Cumulative TARDIS row routing (0/0 unless the model runs a
+    /// partially-linear FFN; see [`StepModel::ffn_telemetry`]).
+    pub ffn_folded_rows: u64,
+    pub ffn_fallback_rows: u64,
+    /// Fallback fraction of the most recent step that routed any rows.
+    pub ffn_last_step_fallback_rate: Option<f64>,
 }
 
 impl EngineStats {
@@ -68,6 +74,17 @@ impl EngineStats {
             return 0.0;
         }
         self.occupancy_sum as f64 / self.decode_steps as f64
+    }
+
+    /// Cumulative fraction of FFN rows routed to the dense fallback
+    /// path; `None` until a partially-linear model routed any row.
+    pub fn ffn_fallback_rate(&self) -> Option<f64> {
+        let total = self.ffn_folded_rows + self.ffn_fallback_rows;
+        if total == 0 {
+            None
+        } else {
+            Some(self.ffn_fallback_rows as f64 / total as f64)
+        }
     }
 }
 
@@ -85,6 +102,11 @@ pub struct EngineSnapshot {
     pub admitted: u64,
     pub finished: u64,
     pub iterations: u64,
+    /// Cumulative fraction of FFN rows routed to the dense fallback path
+    /// (None unless the backend runs a partially-linear FFN).
+    pub ffn_fallback_rate: Option<f64>,
+    /// Same fraction over the most recent step that routed any rows.
+    pub ffn_last_step_fallback_rate: Option<f64>,
 }
 
 /// A finished request handed back to the caller.
@@ -207,6 +229,8 @@ impl<M: StepModel> InferenceEngine<M> {
             admitted: self.stats.admitted,
             finished: self.stats.finished,
             iterations: self.stats.iterations,
+            ffn_fallback_rate: self.stats.ffn_fallback_rate(),
+            ffn_last_step_fallback_rate: self.stats.ffn_last_step_fallback_rate,
         }
     }
 
@@ -241,8 +265,21 @@ impl<M: StepModel> InferenceEngine<M> {
     /// state and execute it. Returns what the plan actually did.
     pub fn step(&mut self) -> Result<StepOutcome> {
         self.stats.iterations += 1;
+        let before = self.model.ffn_telemetry();
         let plan = self.make_plan();
-        self.execute_plan(plan)
+        let outcome = self.execute_plan(plan);
+        if let Some(t) = self.model.ffn_telemetry() {
+            let prev = before.unwrap_or_default();
+            self.stats.ffn_folded_rows = t.folded_rows;
+            self.stats.ffn_fallback_rows = t.fallback_rows;
+            let folded = t.folded_rows.saturating_sub(prev.folded_rows);
+            let fallback = t.fallback_rows.saturating_sub(prev.fallback_rows);
+            if folded + fallback > 0 {
+                self.stats.ffn_last_step_fallback_rate =
+                    Some(fallback as f64 / (folded + fallback) as f64);
+            }
+        }
+        outcome
     }
 
     /// Drive until every submitted request has finished.
@@ -635,6 +672,44 @@ mod tests {
         assert_eq!(s.queue_depth, 0);
         assert_eq!(s.finished, 4);
         assert!(s.tokens_generated >= 16);
+    }
+
+    #[test]
+    fn fallback_rate_flows_into_snapshot() {
+        use crate::config::{FfnMode, NativeModelConfig, TardisFfnConfig};
+        use crate::coordinator::model::NativeModel;
+        // Mock backend: no partially-linear FFN, no rate.
+        let mut e = engine(2);
+        e.submit(vec![1, 2], SamplingParams { max_tokens: 2, ..Default::default() })
+            .unwrap();
+        e.run_to_completion().unwrap();
+        assert!(e.snapshot().ffn_fallback_rate.is_none());
+        // Native tardis backend: rate is reported after any routed row.
+        let cfg = NativeModelConfig {
+            vocab: 32,
+            d_model: 32,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 64,
+            max_seq: 32,
+            batch: 2,
+            prefill_buckets: vec![4],
+            seed: 5,
+            threads: 0,
+        };
+        let model = NativeModel::new(
+            cfg,
+            &FfnMode::Tardis(TardisFfnConfig::with_ratio(0.8)),
+        );
+        let mut e = InferenceEngine::new(model, EngineConfig::default());
+        e.submit(vec![1, 2, 3], SamplingParams { max_tokens: 4, ..Default::default() })
+            .unwrap();
+        e.run_to_completion().unwrap();
+        let s = e.snapshot();
+        let rate = s.ffn_fallback_rate.expect("tardis backend reports a rate");
+        assert!((0.0..=1.0).contains(&rate), "rate {rate}");
+        assert!(s.ffn_last_step_fallback_rate.is_some());
+        assert!(e.stats.ffn_folded_rows + e.stats.ffn_fallback_rows > 0);
     }
 
     #[test]

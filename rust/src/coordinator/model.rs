@@ -1,14 +1,25 @@
-//! The step-model abstraction the coordinator schedules against.
+//! The step-model abstraction the coordinator schedules against, and the
+//! backend matrix behind it.
 //!
-//! `PjrtModel` (behind the `pjrt` feature) wraps a loaded
-//! [`crate::runtime::Variant`] and owns the device-resident KV cache,
-//! threading it through prefill/decode calls. `MockModel` is a
-//! deterministic pure-rust stand-in so every coordinator test and bench
-//! runs without artifacts.
+//! * `MockModel`   — deterministic pure-rust stand-in so every
+//!   coordinator test and bench runs without artifacts.
+//! * `NativeModel` — a real tiny GELU transformer (the costmodel's
+//!   `TINY_GELU` shape) executed std-only on the CPU, with either a
+//!   dense FFN or the TARDIS partially-linear fold from [`crate::ffn`];
+//!   the whole scheduler/policy machinery runs unchanged on top of it.
+//! * `PjrtModel`   — (behind the `pjrt` feature) wraps a loaded
+//!   [`crate::runtime::Variant`] and owns the device-resident KV cache,
+//!   threading it through prefill/decode calls.
 
 use anyhow::Result;
 
 use super::scheduler::{StepOutcome, StepPlan};
+
+use crate::config::{FfnMode, NativeModelConfig};
+use crate::ffn::linalg::{dot, layernorm, matmul};
+use crate::ffn::{DenseFfn, FfnBackend, FfnTelemetry, FoldedFfn, Linearization};
+use crate::runtime::weights::NativeWeights;
+use crate::util::threadpool::ThreadPool;
 
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Variant};
@@ -39,6 +50,13 @@ pub trait StepModel {
     /// One decode step over all slots. `tokens[b]`/`pos[b]` for inactive
     /// slots carry (0, max_seq) sentinels. Returns logits `[batch*vocab]`.
     fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>>;
+
+    /// Cumulative partially-linear FFN routing telemetry (how many batch
+    /// rows ran the folded path vs the dense outlier fallback), if this
+    /// backend runs a TARDIS fold. Default: none.
+    fn ffn_telemetry(&self) -> Option<FfnTelemetry> {
+        None
+    }
 
     /// Smallest bucket that fits `n` tokens (or the largest bucket).
     fn bucket_for(&self, n: usize) -> usize {
@@ -154,6 +172,296 @@ impl<'e> StepModel for PjrtModel<'e> {
         self.kv = kv;
         self.decode_steps += 1;
         Ok(logits)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native std-only model: a tiny GELU transformer over crate::ffn.
+// ---------------------------------------------------------------------------
+
+/// One token's place in a forward batch.
+#[derive(Debug, Clone, Copy)]
+struct RowCtx {
+    token: i32,
+    slot: usize,
+    pos: usize,
+}
+
+/// Host-resident K/V cache of one layer: `[batch, max_seq, d_model]`
+/// each, row-major.
+struct LayerKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// A real (tiny) transformer executed in pure Rust: embedding → N
+/// pre-LN blocks (bias-free MHA + FFN) → final LN → tied unembedding.
+/// The FFN of every block is a [`FfnBackend`]: dense GELU for the
+/// baseline variant, the TARDIS constant fold with online outlier
+/// fallback for `tardis*` variants. Weights are synthesized
+/// deterministically from the config seed, so no artifacts are needed.
+pub struct NativeModel {
+    cfg: NativeModelConfig,
+    mode_name: &'static str,
+    weights: NativeWeights,
+    ffns: Vec<FfnBackend>,
+    kv: Vec<LayerKv>,
+    pool: Option<ThreadPool>,
+    pub decode_steps: u64,
+    pub prefill_chunks: u64,
+}
+
+impl NativeModel {
+    /// Build with deterministically synthesized weights.
+    pub fn new(cfg: NativeModelConfig, mode: &FfnMode) -> NativeModel {
+        let weights = NativeWeights::synthesize(&cfg);
+        NativeModel::with_weights(cfg, weights, mode)
+    }
+
+    pub fn with_weights(
+        cfg: NativeModelConfig,
+        weights: NativeWeights,
+        mode: &FfnMode,
+    ) -> NativeModel {
+        let _ = cfg.head_dim(); // validate the shape up front
+        let ffns = weights
+            .layers
+            .iter()
+            .map(|lw| {
+                let dense = DenseFfn::new(
+                    lw.w1.clone(),
+                    lw.b1.clone(),
+                    lw.w2.clone(),
+                    lw.b2.clone(),
+                    cfg.d_model,
+                    cfg.d_ff,
+                );
+                match mode {
+                    FfnMode::Dense => FfnBackend::Dense(dense),
+                    FfnMode::Tardis(t) => {
+                        FfnBackend::Folded(Box::new(FoldedFfn::new(dense, t)))
+                    }
+                    FfnMode::TardisReference(t) => {
+                        let units = ((t.fold_ratio * cfg.d_ff as f64).round()
+                            as usize)
+                            .min(cfg.d_ff);
+                        let lin =
+                            Linearization::fit_gelu(t.linear_lo, t.linear_hi);
+                        FfnBackend::Dense(dense.with_linearization(lin, units))
+                    }
+                }
+            })
+            .collect();
+        let kv = (0..cfg.n_layers)
+            .map(|_| LayerKv {
+                k: vec![0f32; cfg.batch * cfg.max_seq * cfg.d_model],
+                v: vec![0f32; cfg.batch * cfg.max_seq * cfg.d_model],
+            })
+            .collect();
+        let pool = if cfg.threads > 0 {
+            Some(ThreadPool::new(cfg.threads))
+        } else {
+            None
+        };
+        NativeModel {
+            mode_name: mode.name(),
+            weights,
+            ffns,
+            kv,
+            pool,
+            decode_steps: 0,
+            prefill_chunks: 0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &NativeModelConfig {
+        &self.cfg
+    }
+
+    pub fn ffn_mode_name(&self) -> &'static str {
+        self.mode_name
+    }
+
+    /// Mean FFN parameter compression across layers (None for dense).
+    pub fn fold_compression_ratio(&self) -> Option<f64> {
+        let ratios: Vec<f64> = self
+            .ffns
+            .iter()
+            .filter_map(|f| f.compression_ratio())
+            .collect();
+        if ratios.is_empty() {
+            None
+        } else {
+            Some(ratios.iter().sum::<f64>() / ratios.len() as f64)
+        }
+    }
+
+    /// Run the transformer over `rows`, returning the logits of the rows
+    /// listed in `logit_rows` (concatenated, `[logit_rows.len()*vocab]`).
+    fn forward(&mut self, rows: &[RowCtx], logit_rows: &[usize]) -> Vec<f32> {
+        let n = rows.len();
+        let d = self.cfg.d_model;
+        let max_seq = self.cfg.max_seq;
+        let n_heads = self.cfg.n_heads;
+        let hd = d / n_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+
+        // Embedding lookup.
+        let mut x = vec![0f32; n * d];
+        for (xi, r) in x.chunks_exact_mut(d).zip(rows) {
+            let t = r.token.rem_euclid(self.cfg.vocab as i32) as usize;
+            xi.copy_from_slice(&self.weights.embed[t * d..(t + 1) * d]);
+        }
+
+        for li in 0..self.cfg.n_layers {
+            // -- attention ----------------------------------------------
+            let lw = &self.weights.layers[li];
+            let pool = self.pool.as_ref();
+            let a = layernorm(&x, n, d, &lw.ln1_gain, &lw.ln1_bias);
+            let q = matmul(pool, &a, n, d, &lw.attn.wq, d, None);
+            let k = matmul(pool, &a, n, d, &lw.attn.wk, d, None);
+            let v = matmul(pool, &a, n, d, &lw.attn.wv, d, None);
+            let kv = &mut self.kv[li];
+            for (i, r) in rows.iter().enumerate() {
+                let off = (r.slot * max_seq + r.pos) * d;
+                kv.k[off..off + d].copy_from_slice(&k[i * d..(i + 1) * d]);
+                kv.v[off..off + d].copy_from_slice(&v[i * d..(i + 1) * d]);
+            }
+            // Causal attention per row over its slot's cache 0..=pos.
+            // Rows never share a (slot, pos) cell and each attends only
+            // up to its own position, so batch order cannot leak.
+            let mut ctx = vec![0f32; n * d];
+            let mut scores: Vec<f32> = Vec::new();
+            for (i, r) in rows.iter().enumerate() {
+                let base = r.slot * max_seq * d;
+                for head in 0..n_heads {
+                    let qh = &q[i * d + head * hd..i * d + (head + 1) * hd];
+                    scores.clear();
+                    let mut max_s = f32::NEG_INFINITY;
+                    for t in 0..=r.pos {
+                        let koff = base + t * d + head * hd;
+                        let s = dot(qh, &kv.k[koff..koff + hd]) * scale;
+                        max_s = max_s.max(s);
+                        scores.push(s);
+                    }
+                    let mut denom = 0f32;
+                    for s in scores.iter_mut() {
+                        *s = (*s - max_s).exp();
+                        denom += *s;
+                    }
+                    let out = &mut ctx[i * d + head * hd..i * d + (head + 1) * hd];
+                    for (t, &w) in scores.iter().enumerate() {
+                        let voff = base + t * d + head * hd;
+                        let p = w / denom;
+                        for (o, &vv) in out.iter_mut().zip(&kv.v[voff..voff + hd])
+                        {
+                            *o += p * vv;
+                        }
+                    }
+                }
+            }
+            let o = matmul(pool, &ctx, n, d, &lw.attn.wo, d, None);
+            for (xv, &ov) in x.iter_mut().zip(&o) {
+                *xv += ov;
+            }
+            // -- FFN ----------------------------------------------------
+            let f = layernorm(&x, n, d, &lw.ln2_gain, &lw.ln2_bias);
+            let y = self.ffns[li].forward(self.pool.as_ref(), &f, n);
+            for (xv, &yv) in x.iter_mut().zip(&y) {
+                *xv += yv;
+            }
+        }
+
+        // Final LN + tied unembedding for the requested rows only.
+        let xf = layernorm(&x, n, d, &self.weights.lnf_gain, &self.weights.lnf_bias);
+        let vocab = self.cfg.vocab;
+        let mut logits = vec![0f32; logit_rows.len() * vocab];
+        for (out, &ri) in logits.chunks_exact_mut(vocab).zip(logit_rows) {
+            let xr = &xf[ri * d..(ri + 1) * d];
+            for (lv, erow) in out.iter_mut().zip(self.weights.embed.chunks_exact(d))
+            {
+                *lv = dot(xr, erow);
+            }
+        }
+        logits
+    }
+}
+
+impl StepModel for NativeModel {
+    fn batch(&self) -> usize {
+        self.cfg.batch
+    }
+
+    fn max_seq(&self) -> usize {
+        self.cfg.max_seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.cfg.prefill_buckets
+    }
+
+    fn ffn_telemetry(&self) -> Option<FfnTelemetry> {
+        let mut total = FfnTelemetry::default();
+        let mut any = false;
+        for f in &self.ffns {
+            if let FfnBackend::Folded(_) = f {
+                any = true;
+            }
+            total.accumulate(f.telemetry());
+        }
+        if any {
+            Some(total)
+        } else {
+            None
+        }
+    }
+
+    fn prefill(&mut self, bucket: usize, tokens: &[i32], real_len: usize,
+               slot: usize, pos0: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == bucket, "tokens not padded to bucket");
+        anyhow::ensure!(slot < self.cfg.batch, "slot {slot} out of range");
+        anyhow::ensure!(real_len >= 1 && real_len <= bucket);
+        anyhow::ensure!(pos0 + real_len <= self.cfg.max_seq,
+                        "prefill past max_seq");
+        let rows: Vec<RowCtx> = tokens[..real_len]
+            .iter()
+            .enumerate()
+            .map(|(i, &token)| RowCtx { token, slot, pos: pos0 + i })
+            .collect();
+        let logits = self.forward(&rows, &[real_len - 1]);
+        self.prefill_chunks += 1;
+        Ok(logits)
+    }
+
+    fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        let batch = self.cfg.batch;
+        anyhow::ensure!(tokens.len() == batch && pos.len() == batch);
+        let mut rows = Vec::new();
+        let mut row_slots = Vec::new();
+        for b in 0..batch {
+            let p = pos[b];
+            if p >= 0 && (p as usize) < self.cfg.max_seq {
+                rows.push(RowCtx { token: tokens[b], slot: b, pos: p as usize });
+                row_slots.push(b);
+            }
+        }
+        let vocab = self.cfg.vocab;
+        let mut out = vec![0f32; batch * vocab];
+        if !rows.is_empty() {
+            let logit_rows: Vec<usize> = (0..rows.len()).collect();
+            let logits = self.forward(&rows, &logit_rows);
+            for (i, &b) in row_slots.iter().enumerate() {
+                out[b * vocab..(b + 1) * vocab]
+                    .copy_from_slice(&logits[i * vocab..(i + 1) * vocab]);
+            }
+        }
+        self.decode_steps += 1;
+        Ok(out)
     }
 }
 
@@ -319,6 +627,106 @@ mod tests {
         assert_eq!(logits.len(), 8);
         assert!(logits[4..].iter().all(|&v| v == 0.0));
         assert!(logits[..4].iter().any(|&v| v > 0.0));
+    }
+
+    fn native_cfg() -> NativeModelConfig {
+        NativeModelConfig {
+            vocab: 32,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            max_seq: 32,
+            batch: 2,
+            prefill_buckets: vec![4, 8],
+            seed: 1234,
+            threads: 0,
+        }
+    }
+
+    #[test]
+    fn native_decode_masks_inactive_slots() {
+        let mut m = NativeModel::new(native_cfg(), &FfnMode::Dense);
+        let logits = m.decode(&[1, 0], &[0, 32]).unwrap(); // slot 1 inactive
+        assert_eq!(logits.len(), 2 * 32);
+        assert!(logits[32..].iter().all(|&v| v == 0.0));
+        assert!(logits[..32].iter().any(|&v| v != 0.0));
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn native_chunked_prefill_matches_single_chunk() {
+        let cfg = native_cfg();
+        let prompt = [3i32, 7, 11, 2];
+        let mut single = NativeModel::new(cfg.clone(), &FfnMode::Dense);
+        let l_single = single
+            .prefill(4, &prompt, 4, 0, 0)
+            .unwrap();
+        let mut chunked = NativeModel::new(cfg, &FfnMode::Dense);
+        let _ = chunked.prefill(4, &[3, 7, 0, 0], 2, 0, 0).unwrap();
+        let l_chunked = chunked.prefill(4, &[11, 2, 0, 0], 2, 0, 2).unwrap();
+        for (a, b) in l_single.iter().zip(&l_chunked) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn native_slots_are_isolated() {
+        let cfg = native_cfg();
+        // Slot 1 alone vs slot 1 with a busy neighbor: same logits.
+        let mut solo = NativeModel::new(cfg.clone(), &FfnMode::Dense);
+        let mut both = NativeModel::new(cfg, &FfnMode::Dense);
+        let l_solo = solo.prefill(4, &[5, 9, 0, 0], 2, 1, 0).unwrap();
+        let _ = both.prefill(4, &[8, 1, 4, 0], 3, 0, 0).unwrap();
+        let l_both = both.prefill(4, &[5, 9, 0, 0], 2, 1, 0).unwrap();
+        for (a, b) in l_solo.iter().zip(&l_both) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        // decode with a busy neighbor still matches the solo stream
+        let d_solo = solo.decode(&[6, 6], &[32, 2]).unwrap();
+        let d_both = both.decode(&[6, 6], &[3, 2]).unwrap();
+        for (a, b) in d_solo[32..].iter().zip(&d_both[32..]) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn native_tardis_tracks_reference_and_reports_telemetry() {
+        let cfg = native_cfg();
+        // Wide linear range: pre-activations are ~N(0,1) post-LN, so
+        // every row is (provably or observably) in-range and the only
+        // tardis-vs-reference difference is the fold's reassociation.
+        let t = crate::config::TardisFfnConfig {
+            fold_ratio: 0.8,
+            linear_lo: -8.0,
+            linear_hi: 8.0,
+            predictor_threshold: 1.05,
+        };
+        let mut tardis = NativeModel::new(
+            cfg.clone(),
+            &FfnMode::Tardis(t),
+        );
+        let mut reference =
+            NativeModel::new(cfg, &FfnMode::TardisReference(t));
+        assert_eq!(tardis.ffn_mode_name(), "tardis");
+        assert!(tardis.fold_compression_ratio().unwrap() > 0.3);
+        assert!(reference.fold_compression_ratio().is_none());
+        let lp_t = tardis.prefill(4, &[2, 4, 6, 8], 4, 0, 0).unwrap();
+        let lp_r = reference.prefill(4, &[2, 4, 6, 8], 4, 0, 0).unwrap();
+        for (a, b) in lp_t.iter().zip(&lp_r) {
+            assert!((a - b).abs() < 2e-2 * b.abs().max(1.0), "{a} vs {b}");
+        }
+        for s in 4..12 {
+            let dt = tardis.decode(&[s, s], &[s, s]).unwrap();
+            let dr = reference.decode(&[s, s], &[s, s]).unwrap();
+            for (a, b) in dt.iter().zip(&dr) {
+                assert!((a - b).abs() < 2e-2 * b.abs().max(1.0), "{a} vs {b}");
+            }
+        }
+        let tele = tardis.ffn_telemetry().expect("tardis has telemetry");
+        assert!(tele.total_rows() > 0);
+        assert!(reference.ffn_telemetry().is_none(),
+                "reference path reports no fold telemetry");
     }
 
     #[test]

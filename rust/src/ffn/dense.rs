@@ -1,0 +1,226 @@
+//! Dense FFN reference path: `y = σ(x·W_up + b_up)·W_down + b_down`.
+//!
+//! For TARDIS variants the first `linear_units` hidden units carry a
+//! [`Linearization`]: inside the approximated range `[lo, hi)` the
+//! activation is replaced by its least-squares linear fit `a·z + c`
+//! (paper §5.1), outside it the true GELU applies. This partially-linear
+//! dense path is both the semantic reference the fold must reproduce and
+//! the fallback executed for predicted-outlier rows.
+
+use std::sync::Arc;
+
+use crate::util::threadpool::ThreadPool;
+
+use super::linalg::{gelu, matmul};
+
+/// Least-squares linear surrogate of the activation on `[lo, hi)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Linearization {
+    pub lo: f32,
+    pub hi: f32,
+    pub slope: f32,
+    pub intercept: f32,
+}
+
+impl Linearization {
+    /// Fit `a·z + c` to GELU over `[lo, hi]` by least squares on a dense
+    /// uniform grid (f64 accumulation; deterministic).
+    pub fn fit_gelu(lo: f32, hi: f32) -> Linearization {
+        assert!(lo < hi, "empty linear range [{lo}, {hi})");
+        const GRID: usize = 1024;
+        let (lo64, hi64) = (lo as f64, hi as f64);
+        let (mut sz, mut sy, mut szz, mut szy) = (0f64, 0f64, 0f64, 0f64);
+        for i in 0..=GRID {
+            let z = lo64 + (hi64 - lo64) * i as f64 / GRID as f64;
+            let y = gelu(z as f32) as f64;
+            sz += z;
+            sy += y;
+            szz += z * z;
+            szy += z * y;
+        }
+        let n = (GRID + 1) as f64;
+        let denom = n * szz - sz * sz;
+        let a = (n * szy - sz * sy) / denom;
+        let c = (sy - a * sz) / n;
+        Linearization {
+            lo,
+            hi,
+            slope: a as f32,
+            intercept: c as f32,
+        }
+    }
+
+    /// The deployed activation: linear inside the range, GELU outside.
+    pub fn apply(&self, z: f32) -> f32 {
+        if (self.lo..self.hi).contains(&z) {
+            self.slope * z + self.intercept
+        } else {
+            gelu(z)
+        }
+    }
+}
+
+/// Dense (reference) FFN with optional partial linearization.
+#[derive(Debug, Clone)]
+pub struct DenseFfn {
+    pub d_model: usize,
+    pub d_ff: usize,
+    /// `[d_model, d_ff]` row-major.
+    pub w_up: Arc<Vec<f32>>,
+    /// `[d_ff]`.
+    pub b_up: Arc<Vec<f32>>,
+    /// `[d_ff, d_model]` row-major.
+    pub w_down: Arc<Vec<f32>>,
+    /// `[d_model]`.
+    pub b_down: Arc<Vec<f32>>,
+    /// Linear surrogate for units `0..linear_units` (None = pure GELU).
+    pub lin: Option<Linearization>,
+    pub linear_units: usize,
+}
+
+impl DenseFfn {
+    pub fn new(
+        w_up: Arc<Vec<f32>>,
+        b_up: Arc<Vec<f32>>,
+        w_down: Arc<Vec<f32>>,
+        b_down: Arc<Vec<f32>>,
+        d_model: usize,
+        d_ff: usize,
+    ) -> DenseFfn {
+        assert_eq!(w_up.len(), d_model * d_ff);
+        assert_eq!(b_up.len(), d_ff);
+        assert_eq!(w_down.len(), d_ff * d_model);
+        assert_eq!(b_down.len(), d_model);
+        DenseFfn {
+            d_model,
+            d_ff,
+            w_up,
+            b_up,
+            w_down,
+            b_down,
+            lin: None,
+            linear_units: 0,
+        }
+    }
+
+    /// Linearize the activation of units `0..units` on `lin`'s range.
+    pub fn with_linearization(mut self, lin: Linearization, units: usize) -> DenseFfn {
+        assert!(units <= self.d_ff);
+        self.lin = Some(lin);
+        self.linear_units = units;
+        self
+    }
+
+    /// `x·W_up + b_up`, `[rows, d_ff]`.
+    pub fn preactivations(&self, pool: Option<&ThreadPool>, x: &[f32], rows: usize) -> Vec<f32> {
+        matmul(
+            pool,
+            x,
+            rows,
+            self.d_model,
+            &self.w_up,
+            self.d_ff,
+            Some(&self.b_up),
+        )
+    }
+
+    /// In-place activation: linear surrogate on linearized units inside
+    /// their range, GELU everywhere else.
+    pub fn activate(&self, z: &mut [f32]) {
+        for row in z.chunks_mut(self.d_ff) {
+            if let Some(lin) = self.lin {
+                for v in row.iter_mut().take(self.linear_units) {
+                    *v = lin.apply(*v);
+                }
+                for v in row.iter_mut().skip(self.linear_units) {
+                    *v = gelu(*v);
+                }
+            } else {
+                for v in row.iter_mut() {
+                    *v = gelu(*v);
+                }
+            }
+        }
+    }
+
+    /// `h·W_down + b_down`, `[rows, d_model]`.
+    pub fn project(&self, pool: Option<&ThreadPool>, h: &[f32], rows: usize) -> Vec<f32> {
+        matmul(
+            pool,
+            h,
+            rows,
+            self.d_ff,
+            &self.w_down,
+            self.d_model,
+            Some(&self.b_down),
+        )
+    }
+
+    pub fn forward(&self, pool: Option<&ThreadPool>, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut z = self.preactivations(pool, x, rows);
+        self.activate(&mut z);
+        self.project(pool, &z, rows)
+    }
+
+    pub fn param_count(&self) -> usize {
+        2 * self.d_model * self.d_ff + self.d_ff + self.d_model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> DenseFfn {
+        // d=2, h=3; w_up = [[1,0,1],[0,1,1]], w_down = [[1,0],[0,1],[1,1]]
+        DenseFfn::new(
+            Arc::new(vec![1.0, 0.0, 1.0, 0.0, 1.0, 1.0]),
+            Arc::new(vec![0.0, 0.0, 0.5]),
+            Arc::new(vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]),
+            Arc::new(vec![0.1, -0.1]),
+            2,
+            3,
+        )
+    }
+
+    #[test]
+    fn forward_matches_hand_computation() {
+        let f = tiny();
+        let x = vec![1.0, 2.0];
+        // z = [1, 2, 3.5]; h = gelu(z); y = [h0+h2+0.1, h1+h2-0.1]
+        let (h0, h1, h2) = (gelu(1.0), gelu(2.0), gelu(3.5));
+        let y = f.forward(None, &x, 1);
+        assert!((y[0] - (h0 + h2 + 0.1)).abs() < 1e-6);
+        assert!((y[1] - (h1 + h2 - 0.1)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn linearization_fits_gelu_inside_range() {
+        let lin = Linearization::fit_gelu(2.0, 6.0);
+        // gelu is nearly the identity on [2, 6]
+        assert!((lin.slope - 1.0).abs() < 0.05, "slope {}", lin.slope);
+        for z in [2.0f32, 3.0, 4.5, 5.9] {
+            assert!((lin.apply(z) - gelu(z)).abs() < 0.05);
+        }
+        // outside the range the true GELU applies exactly
+        assert_eq!(lin.apply(-3.0), gelu(-3.0));
+        assert_eq!(lin.apply(7.0), gelu(7.0));
+    }
+
+    #[test]
+    fn linearized_units_use_the_surrogate() {
+        let lin = Linearization::fit_gelu(-6.0, 6.0);
+        let f = tiny().with_linearization(lin, 2);
+        let mut z = vec![1.0, 1.0, 1.0];
+        f.activate(&mut z);
+        assert!((z[0] - lin.apply(1.0)).abs() < 1e-7);
+        assert!((z[1] - lin.apply(1.0)).abs() < 1e-7);
+        assert!((z[2] - gelu(1.0)).abs() < 1e-7); // unit 2 not linearized
+        assert!((z[0] - z[2]).abs() > 1e-4, "surrogate differs from gelu");
+    }
+
+    #[test]
+    fn param_count_is_dense_size() {
+        assert_eq!(tiny().param_count(), 2 * 2 * 3 + 3 + 2);
+    }
+}

@@ -1,0 +1,379 @@
+//! The TARDIS partially-linear FFN: constant-folded matrix + per-row
+//! online outlier fallback (paper §5.2, Fig 3).
+//!
+//! With the activation of the first `folded_units` hidden units replaced
+//! by its linear surrogate `a·z + c`, the FFN collapses by associativity:
+//!
+//! ```text
+//! σ(x·W_up + b_up)·W_down + b_down
+//!   ≈ x·(W_up_F · a · W_down_F)  +  (a·b_up_F + c)·W_down_F + b_down
+//!     + gelu(x·W_up_K + b_up_K)·W_down_K
+//!   = x·C + B + kept-unit path
+//! ```
+//!
+//! `C` is `d×d` (vs `2·d·h` for the folded units), `B` absorbs the
+//! intercepts and `b_down`, and the `K = d_ff - folded_units` kept units
+//! run the original dense columns. Per batch row an
+//! [`super::predictor::OutlierPredictor`] decides between this folded
+//! path and the exact dense fallback ([`DenseFfn`] with the same partial
+//! linearization); the batch is split, each sub-batch executes once, and
+//! results scatter back in row order. Fallback rows are bitwise equal to
+//! the reference; folded in-range rows differ only by the fold's
+//! reassociation roundoff.
+
+use std::sync::Arc;
+
+use crate::config::TardisFfnConfig;
+use crate::util::threadpool::ThreadPool;
+
+use super::FfnTelemetry;
+use super::dense::{DenseFfn, Linearization};
+use super::linalg::{gelu, matmul, norm};
+use super::predictor::{OutlierPredictor, Route};
+
+pub struct FoldedFfn {
+    /// Dense path with the same linearization: semantic reference and
+    /// per-row fallback executor.
+    pub reference: DenseFfn,
+    folded_units: usize,
+    kept_units: usize,
+    /// `[d, d]` folded map `C`.
+    c: Arc<Vec<f32>>,
+    /// `[d]` folded bias `B` (absorbs `b_down`).
+    b: Arc<Vec<f32>>,
+    /// Kept-unit columns of `W_up`: `[d, kept]`.
+    w_up_kept: Arc<Vec<f32>>,
+    /// `[kept]`.
+    b_up_kept: Arc<Vec<f32>>,
+    /// Kept-unit rows of `W_down`: `[kept, d]`.
+    w_down_kept: Arc<Vec<f32>>,
+    pub predictor: OutlierPredictor,
+    pub telemetry: FfnTelemetry,
+}
+
+impl FoldedFfn {
+    /// Fold `dense` at `cfg.fold_ratio`, linearizing the first
+    /// `round(ratio·d_ff)` units on `[linear_lo, linear_hi)`. The fold is
+    /// accumulated in f64.
+    pub fn new(dense: DenseFfn, cfg: &TardisFfnConfig) -> FoldedFfn {
+        let (d, h) = (dense.d_model, dense.d_ff);
+        let nf = ((cfg.fold_ratio * h as f64).round() as usize).min(h);
+        assert!(nf >= 1, "fold_ratio {} folds no units", cfg.fold_ratio);
+        let lin = Linearization::fit_gelu(cfg.linear_lo, cfg.linear_hi);
+        let reference = dense.with_linearization(lin, nf);
+        let (w_up, b_up) = (&reference.w_up, &reference.b_up);
+        let (w_down, b_down) = (&reference.w_down, &reference.b_down);
+
+        // C[l][m] = Σ_{j<nf} w_up[l][j] · a · w_down[j][m]
+        let a64 = lin.slope as f64;
+        let c64 = lin.intercept as f64;
+        let mut c = vec![0f64; d * d];
+        for l in 0..d {
+            let row = &mut c[l * d..(l + 1) * d];
+            for j in 0..nf {
+                let scaled = w_up[l * h + j] as f64 * a64;
+                for (cv, &wv) in row.iter_mut().zip(&w_down[j * d..(j + 1) * d]) {
+                    *cv += scaled * wv as f64;
+                }
+            }
+        }
+        // B[m] = Σ_{j<nf} (a·b_up[j] + c) · w_down[j][m] + b_down[m]
+        let mut b = vec![0f64; d];
+        for j in 0..nf {
+            let coef = a64 * b_up[j] as f64 + c64;
+            for (bv, &wv) in b.iter_mut().zip(&w_down[j * d..(j + 1) * d]) {
+                *bv += coef * wv as f64;
+            }
+        }
+        for (bv, &bd) in b.iter_mut().zip(b_down.iter()) {
+            *bv += bd as f64;
+        }
+
+        // Kept units: gather columns nf.. of W_up, rows nf.. of W_down.
+        let kept = h - nf;
+        let mut w_up_kept = Vec::with_capacity(d * kept);
+        for l in 0..d {
+            w_up_kept.extend_from_slice(&w_up[l * h + nf..(l + 1) * h]);
+        }
+        let b_up_kept = b_up[nf..].to_vec();
+        let w_down_kept = w_down[nf * d..].to_vec();
+
+        // Provable in-range radius: min_j slack_j / ‖w_up column j‖.
+        let mut safe_radius = f32::INFINITY;
+        for j in 0..nf {
+            let slack = (cfg.linear_hi - b_up[j]).min(b_up[j] - cfg.linear_lo);
+            if slack <= 0.0 {
+                safe_radius = 0.0;
+                break;
+            }
+            let col_norm = (0..d)
+                .map(|l| {
+                    let w = w_up[l * h + j] as f64;
+                    w * w
+                })
+                .sum::<f64>()
+                .sqrt() as f32;
+            if col_norm > 1e-12 {
+                safe_radius = safe_radius.min(slack / col_norm);
+            }
+        }
+        if !safe_radius.is_finite() {
+            // every folded column is zero: constant units, always in range
+            safe_radius = f32::MAX;
+        }
+
+        FoldedFfn {
+            reference,
+            folded_units: nf,
+            kept_units: kept,
+            c: Arc::new(c.into_iter().map(|v| v as f32).collect()),
+            b: Arc::new(b.into_iter().map(|v| v as f32).collect()),
+            w_up_kept: Arc::new(w_up_kept),
+            b_up_kept: Arc::new(b_up_kept),
+            w_down_kept: Arc::new(w_down_kept),
+            predictor: OutlierPredictor::new(safe_radius, cfg.predictor_threshold),
+            telemetry: FfnTelemetry::default(),
+        }
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.reference.d_model
+    }
+
+    pub fn folded_units(&self) -> usize {
+        self.folded_units
+    }
+
+    /// Resident parameters of the folded deployment.
+    pub fn param_count(&self) -> usize {
+        let d = self.reference.d_model;
+        d * d + d + self.kept_units * (2 * d + 1)
+    }
+
+    /// Fraction of dense FFN parameters eliminated by the fold.
+    pub fn compression_ratio(&self) -> f64 {
+        1.0 - self.param_count() as f64 / self.reference.param_count() as f64
+    }
+
+    /// Batch forward with per-row routing; `x` is `[rows, d_model]`.
+    pub fn forward(&mut self, pool: Option<&ThreadPool>, x: &[f32], rows: usize) -> Vec<f32> {
+        let d = self.reference.d_model;
+        debug_assert_eq!(x.len(), rows * d);
+        let mut folded_rows: Vec<usize> = Vec::new();
+        let mut fallback_rows: Vec<usize> = Vec::new();
+        let mut norms = vec![0f32; rows];
+        for i in 0..rows {
+            norms[i] = norm(&x[i * d..(i + 1) * d]);
+            match self.predictor.classify(norms[i]) {
+                Route::Folded => folded_rows.push(i),
+                Route::Fallback => fallback_rows.push(i),
+            }
+        }
+        let mut out = vec![0f32; rows * d];
+
+        if !folded_rows.is_empty() {
+            let xf = gather_rows(x, d, &folded_rows);
+            let n = folded_rows.len();
+            let mut yf = matmul(pool, &xf, n, d, &self.c, d, Some(&self.b));
+            if self.kept_units > 0 {
+                let mut hk = matmul(
+                    pool,
+                    &xf,
+                    n,
+                    d,
+                    &self.w_up_kept,
+                    self.kept_units,
+                    Some(&self.b_up_kept),
+                );
+                for v in hk.iter_mut() {
+                    *v = gelu(*v);
+                }
+                let yk = matmul(pool, &hk, n, self.kept_units, &self.w_down_kept, d, None);
+                for (a, &b) in yf.iter_mut().zip(&yk) {
+                    *a += b;
+                }
+            }
+            scatter_rows(&yf, d, &folded_rows, &mut out);
+        }
+
+        if !fallback_rows.is_empty() {
+            let xb = gather_rows(x, d, &fallback_rows);
+            let n = fallback_rows.len();
+            let mut z = self.reference.preactivations(pool, &xb, n);
+            let lin = self.reference.lin.expect("folded ffn has a linearization");
+            for (ri, &orig) in fallback_rows.iter().enumerate() {
+                let zr = &z[ri * self.reference.d_ff..];
+                let in_range = zr[..self.folded_units]
+                    .iter()
+                    .all(|zv| (lin.lo..lin.hi).contains(zv));
+                self.predictor.observe(norms[orig], in_range);
+            }
+            self.reference.activate(&mut z);
+            let yb = self.reference.project(pool, &z, n);
+            scatter_rows(&yb, d, &fallback_rows, &mut out);
+        }
+
+        self.telemetry.folded_rows += folded_rows.len() as u64;
+        self.telemetry.fallback_rows += fallback_rows.len() as u64;
+        out
+    }
+}
+
+fn gather_rows(x: &[f32], d: usize, idx: &[usize]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(idx.len() * d);
+    for &i in idx {
+        out.extend_from_slice(&x[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+fn scatter_rows(src: &[f32], d: usize, idx: &[usize], dst: &mut [f32]) {
+    for (ri, &i) in idx.iter().enumerate() {
+        dst[i * d..(i + 1) * d].copy_from_slice(&src[ri * d..(ri + 1) * d]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_dense(rng: &mut Rng, d: usize, h: usize, scale: f32) -> DenseFfn {
+        let w_up: Vec<f32> = (0..d * h).map(|_| rng.normal() as f32 * scale).collect();
+        let b_up: Vec<f32> = (0..h).map(|_| rng.normal() as f32 * 0.1).collect();
+        let w_down: Vec<f32> = (0..h * d).map(|_| rng.normal() as f32 * scale).collect();
+        let b_down: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.1).collect();
+        DenseFfn::new(
+            Arc::new(w_up),
+            Arc::new(b_up),
+            Arc::new(w_down),
+            Arc::new(b_down),
+            d,
+            h,
+        )
+    }
+
+    fn cfg(ratio: f64) -> TardisFfnConfig {
+        TardisFfnConfig {
+            fold_ratio: ratio,
+            linear_lo: -6.0,
+            linear_hi: 6.0,
+            predictor_threshold: 1.0,
+        }
+    }
+
+    #[test]
+    fn folded_matches_reference_for_provably_safe_rows() {
+        let mut rng = Rng::new(42);
+        let dense = random_dense(&mut rng, 8, 16, 0.3);
+        let mut f = FoldedFfn::new(dense, &cfg(0.75));
+        let r = f.predictor.safe_radius();
+        assert!(r > 0.0, "safe radius {r}");
+        // rows scaled to 90% of the provable radius: folded on first call
+        let rows = 5;
+        let mut x = vec![0f32; rows * 8];
+        for row in x.chunks_mut(8) {
+            for v in row.iter_mut() {
+                *v = rng.normal() as f32;
+            }
+            let n = norm(row);
+            for v in row.iter_mut() {
+                *v *= 0.9 * r / n;
+            }
+        }
+        let got = f.forward(None, &x, rows);
+        let want = f.reference.forward(None, &x, rows);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                "folded {g} vs reference {w}"
+            );
+        }
+        assert_eq!(f.telemetry.folded_rows, rows as u64);
+        assert_eq!(f.telemetry.fallback_rows, 0);
+    }
+
+    #[test]
+    fn outlier_rows_fall_back_bitwise() {
+        let mut rng = Rng::new(7);
+        let dense = random_dense(&mut rng, 8, 16, 0.3);
+        let mut f = FoldedFfn::new(dense, &cfg(0.5));
+        let r = f.predictor.safe_radius();
+        // one safe row, one far-out row along folded column 0
+        let d = 8;
+        let h = 16;
+        let mut x = vec![0f32; 2 * d];
+        for (l, v) in x[..d].iter_mut().enumerate() {
+            *v = f.reference.w_up[l * h]; // column 0 direction
+        }
+        let n0 = norm(&x[..d]);
+        let blow = 50.0 * r / n0;
+        for v in x[..d].iter_mut() {
+            *v *= blow;
+        }
+        for v in x[d..].iter_mut() {
+            *v = 0.01 * r;
+        }
+        let got = f.forward(None, &x, 2);
+        let want = f.reference.forward(None, &x, 2);
+        // outlier row: routed dense, so exactly the reference
+        assert_eq!(&got[..d], &want[..d]);
+        // safe row: folded, within fold roundoff
+        for (g, w) in got[d..].iter().zip(&want[d..]) {
+            assert!((g - w).abs() <= 1e-3 * w.abs().max(1.0));
+        }
+        assert_eq!(f.telemetry.fallback_rows, 1);
+        assert_eq!(f.telemetry.folded_rows, 1);
+        assert_eq!(f.predictor.stats.observed_out_of_range, 1);
+    }
+
+    #[test]
+    fn online_predictor_learns_in_range_norms() {
+        // w_up = 0.5·I with a wide range: safe radius 12/0.5 = 24, but
+        // x = [15,15,15,15] (norm 30) has z_j = 7.5, well in range.
+        let d = 4;
+        let mut eye = vec![0f32; d * d];
+        for i in 0..d {
+            eye[i * d + i] = 0.5;
+        }
+        let dense = DenseFfn::new(
+            Arc::new(eye.clone()),
+            Arc::new(vec![0.0; d]),
+            Arc::new(eye),
+            Arc::new(vec![0.0; d]),
+            d,
+            d,
+        );
+        let mut f = FoldedFfn::new(
+            dense,
+            &TardisFfnConfig {
+                fold_ratio: 1.0,
+                linear_lo: -12.0,
+                linear_hi: 12.0,
+                predictor_threshold: 1.0,
+            },
+        );
+        assert!((f.predictor.safe_radius() - 24.0).abs() < 1e-4);
+        let x = vec![15.0f32; d];
+        let first = f.forward(None, &x, 1);
+        assert_eq!(f.telemetry.fallback_rows, 1, "first sighting falls back");
+        let second = f.forward(None, &x, 1);
+        assert_eq!(f.telemetry.folded_rows, 1, "second sighting folds");
+        for (a, b) in first.iter().zip(&second) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn compression_ratio_tracks_fold_ratio() {
+        let mut rng = Rng::new(3);
+        let dense = random_dense(&mut rng, 16, 64, 0.2);
+        let full = FoldedFfn::new(random_dense(&mut rng, 16, 64, 0.2), &cfg(1.0));
+        let half = FoldedFfn::new(dense, &cfg(0.5));
+        assert!(full.compression_ratio() > half.compression_ratio());
+        // h = 4d: folding everything removes 1 - (d²+d)/(2dh+h+d) ≈ 87%
+        let r = full.compression_ratio();
+        assert!(r > 0.8, "{r}");
+        assert!(half.compression_ratio() > 0.3);
+    }
+}

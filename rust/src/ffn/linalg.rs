@@ -1,0 +1,182 @@
+//! Row-major f32 linear algebra for the native backend.
+//!
+//! The only heavy primitive is [`matmul`]: `y = x · w (+ bias)` with `x`
+//! `[rows, k]` and `w` `[k, m]`, both row-major. Small problems run
+//! serially; above [`PARALLEL_THRESHOLD_OPS`] multiply-adds the rows are
+//! split into blocks and fanned out over a
+//! [`crate::util::threadpool::ThreadPool`]. Weights are held in `Arc`s so
+//! blocks can be shipped to workers without copying the matrix; each
+//! row's result is computed independently, so serial and parallel
+//! execution are bitwise identical.
+
+use std::sync::Arc;
+
+use crate::util::threadpool::ThreadPool;
+
+/// Below this many multiply-adds the pool dispatch overhead dominates and
+/// the serial kernel wins.
+pub const PARALLEL_THRESHOLD_OPS: usize = 1 << 18;
+
+/// tanh-approximation GELU (the activation of the `TINY_GELU` shape).
+pub fn gelu(z: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+    const CUBIC: f32 = 0.044_715;
+    0.5 * z * (1.0 + (SQRT_2_OVER_PI * (z + CUBIC * z * z * z)).tanh())
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// Euclidean norm of one row.
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// `y[rows, m] = x[rows, k] · w[k, m] (+ bias[m])`, all row-major.
+pub fn matmul(
+    pool: Option<&ThreadPool>,
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    w: &Arc<Vec<f32>>,
+    m: usize,
+    bias: Option<&Arc<Vec<f32>>>,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(w.len(), k * m);
+    if let Some(pool) = pool {
+        if rows >= 2 && rows * k * m >= PARALLEL_THRESHOLD_OPS {
+            return matmul_pooled(pool, x, rows, k, w, m, bias);
+        }
+    }
+    matmul_serial(x, rows, k, w, m, bias.map(|b| b.as_slice()))
+}
+
+fn matmul_serial(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    w: &[f32],
+    m: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    let mut y = vec![0f32; rows * m];
+    for (xi, yi) in x.chunks_exact(k).zip(y.chunks_exact_mut(m)).take(rows) {
+        if let Some(b) = bias {
+            yi.copy_from_slice(b);
+        }
+        for (&xv, wrow) in xi.iter().zip(w.chunks_exact(m)) {
+            if xv != 0.0 {
+                for (yv, &wv) in yi.iter_mut().zip(wrow) {
+                    *yv += xv * wv;
+                }
+            }
+        }
+    }
+    y
+}
+
+fn matmul_pooled(
+    pool: &ThreadPool,
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    w: &Arc<Vec<f32>>,
+    m: usize,
+    bias: Option<&Arc<Vec<f32>>>,
+) -> Vec<f32> {
+    let jobs = pool.size().min(rows).max(1);
+    let per = rows.div_ceil(jobs);
+    let blocks: Vec<Vec<f32>> = x.chunks(per * k).map(|c| c.to_vec()).collect();
+    let w = Arc::clone(w);
+    let bias = bias.cloned();
+    let outs = pool.map(blocks, move |xb| {
+        let r = xb.len() / k;
+        matmul_serial(&xb, r, k, &w, m, bias.as_ref().map(|b| b.as_slice()))
+    });
+    let mut y = Vec::with_capacity(rows * m);
+    for o in outs {
+        y.extend_from_slice(&o);
+    }
+    y
+}
+
+/// Standard LayerNorm over the last dimension: per row, subtract the
+/// mean, divide by the standard deviation (eps 1e-5), scale and shift.
+pub fn layernorm(x: &[f32], rows: usize, d: usize, gain: &[f32], bias: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * d);
+    let mut y = vec![0f32; rows * d];
+    for (xi, yi) in x.chunks_exact(d).zip(y.chunks_exact_mut(d)).take(rows) {
+        let mean = xi.iter().sum::<f32>() / d as f32;
+        let var = xi.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (((yv, &xv), &g), &b) in yi.iter_mut().zip(xi).zip(gain).zip(bias) {
+            *yv = (xv - mean) * inv * g + b;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arc(v: Vec<f32>) -> Arc<Vec<f32>> {
+        Arc::new(v)
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // x = [[1,2],[3,4]], w = [[5,6],[7,8]] -> [[19,22],[43,50]]
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let w = arc(vec![5.0, 6.0, 7.0, 8.0]);
+        let y = matmul(None, &x, 2, 2, &w, 2, None);
+        assert_eq!(y, vec![19.0, 22.0, 43.0, 50.0]);
+        let b = arc(vec![1.0, -1.0]);
+        let y = matmul(None, &x, 2, 2, &w, 2, Some(&b));
+        assert_eq!(y, vec![20.0, 21.0, 44.0, 49.0]);
+    }
+
+    #[test]
+    fn pooled_matches_serial_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let (rows, k, m) = (64, 96, 128);
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+        let w = arc((0..k * m).map(|_| rng.normal() as f32).collect());
+        let b = arc((0..m).map(|_| rng.normal() as f32).collect());
+        let serial = matmul(None, &x, rows, k, &w, m, Some(&b));
+        let pool = ThreadPool::new(3);
+        // rows*k*m = 786k ops, above the threshold: takes the pooled path.
+        let pooled = matmul(Some(&pool), &x, rows, k, &w, m, Some(&b));
+        assert_eq!(serial, pooled);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.1588).abs() < 1e-3);
+        // asymptotes: identity for large z, zero for very negative z
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn layernorm_normalizes_rows() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        let gain = vec![1.0; 4];
+        let bias = vec![0.0; 4];
+        let y = layernorm(&x, 2, 4, &gain, &bias);
+        for row in y.chunks(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+        // both rows are affine images of [1,2,3,4]: identical post-norm
+        for (a, b) in y[..4].iter().zip(&y[4..]) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Native partially-linear FFN kernels (the paper's core contribution,
+//! executed in pure std-only Rust).
+//!
+//! * [`linalg`]    — row-major f32 matmul/LayerNorm/GELU, threadpool-
+//!   parallel above a work threshold
+//! * [`dense`]     — the dense FFN with optional per-unit linearized
+//!   activation (reference + fallback path)
+//! * [`folded`]    — the constant-folded `W' = W_down·A·W_up` map with
+//!   per-range bias and kept-unit columns
+//! * [`predictor`] — the online outlier predictor that routes each batch
+//!   row to the folded or the dense path
+//!
+//! [`FfnBackend`] is the per-layer executor
+//! [`crate::coordinator::model::NativeModel`] dispatches through; its
+//! cumulative [`FfnTelemetry`] feeds the engine's fallback-rate stats.
+
+pub mod dense;
+pub mod folded;
+pub mod linalg;
+pub mod predictor;
+
+pub use dense::{DenseFfn, Linearization};
+pub use folded::FoldedFfn;
+pub use predictor::{OutlierPredictor, PredictorStats, Route};
+
+use crate::util::threadpool::ThreadPool;
+
+/// Cumulative row-routing counters of a partially-linear FFN.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FfnTelemetry {
+    /// Rows executed on the folded path.
+    pub folded_rows: u64,
+    /// Rows routed to the dense fallback path.
+    pub fallback_rows: u64,
+}
+
+impl FfnTelemetry {
+    pub fn total_rows(&self) -> u64 {
+        self.folded_rows + self.fallback_rows
+    }
+
+    /// Fraction of rows that took the dense fallback path; `None` until
+    /// any row has been routed.
+    pub fn fallback_rate(&self) -> Option<f64> {
+        let total = self.total_rows();
+        if total == 0 {
+            None
+        } else {
+            Some(self.fallback_rows as f64 / total as f64)
+        }
+    }
+
+    pub fn accumulate(&mut self, other: FfnTelemetry) {
+        self.folded_rows += other.folded_rows;
+        self.fallback_rows += other.fallback_rows;
+    }
+}
+
+/// The FFN executor of one native transformer layer.
+pub enum FfnBackend {
+    Dense(DenseFfn),
+    Folded(Box<FoldedFfn>),
+}
+
+impl FfnBackend {
+    pub fn forward(&mut self, pool: Option<&ThreadPool>, x: &[f32], rows: usize) -> Vec<f32> {
+        match self {
+            FfnBackend::Dense(f) => f.forward(pool, x, rows),
+            FfnBackend::Folded(f) => f.forward(pool, x, rows),
+        }
+    }
+
+    pub fn telemetry(&self) -> FfnTelemetry {
+        match self {
+            FfnBackend::Dense(_) => FfnTelemetry::default(),
+            FfnBackend::Folded(f) => f.telemetry,
+        }
+    }
+
+    /// Fraction of dense FFN parameters the deployment eliminated
+    /// (`None` for a dense layer).
+    pub fn compression_ratio(&self) -> Option<f64> {
+        match self {
+            FfnBackend::Dense(_) => None,
+            FfnBackend::Folded(f) => Some(f.compression_ratio()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn telemetry_rate() {
+        let mut t = FfnTelemetry::default();
+        assert_eq!(t.fallback_rate(), None);
+        let step = FfnTelemetry {
+            folded_rows: 3,
+            fallback_rows: 1,
+        };
+        t.accumulate(step);
+        assert_eq!(t.total_rows(), 4);
+        assert!((t.fallback_rate().unwrap() - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,160 @@
+//! Online out-of-range predictor (paper §5.3, specialised to per-row
+//! routing).
+//!
+//! The fold is only valid while every folded unit's pre-activation
+//! `z_j = w_j·x + b_j` stays inside its approximated linear range.
+//! Checking that exactly would require the very `x·W_up` matmul folding
+//! eliminated, so the predictor routes on a cheap per-row proxy: the
+//! input norm `‖x‖₂`.
+//!
+//! Two gates decide the route:
+//!  * **provable** — by Cauchy–Schwarz, `|z_j - b_j| ≤ ‖w_j‖·‖x‖`, so any
+//!    row with `‖x‖ ≤ safe_radius = min_j slack_j / ‖w_j‖` is guaranteed
+//!    in-range. Computed offline from the fold's weights.
+//!  * **learned** — the fallback path computes the true pre-activations
+//!    anyway, so every fallback row is an observation: the predictor
+//!    grows its radius toward the largest norm seen fully in-range
+//!    (scaled by the configured `threshold` margin) and clamps it below
+//!    the smallest norm seen out-of-range. A steady in-range workload
+//!    pays for one fallback per new high-water mark, then folds.
+//!
+//! The proxy is one-dimensional, so it can misroute direction-dependent
+//! outliers; `threshold` trades that risk against fallback rate
+//! (`< 1.0` never folds beyond direct observations, `> 1.0`
+//! extrapolates).
+
+/// Where one batch row is executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// In-range: the folded `d×d` map.
+    Folded,
+    /// Possible outlier: the dense fallback path.
+    Fallback,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PredictorStats {
+    /// Rows routed to the folded path.
+    pub folded: u64,
+    /// Rows routed to the dense fallback path.
+    pub fallback: u64,
+    /// Fallback rows whose true pre-activations were all in range
+    /// (conservative mispredictions the online gate learns from).
+    pub observed_in_range: u64,
+    /// Fallback rows confirmed out of range (true outliers).
+    pub observed_out_of_range: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct OutlierPredictor {
+    /// Rows with `‖x‖` at or below this are provably in-range.
+    safe_radius: f32,
+    /// Largest `‖x‖` observed with every folded pre-activation in range.
+    learned_in: f32,
+    /// Smallest `‖x‖` observed out of range; the learned gate never
+    /// extrapolates past it.
+    out_floor: f32,
+    /// Margin multiplier on `learned_in` (config
+    /// [`crate::config::TardisFfnConfig::predictor_threshold`]).
+    threshold: f32,
+    pub stats: PredictorStats,
+}
+
+impl OutlierPredictor {
+    pub fn new(safe_radius: f32, threshold: f32) -> OutlierPredictor {
+        OutlierPredictor {
+            safe_radius: safe_radius.max(0.0),
+            learned_in: 0.0,
+            out_floor: f32::INFINITY,
+            threshold: threshold.max(0.0),
+            stats: PredictorStats::default(),
+        }
+    }
+
+    /// The provable (offline) in-range radius.
+    pub fn safe_radius(&self) -> f32 {
+        self.safe_radius
+    }
+
+    /// The radius the next row is judged against. The learned gate stays
+    /// strictly below `out_floor`: a norm already proven out-of-range
+    /// must never route folded again.
+    pub fn predicted_radius(&self) -> f32 {
+        let cap = self.out_floor * (1.0 - f32::EPSILON);
+        let learned = (self.learned_in * self.threshold).min(cap);
+        self.safe_radius.max(learned)
+    }
+
+    /// Route one row by its input norm, recording the decision.
+    pub fn classify(&mut self, x_norm: f32) -> Route {
+        if x_norm <= self.predicted_radius() {
+            self.stats.folded += 1;
+            Route::Folded
+        } else {
+            self.stats.fallback += 1;
+            Route::Fallback
+        }
+    }
+
+    /// Feed back the ground truth for a fallback row: `in_range` is
+    /// whether every folded unit's pre-activation was inside its range.
+    pub fn observe(&mut self, x_norm: f32, in_range: bool) {
+        if in_range {
+            self.stats.observed_in_range += 1;
+            self.learned_in = self.learned_in.max(x_norm);
+        } else {
+            self.stats.observed_out_of_range += 1;
+            self.out_floor = self.out_floor.min(x_norm);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn provable_radius_folds_immediately() {
+        let mut p = OutlierPredictor::new(2.0, 1.0);
+        assert_eq!(p.classify(1.5), Route::Folded);
+        assert_eq!(p.classify(2.0), Route::Folded);
+        assert_eq!(p.classify(2.5), Route::Fallback);
+        assert_eq!(p.stats.folded, 2);
+        assert_eq!(p.stats.fallback, 1);
+    }
+
+    #[test]
+    fn learns_from_in_range_fallbacks() {
+        let mut p = OutlierPredictor::new(1.0, 1.0);
+        assert_eq!(p.classify(5.0), Route::Fallback);
+        p.observe(5.0, true);
+        // same norm now folds; slightly larger still falls back
+        assert_eq!(p.classify(5.0), Route::Folded);
+        assert_eq!(p.classify(5.1), Route::Fallback);
+        assert_eq!(p.stats.observed_in_range, 1);
+    }
+
+    #[test]
+    fn threshold_extrapolates_beyond_observations() {
+        let mut p = OutlierPredictor::new(1.0, 1.1);
+        p.observe(10.0, true);
+        assert_eq!(p.classify(10.9), Route::Folded);
+        assert_eq!(p.classify(11.5), Route::Fallback);
+    }
+
+    #[test]
+    fn out_of_range_observation_caps_the_radius() {
+        let mut p = OutlierPredictor::new(1.0, 2.0);
+        p.observe(10.0, true);
+        p.observe(12.0, false);
+        // learned_in * threshold = 20 but the out floor clamps the gate
+        // strictly below 12: the proven-bad norm itself must fall back.
+        assert!(p.predicted_radius() < 12.0);
+        assert!(p.predicted_radius() > 10.0);
+        assert_eq!(p.classify(12.0), Route::Fallback);
+        assert_eq!(p.classify(15.0), Route::Fallback);
+        // the provable radius survives any observation
+        p.observe(0.5, false);
+        assert!(p.predicted_radius() >= 1.0);
+    }
+}

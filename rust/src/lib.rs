@@ -4,25 +4,31 @@
 //! for the paper-vs-measured record.
 //!
 //! Layer map:
-//! * [`runtime`]     — PJRT engine running the AOT artifacts (L2/L1
-//!   output); behind the off-by-default `pjrt` cargo feature so the
-//!   default build is std-only
+//! * [`ffn`]         — native partially-linear FFN kernels: the
+//!   `W' = W_down·A·W_up` constant fold, the dense reference path, and
+//!   the online outlier predictor with per-row fallback batch-splitting
+//! * [`runtime`]     — weight init/loading (std-only) plus the PJRT
+//!   engine running the AOT artifacts behind the off-by-default `pjrt`
+//!   cargo feature
 //! * [`coordinator`] — the serving system. Each iteration a pluggable
 //!   [`coordinator::scheduler::SchedulerPolicy`] turns a
 //!   [`coordinator::scheduler::SchedView`] of the queue/slots/in-flight
 //!   work into one composite [`coordinator::scheduler::StepPlan`]
 //!   (admissions + concurrent prefill chunks + decode batch) that the
 //!   engine executes and accounts — vLLM/Orca-style continuous batching
-//!   with multiple prefills in flight
+//!   with multiple prefills in flight. Step models span the backend
+//!   matrix: `MockModel` (deterministic), `NativeModel` (tiny GELU
+//!   transformer over [`ffn`], std-only) and `PjrtModel` (artifacts)
 //! * [`costmodel`]   — analytic roofline reproduction of Fig 1b
-//! * [`config`]      — manifest contract with the python compile path
+//! * [`config`]      — manifest contract with the python compile path +
+//!   the backend/variant configuration axis
 //! * [`util`], [`bench`], [`testing`] — std-only substrates (no network)
 
 pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod costmodel;
-#[cfg(feature = "pjrt")]
+pub mod ffn;
 pub mod runtime;
 pub mod server;
 pub mod testing;

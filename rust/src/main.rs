@@ -1,43 +1,59 @@
 //! `tardis` CLI — the L3 entrypoint.
 //!
+//! The backend is a first-class axis (`--backend native|mock|pjrt`):
+//!   native — pure-Rust tiny GELU transformer (TINY_GELU shape) with
+//!            dense or TARDIS partially-linear FFNs; std-only, no
+//!            artifacts (the default)
+//!   mock   — deterministic mock replicas (scheduler/protocol work)
+//!   pjrt   — AOT artifacts through the PJRT runtime (needs a build
+//!            with --features pjrt)
+//!
 //! Subcommands:
-//!   costmodel  — print the Fig 1b analytic breakdown (paper-scale model)
-//!   serve-mock — TCP server over deterministic mock replicas (std-only;
-//!                exercises the scheduler/serving stack without artifacts)
-//! With `--features pjrt`:
-//!   generate   — load a variant, generate from a prompt, print text+stats
-//!   serve      — TCP server (line-delimited JSON) over one or more variants
-//!   variants   — list manifest variants and their compression ratios
-//!   bench-decode — quick per-variant decode-step timing (full Fig 13 lives
-//!                  in `cargo bench --bench fig13_speedup`)
+//!   costmodel    — print the Fig 1b analytic breakdown (paper-scale)
+//!   generate     — run one prompt through a variant, print text + stats
+//!   serve        — TCP server (line-delimited JSON) over replicas
+//!   serve-mock   — alias for `serve --backend mock`
+//!   variants     — list variants: native measured decode latency next
+//!                  to the costmodel's theoretical tardis speedups (plus
+//!                  the artifact manifest under --features pjrt)
+//!   bench-decode — decode-step timing, dense vs tardis fold ratios
 
 use anyhow::{anyhow, Result};
 
+use tardis::config::{
+    native_ffn_mode, BackendKind, FfnMode, NativeModelConfig,
+};
 use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
-use tardis::coordinator::model::MockModel;
+use tardis::coordinator::model::{MockModel, NativeModel, StepModel};
+use tardis::coordinator::request::SamplingParams;
 use tardis::coordinator::router::Router;
 use tardis::coordinator::scheduler::PolicyKind;
 use tardis::costmodel;
+use tardis::server::protocol::{decode_tokens, encode_text};
 use tardis::util::cli::Args;
+use tardis::util::stats::Samples;
 
 #[cfg(feature = "pjrt")]
 use tardis::config::Manifest;
 #[cfg(feature = "pjrt")]
-use tardis::coordinator::model::{PjrtModel, StepModel};
-#[cfg(feature = "pjrt")]
-use tardis::coordinator::request::SamplingParams;
+use tardis::coordinator::model::PjrtModel;
 #[cfg(feature = "pjrt")]
 use tardis::runtime::Engine;
-#[cfg(feature = "pjrt")]
-use tardis::server::protocol::{decode_tokens, encode_text};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tardis <costmodel|serve-mock|generate|serve|variants|bench-decode> [flags]
-  (generate/serve/variants/bench-decode need a build with --features pjrt)
+        "usage: tardis <costmodel|generate|serve|serve-mock|variants|bench-decode> [flags]
   common flags:
-    --artifacts DIR        artifacts directory (default: artifacts or $TARDIS_ARTIFACTS)
-    --variant NAME         model variant (default: tardis80)
+    --backend KIND         native|mock|pjrt (default native; pjrt needs
+                           a build with --features pjrt)
+    --artifacts DIR        artifacts directory for pjrt (default:
+                           artifacts or $TARDIS_ARTIFACTS)
+    --variant NAME         model variant (default: tardis80; native
+                           accepts dense|tardis<PCT>|tardis-ref<PCT>)
+  native backend flags:
+    --slots N              KV slots / decode batch (default 4)
+    --max-seq N            context length (default 256)
+    --threads N            matmul worker threads (default 0 = serial)
   scheduling flags (serve / serve-mock / generate):
     --policy NAME          admission policy: fifo|spf|priority (default fifo)
     --max-prefills N       concurrent prefill jobs (default 2)
@@ -50,14 +66,14 @@ fn usage() -> ! {
     --priority N           admission priority (default 0)
   serve / serve-mock:
     --addr HOST:PORT       listen address (default 127.0.0.1:7437)
-    --variants A,B         replicas to load (serve default dense,tardis80;
+    --variants A,B         replicas to load (default dense,tardis80;
                            serve-mock default mock)
     --max-requests N       exit after N served requests (for scripted runs)
-  serve-mock:
-    --slots N              KV slots per mock replica (default 4)
-    --max-seq N            mock context length (default 256)
-  bench-decode:
-    --steps N              decode steps to time (default 32)"
+  variants / bench-decode:
+    --steps N              decode steps to time (default 64)
+    --warmup N             untimed predictor-warmup steps (default 8)
+    --assert-speedup R     exit non-zero unless a tardis variant reaches
+                           a measured speedup of at least R vs dense"
     );
     std::process::exit(2);
 }
@@ -78,33 +94,46 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     Ok(cfg)
 }
 
-/// std-only server: mock replicas with the full scheduler stack, for
-/// protocol/scheduling experiments without PJRT artifacts.
-fn cmd_serve_mock(args: &Args) -> Result<()> {
-    let cfg = engine_config(args)?;
-    let slots = args.usize("slots", 4)?;
-    let max_seq = args.usize("max-seq", 256)?;
-    let names = args.list("variants", &["mock"]);
-    let replicas = names
-        .iter()
-        .map(|name| {
-            (
-                name.clone(),
-                InferenceEngine::new(
-                    MockModel::new(slots, max_seq, 256, vec![16, 64]),
-                    cfg.clone(),
-                ),
-            )
-        })
-        .collect();
-    let router = Router::new(replicas);
-    let addr = args.str("addr", "127.0.0.1:7437");
-    let max_requests = parse_max_requests(args)?;
-    eprintln!("[serve-mock] policy={} replicas={names:?}",
-              cfg.scheduler.policy.name());
-    let served = tardis::server::tcp::serve(router, &addr, max_requests)?;
-    eprintln!("[serve-mock] done, served {served} requests");
-    Ok(())
+fn backend(args: &Args) -> Result<BackendKind> {
+    match args.opt_str("backend") {
+        None => Ok(BackendKind::default()),
+        Some(s) => BackendKind::parse(&s)
+            .ok_or_else(|| anyhow!("unknown backend {s:?} (native|mock|pjrt)")),
+    }
+}
+
+/// Native model shape from the CLI flags (TINY_GELU defaults).
+fn native_model_cfg(args: &Args) -> Result<NativeModelConfig> {
+    let mut cfg = NativeModelConfig::tiny_gelu();
+    cfg.batch = args.usize("slots", cfg.batch)?;
+    cfg.max_seq = args.usize("max-seq", cfg.max_seq)?;
+    cfg.threads = args.usize("threads", cfg.threads)?;
+    Ok(cfg)
+}
+
+fn native_mode(variant: &str) -> Result<FfnMode> {
+    native_ffn_mode(variant).ok_or_else(|| {
+        anyhow!(
+            "unknown native variant {variant:?} \
+             (expected dense, tardis<PCT> or tardis-ref<PCT>)"
+        )
+    })
+}
+
+fn sampling_params(args: &Args) -> Result<SamplingParams> {
+    Ok(SamplingParams {
+        temperature: args.f64("temperature", 0.0)? as f32,
+        top_k: args.usize("top-k", 0)?,
+        max_tokens: args.usize("max-tokens", 48)?,
+        stop_token: None,
+        seed: args.usize("seed", 0)? as u64,
+        priority: match args.opt_str("priority") {
+            None => 0,
+            Some(s) => s.parse::<i32>().map_err(|_| {
+                anyhow!("--priority expects an integer, got {s:?}")
+            })?,
+        },
+    })
 }
 
 fn parse_max_requests(args: &Args) -> Result<Option<usize>> {
@@ -113,6 +142,23 @@ fn parse_max_requests(args: &Args) -> Result<Option<usize>> {
         .transpose()
         .map_err(|_| anyhow!("--max-requests expects an integer"))
 }
+
+fn run_server<M: StepModel>(
+    replicas: Vec<(String, InferenceEngine<M>)>,
+    args: &Args,
+    label: &str,
+) -> Result<()> {
+    let router = Router::new(replicas);
+    let addr = args.str("addr", "127.0.0.1:7437");
+    let max_requests = parse_max_requests(args)?;
+    let served = tardis::server::tcp::serve(router, &addr, max_requests)?;
+    eprintln!("[{label}] done, served {served} requests");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// costmodel
+// ---------------------------------------------------------------------------
 
 fn cmd_costmodel(_args: &Args) -> Result<()> {
     let b = costmodel::inference_breakdown(
@@ -136,7 +182,399 @@ fn cmd_costmodel(_args: &Args) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
-// PJRT-backed subcommands (need the real runtime).
+// serve (all backends) + serve-mock alias
+// ---------------------------------------------------------------------------
+
+fn cmd_serve(args: &Args, forced: Option<BackendKind>) -> Result<()> {
+    let kind = match forced {
+        Some(k) => k,
+        None => backend(args)?,
+    };
+    let cfg = engine_config(args)?;
+    match kind {
+        BackendKind::Mock => {
+            let slots = args.usize("slots", 4)?;
+            let max_seq = args.usize("max-seq", 256)?;
+            let names = args.list("variants", &["mock"]);
+            let replicas = names
+                .iter()
+                .map(|name| {
+                    (
+                        name.clone(),
+                        InferenceEngine::new(
+                            MockModel::new(slots, max_seq, 256, vec![16, 64]),
+                            cfg.clone(),
+                        ),
+                    )
+                })
+                .collect();
+            eprintln!("[serve] backend=mock policy={} replicas={names:?}",
+                      cfg.scheduler.policy.name());
+            run_server(replicas, args, "serve")
+        }
+        BackendKind::Native => {
+            let model_cfg = native_model_cfg(args)?;
+            let names = args.list("variants", &["dense", "tardis80"]);
+            let mut replicas = Vec::new();
+            for name in &names {
+                let mode = native_mode(name)?;
+                replicas.push((
+                    name.clone(),
+                    InferenceEngine::new(
+                        NativeModel::new(model_cfg.clone(), &mode),
+                        cfg.clone(),
+                    ),
+                ));
+            }
+            eprintln!("[serve] backend=native policy={} replicas={names:?}",
+                      cfg.scheduler.policy.name());
+            run_server(replicas, args, "serve")
+        }
+        BackendKind::Pjrt => cmd_serve_pjrt(args, cfg),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_serve_pjrt(args: &Args, cfg: EngineConfig) -> Result<()> {
+    let manifest = Manifest::load(&manifest_path(args))?;
+    let engine = Engine::cpu()?;
+    let variants = args.list("variants", &["dense", "tardis80"]);
+    let mut replicas = Vec::new();
+    for v in &variants {
+        eprintln!("[serve] loading {v} ...");
+        replicas.push((
+            v.clone(),
+            load_engine(&engine, &manifest, v, Some(&main_exec_tags(&manifest)),
+                        cfg.clone())?,
+        ));
+    }
+    run_server(replicas, args, "serve")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve_pjrt(_args: &Args, _cfg: EngineConfig) -> Result<()> {
+    Err(pjrt_unavailable("serve"))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable(cmd: &str) -> anyhow::Error {
+    anyhow!(
+        "backend pjrt for {cmd:?} needs the PJRT runtime; rebuild with \
+         `cargo build --features pjrt` (and real xla bindings)"
+    )
+}
+
+// ---------------------------------------------------------------------------
+// generate
+// ---------------------------------------------------------------------------
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    match backend(args)? {
+        BackendKind::Native => cmd_generate_native(args),
+        BackendKind::Mock => Err(anyhow!(
+            "generate on the mock backend produces meaningless tokens; \
+             use --backend native"
+        )),
+        BackendKind::Pjrt => cmd_generate_pjrt(args),
+    }
+}
+
+fn cmd_generate_native(args: &Args) -> Result<()> {
+    let variant = args.str("variant", "tardis80");
+    let mode = native_mode(&variant)?;
+    let model = NativeModel::new(native_model_cfg(args)?, &mode);
+    eprintln!("[generate] backend=native variant={variant} (seeded weights)");
+    let mut ie = InferenceEngine::new(model, engine_config(args)?);
+    let prompt = args.str("prompt", "the quick ");
+    let params = sampling_params(args)?;
+    let t0 = std::time::Instant::now();
+    let c = ie.generate_sequential(encode_text(&prompt), params)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}{}", prompt, decode_tokens(&c.tokens));
+    let ratio = ie
+        .model
+        .fold_compression_ratio()
+        .map(|r| format!("{:.1}%", r * 100.0))
+        .unwrap_or_else(|| "-".to_string());
+    let fallback = ie
+        .stats
+        .ffn_fallback_rate()
+        .map(|r| format!("{:.1}%", r * 100.0))
+        .unwrap_or_else(|| "-".to_string());
+    eprintln!(
+        "[generate] {} tokens in {:.2}s ({:.1} tok/s, decode mean {:.2} ms, \
+         fold compression {ratio}, fallback rate {fallback})",
+        c.tokens.len(),
+        dt,
+        c.tokens.len() as f64 / dt,
+        ie.decode_latency_ms.mean(),
+    );
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_generate_pjrt(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&manifest_path(args))?;
+    let variant = args.str("variant", "tardis80");
+    let engine = Engine::cpu()?;
+    eprintln!("[generate] platform={} variant={variant}", engine.platform());
+    let mut ie = load_engine(&engine, &manifest, &variant,
+                             Some(&main_exec_tags(&manifest)),
+                             engine_config(args)?)?;
+    let prompt = args.str("prompt", "the quick ");
+    let params = sampling_params(args)?;
+    let t0 = std::time::Instant::now();
+    let c = ie.generate_sequential(encode_text(&prompt), params)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}{}", prompt, decode_tokens(&c.tokens));
+    eprintln!(
+        "[generate] {} tokens in {:.2}s ({:.1} tok/s, decode mean {:.2} ms, \
+         compression ratio {:.1}%)",
+        c.tokens.len(),
+        dt,
+        c.tokens.len() as f64 / dt,
+        ie.decode_latency_ms.mean(),
+        ie.model.compression_ratio() * 100.0
+    );
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_generate_pjrt(_args: &Args) -> Result<()> {
+    Err(pjrt_unavailable("generate"))
+}
+
+// ---------------------------------------------------------------------------
+// native decode measurement (variants + bench-decode)
+// ---------------------------------------------------------------------------
+
+struct NativeDecodeReport {
+    name: String,
+    /// FFN mode name ("dense" | "tardis" | "tardis_reference").
+    mode: &'static str,
+    mean_ms: f64,
+    p50_ms: f64,
+    fallback_rate: Option<f64>,
+    compression_ratio: Option<f64>,
+}
+
+/// Time `steps` full decode steps (all slots active) on a freshly built
+/// native model; `warmup` untimed steps let the online outlier predictor
+/// settle first.
+fn measure_native_decode(
+    cfg: &NativeModelConfig,
+    variant: &str,
+    steps: usize,
+    warmup: usize,
+) -> Result<NativeDecodeReport> {
+    let mode = native_mode(variant)?;
+    let mut model = NativeModel::new(cfg.clone(), &mode);
+    let tokens: Vec<i32> =
+        (0..cfg.batch).map(|b| ((7 * b + 3) % cfg.vocab) as i32).collect();
+    let mut lat = Samples::new();
+    for s in 0..warmup + steps {
+        let p = (s % cfg.max_seq) as i32;
+        let pos = vec![p; cfg.batch];
+        let t0 = std::time::Instant::now();
+        let _ = model.decode(&tokens, &pos)?;
+        if s >= warmup {
+            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    Ok(NativeDecodeReport {
+        name: variant.to_string(),
+        mode: model.ffn_mode_name(),
+        mean_ms: lat.mean(),
+        p50_ms: lat.percentile(50.0),
+        fallback_rate: model.ffn_telemetry().and_then(|t| t.fallback_rate()),
+        compression_ratio: model.fold_compression_ratio(),
+    })
+}
+
+/// Print one measured-vs-theoretical table row; returns the measured
+/// speedup vs dense (None for the dense row itself).
+fn print_native_row(
+    r: &NativeDecodeReport,
+    dense_mean: Option<f64>,
+    cfg: &NativeModelConfig,
+    ctx: usize,
+) -> Option<f64> {
+    let speedup = match dense_mean {
+        Some(d) if r.compression_ratio.is_some() => Some(d / r.mean_ms),
+        _ => None,
+    };
+    let (theory_ffn, theory_e2e) = match r.compression_ratio {
+        Some(ratio) => {
+            let fix = r.fallback_rate.unwrap_or(0.0);
+            let (f, e) = costmodel::tardis_speedup(
+                &costmodel::TINY_GELU,
+                &costmodel::CPU_1CORE,
+                cfg.batch,
+                ctx,
+                ratio,
+                fix,
+            );
+            (format!("{f:5.2}x"), format!("{e:5.2}x"))
+        }
+        None => ("    -".to_string(), "    -".to_string()),
+    };
+    println!(
+        "  {:10} mean {:8.3} ms  p50 {:8.3}  speedup {}  fallback {}  \
+         theory ffn {} e2e {}",
+        r.name,
+        r.mean_ms,
+        r.p50_ms,
+        speedup
+            .map(|s| format!("{s:5.2}x"))
+            .unwrap_or_else(|| "    -".to_string()),
+        r.fallback_rate
+            .map(|f| format!("{:5.1}%", f * 100.0))
+            .unwrap_or_else(|| "    -".to_string()),
+        theory_ffn,
+        theory_e2e,
+    );
+    speedup
+}
+
+fn bench_native_table(args: &Args, names: &[String]) -> Result<()> {
+    let cfg = native_model_cfg(args)?;
+    let steps = args.usize("steps", 64)?;
+    let warmup = args.usize("warmup", 8)?;
+    let ctx = warmup + steps / 2;
+    println!(
+        "native decode-step latency ({} steps after {} warmup, batch {}, \
+         d={}, ffn={}, {} layers):",
+        steps, warmup, cfg.batch, cfg.d_model, cfg.d_ff, cfg.n_layers
+    );
+    // Measure everything first: the dense baseline is found by mode, not
+    // by listing order, so `--variants tardis80,dense` and tardis-ref
+    // rows cannot skew the speedup column or the --assert-speedup gate.
+    let mut reports = Vec::new();
+    for name in names {
+        reports.push(measure_native_decode(&cfg, name, steps, warmup)?);
+    }
+    let dense_mean = reports.iter().find(|r| r.mode == "dense").map(|r| r.mean_ms);
+    let mut best_speedup: Option<f64> = None;
+    for r in &reports {
+        let speedup = print_native_row(r, dense_mean, &cfg, ctx);
+        if let Some(s) = speedup {
+            best_speedup =
+                Some(best_speedup.map_or(s, |b: f64| b.max(s)));
+        }
+    }
+    if let Some(min) = args.opt_str("assert-speedup") {
+        let min: f64 = min
+            .parse()
+            .map_err(|_| anyhow!("--assert-speedup expects a number"))?;
+        let best = best_speedup.ok_or_else(|| {
+            anyhow!("--assert-speedup needs dense plus a tardis variant")
+        })?;
+        if best < min {
+            return Err(anyhow!(
+                "measured tardis speedup {best:.2}x below required {min:.2}x"
+            ));
+        }
+        println!("speedup check: best {best:.2}x >= required {min:.2}x");
+    }
+    Ok(())
+}
+
+fn cmd_bench_decode(args: &Args) -> Result<()> {
+    match backend(args)? {
+        BackendKind::Native => {
+            let names = args
+                .list("variants", &["dense", "tardis50", "tardis70", "tardis80"]);
+            bench_native_table(args, &names)
+        }
+        BackendKind::Mock => Err(anyhow!(
+            "bench-decode on the mock backend measures nothing; \
+             use --backend native"
+        )),
+        BackendKind::Pjrt => cmd_bench_decode_pjrt(args),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_bench_decode_pjrt(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&manifest_path(args))?;
+    let engine = Engine::cpu()?;
+    let steps = args.usize("steps", 64)?;
+    let variants =
+        args.list("variants", &["dense", "tardis50", "tardis70", "tardis80"]);
+    println!("decode-step latency ({} steps, batch {}):", steps, manifest.batch);
+    let mut dense_mean = None;
+    for vname in &variants {
+        let v = engine.load_variant(&manifest, vname, Some(&["decode"]))?;
+        let mut model = PjrtModel::new(&engine, v, manifest.batch,
+                                       manifest.model.max_seq,
+                                       manifest.model.vocab,
+                                       manifest.prefill_buckets.clone())?;
+        let tokens = vec![1i32; manifest.batch];
+        let mut lat = Samples::new();
+        for s in 0..steps {
+            let pos: Vec<i32> = vec![s as i32; manifest.batch];
+            let t0 = std::time::Instant::now();
+            let _ = model.decode(&tokens, &pos)?;
+            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mean = lat.mean();
+        if vname == "dense" {
+            dense_mean = Some(mean);
+        }
+        let speedup = dense_mean.map(|d| d / mean).unwrap_or(f64::NAN);
+        println!("  {:10} mean {:8.2} ms  p50 {:8.2}  speedup vs dense {:.2}x",
+                 vname, mean, lat.percentile(50.0), speedup);
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_bench_decode_pjrt(_args: &Args) -> Result<()> {
+    Err(pjrt_unavailable("bench-decode"))
+}
+
+// ---------------------------------------------------------------------------
+// variants
+// ---------------------------------------------------------------------------
+
+fn cmd_variants(args: &Args) -> Result<()> {
+    print_manifest_variants(args);
+    // Measured native table next to the theoretical costmodel numbers,
+    // so theory and measurement land in one place.
+    let names = args
+        .list("variants", &["dense", "tardis50", "tardis70", "tardis80"]);
+    bench_native_table(args, &names)
+}
+
+#[cfg(feature = "pjrt")]
+fn print_manifest_variants(args: &Args) {
+    match Manifest::load(&manifest_path(args)) {
+        Err(e) => eprintln!("[variants] no artifact manifest ({e:#})"),
+        Ok(manifest) => {
+            println!(
+                "model {} (d={}, L={}, h={}, act={}), batch {}, max_seq {}",
+                manifest.model.name, manifest.model.d_model,
+                manifest.model.n_layers, manifest.model.d_ff,
+                manifest.model.act, manifest.batch, manifest.model.max_seq);
+            for v in &manifest.variants {
+                println!(
+                    "  {:10} mode={:6} ratio={:5.1}% fix_capacity={:4} execs={}",
+                    v.name,
+                    v.ffn_mode,
+                    v.compression_ratio * 100.0,
+                    v.fix_capacity,
+                    v.executables.len()
+                );
+            }
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn print_manifest_variants(_args: &Args) {}
+
+// ---------------------------------------------------------------------------
+// PJRT helpers
 // ---------------------------------------------------------------------------
 
 #[cfg(feature = "pjrt")]
@@ -175,121 +613,6 @@ fn main_exec_tags(manifest: &Manifest) -> Vec<&'static str> {
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_generate(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&manifest_path(args))?;
-    let variant = args.str("variant", "tardis80");
-    let engine = Engine::cpu()?;
-    eprintln!("[generate] platform={} variant={variant}", engine.platform());
-    let mut ie = load_engine(&engine, &manifest, &variant,
-                             Some(&main_exec_tags(&manifest)),
-                             engine_config(args)?)?;
-    let prompt = args.str("prompt", "the quick ");
-    let params = SamplingParams {
-        temperature: args.f64("temperature", 0.0)? as f32,
-        top_k: args.usize("top-k", 0)?,
-        max_tokens: args.usize("max-tokens", 48)?,
-        stop_token: None,
-        seed: args.usize("seed", 0)? as u64,
-        priority: match args.opt_str("priority") {
-            None => 0,
-            Some(s) => s.parse::<i32>().map_err(|_| {
-                anyhow!("--priority expects an integer, got {s:?}")
-            })?,
-        },
-    };
-    let t0 = std::time::Instant::now();
-    let c = ie.generate_sequential(encode_text(&prompt), params)?;
-    let dt = t0.elapsed().as_secs_f64();
-    println!("{}{}", prompt, decode_tokens(&c.tokens));
-    eprintln!(
-        "[generate] {} tokens in {:.2}s ({:.1} tok/s, decode mean {:.2} ms, \
-         compression ratio {:.1}%)",
-        c.tokens.len(),
-        dt,
-        c.tokens.len() as f64 / dt,
-        ie.decode_latency_ms.mean(),
-        ie.model.compression_ratio() * 100.0
-    );
-    Ok(())
-}
-
-#[cfg(feature = "pjrt")]
-fn cmd_serve(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&manifest_path(args))?;
-    let engine = Engine::cpu()?;
-    let cfg = engine_config(args)?;
-    let variants = args.list("variants", &["dense", "tardis80"]);
-    let mut replicas = Vec::new();
-    for v in &variants {
-        eprintln!("[serve] loading {v} ...");
-        replicas.push((
-            v.clone(),
-            load_engine(&engine, &manifest, v, Some(&main_exec_tags(&manifest)),
-                        cfg.clone())?,
-        ));
-    }
-    let router = Router::new(replicas);
-    let addr = args.str("addr", "127.0.0.1:7437");
-    let max_requests = parse_max_requests(args)?;
-    let served = tardis::server::tcp::serve(router, &addr, max_requests)?;
-    eprintln!("[serve] done, served {served} requests");
-    Ok(())
-}
-
-#[cfg(feature = "pjrt")]
-fn cmd_variants(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&manifest_path(args))?;
-    println!("model {} (d={}, L={}, h={}, act={}), batch {}, max_seq {}",
-             manifest.model.name, manifest.model.d_model,
-             manifest.model.n_layers, manifest.model.d_ff,
-             manifest.model.act, manifest.batch, manifest.model.max_seq);
-    for v in &manifest.variants {
-        println!(
-            "  {:10} mode={:6} ratio={:5.1}% fix_capacity={:4} execs={}",
-            v.name,
-            v.ffn_mode,
-            v.compression_ratio * 100.0,
-            v.fix_capacity,
-            v.executables.len()
-        );
-    }
-    Ok(())
-}
-
-#[cfg(feature = "pjrt")]
-fn cmd_bench_decode(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&manifest_path(args))?;
-    let engine = Engine::cpu()?;
-    let steps = args.usize("steps", 32)?;
-    let variants = args.list("variants", &["dense", "tardis50", "tardis70", "tardis80"]);
-    println!("decode-step latency ({} steps, batch {}):", steps, manifest.batch);
-    let mut dense_mean = None;
-    for vname in &variants {
-        let v = engine.load_variant(&manifest, vname, Some(&["decode"]))?;
-        let mut model = PjrtModel::new(&engine, v, manifest.batch,
-                                       manifest.model.max_seq,
-                                       manifest.model.vocab,
-                                       manifest.prefill_buckets.clone())?;
-        let tokens = vec![1i32; manifest.batch];
-        let mut lat = tardis::util::stats::Samples::new();
-        for s in 0..steps {
-            let pos: Vec<i32> = vec![s as i32; manifest.batch];
-            let t0 = std::time::Instant::now();
-            let _ = model.decode(&tokens, &pos)?;
-            lat.push(t0.elapsed().as_secs_f64() * 1e3);
-        }
-        let mean = lat.mean();
-        if vname == "dense" {
-            dense_mean = Some(mean);
-        }
-        let speedup = dense_mean.map(|d| d / mean).unwrap_or(f64::NAN);
-        println!("  {:10} mean {:8.2} ms  p50 {:8.2}  speedup vs dense {:.2}x",
-                 vname, mean, lat.percentile(50.0), speedup);
-    }
-    Ok(())
-}
-
-#[cfg(feature = "pjrt")]
 fn manifest_path(args: &Args) -> std::path::PathBuf {
     args.opt_str("artifacts")
         .map(|d| std::path::PathBuf::from(d).join("manifest.json"))
@@ -306,22 +629,11 @@ fn main() {
     };
     let result = match args.subcommand.as_deref() {
         Some("costmodel") => cmd_costmodel(&args),
-        Some("serve-mock") => cmd_serve_mock(&args),
-        #[cfg(feature = "pjrt")]
+        Some("serve") => cmd_serve(&args, None),
+        Some("serve-mock") => cmd_serve(&args, Some(BackendKind::Mock)),
         Some("generate") => cmd_generate(&args),
-        #[cfg(feature = "pjrt")]
-        Some("serve") => cmd_serve(&args),
-        #[cfg(feature = "pjrt")]
         Some("variants") => cmd_variants(&args),
-        #[cfg(feature = "pjrt")]
         Some("bench-decode") => cmd_bench_decode(&args),
-        #[cfg(not(feature = "pjrt"))]
-        Some(cmd @ ("generate" | "serve" | "variants" | "bench-decode")) => {
-            Err(anyhow!(
-                "subcommand {cmd:?} needs the PJRT runtime; rebuild with \
-                 `cargo build --features pjrt` (and real xla bindings)"
-            ))
-        }
         _ => usage(),
     };
     if let Err(e) = result {

@@ -1,7 +1,17 @@
-//! The PJRT runtime: loads AOT artifacts (HLO text + weights) and executes
-//! them with device-resident state. Python never runs here.
+//! The model runtime layer.
+//!
+//! * [`weights`] — std-only weight handling: the `<variant>.weights.bin`
+//!   reader addressed by the manifest's parameter table, plus the native
+//!   backend's [`weights::NativeWeights`] (seeded synthesis or file
+//!   load).
+//! * [`engine`]  — the PJRT engine (behind the `pjrt` cargo feature):
+//!   loads AOT artifacts (HLO text + weights) and executes them with
+//!   device-resident state. Python never runs here.
 
-pub mod engine;
 pub mod weights;
 
+#[cfg(feature = "pjrt")]
+pub mod engine;
+
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, LoadedExec, Variant};

@@ -1,11 +1,23 @@
-//! `<variant>.weights.bin` reader: raw little-endian arrays addressed by
-//! the manifest's parameter table, uploaded once as device buffers.
+//! Weight init + loading (std-only).
+//!
+//! [`WeightFile`]: the `<variant>.weights.bin` reader — raw little-endian
+//! arrays addressed by the manifest's parameter table (uploaded once as
+//! device buffers under the `pjrt` feature).
+//!
+//! [`NativeWeights`]: the native backend's full parameter set — either
+//! synthesized deterministically from a seed (no artifacts required; the
+//! default for every native CLI path) or loaded from a [`WeightFile`]
+//! whose parameter table follows the native naming convention
+//! (`embed`, `layers.<i>.ln1.g`, `layers.<i>.attn.wq`, `layers.<i>.w1`,
+//! …, `lnf.g`).
 
 use std::path::Path;
+use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::{DType, ParamEntry, VariantSpec};
+use crate::config::{DType, NativeModelConfig, ParamEntry, VariantSpec};
+use crate::util::rng::Rng;
 
 /// The raw weight blob for one variant.
 pub struct WeightFile {
@@ -55,11 +67,158 @@ impl WeightFile {
     }
 }
 
+#[cfg(feature = "pjrt")]
 pub fn xla_element_type(dt: DType) -> xla::ElementType {
     match dt {
         DType::F32 => xla::ElementType::F32,
         DType::I32 => xla::ElementType::S32,
         DType::I8 => xla::ElementType::S8,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native backend weights.
+// ---------------------------------------------------------------------------
+
+/// Attention projections of one layer, each `[d_model, d_model]`
+/// row-major (input × output), bias-free.
+pub struct AttnWeights {
+    pub wq: Arc<Vec<f32>>,
+    pub wk: Arc<Vec<f32>>,
+    pub wv: Arc<Vec<f32>>,
+    pub wo: Arc<Vec<f32>>,
+}
+
+/// One pre-LN transformer block's parameters.
+pub struct LayerWeights {
+    pub ln1_gain: Vec<f32>,
+    pub ln1_bias: Vec<f32>,
+    pub attn: AttnWeights,
+    pub ln2_gain: Vec<f32>,
+    pub ln2_bias: Vec<f32>,
+    /// `[d_model, d_ff]` row-major.
+    pub w1: Arc<Vec<f32>>,
+    /// `[d_ff]`.
+    pub b1: Arc<Vec<f32>>,
+    /// `[d_ff, d_model]` row-major.
+    pub w2: Arc<Vec<f32>>,
+    /// `[d_model]`.
+    pub b2: Arc<Vec<f32>>,
+}
+
+/// Full parameter set of the native tiny-GELU transformer (tied
+/// input/output embedding).
+pub struct NativeWeights {
+    /// `[vocab, d_model]` row-major.
+    pub embed: Arc<Vec<f32>>,
+    pub layers: Vec<LayerWeights>,
+    pub lnf_gain: Vec<f32>,
+    pub lnf_bias: Vec<f32>,
+}
+
+fn normal_vec(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+impl NativeWeights {
+    /// Deterministic seeded init (GPT-2-style scales: `1/√d` fan-in,
+    /// residual projections damped so the stream stays stable).
+    pub fn synthesize(cfg: &NativeModelConfig) -> NativeWeights {
+        let (d, h, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        let mut rng = Rng::new(cfg.seed);
+        let proj = 1.0 / (d as f64).sqrt();
+        let resid = proj * 0.5;
+        let embed = Arc::new(normal_vec(&mut rng, v * d, 0.3));
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                ln1_gain: vec![1.0; d],
+                ln1_bias: vec![0.0; d],
+                attn: AttnWeights {
+                    wq: Arc::new(normal_vec(&mut rng, d * d, proj)),
+                    wk: Arc::new(normal_vec(&mut rng, d * d, proj)),
+                    wv: Arc::new(normal_vec(&mut rng, d * d, proj)),
+                    wo: Arc::new(normal_vec(&mut rng, d * d, resid)),
+                },
+                ln2_gain: vec![1.0; d],
+                ln2_bias: vec![0.0; d],
+                w1: Arc::new(normal_vec(&mut rng, d * h, proj)),
+                b1: Arc::new(vec![0.0; h]),
+                w2: Arc::new(normal_vec(&mut rng, h * d, 0.5 / (h as f64).sqrt())),
+                b2: Arc::new(vec![0.0; d]),
+            })
+            .collect();
+        NativeWeights {
+            embed,
+            layers,
+            lnf_gain: vec![1.0; d],
+            lnf_bias: vec![0.0; d],
+        }
+    }
+
+    /// Load from a manifest-addressed weight blob using the native
+    /// parameter naming convention. Every parameter must be present,
+    /// f32, and of the exact shape the config implies.
+    pub fn from_weight_file(
+        wf: &WeightFile,
+        variant: &VariantSpec,
+        cfg: &NativeModelConfig,
+    ) -> Result<NativeWeights> {
+        let (d, h, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        let get = |name: &str, shape: &[usize]| -> Result<Vec<f32>> {
+            let p = variant.param(name)?;
+            if p.shape != shape {
+                bail!(
+                    "param {name}: manifest shape {:?} != expected {shape:?}",
+                    p.shape
+                );
+            }
+            wf.f32_slice(p)
+        };
+        let embed = Arc::new(get("embed", &[v, d])?);
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let n = |suffix: &str| format!("layers.{i}.{suffix}");
+            layers.push(LayerWeights {
+                ln1_gain: get(&n("ln1.g"), &[d])?,
+                ln1_bias: get(&n("ln1.b"), &[d])?,
+                attn: AttnWeights {
+                    wq: Arc::new(get(&n("attn.wq"), &[d, d])?),
+                    wk: Arc::new(get(&n("attn.wk"), &[d, d])?),
+                    wv: Arc::new(get(&n("attn.wv"), &[d, d])?),
+                    wo: Arc::new(get(&n("attn.wo"), &[d, d])?),
+                },
+                ln2_gain: get(&n("ln2.g"), &[d])?,
+                ln2_bias: get(&n("ln2.b"), &[d])?,
+                w1: Arc::new(get(&n("w1"), &[d, h])?),
+                b1: Arc::new(get(&n("b1"), &[h])?),
+                w2: Arc::new(get(&n("w2"), &[h, d])?),
+                b2: Arc::new(get(&n("b2"), &[d])?),
+            });
+        }
+        Ok(NativeWeights {
+            embed,
+            layers,
+            lnf_gain: get("lnf.g", &[d])?,
+            lnf_bias: get("lnf.b", &[d])?,
+        })
+    }
+
+    /// Load `<dir>/<variant>.weights.bin` per the variant's table.
+    pub fn load(
+        dir: &Path,
+        variant: &VariantSpec,
+        cfg: &NativeModelConfig,
+    ) -> Result<NativeWeights> {
+        let wf = WeightFile::load(dir, variant)
+            .map_err(|e| anyhow!("native weights for {}: {e}", variant.name))?;
+        NativeWeights::from_weight_file(&wf, variant, cfg)
+    }
+
+    pub fn param_count(&self, cfg: &NativeModelConfig) -> usize {
+        let (d, h) = (cfg.d_model, cfg.d_ff);
+        cfg.vocab * d
+            + cfg.n_layers * (4 * d + 4 * d * d + 2 * d * h + h + d)
+            + 2 * d
     }
 }
 
@@ -78,6 +237,7 @@ mod tests {
             weights_file: "t.weights.bin".into(),
             params,
             executables: BTreeMap::<String, ExecSpec>::new(),
+            tardis: None,
         }
     }
 
@@ -114,6 +274,107 @@ mod tests {
             nbytes: 8,
         }]);
         assert!(WeightFile::load(&dir, &v).is_err());
+    }
+
+    fn tiny_cfg() -> NativeModelConfig {
+        NativeModelConfig {
+            vocab: 8,
+            d_model: 4,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 8,
+            max_seq: 16,
+            batch: 2,
+            prefill_buckets: vec![4],
+            seed: 99,
+            threads: 0,
+        }
+    }
+
+    #[test]
+    fn synthesize_is_deterministic_and_shaped() {
+        let cfg = tiny_cfg();
+        let a = NativeWeights::synthesize(&cfg);
+        let b = NativeWeights::synthesize(&cfg);
+        assert_eq!(a.embed.len(), cfg.vocab * cfg.d_model);
+        assert_eq!(a.layers.len(), 1);
+        assert_eq!(a.layers[0].w1.len(), cfg.d_model * cfg.d_ff);
+        assert_eq!(a.layers[0].w2.len(), cfg.d_ff * cfg.d_model);
+        assert_eq!(*a.embed, *b.embed, "same seed => same weights");
+        assert_eq!(*a.layers[0].attn.wq, *b.layers[0].attn.wq);
+        assert_eq!(*a.layers[0].w2, *b.layers[0].w2);
+        let other = NativeWeights::synthesize(&NativeModelConfig {
+            seed: 100,
+            ..cfg
+        });
+        assert_ne!(*a.embed, *other.embed, "seed changes weights");
+    }
+
+    #[test]
+    fn from_weight_file_roundtrips_native_params() {
+        let cfg = tiny_cfg();
+        let (d, h, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        // Build the blob + table for the native naming convention.
+        let names: Vec<(String, Vec<usize>)> = {
+            let mut ns = vec![("embed".to_string(), vec![v, d])];
+            let l = |s: &str| format!("layers.0.{s}");
+            for (s, shape) in [
+                ("ln1.g", vec![d]),
+                ("ln1.b", vec![d]),
+                ("attn.wq", vec![d, d]),
+                ("attn.wk", vec![d, d]),
+                ("attn.wv", vec![d, d]),
+                ("attn.wo", vec![d, d]),
+                ("ln2.g", vec![d]),
+                ("ln2.b", vec![d]),
+                ("w1", vec![d, h]),
+                ("b1", vec![h]),
+                ("w2", vec![h, d]),
+                ("b2", vec![d]),
+            ] {
+                ns.push((l(s), shape));
+            }
+            ns.push(("lnf.g".to_string(), vec![d]));
+            ns.push(("lnf.b".to_string(), vec![d]));
+            ns
+        };
+        let mut params = Vec::new();
+        let mut blob: Vec<u8> = Vec::new();
+        for (name, shape) in &names {
+            let elems: usize = shape.iter().product();
+            let offset = blob.len();
+            for e in 0..elems {
+                blob.extend_from_slice(
+                    &((offset + e) as f32 * 0.5).to_le_bytes(),
+                );
+            }
+            params.push(ParamEntry {
+                name: name.clone(),
+                dtype: DType::F32,
+                shape: shape.clone(),
+                offset,
+                nbytes: elems * 4,
+            });
+        }
+        let dir = std::env::temp_dir().join("tardis_native_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.weights.bin"), &blob).unwrap();
+        let vspec = spec(params);
+        let w = NativeWeights::load(&dir, &vspec, &cfg).unwrap();
+        assert_eq!(w.embed.len(), v * d);
+        assert_eq!(w.embed[0], 0.0);
+        assert_eq!(w.embed[1], 0.5);
+        assert_eq!(w.layers[0].b1.len(), h);
+        assert_eq!(w.lnf_bias.len(), d);
+        // wrong shape in the table is rejected
+        let mut bad = vspec.clone();
+        bad.params[0].shape = vec![d, v];
+        assert!(NativeWeights::from_weight_file(
+            &WeightFile::load(&dir, &bad).unwrap(),
+            &bad,
+            &cfg
+        )
+        .is_err());
     }
 
     #[test]

@@ -130,6 +130,12 @@ pub fn render_stats(replicas: &[(String, EngineSnapshot)]) -> String {
                     ("admitted", Json::num(s.admitted as f64)),
                     ("finished", Json::num(s.finished as f64)),
                     ("iterations", Json::num(s.iterations as f64)),
+                    ("ffn_fallback_rate",
+                     s.ffn_fallback_rate.map(Json::num).unwrap_or(Json::Null)),
+                    ("ffn_last_step_fallback_rate",
+                     s.ffn_last_step_fallback_rate
+                         .map(Json::num)
+                         .unwrap_or(Json::Null)),
                 ])
             })),
         ),
@@ -212,6 +218,8 @@ mod tests {
             admitted: 6,
             finished: 5,
             iterations: 99,
+            ffn_fallback_rate: None,
+            ffn_last_step_fallback_rate: None,
         };
         let s = render_stats(&[("dense".to_string(), snap)]);
         let j = Json::parse(&s).unwrap();
@@ -225,6 +233,40 @@ mod tests {
                    Some(3));
         assert_eq!(reps[0].get("tokens_generated").and_then(Json::as_usize),
                    Some(42));
+        // no partially-linear FFN -> explicit null
+        assert_eq!(reps[0].get("ffn_fallback_rate"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn renders_ffn_fallback_rate_when_present() {
+        let snap = EngineSnapshot {
+            policy: "fifo",
+            queue_depth: 0,
+            queue_pressure: 0.0,
+            active_slots: 0,
+            inflight_prefills: 0,
+            slots_total: 4,
+            mean_occupancy: 0.0,
+            tokens_generated: 0,
+            admitted: 0,
+            finished: 0,
+            iterations: 1,
+            ffn_fallback_rate: Some(0.125),
+            ffn_last_step_fallback_rate: Some(0.25),
+        };
+        let s = render_stats(&[("tardis80".to_string(), snap)]);
+        let j = Json::parse(&s).unwrap();
+        let reps = j.get("replicas").and_then(Json::as_arr).unwrap();
+        let rate = reps[0]
+            .get("ffn_fallback_rate")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((rate - 0.125).abs() < 1e-12);
+        let last = reps[0]
+            .get("ffn_last_step_fallback_rate")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((last - 0.25).abs() < 1e-12);
     }
 
     #[test]

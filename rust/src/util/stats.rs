@@ -47,7 +47,9 @@ impl Samples {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp is NaN-safe (NaNs sort to the ends) where
+            // partial_cmp().unwrap() would panic on the first NaN sample.
+            self.xs.sort_by(f64::total_cmp);
             self.sorted = true;
         }
     }
@@ -188,6 +190,21 @@ mod tests {
         let mut s = Samples::new();
         assert!(s.mean().is_nan());
         assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_percentile() {
+        // Regression: partial_cmp().unwrap() panicked when a NaN had
+        // been pushed (e.g. a rate computed from an empty window).
+        let mut s = Samples::new();
+        s.push(2.0);
+        s.push(f64::NAN);
+        s.push(1.0);
+        s.push(3.0);
+        assert_eq!(s.min(), 1.0);
+        // positive NaN sorts last under total_cmp
+        assert!((1.0..=3.0).contains(&s.percentile(50.0)));
+        assert!(s.max().is_nan());
     }
 
     #[test]

@@ -36,6 +36,11 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), workers }
     }
 
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx
             .as_ref()

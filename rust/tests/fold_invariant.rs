@@ -1,0 +1,299 @@
+//! The fold invariant, from kernel level up through the scheduler:
+//!
+//! 1. For rows whose pre-activations all lie inside the approximated
+//!    linear range, the folded FFN reproduces the partially-linearized
+//!    dense FFN up to the fold's reassociation roundoff (property test
+//!    over random shapes/weights, rows held under the provable radius).
+//! 2. On mixed batches the predictor's fallback engages: outlier rows
+//!    are routed down the dense path and match it *bitwise*, while
+//!    in-range rows stay within fold roundoff.
+//! 3. The invariant survives the serving stack: for every scheduler
+//!    policy, the exact prefill/decode call sequence the engine emits is
+//!    replayed on a tardis NativeModel and its unfolded reference, and
+//!    all logits must agree within tolerance.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use tardis::config::{FfnMode, NativeModelConfig, TardisFfnConfig};
+use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::model::{MockModel, NativeModel, StepModel};
+use tardis::coordinator::request::SamplingParams;
+use tardis::coordinator::scheduler::{PolicyKind, StepOutcome, StepPlan};
+use tardis::ffn::linalg::norm;
+use tardis::ffn::{DenseFfn, FoldedFfn};
+use tardis::prop_assert;
+use tardis::testing::property;
+use tardis::util::rng::Rng;
+
+fn random_dense(rng: &mut Rng, d: usize, h: usize) -> DenseFfn {
+    let scale = 0.4 / (d as f64).sqrt();
+    let w_up: Vec<f32> =
+        (0..d * h).map(|_| (rng.normal() * scale) as f32).collect();
+    let b_up: Vec<f32> =
+        (0..h).map(|_| (rng.normal() * 0.05) as f32).collect();
+    let w_down: Vec<f32> =
+        (0..h * d).map(|_| (rng.normal() * scale) as f32).collect();
+    let b_down: Vec<f32> =
+        (0..d).map(|_| (rng.normal() * 0.05) as f32).collect();
+    DenseFfn::new(
+        Arc::new(w_up),
+        Arc::new(b_up),
+        Arc::new(w_down),
+        Arc::new(b_down),
+        d,
+        h,
+    )
+}
+
+fn tardis_cfg(ratio: f64) -> TardisFfnConfig {
+    TardisFfnConfig {
+        fold_ratio: ratio,
+        linear_lo: -6.0,
+        linear_hi: 6.0,
+        predictor_threshold: 1.0,
+    }
+}
+
+/// Random row directions rescaled to a fixed norm.
+fn rows_at_norm(rng: &mut Rng, rows: usize, d: usize, target: f32) -> Vec<f32> {
+    let mut x = vec![0f32; rows * d];
+    for row in x.chunks_mut(d) {
+        for v in row.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        let n = norm(row).max(1e-6);
+        for v in row.iter_mut() {
+            *v *= target / n;
+        }
+    }
+    x
+}
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * b.abs().max(1.0)
+}
+
+#[test]
+fn folded_equals_dense_inside_linear_range() {
+    property("fold invariant in-range", 40, |rng| {
+        let d = 4 + rng.usize_below(12);
+        let h = d + 1 + rng.usize_below(3 * d);
+        let ratio = 0.4 + rng.f64() * 0.6;
+        let dense = random_dense(rng, d, h);
+        let mut folded = FoldedFfn::new(dense, &tardis_cfg(ratio));
+        let r = folded.predictor.safe_radius();
+        prop_assert!(r > 0.0, "degenerate safe radius {r}");
+        let rows = 1 + rng.usize_below(6);
+        let x = rows_at_norm(rng, rows, d, 0.9 * r);
+        let got = folded.forward(None, &x, rows);
+        let want = folded.reference.forward(None, &x, rows);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            prop_assert!(
+                close(*g, *w, 1e-3),
+                "d={d} h={h} ratio={ratio:.2} elem {i}: folded {g} vs dense {w}"
+            );
+        }
+        prop_assert!(
+            folded.telemetry.fallback_rows == 0,
+            "provably safe rows must not fall back"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn fallback_bounds_error_on_mixed_batches() {
+    property("fold fallback on outliers", 40, |rng| {
+        let d = 4 + rng.usize_below(12);
+        let h = d + 1 + rng.usize_below(3 * d);
+        let dense = random_dense(rng, d, h);
+        let mut folded = FoldedFfn::new(dense, &tardis_cfg(0.7));
+        let r = folded.predictor.safe_radius();
+        prop_assert!(r > 0.0, "degenerate safe radius {r}");
+        // rows: a safe one, an outlier along folded column 0, a safe one.
+        let h_total = folded.reference.d_ff;
+        let mut x = rows_at_norm(rng, 3, d, 0.8 * r);
+        for (l, v) in x[d..2 * d].iter_mut().enumerate() {
+            *v = folded.reference.w_up[l * h_total];
+        }
+        let n1 = norm(&x[d..2 * d]).max(1e-9);
+        let blow = 60.0 * r / n1;
+        for v in x[d..2 * d].iter_mut() {
+            *v *= blow;
+        }
+        let got = folded.forward(None, &x, 3);
+        let want = folded.reference.forward(None, &x, 3);
+        // outlier row falls back: bitwise equal to the dense path
+        for (i, (g, w)) in got[d..2 * d].iter().zip(&want[d..2 * d]).enumerate()
+        {
+            prop_assert!(g == w, "fallback row elem {i}: {g} != {w}");
+        }
+        // in-range rows stay within fold roundoff
+        for (i, (g, w)) in got[..d].iter().zip(&want[..d]).enumerate() {
+            prop_assert!(close(*g, *w, 1e-3), "row0 elem {i}: {g} vs {w}");
+        }
+        for (i, (g, w)) in got[2 * d..].iter().zip(&want[2 * d..]).enumerate() {
+            prop_assert!(close(*g, *w, 1e-3), "row2 elem {i}: {g} vs {w}");
+        }
+        prop_assert!(folded.telemetry.fallback_rows == 1,
+                     "exactly the outlier row falls back");
+        prop_assert!(folded.telemetry.folded_rows == 2);
+        prop_assert!(folded.predictor.stats.observed_out_of_range == 1);
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler-level replay: the invariant across every policy.
+// ---------------------------------------------------------------------------
+
+#[derive(Default, Clone)]
+struct CallLog {
+    prefills: Vec<(usize, Vec<i32>, usize, usize, usize)>,
+    decodes: Vec<(Vec<i32>, Vec<i32>)>,
+}
+
+/// Wraps the mock model, recording the exact call sequence the engine
+/// issues under a given policy (schedules depend only on lengths, never
+/// on token values, so the log replays verbatim on any backend).
+struct RecordingModel {
+    inner: MockModel,
+    log: CallLog,
+}
+
+impl StepModel for RecordingModel {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn max_seq(&self) -> usize {
+        self.inner.max_seq()
+    }
+
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        self.inner.prefill_buckets()
+    }
+
+    fn plan_begin(&mut self, plan: &StepPlan) {
+        self.inner.plan_begin(plan);
+    }
+
+    fn plan_end(&mut self, outcome: &StepOutcome) {
+        self.inner.plan_end(outcome);
+    }
+
+    fn prefill(&mut self, bucket: usize, tokens: &[i32], real_len: usize,
+               slot: usize, pos0: usize) -> Result<Vec<f32>> {
+        self.log
+            .prefills
+            .push((bucket, tokens.to_vec(), real_len, slot, pos0));
+        self.inner.prefill(bucket, tokens, real_len, slot, pos0)
+    }
+
+    fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        self.log.decodes.push((tokens.to_vec(), pos.to_vec()));
+        self.inner.decode(tokens, pos)
+    }
+}
+
+fn native_cfg() -> NativeModelConfig {
+    NativeModelConfig {
+        vocab: 32,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 64,
+        batch: 4,
+        prefill_buckets: vec![4, 8],
+        seed: 0xF01D,
+        threads: 0,
+    }
+}
+
+/// Replay a recorded call sequence, returning all logits in call order.
+fn replay(model: &mut NativeModel, log: &CallLog) -> Vec<f32> {
+    let mut out = Vec::new();
+    for (bucket, tokens, real_len, slot, pos0) in &log.prefills {
+        out.extend(
+            model
+                .prefill(*bucket, tokens, *real_len, *slot, *pos0)
+                .expect("prefill"),
+        );
+    }
+    for (tokens, pos) in &log.decodes {
+        out.extend(model.decode(tokens, pos).expect("decode"));
+    }
+    out
+}
+
+#[test]
+fn fold_invariant_holds_across_all_scheduler_policies() {
+    // Pre-activations post-LN are ~N(0,1); ±8 keeps every row in range
+    // so tardis vs reference differ only by the fold's reassociation.
+    let t = TardisFfnConfig {
+        fold_ratio: 0.8,
+        linear_lo: -8.0,
+        linear_hi: 8.0,
+        predictor_threshold: 1.05,
+    };
+    for policy in PolicyKind::all() {
+        let mut cfg = EngineConfig::default();
+        cfg.scheduler.policy = policy;
+        let mut engine = InferenceEngine::new(
+            RecordingModel {
+                inner: MockModel::new(4, 64, 32, vec![4, 8]),
+                log: CallLog::default(),
+            },
+            cfg,
+        );
+        for i in 0..6i32 {
+            let len = 1 + (5 * i as usize + 1) % 11;
+            let prompt: Vec<i32> =
+                (0..len as i32).map(|j| (i * 7 + j) % 32).collect();
+            engine
+                .submit(
+                    prompt,
+                    SamplingParams {
+                        max_tokens: 3 + (i as usize % 4),
+                        priority: i % 3,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+        }
+        engine.run_to_completion().unwrap();
+        let log = engine.model.log.clone();
+        assert!(!log.prefills.is_empty() && !log.decodes.is_empty());
+
+        let mut tardis =
+            NativeModel::new(native_cfg(), &FfnMode::Tardis(t));
+        let mut reference =
+            NativeModel::new(native_cfg(), &FfnMode::TardisReference(t));
+        let got = replay(&mut tardis, &log);
+        let want = replay(&mut reference, &log);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                close(*g, *w, 2e-2),
+                "policy {}: logit {i} diverged: tardis {g} vs reference {w}",
+                policy.name()
+            );
+        }
+        let tele = tardis.ffn_telemetry().expect("telemetry");
+        assert!(tele.total_rows() > 0);
+        assert!(
+            tele.folded_rows > 0,
+            "policy {}: the fold never engaged (fallback {}/{} rows)",
+            policy.name(),
+            tele.fallback_rows,
+            tele.total_rows()
+        );
+    }
+}
