@@ -1,17 +1,31 @@
-//! Native FFN fold benchmark: dense vs TARDIS-folded forward at several
-//! fold ratios (TINY_GELU shape), plus full decode steps through the
-//! NativeModel, cross-validated against `costmodel::tardis_speedup`.
+//! Native FFN benchmark, three levels deep:
+//!
+//! 1. kernel — blocked packed GEMM vs the pre-PR scalar kernel
+//!    ([`tardis::ffn::kernels::matmul_naive`]) at the TINY_GELU
+//!    up-projection shape, batch and single-row (decode) cases, in
+//!    GFLOP/s;
+//! 2. FFN — dense vs TARDIS-folded forward at several fold ratios;
+//! 3. model — full decode steps through the NativeModel, dense vs
+//!    tardis80, cross-validated against `costmodel::tardis_speedup`.
+//!
+//! Besides the human-readable table, the run writes
+//! `BENCH_native_ffn.json` (override the path with `TARDIS_BENCH_JSON`)
+//! so the perf trajectory is tracked across PRs: GFLOP/s, packed/naive
+//! ratio, tokens/s, measured dense-vs-tardis ratio, fallback rate,
+//! scratch-arena misses.
 //!
 //! Run: `cargo bench --bench native_ffn`
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use tardis::bench::{black_box, Bench};
 use tardis::config::{FfnMode, NativeModelConfig, TardisFfnConfig};
 use tardis::coordinator::model::{NativeModel, StepModel};
 use tardis::costmodel;
-use tardis::ffn::linalg::norm;
+use tardis::ffn::kernels::{matmul, matmul_naive, norm, Epilogue, PackedMatrix, Scratch};
 use tardis::ffn::{DenseFfn, FoldedFfn};
+use tardis::util::json::Json;
 use tardis::util::rng::Rng;
 
 fn tiny_dense(rng: &mut Rng, d: usize, h: usize) -> DenseFfn {
@@ -26,12 +40,70 @@ fn tiny_dense(rng: &mut Rng, d: usize, h: usize) -> DenseFfn {
     )
 }
 
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn gflops(rows: usize, k: usize, m: usize, mean_ms: f64) -> f64 {
+    2.0 * (rows * k * m) as f64 / (mean_ms * 1e-3) / 1e9
+}
+
 fn main() {
     let mut b = Bench::new("native_ffn");
     let spec = costmodel::TINY_GELU;
     let (d, h) = (spec.d_model, spec.d_ff);
     let batch = 4;
     let mut rng = Rng::new(0xBEEF);
+    let mut report = BTreeMap::new();
+    report.insert("suite".to_string(), Json::Str("native_ffn".to_string()));
+    {
+        let mut shape = BTreeMap::new();
+        shape.insert("d_model".to_string(), num(d as f64));
+        shape.insert("d_ff".to_string(), num(h as f64));
+        shape.insert("batch".to_string(), num(batch as f64));
+        report.insert("shape".to_string(), Json::Obj(shape));
+    }
+
+    // ---- kernel-level: packed blocked GEMM vs pre-PR scalar kernel -----
+    let x: Vec<f32> = (0..batch * d).map(|_| rng.normal() as f32).collect();
+    let wraw: Vec<f32> = (0..d * h).map(|_| rng.normal() as f32).collect();
+    let bias: Vec<f32> = (0..h).map(|_| rng.normal() as f32).collect();
+    let packed = PackedMatrix::pack(&wraw, d, h);
+    let mut y = vec![0f32; batch * h];
+    b.run("gemm/naive_b4", || {
+        black_box(matmul_naive(&x, batch, d, &wraw, h, Some(&bias)));
+    });
+    b.run("gemm/packed_b4", || {
+        matmul(None, &x, batch, &packed, Epilogue::Bias(&bias), &mut y);
+        black_box(&y);
+    });
+    b.run("gemm/naive_b1", || {
+        black_box(matmul_naive(&x[..d], 1, d, &wraw, h, Some(&bias)));
+    });
+    b.run("gemm/packed_b1", || {
+        matmul(None, &x[..d], 1, &packed, Epilogue::Bias(&bias), &mut y[..h]);
+        black_box(&y);
+    });
+    let naive4 = gflops(batch, d, h, b.mean_ms("gemm/naive_b4").unwrap());
+    let packed4 = gflops(batch, d, h, b.mean_ms("gemm/packed_b4").unwrap());
+    let naive1 = gflops(1, d, h, b.mean_ms("gemm/naive_b1").unwrap());
+    let packed1 = gflops(1, d, h, b.mean_ms("gemm/packed_b1").unwrap());
+    println!(
+        "gemm [{batch}x{d}]x[{d}x{h}]: naive {naive4:.2} GFLOP/s, packed {packed4:.2} \
+         GFLOP/s ({:.2}x); rows=1: naive {naive1:.2}, packed {packed1:.2} ({:.2}x)",
+        packed4 / naive4,
+        packed1 / naive1,
+    );
+    {
+        let mut g = BTreeMap::new();
+        g.insert("naive_gflops_b4".to_string(), num(naive4));
+        g.insert("packed_gflops_b4".to_string(), num(packed4));
+        g.insert("packed_vs_naive_b4".to_string(), num(packed4 / naive4));
+        g.insert("naive_gflops_b1".to_string(), num(naive1));
+        g.insert("packed_gflops_b1".to_string(), num(packed1));
+        g.insert("packed_vs_naive_b1".to_string(), num(packed1 / naive1));
+        report.insert("gemm".to_string(), Json::Obj(g));
+    }
 
     // ---- FFN-level: dense vs folded forward ----------------------------
     let dense = tiny_dense(&mut rng, d, h);
@@ -47,12 +119,16 @@ fn main() {
         x
     };
 
+    let mut scratch = Scratch::new();
     let xd = mk_rows(1.0);
     b.run("ffn/dense", || {
-        black_box(dense.forward(None, &xd, batch));
+        let y = dense.forward(None, &mut scratch, &xd, batch);
+        black_box(&y);
+        scratch.give(y);
     });
 
     let mut measured: Vec<(f64, f64)> = Vec::new(); // (ratio, speedup)
+    let mut ffn_cases: Vec<Json> = Vec::new();
     for pct in [50u32, 70, 80] {
         let cfg = TardisFfnConfig {
             fold_ratio: pct as f64 / 100.0,
@@ -63,18 +139,28 @@ fn main() {
         let xf = mk_rows(0.9 * folded.predictor.safe_radius());
         let case = format!("ffn/tardis{pct}");
         b.run(&case, || {
-            black_box(folded.forward(None, &xf, batch));
+            let y = folded.forward(None, &mut scratch, &xf, batch);
+            black_box(&y);
+            scratch.give(y);
         });
         let (dm, fm) = (
             b.mean_ms("ffn/dense").unwrap(),
             b.mean_ms(&case).unwrap(),
         );
         measured.push((folded.compression_ratio(), dm / fm));
+        let mut c = BTreeMap::new();
+        c.insert("case".to_string(), Json::Str(format!("tardis{pct}")));
+        c.insert("compression".to_string(), num(folded.compression_ratio()));
+        c.insert("speedup_vs_dense".to_string(), num(dm / fm));
+        ffn_cases.push(Json::Obj(c));
     }
+    report.insert("ffn".to_string(), Json::Arr(ffn_cases));
+    let ffn_misses = scratch.misses;
 
     // ---- model-level: full decode steps --------------------------------
     let model_cfg = NativeModelConfig::tiny_gelu();
     let mut decode_means: Vec<(String, f64)> = Vec::new();
+    let mut decode_json = BTreeMap::new();
     for (name, mode) in [
         ("dense".to_string(), FfnMode::Dense),
         (
@@ -84,11 +170,12 @@ fn main() {
     ] {
         let mut model = NativeModel::new(model_cfg.clone(), &mode);
         let tokens: Vec<i32> = (0..model_cfg.batch as i32).collect();
-        // warm up the KV cache and the online predictor
+        // warm up the KV cache, the online predictor and the scratch arena
         for s in 0..8 {
             let pos = vec![s; model_cfg.batch];
             model.decode(&tokens, &pos).unwrap();
         }
+        let warm_misses = model.scratch_misses();
         let mut s = 8i32;
         let case = format!("decode/{name}");
         b.run(&case, || {
@@ -96,14 +183,39 @@ fn main() {
             black_box(model.decode(&tokens, &pos).unwrap());
             s += 1;
         });
-        decode_means.push((name, b.mean_ms(&case).unwrap()));
-        if let Some(t) = model.ffn_telemetry() {
-            println!(
-                "  [{case}] fallback rate {:.2}%",
-                t.fallback_rate().unwrap_or(0.0) * 100.0
+        // The dense path's buffer usage is deterministic, so its arena
+        // must be silent once warm. (The tardis path can pool one extra
+        // buffer the first time the router produces a new batch mix, so
+        // it is reported rather than asserted.)
+        if name == "dense" {
+            assert_eq!(
+                model.scratch_misses(),
+                warm_misses,
+                "steady-state dense decode allocated scratch buffers"
             );
         }
+        decode_json.insert(
+            format!("scratch_misses_{name}"),
+            num(model.scratch_misses() as f64),
+        );
+        let mean = b.mean_ms(&case).unwrap();
+        let toks_per_s = model_cfg.batch as f64 / (mean * 1e-3);
+        decode_means.push((name.clone(), mean));
+        decode_json.insert(format!("{name}_ms"), num(mean));
+        decode_json.insert(format!("tokens_per_s_{name}"), num(toks_per_s));
+        if let Some(t) = model.ffn_telemetry() {
+            let rate = t.fallback_rate().unwrap_or(0.0);
+            println!("  [{case}] fallback rate {:.2}%", rate * 100.0);
+            decode_json.insert(format!("fallback_rate_{name}"), num(rate));
+        }
     }
+    if decode_means.len() == 2 {
+        let ratio = decode_means[0].1 / decode_means[1].1;
+        println!("decode-step speedup tardis80 vs dense: {ratio:.2}x");
+        decode_json.insert("dense_vs_tardis".to_string(), num(ratio));
+    }
+    decode_json.insert("ffn_scratch_misses".to_string(), num(ffn_misses as f64));
+    report.insert("decode".to_string(), Json::Obj(decode_json));
 
     // ---- cross-validation against the analytic cost model --------------
     println!();
@@ -123,11 +235,13 @@ fn main() {
             ratio * 100.0
         );
     }
-    if decode_means.len() == 2 {
-        println!(
-            "decode-step speedup tardis80 vs dense: {:.2}x",
-            decode_means[0].1 / decode_means[1].1
-        );
-    }
     b.report();
+
+    let path = std::env::var("TARDIS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_native_ffn.json".to_string());
+    let json = Json::Obj(report).to_string();
+    match std::fs::write(&path, format!("{json}\n")) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -16,7 +16,7 @@ use anyhow::Result;
 use super::scheduler::{StepOutcome, StepPlan};
 
 use crate::config::{FfnMode, NativeModelConfig};
-use crate::ffn::linalg::{dot, layernorm, matmul};
+use crate::ffn::kernels::{dot, layernorm_into, matmul, Epilogue, Scratch};
 use crate::ffn::{DenseFfn, FfnBackend, FfnTelemetry, FoldedFfn, Linearization};
 use crate::runtime::weights::NativeWeights;
 use crate::util::threadpool::ThreadPool;
@@ -207,6 +207,10 @@ pub struct NativeModel {
     ffns: Vec<FfnBackend>,
     kv: Vec<LayerKv>,
     pool: Option<ThreadPool>,
+    /// Reusable forward-pass buffers: once warm, the forward pass's
+    /// intermediates allocate nothing (see [`Scratch`]; the returned
+    /// logits and decode's small bookkeeping `Vec`s still allocate).
+    scratch: Scratch,
     pub decode_steps: u64,
     pub prefill_chunks: u64,
 }
@@ -269,10 +273,16 @@ impl NativeModel {
             ffns,
             kv,
             pool,
+            scratch: Scratch::new(),
             decode_steps: 0,
             prefill_chunks: 0,
             cfg,
         }
+    }
+
+    /// Scratch-arena allocation misses so far (constant once warm).
+    pub fn scratch_misses(&self) -> u64 {
+        self.scratch.misses
     }
 
     pub fn config(&self) -> &NativeModelConfig {
@@ -299,6 +309,12 @@ impl NativeModel {
 
     /// Run the transformer over `rows`, returning the logits of the rows
     /// listed in `logit_rows` (concatenated, `[logit_rows.len()*vocab]`).
+    ///
+    /// Every intermediate comes from the model's [`Scratch`] arena and
+    /// is recycled before returning — the returned logits buffer (which
+    /// the engine consumes) is the forward pass's only per-call heap
+    /// allocation. All projections (attention, FFN, unembedding) run the
+    /// blocked kernels over weights packed at load time.
     fn forward(&mut self, rows: &[RowCtx], logit_rows: &[usize]) -> Vec<f32> {
         let n = rows.len();
         let d = self.cfg.d_model;
@@ -308,82 +324,109 @@ impl NativeModel {
         let scale = 1.0 / (hd as f32).sqrt();
 
         // Embedding lookup.
-        let mut x = vec![0f32; n * d];
+        let mut x = self.scratch.take(n * d);
         for (xi, r) in x.chunks_exact_mut(d).zip(rows) {
             let t = r.token.rem_euclid(self.cfg.vocab as i32) as usize;
             xi.copy_from_slice(&self.weights.embed[t * d..(t + 1) * d]);
         }
 
+        let mut a = self.scratch.take(n * d);
+        let mut q = self.scratch.take(n * d);
+        let mut kb = self.scratch.take(n * d);
+        let mut vb = self.scratch.take(n * d);
+        let mut ctx = self.scratch.take(n * d);
+        let mut o = self.scratch.take(n * d);
+        let mut f = self.scratch.take(n * d);
+        let mut scores = self.scratch.take(max_seq);
+
         for li in 0..self.cfg.n_layers {
             // -- attention ----------------------------------------------
             let lw = &self.weights.layers[li];
             let pool = self.pool.as_ref();
-            let a = layernorm(&x, n, d, &lw.ln1_gain, &lw.ln1_bias);
-            let q = matmul(pool, &a, n, d, &lw.attn.wq, d, None);
-            let k = matmul(pool, &a, n, d, &lw.attn.wk, d, None);
-            let v = matmul(pool, &a, n, d, &lw.attn.wv, d, None);
+            layernorm_into(&x, n, d, &lw.ln1_gain, &lw.ln1_bias, &mut a);
+            matmul(pool, &a, n, &lw.attn.wq_packed, Epilogue::Store, &mut q);
+            matmul(pool, &a, n, &lw.attn.wk_packed, Epilogue::Store, &mut kb);
+            matmul(pool, &a, n, &lw.attn.wv_packed, Epilogue::Store, &mut vb);
             let kv = &mut self.kv[li];
             for (i, r) in rows.iter().enumerate() {
                 let off = (r.slot * max_seq + r.pos) * d;
-                kv.k[off..off + d].copy_from_slice(&k[i * d..(i + 1) * d]);
-                kv.v[off..off + d].copy_from_slice(&v[i * d..(i + 1) * d]);
+                kv.k[off..off + d].copy_from_slice(&kb[i * d..(i + 1) * d]);
+                kv.v[off..off + d].copy_from_slice(&vb[i * d..(i + 1) * d]);
             }
             // Causal attention per row over its slot's cache 0..=pos.
             // Rows never share a (slot, pos) cell and each attends only
             // up to its own position, so batch order cannot leak.
-            let mut ctx = vec![0f32; n * d];
-            let mut scores: Vec<f32> = Vec::new();
+            ctx.fill(0.0);
             for (i, r) in rows.iter().enumerate() {
                 let base = r.slot * max_seq * d;
                 for head in 0..n_heads {
                     let qh = &q[i * d + head * hd..i * d + (head + 1) * hd];
-                    scores.clear();
                     let mut max_s = f32::NEG_INFINITY;
-                    for t in 0..=r.pos {
+                    for (t, s) in scores.iter_mut().enumerate().take(r.pos + 1) {
                         let koff = base + t * d + head * hd;
-                        let s = dot(qh, &kv.k[koff..koff + hd]) * scale;
-                        max_s = max_s.max(s);
-                        scores.push(s);
+                        let sv = dot(qh, &kv.k[koff..koff + hd]) * scale;
+                        max_s = max_s.max(sv);
+                        *s = sv;
                     }
                     let mut denom = 0f32;
-                    for s in scores.iter_mut() {
+                    for s in scores[..=r.pos].iter_mut() {
                         *s = (*s - max_s).exp();
                         denom += *s;
                     }
                     let out = &mut ctx[i * d + head * hd..i * d + (head + 1) * hd];
-                    for (t, &w) in scores.iter().enumerate() {
+                    for (t, &w) in scores[..=r.pos].iter().enumerate() {
                         let voff = base + t * d + head * hd;
                         let p = w / denom;
-                        for (o, &vv) in out.iter_mut().zip(&kv.v[voff..voff + hd])
+                        for (ov, &vv) in out.iter_mut().zip(&kv.v[voff..voff + hd])
                         {
-                            *o += p * vv;
+                            *ov += p * vv;
                         }
                     }
                 }
             }
-            let o = matmul(pool, &ctx, n, d, &lw.attn.wo, d, None);
-            for (xv, &ov) in x.iter_mut().zip(&o) {
+            matmul(pool, &ctx, n, &lw.attn.wo_packed, Epilogue::Store, &mut o);
+            for (xv, &ov) in x.iter_mut().zip(o.iter()) {
                 *xv += ov;
             }
             // -- FFN ----------------------------------------------------
-            let f = layernorm(&x, n, d, &lw.ln2_gain, &lw.ln2_bias);
-            let y = self.ffns[li].forward(self.pool.as_ref(), &f, n);
-            for (xv, &yv) in x.iter_mut().zip(&y) {
+            layernorm_into(&x, n, d, &lw.ln2_gain, &lw.ln2_bias, &mut f);
+            let y = self.ffns[li].forward(self.pool.as_ref(), &mut self.scratch, &f, n);
+            for (xv, &yv) in x.iter_mut().zip(y.iter()) {
                 *xv += yv;
             }
+            self.scratch.give(y);
         }
 
-        // Final LN + tied unembedding for the requested rows only.
-        let xf = layernorm(&x, n, d, &self.weights.lnf_gain, &self.weights.lnf_bias);
+        // Final LN + tied unembedding (packed GEMM) for the requested
+        // rows only.
         let vocab = self.cfg.vocab;
-        let mut logits = vec![0f32; logit_rows.len() * vocab];
-        for (out, &ri) in logits.chunks_exact_mut(vocab).zip(logit_rows) {
-            let xr = &xf[ri * d..(ri + 1) * d];
-            for (lv, erow) in out.iter_mut().zip(self.weights.embed.chunks_exact(d))
-            {
-                *lv = dot(xr, erow);
-            }
+        let mut xf = self.scratch.take(n * d);
+        layernorm_into(&x, n, d, &self.weights.lnf_gain, &self.weights.lnf_bias, &mut xf);
+        let nl = logit_rows.len();
+        let mut xg = self.scratch.take(nl * d);
+        for (dst, &ri) in xg.chunks_exact_mut(d).zip(logit_rows) {
+            dst.copy_from_slice(&xf[ri * d..(ri + 1) * d]);
         }
+        let mut logits = vec![0f32; nl * vocab];
+        matmul(
+            self.pool.as_ref(),
+            &xg,
+            nl,
+            &self.weights.unembed_packed,
+            Epilogue::Store,
+            &mut logits,
+        );
+        self.scratch.give(xg);
+        self.scratch.give(xf);
+        self.scratch.give(scores);
+        self.scratch.give(f);
+        self.scratch.give(o);
+        self.scratch.give(ctx);
+        self.scratch.give(vb);
+        self.scratch.give(kb);
+        self.scratch.give(q);
+        self.scratch.give(a);
+        self.scratch.give(x);
         logits
     }
 }

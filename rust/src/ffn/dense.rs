@@ -6,12 +6,17 @@
 //! (paper §5.1), outside it the true GELU applies. This partially-linear
 //! dense path is both the semantic reference the fold must reproduce and
 //! the fallback executed for predicted-outlier rows.
+//!
+//! Both projections are pre-packed ([`PackedMatrix`]) at construction;
+//! the pure-GELU path fuses bias+activation into the up-projection's
+//! tile store, and `forward` draws every intermediate from the caller's
+//! [`Scratch`] arena.
 
 use std::sync::Arc;
 
 use crate::util::threadpool::ThreadPool;
 
-use super::linalg::{gelu, matmul};
+use super::kernels::{gelu, matmul, Epilogue, PackedMatrix, Scratch};
 
 /// Least-squares linear surrogate of the activation on `[lo, hi)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -65,7 +70,8 @@ impl Linearization {
 pub struct DenseFfn {
     pub d_model: usize,
     pub d_ff: usize,
-    /// `[d_model, d_ff]` row-major.
+    /// `[d_model, d_ff]` row-major (kept for fold construction and
+    /// introspection; the hot path runs on the packed form).
     pub w_up: Arc<Vec<f32>>,
     /// `[d_ff]`.
     pub b_up: Arc<Vec<f32>>,
@@ -73,6 +79,10 @@ pub struct DenseFfn {
     pub w_down: Arc<Vec<f32>>,
     /// `[d_model]`.
     pub b_down: Arc<Vec<f32>>,
+    /// Packed `[d_model, d_ff]` up-projection.
+    pub w_up_packed: PackedMatrix,
+    /// Packed `[d_ff, d_model]` down-projection.
+    pub w_down_packed: PackedMatrix,
     /// Linear surrogate for units `0..linear_units` (None = pure GELU).
     pub lin: Option<Linearization>,
     pub linear_units: usize,
@@ -91,6 +101,8 @@ impl DenseFfn {
         assert_eq!(b_up.len(), d_ff);
         assert_eq!(w_down.len(), d_ff * d_model);
         assert_eq!(b_down.len(), d_model);
+        let w_up_packed = PackedMatrix::pack(&w_up, d_model, d_ff);
+        let w_down_packed = PackedMatrix::pack(&w_down, d_ff, d_model);
         DenseFfn {
             d_model,
             d_ff,
@@ -98,6 +110,8 @@ impl DenseFfn {
             b_up,
             w_down,
             b_down,
+            w_up_packed,
+            w_down_packed,
             lin: None,
             linear_units: 0,
         }
@@ -111,55 +125,67 @@ impl DenseFfn {
         self
     }
 
-    /// `x·W_up + b_up`, `[rows, d_ff]`.
-    pub fn preactivations(&self, pool: Option<&ThreadPool>, x: &[f32], rows: usize) -> Vec<f32> {
-        matmul(
-            pool,
-            x,
-            rows,
-            self.d_model,
-            &self.w_up,
-            self.d_ff,
-            Some(&self.b_up),
-        )
+    /// `z = x·W_up + b_up` into `z` (`[rows, d_ff]`).
+    pub fn preactivations_into(
+        &self,
+        pool: Option<&ThreadPool>,
+        x: &[f32],
+        rows: usize,
+        z: &mut [f32],
+    ) {
+        matmul(pool, x, rows, &self.w_up_packed, Epilogue::Bias(&self.b_up), z);
     }
 
-    /// In-place activation: linear surrogate on linearized units inside
-    /// their range, GELU everywhere else.
-    pub fn activate(&self, z: &mut [f32]) {
-        for row in z.chunks_mut(self.d_ff) {
-            if let Some(lin) = self.lin {
-                for v in row.iter_mut().take(self.linear_units) {
-                    *v = lin.apply(*v);
-                }
-                for v in row.iter_mut().skip(self.linear_units) {
-                    *v = gelu(*v);
-                }
-            } else {
-                for v in row.iter_mut() {
-                    *v = gelu(*v);
-                }
+    /// In-place activation of one `[d_ff]` row: linear surrogate on
+    /// linearized units inside their range, GELU everywhere else.
+    pub fn activate_row(&self, row: &mut [f32]) {
+        if let Some(lin) = self.lin {
+            for v in row.iter_mut().take(self.linear_units) {
+                *v = lin.apply(*v);
+            }
+            for v in row.iter_mut().skip(self.linear_units) {
+                *v = gelu(*v);
+            }
+        } else {
+            for v in row.iter_mut() {
+                *v = gelu(*v);
             }
         }
     }
 
-    /// `h·W_down + b_down`, `[rows, d_model]`.
-    pub fn project(&self, pool: Option<&ThreadPool>, h: &[f32], rows: usize) -> Vec<f32> {
-        matmul(
-            pool,
-            h,
-            rows,
-            self.d_ff,
-            &self.w_down,
-            self.d_model,
-            Some(&self.b_down),
-        )
+    /// In-place activation of `[rows, d_ff]`.
+    pub fn activate(&self, z: &mut [f32]) {
+        for row in z.chunks_mut(self.d_ff) {
+            self.activate_row(row);
+        }
     }
 
-    pub fn forward(&self, pool: Option<&ThreadPool>, x: &[f32], rows: usize) -> Vec<f32> {
-        let mut z = self.preactivations(pool, x, rows);
-        self.activate(&mut z);
-        self.project(pool, &z, rows)
+    /// `y = h·W_down + b_down` into `y` (`[rows, d_model]`).
+    pub fn project_into(&self, pool: Option<&ThreadPool>, h: &[f32], rows: usize, y: &mut [f32]) {
+        matmul(pool, h, rows, &self.w_down_packed, Epilogue::Bias(&self.b_down), y);
+    }
+
+    /// Full forward; the returned buffer comes from `scratch` (hand it
+    /// back with [`Scratch::give`] for steady-state zero allocation).
+    pub fn forward(
+        &self,
+        pool: Option<&ThreadPool>,
+        scratch: &mut Scratch,
+        x: &[f32],
+        rows: usize,
+    ) -> Vec<f32> {
+        let mut z = scratch.take(rows * self.d_ff);
+        if self.lin.is_none() {
+            // pure GELU: bias + activation fused into the tile store
+            matmul(pool, x, rows, &self.w_up_packed, Epilogue::BiasGelu(&self.b_up), &mut z);
+        } else {
+            self.preactivations_into(pool, x, rows, &mut z);
+            self.activate(&mut z);
+        }
+        let mut y = scratch.take(rows * self.d_model);
+        self.project_into(pool, &z, rows, &mut y);
+        scratch.give(z);
+        y
     }
 
     pub fn param_count(&self) -> usize {
@@ -189,7 +215,8 @@ mod tests {
         let x = vec![1.0, 2.0];
         // z = [1, 2, 3.5]; h = gelu(z); y = [h0+h2+0.1, h1+h2-0.1]
         let (h0, h1, h2) = (gelu(1.0), gelu(2.0), gelu(3.5));
-        let y = f.forward(None, &x, 1);
+        let mut scratch = Scratch::new();
+        let y = f.forward(None, &mut scratch, &x, 1);
         assert!((y[0] - (h0 + h2 + 0.1)).abs() < 1e-6);
         assert!((y[1] - (h1 + h2 - 0.1)).abs() < 1e-6);
     }
@@ -217,6 +244,19 @@ mod tests {
         assert!((z[1] - lin.apply(1.0)).abs() < 1e-7);
         assert!((z[2] - gelu(1.0)).abs() < 1e-7); // unit 2 not linearized
         assert!((z[0] - z[2]).abs() > 1e-4, "surrogate differs from gelu");
+    }
+
+    #[test]
+    fn fused_gelu_path_matches_unfused() {
+        // the same weights with a no-op linearization boundary at 0
+        // units run the unfused path; results must agree bitwise.
+        let fused = tiny();
+        let unfused = tiny().with_linearization(Linearization::fit_gelu(-1.0, 1.0), 0);
+        let x = vec![0.3, -0.7, 1.4, 0.2];
+        let mut scratch = Scratch::new();
+        let a = fused.forward(None, &mut scratch, &x, 2);
+        let b = unfused.forward(None, &mut scratch, &x, 2);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -16,19 +16,22 @@
 //! run the original dense columns. Per batch row an
 //! [`super::predictor::OutlierPredictor`] decides between this folded
 //! path and the exact dense fallback ([`DenseFfn`] with the same partial
-//! linearization); the batch is split, each sub-batch executes once, and
-//! results scatter back in row order. Fallback rows are bitwise equal to
-//! the reference; folded in-range rows differ only by the fold's
-//! reassociation roundoff.
-
-use std::sync::Arc;
+//! linearization).
+//!
+//! The batch split executes **in place**: each side runs the row-sparse
+//! kernel over its row mask ([`matmul_sparse_rows`]) directly on the
+//! input and output buffers — no gather/scatter copies, no per-call
+//! allocation (masks are reused across calls, intermediates come from
+//! the caller's [`Scratch`]). All matrices are pre-packed at fold time.
+//! Fallback rows are bitwise equal to the reference; folded in-range
+//! rows differ only by the fold's reassociation roundoff.
 
 use crate::config::TardisFfnConfig;
 use crate::util::threadpool::ThreadPool;
 
 use super::FfnTelemetry;
 use super::dense::{DenseFfn, Linearization};
-use super::linalg::{gelu, matmul, norm};
+use super::kernels::{matmul, matmul_sparse_rows, norm, Epilogue, PackedMatrix, Scratch};
 use super::predictor::{OutlierPredictor, Route};
 
 pub struct FoldedFfn {
@@ -37,24 +40,28 @@ pub struct FoldedFfn {
     pub reference: DenseFfn,
     folded_units: usize,
     kept_units: usize,
-    /// `[d, d]` folded map `C`.
-    c: Arc<Vec<f32>>,
+    /// Packed `[d, d]` folded map `C`.
+    c: PackedMatrix,
     /// `[d]` folded bias `B` (absorbs `b_down`).
-    b: Arc<Vec<f32>>,
-    /// Kept-unit columns of `W_up`: `[d, kept]`.
-    w_up_kept: Arc<Vec<f32>>,
+    b: Vec<f32>,
+    /// Packed kept-unit columns of `W_up`: `[d, kept]`.
+    w_up_kept: PackedMatrix,
     /// `[kept]`.
-    b_up_kept: Arc<Vec<f32>>,
-    /// Kept-unit rows of `W_down`: `[kept, d]`.
-    w_down_kept: Arc<Vec<f32>>,
+    b_up_kept: Vec<f32>,
+    /// Packed kept-unit rows of `W_down`: `[kept, d]`.
+    w_down_kept: PackedMatrix,
     pub predictor: OutlierPredictor,
     pub telemetry: FfnTelemetry,
+    /// Reusable routing state (no per-call allocation).
+    norms: Vec<f32>,
+    folded_mask: Vec<bool>,
+    fallback_mask: Vec<bool>,
 }
 
 impl FoldedFfn {
     /// Fold `dense` at `cfg.fold_ratio`, linearizing the first
     /// `round(ratio·d_ff)` units on `[linear_lo, linear_hi)`. The fold is
-    /// accumulated in f64.
+    /// accumulated in f64 and packed once.
     pub fn new(dense: DenseFfn, cfg: &TardisFfnConfig) -> FoldedFfn {
         let (d, h) = (dense.d_model, dense.d_ff);
         let nf = ((cfg.fold_ratio * h as f64).round() as usize).min(h);
@@ -122,17 +129,21 @@ impl FoldedFfn {
             safe_radius = f32::MAX;
         }
 
+        let c_f32: Vec<f32> = c.into_iter().map(|v| v as f32).collect();
         FoldedFfn {
-            reference,
             folded_units: nf,
             kept_units: kept,
-            c: Arc::new(c.into_iter().map(|v| v as f32).collect()),
-            b: Arc::new(b.into_iter().map(|v| v as f32).collect()),
-            w_up_kept: Arc::new(w_up_kept),
-            b_up_kept: Arc::new(b_up_kept),
-            w_down_kept: Arc::new(w_down_kept),
+            c: PackedMatrix::pack(&c_f32, d, d),
+            b: b.into_iter().map(|v| v as f32).collect(),
+            w_up_kept: PackedMatrix::pack(&w_up_kept, d, kept),
+            b_up_kept,
+            w_down_kept: PackedMatrix::pack(&w_down_kept, kept, d),
             predictor: OutlierPredictor::new(safe_radius, cfg.predictor_threshold),
             telemetry: FfnTelemetry::default(),
+            norms: Vec::new(),
+            folded_mask: Vec::new(),
+            fallback_mask: Vec::new(),
+            reference,
         }
     }
 
@@ -155,81 +166,133 @@ impl FoldedFfn {
         1.0 - self.param_count() as f64 / self.reference.param_count() as f64
     }
 
-    /// Batch forward with per-row routing; `x` is `[rows, d_model]`.
-    pub fn forward(&mut self, pool: Option<&ThreadPool>, x: &[f32], rows: usize) -> Vec<f32> {
+    /// Batch forward with per-row routing; `x` is `[rows, d_model]`. The
+    /// returned buffer comes from `scratch` (hand it back with
+    /// [`Scratch::give`] for steady-state zero allocation).
+    pub fn forward(
+        &mut self,
+        pool: Option<&ThreadPool>,
+        scratch: &mut Scratch,
+        x: &[f32],
+        rows: usize,
+    ) -> Vec<f32> {
         let d = self.reference.d_model;
         debug_assert_eq!(x.len(), rows * d);
-        let mut folded_rows: Vec<usize> = Vec::new();
-        let mut fallback_rows: Vec<usize> = Vec::new();
-        let mut norms = vec![0f32; rows];
-        for i in 0..rows {
-            norms[i] = norm(&x[i * d..(i + 1) * d]);
-            match self.predictor.classify(norms[i]) {
-                Route::Folded => folded_rows.push(i),
-                Route::Fallback => fallback_rows.push(i),
+        self.norms.clear();
+        self.folded_mask.clear();
+        self.fallback_mask.clear();
+        let mut n_folded = 0usize;
+        for row in x.chunks_exact(d).take(rows) {
+            let nrm = norm(row);
+            let folded = matches!(self.predictor.classify(nrm), Route::Folded);
+            self.norms.push(nrm);
+            self.folded_mask.push(folded);
+            self.fallback_mask.push(!folded);
+            if folded {
+                n_folded += 1;
             }
         }
-        let mut out = vec![0f32; rows * d];
+        let n_fallback = rows - n_folded;
+        let mut out = scratch.take(rows * d);
 
-        if !folded_rows.is_empty() {
-            let xf = gather_rows(x, d, &folded_rows);
-            let n = folded_rows.len();
-            let mut yf = matmul(pool, &xf, n, d, &self.c, d, Some(&self.b));
+        if n_folded == rows {
+            // whole batch folded: dense tiling, parallel when large
+            matmul(pool, x, rows, &self.c, Epilogue::Bias(&self.b), &mut out);
             if self.kept_units > 0 {
-                let mut hk = matmul(
+                let mut hk = scratch.take(rows * self.kept_units);
+                matmul(
                     pool,
-                    &xf,
-                    n,
-                    d,
+                    x,
+                    rows,
                     &self.w_up_kept,
-                    self.kept_units,
-                    Some(&self.b_up_kept),
+                    Epilogue::BiasGelu(&self.b_up_kept),
+                    &mut hk,
                 );
-                for v in hk.iter_mut() {
-                    *v = gelu(*v);
-                }
-                let yk = matmul(pool, &hk, n, self.kept_units, &self.w_down_kept, d, None);
-                for (a, &b) in yf.iter_mut().zip(&yk) {
-                    *a += b;
-                }
+                matmul(pool, &hk, rows, &self.w_down_kept, Epilogue::Add, &mut out);
+                scratch.give(hk);
             }
-            scatter_rows(&yf, d, &folded_rows, &mut out);
+        } else if n_folded > 0 {
+            // mixed batch: folded rows execute in place over their mask
+            matmul_sparse_rows(
+                pool,
+                x,
+                rows,
+                &self.c,
+                Epilogue::Bias(&self.b),
+                &self.folded_mask,
+                &mut out,
+            );
+            if self.kept_units > 0 {
+                let mut hk = scratch.take(rows * self.kept_units);
+                matmul_sparse_rows(
+                    pool,
+                    x,
+                    rows,
+                    &self.w_up_kept,
+                    Epilogue::BiasGelu(&self.b_up_kept),
+                    &self.folded_mask,
+                    &mut hk,
+                );
+                matmul_sparse_rows(
+                    pool,
+                    &hk,
+                    rows,
+                    &self.w_down_kept,
+                    Epilogue::Add,
+                    &self.folded_mask,
+                    &mut out,
+                );
+                scratch.give(hk);
+            }
         }
 
-        if !fallback_rows.is_empty() {
-            let xb = gather_rows(x, d, &fallback_rows);
-            let n = fallback_rows.len();
-            let mut z = self.reference.preactivations(pool, &xb, n);
+        if n_fallback > 0 {
+            let h = self.reference.d_ff;
+            let mut z = scratch.take(rows * h);
+            if n_fallback == rows {
+                self.reference.preactivations_into(pool, x, rows, &mut z);
+            } else {
+                matmul_sparse_rows(
+                    pool,
+                    x,
+                    rows,
+                    &self.reference.w_up_packed,
+                    Epilogue::Bias(&self.reference.b_up),
+                    &self.fallback_mask,
+                    &mut z,
+                );
+            }
             let lin = self.reference.lin.expect("folded ffn has a linearization");
-            for (ri, &orig) in fallback_rows.iter().enumerate() {
-                let zr = &z[ri * self.reference.d_ff..];
-                let in_range = zr[..self.folded_units]
+            for i in 0..rows {
+                if !self.fallback_mask[i] {
+                    continue;
+                }
+                let zrow = &mut z[i * h..(i + 1) * h];
+                let in_range = zrow[..self.folded_units]
                     .iter()
                     .all(|zv| (lin.lo..lin.hi).contains(zv));
-                self.predictor.observe(norms[orig], in_range);
+                self.predictor.observe(self.norms[i], in_range);
+                self.reference.activate_row(zrow);
             }
-            self.reference.activate(&mut z);
-            let yb = self.reference.project(pool, &z, n);
-            scatter_rows(&yb, d, &fallback_rows, &mut out);
+            if n_fallback == rows {
+                self.reference.project_into(pool, &z, rows, &mut out);
+            } else {
+                matmul_sparse_rows(
+                    pool,
+                    &z,
+                    rows,
+                    &self.reference.w_down_packed,
+                    Epilogue::Bias(&self.reference.b_down),
+                    &self.fallback_mask,
+                    &mut out,
+                );
+            }
+            scratch.give(z);
         }
 
-        self.telemetry.folded_rows += folded_rows.len() as u64;
-        self.telemetry.fallback_rows += fallback_rows.len() as u64;
+        self.telemetry.folded_rows += n_folded as u64;
+        self.telemetry.fallback_rows += n_fallback as u64;
         out
-    }
-}
-
-fn gather_rows(x: &[f32], d: usize, idx: &[usize]) -> Vec<f32> {
-    let mut out = Vec::with_capacity(idx.len() * d);
-    for &i in idx {
-        out.extend_from_slice(&x[i * d..(i + 1) * d]);
-    }
-    out
-}
-
-fn scatter_rows(src: &[f32], d: usize, idx: &[usize], dst: &mut [f32]) {
-    for (ri, &i) in idx.iter().enumerate() {
-        dst[i * d..(i + 1) * d].copy_from_slice(&src[ri * d..(ri + 1) * d]);
     }
 }
 
@@ -237,6 +300,7 @@ fn scatter_rows(src: &[f32], d: usize, idx: &[usize], dst: &mut [f32]) {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+    use std::sync::Arc;
 
     fn random_dense(rng: &mut Rng, d: usize, h: usize, scale: f32) -> DenseFfn {
         let w_up: Vec<f32> = (0..d * h).map(|_| rng.normal() as f32 * scale).collect();
@@ -281,8 +345,9 @@ mod tests {
                 *v *= 0.9 * r / n;
             }
         }
-        let got = f.forward(None, &x, rows);
-        let want = f.reference.forward(None, &x, rows);
+        let mut scratch = Scratch::new();
+        let got = f.forward(None, &mut scratch, &x, rows);
+        let want = f.reference.forward(None, &mut scratch, &x, rows);
         for (g, w) in got.iter().zip(&want) {
             assert!(
                 (g - w).abs() <= 1e-3 * w.abs().max(1.0),
@@ -299,7 +364,7 @@ mod tests {
         let dense = random_dense(&mut rng, 8, 16, 0.3);
         let mut f = FoldedFfn::new(dense, &cfg(0.5));
         let r = f.predictor.safe_radius();
-        // one safe row, one far-out row along folded column 0
+        // one far-out row along folded column 0, one safe row
         let d = 8;
         let h = 16;
         let mut x = vec![0f32; 2 * d];
@@ -314,8 +379,9 @@ mod tests {
         for v in x[d..].iter_mut() {
             *v = 0.01 * r;
         }
-        let got = f.forward(None, &x, 2);
-        let want = f.reference.forward(None, &x, 2);
+        let mut scratch = Scratch::new();
+        let got = f.forward(None, &mut scratch, &x, 2);
+        let want = f.reference.forward(None, &mut scratch, &x, 2);
         // outlier row: routed dense, so exactly the reference
         assert_eq!(&got[..d], &want[..d]);
         // safe row: folded, within fold roundoff
@@ -355,9 +421,10 @@ mod tests {
         );
         assert!((f.predictor.safe_radius() - 24.0).abs() < 1e-4);
         let x = vec![15.0f32; d];
-        let first = f.forward(None, &x, 1);
+        let mut scratch = Scratch::new();
+        let first = f.forward(None, &mut scratch, &x, 1);
         assert_eq!(f.telemetry.fallback_rows, 1, "first sighting falls back");
-        let second = f.forward(None, &x, 1);
+        let second = f.forward(None, &mut scratch, &x, 1);
         assert_eq!(f.telemetry.folded_rows, 1, "second sighting folds");
         for (a, b) in first.iter().zip(&second) {
             assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0));
@@ -375,5 +442,33 @@ mod tests {
         let r = full.compression_ratio();
         assert!(r > 0.8, "{r}");
         assert!(half.compression_ratio() > 0.3);
+    }
+
+    #[test]
+    fn steady_state_forward_allocates_nothing() {
+        let mut rng = Rng::new(99);
+        let dense = random_dense(&mut rng, 8, 16, 0.3);
+        let mut f = FoldedFfn::new(dense, &cfg(0.75));
+        let r = f.predictor.safe_radius();
+        let rows = 3;
+        let mut x = vec![0f32; rows * 8];
+        for row in x.chunks_mut(8) {
+            for v in row.iter_mut() {
+                *v = rng.normal() as f32;
+            }
+            let n = norm(row);
+            for v in row.iter_mut() {
+                *v *= 0.5 * r / n;
+            }
+        }
+        let mut scratch = Scratch::new();
+        let warm = f.forward(None, &mut scratch, &x, rows);
+        scratch.give(warm);
+        let misses = scratch.misses;
+        for _ in 0..10 {
+            let y = f.forward(None, &mut scratch, &x, rows);
+            scratch.give(y);
+        }
+        assert_eq!(scratch.misses, misses, "steady-state decode must not allocate");
     }
 }

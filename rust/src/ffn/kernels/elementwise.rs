@@ -1,0 +1,107 @@
+//! Elementwise / reduction primitives shared by the kernel subsystem:
+//! GELU, dot, norm, and single-pass (Welford) LayerNorm.
+
+/// tanh-approximation GELU (the activation of the `TINY_GELU` shape).
+pub fn gelu(z: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+    const CUBIC: f32 = 0.044_715;
+    0.5 * z * (1.0 + (SQRT_2_OVER_PI * (z + CUBIC * z * z * z)).tanh())
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// Euclidean norm of one row.
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// LayerNorm over the last dimension, written into `out`: per row,
+/// subtract the mean, divide by the standard deviation (eps 1e-5),
+/// scale and shift. Mean and variance come from a single Welford pass
+/// (numerically stabler than the old two-pass sum-of-squares and one
+/// fewer sweep over the row).
+pub fn layernorm_into(
+    x: &[f32],
+    rows: usize,
+    d: usize,
+    gain: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(out.len(), rows * d);
+    for (xi, yi) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)).take(rows) {
+        let mut mean = 0f32;
+        let mut m2 = 0f32;
+        let mut count = 0f32;
+        for &v in xi {
+            count += 1.0;
+            let delta = v - mean;
+            mean += delta / count;
+            m2 += delta * (v - mean);
+        }
+        let var = m2 / d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (((yv, &xv), &g), &b) in yi.iter_mut().zip(xi).zip(gain).zip(bias) {
+            *yv = (xv - mean) * inv * g + b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_reference_points() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.8412).abs() < 1e-3);
+        assert!((gelu(-1.0) + 0.1588).abs() < 1e-3);
+        // asymptotes: identity for large z, zero for very negative z
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn layernorm_normalizes_rows() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0];
+        let gain = vec![1.0; 4];
+        let bias = vec![0.0; 4];
+        let mut y = vec![0f32; 8];
+        layernorm_into(&x, 2, 4, &gain, &bias, &mut y);
+        for row in y.chunks(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+        // both rows are affine images of [1,2,3,4]: identical post-norm
+        for (a, b) in y[..4].iter().zip(&y[4..]) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let (rows, d) = (3, 64);
+        let x: Vec<f32> = (0..rows * d).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let gain: Vec<f32> = (0..d).map(|_| 1.0 + 0.1 * rng.normal() as f32).collect();
+        let bias: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut got = vec![0f32; rows * d];
+        layernorm_into(&x, rows, d, &gain, &bias, &mut got);
+        for r in 0..rows {
+            let xi = &x[r * d..(r + 1) * d];
+            let mean: f32 = xi.iter().sum::<f32>() / d as f32;
+            let var: f32 = xi.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for i in 0..d {
+                let want = (xi[i] - mean) * inv * gain[i] + bias[i];
+                let g = got[r * d + i];
+                assert!((g - want).abs() <= 1e-3 * want.abs().max(1.0), "{g} vs {want}");
+            }
+        }
+    }
+}

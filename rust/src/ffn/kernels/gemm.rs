@@ -1,0 +1,584 @@
+//! Register-blocked GEMM over [`PackedMatrix`] panels.
+//!
+//! The hot loop is an `MR`×`NR` micro-kernel: `MR` accumulator rows of
+//! `NR` floats live in fixed-size arrays (autovectorized by stable Rust
+//! — no nightly `std::simd`), each step broadcasts `MR` input values and
+//! streams one packed panel row. Bias and bias+GELU epilogues are fused
+//! into the tile store, so the dense path never re-reads its output.
+//!
+//! **Determinism.** Every output element is produced by exactly one tile
+//! job, and the `k`-accumulation order inside a tile is fixed and
+//! identical for every row-block width. Serial, row-parallel,
+//! column-parallel and row-sparse execution are therefore bitwise
+//! identical for any worker count — the parallel drivers only partition
+//! *which* tiles a worker computes (a deterministic contiguous schedule
+//! over row blocks or column panels), never the arithmetic inside one.
+//!
+//! The pre-PR scalar kernel is kept as [`matmul_naive`]: it is the
+//! correctness reference for the property tests and the baseline the
+//! bench reports the blocked kernel's speedup against.
+
+use std::sync::Mutex;
+
+use crate::util::threadpool::ThreadPool;
+
+use super::elementwise::gelu;
+use super::pack::{PackedMatrix, MR, NR};
+
+/// Below this many multiply-adds the pool dispatch overhead dominates
+/// and the serial kernel wins.
+pub const PARALLEL_THRESHOLD_OPS: usize = 1 << 18;
+
+/// Fused tail applied to each output tile as it leaves the accumulator
+/// registers. Applied per element, so it preserves the kernel's
+/// thread-count and tile-schedule invariance.
+#[derive(Debug, Clone, Copy)]
+pub enum Epilogue<'a> {
+    /// `out = acc`
+    Store,
+    /// `out = acc + bias[col]`
+    Bias(&'a [f32]),
+    /// `out = gelu(acc + bias[col])` — the dense-path fusion.
+    BiasGelu(&'a [f32]),
+    /// `out += acc` — accumulate into existing output (the folded
+    /// path's kept-unit contribution).
+    Add,
+}
+
+/// One disjoint output span handed to one broadcast job: the span's
+/// first row-block (or panel) index plus the mutable view itself.
+type TileSlot<'a> = Mutex<Option<(usize, &'a mut [f32])>>;
+
+// ---------------------------------------------------------------------------
+// Micro-kernels: R×NR accumulator tiles in registers.
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn micro1(x0: &[f32], panel: &[f32]) -> [[f32; NR]; 1] {
+    let k = x0.len();
+    let mut a0 = [0f32; NR];
+    for (kk, prow) in panel.chunks_exact(NR).take(k).enumerate() {
+        let v0 = x0[kk];
+        for (a, &p) in a0.iter_mut().zip(prow) {
+            *a += v0 * p;
+        }
+    }
+    [a0]
+}
+
+#[inline]
+fn micro2(x0: &[f32], x1: &[f32], panel: &[f32]) -> [[f32; NR]; 2] {
+    let k = x0.len();
+    let mut a0 = [0f32; NR];
+    let mut a1 = [0f32; NR];
+    for (kk, prow) in panel.chunks_exact(NR).take(k).enumerate() {
+        let (v0, v1) = (x0[kk], x1[kk]);
+        for (a, &p) in a0.iter_mut().zip(prow) {
+            *a += v0 * p;
+        }
+        for (a, &p) in a1.iter_mut().zip(prow) {
+            *a += v1 * p;
+        }
+    }
+    [a0, a1]
+}
+
+#[inline]
+fn micro3(x0: &[f32], x1: &[f32], x2: &[f32], panel: &[f32]) -> [[f32; NR]; 3] {
+    let k = x0.len();
+    let mut a0 = [0f32; NR];
+    let mut a1 = [0f32; NR];
+    let mut a2 = [0f32; NR];
+    for (kk, prow) in panel.chunks_exact(NR).take(k).enumerate() {
+        let (v0, v1, v2) = (x0[kk], x1[kk], x2[kk]);
+        for (a, &p) in a0.iter_mut().zip(prow) {
+            *a += v0 * p;
+        }
+        for (a, &p) in a1.iter_mut().zip(prow) {
+            *a += v1 * p;
+        }
+        for (a, &p) in a2.iter_mut().zip(prow) {
+            *a += v2 * p;
+        }
+    }
+    [a0, a1, a2]
+}
+
+#[inline]
+fn micro4(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], panel: &[f32]) -> [[f32; NR]; 4] {
+    let k = x0.len();
+    let mut a0 = [0f32; NR];
+    let mut a1 = [0f32; NR];
+    let mut a2 = [0f32; NR];
+    let mut a3 = [0f32; NR];
+    for (kk, prow) in panel.chunks_exact(NR).take(k).enumerate() {
+        let (v0, v1, v2, v3) = (x0[kk], x1[kk], x2[kk], x3[kk]);
+        for (a, &p) in a0.iter_mut().zip(prow) {
+            *a += v0 * p;
+        }
+        for (a, &p) in a1.iter_mut().zip(prow) {
+            *a += v1 * p;
+        }
+        for (a, &p) in a2.iter_mut().zip(prow) {
+            *a += v2 * p;
+        }
+        for (a, &p) in a3.iter_mut().zip(prow) {
+            *a += v3 * p;
+        }
+    }
+    [a0, a1, a2, a3]
+}
+
+/// Write one accumulator row into `out` (`out.len() <= NR`), applying
+/// the epilogue. `col0` is the global column of `out[0]` (bias offset).
+#[inline]
+fn finish_row(acc: &[f32; NR], out: &mut [f32], col0: usize, epi: Epilogue<'_>) {
+    let n = out.len();
+    match epi {
+        Epilogue::Store => out.copy_from_slice(&acc[..n]),
+        Epilogue::Bias(bias) => {
+            let b = &bias[col0..col0 + n];
+            for ((o, &a), &bv) in out.iter_mut().zip(acc.iter()).zip(b) {
+                *o = a + bv;
+            }
+        }
+        Epilogue::BiasGelu(bias) => {
+            let b = &bias[col0..col0 + n];
+            for ((o, &a), &bv) in out.iter_mut().zip(acc.iter()).zip(b) {
+                *o = gelu(a + bv);
+            }
+        }
+        Epilogue::Add => {
+            for (o, &a) in out.iter_mut().zip(acc.iter()) {
+                *o += a;
+            }
+        }
+    }
+}
+
+/// Store one `R`-row accumulator tile at (`row0`, `col0`) of `out`.
+#[inline]
+fn store_acc<const R: usize>(
+    acc: &[[f32; NR]; R],
+    row0: usize,
+    m: usize,
+    col0: usize,
+    ncols: usize,
+    out: &mut [f32],
+    epi: Epilogue<'_>,
+) {
+    for (rr, arow) in acc.iter().enumerate() {
+        let base = (row0 + rr) * m + col0;
+        finish_row(arow, &mut out[base..base + ncols], col0, epi);
+    }
+}
+
+/// Compute `r` (1..=MR) consecutive input rows (`x` holds exactly
+/// `r * w.k()` floats) across all panels, writing output rows
+/// `row0..row0+r` of `out` (stride `w.m()`).
+fn block_rows(
+    r: usize,
+    x: &[f32],
+    w: &PackedMatrix,
+    row0: usize,
+    out: &mut [f32],
+    epi: Epilogue<'_>,
+) {
+    let (k, m) = (w.k(), w.m());
+    for p in 0..w.n_panels() {
+        let col0 = p * NR;
+        let ncols = (m - col0).min(NR);
+        let panel = w.panel(p);
+        match r {
+            4 => {
+                let acc = micro4(&x[..k], &x[k..2 * k], &x[2 * k..3 * k], &x[3 * k..4 * k], panel);
+                store_acc(&acc, row0, m, col0, ncols, out, epi);
+            }
+            3 => {
+                let acc = micro3(&x[..k], &x[k..2 * k], &x[2 * k..3 * k], panel);
+                store_acc(&acc, row0, m, col0, ncols, out, epi);
+            }
+            2 => {
+                let acc = micro2(&x[..k], &x[k..2 * k], panel);
+                store_acc(&acc, row0, m, col0, ncols, out, epi);
+            }
+            _ => {
+                let acc = micro1(&x[..k], panel);
+                store_acc(&acc, row0, m, col0, ncols, out, epi);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drivers.
+// ---------------------------------------------------------------------------
+
+/// Serial blocked GEMM: `out[rows, m] = epi(x[rows, k] · w)`.
+pub(crate) fn matmul_serial(
+    x: &[f32],
+    rows: usize,
+    w: &PackedMatrix,
+    epi: Epilogue<'_>,
+    out: &mut [f32],
+) {
+    let k = w.k();
+    let mut r0 = 0;
+    while r0 < rows {
+        let r = (rows - r0).min(MR);
+        block_rows(r, &x[r0 * k..(r0 + r) * k], w, r0, out, epi);
+        r0 += r;
+    }
+}
+
+/// `out[rows, m] = epi(x[rows, k] · w)`.
+///
+/// With a pool and enough work the tiles fan out over a deterministic
+/// contiguous schedule (row blocks for batches, column panels for the
+/// single-row decode case); results are bitwise identical to the serial
+/// kernel for any worker count.
+pub fn matmul(
+    pool: Option<&ThreadPool>,
+    x: &[f32],
+    rows: usize,
+    w: &PackedMatrix,
+    epi: Epilogue<'_>,
+    out: &mut [f32],
+) {
+    let (k, m) = (w.k(), w.m());
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(out.len(), rows * m);
+    if let Some(pool) = pool {
+        if rows * k * m >= PARALLEL_THRESHOLD_OPS && pool.size() > 1 {
+            if rows.div_ceil(MR) >= 2 {
+                return rows_parallel(pool, x, rows, w, epi, out);
+            }
+            if rows == 1 && w.n_panels() >= 2 {
+                return cols_parallel(pool, x, w, epi, out);
+            }
+        }
+    }
+    matmul_serial(x, rows, w, epi, out);
+}
+
+fn rows_parallel(
+    pool: &ThreadPool,
+    x: &[f32],
+    rows: usize,
+    w: &PackedMatrix,
+    epi: Epilogue<'_>,
+    out: &mut [f32],
+) {
+    let (k, m) = (w.k(), w.m());
+    let n_blocks = rows.div_ceil(MR);
+    let jobs = pool.size().min(n_blocks);
+    let rows_per_job = n_blocks.div_ceil(jobs) * MR;
+    let slots: Vec<TileSlot<'_>> = out
+        .chunks_mut(rows_per_job * m)
+        .enumerate()
+        .map(|(i, c)| Mutex::new(Some((i * rows_per_job, c))))
+        .collect();
+    pool.broadcast(slots.len(), |i| {
+        let (row0, chunk) = slots[i]
+            .lock()
+            .expect("tile slot")
+            .take()
+            .expect("tile taken once");
+        let nr = chunk.len() / m;
+        matmul_serial(&x[row0 * k..(row0 + nr) * k], nr, w, epi, chunk);
+    });
+}
+
+fn cols_parallel(
+    pool: &ThreadPool,
+    x: &[f32],
+    w: &PackedMatrix,
+    epi: Epilogue<'_>,
+    out: &mut [f32],
+) {
+    let n_panels = w.n_panels();
+    let jobs = pool.size().min(n_panels);
+    let panels_per_job = n_panels.div_ceil(jobs);
+    let slots: Vec<TileSlot<'_>> = out
+        .chunks_mut(panels_per_job * NR)
+        .enumerate()
+        .map(|(i, c)| Mutex::new(Some((i * panels_per_job, c))))
+        .collect();
+    pool.broadcast(slots.len(), |i| {
+        let (p0, chunk) = slots[i]
+            .lock()
+            .expect("tile slot")
+            .take()
+            .expect("tile taken once");
+        row1_panels(x, w, p0, chunk, epi);
+    });
+}
+
+/// One input row across panels `p0..`, writing global columns
+/// `p0*NR .. p0*NR + out.len()` of the single output row.
+fn row1_panels(x: &[f32], w: &PackedMatrix, p0: usize, out: &mut [f32], epi: Epilogue<'_>) {
+    let m = w.m();
+    let mut lcol = 0;
+    let mut p = p0;
+    while lcol < out.len() {
+        let col0 = p * NR;
+        let ncols = (m - col0).min(NR).min(out.len() - lcol);
+        let acc = micro1(x, w.panel(p));
+        finish_row(&acc[0], &mut out[lcol..lcol + ncols], col0, epi);
+        lcol += ncols;
+        p += 1;
+    }
+}
+
+/// Row-sparse GEMM: compute only the rows with `active[r]` (consecutive
+/// active rows are blocked up to `MR` wide); inactive rows of `out` are
+/// left untouched.
+///
+/// This is the explicit sparsity-aware entry point — used where the
+/// outlier predictor has split a batch into folded/fallback row subsets,
+/// so each side executes in place on the full batch without
+/// gather/scatter copies. With a pool and enough *active* work the row
+/// blocks fan out like [`matmul`]. Per-row results are bitwise identical
+/// to the dense kernel for any worker count, because neither row
+/// blocking nor the chunk boundaries change a row's accumulation order.
+pub fn matmul_sparse_rows(
+    pool: Option<&ThreadPool>,
+    x: &[f32],
+    rows: usize,
+    w: &PackedMatrix,
+    epi: Epilogue<'_>,
+    active: &[bool],
+    out: &mut [f32],
+) {
+    let (k, m) = (w.k(), w.m());
+    debug_assert_eq!(active.len(), rows);
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(out.len(), rows * m);
+    if let Some(pool) = pool {
+        let n_active = active.iter().filter(|&&a| a).count();
+        if n_active * k * m >= PARALLEL_THRESHOLD_OPS
+            && pool.size() > 1
+            && rows.div_ceil(MR) >= 2
+        {
+            return sparse_rows_parallel(pool, x, rows, w, epi, active, out);
+        }
+    }
+    sparse_rows_serial(x, rows, w, epi, active, out);
+}
+
+fn sparse_rows_serial(
+    x: &[f32],
+    rows: usize,
+    w: &PackedMatrix,
+    epi: Epilogue<'_>,
+    active: &[bool],
+    out: &mut [f32],
+) {
+    let k = w.k();
+    let mut r0 = 0;
+    while r0 < rows {
+        if !active[r0] {
+            r0 += 1;
+            continue;
+        }
+        let mut r = 1;
+        while r < MR && r0 + r < rows && active[r0 + r] {
+            r += 1;
+        }
+        block_rows(r, &x[r0 * k..(r0 + r) * k], w, r0, out, epi);
+        r0 += r;
+    }
+}
+
+fn sparse_rows_parallel(
+    pool: &ThreadPool,
+    x: &[f32],
+    rows: usize,
+    w: &PackedMatrix,
+    epi: Epilogue<'_>,
+    active: &[bool],
+    out: &mut [f32],
+) {
+    let (k, m) = (w.k(), w.m());
+    let n_blocks = rows.div_ceil(MR);
+    let jobs = pool.size().min(n_blocks);
+    let rows_per_job = n_blocks.div_ceil(jobs) * MR;
+    let slots: Vec<TileSlot<'_>> = out
+        .chunks_mut(rows_per_job * m)
+        .enumerate()
+        .map(|(i, c)| Mutex::new(Some((i * rows_per_job, c))))
+        .collect();
+    pool.broadcast(slots.len(), |i| {
+        let (row0, chunk) = slots[i]
+            .lock()
+            .expect("tile slot")
+            .take()
+            .expect("tile taken once");
+        let nr = chunk.len() / m;
+        sparse_rows_serial(
+            &x[row0 * k..(row0 + nr) * k],
+            nr,
+            w,
+            epi,
+            &active[row0..row0 + nr],
+            chunk,
+        );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Pre-PR scalar reference.
+// ---------------------------------------------------------------------------
+
+/// The pre-packing scalar kernel (row-times-row, bias pre-initialized,
+/// per-element `xv != 0.0` skip branch), verbatim from the old
+/// `linalg::matmul_serial`. Kept as the property-test reference and the
+/// bench baseline; not used on any hot path.
+pub fn matmul_naive(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    w: &[f32],
+    m: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(w.len(), k * m);
+    let mut y = vec![0f32; rows * m];
+    for (xi, yi) in x.chunks_exact(k).zip(y.chunks_exact_mut(m)).take(rows) {
+        if let Some(b) = bias {
+            yi.copy_from_slice(b);
+        }
+        for (&xv, wrow) in xi.iter().zip(w.chunks_exact(m)) {
+            if xv != 0.0 {
+                for (yv, &wv) in yi.iter_mut().zip(wrow) {
+                    *yv += xv * wv;
+                }
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * b.abs().max(1.0)
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        // x = [[1,2],[3,4]], w = [[5,6],[7,8]] -> [[19,22],[43,50]]
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let w = PackedMatrix::pack(&[5.0, 6.0, 7.0, 8.0], 2, 2);
+        let mut y = vec![0f32; 4];
+        matmul(None, &x, 2, &w, Epilogue::Store, &mut y);
+        assert_eq!(y, vec![19.0, 22.0, 43.0, 50.0]);
+        let b = vec![1.0, -1.0];
+        matmul(None, &x, 2, &w, Epilogue::Bias(&b), &mut y);
+        assert_eq!(y, vec![20.0, 21.0, 44.0, 49.0]);
+    }
+
+    #[test]
+    fn packed_matches_naive_across_blocking_widths() {
+        let mut rng = Rng::new(5);
+        for (rows, k, m) in [(1, 3, 2), (2, 7, 5), (3, 16, NR), (5, 9, NR + 1), (7, 33, 2 * NR + 3)]
+        {
+            let x: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+            let wr: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+            let w = PackedMatrix::pack(&wr, k, m);
+            let want = matmul_naive(&x, rows, k, &wr, m, Some(&b));
+            let mut got = vec![0f32; rows * m];
+            matmul(None, &x, rows, &w, Epilogue::Bias(&b), &mut got);
+            for (g, wv) in got.iter().zip(&want) {
+                assert!(close(*g, *wv, 1e-4), "{g} vs {wv} (rows={rows} k={k} m={m})");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_matches_serial_bitwise() {
+        let mut rng = Rng::new(11);
+        let (rows, k, m) = (64, 96, 128);
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+        let wr: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+        let w = PackedMatrix::pack(&wr, k, m);
+        let mut serial = vec![0f32; rows * m];
+        matmul(None, &x, rows, &w, Epilogue::Bias(&b), &mut serial);
+        // rows*k*m = 786k ops, above the threshold: takes the pooled path.
+        let pool = ThreadPool::new(3);
+        let mut pooled = vec![0f32; rows * m];
+        matmul(Some(&pool), &x, rows, &w, Epilogue::Bias(&b), &mut pooled);
+        assert_eq!(serial, pooled);
+    }
+
+    #[test]
+    fn single_row_pooled_matches_serial_bitwise() {
+        let mut rng = Rng::new(13);
+        let (k, m) = (512, 512); // 262144 ops: at the parallel threshold
+        let x: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let wr: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+        let w = PackedMatrix::pack(&wr, k, m);
+        let mut serial = vec![0f32; m];
+        matmul(None, &x, 1, &w, Epilogue::Store, &mut serial);
+        let pool = ThreadPool::new(4);
+        let mut pooled = vec![0f32; m];
+        matmul(Some(&pool), &x, 1, &w, Epilogue::Store, &mut pooled);
+        assert_eq!(serial, pooled);
+    }
+
+    #[test]
+    fn sparse_rows_leave_inactive_rows_untouched() {
+        let mut rng = Rng::new(17);
+        let (rows, k, m) = (6, 10, NR + 5);
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+        let wr: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+        let w = PackedMatrix::pack(&wr, k, m);
+        let mut dense = vec![0f32; rows * m];
+        matmul(None, &x, rows, &w, Epilogue::Bias(&b), &mut dense);
+        let active = [true, false, true, true, false, true];
+        let mut sparse = vec![-7.0f32; rows * m];
+        matmul_sparse_rows(None, &x, rows, &w, Epilogue::Bias(&b), &active, &mut sparse);
+        for r in 0..rows {
+            for j in 0..m {
+                let want = if active[r] { dense[r * m + j] } else { -7.0 };
+                assert_eq!(sparse[r * m + j], want, "row {r} col {j}");
+            }
+        }
+        // empty split: nothing written
+        let mut untouched = vec![3.0f32; rows * m];
+        matmul_sparse_rows(None, &x, rows, &w, Epilogue::Store, &[false; 6], &mut untouched);
+        assert!(untouched.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn fused_gelu_and_add_epilogues() {
+        let mut rng = Rng::new(23);
+        let (rows, k, m) = (3, 8, 9);
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+        let wr: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+        let w = PackedMatrix::pack(&wr, k, m);
+        let mut biased = vec![0f32; rows * m];
+        matmul(None, &x, rows, &w, Epilogue::Bias(&b), &mut biased);
+        // BiasGelu == gelu applied after Bias, bitwise
+        let mut fused = vec![0f32; rows * m];
+        matmul(None, &x, rows, &w, Epilogue::BiasGelu(&b), &mut fused);
+        for (f, bv) in fused.iter().zip(&biased) {
+            assert_eq!(*f, gelu(*bv));
+        }
+        // Add into a bias-preloaded buffer == Bias, bitwise
+        let mut added: Vec<f32> = Vec::new();
+        for _ in 0..rows {
+            added.extend_from_slice(&b);
+        }
+        matmul(None, &x, rows, &w, Epilogue::Add, &mut added);
+        assert_eq!(added, biased);
+    }
+}

@@ -1,0 +1,25 @@
+//! Blocked, pre-packed matmul kernels and the zero-alloc forward-pass
+//! substrate of the native backend.
+//!
+//! * [`pack`]        — [`PackedMatrix`]: weights repacked once at load
+//!   time into `NR`-wide column panels (layout diagram in the module
+//!   docs)
+//! * [`gemm`]        — the `MR`×`NR` register-blocked micro-kernel,
+//!   serial/row-parallel/column-parallel drivers with a deterministic
+//!   tile schedule (bitwise identical results for any worker count),
+//!   fused bias / bias+GELU / accumulate epilogues, the explicit
+//!   row-sparse variant [`matmul_sparse_rows`], and the pre-PR scalar
+//!   reference [`matmul_naive`]
+//! * [`scratch`]     — [`Scratch`], the reusable buffer arena threaded
+//!   through the forward pass (steady-state decode allocates nothing)
+//! * [`elementwise`] — GELU, dot, norm, single-pass Welford LayerNorm
+
+pub mod elementwise;
+pub mod gemm;
+pub mod pack;
+pub mod scratch;
+
+pub use elementwise::{dot, gelu, layernorm_into, norm};
+pub use gemm::{matmul, matmul_naive, matmul_sparse_rows, Epilogue, PARALLEL_THRESHOLD_OPS};
+pub use pack::{PackedMatrix, MR, NR};
+pub use scratch::Scratch;

@@ -1,0 +1,121 @@
+//! Cache-friendly pre-packed weight layout for the blocked GEMM kernels.
+//!
+//! A row-major `[k, m]` weight matrix is repacked **once at load time**
+//! into column panels of [`NR`] columns. Panel `p` holds columns
+//! `p*NR .. p*NR + NR` contiguously, as `k` rows of `NR` floats:
+//!
+//! ```text
+//! w (row-major [k, m])            packed (panel-major)
+//! ┌────────────┬────────────┐     panel 0        panel 1
+//! │ w[0][0..NR]│w[0][NR..2NR]│    ┌───────────┐  ┌───────────┐
+//! │ w[1][0..NR]│w[1][NR..2NR]│ →  │w[0][0..NR]│  │w[0][NR..] │
+//! │     ⋮      │      ⋮      │    │w[1][0..NR]│  │w[1][NR..] │
+//! └────────────┴────────────┘    │    ⋮      │  │    ⋮      │
+//!                                 └───────────┘  └───────────┘
+//! panel[kk*NR + j] = w[kk*m + p*NR + j]   (zero-padded past column m)
+//! ```
+//!
+//! The micro-kernel streams one panel linearly (unit stride, one cache
+//! line per [`NR`]/16 rows) while broadcasting input values, instead of
+//! striding through `w` row-by-row once per output row as the old scalar
+//! kernel did.
+
+use std::sync::Arc;
+
+/// Rows per register tile (input rows one micro-kernel call carries).
+pub const MR: usize = 4;
+/// Columns per register tile (panel width). `MR`×`NR` f32 accumulators
+/// are held in fixed-size arrays so stable Rust autovectorizes them;
+/// `NR = 32` amortizes each input-value broadcast over 8 SSE (or 4 AVX)
+/// vectors, which measured fastest for the tiny-GELU shapes.
+pub const NR: usize = 32;
+
+/// A weight matrix pre-packed into [`NR`]-wide column panels.
+#[derive(Debug, Clone)]
+pub struct PackedMatrix {
+    k: usize,
+    m: usize,
+    /// `ceil(m/NR)` panels of `k*NR` floats each. Shared so cloning a
+    /// layer (e.g. the bench's dense baseline) never copies weights.
+    data: Arc<Vec<f32>>,
+}
+
+impl PackedMatrix {
+    /// Pack row-major `w[k, m]`. Zero-sized matrices are allowed (a
+    /// fully-folded FFN keeps no units) and pack to zero panels.
+    pub fn pack(w: &[f32], k: usize, m: usize) -> PackedMatrix {
+        assert_eq!(w.len(), k * m, "pack: weight shape mismatch");
+        let n_panels = m.div_ceil(NR);
+        let mut data = vec![0f32; n_panels * k * NR];
+        for p in 0..n_panels {
+            let col0 = p * NR;
+            let ncols = (m - col0).min(NR);
+            let dst = &mut data[p * k * NR..(p + 1) * k * NR];
+            for kk in 0..k {
+                dst[kk * NR..kk * NR + ncols]
+                    .copy_from_slice(&w[kk * m + col0..kk * m + col0 + ncols]);
+            }
+        }
+        PackedMatrix {
+            k,
+            m,
+            data: Arc::new(data),
+        }
+    }
+
+    /// Input (reduction) dimension.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output (column) dimension.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn n_panels(&self) -> usize {
+        self.m.div_ceil(NR)
+    }
+
+    /// Panel `p`: `k` rows of [`NR`] columns, zero-padded past `m`.
+    #[inline]
+    pub fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+
+    /// Bytes held by the packed representation (padding included).
+    pub fn resident_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packs_with_zero_padded_tail() {
+        // k=2, m = NR + 3: two panels, second mostly padding
+        let m = NR + 3;
+        let w: Vec<f32> = (0..2 * m).map(|i| i as f32).collect();
+        let p = PackedMatrix::pack(&w, 2, m);
+        assert_eq!(p.n_panels(), 2);
+        assert_eq!(p.k(), 2);
+        assert_eq!(p.m(), m);
+        // panel 0 row 1 starts at w[1*m + 0]
+        assert_eq!(p.panel(0)[NR], m as f32);
+        // panel 1 holds columns NR..NR+3 then zeros
+        assert_eq!(p.panel(1)[0], NR as f32);
+        assert_eq!(p.panel(1)[2], (NR + 2) as f32);
+        assert_eq!(p.panel(1)[3], 0.0);
+        assert_eq!(p.panel(1)[NR + 1], (m + NR + 1) as f32);
+        assert_eq!(p.resident_bytes(), 2 * 2 * NR * 4);
+    }
+
+    #[test]
+    fn packs_empty_matrix() {
+        let p = PackedMatrix::pack(&[], 3, 0);
+        assert_eq!(p.n_panels(), 0);
+        assert_eq!(p.resident_bytes(), 0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Reusable forward-pass buffers: the zero-alloc arena.
+//!
+//! Every native forward pass used to allocate a fresh `Vec` per
+//! intermediate (pre-activations, attention projections, gather/scatter
+//! copies…). A [`Scratch`] is threaded through
+//! `NativeModel::forward` → `FfnBackend::forward` instead: `take` pops a
+//! recycled buffer from a free-list and `give` returns it, so once warm
+//! the forward pass's intermediates perform no heap allocation — buffers
+//! keep their capacity across calls and `take` degenerates to a memset.
+//! (The logits output buffer, which leaves the forward pass, is the one
+//! remaining per-call allocation.)
+//!
+//! `take` re-zeroes deliberately: most consumers fully overwrite their
+//! buffer and could skip it, but the memset is a few KB against the
+//! megaflop GEMMs it sits between, and handing out deterministic zeroed
+//! buffers keeps accumulate-style consumers (`Epilogue::Add` targets,
+//! the attention context) safe by construction without `unsafe`.
+
+/// Free-list of `f32` buffers.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    free: Vec<Vec<f32>>,
+    /// `take` calls whose recycled buffer (if any) had to grow — i.e.
+    /// heap allocations. Steady-state decode should hold this constant;
+    /// the native bench asserts as much.
+    pub misses: u64,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// A zeroed buffer of exactly `len` elements.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        if v.capacity() < len {
+            self.misses += 1;
+        }
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Return a buffer to the free-list for reuse.
+    pub fn give(&mut self, v: Vec<f32>) {
+        self.free.push(v);
+    }
+
+    /// Buffers currently parked in the free-list.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zeroes_and_reuses_capacity() {
+        let mut s = Scratch::new();
+        let mut a = s.take(8);
+        assert_eq!(a, vec![0.0; 8]);
+        assert_eq!(s.misses, 1);
+        a[3] = 5.0;
+        s.give(a);
+        assert_eq!(s.pooled(), 1);
+        // same-or-smaller takes reuse the buffer without allocating
+        let b = s.take(8);
+        assert_eq!(b, vec![0.0; 8], "recycled buffer is re-zeroed");
+        assert_eq!(s.misses, 1);
+        s.give(b);
+        let c = s.take(4);
+        assert_eq!(c.len(), 4);
+        assert_eq!(s.misses, 1);
+        s.give(c);
+        // growth is counted as a miss
+        let d = s.take(100);
+        assert_eq!(d.len(), 100);
+        assert_eq!(s.misses, 2);
+    }
+}

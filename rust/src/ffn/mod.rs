@@ -1,8 +1,9 @@
 //! Native partially-linear FFN kernels (the paper's core contribution,
 //! executed in pure std-only Rust).
 //!
-//! * [`linalg`]    — row-major f32 matmul/LayerNorm/GELU, threadpool-
-//!   parallel above a work threshold
+//! * [`kernels`]   — blocked GEMM over pre-packed weights with fused
+//!   epilogues, deterministic parallel tile schedule, the explicit
+//!   row-sparse variant, and the [`kernels::Scratch`] zero-alloc arena
 //! * [`dense`]     — the dense FFN with optional per-unit linearized
 //!   activation (reference + fallback path)
 //! * [`folded`]    — the constant-folded `W' = W_down·A·W_up` map with
@@ -16,11 +17,12 @@
 
 pub mod dense;
 pub mod folded;
-pub mod linalg;
+pub mod kernels;
 pub mod predictor;
 
 pub use dense::{DenseFfn, Linearization};
 pub use folded::FoldedFfn;
+pub use kernels::{PackedMatrix, Scratch};
 pub use predictor::{OutlierPredictor, PredictorStats, Route};
 
 use crate::util::threadpool::ThreadPool;
@@ -63,10 +65,18 @@ pub enum FfnBackend {
 }
 
 impl FfnBackend {
-    pub fn forward(&mut self, pool: Option<&ThreadPool>, x: &[f32], rows: usize) -> Vec<f32> {
+    /// The returned buffer comes from `scratch`; hand it back with
+    /// [`Scratch::give`] for steady-state zero allocation.
+    pub fn forward(
+        &mut self,
+        pool: Option<&ThreadPool>,
+        scratch: &mut Scratch,
+        x: &[f32],
+        rows: usize,
+    ) -> Vec<f32> {
         match self {
-            FfnBackend::Dense(f) => f.forward(pool, x, rows),
-            FfnBackend::Folded(f) => f.forward(pool, x, rows),
+            FfnBackend::Dense(f) => f.forward(pool, scratch, x, rows),
+            FfnBackend::Folded(f) => f.forward(pool, scratch, x, rows),
         }
     }
 

@@ -22,6 +22,11 @@
 //! outliers; `threshold` trades that risk against fallback rate
 //! (`< 1.0` never folds beyond direct observations, `> 1.0`
 //! extrapolates).
+//!
+//! The resulting batch split executes in place: [`super::FoldedFfn`]
+//! turns the per-row decisions into folded/fallback row masks for the
+//! row-sparse kernels (`kernels::matmul_sparse_rows`), so routing costs
+//! no gather/scatter copies and no per-call allocation.
 
 /// Where one batch row is executed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,6 +84,7 @@ impl OutlierPredictor {
     /// The radius the next row is judged against. The learned gate stays
     /// strictly below `out_floor`: a norm already proven out-of-range
     /// must never route folded again.
+    #[inline]
     pub fn predicted_radius(&self) -> f32 {
         let cap = self.out_floor * (1.0 - f32::EPSILON);
         let learned = (self.learned_in * self.threshold).min(cap);
@@ -86,6 +92,7 @@ impl OutlierPredictor {
     }
 
     /// Route one row by its input norm, recording the decision.
+    #[inline]
     pub fn classify(&mut self, x_norm: f32) -> Route {
         if x_norm <= self.predicted_radius() {
             self.stats.folded += 1;

@@ -73,7 +73,12 @@ fn usage() -> ! {
     --steps N              decode steps to time (default 64)
     --warmup N             untimed predictor-warmup steps (default 8)
     --assert-speedup R     exit non-zero unless a tardis variant reaches
-                           a measured speedup of at least R vs dense"
+                           a measured speedup of at least R vs dense
+    --assert-gflops G      exit non-zero unless the packed single-thread
+                           GEMM kernel reaches G GFLOP/s (generous floor,
+                           catches order-of-magnitude regressions)
+  bench-decode also writes BENCH_native_ffn.json (machine-readable per-PR
+  perf record; override the path with TARDIS_BENCH_JSON)"
     );
     std::process::exit(2);
 }
@@ -436,7 +441,101 @@ fn print_native_row(
     speedup
 }
 
-fn bench_native_table(args: &Args, names: &[String]) -> Result<()> {
+/// Single-thread GFLOP/s of the packed blocked GEMM kernel and the
+/// pre-PR scalar reference at the configured FFN up-projection shape.
+fn measure_gemm_gflops(cfg: &NativeModelConfig) -> (f64, f64) {
+    use tardis::bench::black_box;
+    use tardis::ffn::kernels::{matmul, matmul_naive, Epilogue, PackedMatrix};
+    let (d, h) = (cfg.d_model, cfg.d_ff);
+    let batch = cfg.batch.max(1);
+    let mut rng = tardis::util::rng::Rng::new(0xBE9C);
+    let x: Vec<f32> = (0..batch * d).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..d * h).map(|_| rng.normal() as f32).collect();
+    let bias: Vec<f32> = (0..h).map(|_| rng.normal() as f32).collect();
+    let packed = PackedMatrix::pack(&w, d, h);
+    let mut y = vec![0f32; batch * h];
+    let flops = 2.0 * (batch * d * h) as f64;
+    let time = |f: &mut dyn FnMut()| {
+        for _ in 0..20 {
+            f();
+        }
+        let iters = 300;
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        t0.elapsed().as_secs_f64() / iters as f64
+    };
+    let t_packed = time(&mut || {
+        matmul(None, &x, batch, &packed, Epilogue::Bias(&bias), &mut y);
+        black_box(&y);
+    });
+    let t_naive = time(&mut || {
+        black_box(matmul_naive(&x, batch, d, &w, h, Some(&bias)));
+    });
+    (flops / t_packed / 1e9, flops / t_naive / 1e9)
+}
+
+/// Write the machine-readable per-PR perf record next to the printed
+/// table (BENCH_native_ffn.json, or $TARDIS_BENCH_JSON).
+fn write_bench_json(
+    cfg: &NativeModelConfig,
+    reports: &[NativeDecodeReport],
+    dense_mean: Option<f64>,
+    packed_gflops: f64,
+    naive_gflops: f64,
+) {
+    use tardis::util::json::Json;
+    let num = Json::Num;
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("suite".to_string(), Json::Str("bench_decode".to_string()));
+    let mut shape = std::collections::BTreeMap::new();
+    shape.insert("d_model".to_string(), num(cfg.d_model as f64));
+    shape.insert("d_ff".to_string(), num(cfg.d_ff as f64));
+    shape.insert("n_layers".to_string(), num(cfg.n_layers as f64));
+    shape.insert("batch".to_string(), num(cfg.batch as f64));
+    root.insert("shape".to_string(), Json::Obj(shape));
+    let mut gemm = std::collections::BTreeMap::new();
+    gemm.insert("packed_gflops".to_string(), num(packed_gflops));
+    gemm.insert("naive_gflops".to_string(), num(naive_gflops));
+    gemm.insert(
+        "packed_vs_naive".to_string(),
+        num(packed_gflops / naive_gflops),
+    );
+    root.insert("gemm".to_string(), Json::Obj(gemm));
+    let mut rows = Vec::new();
+    for r in reports {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("variant".to_string(), Json::Str(r.name.clone()));
+        o.insert("mode".to_string(), Json::Str(r.mode.to_string()));
+        o.insert("mean_ms".to_string(), num(r.mean_ms));
+        o.insert("p50_ms".to_string(), num(r.p50_ms));
+        o.insert(
+            "tokens_per_s".to_string(),
+            num(cfg.batch as f64 / (r.mean_ms * 1e-3)),
+        );
+        if let (Some(dm), Some(_)) = (dense_mean, r.compression_ratio) {
+            o.insert("speedup_vs_dense".to_string(), num(dm / r.mean_ms));
+        }
+        if let Some(f) = r.fallback_rate {
+            o.insert("fallback_rate".to_string(), num(f));
+        }
+        if let Some(c) = r.compression_ratio {
+            o.insert("compression".to_string(), num(c));
+        }
+        rows.push(Json::Obj(o));
+    }
+    root.insert("variants".to_string(), Json::Arr(rows));
+    let path = std::env::var("TARDIS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_native_ffn.json".to_string());
+    let body = format!("{}\n", Json::Obj(root));
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+fn bench_native_table(args: &Args, names: &[String], emit_json: bool) -> Result<()> {
     let cfg = native_model_cfg(args)?;
     let steps = args.usize("steps", 64)?;
     let warmup = args.usize("warmup", 8)?;
@@ -462,6 +561,16 @@ fn bench_native_table(args: &Args, names: &[String]) -> Result<()> {
                 Some(best_speedup.map_or(s, |b: f64| b.max(s)));
         }
     }
+    let (packed_gflops, naive_gflops) = measure_gemm_gflops(&cfg);
+    println!(
+        "gemm single-thread [{}x{}]x[{}x{}]: packed {packed_gflops:.2} GFLOP/s, \
+         pre-PR scalar {naive_gflops:.2} GFLOP/s ({:.2}x)",
+        cfg.batch, cfg.d_model, cfg.d_model, cfg.d_ff,
+        packed_gflops / naive_gflops
+    );
+    if emit_json {
+        write_bench_json(&cfg, &reports, dense_mean, packed_gflops, naive_gflops);
+    }
     if let Some(min) = args.opt_str("assert-speedup") {
         let min: f64 = min
             .parse()
@@ -476,6 +585,17 @@ fn bench_native_table(args: &Args, names: &[String]) -> Result<()> {
         }
         println!("speedup check: best {best:.2}x >= required {min:.2}x");
     }
+    if let Some(min) = args.opt_str("assert-gflops") {
+        let min: f64 = min
+            .parse()
+            .map_err(|_| anyhow!("--assert-gflops expects a number"))?;
+        if packed_gflops < min {
+            return Err(anyhow!(
+                "packed GEMM {packed_gflops:.2} GFLOP/s below required {min:.2}"
+            ));
+        }
+        println!("gflops check: packed {packed_gflops:.2} >= required {min:.2}");
+    }
     Ok(())
 }
 
@@ -484,7 +604,7 @@ fn cmd_bench_decode(args: &Args) -> Result<()> {
         BackendKind::Native => {
             let names = args
                 .list("variants", &["dense", "tardis50", "tardis70", "tardis80"]);
-            bench_native_table(args, &names)
+            bench_native_table(args, &names, true)
         }
         BackendKind::Mock => Err(anyhow!(
             "bench-decode on the mock backend measures nothing; \
@@ -543,7 +663,7 @@ fn cmd_variants(args: &Args) -> Result<()> {
     // so theory and measurement land in one place.
     let names = args
         .list("variants", &["dense", "tardis50", "tardis70", "tardis80"]);
-    bench_native_table(args, &names)
+    bench_native_table(args, &names, false)
 }
 
 #[cfg(feature = "pjrt")]

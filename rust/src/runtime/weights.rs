@@ -17,6 +17,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::{DType, NativeModelConfig, ParamEntry, VariantSpec};
+use crate::ffn::kernels::PackedMatrix;
 use crate::util::rng::Rng;
 
 /// The raw weight blob for one variant.
@@ -81,12 +82,27 @@ pub fn xla_element_type(dt: DType) -> xla::ElementType {
 // ---------------------------------------------------------------------------
 
 /// Attention projections of one layer, each `[d_model, d_model]`
-/// row-major (input × output), bias-free.
+/// row-major (input × output), bias-free. Only the packed forms are
+/// kept resident — nothing reads the raw layout after load, so storing
+/// it too would double the attention weight footprint.
 pub struct AttnWeights {
-    pub wq: Arc<Vec<f32>>,
-    pub wk: Arc<Vec<f32>>,
-    pub wv: Arc<Vec<f32>>,
-    pub wo: Arc<Vec<f32>>,
+    pub wq_packed: PackedMatrix,
+    pub wk_packed: PackedMatrix,
+    pub wv_packed: PackedMatrix,
+    pub wo_packed: PackedMatrix,
+}
+
+impl AttnWeights {
+    /// Pack the four projections at construction; the row-major inputs
+    /// are dropped.
+    pub fn new(wq: &[f32], wk: &[f32], wv: &[f32], wo: &[f32], d: usize) -> AttnWeights {
+        AttnWeights {
+            wq_packed: PackedMatrix::pack(wq, d, d),
+            wk_packed: PackedMatrix::pack(wk, d, d),
+            wv_packed: PackedMatrix::pack(wv, d, d),
+            wo_packed: PackedMatrix::pack(wo, d, d),
+        }
+    }
 }
 
 /// One pre-LN transformer block's parameters.
@@ -111,6 +127,10 @@ pub struct LayerWeights {
 pub struct NativeWeights {
     /// `[vocab, d_model]` row-major.
     pub embed: Arc<Vec<f32>>,
+    /// The tied embedding transposed to `[d_model, vocab]` and packed,
+    /// so the unembedding runs the blocked GEMM instead of per-token
+    /// dot products.
+    pub unembed_packed: PackedMatrix,
     pub layers: Vec<LayerWeights>,
     pub lnf_gain: Vec<f32>,
     pub lnf_bias: Vec<f32>,
@@ -118,6 +138,17 @@ pub struct NativeWeights {
 
 fn normal_vec(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
     (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+/// `logits = x · Eᵀ`: transpose the tied embedding once and pack it.
+fn pack_unembed(embed: &[f32], vocab: usize, d: usize) -> PackedMatrix {
+    let mut t = vec![0f32; d * vocab];
+    for (token, erow) in embed.chunks_exact(d).enumerate().take(vocab) {
+        for (l, &v) in erow.iter().enumerate() {
+            t[l * vocab + token] = v;
+        }
+    }
+    PackedMatrix::pack(&t, d, vocab)
 }
 
 impl NativeWeights {
@@ -133,12 +164,13 @@ impl NativeWeights {
             .map(|_| LayerWeights {
                 ln1_gain: vec![1.0; d],
                 ln1_bias: vec![0.0; d],
-                attn: AttnWeights {
-                    wq: Arc::new(normal_vec(&mut rng, d * d, proj)),
-                    wk: Arc::new(normal_vec(&mut rng, d * d, proj)),
-                    wv: Arc::new(normal_vec(&mut rng, d * d, proj)),
-                    wo: Arc::new(normal_vec(&mut rng, d * d, resid)),
-                },
+                attn: AttnWeights::new(
+                    &normal_vec(&mut rng, d * d, proj),
+                    &normal_vec(&mut rng, d * d, proj),
+                    &normal_vec(&mut rng, d * d, proj),
+                    &normal_vec(&mut rng, d * d, resid),
+                    d,
+                ),
                 ln2_gain: vec![1.0; d],
                 ln2_bias: vec![0.0; d],
                 w1: Arc::new(normal_vec(&mut rng, d * h, proj)),
@@ -148,6 +180,7 @@ impl NativeWeights {
             })
             .collect();
         NativeWeights {
+            unembed_packed: pack_unembed(&embed, v, d),
             embed,
             layers,
             lnf_gain: vec![1.0; d],
@@ -181,12 +214,13 @@ impl NativeWeights {
             layers.push(LayerWeights {
                 ln1_gain: get(&n("ln1.g"), &[d])?,
                 ln1_bias: get(&n("ln1.b"), &[d])?,
-                attn: AttnWeights {
-                    wq: Arc::new(get(&n("attn.wq"), &[d, d])?),
-                    wk: Arc::new(get(&n("attn.wk"), &[d, d])?),
-                    wv: Arc::new(get(&n("attn.wv"), &[d, d])?),
-                    wo: Arc::new(get(&n("attn.wo"), &[d, d])?),
-                },
+                attn: AttnWeights::new(
+                    &get(&n("attn.wq"), &[d, d])?,
+                    &get(&n("attn.wk"), &[d, d])?,
+                    &get(&n("attn.wv"), &[d, d])?,
+                    &get(&n("attn.wo"), &[d, d])?,
+                    d,
+                ),
                 ln2_gain: get(&n("ln2.g"), &[d])?,
                 ln2_bias: get(&n("ln2.b"), &[d])?,
                 w1: Arc::new(get(&n("w1"), &[d, h])?),
@@ -196,6 +230,7 @@ impl NativeWeights {
             });
         }
         Ok(NativeWeights {
+            unembed_packed: pack_unembed(&embed, v, d),
             embed,
             layers,
             lnf_gain: get("lnf.g", &[d])?,
@@ -301,8 +336,16 @@ mod tests {
         assert_eq!(a.layers[0].w1.len(), cfg.d_model * cfg.d_ff);
         assert_eq!(a.layers[0].w2.len(), cfg.d_ff * cfg.d_model);
         assert_eq!(*a.embed, *b.embed, "same seed => same weights");
-        assert_eq!(*a.layers[0].attn.wq, *b.layers[0].attn.wq);
+        assert_eq!(
+            a.layers[0].attn.wq_packed.panel(0),
+            b.layers[0].attn.wq_packed.panel(0)
+        );
         assert_eq!(*a.layers[0].w2, *b.layers[0].w2);
+        // the packed unembedding is the transposed tied embedding
+        assert_eq!(a.unembed_packed.k(), cfg.d_model);
+        assert_eq!(a.unembed_packed.m(), cfg.vocab);
+        assert_eq!(a.unembed_packed.panel(0)[1], a.embed[cfg.d_model]);
+        assert_eq!(a.layers[0].attn.wq_packed.k(), cfg.d_model);
         let other = NativeWeights::synthesize(&NativeModelConfig {
             seed: 100,
             ..cfg

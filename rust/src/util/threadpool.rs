@@ -1,6 +1,9 @@
-//! A small fixed-size worker pool over std::thread + mpsc (no tokio in
-//! the offline vendor set). Used by the TCP server to run request
-//! handlers off the accept loop, and by benches for load generation.
+//! A small fixed-size worker pool over std::thread + mpsc.
+//!
+//! No tokio in the offline vendor set. Used by the TCP server to run
+//! request handlers off the accept loop, by the [`crate::ffn::kernels`]
+//! GEMM drivers for scoped tile fan-out ([`ThreadPool::broadcast`]), and
+//! by benches for load generation.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -47,6 +50,47 @@ impl ThreadPool {
             .expect("pool shut down")
             .send(Box::new(f))
             .expect("workers alive");
+    }
+
+    /// Run `f(0)`, `f(1)`, …, `f(jobs - 1)` across the pool, returning
+    /// only after every job has finished.
+    ///
+    /// Unlike [`ThreadPool::map`], `f` may borrow from the caller's
+    /// stack (no `'static` bound and no per-job input copies), which is
+    /// what lets the GEMM drivers hand workers disjoint views of one
+    /// output buffer and shared epilogue constants instead of cloning
+    /// inputs per dispatch.
+    pub fn broadcast<F>(&self, jobs: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if jobs == 0 {
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the erased borrow cannot outlive `f`: every job sends
+        // exactly one completion (even on panic, via catch_unwind), and
+        // this function blocks on all `jobs` completions before
+        // returning, so no job runs past the lifetime of `f` or of
+        // anything it borrows.
+        let f_static = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f_ref)
+        };
+        let (tx, rx) = mpsc::channel();
+        for i in 0..jobs {
+            let tx = tx.clone();
+            self.execute(move || {
+                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f_static(i)))
+                    .is_ok();
+                let _ = tx.send(ok);
+            });
+        }
+        drop(tx);
+        let mut ok = true;
+        for _ in 0..jobs {
+            ok &= rx.recv().expect("pool worker died");
+        }
+        assert!(ok, "broadcast job panicked");
     }
 
     /// Run `f` over all items, collecting results in order.
@@ -108,5 +152,24 @@ mod tests {
         let pool = ThreadPool::new(3);
         let out = pool.map((0..50).collect::<Vec<_>>(), |x| x * 2);
         assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn broadcast_runs_all_jobs_with_borrowed_state() {
+        let pool = ThreadPool::new(4);
+        // borrowed (non-'static) output, one disjoint slot per job
+        let mut out = vec![0usize; 37];
+        let slots: Vec<Mutex<Option<&mut usize>>> =
+            out.iter_mut().map(|v| Mutex::new(Some(v))).collect();
+        pool.broadcast(slots.len(), |i| {
+            let v = slots[i].lock().unwrap().take().unwrap();
+            *v = i * i;
+        });
+        drop(slots); // release the borrows of `out`
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+        // zero jobs is a no-op
+        pool.broadcast(0, |_| unreachable!());
     }
 }

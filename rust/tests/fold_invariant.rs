@@ -2,15 +2,15 @@
 //!
 //! 1. For rows whose pre-activations all lie inside the approximated
 //!    linear range, the folded FFN reproduces the partially-linearized
-//!    dense FFN up to the fold's reassociation roundoff (property test
-//!    over random shapes/weights, rows held under the provable radius).
+//!    dense FFN up to [`FOLD_TOL`] (property test over random
+//!    shapes/weights, rows held under the provable radius).
 //! 2. On mixed batches the predictor's fallback engages: outlier rows
 //!    are routed down the dense path and match it *bitwise*, while
-//!    in-range rows stay within fold roundoff.
+//!    in-range rows stay within [`FOLD_TOL`].
 //! 3. The invariant survives the serving stack: for every scheduler
 //!    policy, the exact prefill/decode call sequence the engine emits is
 //!    replayed on a tardis NativeModel and its unfolded reference, and
-//!    all logits must agree within tolerance.
+//!    all logits must agree within [`LOGIT_TOL`].
 
 use std::sync::Arc;
 
@@ -21,11 +21,26 @@ use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
 use tardis::coordinator::model::{MockModel, NativeModel, StepModel};
 use tardis::coordinator::request::SamplingParams;
 use tardis::coordinator::scheduler::{PolicyKind, StepOutcome, StepPlan};
-use tardis::ffn::linalg::norm;
+use tardis::ffn::kernels::{norm, Scratch};
 use tardis::ffn::{DenseFfn, FoldedFfn};
 use tardis::prop_assert;
 use tardis::testing::property;
 use tardis::util::rng::Rng;
+
+/// Documented tolerance for in-range (folded) rows vs the dense
+/// reference. The fold changes the summation order — `C` is accumulated
+/// in f64 and the blocked kernels tile the reduction — so in-range rows
+/// are *not* bitwise-equal; they agree to roundoff. `1e-3` relative
+/// (≈ a few thousand f32 ULP at unit scale) bounds the reassociation
+/// error with wide margin across the random shapes the property tests
+/// draw. Outlier-fallback rows take the identical dense code path and
+/// therefore stay **bitwise-exact** — asserted with `==`, no tolerance.
+const FOLD_TOL: f32 = 1e-3;
+
+/// End-to-end logit tolerance for the scheduler-level replay: the fold
+/// error of [`FOLD_TOL`] per FFN compounds across layers and the final
+/// unembedding, so logits get a wider (still tight) bound.
+const LOGIT_TOL: f32 = 2e-2;
 
 fn random_dense(rng: &mut Rng, d: usize, h: usize) -> DenseFfn {
     let scale = 0.4 / (d as f64).sqrt();
@@ -87,11 +102,12 @@ fn folded_equals_dense_inside_linear_range() {
         prop_assert!(r > 0.0, "degenerate safe radius {r}");
         let rows = 1 + rng.usize_below(6);
         let x = rows_at_norm(rng, rows, d, 0.9 * r);
-        let got = folded.forward(None, &x, rows);
-        let want = folded.reference.forward(None, &x, rows);
+        let mut scratch = Scratch::new();
+        let got = folded.forward(None, &mut scratch, &x, rows);
+        let want = folded.reference.forward(None, &mut scratch, &x, rows);
         for (i, (g, w)) in got.iter().zip(&want).enumerate() {
             prop_assert!(
-                close(*g, *w, 1e-3),
+                close(*g, *w, FOLD_TOL),
                 "d={d} h={h} ratio={ratio:.2} elem {i}: folded {g} vs dense {w}"
             );
         }
@@ -123,8 +139,9 @@ fn fallback_bounds_error_on_mixed_batches() {
         for v in x[d..2 * d].iter_mut() {
             *v *= blow;
         }
-        let got = folded.forward(None, &x, 3);
-        let want = folded.reference.forward(None, &x, 3);
+        let mut scratch = Scratch::new();
+        let got = folded.forward(None, &mut scratch, &x, 3);
+        let want = folded.reference.forward(None, &mut scratch, &x, 3);
         // outlier row falls back: bitwise equal to the dense path
         for (i, (g, w)) in got[d..2 * d].iter().zip(&want[d..2 * d]).enumerate()
         {
@@ -132,10 +149,10 @@ fn fallback_bounds_error_on_mixed_batches() {
         }
         // in-range rows stay within fold roundoff
         for (i, (g, w)) in got[..d].iter().zip(&want[..d]).enumerate() {
-            prop_assert!(close(*g, *w, 1e-3), "row0 elem {i}: {g} vs {w}");
+            prop_assert!(close(*g, *w, FOLD_TOL), "row0 elem {i}: {g} vs {w}");
         }
         for (i, (g, w)) in got[2 * d..].iter().zip(&want[2 * d..]).enumerate() {
-            prop_assert!(close(*g, *w, 1e-3), "row2 elem {i}: {g} vs {w}");
+            prop_assert!(close(*g, *w, FOLD_TOL), "row2 elem {i}: {g} vs {w}");
         }
         prop_assert!(folded.telemetry.fallback_rows == 1,
                      "exactly the outlier row falls back");
@@ -281,7 +298,7 @@ fn fold_invariant_holds_across_all_scheduler_policies() {
         assert_eq!(got.len(), want.len());
         for (i, (g, w)) in got.iter().zip(&want).enumerate() {
             assert!(
-                close(*g, *w, 2e-2),
+                close(*g, *w, LOGIT_TOL),
                 "policy {}: logit {i} diverged: tardis {g} vs reference {w}",
                 policy.name()
             );

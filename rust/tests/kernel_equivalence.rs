@@ -1,0 +1,194 @@
+//! Property tests for the blocked, pre-packed GEMM kernels:
+//!
+//! 1. Every packed kernel (all epilogues) matches the naive pre-PR
+//!    scalar reference across random odd shapes — rows/k/m deliberately
+//!    not multiples of the tile sizes, including the rows=1 decode case.
+//! 2. Thread-count invariance: the parallel drivers are bitwise equal
+//!    to the serial kernel for any worker count (the tile schedule is
+//!    deterministic and each output element belongs to exactly one job).
+//! 3. The row-sparse variant computes exactly the active subset (bitwise
+//!    equal to the dense kernel row-for-row), leaves inactive rows
+//!    untouched, and handles the empty/full split edge cases.
+
+use tardis::ffn::kernels::{
+    gelu, matmul, matmul_naive, matmul_sparse_rows, Epilogue, PackedMatrix, MR, NR,
+};
+use tardis::prop_assert;
+use tardis::testing::property;
+use tardis::util::rng::Rng;
+use tardis::util::threadpool::ThreadPool;
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * b.abs().max(1.0)
+}
+
+/// Random shape with every dimension coprime-ish to the tile sizes.
+fn odd_shape(rng: &mut Rng) -> (usize, usize, usize) {
+    let rows = 1 + rng.usize_below(2 * MR + 3);
+    let k = 1 + rng.usize_below(50);
+    let m = 1 + rng.usize_below(2 * NR + 7);
+    (rows, k, m)
+}
+
+fn random_problem(rng: &mut Rng, rows: usize, k: usize, m: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let x: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+    (x, w, b)
+}
+
+#[test]
+fn packed_matches_naive_reference_on_odd_shapes() {
+    property("packed vs naive", 60, |rng| {
+        let (rows, k, m) = odd_shape(rng);
+        let (x, wr, b) = random_problem(rng, rows, k, m);
+        let w = PackedMatrix::pack(&wr, k, m);
+
+        // Bias epilogue vs the naive kernel's bias-preinit path.
+        let want = matmul_naive(&x, rows, k, &wr, m, Some(&b));
+        let mut got = vec![0f32; rows * m];
+        matmul(None, &x, rows, &w, Epilogue::Bias(&b), &mut got);
+        for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
+            prop_assert!(
+                close(*g, *wv, 1e-4),
+                "bias rows={rows} k={k} m={m} elem {i}: {g} vs {wv}"
+            );
+        }
+
+        // Store epilogue vs naive without bias.
+        let want = matmul_naive(&x, rows, k, &wr, m, None);
+        matmul(None, &x, rows, &w, Epilogue::Store, &mut got);
+        for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
+            prop_assert!(
+                close(*g, *wv, 1e-4),
+                "store rows={rows} k={k} m={m} elem {i}: {g} vs {wv}"
+            );
+        }
+
+        // Fused BiasGelu == gelu(Bias), bitwise.
+        let mut biased = vec![0f32; rows * m];
+        matmul(None, &x, rows, &w, Epilogue::Bias(&b), &mut biased);
+        let mut fused = vec![0f32; rows * m];
+        matmul(None, &x, rows, &w, Epilogue::BiasGelu(&b), &mut fused);
+        for (i, (f, bv)) in fused.iter().zip(&biased).enumerate() {
+            prop_assert!(*f == gelu(*bv), "gelu fusion elem {i}");
+        }
+
+        // Add into a bias-preloaded buffer == Bias, bitwise.
+        let mut added: Vec<f32> = Vec::with_capacity(rows * m);
+        for _ in 0..rows {
+            added.extend_from_slice(&b);
+        }
+        matmul(None, &x, rows, &w, Epilogue::Add, &mut added);
+        prop_assert!(added == biased, "accumulate epilogue diverged");
+        Ok(())
+    });
+}
+
+#[test]
+fn single_row_decode_matches_naive() {
+    property("rows=1 decode case", 30, |rng| {
+        let k = 1 + rng.usize_below(70);
+        let m = 1 + rng.usize_below(3 * NR);
+        let (x, wr, b) = random_problem(rng, 1, k, m);
+        let w = PackedMatrix::pack(&wr, k, m);
+        let want = matmul_naive(&x, 1, k, &wr, m, Some(&b));
+        let mut got = vec![0f32; m];
+        matmul(None, &x, 1, &w, Epilogue::Bias(&b), &mut got);
+        for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
+            prop_assert!(close(*g, *wv, 1e-4), "k={k} m={m} elem {i}: {g} vs {wv}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn results_are_invariant_across_thread_counts() {
+    // Big enough to clear PARALLEL_THRESHOLD_OPS on both drivers.
+    let mut rng = Rng::new(0x7EAD);
+    let (rows, k, m) = (37, 128, 3 * NR + 5); // 478k ops: over the threshold
+    let (x, wr, b) = random_problem(&mut rng, rows, k, m);
+    let w = PackedMatrix::pack(&wr, k, m);
+    let mut serial = vec![0f32; rows * m];
+    matmul(None, &x, rows, &w, Epilogue::Bias(&b), &mut serial);
+    for workers in [1, 2, 3, 5, 8] {
+        let pool = ThreadPool::new(workers);
+        let mut pooled = vec![0f32; rows * m];
+        matmul(Some(&pool), &x, rows, &w, Epilogue::Bias(&b), &mut pooled);
+        assert_eq!(serial, pooled, "row-parallel diverged at {workers} workers");
+    }
+    // single-row (column-parallel) driver
+    let (k1, m1) = (512, 17 * NR + 9);
+    let (x1, wr1, b1) = random_problem(&mut rng, 1, k1, m1);
+    let w1 = PackedMatrix::pack(&wr1, k1, m1);
+    let mut serial1 = vec![0f32; m1];
+    matmul(None, &x1, 1, &w1, Epilogue::Bias(&b1), &mut serial1);
+    for workers in [2, 4, 7] {
+        let pool = ThreadPool::new(workers);
+        let mut pooled1 = vec![0f32; m1];
+        matmul(Some(&pool), &x1, 1, &w1, Epilogue::Bias(&b1), &mut pooled1);
+        assert_eq!(serial1, pooled1, "col-parallel diverged at {workers} workers");
+    }
+    // row-sparse driver: pooled must match serial bitwise even when the
+    // job chunking splits an active run that serial blocks MR-wide
+    let active: Vec<bool> = (0..rows).map(|r| r % 5 != 3).collect();
+    let mut s_serial = vec![0f32; rows * m];
+    matmul_sparse_rows(None, &x, rows, &w, Epilogue::Bias(&b), &active, &mut s_serial);
+    for workers in [2, 3, 6] {
+        let pool = ThreadPool::new(workers);
+        let mut s_pooled = vec![0f32; rows * m];
+        matmul_sparse_rows(
+            Some(&pool),
+            &x,
+            rows,
+            &w,
+            Epilogue::Bias(&b),
+            &active,
+            &mut s_pooled,
+        );
+        assert_eq!(s_serial, s_pooled, "sparse diverged at {workers} workers");
+    }
+}
+
+#[test]
+fn sparse_rows_match_dense_subset_bitwise() {
+    property("sparse row splits", 40, |rng| {
+        let (rows, k, m) = odd_shape(rng);
+        let (x, wr, b) = random_problem(rng, rows, k, m);
+        let w = PackedMatrix::pack(&wr, k, m);
+        let mut dense = vec![0f32; rows * m];
+        matmul(None, &x, rows, &w, Epilogue::Bias(&b), &mut dense);
+        let active: Vec<bool> = (0..rows).map(|_| rng.f64() < 0.6).collect();
+        let sentinel = -1234.5f32;
+        let mut sparse = vec![sentinel; rows * m];
+        matmul_sparse_rows(None, &x, rows, &w, Epilogue::Bias(&b), &active, &mut sparse);
+        for r in 0..rows {
+            let (got, want) = (&sparse[r * m..(r + 1) * m], &dense[r * m..(r + 1) * m]);
+            if active[r] {
+                prop_assert!(got == want, "active row {r} not bitwise-equal");
+            } else {
+                prop_assert!(
+                    got.iter().all(|&v| v == sentinel),
+                    "inactive row {r} was written"
+                );
+            }
+        }
+        // empty split: a fully-inactive mask writes nothing
+        let mut untouched = vec![sentinel; rows * m];
+        matmul_sparse_rows(
+            None,
+            &x,
+            rows,
+            &w,
+            Epilogue::Bias(&b),
+            &vec![false; rows],
+            &mut untouched,
+        );
+        prop_assert!(untouched.iter().all(|&v| v == sentinel), "empty split wrote");
+        // full split: bitwise equal to the dense kernel
+        let mut full = vec![sentinel; rows * m];
+        matmul_sparse_rows(None, &x, rows, &w, Epilogue::Bias(&b), &vec![true; rows], &mut full);
+        prop_assert!(full == dense, "full split diverged from dense kernel");
+        Ok(())
+    });
+}
