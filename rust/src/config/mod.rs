@@ -56,8 +56,43 @@ impl BackendKind {
     }
 }
 
+/// Which out-of-range predictor routes work around the fold (paper
+/// §5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PredictorKind {
+    /// Per-row 1-D input-norm proxy (provable Cauchy–Schwarz radius +
+    /// online learning). Cheap, but blind to direction-dependent
+    /// outliers.
+    #[default]
+    Norm,
+    /// k-bit quantized `W_up` proxy GEMM with *per-neuron* in/out
+    /// decisions against the calibrated ranges and top-K result fixing
+    /// (the paper's predictor).
+    Quantized,
+}
+
+impl PredictorKind {
+    pub fn parse(s: &str) -> Option<PredictorKind> {
+        match s {
+            "norm" => Some(PredictorKind::Norm),
+            "quantized" => Some(PredictorKind::Quantized),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PredictorKind::Norm => "norm",
+            PredictorKind::Quantized => "quantized",
+        }
+    }
+}
+
 /// Per-variant TARDIS fold parameters (the knobs the python pipeline
-/// calibrates; uniform across units in the native backend).
+/// calibrates). `linear_lo`/`linear_hi` are the *uniform fallback*
+/// range used when no per-neuron calibration accompanies the weights;
+/// a manifest with `tardis.lo`/`tardis.hi` parameter arrays overrides
+/// them per neuron (see `docs/manifest.md`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TardisFfnConfig {
     /// Fraction of hidden units folded into the `d×d` map.
@@ -69,11 +104,25 @@ pub struct TardisFfnConfig {
     /// [`crate::ffn::OutlierPredictor`]); 1.0 = fold only norms at or
     /// below observed/provable in-range norms.
     pub predictor_threshold: f32,
+    /// Which predictor routes around the fold.
+    pub predictor: PredictorKind,
+    /// Bit width of the quantized `W_up` proxy (2..=8).
+    pub predictor_bits: u8,
+    /// Reduction-dimension rows sharing one quantization scale.
+    pub predictor_group: usize,
+    /// Result-fixing capacity: rows with at most this many predicted
+    /// out-of-range neurons are fixed per neuron; beyond it the whole
+    /// row falls back to the dense path.
+    pub top_k: usize,
 }
 
 impl TardisFfnConfig {
     pub fn with_ratio(fold_ratio: f64) -> TardisFfnConfig {
         TardisFfnConfig { fold_ratio, ..TardisFfnConfig::default() }
+    }
+
+    pub fn with_predictor(self, predictor: PredictorKind) -> TardisFfnConfig {
+        TardisFfnConfig { predictor, ..self }
     }
 }
 
@@ -84,6 +133,10 @@ impl Default for TardisFfnConfig {
             linear_lo: -6.0,
             linear_hi: 6.0,
             predictor_threshold: 1.05,
+            predictor: PredictorKind::Norm,
+            predictor_bits: 4,
+            predictor_group: 32,
+            top_k: 8,
         }
     }
 }
@@ -376,27 +429,55 @@ impl Manifest {
                     },
                 );
             }
-            let tardis = v.get("fold_ratio").and_then(Json::as_f64).map(|r| {
-                let d = TardisFfnConfig::default();
-                TardisFfnConfig {
-                    fold_ratio: r,
-                    linear_lo: v
-                        .get("linear_lo")
-                        .and_then(Json::as_f64)
-                        .map(|x| x as f32)
-                        .unwrap_or(d.linear_lo),
-                    linear_hi: v
-                        .get("linear_hi")
-                        .and_then(Json::as_f64)
-                        .map(|x| x as f32)
-                        .unwrap_or(d.linear_hi),
-                    predictor_threshold: v
-                        .get("predictor_threshold")
-                        .and_then(Json::as_f64)
-                        .map(|x| x as f32)
-                        .unwrap_or(d.predictor_threshold),
+            let tardis = match v.get("fold_ratio").and_then(Json::as_f64) {
+                None => None,
+                Some(r) => {
+                    let d = TardisFfnConfig::default();
+                    let predictor = match v.get("predictor").and_then(Json::as_str) {
+                        None => d.predictor,
+                        Some(s) => PredictorKind::parse(s).ok_or_else(|| {
+                            anyhow!("unknown predictor {s:?} (norm|quantized)")
+                        })?,
+                    };
+                    Some(TardisFfnConfig {
+                        fold_ratio: r,
+                        linear_lo: v
+                            .get("linear_lo")
+                            .and_then(Json::as_f64)
+                            .map(|x| x as f32)
+                            .unwrap_or(d.linear_lo),
+                        linear_hi: v
+                            .get("linear_hi")
+                            .and_then(Json::as_f64)
+                            .map(|x| x as f32)
+                            .unwrap_or(d.linear_hi),
+                        predictor_threshold: v
+                            .get("predictor_threshold")
+                            .and_then(Json::as_f64)
+                            .map(|x| x as f32)
+                            .unwrap_or(d.predictor_threshold),
+                        predictor,
+                        predictor_bits: match v
+                            .get("predictor_bits")
+                            .and_then(Json::as_usize)
+                        {
+                            None => d.predictor_bits,
+                            Some(b) if (2..=8).contains(&b) => b as u8,
+                            Some(b) => {
+                                bail!("predictor_bits {b} not in 2..=8")
+                            }
+                        },
+                        predictor_group: v
+                            .get("predictor_group")
+                            .and_then(Json::as_usize)
+                            .unwrap_or(d.predictor_group),
+                        top_k: v
+                            .get("top_k")
+                            .and_then(Json::as_usize)
+                            .unwrap_or(d.top_k),
+                    })
                 }
-            });
+            };
             variants.push(VariantSpec {
                 name: req_str(v, "name")?,
                 ffn_mode: req_str(v, "ffn_mode")?,
@@ -533,9 +614,91 @@ mod tests {
         assert!((t.fold_ratio - 0.8).abs() < 1e-12);
         assert!((t.linear_lo + 4.0).abs() < 1e-6);
         assert!((t.linear_hi - 4.5).abs() < 1e-6);
-        // unspecified key falls back to the default
+        // unspecified keys fall back to the defaults
         let d = TardisFfnConfig::default();
         assert!((t.predictor_threshold - d.predictor_threshold).abs() < 1e-6);
+        assert_eq!(t.predictor, d.predictor);
+        assert_eq!(t.predictor_bits, d.predictor_bits);
+        assert_eq!(t.predictor_group, d.predictor_group);
+        assert_eq!(t.top_k, d.top_k);
+    }
+
+    #[test]
+    fn parses_variant_predictor_fields() {
+        let tmp = std::env::temp_dir().join("tardis_manifest_test_pred");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let path = tmp.join("manifest.json");
+        std::fs::write(
+            &path,
+            r#"{
+              "model": {"name":"m","vocab":256,"d_model":8,"n_layers":1,
+                        "n_heads":2,"d_ff":32,"max_seq":16,"act":"gelu"},
+              "batch": 2,
+              "prefill_buckets": [4],
+              "kv_shape": [1,2,2,2,16,4],
+              "variants": [
+                {"name":"tardis80","ffn_mode":"tardis","fix_capacity":6,
+                 "compression_ratio":0.8,"weights_file":"t.weights.bin",
+                 "fold_ratio":0.8,"predictor":"quantized",
+                 "predictor_bits":3,"predictor_group":8,"top_k":6,
+                 "params":[],"executables":{}}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&path).unwrap();
+        let t = m.variant("tardis80").unwrap().tardis.expect("tardis cfg");
+        assert_eq!(t.predictor, PredictorKind::Quantized);
+        assert_eq!(t.predictor_bits, 3);
+        assert_eq!(t.predictor_group, 8);
+        assert_eq!(t.top_k, 6);
+        // out-of-range bit widths are a load error, not a silent wrap
+        std::fs::write(
+            &path,
+            r#"{
+              "model": {"name":"m","vocab":256,"d_model":8,"n_layers":1,
+                        "n_heads":2,"d_ff":32,"max_seq":16,"act":"gelu"},
+              "batch": 2,
+              "prefill_buckets": [4],
+              "kv_shape": [1,2,2,2,16,4],
+              "variants": [
+                {"name":"t","ffn_mode":"tardis","fix_capacity":0,
+                 "compression_ratio":0.8,"weights_file":"t.weights.bin",
+                 "fold_ratio":0.8,"predictor_bits":260,
+                 "params":[],"executables":{}}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&path).is_err());
+        // a bogus predictor name is a load error, not a silent default
+        std::fs::write(
+            &path,
+            r#"{
+              "model": {"name":"m","vocab":256,"d_model":8,"n_layers":1,
+                        "n_heads":2,"d_ff":32,"max_seq":16,"act":"gelu"},
+              "batch": 2,
+              "prefill_buckets": [4],
+              "kv_shape": [1,2,2,2,16,4],
+              "variants": [
+                {"name":"t","ffn_mode":"tardis","fix_capacity":0,
+                 "compression_ratio":0.8,"weights_file":"t.weights.bin",
+                 "fold_ratio":0.8,"predictor":"psychic",
+                 "params":[],"executables":{}}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&path).is_err());
+    }
+
+    #[test]
+    fn predictor_kind_roundtrip() {
+        for k in [PredictorKind::Norm, PredictorKind::Quantized] {
+            assert_eq!(PredictorKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PredictorKind::parse("oracle"), None);
+        assert_eq!(PredictorKind::default(), PredictorKind::Norm);
     }
 
     #[test]

@@ -15,9 +15,12 @@ use anyhow::Result;
 
 use super::scheduler::{StepOutcome, StepPlan};
 
-use crate::config::{FfnMode, NativeModelConfig};
+use crate::config::{FfnMode, NativeModelConfig, TardisFfnConfig};
 use crate::ffn::kernels::{dot, layernorm_into, matmul, Epilogue, Scratch};
-use crate::ffn::{DenseFfn, FfnBackend, FfnTelemetry, FoldedFfn, Linearization};
+use crate::ffn::{
+    folded_units_for, DenseFfn, FfnBackend, FfnTelemetry, FoldedFfn, Linearization,
+    RangeTable,
+};
 use crate::runtime::weights::NativeWeights;
 use crate::util::threadpool::ThreadPool;
 
@@ -242,16 +245,54 @@ impl NativeModel {
                 );
                 match mode {
                     FfnMode::Dense => FfnBackend::Dense(dense),
-                    FfnMode::Tardis(t) => {
-                        FfnBackend::Folded(Box::new(FoldedFfn::new(dense, t)))
-                    }
+                    // Per-neuron calibrated ranges (manifest-shipped)
+                    // take precedence over the uniform configured range.
+                    FfnMode::Tardis(t) => match &lw.calib {
+                        Some(c) => {
+                            // the exported scales fix the group size
+                            let t = TardisFfnConfig {
+                                predictor_group: c.group,
+                                ..*t
+                            };
+                            FfnBackend::Folded(Box::new(
+                                FoldedFfn::with_calibration(
+                                    dense,
+                                    &t,
+                                    &c.lo,
+                                    &c.hi,
+                                    &c.lin_a,
+                                    &c.lin_b,
+                                    Some((&c.pred_codes, &c.pred_scales)),
+                                ),
+                            ))
+                        }
+                        None => {
+                            FfnBackend::Folded(Box::new(FoldedFfn::new(dense, t)))
+                        }
+                    },
                     FfnMode::TardisReference(t) => {
-                        let units = ((t.fold_ratio * cfg.d_ff as f64).round()
-                            as usize)
-                            .min(cfg.d_ff);
-                        let lin =
-                            Linearization::fit_gelu(t.linear_lo, t.linear_hi);
-                        FfnBackend::Dense(dense.with_linearization(lin, units))
+                        let units = folded_units_for(t.fold_ratio, cfg.d_ff);
+                        match &lw.calib {
+                            Some(c) => {
+                                FfnBackend::Dense(dense.with_ranges(
+                                    RangeTable::from_calibration(
+                                        &c.lo[..units],
+                                        &c.hi[..units],
+                                        &c.lin_a[..units],
+                                        &c.lin_b[..units],
+                                    ),
+                                ))
+                            }
+                            None => {
+                                let lin = Linearization::fit_gelu(
+                                    t.linear_lo,
+                                    t.linear_hi,
+                                );
+                                FfnBackend::Dense(
+                                    dense.with_linearization(lin, units),
+                                )
+                            }
+                        }
                     }
                 }
             })
@@ -744,6 +785,7 @@ mod tests {
             linear_lo: -8.0,
             linear_hi: 8.0,
             predictor_threshold: 1.05,
+            ..Default::default()
         };
         let mut tardis = NativeModel::new(
             cfg.clone(),

@@ -1,11 +1,15 @@
 //! Dense FFN reference path: `y = σ(x·W_up + b_up)·W_down + b_down`.
 //!
-//! For TARDIS variants the first `linear_units` hidden units carry a
-//! [`Linearization`]: inside the approximated range `[lo, hi)` the
-//! activation is replaced by its least-squares linear fit `a·z + c`
-//! (paper §5.1), outside it the true GELU applies. This partially-linear
-//! dense path is both the semantic reference the fold must reproduce and
-//! the fallback executed for predicted-outlier rows.
+//! For TARDIS variants the leading hidden units carry a [`RangeTable`]:
+//! inside unit `j`'s approximated range `[lo_j, hi_j)` the activation is
+//! replaced by its least-squares linear fit `a_j·z + c_j` (paper §5.1),
+//! outside it the true GELU applies. The table is either *uniform* (one
+//! configured `[lo, hi)` and one GELU fit shared by every linearized
+//! unit — the no-artifacts default) or *calibrated* (per-neuron ranges
+//! and fits from the python pipeline's Algorithm 1, loaded through the
+//! manifest). This partially-linear dense path is both the semantic
+//! reference the fold must reproduce and the fallback executed for
+//! predicted-outlier rows.
 //!
 //! Both projections are pre-packed ([`PackedMatrix`]) at construction;
 //! the pure-GELU path fuses bias+activation into the up-projection's
@@ -65,6 +69,88 @@ impl Linearization {
     }
 }
 
+/// Per-unit linear surrogates for the first `units()` hidden units of a
+/// layer: unit `j` is approximated by `slope[j]·z + intercept[j]` on
+/// `[lo[j], hi[j])` and keeps the true GELU outside.
+///
+/// The uniform configuration broadcasts one [`Linearization`] across all
+/// linearized units; the calibrated path carries the python pipeline's
+/// per-neuron ranges and fits verbatim.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RangeTable {
+    pub lo: Vec<f32>,
+    pub hi: Vec<f32>,
+    pub slope: Vec<f32>,
+    pub intercept: Vec<f32>,
+}
+
+impl RangeTable {
+    /// Broadcast one fit across `units` linearized units.
+    pub fn uniform(lin: Linearization, units: usize) -> RangeTable {
+        RangeTable {
+            lo: vec![lin.lo; units],
+            hi: vec![lin.hi; units],
+            slope: vec![lin.slope; units],
+            intercept: vec![lin.intercept; units],
+        }
+    }
+
+    /// Per-neuron calibrated table (all slices must have equal length
+    /// and every range must be non-empty).
+    pub fn from_calibration(
+        lo: &[f32],
+        hi: &[f32],
+        slope: &[f32],
+        intercept: &[f32],
+    ) -> RangeTable {
+        assert!(
+            lo.len() == hi.len() && lo.len() == slope.len() && lo.len() == intercept.len(),
+            "range table arrays disagree: {} {} {} {}",
+            lo.len(),
+            hi.len(),
+            slope.len(),
+            intercept.len()
+        );
+        for (j, (&l, &h)) in lo.iter().zip(hi).enumerate() {
+            assert!(l < h, "unit {j}: empty linear range [{l}, {h})");
+        }
+        RangeTable {
+            lo: lo.to_vec(),
+            hi: hi.to_vec(),
+            slope: slope.to_vec(),
+            intercept: intercept.to_vec(),
+        }
+    }
+
+    /// Number of linearized units.
+    pub fn units(&self) -> usize {
+        self.lo.len()
+    }
+
+    #[inline]
+    pub fn in_range(&self, j: usize, z: f32) -> bool {
+        self.lo[j] <= z && z < self.hi[j]
+    }
+
+    /// The deployed activation of unit `j`: its linear surrogate inside
+    /// the unit's range, GELU outside.
+    #[inline]
+    pub fn apply(&self, j: usize, z: f32) -> f32 {
+        if self.in_range(j, z) {
+            self.slope[j] * z + self.intercept[j]
+        } else {
+            gelu(z)
+        }
+    }
+
+    /// The surrogate `slope[j]·z + intercept[j]` regardless of range —
+    /// what the folded map contributes for unit `j`.
+    #[inline]
+    pub fn surrogate(&self, j: usize, z: f32) -> f32 {
+        self.slope[j] * z + self.intercept[j]
+    }
+}
+
 /// Dense (reference) FFN with optional partial linearization.
 #[derive(Debug, Clone)]
 pub struct DenseFfn {
@@ -83,9 +169,9 @@ pub struct DenseFfn {
     pub w_up_packed: PackedMatrix,
     /// Packed `[d_ff, d_model]` down-projection.
     pub w_down_packed: PackedMatrix,
-    /// Linear surrogate for units `0..linear_units` (None = pure GELU).
-    pub lin: Option<Linearization>,
-    pub linear_units: usize,
+    /// Per-unit linear surrogates for units `0..ranges.units()`
+    /// (None = pure GELU).
+    pub ranges: Option<RangeTable>,
 }
 
 impl DenseFfn {
@@ -112,17 +198,27 @@ impl DenseFfn {
             b_down,
             w_up_packed,
             w_down_packed,
-            lin: None,
-            linear_units: 0,
+            ranges: None,
         }
     }
 
-    /// Linearize the activation of units `0..units` on `lin`'s range.
-    pub fn with_linearization(mut self, lin: Linearization, units: usize) -> DenseFfn {
+    /// Linearize the activation of units `0..units` on `lin`'s range
+    /// (uniform table).
+    pub fn with_linearization(self, lin: Linearization, units: usize) -> DenseFfn {
         assert!(units <= self.d_ff);
-        self.lin = Some(lin);
-        self.linear_units = units;
+        self.with_ranges(RangeTable::uniform(lin, units))
+    }
+
+    /// Linearize the leading units with per-unit calibrated ranges.
+    pub fn with_ranges(mut self, ranges: RangeTable) -> DenseFfn {
+        assert!(ranges.units() <= self.d_ff);
+        self.ranges = Some(ranges);
         self
+    }
+
+    /// Number of linearized (surrogate-carrying) units.
+    pub fn linear_units(&self) -> usize {
+        self.ranges.as_ref().map_or(0, RangeTable::units)
     }
 
     /// `z = x·W_up + b_up` into `z` (`[rows, d_ff]`).
@@ -136,14 +232,16 @@ impl DenseFfn {
         matmul(pool, x, rows, &self.w_up_packed, Epilogue::Bias(&self.b_up), z);
     }
 
-    /// In-place activation of one `[d_ff]` row: linear surrogate on
-    /// linearized units inside their range, GELU everywhere else.
+    /// In-place activation of one `[d_ff]` row: per-unit linear
+    /// surrogate on linearized units inside their range, GELU everywhere
+    /// else.
     pub fn activate_row(&self, row: &mut [f32]) {
-        if let Some(lin) = self.lin {
-            for v in row.iter_mut().take(self.linear_units) {
-                *v = lin.apply(*v);
+        if let Some(t) = &self.ranges {
+            let n = t.units();
+            for (j, v) in row.iter_mut().take(n).enumerate() {
+                *v = t.apply(j, *v);
             }
-            for v in row.iter_mut().skip(self.linear_units) {
+            for v in row.iter_mut().skip(n) {
                 *v = gelu(*v);
             }
         } else {
@@ -175,7 +273,7 @@ impl DenseFfn {
         rows: usize,
     ) -> Vec<f32> {
         let mut z = scratch.take(rows * self.d_ff);
-        if self.lin.is_none() {
+        if self.ranges.is_none() {
             // pure GELU: bias + activation fused into the tile store
             matmul(pool, x, rows, &self.w_up_packed, Epilogue::BiasGelu(&self.b_up), &mut z);
         } else {
@@ -262,5 +360,44 @@ mod tests {
     #[test]
     fn param_count_is_dense_size() {
         assert_eq!(tiny().param_count(), 2 * 2 * 3 + 3 + 2);
+    }
+
+    #[test]
+    fn per_neuron_table_applies_each_units_own_range() {
+        // unit 0: z=1 in range [-2,2) -> surrogate; unit 1: z=1 outside
+        // its range [3,5) -> true gelu.
+        let t = RangeTable::from_calibration(
+            &[-2.0, 3.0],
+            &[2.0, 5.0],
+            &[0.5, 1.0],
+            &[0.1, 0.0],
+        );
+        assert_eq!(t.units(), 2);
+        assert!(t.in_range(0, 1.0));
+        assert!(!t.in_range(1, 1.0));
+        assert!((t.apply(0, 1.0) - 0.6).abs() < 1e-7);
+        assert_eq!(t.apply(1, 1.0), gelu(1.0));
+        assert!((t.surrogate(1, 1.0) - 1.0).abs() < 1e-7);
+        // exclusive upper bound: hi itself is out of range
+        assert!(!t.in_range(0, 2.0));
+
+        let f = tiny().with_ranges(t.clone());
+        assert_eq!(f.linear_units(), 2);
+        let mut z = vec![1.0, 1.0, 1.0];
+        f.activate_row(&mut z);
+        assert!((z[0] - 0.6).abs() < 1e-7);
+        assert_eq!(z[1], gelu(1.0));
+        assert_eq!(z[2], gelu(1.0)); // unit 2 not linearized
+    }
+
+    #[test]
+    fn uniform_table_matches_scalar_linearization() {
+        let lin = Linearization::fit_gelu(-6.0, 6.0);
+        let t = RangeTable::uniform(lin, 3);
+        for z in [-7.0f32, -1.0, 0.0, 2.5, 6.0, 9.0] {
+            for j in 0..3 {
+                assert_eq!(t.apply(j, z), lin.apply(z));
+            }
+        }
     }
 }

@@ -1,42 +1,69 @@
-//! The TARDIS partially-linear FFN: constant-folded matrix + per-row
-//! online outlier fallback (paper §5.2, Fig 3).
+//! The TARDIS partially-linear FFN: constant-folded matrix + online
+//! outlier fallback (paper §5.2, Fig 3).
 //!
 //! With the activation of the first `folded_units` hidden units replaced
-//! by its linear surrogate `a·z + c`, the FFN collapses by associativity:
+//! by its per-unit linear surrogate `a_j·z + c_j` ([`RangeTable`]), the
+//! FFN collapses by associativity:
 //!
 //! ```text
 //! σ(x·W_up + b_up)·W_down + b_down
-//!   ≈ x·(W_up_F · a · W_down_F)  +  (a·b_up_F + c)·W_down_F + b_down
+//!   ≈ x·(W_up_F · diag(a) · W_down_F)
+//!     + (a ⊙ b_up_F + c)·W_down_F + b_down
 //!     + gelu(x·W_up_K + b_up_K)·W_down_K
 //!   = x·C + B + kept-unit path
 //! ```
 //!
 //! `C` is `d×d` (vs `2·d·h` for the folded units), `B` absorbs the
 //! intercepts and `b_down`, and the `K = d_ff - folded_units` kept units
-//! run the original dense columns. Per batch row an
-//! [`super::predictor::OutlierPredictor`] decides between this folded
-//! path and the exact dense fallback ([`DenseFfn`] with the same partial
-//! linearization).
+//! run the original dense columns. The surrogate table is either
+//! *uniform* (one configured `[lo, hi)` and one GELU fit, the
+//! no-artifacts default) or *calibrated* per neuron from the python
+//! pipeline ([`FoldedFfn::with_calibration`]).
 //!
-//! The batch split executes **in place**: each side runs the row-sparse
-//! kernel over its row mask ([`matmul_sparse_rows`]) directly on the
-//! input and output buffers — no gather/scatter copies, no per-call
-//! allocation (masks are reused across calls, intermediates come from
-//! the caller's [`Scratch`]). All matrices are pre-packed at fold time.
-//! Fallback rows are bitwise equal to the reference; folded in-range
-//! rows differ only by the fold's reassociation roundoff.
+//! Routing around the fold is a configurable
+//! [`PredictorKind`](crate::config::PredictorKind):
+//!
+//! * `norm` — the per-row 1-D input-norm gate
+//!   ([`super::predictor::OutlierPredictor`]): whole rows fold or fall
+//!   back to the exact dense path.
+//! * `quantized` — the paper's k-bit `W_up` proxy
+//!   ([`super::quant::QuantizedRouter`]): per-neuron in/out decisions
+//!   against the calibrated ranges, top-K result fixing for rows with at
+//!   most `top_k` flagged neurons, and the same per-row dense fallback
+//!   beyond that capacity.
+//!
+//! Both routes execute the batch split **in place**: each side runs the
+//! row-sparse kernel over its row mask ([`matmul_sparse_rows`]) directly
+//! on the input and output buffers — no gather/scatter copies, no
+//! per-call allocation (masks and fix lists are reused across calls,
+//! intermediates come from the caller's [`Scratch`]). All matrices are
+//! pre-packed at fold time. Fallback rows are bitwise equal to the
+//! reference; folded in-range rows differ only by the fold's
+//! reassociation roundoff; fixed neurons patch the folded output with
+//! their exact pre-activation.
 
-use crate::config::TardisFfnConfig;
+use crate::config::{PredictorKind, TardisFfnConfig};
+use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
-use super::FfnTelemetry;
-use super::dense::{DenseFfn, Linearization};
-use super::kernels::{matmul, matmul_sparse_rows, norm, Epilogue, PackedMatrix, Scratch};
+use super::dense::{DenseFfn, Linearization, RangeTable};
+use super::kernels::{dot, gelu, matmul, matmul_sparse_rows, norm, Epilogue, PackedMatrix, Scratch};
 use super::predictor::{OutlierPredictor, Route};
+use super::quant::{
+    synthetic_outlier_workload, QuantRoute, QuantizedProxy, QuantizedRouter,
+    RoutingQuality,
+};
+use super::FfnTelemetry;
+
+/// Number of folded (surrogate-carrying) units at `ratio` of `h` hidden
+/// units.
+pub fn folded_units_for(ratio: f64, h: usize) -> usize {
+    ((ratio * h as f64).round() as usize).min(h)
+}
 
 pub struct FoldedFfn {
-    /// Dense path with the same linearization: semantic reference and
-    /// per-row fallback executor.
+    /// Dense path with the same linearization table: semantic reference
+    /// and per-row fallback executor.
     pub reference: DenseFfn,
     folded_units: usize,
     kept_units: usize,
@@ -50,44 +77,99 @@ pub struct FoldedFfn {
     b_up_kept: Vec<f32>,
     /// Packed kept-unit rows of `W_down`: `[kept, d]`.
     w_down_kept: PackedMatrix,
+    /// Folded columns of `W_up` transposed to `[nf, d]` row-major, so a
+    /// top-K fix is one contiguous `d`-dot (empty for the norm router).
+    w_up_f_t: Vec<f32>,
+    /// Which predictor routes around the fold.
+    kind: PredictorKind,
+    /// The per-row norm gate (always constructed: its provable radius
+    /// doubles as fold metadata, and the norm route uses it online).
     pub predictor: OutlierPredictor,
+    /// The per-neuron quantized router (`kind == Quantized` only).
+    pub quant: Option<QuantizedRouter>,
     pub telemetry: FfnTelemetry,
     /// Reusable routing state (no per-call allocation).
     norms: Vec<f32>,
     folded_mask: Vec<bool>,
     fallback_mask: Vec<bool>,
+    fixes: Vec<(u32, u32)>,
 }
 
 impl FoldedFfn {
-    /// Fold `dense` at `cfg.fold_ratio`, linearizing the first
-    /// `round(ratio·d_ff)` units on `[linear_lo, linear_hi)`. The fold is
-    /// accumulated in f64 and packed once.
+    /// Fold `dense` at `cfg.fold_ratio` with the *uniform* surrogate:
+    /// the first `round(ratio·d_ff)` units linearized by one
+    /// least-squares GELU fit on `[linear_lo, linear_hi)`.
     pub fn new(dense: DenseFfn, cfg: &TardisFfnConfig) -> FoldedFfn {
-        let (d, h) = (dense.d_model, dense.d_ff);
-        let nf = ((cfg.fold_ratio * h as f64).round() as usize).min(h);
+        let h = dense.d_ff;
+        let nf = folded_units_for(cfg.fold_ratio, h);
         assert!(nf >= 1, "fold_ratio {} folds no units", cfg.fold_ratio);
         let lin = Linearization::fit_gelu(cfg.linear_lo, cfg.linear_hi);
-        let reference = dense.with_linearization(lin, nf);
+        FoldedFfn::build(dense, cfg, RangeTable::uniform(lin, nf), None)
+    }
+
+    /// Fold `dense` with *per-neuron calibrated* ranges and fits:
+    /// `lo`/`hi`/`slope`/`intercept` are full `[d_ff]` arrays from the
+    /// python pipeline (the folded prefix `0..round(ratio·d_ff)` is
+    /// used). `proxy_parts` optionally carries the pipeline's exported
+    /// quantized `W_up` copy (row-major `[d, d_ff]` i8 codes and
+    /// `[ceil(d/group), d_ff]` f32 scales); without it, a quantized
+    /// predictor quantizes `W_up` at fold time.
+    pub fn with_calibration(
+        dense: DenseFfn,
+        cfg: &TardisFfnConfig,
+        lo: &[f32],
+        hi: &[f32],
+        slope: &[f32],
+        intercept: &[f32],
+        proxy_parts: Option<(&[i8], &[f32])>,
+    ) -> FoldedFfn {
+        let h = dense.d_ff;
+        assert!(
+            lo.len() == h && hi.len() == h && slope.len() == h && intercept.len() == h,
+            "calibration arrays must cover all {h} hidden units"
+        );
+        let nf = folded_units_for(cfg.fold_ratio, h);
+        assert!(nf >= 1, "fold_ratio {} folds no units", cfg.fold_ratio);
+        let table = RangeTable::from_calibration(
+            &lo[..nf],
+            &hi[..nf],
+            &slope[..nf],
+            &intercept[..nf],
+        );
+        FoldedFfn::build(dense, cfg, table, proxy_parts)
+    }
+
+    /// Shared fold constructor: accumulate `C`/`B` in f64 with the
+    /// table's per-unit slopes and pack once.
+    fn build(
+        dense: DenseFfn,
+        cfg: &TardisFfnConfig,
+        table: RangeTable,
+        proxy_parts: Option<(&[i8], &[f32])>,
+    ) -> FoldedFfn {
+        let (d, h) = (dense.d_model, dense.d_ff);
+        let nf = table.units();
+        let reference = dense.with_ranges(table);
+        let table = reference.ranges.as_ref().expect("just set");
         let (w_up, b_up) = (&reference.w_up, &reference.b_up);
         let (w_down, b_down) = (&reference.w_down, &reference.b_down);
 
-        // C[l][m] = Σ_{j<nf} w_up[l][j] · a · w_down[j][m]
-        let a64 = lin.slope as f64;
-        let c64 = lin.intercept as f64;
+        // C[l][m] = Σ_{j<nf} w_up[l][j] · a_j · w_down[j][m]
         let mut c = vec![0f64; d * d];
         for l in 0..d {
             let row = &mut c[l * d..(l + 1) * d];
             for j in 0..nf {
-                let scaled = w_up[l * h + j] as f64 * a64;
+                let scaled = w_up[l * h + j] as f64 * table.slope[j] as f64;
                 for (cv, &wv) in row.iter_mut().zip(&w_down[j * d..(j + 1) * d]) {
                     *cv += scaled * wv as f64;
                 }
             }
         }
-        // B[m] = Σ_{j<nf} (a·b_up[j] + c) · w_down[j][m] + b_down[m]
+        // B[m] = Σ_{j<nf} (a_j·b_up[j] + c_j) · w_down[j][m] + b_down[m]
         let mut b = vec![0f64; d];
         for j in 0..nf {
-            let coef = a64 * b_up[j] as f64 + c64;
+            let coef =
+                table.slope[j] as f64 * b_up[j] as f64 + table.intercept[j] as f64;
             for (bv, &wv) in b.iter_mut().zip(&w_down[j * d..(j + 1) * d]) {
                 *bv += coef * wv as f64;
             }
@@ -105,10 +187,11 @@ impl FoldedFfn {
         let b_up_kept = b_up[nf..].to_vec();
         let w_down_kept = w_down[nf * d..].to_vec();
 
-        // Provable in-range radius: min_j slack_j / ‖w_up column j‖.
+        // Provable in-range radius: min_j slack_j / ‖w_up column j‖,
+        // with per-neuron slack against the calibrated range.
         let mut safe_radius = f32::INFINITY;
         for j in 0..nf {
-            let slack = (cfg.linear_hi - b_up[j]).min(b_up[j] - cfg.linear_lo);
+            let slack = (table.hi[j] - b_up[j]).min(b_up[j] - table.lo[j]);
             if slack <= 0.0 {
                 safe_radius = 0.0;
                 break;
@@ -129,6 +212,39 @@ impl FoldedFfn {
             safe_radius = f32::MAX;
         }
 
+        // The per-neuron router: packed k-bit proxy + transposed folded
+        // columns for result fixing.
+        let (quant, w_up_f_t) = if cfg.predictor == PredictorKind::Quantized {
+            let proxy = match proxy_parts {
+                Some((codes, scales)) => QuantizedProxy::from_parts(
+                    codes,
+                    scales,
+                    d,
+                    h,
+                    nf,
+                    cfg.predictor_bits,
+                    cfg.predictor_group,
+                ),
+                None => QuantizedProxy::quantize(
+                    w_up,
+                    d,
+                    h,
+                    nf,
+                    cfg.predictor_bits,
+                    cfg.predictor_group,
+                ),
+            };
+            let mut t = vec![0f32; nf * d];
+            for l in 0..d {
+                for j in 0..nf {
+                    t[j * d + l] = w_up[l * h + j];
+                }
+            }
+            (Some(QuantizedRouter::new(proxy, cfg.top_k)), t)
+        } else {
+            (None, Vec::new())
+        };
+
         let c_f32: Vec<f32> = c.into_iter().map(|v| v as f32).collect();
         FoldedFfn {
             folded_units: nf,
@@ -138,11 +254,15 @@ impl FoldedFfn {
             w_up_kept: PackedMatrix::pack(&w_up_kept, d, kept),
             b_up_kept,
             w_down_kept: PackedMatrix::pack(&w_down_kept, kept, d),
+            w_up_f_t,
+            kind: cfg.predictor,
             predictor: OutlierPredictor::new(safe_radius, cfg.predictor_threshold),
+            quant,
             telemetry: FfnTelemetry::default(),
             norms: Vec::new(),
             folded_mask: Vec::new(),
             fallback_mask: Vec::new(),
+            fixes: Vec::new(),
             reference,
         }
     }
@@ -155,7 +275,18 @@ impl FoldedFfn {
         self.folded_units
     }
 
-    /// Resident parameters of the folded deployment.
+    pub fn predictor_kind(&self) -> PredictorKind {
+        self.kind
+    }
+
+    /// The per-unit surrogate table of the folded prefix.
+    pub fn range_table(&self) -> &RangeTable {
+        self.reference.ranges.as_ref().expect("folded ffn has ranges")
+    }
+
+    /// Resident parameters of the folded deployment (f32 equivalents;
+    /// the quantized proxy counts at `bits/32` per code plus f16
+    /// scales).
     pub fn param_count(&self) -> usize {
         let d = self.reference.d_model;
         d * d + d + self.kept_units * (2 * d + 1)
@@ -163,11 +294,15 @@ impl FoldedFfn {
 
     /// Fraction of dense FFN parameters eliminated by the fold.
     pub fn compression_ratio(&self) -> f64 {
-        1.0 - self.param_count() as f64 / self.reference.param_count() as f64
+        let mut kept = self.param_count() as f64;
+        if let Some(q) = &self.quant {
+            kept += q.proxy.size_params_f32();
+        }
+        1.0 - kept / self.reference.param_count() as f64
     }
 
-    /// Batch forward with per-row routing; `x` is `[rows, d_model]`. The
-    /// returned buffer comes from `scratch` (hand it back with
+    /// Batch forward with routed execution; `x` is `[rows, d_model]`.
+    /// The returned buffer comes from `scratch` (hand it back with
     /// [`Scratch::give`] for steady-state zero allocation).
     pub fn forward(
         &mut self,
@@ -178,18 +313,47 @@ impl FoldedFfn {
     ) -> Vec<f32> {
         let d = self.reference.d_model;
         debug_assert_eq!(x.len(), rows * d);
+        let nf = self.folded_units;
         self.norms.clear();
         self.folded_mask.clear();
         self.fallback_mask.clear();
+        self.fixes.clear();
         let mut n_folded = 0usize;
-        for row in x.chunks_exact(d).take(rows) {
-            let nrm = norm(row);
-            let folded = matches!(self.predictor.classify(nrm), Route::Folded);
-            self.norms.push(nrm);
-            self.folded_mask.push(folded);
-            self.fallback_mask.push(!folded);
-            if folded {
-                n_folded += 1;
+        match self.kind {
+            PredictorKind::Norm => {
+                for row in x.chunks_exact(d).take(rows) {
+                    let nrm = norm(row);
+                    let folded = matches!(self.predictor.classify(nrm), Route::Folded);
+                    self.norms.push(nrm);
+                    self.folded_mask.push(folded);
+                    self.fallback_mask.push(!folded);
+                    if folded {
+                        n_folded += 1;
+                    }
+                }
+            }
+            PredictorKind::Quantized => {
+                let mut z_hat = scratch.take(rows * nf);
+                let table = self.reference.ranges.as_ref().expect("folded ffn has ranges");
+                let quant = self.quant.as_mut().expect("quantized router");
+                quant
+                    .proxy
+                    .forward_into(x, rows, &self.reference.b_up[..nf], &mut z_hat);
+                for i in 0..rows {
+                    let route = quant.decide_row(
+                        &z_hat[i * nf..(i + 1) * nf],
+                        table,
+                        i as u32,
+                        &mut self.fixes,
+                    );
+                    let folded = !matches!(route, QuantRoute::Fallback);
+                    self.folded_mask.push(folded);
+                    self.fallback_mask.push(!folded);
+                    if folded {
+                        n_folded += 1;
+                    }
+                }
+                scratch.give(z_hat);
             }
         }
         let n_fallback = rows - n_folded;
@@ -262,16 +426,19 @@ impl FoldedFfn {
                     &mut z,
                 );
             }
-            let lin = self.reference.lin.expect("folded ffn has a linearization");
+            let table = self.reference.ranges.as_ref().expect("folded ffn has ranges");
             for i in 0..rows {
                 if !self.fallback_mask[i] {
                     continue;
                 }
                 let zrow = &mut z[i * h..(i + 1) * h];
-                let in_range = zrow[..self.folded_units]
-                    .iter()
-                    .all(|zv| (lin.lo..lin.hi).contains(zv));
-                self.predictor.observe(self.norms[i], in_range);
+                if self.kind == PredictorKind::Norm {
+                    // every fallback row is an observation for the
+                    // online norm gate
+                    let in_range =
+                        (0..nf).all(|j| table.in_range(j, zrow[j]));
+                    self.predictor.observe(self.norms[i], in_range);
+                }
                 self.reference.activate_row(zrow);
             }
             if n_fallback == rows {
@@ -290,9 +457,185 @@ impl FoldedFfn {
             scratch.give(z);
         }
 
+        // Top-K result fixing: each flagged neuron of a still-folded row
+        // recomputes its exact pre-activation (one contiguous d-dot) and
+        // patches the folded output with the surrogate's residual.
+        if !self.fixes.is_empty() {
+            let table = self.reference.ranges.as_ref().expect("folded ffn has ranges");
+            let quant = self.quant.as_mut().expect("quantized router");
+            let mut applied = 0u64;
+            for &(row, j) in &self.fixes {
+                let (ri, ji) = (row as usize, j as usize);
+                let z = dot(
+                    &x[ri * d..(ri + 1) * d],
+                    &self.w_up_f_t[ji * d..(ji + 1) * d],
+                ) + self.reference.b_up[ji];
+                if table.in_range(ji, z) {
+                    // false flag: the folded surrogate was already exact
+                    quant.stats.fixed_in_range += 1;
+                    continue;
+                }
+                quant.stats.fixed_out_of_range += 1;
+                applied += 1;
+                let delta = gelu(z) - table.surrogate(ji, z);
+                let orow = &mut out[ri * d..(ri + 1) * d];
+                for (o, &wv) in orow
+                    .iter_mut()
+                    .zip(&self.reference.w_down[ji * d..(ji + 1) * d])
+                {
+                    *o += delta * wv;
+                }
+            }
+            // only fixes that actually patched the output; false flags
+            // are visible in QuantRouterStats::fixed_in_range
+            self.telemetry.fixed_neurons += applied;
+        }
+
         self.telemetry.folded_rows += n_folded as u64;
         self.telemetry.fallback_rows += n_fallback as u64;
         out
+    }
+
+    /// Evaluate this FFN's routing decisions against ground-truth range
+    /// violations on `x` (`[rows, d_model]`), without mutating any
+    /// online state. A (row, neuron) pair counts as *flagged* when it
+    /// would execute on the dense path — through per-neuron fixing or a
+    /// whole-row fallback.
+    pub fn routing_quality(
+        &self,
+        scratch: &mut Scratch,
+        x: &[f32],
+        rows: usize,
+    ) -> RoutingQuality {
+        let d = self.reference.d_model;
+        let h = self.reference.d_ff;
+        let nf = self.folded_units;
+        debug_assert_eq!(x.len(), rows * d);
+        let table = self.reference.ranges.as_ref().expect("folded ffn has ranges");
+        let mut z = scratch.take(rows * h);
+        self.reference.preactivations_into(None, x, rows, &mut z);
+        let (mut tp, mut flagged, mut truly) = (0u64, 0u64, 0u64);
+        match self.kind {
+            PredictorKind::Norm => {
+                let radius = self.predictor.predicted_radius();
+                for i in 0..rows {
+                    let dense_row = norm(&x[i * d..(i + 1) * d]) > radius;
+                    for j in 0..nf {
+                        let oor = !table.in_range(j, z[i * h + j]);
+                        if oor {
+                            truly += 1;
+                        }
+                        if dense_row {
+                            flagged += 1;
+                            if oor {
+                                tp += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            PredictorKind::Quantized => {
+                let quant = self.quant.as_ref().expect("quantized router");
+                let mut z_hat = scratch.take(rows * nf);
+                quant
+                    .proxy
+                    .forward_into(x, rows, &self.reference.b_up[..nf], &mut z_hat);
+                for i in 0..rows {
+                    let zh = &z_hat[i * nf..(i + 1) * nf];
+                    let row_fallback = quant.count_flags(zh, table) > quant.top_k;
+                    for j in 0..nf {
+                        let oor = !table.in_range(j, z[i * h + j]);
+                        if oor {
+                            truly += 1;
+                        }
+                        if row_fallback || !table.in_range(j, zh[j]) {
+                            flagged += 1;
+                            if oor {
+                                tp += 1;
+                            }
+                        }
+                    }
+                }
+                scratch.give(z_hat);
+            }
+        }
+        scratch.give(z);
+        RoutingQuality::from_counts(tp, flagged, truly, (rows * nf) as u64)
+    }
+}
+
+/// Result of [`compare_predictors`]: both routers folded over the same
+/// dense weights and scored on the same seeded injected-outlier batch.
+pub struct PredictorComparison {
+    /// Norm-routed fold, warmed online on clean rows at the workload
+    /// norm (its learned radius covers `norm_target`).
+    pub norm_fold: FoldedFfn,
+    /// Quantized-routed fold over the same dense weights.
+    pub quant_fold: FoldedFfn,
+    /// The evaluation batch (`rows` × d_model, every 4th row an aligned
+    /// direction-dependent outlier).
+    pub workload: Vec<f32>,
+    pub rows: usize,
+    /// Shared row norm: 1.25× the provable radius.
+    pub norm_target: f32,
+    pub norm: RoutingQuality,
+    pub quantized: RoutingQuality,
+}
+
+/// The one evaluation harness behind the `bench-decode`/`variants`
+/// routing-quality report **and** the `predictor_quality` regression
+/// test, so the two can never drift apart: fold `dense` under both
+/// [`PredictorKind`]s, warm the norm gate exactly as it would warm
+/// online (8 clean rows at the shared norm, two passes: fall back +
+/// observe, then fold), then score both routers with
+/// [`FoldedFfn::routing_quality`] on a 64-row
+/// [`synthetic_outlier_workload`] with every 4th row injected.
+pub fn compare_predictors(
+    dense: DenseFfn,
+    cfg: &TardisFfnConfig,
+    rng: &mut Rng,
+) -> PredictorComparison {
+    let mut norm_fold = FoldedFfn::new(
+        dense.clone(),
+        &TardisFfnConfig { predictor: PredictorKind::Norm, ..*cfg },
+    );
+    let quant_fold = FoldedFfn::new(
+        dense,
+        &TardisFfnConfig { predictor: PredictorKind::Quantized, ..*cfg },
+    );
+    let mut scratch = Scratch::new();
+    let norm_target = 1.25 * norm_fold.predictor.safe_radius();
+    let warm = synthetic_outlier_workload(
+        rng,
+        &norm_fold.reference,
+        norm_fold.range_table(),
+        norm_target,
+        8,
+        usize::MAX,
+    );
+    for _ in 0..2 {
+        let y = norm_fold.forward(None, &mut scratch, &warm, 8);
+        scratch.give(y);
+    }
+    let rows = 64;
+    let workload = synthetic_outlier_workload(
+        rng,
+        &norm_fold.reference,
+        norm_fold.range_table(),
+        norm_target,
+        rows,
+        4,
+    );
+    let norm = norm_fold.routing_quality(&mut scratch, &workload, rows);
+    let quantized = quant_fold.routing_quality(&mut scratch, &workload, rows);
+    PredictorComparison {
+        norm_fold,
+        quant_fold,
+        workload,
+        rows,
+        norm_target,
+        norm,
+        quantized,
     }
 }
 
@@ -323,6 +666,7 @@ mod tests {
             linear_lo: -6.0,
             linear_hi: 6.0,
             predictor_threshold: 1.0,
+            ..TardisFfnConfig::default()
         }
     }
 
@@ -417,6 +761,7 @@ mod tests {
                 linear_lo: -12.0,
                 linear_hi: 12.0,
                 predictor_threshold: 1.0,
+                ..TardisFfnConfig::default()
             },
         );
         assert!((f.predictor.safe_radius() - 24.0).abs() < 1e-4);
@@ -445,6 +790,24 @@ mod tests {
     }
 
     #[test]
+    fn quantized_proxy_counts_against_compression() {
+        let mut rng = Rng::new(31);
+        let dense = random_dense(&mut rng, 16, 64, 0.2);
+        let norm_fold = FoldedFfn::new(dense.clone(), &cfg(0.8));
+        let quant_fold = FoldedFfn::new(
+            dense,
+            &TardisFfnConfig {
+                predictor: PredictorKind::Quantized,
+                predictor_group: 8,
+                ..cfg(0.8)
+            },
+        );
+        let (rn, rq) = (norm_fold.compression_ratio(), quant_fold.compression_ratio());
+        assert!(rq < rn, "proxy must cost something: {rq} vs {rn}");
+        assert!(rq > 0.3, "but only bits/32 of the folded columns: {rq}");
+    }
+
+    #[test]
     fn steady_state_forward_allocates_nothing() {
         let mut rng = Rng::new(99);
         let dense = random_dense(&mut rng, 8, 16, 0.3);
@@ -470,5 +833,169 @@ mod tests {
             scratch.give(y);
         }
         assert_eq!(scratch.misses, misses, "steady-state decode must not allocate");
+    }
+
+    // -- quantized per-neuron routing -----------------------------------
+
+    fn quant_cfg(ratio: f64, top_k: usize) -> TardisFfnConfig {
+        TardisFfnConfig {
+            fold_ratio: ratio,
+            linear_lo: -6.0,
+            linear_hi: 6.0,
+            predictor_threshold: 1.0,
+            predictor: PredictorKind::Quantized,
+            predictor_bits: 4,
+            predictor_group: 8,
+            top_k,
+        }
+    }
+
+    /// `d == h` FFN with orthogonal folded columns (`w_up = 0.5·I`):
+    /// hidden unit `j` listens to input coordinate `j` alone, so a row
+    /// along `e_j` is a pure direction-dependent outlier for unit `j`.
+    /// One-hot columns also quantize exactly (absmax maps to the top
+    /// code), making the proxy's decisions deterministic.
+    fn orthogonal_dense(d: usize) -> DenseFfn {
+        let mut eye = vec![0f32; d * d];
+        for i in 0..d {
+            eye[i * d + i] = 0.5;
+        }
+        let mut rng = Rng::new(123);
+        let w_down: Vec<f32> =
+            (0..d * d).map(|_| rng.normal() as f32 * 0.3).collect();
+        DenseFfn::new(
+            Arc::new(eye),
+            Arc::new(vec![0.1; d]),
+            Arc::new(w_down),
+            Arc::new(vec![0.0; d]),
+            d,
+            d,
+        )
+    }
+
+    #[test]
+    fn quantized_router_fixes_single_neuron_outliers() {
+        let d = 16;
+        let mut f = FoldedFfn::new(orthogonal_dense(d), &quant_cfg(0.75, 4));
+        assert_eq!(f.folded_units(), 12);
+        // row 0: z_1 = 20·0.5 + 0.1 = 10.1, out of [-6, 6) — every other
+        // unit sits at its bias; row 1: uniformly tiny, all in range.
+        let mut x = vec![0f32; 2 * d];
+        x[1] = 20.0;
+        for v in x[d..].iter_mut() {
+            *v = 0.01;
+        }
+        let mut scratch = Scratch::new();
+        let got = f.forward(None, &mut scratch, &x, 2);
+        let want = f.reference.forward(None, &mut scratch, &x, 2);
+        // both rows stay folded (the outlier is fixed per neuron, not
+        // routed away) and the fixed output tracks the exact reference
+        assert_eq!(f.telemetry.folded_rows, 2);
+        assert_eq!(f.telemetry.fallback_rows, 0);
+        assert_eq!(f.telemetry.fixed_neurons, 1, "exactly the outlier neuron");
+        let q = f.quant.as_ref().unwrap();
+        assert_eq!(q.stats.rows_fixed, 1);
+        assert_eq!(q.stats.rows_clean, 1);
+        assert_eq!(q.stats.fixed_out_of_range, 1);
+        assert_eq!(q.stats.fixed_in_range, 0);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                "elem {i}: fixed {g} vs reference {w}"
+            );
+        }
+        // the norm proxy would have missed this row entirely once its
+        // learned radius covers ‖x‖ — the quantized route catches it
+        // regardless of the row's norm.
+    }
+
+    #[test]
+    fn quantized_router_falls_back_beyond_capacity() {
+        let d = 16;
+        // top_k = 0: any flagged neuron forces the row onto the exact
+        // dense path.
+        let mut f = FoldedFfn::new(orthogonal_dense(d), &quant_cfg(0.75, 0));
+        let mut x = vec![0f32; d];
+        x[0] = 30.0;
+        let mut scratch = Scratch::new();
+        let got = f.forward(None, &mut scratch, &x, 1);
+        let want = f.reference.forward(None, &mut scratch, &x, 1);
+        assert_eq!(f.telemetry.fallback_rows, 1);
+        assert_eq!(f.telemetry.fixed_neurons, 0);
+        assert_eq!(f.quant.as_ref().unwrap().stats.rows_fallback, 1);
+        assert_eq!(got, want, "fallback rows are bitwise dense");
+    }
+
+    #[test]
+    fn calibrated_fold_uses_per_neuron_slopes() {
+        let mut rng = Rng::new(57);
+        let (d, h) = (8, 16);
+        let dense = random_dense(&mut rng, d, h, 0.3);
+        // Per-neuron tables: unit j gets range [-4-j*0.1, 4+j*0.1) and
+        // its own least-squares fit on that range.
+        let mut lo = Vec::new();
+        let mut hi = Vec::new();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for j in 0..h {
+            let (l, r) = (-4.0 - 0.1 * j as f32, 4.0 + 0.1 * j as f32);
+            let fit = Linearization::fit_gelu(l, r);
+            lo.push(l);
+            hi.push(r);
+            a.push(fit.slope);
+            b.push(fit.intercept);
+        }
+        let c = cfg(0.75);
+        let mut f =
+            FoldedFfn::with_calibration(dense, &c, &lo, &hi, &a, &b, None);
+        assert_eq!(f.range_table().units(), 12);
+        assert!((f.range_table().lo[3] + 4.3).abs() < 1e-6);
+        // in-range rows reproduce the per-neuron reference
+        let r = f.predictor.safe_radius();
+        assert!(r > 0.0);
+        let rows = 3;
+        let mut x = vec![0f32; rows * d];
+        for row in x.chunks_mut(d) {
+            for v in row.iter_mut() {
+                *v = rng.normal() as f32;
+            }
+            let n = norm(row);
+            for v in row.iter_mut() {
+                *v *= 0.9 * r / n;
+            }
+        }
+        let mut scratch = Scratch::new();
+        let got = f.forward(None, &mut scratch, &x, rows);
+        let want = f.reference.forward(None, &mut scratch, &x, rows);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-3 * w.abs().max(1.0), "{g} vs {w}");
+        }
+        assert_eq!(f.telemetry.fallback_rows, 0);
+    }
+
+    #[test]
+    fn routing_quality_scores_perfect_predictor_on_clean_rows() {
+        let mut rng = Rng::new(58);
+        let dense = random_dense(&mut rng, 8, 16, 0.3);
+        let f = FoldedFfn::new(dense, &cfg(0.75));
+        let r = f.predictor.safe_radius();
+        let rows = 4;
+        let mut x = vec![0f32; rows * 8];
+        for row in x.chunks_mut(8) {
+            for v in row.iter_mut() {
+                *v = rng.normal() as f32;
+            }
+            let n = norm(row);
+            for v in row.iter_mut() {
+                *v *= 0.5 * r / n;
+            }
+        }
+        let mut scratch = Scratch::new();
+        let q = f.routing_quality(&mut scratch, &x, rows);
+        // nothing is truly out of range and nothing is flagged
+        assert_eq!(q.true_oor_rate, 0.0);
+        assert_eq!(q.flag_rate, 0.0);
+        assert_eq!(q.precision, 0.0);
+        assert_eq!(q.recall, 0.0);
     }
 }

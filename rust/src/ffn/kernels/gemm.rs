@@ -431,9 +431,10 @@ fn sparse_rows_parallel(
 // ---------------------------------------------------------------------------
 
 /// The pre-packing scalar kernel (row-times-row, bias pre-initialized,
-/// per-element `xv != 0.0` skip branch), verbatim from the old
-/// `linalg::matmul_serial`. Kept as the property-test reference and the
-/// bench baseline; not used on any hot path.
+/// per-element `xv != 0.0` skip branch), verbatim from the PR-2
+/// `matmul_serial` this module replaced in PR 3. Kept as the
+/// property-test reference and the bench baseline; not used on any hot
+/// path.
 pub fn matmul_naive(
     x: &[f32],
     rows: usize,

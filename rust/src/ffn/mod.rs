@@ -5,11 +5,16 @@
 //!   epilogues, deterministic parallel tile schedule, the explicit
 //!   row-sparse variant, and the [`kernels::Scratch`] zero-alloc arena
 //! * [`dense`]     — the dense FFN with optional per-unit linearized
-//!   activation (reference + fallback path)
+//!   activation ([`dense::RangeTable`]: uniform or per-neuron
+//!   calibrated; reference + fallback path)
 //! * [`folded`]    — the constant-folded `W' = W_down·A·W_up` map with
 //!   per-range bias and kept-unit columns
-//! * [`predictor`] — the online outlier predictor that routes each batch
-//!   row to the folded or the dense path
+//! * [`predictor`] — the online per-row norm-proxy outlier predictor
+//! * [`quant`]     — the paper's k-bit quantized `W_up` proxy: per-neuron
+//!   in/out decisions + top-K result fixing
+//!
+//! See `rust/src/ffn/README.md` for the fold math, the two predictors
+//! and how to read the routing statistics.
 //!
 //! [`FfnBackend`] is the per-layer executor
 //! [`crate::coordinator::model::NativeModel`] dispatches through; its
@@ -19,11 +24,17 @@ pub mod dense;
 pub mod folded;
 pub mod kernels;
 pub mod predictor;
+pub mod quant;
 
-pub use dense::{DenseFfn, Linearization};
-pub use folded::FoldedFfn;
+pub use dense::{DenseFfn, Linearization, RangeTable};
+pub use folded::{
+    compare_predictors, folded_units_for, FoldedFfn, PredictorComparison,
+};
 pub use kernels::{PackedMatrix, Scratch};
 pub use predictor::{OutlierPredictor, PredictorStats, Route};
+pub use quant::{
+    QuantRoute, QuantRouterStats, QuantizedProxy, QuantizedRouter, RoutingQuality,
+};
 
 use crate::util::threadpool::ThreadPool;
 
@@ -34,6 +45,11 @@ pub struct FfnTelemetry {
     pub folded_rows: u64,
     /// Rows routed to the dense fallback path.
     pub fallback_rows: u64,
+    /// (row, neuron) pairs actually patched by the quantized router's
+    /// top-K result fixing (false flags are exact no-ops and counted
+    /// only in `QuantRouterStats::fixed_in_range`; 0 under the norm
+    /// predictor).
+    pub fixed_neurons: u64,
 }
 
 impl FfnTelemetry {
@@ -55,6 +71,7 @@ impl FfnTelemetry {
     pub fn accumulate(&mut self, other: FfnTelemetry) {
         self.folded_rows += other.folded_rows;
         self.fallback_rows += other.fallback_rows;
+        self.fixed_neurons += other.fixed_neurons;
     }
 }
 
@@ -108,6 +125,7 @@ mod tests {
         let step = FfnTelemetry {
             folded_rows: 3,
             fallback_rows: 1,
+            fixed_neurons: 2,
         };
         t.accumulate(step);
         assert_eq!(t.total_rows(), 4);

@@ -21,7 +21,12 @@
 //! The proxy is one-dimensional, so it can misroute direction-dependent
 //! outliers; `threshold` trades that risk against fallback rate
 //! (`< 1.0` never folds beyond direct observations, `> 1.0`
-//! extrapolates).
+//! extrapolates). The paper's full predictor — per-neuron decisions
+//! from a k-bit quantized `W_up` proxy with top-K result fixing — lives
+//! in [`super::quant`] and is selected with
+//! [`PredictorKind::Quantized`](crate::config::PredictorKind);
+//! `bench-decode` reports both predictors' precision/recall against
+//! ground-truth range violations.
 //!
 //! The resulting batch split executes in place: [`super::FoldedFfn`]
 //! turns the per-row decisions into folded/fallback row masks for the

@@ -1,0 +1,597 @@
+//! k-bit quantized `W_up` proxy: the paper's out-of-range predictor
+//! (§5.3), executed natively.
+//!
+//! The fold is valid per *neuron*: unit `j` may leave its calibrated
+//! range `[lo_j, hi_j)` on a row whose other units are all fine. The 1-D
+//! norm proxy ([`super::OutlierPredictor`]) cannot see that — it routes
+//! whole rows by `‖x‖` and misses direction-dependent outliers. The
+//! paper instead keeps a heavily quantized copy of the folded columns of
+//! `W_up` and answers the in/out question per neuron:
+//!
+//! ```text
+//! ẑ = x·Ŵ_up_F + b_up_F          (k-bit GEMM, ~bits/32 of the f32 cost
+//!                                  in weight traffic)
+//! flagged(i, j) = ẑ[i][j] ∉ [lo_j, hi_j)
+//! ```
+//!
+//! Routing then composes with the existing per-row fallback machinery
+//! ([`super::FoldedFfn`]): a row with no flagged neurons folds as-is; a
+//! row with `1..=top_k` flagged neurons folds **plus top-K result
+//! fixing** (only those neurons recompute their true pre-activation and
+//! patch the folded output — two `d`-dots per fix); a row with more
+//! flagged neurons than the fixing capacity falls back to the exact
+//! dense path wholesale, so correctness degrades to the same bitwise
+//! fallback the norm router uses.
+//!
+//! The quantized matrix reuses the [`kernels`](super::kernels)
+//! packed-panel layout: codes are `i8` in [`NR`]-wide column panels
+//! (streamed exactly like [`PackedMatrix`](super::kernels::PackedMatrix)
+//! panels), with one f32 scale per (reduction-group, column) stored
+//! panel-major alongside. Quantization is symmetric per (group, column)
+//! — the same scheme as `python/compile/tardis/predictor.py`, so
+//! manifest-exported codes and scales load verbatim.
+
+use super::dense::{DenseFfn, RangeTable};
+use super::kernels::norm;
+use super::kernels::pack::NR;
+use crate::util::rng::Rng;
+
+/// Route of one batch row under the quantized per-neuron predictor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantRoute {
+    /// No neuron flagged: the folded map alone.
+    Folded,
+    /// `1..=top_k` neurons flagged: folded map + per-neuron fixing.
+    Fixed(usize),
+    /// More than `top_k` neurons flagged: exact dense fallback.
+    Fallback,
+}
+
+/// Cumulative counters of the quantized router.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QuantRouterStats {
+    /// Rows with no flagged neuron (pure folded path).
+    pub rows_clean: u64,
+    /// Rows folded with per-neuron fixing.
+    pub rows_fixed: u64,
+    /// Rows routed to the dense fallback (flags exceeded `top_k`).
+    pub rows_fallback: u64,
+    /// Total (row, neuron) pairs the proxy flagged.
+    pub neurons_flagged: u64,
+    /// Fixes applied whose true pre-activation really was out of range.
+    pub fixed_out_of_range: u64,
+    /// Fixes applied that turned out in range (false flags; the fix is
+    /// then an exact no-op).
+    pub fixed_in_range: u64,
+}
+
+/// Routing quality of a predictor against ground-truth range
+/// violations, over one evaluation workload. "Flagged" means the
+/// (row, neuron) pair would execute on the dense path — via per-neuron
+/// fixing or a whole-row fallback.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RoutingQuality {
+    /// Of the flagged pairs, the fraction truly out of range.
+    pub precision: f64,
+    /// Of the truly out-of-range pairs, the fraction flagged.
+    pub recall: f64,
+    /// Fraction of all (row, neuron) pairs flagged.
+    pub flag_rate: f64,
+    /// Ground-truth out-of-range fraction of the workload.
+    pub true_oor_rate: f64,
+}
+
+impl RoutingQuality {
+    /// Build from raw counts; empty denominators follow the python
+    /// evaluator (`max(count, 1)`), so a flag-free in-range workload
+    /// scores 0/0 as zero rather than NaN.
+    pub fn from_counts(tp: u64, flagged: u64, truly_oor: u64, total: u64) -> RoutingQuality {
+        RoutingQuality {
+            precision: tp as f64 / flagged.max(1) as f64,
+            recall: tp as f64 / truly_oor.max(1) as f64,
+            flag_rate: flagged as f64 / total.max(1) as f64,
+            true_oor_rate: truly_oor as f64 / total.max(1) as f64,
+        }
+    }
+}
+
+/// A `[k, m]` weight matrix quantized to `bits` with one f32 scale per
+/// (`group` reduction rows, column), packed into [`NR`]-wide column
+/// panels like [`PackedMatrix`](super::kernels::PackedMatrix).
+///
+/// Panel `p` holds columns `p*NR..p*NR+NR`: `k` rows of `NR` `i8` codes
+/// (zero-padded past column `m`), plus `n_groups` rows of `NR` f32
+/// scales. `w[kk][col] ≈ codes[kk][col] · scales[kk/group][col]`.
+#[derive(Debug, Clone)]
+pub struct QuantizedProxy {
+    k: usize,
+    m: usize,
+    group: usize,
+    bits: u8,
+    /// `n_panels * k * NR` codes, panel-major.
+    codes: Vec<i8>,
+    /// `n_panels * n_groups * NR` scales, panel-major.
+    scales: Vec<f32>,
+}
+
+impl QuantizedProxy {
+    /// Symmetric per-(group, column) quantization of the first `m`
+    /// columns of row-major `w[k, m_total]` (the folded prefix of
+    /// `W_up`). `bits` must be in `2..=8`; the last group may be short
+    /// when `group` does not divide `k`.
+    pub fn quantize(
+        w: &[f32],
+        k: usize,
+        m_total: usize,
+        m: usize,
+        bits: u8,
+        group: usize,
+    ) -> QuantizedProxy {
+        assert!((2..=8).contains(&bits), "predictor bits {bits} not in 2..=8");
+        assert!(group >= 1, "predictor group must be >= 1");
+        assert!(m <= m_total && w.len() == k * m_total);
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let n_groups = k.div_ceil(group);
+        let n_panels = m.div_ceil(NR);
+        let mut codes = vec![0i8; n_panels * k * NR];
+        let mut scales = vec![0f32; n_panels * n_groups * NR];
+        for p in 0..n_panels {
+            let col0 = p * NR;
+            let ncols = (m - col0).min(NR);
+            let cpanel = &mut codes[p * k * NR..(p + 1) * k * NR];
+            let spanel = &mut scales[p * n_groups * NR..(p + 1) * n_groups * NR];
+            for g in 0..n_groups {
+                let k0 = g * group;
+                let k1 = (k0 + group).min(k);
+                for j in 0..ncols {
+                    let col = col0 + j;
+                    let mut absmax = 0f32;
+                    for kk in k0..k1 {
+                        absmax = absmax.max(w[kk * m_total + col].abs());
+                    }
+                    let scale = (absmax / qmax).max(1e-12);
+                    spanel[g * NR + j] = scale;
+                    for kk in k0..k1 {
+                        let q = (w[kk * m_total + col] / scale)
+                            .round_ties_even()
+                            .clamp(-qmax, qmax);
+                        cpanel[kk * NR + j] = q as i8;
+                    }
+                }
+            }
+        }
+        QuantizedProxy { k, m, group, bits, codes, scales }
+    }
+
+    /// Pack pre-quantized codes and scales (e.g. from a manifest): codes
+    /// row-major `[k, m_total]` i8, scales row-major
+    /// `[ceil(k/group), m_total]` f32; the first `m` columns are kept.
+    pub fn from_parts(
+        codes: &[i8],
+        scales: &[f32],
+        k: usize,
+        m_total: usize,
+        m: usize,
+        bits: u8,
+        group: usize,
+    ) -> QuantizedProxy {
+        assert!((2..=8).contains(&bits), "predictor bits {bits} not in 2..=8");
+        assert!(group >= 1 && m <= m_total);
+        let n_groups = k.div_ceil(group);
+        assert_eq!(codes.len(), k * m_total, "proxy codes shape mismatch");
+        assert_eq!(scales.len(), n_groups * m_total, "proxy scales shape mismatch");
+        // Imported codes must fit the declared width — catches a
+        // `--pred-bits` override that disagrees with the bit width the
+        // codes were actually exported at (which would otherwise only
+        // skew the size accounting, silently).
+        let qmax_i8 = ((1i32 << (bits - 1)) - 1) as i8;
+        if let Some(&c) = codes.iter().find(|&&c| c < -qmax_i8 || c > qmax_i8) {
+            panic!("proxy code {c} does not fit the declared {bits}-bit width");
+        }
+        let n_panels = m.div_ceil(NR);
+        let mut pcodes = vec![0i8; n_panels * k * NR];
+        let mut pscales = vec![0f32; n_panels * n_groups * NR];
+        for p in 0..n_panels {
+            let col0 = p * NR;
+            let ncols = (m - col0).min(NR);
+            let cpanel = &mut pcodes[p * k * NR..(p + 1) * k * NR];
+            for kk in 0..k {
+                for j in 0..ncols {
+                    cpanel[kk * NR + j] = codes[kk * m_total + col0 + j];
+                }
+            }
+            let spanel = &mut pscales[p * n_groups * NR..(p + 1) * n_groups * NR];
+            for g in 0..n_groups {
+                for j in 0..ncols {
+                    spanel[g * NR + j] = scales[g * m_total + col0 + j];
+                }
+            }
+        }
+        QuantizedProxy { k, m, group, bits, codes: pcodes, scales: pscales }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    /// Approximate pre-activations: `out[r][j] = Σ_g s[g][j] · Σ_{kk∈g}
+    /// x[r][kk]·codes[kk][j] + bias[j]`, for `j < m`.
+    ///
+    /// Group-blocked accumulation: each group's integer-code partial sum
+    /// accumulates in f32, then one multiply by the group's scale — the
+    /// deployed math of a grouped low-bit GEMM.
+    pub fn forward_into(&self, x: &[f32], rows: usize, bias: &[f32], out: &mut [f32]) {
+        let (k, m, group) = (self.k, self.m, self.group);
+        debug_assert_eq!(x.len(), rows * k);
+        debug_assert!(bias.len() >= m);
+        debug_assert_eq!(out.len(), rows * m);
+        let n_groups = k.div_ceil(group);
+        let n_panels = m.div_ceil(NR);
+        for r in 0..rows {
+            let xr = &x[r * k..(r + 1) * k];
+            for p in 0..n_panels {
+                let col0 = p * NR;
+                let ncols = (m - col0).min(NR);
+                let cpanel = &self.codes[p * k * NR..(p + 1) * k * NR];
+                let spanel = &self.scales[p * n_groups * NR..(p + 1) * n_groups * NR];
+                let mut acc = [0f32; NR];
+                for g in 0..n_groups {
+                    let k0 = g * group;
+                    let k1 = (k0 + group).min(k);
+                    let mut gacc = [0f32; NR];
+                    for (kk, prow) in cpanel
+                        .chunks_exact(NR)
+                        .enumerate()
+                        .take(k1)
+                        .skip(k0)
+                    {
+                        let v = xr[kk];
+                        for (a, &c) in gacc.iter_mut().zip(prow) {
+                            *a += v * c as f32;
+                        }
+                    }
+                    let srow = &spanel[g * NR..(g + 1) * NR];
+                    for ((a, &ga), &s) in acc.iter_mut().zip(gacc.iter()).zip(srow) {
+                        *a += ga * s;
+                    }
+                }
+                let orow = &mut out[r * m + col0..r * m + col0 + ncols];
+                let brow = &bias[col0..col0 + ncols];
+                for ((o, &a), &b) in orow.iter_mut().zip(acc.iter()).zip(brow) {
+                    *o = a + b;
+                }
+            }
+        }
+    }
+
+    /// Reconstructed row-major `[k, m]` f32 matrix (tests, error bounds).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let (k, m, group) = (self.k, self.m, self.group);
+        let n_groups = k.div_ceil(group);
+        let mut w = vec![0f32; k * m];
+        for p in 0..m.div_ceil(NR) {
+            let col0 = p * NR;
+            let ncols = (m - col0).min(NR);
+            let cpanel = &self.codes[p * k * NR..(p + 1) * k * NR];
+            let spanel = &self.scales[p * n_groups * NR..(p + 1) * n_groups * NR];
+            for kk in 0..k {
+                let g = kk / group;
+                for j in 0..ncols {
+                    w[kk * m + col0 + j] =
+                        cpanel[kk * NR + j] as f32 * spanel[g * NR + j];
+                }
+            }
+        }
+        w
+    }
+
+    /// Resident bytes of the packed representation (padding included).
+    pub fn resident_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Deployed size in f32-parameter equivalents (`bits` per code plus
+    /// one f16 scale per (group, column) — the python pipeline's §7.1
+    /// accounting).
+    pub fn size_params_f32(&self) -> f64 {
+        let n_groups = self.k.div_ceil(self.group);
+        (self.k * self.m) as f64 * self.bits as f64 / 32.0
+            + (n_groups * self.m) as f64 / 2.0
+    }
+}
+
+/// Per-row router over a [`QuantizedProxy`]: flags neurons whose
+/// approximate pre-activation leaves its calibrated range, and decides
+/// fold / fold+fix / fallback under the `top_k` fixing capacity.
+#[derive(Debug, Clone)]
+pub struct QuantizedRouter {
+    pub proxy: QuantizedProxy,
+    pub top_k: usize,
+    pub stats: QuantRouterStats,
+}
+
+impl QuantizedRouter {
+    pub fn new(proxy: QuantizedProxy, top_k: usize) -> QuantizedRouter {
+        QuantizedRouter { proxy, top_k, stats: QuantRouterStats::default() }
+    }
+
+    /// Route one row from its approximate pre-activations. Flagged
+    /// neurons are appended to `fixes` as `(row, neuron)` pairs when the
+    /// row stays folded; on fallback nothing is appended (the dense path
+    /// recomputes every neuron exactly).
+    pub fn decide_row(
+        &mut self,
+        z_hat: &[f32],
+        table: &RangeTable,
+        row: u32,
+        fixes: &mut Vec<(u32, u32)>,
+    ) -> QuantRoute {
+        debug_assert_eq!(z_hat.len(), table.units());
+        let mark = fixes.len();
+        let mut flagged = 0usize;
+        for (j, &z) in z_hat.iter().enumerate() {
+            if !table.in_range(j, z) {
+                flagged += 1;
+                if flagged <= self.top_k {
+                    fixes.push((row, j as u32));
+                }
+            }
+        }
+        self.stats.neurons_flagged += flagged as u64;
+        if flagged == 0 {
+            self.stats.rows_clean += 1;
+            QuantRoute::Folded
+        } else if flagged <= self.top_k {
+            self.stats.rows_fixed += 1;
+            QuantRoute::Fixed(flagged)
+        } else {
+            fixes.truncate(mark);
+            self.stats.rows_fallback += 1;
+            QuantRoute::Fallback
+        }
+    }
+
+    /// Non-mutating variant of [`Self::decide_row`] used by the routing
+    /// quality evaluator: returns the flagged neuron count (no fixes
+    /// list, no stats).
+    pub fn count_flags(&self, z_hat: &[f32], table: &RangeTable) -> usize {
+        z_hat
+            .iter()
+            .enumerate()
+            .filter(|&(j, &z)| !table.in_range(j, z))
+            .count()
+    }
+}
+
+/// Seeded evaluation workload with injected **direction-dependent
+/// outliers** — the failure mode that separates the two predictors.
+///
+/// All rows share the same norm `norm_target`, so a per-row norm gate
+/// whose learned radius covers `norm_target` routes every one of them to
+/// the folded path. Most rows point in random directions (at a moderate
+/// multiple of the provable radius their pre-activations stay in range
+/// with overwhelming probability); every `outlier_every`-th row is
+/// aligned with the most fragile folded `W_up` column (the smallest
+/// `slack_j/‖col_j‖`, signed toward its tighter range edge), which
+/// pushes exactly that neuron's pre-activation out of its calibrated
+/// range. Only a direction-aware (per-neuron) predictor can tell the
+/// two kinds of row apart.
+///
+/// Returns the `[rows, d_model]` batch; ground truth is computed
+/// exactly by the evaluator, so occasional extra violations in the
+/// random rows are harmless.
+pub fn synthetic_outlier_workload(
+    rng: &mut Rng,
+    dense: &DenseFfn,
+    table: &RangeTable,
+    norm_target: f32,
+    rows: usize,
+    outlier_every: usize,
+) -> Vec<f32> {
+    let (d, h) = (dense.d_model, dense.d_ff);
+    let nf = table.units();
+    assert!(nf >= 1 && outlier_every >= 2);
+    // Most fragile folded direction: argmin over (column, sign) of
+    // slack/‖col‖.
+    let mut best: Option<(usize, f32, f32)> = None; // (col, sign, ratio)
+    for j in 0..nf {
+        let col_norm = (0..d)
+            .map(|l| {
+                let w = dense.w_up[l * h + j] as f64;
+                w * w
+            })
+            .sum::<f64>()
+            .sqrt() as f32;
+        if col_norm <= 1e-9 {
+            continue;
+        }
+        let up = (table.hi[j] - dense.b_up[j]) / col_norm;
+        let dn = (dense.b_up[j] - table.lo[j]) / col_norm;
+        for (slack, sign) in [(up, 1.0f32), (dn, -1.0f32)] {
+            let better = match best {
+                None => slack > 0.0,
+                Some((_, _, r)) => slack > 0.0 && slack < r,
+            };
+            if better {
+                best = Some((j, sign, slack));
+            }
+        }
+    }
+    let (jstar, sign, _) = best.expect("no foldable direction");
+    let mut dir: Vec<f32> = (0..d).map(|l| dense.w_up[l * h + jstar]).collect();
+    let dlen = norm(&dir).max(1e-9);
+    for v in dir.iter_mut() {
+        *v *= sign / dlen;
+    }
+
+    let mut x = vec![0f32; rows * d];
+    for (i, row) in x.chunks_mut(d).enumerate().take(rows) {
+        if (i + 1) % outlier_every == 0 {
+            for (v, &dv) in row.iter_mut().zip(&dir) {
+                *v = norm_target * dv;
+            }
+        } else {
+            for v in row.iter_mut() {
+                *v = rng.normal() as f32;
+            }
+            let n = norm(row).max(1e-9);
+            for v in row.iter_mut() {
+                *v *= norm_target / n;
+            }
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_w(rng: &mut Rng, k: usize, m: usize) -> Vec<f32> {
+        (0..k * m).map(|_| rng.normal() as f32 * 0.5).collect()
+    }
+
+    #[test]
+    fn quantize_bounds_codes_and_error() {
+        let mut rng = Rng::new(1);
+        let (k, m) = (24, NR + 7); // two panels, short group tail (24 % 16 = 8)
+        let w = random_w(&mut rng, k, m);
+        for bits in [2u8, 4, 8] {
+            let q = QuantizedProxy::quantize(&w, k, m, m, bits, 16);
+            let qmax = (1i32 << (bits - 1)) - 1;
+            let deq = q.dequantize();
+            assert_eq!(deq.len(), k * m);
+            // per-element error is bounded by half a quantization step
+            // = scale/2 <= absmax/(2*qmax) <= max|w| / (2*qmax)
+            let wmax = w.iter().fold(0f32, |a, &v| a.max(v.abs()));
+            let bound = wmax / (2.0 * qmax as f32) + 1e-6;
+            for (a, b) in w.iter().zip(&deq) {
+                assert!((a - b).abs() <= bound, "bits={bits}: {a} vs {b}");
+            }
+            assert!(q.size_params_f32() < (k * m) as f64);
+        }
+        // more bits => strictly tighter reconstruction
+        let e = |bits| {
+            let q = QuantizedProxy::quantize(&w, k, m, m, bits, 16);
+            q.dequantize()
+                .iter()
+                .zip(&w)
+                .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                .sum::<f64>()
+        };
+        assert!(e(8) < e(4) && e(4) < e(2));
+    }
+
+    #[test]
+    fn forward_matches_dequantized_matmul() {
+        let mut rng = Rng::new(2);
+        let (k, m, rows) = (20, NR + 3, 3);
+        let w = random_w(&mut rng, k, m);
+        let q = QuantizedProxy::quantize(&w, k, m, m, 4, 8);
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+        let bias: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+        let mut got = vec![0f32; rows * m];
+        q.forward_into(&x, rows, &bias, &mut got);
+        // must match a plain matmul against the dequantized matrix (the
+        // group-blocked accumulation only reassociates the sum)
+        let deq = q.dequantize();
+        for r in 0..rows {
+            for j in 0..m {
+                let want: f32 = (0..k)
+                    .map(|kk| x[r * k + kk] * deq[kk * m + j])
+                    .sum::<f32>()
+                    + bias[j];
+                let gval = got[r * m + j];
+                assert!(
+                    (gval - want).abs() <= 1e-3 * want.abs().max(1.0),
+                    "r={r} j={j}: {gval} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_parts_roundtrips_packing() {
+        let mut rng = Rng::new(3);
+        let (k, m_total, m, group) = (16, NR + 5, NR + 2, 4);
+        let w = random_w(&mut rng, k, m_total);
+        let q = QuantizedProxy::quantize(&w, k, m_total, m_total, 4, group);
+        // recover row-major codes/scales from the full quantization,
+        // then re-pack only the first m columns via from_parts
+        let n_groups = k.div_ceil(group);
+        let deq = q.dequantize();
+        let mut codes = vec![0i8; k * m_total];
+        let mut scales = vec![0f32; n_groups * m_total];
+        for p in 0..m_total.div_ceil(NR) {
+            let col0 = p * NR;
+            let ncols = (m_total - col0).min(NR);
+            for kk in 0..k {
+                for j in 0..ncols {
+                    codes[kk * m_total + col0 + j] = q.codes[p * k * NR + kk * NR + j];
+                }
+            }
+            for g in 0..n_groups {
+                for j in 0..ncols {
+                    scales[g * m_total + col0 + j] =
+                        q.scales[p * n_groups * NR + g * NR + j];
+                }
+            }
+        }
+        let q2 = QuantizedProxy::from_parts(&codes, &scales, k, m_total, m, 4, group);
+        assert_eq!(q2.m(), m);
+        let deq2 = q2.dequantize();
+        for kk in 0..k {
+            for j in 0..m {
+                assert_eq!(deq2[kk * m + j], deq[kk * m_total + j], "({kk},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn router_routes_by_flag_count() {
+        // 3 units, identity-ish proxy: z_hat passed directly.
+        let table = RangeTable::from_calibration(
+            &[-1.0, -1.0, -1.0],
+            &[1.0, 1.0, 1.0],
+            &[1.0; 3],
+            &[0.0; 3],
+        );
+        let w = vec![0f32; 2 * 3];
+        let proxy = QuantizedProxy::quantize(&w, 2, 3, 3, 4, 2);
+        let mut router = QuantizedRouter::new(proxy, 1);
+        let mut fixes = Vec::new();
+        assert_eq!(
+            router.decide_row(&[0.0, 0.5, -0.5], &table, 0, &mut fixes),
+            QuantRoute::Folded
+        );
+        assert!(fixes.is_empty());
+        assert_eq!(
+            router.decide_row(&[2.0, 0.5, -0.5], &table, 1, &mut fixes),
+            QuantRoute::Fixed(1)
+        );
+        assert_eq!(fixes, vec![(1, 0)]);
+        // two flags exceed top_k=1: fallback, fixes list unchanged
+        assert_eq!(
+            router.decide_row(&[2.0, 0.5, 5.0], &table, 2, &mut fixes),
+            QuantRoute::Fallback
+        );
+        assert_eq!(fixes, vec![(1, 0)]);
+        assert_eq!(router.stats.rows_clean, 1);
+        assert_eq!(router.stats.rows_fixed, 1);
+        assert_eq!(router.stats.rows_fallback, 1);
+        assert_eq!(router.stats.neurons_flagged, 3);
+        assert_eq!(router.count_flags(&[2.0, 0.5, 5.0], &table), 2);
+    }
+}

@@ -21,7 +21,8 @@
 use anyhow::{anyhow, Result};
 
 use tardis::config::{
-    native_ffn_mode, BackendKind, FfnMode, NativeModelConfig,
+    native_ffn_mode, BackendKind, FfnMode, Manifest, NativeModelConfig,
+    PredictorKind, TardisFfnConfig,
 };
 use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
 use tardis::coordinator::model::{MockModel, NativeModel, StepModel};
@@ -29,12 +30,12 @@ use tardis::coordinator::request::SamplingParams;
 use tardis::coordinator::router::Router;
 use tardis::coordinator::scheduler::PolicyKind;
 use tardis::costmodel;
+use tardis::ffn::RoutingQuality;
+use tardis::runtime::weights::NativeWeights;
 use tardis::server::protocol::{decode_tokens, encode_text};
 use tardis::util::cli::Args;
 use tardis::util::stats::Samples;
 
-#[cfg(feature = "pjrt")]
-use tardis::config::Manifest;
 #[cfg(feature = "pjrt")]
 use tardis::coordinator::model::PjrtModel;
 #[cfg(feature = "pjrt")]
@@ -46,14 +47,24 @@ fn usage() -> ! {
   common flags:
     --backend KIND         native|mock|pjrt (default native; pjrt needs
                            a build with --features pjrt)
-    --artifacts DIR        artifacts directory for pjrt (default:
-                           artifacts or $TARDIS_ARTIFACTS)
+    --artifacts DIR        artifacts directory (default: artifacts or
+                           $TARDIS_ARTIFACTS). pjrt: HLO executables.
+                           native generate/serve: load weights and
+                           per-neuron calibrated ranges from the
+                           manifest instead of seeded synthesis
     --variant NAME         model variant (default: tardis80; native
-                           accepts dense|tardis<PCT>|tardis-ref<PCT>)
+                           accepts dense|tardis<PCT>|tardis-ref<PCT>,
+                           or any manifest variant with --artifacts)
   native backend flags:
     --slots N              KV slots / decode batch (default 4)
     --max-seq N            context length (default 256)
     --threads N            matmul worker threads (default 0 = serial)
+    --predictor KIND       outlier predictor: norm|quantized (default:
+                           norm, or the manifest's choice)
+    --pred-bits N          quantized-proxy bit width (2..=8, default 4)
+    --fix-k N              top-K result-fixing capacity per row
+                           (default 8); rows with more predicted
+                           out-of-range neurons fall back densely
   scheduling flags (serve / serve-mock / generate):
     --policy NAME          admission policy: fifo|spf|priority (default fifo)
     --max-prefills N       concurrent prefill jobs (default 2)
@@ -77,8 +88,11 @@ fn usage() -> ! {
     --assert-gflops G      exit non-zero unless the packed single-thread
                            GEMM kernel reaches G GFLOP/s (generous floor,
                            catches order-of-magnitude regressions)
-  bench-decode also writes BENCH_native_ffn.json (machine-readable per-PR
-  perf record; override the path with TARDIS_BENCH_JSON)"
+  both also print routing precision/recall of the norm and quantized
+  predictors against ground-truth range violations on a seeded
+  direction-dependent-outlier workload; bench-decode writes everything
+  to BENCH_native_ffn.json (machine-readable per-PR perf record;
+  override the path with TARDIS_BENCH_JSON)"
     );
     std::process::exit(2);
 }
@@ -123,6 +137,77 @@ fn native_mode(variant: &str) -> Result<FfnMode> {
              (expected dense, tardis<PCT> or tardis-ref<PCT>)"
         )
     })
+}
+
+/// CLI overrides for the TARDIS predictor knobs.
+fn tardis_overrides(args: &Args, t: TardisFfnConfig) -> Result<TardisFfnConfig> {
+    let mut t = t;
+    if let Some(s) = args.opt_str("predictor") {
+        t.predictor = PredictorKind::parse(&s)
+            .ok_or_else(|| anyhow!("unknown predictor {s:?} (norm|quantized)"))?;
+    }
+    let bits = args.usize("pred-bits", t.predictor_bits as usize)?;
+    anyhow::ensure!(
+        (2..=8).contains(&bits),
+        "--pred-bits expects a width in 2..=8, got {bits}"
+    );
+    t.predictor_bits = bits as u8;
+    t.top_k = args.usize("fix-k", t.top_k)?;
+    Ok(t)
+}
+
+fn mode_with_overrides(args: &Args, mode: FfnMode) -> Result<FfnMode> {
+    Ok(match mode {
+        FfnMode::Dense => FfnMode::Dense,
+        FfnMode::Tardis(t) => FfnMode::Tardis(tardis_overrides(args, t)?),
+        FfnMode::TardisReference(t) => {
+            FfnMode::TardisReference(tardis_overrides(args, t)?)
+        }
+    })
+}
+
+fn manifest_path(args: &Args) -> std::path::PathBuf {
+    args.opt_str("artifacts")
+        .map(|d| std::path::PathBuf::from(d).join("manifest.json"))
+        .unwrap_or_else(Manifest::default_path)
+}
+
+/// Build a native model from a manifest directory: the shape comes from
+/// the manifest's model block, the weights (and, when exported, the
+/// per-neuron calibrated ranges + quantized predictor) from the
+/// variant's blob — nothing is synthesized.
+fn native_model_from_artifacts(
+    args: &Args,
+    variant: &str,
+) -> Result<(NativeModel, String)> {
+    let path = manifest_path(args);
+    let manifest = Manifest::load(&path)?;
+    let spec = manifest.variant(variant)?;
+    let cfg = NativeModelConfig {
+        vocab: manifest.model.vocab,
+        d_model: manifest.model.d_model,
+        n_layers: manifest.model.n_layers,
+        n_heads: manifest.model.n_heads,
+        d_ff: manifest.model.d_ff,
+        max_seq: args.usize("max-seq", manifest.model.max_seq)?,
+        batch: args.usize("slots", manifest.batch)?,
+        prefill_buckets: manifest.prefill_buckets.clone(),
+        seed: 0,
+        threads: args.usize("threads", 0)?,
+    };
+    let mode = match spec.tardis {
+        Some(t) => FfnMode::Tardis(tardis_overrides(args, t)?),
+        None => FfnMode::Dense,
+    };
+    let weights = NativeWeights::load(&manifest.dir, spec, &cfg)?;
+    let calibrated = weights.layers.iter().filter(|l| l.calib.is_some()).count();
+    let label = format!(
+        "manifest {} ({} of {} layers per-neuron calibrated)",
+        path.display(),
+        calibrated,
+        cfg.n_layers
+    );
+    Ok((NativeModel::with_weights(cfg, weights, &mode), label))
 }
 
 fn sampling_params(args: &Args) -> Result<SamplingParams> {
@@ -218,17 +303,22 @@ fn cmd_serve(args: &Args, forced: Option<BackendKind>) -> Result<()> {
             run_server(replicas, args, "serve")
         }
         BackendKind::Native => {
+            let from_manifest = args.opt_str("artifacts").is_some();
             let model_cfg = native_model_cfg(args)?;
             let names = args.list("variants", &["dense", "tardis80"]);
             let mut replicas = Vec::new();
             for name in &names {
-                let mode = native_mode(name)?;
+                let model = if from_manifest {
+                    let (model, label) = native_model_from_artifacts(args, name)?;
+                    eprintln!("[serve] loading {name} from {label}");
+                    model
+                } else {
+                    let mode = mode_with_overrides(args, native_mode(name)?)?;
+                    NativeModel::new(model_cfg.clone(), &mode)
+                };
                 replicas.push((
                     name.clone(),
-                    InferenceEngine::new(
-                        NativeModel::new(model_cfg.clone(), &mode),
-                        cfg.clone(),
-                    ),
+                    InferenceEngine::new(model, cfg.clone()),
                 ));
             }
             eprintln!("[serve] backend=native policy={} replicas={names:?}",
@@ -286,9 +376,15 @@ fn cmd_generate(args: &Args) -> Result<()> {
 
 fn cmd_generate_native(args: &Args) -> Result<()> {
     let variant = args.str("variant", "tardis80");
-    let mode = native_mode(&variant)?;
-    let model = NativeModel::new(native_model_cfg(args)?, &mode);
-    eprintln!("[generate] backend=native variant={variant} (seeded weights)");
+    let model = if args.opt_str("artifacts").is_some() {
+        let (model, label) = native_model_from_artifacts(args, &variant)?;
+        eprintln!("[generate] backend=native variant={variant} ({label})");
+        model
+    } else {
+        let mode = mode_with_overrides(args, native_mode(&variant)?)?;
+        eprintln!("[generate] backend=native variant={variant} (seeded weights)");
+        NativeModel::new(native_model_cfg(args)?, &mode)
+    };
     let mut ie = InferenceEngine::new(model, engine_config(args)?);
     let prompt = args.str("prompt", "the quick ");
     let params = sampling_params(args)?;
@@ -357,10 +453,16 @@ struct NativeDecodeReport {
     name: String,
     /// FFN mode name ("dense" | "tardis" | "tardis_reference").
     mode: &'static str,
+    /// Predictor routing the timed run (tardis variants only).
+    predictor: Option<PredictorKind>,
     mean_ms: f64,
     p50_ms: f64,
     fallback_rate: Option<f64>,
+    fixed_neurons: Option<u64>,
     compression_ratio: Option<f64>,
+    /// Routing quality of (norm, quantized) on the shared seeded
+    /// outlier workload at this variant's fold configuration.
+    routing: Option<(RoutingQuality, RoutingQuality)>,
 }
 
 /// Time `steps` full decode steps (all slots active) on a freshly built
@@ -368,11 +470,18 @@ struct NativeDecodeReport {
 /// settle first.
 fn measure_native_decode(
     cfg: &NativeModelConfig,
+    args: &Args,
     variant: &str,
     steps: usize,
     warmup: usize,
 ) -> Result<NativeDecodeReport> {
-    let mode = native_mode(variant)?;
+    let mode = mode_with_overrides(args, native_mode(variant)?)?;
+    let (predictor, routing) = match &mode {
+        FfnMode::Tardis(t) => {
+            (Some(t.predictor), Some(measure_routing_quality(cfg, t)))
+        }
+        _ => (None, None),
+    };
     let mut model = NativeModel::new(cfg.clone(), &mode);
     let tokens: Vec<i32> =
         (0..cfg.batch).map(|b| ((7 * b + 3) % cfg.vocab) as i32).collect();
@@ -389,11 +498,40 @@ fn measure_native_decode(
     Ok(NativeDecodeReport {
         name: variant.to_string(),
         mode: model.ffn_mode_name(),
+        predictor,
         mean_ms: lat.mean(),
         p50_ms: lat.percentile(50.0),
         fallback_rate: model.ffn_telemetry().and_then(|t| t.fallback_rate()),
+        fixed_neurons: model.ffn_telemetry().map(|t| t.fixed_neurons),
         compression_ratio: model.fold_compression_ratio(),
+        routing,
     })
+}
+
+/// Precision/recall of both predictors against ground-truth range
+/// violations at the model's FFN shape, via the shared
+/// [`tardis::ffn::compare_predictors`] harness (the same one the
+/// `predictor_quality` regression test asserts on, so the bench numbers
+/// and the test measure the same workload).
+fn measure_routing_quality(
+    cfg: &NativeModelConfig,
+    t: &TardisFfnConfig,
+) -> (RoutingQuality, RoutingQuality) {
+    use std::sync::Arc;
+    use tardis::ffn::{compare_predictors, DenseFfn};
+    let (d, h) = (cfg.d_model, cfg.d_ff);
+    let mut rng = tardis::util::rng::Rng::new(0x0074_D150);
+    let scale = 1.0 / (d as f64).sqrt();
+    let dense = DenseFfn::new(
+        Arc::new((0..d * h).map(|_| (rng.normal() * scale) as f32).collect()),
+        Arc::new((0..h).map(|_| (rng.normal() * 0.05) as f32).collect()),
+        Arc::new((0..h * d).map(|_| (rng.normal() * scale) as f32).collect()),
+        Arc::new(vec![0.0; d]),
+        d,
+        h,
+    );
+    let c = compare_predictors(dense, t, &mut rng);
+    (c.norm, c.quantized)
 }
 
 /// Print one measured-vs-theoretical table row; returns the measured
@@ -424,9 +562,10 @@ fn print_native_row(
         None => ("    -".to_string(), "    -".to_string()),
     };
     println!(
-        "  {:10} mean {:8.3} ms  p50 {:8.3}  speedup {}  fallback {}  \
+        "  {:10} {:9} mean {:8.3} ms  p50 {:8.3}  speedup {}  fallback {}  \
          theory ffn {} e2e {}",
         r.name,
+        r.predictor.map(PredictorKind::name).unwrap_or("-"),
         r.mean_ms,
         r.p50_ms,
         speedup
@@ -439,6 +578,34 @@ fn print_native_row(
         theory_e2e,
     );
     speedup
+}
+
+/// One routing-quality line per tardis variant: both predictors against
+/// the same ground truth.
+fn print_routing_rows(reports: &[NativeDecodeReport]) {
+    let any = reports.iter().any(|r| r.routing.is_some());
+    if !any {
+        return;
+    }
+    println!(
+        "routing quality vs ground-truth range violations \
+         (seeded direction-dependent-outlier workload):"
+    );
+    for r in reports {
+        let Some((qn, qq)) = r.routing else { continue };
+        println!(
+            "  {:10} norm      P {:4.2}  R {:4.2}  flag {:5.1}%   (true OOR {:4.1}%)",
+            r.name,
+            qn.precision,
+            qn.recall,
+            qn.flag_rate * 100.0,
+            qn.true_oor_rate * 100.0,
+        );
+        println!(
+            "  {:10} quantized P {:4.2}  R {:4.2}  flag {:5.1}%",
+            "", qq.precision, qq.recall, qq.flag_rate * 100.0,
+        );
+    }
 }
 
 /// Single-thread GFLOP/s of the packed blocked GEMM kernel and the
@@ -523,6 +690,24 @@ fn write_bench_json(
         if let Some(c) = r.compression_ratio {
             o.insert("compression".to_string(), num(c));
         }
+        if let Some(p) = r.predictor {
+            o.insert("predictor".to_string(), Json::Str(p.name().to_string()));
+        }
+        if let Some(n) = r.fixed_neurons {
+            o.insert("fixed_neurons".to_string(), num(n as f64));
+        }
+        if let Some((qn, qq)) = r.routing {
+            let mut routing = std::collections::BTreeMap::new();
+            for (tag, q) in [("norm", qn), ("quantized", qq)] {
+                let mut ro = std::collections::BTreeMap::new();
+                ro.insert("precision".to_string(), num(q.precision));
+                ro.insert("recall".to_string(), num(q.recall));
+                ro.insert("flag_rate".to_string(), num(q.flag_rate));
+                routing.insert(tag.to_string(), Json::Obj(ro));
+            }
+            routing.insert("true_oor_rate".to_string(), num(qn.true_oor_rate));
+            o.insert("routing".to_string(), Json::Obj(routing));
+        }
         rows.push(Json::Obj(o));
     }
     root.insert("variants".to_string(), Json::Arr(rows));
@@ -550,7 +735,7 @@ fn bench_native_table(args: &Args, names: &[String], emit_json: bool) -> Result<
     // rows cannot skew the speedup column or the --assert-speedup gate.
     let mut reports = Vec::new();
     for name in names {
-        reports.push(measure_native_decode(&cfg, name, steps, warmup)?);
+        reports.push(measure_native_decode(&cfg, args, name, steps, warmup)?);
     }
     let dense_mean = reports.iter().find(|r| r.mode == "dense").map(|r| r.mean_ms);
     let mut best_speedup: Option<f64> = None;
@@ -561,6 +746,7 @@ fn bench_native_table(args: &Args, names: &[String], emit_json: bool) -> Result<
                 Some(best_speedup.map_or(s, |b: f64| b.max(s)));
         }
     }
+    print_routing_rows(&reports);
     let (packed_gflops, naive_gflops) = measure_gemm_gflops(&cfg);
     println!(
         "gemm single-thread [{}x{}]x[{}x{}]: packed {packed_gflops:.2} GFLOP/s, \
@@ -666,7 +852,6 @@ fn cmd_variants(args: &Args) -> Result<()> {
     bench_native_table(args, &names, false)
 }
 
-#[cfg(feature = "pjrt")]
 fn print_manifest_variants(args: &Args) {
     match Manifest::load(&manifest_path(args)) {
         Err(e) => eprintln!("[variants] no artifact manifest ({e:#})"),
@@ -689,9 +874,6 @@ fn print_manifest_variants(args: &Args) {
         }
     }
 }
-
-#[cfg(not(feature = "pjrt"))]
-fn print_manifest_variants(_args: &Args) {}
 
 // ---------------------------------------------------------------------------
 // PJRT helpers
@@ -730,13 +912,6 @@ fn main_exec_tags(manifest: &Manifest) -> Vec<&'static str> {
         }
     }
     tags
-}
-
-#[cfg(feature = "pjrt")]
-fn manifest_path(args: &Args) -> std::path::PathBuf {
-    args.opt_str("artifacts")
-        .map(|d| std::path::PathBuf::from(d).join("manifest.json"))
-        .unwrap_or_else(Manifest::default_path)
 }
 
 fn main() {

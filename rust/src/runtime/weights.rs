@@ -59,6 +59,13 @@ impl WeightFile {
             .collect())
     }
 
+    pub fn i8_slice(&self, p: &ParamEntry) -> Result<Vec<i8>> {
+        if p.dtype != DType::I8 {
+            bail!("param {} is not i8", p.name);
+        }
+        Ok(self.bytes(p).iter().map(|&b| b as i8).collect())
+    }
+
     pub fn len(&self) -> usize {
         self.data.len()
     }
@@ -105,6 +112,27 @@ impl AttnWeights {
     }
 }
 
+/// Per-layer TARDIS calibration exported by the python compile pipeline
+/// (`python/compile/native_export.py`): per-neuron linear ranges + fits
+/// from Algorithm 1, and the k-bit quantized `W1` proxy. Optional — a
+/// manifest without the `layers.<i>.tardis.*` params loads with `None`
+/// and the native backend falls back to the uniform configured range.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerCalib {
+    /// `[d_ff]` per-neuron range bounds, `lo[j] <= z < hi[j]`.
+    pub lo: Vec<f32>,
+    pub hi: Vec<f32>,
+    /// `[d_ff]` per-neuron least-squares fit `a·z + b` on the range.
+    pub lin_a: Vec<f32>,
+    pub lin_b: Vec<f32>,
+    /// `[d_model, d_ff]` row-major i8 codes of the quantized `W1` copy.
+    pub pred_codes: Vec<i8>,
+    /// `[d_model / group, d_ff]` row-major per-(group, neuron) scales.
+    pub pred_scales: Vec<f32>,
+    /// Reduction-group size implied by the scales shape.
+    pub group: usize,
+}
+
 /// One pre-LN transformer block's parameters.
 pub struct LayerWeights {
     pub ln1_gain: Vec<f32>,
@@ -120,6 +148,9 @@ pub struct LayerWeights {
     pub w2: Arc<Vec<f32>>,
     /// `[d_model]`.
     pub b2: Arc<Vec<f32>>,
+    /// Per-neuron calibrated ranges + quantized predictor, when the
+    /// manifest ships them.
+    pub calib: Option<LayerCalib>,
 }
 
 /// Full parameter set of the native tiny-GELU transformer (tied
@@ -177,6 +208,7 @@ impl NativeWeights {
                 b1: Arc::new(vec![0.0; h]),
                 w2: Arc::new(normal_vec(&mut rng, h * d, 0.5 / (h as f64).sqrt())),
                 b2: Arc::new(vec![0.0; d]),
+                calib: None,
             })
             .collect();
         NativeWeights {
@@ -211,6 +243,62 @@ impl NativeWeights {
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let n = |suffix: &str| format!("layers.{i}.{suffix}");
+            // Optional per-layer calibration: all-or-nothing — a manifest
+            // shipping `tardis.lo` must ship the full set.
+            let calib = if variant.param(&n("tardis.lo")).is_ok() {
+                let codes_p = variant.param(&n("tardis.pred_codes"))?;
+                if codes_p.shape != [d, h] {
+                    bail!(
+                        "param {}: manifest shape {:?} != expected {:?}",
+                        n("tardis.pred_codes"),
+                        codes_p.shape,
+                        [d, h]
+                    );
+                }
+                let scales_p = variant.param(&n("tardis.pred_scales"))?;
+                // The group size is authoritative in the variant's
+                // `predictor_group`; the scales shape must agree with it
+                // (short tail groups allowed). Without a tardis config
+                // (e.g. a dense variant sharing the blob) fall back to
+                // inferring an exactly-dividing group from the shape.
+                let group = match &variant.tardis {
+                    Some(t) => {
+                        let g = t.predictor_group.max(1);
+                        let rows = d.div_ceil(g);
+                        if scales_p.shape != [rows, h] {
+                            bail!(
+                                "param {}: scales shape {:?} != {:?} implied \
+                                 by predictor_group {g}",
+                                n("tardis.pred_scales"),
+                                scales_p.shape,
+                                [rows, h]
+                            );
+                        }
+                        g
+                    }
+                    None => match scales_p.shape.as_slice() {
+                        [rows, hh] if *hh == h && *rows >= 1 && d % *rows == 0 => {
+                            d / *rows
+                        }
+                        other => bail!(
+                            "param {}: scales shape {other:?} does not tile \
+                             d_model {d} over d_ff {h}",
+                            n("tardis.pred_scales")
+                        ),
+                    },
+                };
+                Some(LayerCalib {
+                    lo: get(&n("tardis.lo"), &[h])?,
+                    hi: get(&n("tardis.hi"), &[h])?,
+                    lin_a: get(&n("tardis.lin_a"), &[h])?,
+                    lin_b: get(&n("tardis.lin_b"), &[h])?,
+                    pred_codes: wf.i8_slice(codes_p)?,
+                    pred_scales: wf.f32_slice(scales_p)?,
+                    group,
+                })
+            } else {
+                None
+            };
             layers.push(LayerWeights {
                 ln1_gain: get(&n("ln1.g"), &[d])?,
                 ln1_bias: get(&n("ln1.b"), &[d])?,
@@ -227,6 +315,7 @@ impl NativeWeights {
                 b1: Arc::new(get(&n("b1"), &[h])?),
                 w2: Arc::new(get(&n("w2"), &[h, d])?),
                 b2: Arc::new(get(&n("b2"), &[d])?),
+                calib,
             });
         }
         Ok(NativeWeights {

@@ -68,6 +68,7 @@ fn tardis_cfg(ratio: f64) -> TardisFfnConfig {
         linear_lo: -6.0,
         linear_hi: 6.0,
         predictor_threshold: 1.0,
+        ..TardisFfnConfig::default()
     }
 }
 
@@ -252,6 +253,18 @@ fn replay(model: &mut NativeModel, log: &CallLog) -> Vec<f32> {
 
 #[test]
 fn fold_invariant_holds_across_all_scheduler_policies() {
+    fold_invariant_replay(tardis::config::PredictorKind::Norm);
+}
+
+#[test]
+fn fold_invariant_holds_with_quantized_predictor() {
+    // Same replay, routed by the k-bit per-neuron predictor: flagged
+    // neurons are fixed exactly, over-capacity rows fall back densely,
+    // so the invariant is preserved under per-neuron routing too.
+    fold_invariant_replay(tardis::config::PredictorKind::Quantized);
+}
+
+fn fold_invariant_replay(predictor: tardis::config::PredictorKind) {
     // Pre-activations post-LN are ~N(0,1); ±8 keeps every row in range
     // so tardis vs reference differ only by the fold's reassociation.
     let t = TardisFfnConfig {
@@ -259,6 +272,8 @@ fn fold_invariant_holds_across_all_scheduler_policies() {
         linear_lo: -8.0,
         linear_hi: 8.0,
         predictor_threshold: 1.05,
+        predictor,
+        ..TardisFfnConfig::default()
     };
     for policy in PolicyKind::all() {
         let mut cfg = EngineConfig::default();

@@ -1,0 +1,206 @@
+//! Golden-fixture round-trip of the native manifest convention:
+//! `python -m compile.native_export` wrote
+//! `tests/data/native_manifest/` (manifest + weight blob with per-neuron
+//! calibrated ranges and the quantized `W1` proxy); this test proves the
+//! rust side loads it **bitwise** and runs it end to end.
+//!
+//! Regenerate the fixture (and update the golden bit patterns below)
+//! with:
+//!
+//! ```text
+//! cd python && python -m compile.native_export \
+//!     --out ../rust/tests/data/native_manifest
+//! ```
+
+use std::path::PathBuf;
+
+use tardis::config::{FfnMode, Manifest, NativeModelConfig, PredictorKind};
+use tardis::coordinator::model::{NativeModel, StepModel};
+use tardis::runtime::weights::{NativeWeights, WeightFile};
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/data/native_manifest/manifest.json")
+}
+
+fn fixture_manifest() -> Manifest {
+    Manifest::load(&fixture_path()).expect("golden fixture parses")
+}
+
+/// Shape the fixture was exported at (see `NativeExportConfig`).
+fn fixture_cfg(m: &Manifest) -> NativeModelConfig {
+    NativeModelConfig {
+        vocab: m.model.vocab,
+        d_model: m.model.d_model,
+        n_layers: m.model.n_layers,
+        n_heads: m.model.n_heads,
+        d_ff: m.model.d_ff,
+        max_seq: m.model.max_seq,
+        batch: m.batch,
+        prefill_buckets: m.prefill_buckets.clone(),
+        seed: 0,
+        threads: 0,
+    }
+}
+
+#[test]
+fn fixture_manifest_parses_with_predictor_fields() {
+    let m = fixture_manifest();
+    assert_eq!(m.model.d_model, 16);
+    assert_eq!(m.model.d_ff, 32);
+    assert_eq!(m.model.n_layers, 2);
+    assert_eq!(m.model.vocab, 32);
+    assert_eq!(m.variant_names(), vec!["dense", "tardis80"]);
+    assert!(m.variant("dense").unwrap().tardis.is_none());
+    let t = m.variant("tardis80").unwrap().tardis.expect("tardis cfg");
+    assert!((t.fold_ratio - 0.8).abs() < 1e-12);
+    assert_eq!(t.predictor, PredictorKind::Quantized);
+    assert_eq!(t.predictor_bits, 4);
+    assert_eq!(t.predictor_group, 8);
+    assert_eq!(t.top_k, 4);
+}
+
+#[test]
+fn calibration_arrays_roundtrip_bitwise() {
+    let m = fixture_manifest();
+    let cfg = fixture_cfg(&m);
+    let spec = m.variant("tardis80").unwrap();
+    let wf = WeightFile::load(&m.dir, spec).unwrap();
+    let w = NativeWeights::from_weight_file(&wf, spec, &cfg).unwrap();
+    let (d, h) = (cfg.d_model, cfg.d_ff);
+    for (i, lw) in w.layers.iter().enumerate() {
+        let calib = lw.calib.as_ref().expect("fixture ships calibration");
+        let n = |s: &str| format!("layers.{i}.tardis.{s}");
+        // Bitwise equality against the raw file bytes — the exact arrays
+        // python wrote, through the full param-table plumbing.
+        let raw = |s: &str| wf.f32_slice(spec.param(&n(s)).unwrap()).unwrap();
+        assert_eq!(calib.lo, raw("lo"), "layer {i} lo");
+        assert_eq!(calib.hi, raw("hi"), "layer {i} hi");
+        assert_eq!(calib.lin_a, raw("lin_a"), "layer {i} lin_a");
+        assert_eq!(calib.lin_b, raw("lin_b"), "layer {i} lin_b");
+        assert_eq!(
+            calib.pred_codes,
+            wf.i8_slice(spec.param(&n("pred_codes")).unwrap()).unwrap(),
+            "layer {i} codes"
+        );
+        assert_eq!(
+            calib.pred_scales,
+            wf.f32_slice(spec.param(&n("pred_scales")).unwrap()).unwrap(),
+            "layer {i} scales"
+        );
+        assert_eq!(calib.lo.len(), h);
+        assert_eq!(calib.pred_codes.len(), d * h);
+        assert_eq!(calib.group, 8, "group implied by the scales shape");
+        // per-neuron, not uniform — the point of the calibration
+        let first = calib.lo[0];
+        assert!(calib.lo.iter().any(|&v| v != first));
+        for (&lo, &hi) in calib.lo.iter().zip(&calib.hi) {
+            assert!(lo < hi, "layer {i}: empty range [{lo}, {hi})");
+        }
+    }
+}
+
+#[test]
+fn golden_values_match_python_export() {
+    // Spot values recorded from the generating python run — guards byte
+    // order, offsets, and dtype decoding, and pins the fixture itself:
+    // a regenerated fixture must update these alongside.
+    let m = fixture_manifest();
+    let cfg = fixture_cfg(&m);
+    let spec = m.variant("tardis80").unwrap();
+    let w = NativeWeights::load(&m.dir, spec, &cfg).unwrap();
+    assert_eq!(w.embed[0].to_bits(), 0xbda6_e1ad);
+    assert_eq!(w.embed[1].to_bits(), 0x3ca4_647a);
+    assert_eq!(w.layers[0].w1[0].to_bits(), 0x3ce7_e70f);
+    let c0 = w.layers[0].calib.as_ref().unwrap();
+    assert_eq!(c0.lo[0].to_bits(), 0xc02d_66dd);
+    assert_eq!(c0.hi[0].to_bits(), 0x400b_c2ea);
+    assert_eq!(c0.lin_a[0].to_bits(), 0x3ee7_6fce);
+    assert_eq!(c0.lin_b[0].to_bits(), 0x3e54_89d3);
+    assert_eq!(&c0.pred_codes[..6], &[1, -2, 7, 6, -6, -7]);
+    assert_eq!(c0.pred_scales[0].to_bits(), 0x3d62_eae7);
+    let c1 = w.layers[1].calib.as_ref().unwrap();
+    assert_eq!(c1.lo[5].to_bits(), 0xc00c_b85b);
+    let h = cfg.d_ff;
+    assert_eq!(&c1.pred_codes[3 * h..3 * h + 6], &[-1, 3, -3, -1, -3, 4]);
+}
+
+#[test]
+fn calibrated_quantized_model_runs_end_to_end() {
+    let m = fixture_manifest();
+    let cfg = fixture_cfg(&m);
+    let spec = m.variant("tardis80").unwrap();
+    let t = spec.tardis.expect("tardis cfg");
+    let mode = FfnMode::Tardis(t);
+    let mut model = NativeModel::with_weights(
+        cfg.clone(),
+        NativeWeights::load(&m.dir, spec, &cfg).unwrap(),
+        &mode,
+    );
+    let mut reference = NativeModel::with_weights(
+        cfg.clone(),
+        NativeWeights::load(&m.dir, spec, &cfg).unwrap(),
+        &FfnMode::TardisReference(t),
+    );
+    assert_eq!(model.ffn_mode_name(), "tardis");
+    assert!(model.fold_compression_ratio().unwrap() > 0.2);
+
+    let lp_t = model.prefill(4, &[2, 5, 9, 0], 3, 0, 0).unwrap();
+    let lp_r = reference.prefill(4, &[2, 5, 9, 0], 3, 0, 0).unwrap();
+    let (mut num, mut den) = (0f64, 0f64);
+    for (a, b) in lp_t.iter().zip(&lp_r) {
+        assert!(a.is_finite());
+        num += (a - b).abs() as f64;
+        den += b.abs() as f64;
+    }
+    for s in 0..8 {
+        let dt = model.decode(&[s, s + 1], &[s, s]).unwrap();
+        let dr = reference.decode(&[s, s + 1], &[s, s]).unwrap();
+        for (a, b) in dt.iter().zip(&dr) {
+            assert!(a.is_finite());
+            num += (a - b).abs() as f64;
+            den += b.abs() as f64;
+        }
+    }
+    // The calibrated ranges cover ~97% of activations; flagged neurons
+    // are fixed exactly and over-capacity rows fall back, so the folded
+    // model tracks its per-neuron reference closely in aggregate.
+    assert!(num / den < 0.05, "mean relative logit drift {}", num / den);
+    let tele = model.ffn_telemetry().expect("tardis telemetry");
+    assert!(tele.total_rows() > 0);
+    assert!(
+        tele.folded_rows > 0,
+        "the calibrated fold never engaged ({tele:?})"
+    );
+}
+
+#[test]
+fn dense_variant_shares_the_blob() {
+    let m = fixture_manifest();
+    let cfg = fixture_cfg(&m);
+    let spec = m.variant("dense").unwrap();
+    let mut model = NativeModel::with_weights(
+        cfg.clone(),
+        NativeWeights::load(&m.dir, spec, &cfg).unwrap(),
+        &FfnMode::Dense,
+    );
+    assert_eq!(model.ffn_mode_name(), "dense");
+    assert!(model.ffn_telemetry().is_none());
+    let logits = model.decode(&[1, 2], &[0, 0]).unwrap();
+    assert_eq!(logits.len(), 2 * cfg.vocab);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn partial_calibration_is_rejected() {
+    // A manifest shipping `tardis.lo` must ship the whole set: drop the
+    // codes param and the load must fail loudly instead of silently
+    // falling back to uniform ranges.
+    let m = fixture_manifest();
+    let cfg = fixture_cfg(&m);
+    let mut spec = m.variant("tardis80").unwrap().clone();
+    spec.params.retain(|p| !p.name.ends_with("tardis.pred_codes"));
+    let wf = WeightFile::load(&m.dir, &spec).unwrap();
+    let err = NativeWeights::from_weight_file(&wf, &spec, &cfg);
+    assert!(err.is_err(), "partial calibration must not load");
+}

@@ -1,0 +1,149 @@
+//! Predictor routing-quality regression (paper §5.3 / Fig 15): on a
+//! seeded workload with injected **direction-dependent outliers**, the
+//! quantized per-neuron router must catch violations the 1-D norm proxy
+//! provably cannot see.
+//!
+//! The construction (shared with the bench via
+//! [`tardis::ffn::compare_predictors`], so the CI-reported numbers and
+//! these assertions measure the same workload): every row has the same
+//! input norm. The norm gate, once its learned radius covers that norm,
+//! folds *every* row — it routes on `‖x‖` alone and is blind to
+//! direction. The injected rows are aligned with the most fragile
+//! folded `W_up` column, so exactly one neuron's pre-activation leaves
+//! its range while the row's norm stays unremarkable. The quantized
+//! proxy sees the direction and flags (then fixes) precisely those
+//! neurons.
+
+use std::sync::Arc;
+
+use tardis::config::{PredictorKind, TardisFfnConfig};
+use tardis::ffn::{compare_predictors, DenseFfn, FoldedFfn, PredictorComparison, Scratch};
+use tardis::util::rng::Rng;
+
+const D: usize = 64;
+const H: usize = 128;
+
+fn random_dense(seed: u64) -> DenseFfn {
+    let mut rng = Rng::new(seed);
+    let scale = 1.0 / (D as f64).sqrt();
+    DenseFfn::new(
+        Arc::new((0..D * H).map(|_| (rng.normal() * scale) as f32).collect()),
+        Arc::new((0..H).map(|_| (rng.normal() * 0.05) as f32).collect()),
+        Arc::new((0..H * D).map(|_| (rng.normal() * scale) as f32).collect()),
+        Arc::new(vec![0.0; D]),
+        D,
+        H,
+    )
+}
+
+fn cfg() -> TardisFfnConfig {
+    TardisFfnConfig {
+        fold_ratio: 0.8,
+        linear_lo: -6.0,
+        linear_hi: 6.0,
+        predictor_threshold: 1.05,
+        predictor: PredictorKind::Norm, // compare_predictors sets both kinds
+        predictor_bits: 4,
+        predictor_group: 32,
+        top_k: 8,
+    }
+}
+
+fn setup(seed: u64) -> PredictorComparison {
+    let mut rng = Rng::new(seed ^ 0xD1CE);
+    let c = compare_predictors(random_dense(seed), &cfg(), &mut rng);
+    // The warmup inside the harness must have taught the norm gate this
+    // workload's norm — otherwise the comparison below is not the
+    // "warmed gate" scenario it claims to be.
+    assert!(
+        c.norm_fold.predictor.predicted_radius() >= c.norm_target,
+        "warmup must teach the norm gate this workload's norm \
+         (radius {} vs target {})",
+        c.norm_fold.predictor.predicted_radius(),
+        c.norm_target
+    );
+    c
+}
+
+#[test]
+fn quantized_router_beats_norm_proxy_on_injected_outliers() {
+    let c = setup(0xBEE5);
+    let (qn, qq) = (c.norm, c.quantized);
+    // same ground truth for both predictors
+    assert_eq!(qn.true_oor_rate, qq.true_oor_rate);
+    assert!(
+        qn.true_oor_rate > 0.0,
+        "workload must inject real violations ({qn:?})"
+    );
+    // the norm proxy folds every row at the learned norm: it misses
+    // (nearly) all direction-dependent outliers
+    assert!(qn.recall < 0.5, "norm proxy should be blind here: {qn:?}");
+    // the quantized per-neuron router catches them, precisely
+    assert!(qq.recall > 0.9, "quantized recall: {qq:?}");
+    assert!(qq.precision > 0.9, "quantized precision: {qq:?}");
+    // and is strictly better on both axes (the acceptance criterion)
+    assert!(qq.recall > qn.recall, "recall: {qq:?} vs {qn:?}");
+    assert!(qq.precision > qn.precision, "precision: {qq:?} vs {qn:?}");
+    // flagging stays sparse — per-neuron routing, not per-row blowout
+    assert!(qq.flag_rate < 0.05, "flag rate: {qq:?}");
+}
+
+#[test]
+fn norm_gate_trades_recall_for_fallback_before_warmup() {
+    // Before any learning, the same workload sits beyond the provable
+    // radius: a cold norm gate falls back on every row — perfect
+    // recall, terrible precision (it runs ~everything dense). This is
+    // the fallback-cost side of the precision/recall tradeoff the bench
+    // reports.
+    let c = setup(0xBEE5);
+    let f_cold = FoldedFfn::new(random_dense(0xBEE5), &cfg());
+    let mut scratch = Scratch::new();
+    let q = f_cold.routing_quality(&mut scratch, &c.workload, c.rows);
+    assert!(q.recall > 0.95, "cold norm gate flags everything: {q:?}");
+    assert!(q.flag_rate > 0.95, "{q:?}");
+    assert!(
+        q.precision < 0.2,
+        "whole-row fallback wastes almost every flag: {q:?}"
+    );
+}
+
+#[test]
+fn fixed_outliers_track_the_reference_end_to_end() {
+    let mut c = setup(0xFACE);
+    let mut scratch = Scratch::new();
+    // Quantized route: every injected row is fixed per neuron (1 flag
+    // <= top_k), nothing falls back, and the output stays within fold
+    // roundoff of the exact partially-linear reference.
+    let got = c.quant_fold.forward(None, &mut scratch, &c.workload, c.rows);
+    let want = c
+        .quant_fold
+        .reference
+        .forward(None, &mut scratch, &c.workload, c.rows);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() <= 5e-3 * w.abs().max(1.0),
+            "elem {i}: quantized {g} vs reference {w}"
+        );
+    }
+    let tele = c.quant_fold.telemetry;
+    assert_eq!(tele.fallback_rows, 0, "fixing should replace fallback");
+    assert_eq!(tele.folded_rows, c.rows as u64);
+    let n_injected = (c.rows / 4) as u64;
+    assert!(
+        tele.fixed_neurons >= n_injected,
+        "each injected outlier costs at least one fix: {} < {n_injected}",
+        tele.fixed_neurons
+    );
+    // The warmed norm gate folds the same batch wholesale — no new
+    // fallback, no fixes: the outliers silently take the surrogate
+    // path. That is exactly the blindness the quantized router removes.
+    let before = c.norm_fold.telemetry;
+    let y = c.norm_fold.forward(None, &mut scratch, &c.workload, c.rows);
+    scratch.give(y);
+    assert_eq!(c.norm_fold.telemetry.fallback_rows, before.fallback_rows);
+    assert_eq!(c.norm_fold.telemetry.fixed_neurons, 0);
+    assert_eq!(
+        c.norm_fold.telemetry.folded_rows,
+        before.folded_rows + c.rows as u64
+    );
+}
