@@ -217,6 +217,13 @@ pub struct NativeModelConfig {
     pub seed: u64,
     /// Worker threads for matmuls (0 = serial).
     pub threads: usize,
+    /// Tokens per paged-KV block (clamped to `1..=max_seq`).
+    pub kv_block_size: usize,
+    /// Physical KV blocks in the pool. 0 = auto: enough for every slot
+    /// to span the full context (`batch * ceil(max_seq / block_size)`,
+    /// i.e. no block pressure). Smaller pools oversubscribe the cache
+    /// and rely on the engine's preemption/swap machinery.
+    pub kv_blocks: usize,
 }
 
 impl NativeModelConfig {
@@ -232,7 +239,21 @@ impl NativeModelConfig {
             prefill_buckets: vec![16, 64],
             seed: 0x7A9D15,
             threads: 0,
+            kv_block_size: 16,
+            kv_blocks: 0,
         }
+    }
+
+    /// Resolved paged-KV geometry as `(num_blocks, block_size)`.
+    pub fn resolved_kv_layout(&self) -> (usize, usize) {
+        let block_size = self.kv_block_size.clamp(1, self.max_seq.max(1));
+        let per_slot = self.max_seq.div_ceil(block_size);
+        let num_blocks = if self.kv_blocks == 0 {
+            self.batch * per_slot
+        } else {
+            self.kv_blocks
+        };
+        (num_blocks.max(1), block_size)
     }
 
     pub fn head_dim(&self) -> usize {
@@ -740,5 +761,19 @@ mod tests {
         assert_eq!(c.d_ff, 512);
         assert_eq!(c.head_dim(), 32);
         assert_eq!(c.vocab, 256);
+        // auto paged pool: no block pressure by default
+        assert_eq!(c.resolved_kv_layout(), (4 * 16, 16));
+    }
+
+    #[test]
+    fn kv_layout_resolution() {
+        let mut c = NativeModelConfig::tiny_gelu();
+        c.kv_blocks = 24;
+        assert_eq!(c.resolved_kv_layout(), (24, 16));
+        // block size clamps to the context length
+        c.kv_block_size = 4096;
+        assert_eq!(c.resolved_kv_layout(), (24, 256));
+        c.kv_block_size = 0;
+        assert_eq!(c.resolved_kv_layout().1, 1);
     }
 }

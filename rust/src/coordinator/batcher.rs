@@ -36,8 +36,7 @@ impl Batcher {
         self.active() == 0
     }
 
-    pub fn occupy(&mut self, slot: usize, req: RequestId, next_pos: usize,
-                  pending_token: i32) {
+    pub fn occupy(&mut self, slot: usize, req: RequestId, next_pos: usize, pending_token: i32) {
         assert!(self.slots[slot].is_none(), "slot {slot} already occupied");
         self.slots[slot] = Some(SlotState { req, next_pos, pending_token });
     }
@@ -63,24 +62,28 @@ impl Batcher {
         st.pending_token = token;
     }
 
-    /// Build the decode-step inputs. Inactive slots get the sentinel
-    /// (token 0, pos = max_seq) the executable drops and masks.
-    pub fn decode_inputs(&self) -> (Vec<i32>, Vec<i32>) {
-        let mut tokens = Vec::with_capacity(self.slots.len());
-        let mut pos = Vec::with_capacity(self.slots.len());
-        for s in &self.slots {
-            match s {
-                Some(st) => {
-                    tokens.push(st.pending_token);
-                    pos.push(st.next_pos as i32);
-                }
-                None => {
-                    tokens.push(0);
-                    pos.push(self.max_seq as i32);
-                }
+    /// Decode-step inputs for the planned `selected` slots only; every
+    /// other slot — idle, prefilling, or stalled waiting for a KV block —
+    /// gets the sentinel (token 0, pos = max_seq) the model masks out, so
+    /// an unplanned slot's cache is never advanced.
+    pub fn decode_inputs_for(&self, selected: &[usize]) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = vec![0i32; self.slots.len()];
+        let mut pos = vec![self.max_seq as i32; self.slots.len()];
+        for &slot in selected {
+            if let Some(st) = &self.slots[slot] {
+                tokens[slot] = st.pending_token;
+                pos[slot] = st.next_pos as i32;
             }
         }
         (tokens, pos)
+    }
+
+    /// Build the decode-step inputs for every occupied slot (the
+    /// all-planned special case of [`Self::decode_inputs_for`]).
+    pub fn decode_inputs(&self) -> (Vec<i32>, Vec<i32>) {
+        let occupied: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].is_some()).collect();
+        self.decode_inputs_for(&occupied)
     }
 
     /// Slots that took part in a decode step (active, in-range).
@@ -121,6 +124,20 @@ mod tests {
     }
 
     #[test]
+    fn decode_inputs_for_masks_unplanned_slots() {
+        let mut b = Batcher::new(4, 32);
+        b.occupy(1, 7, 5, 9);
+        b.occupy(3, 8, 2, 4);
+        // slot 3 occupied but not planned (e.g. stalled on a KV block)
+        let (toks, pos) = b.decode_inputs_for(&[1]);
+        assert_eq!(toks, vec![0, 9, 0, 0]);
+        assert_eq!(pos, vec![32, 5, 32, 32]);
+        let (toks, pos) = b.decode_inputs_for(&[1, 3]);
+        assert_eq!(toks, vec![0, 9, 0, 4]);
+        assert_eq!(pos, vec![32, 5, 32, 2]);
+    }
+
+    #[test]
     #[should_panic(expected = "already occupied")]
     fn double_occupy_panics() {
         let mut b = Batcher::new(2, 8);
@@ -145,8 +162,7 @@ mod tests {
                         b.advance(slot, rng.below(255) as i32);
                     }
                 } else if rng.bool(0.6) {
-                    b.occupy(slot, step as u64, rng.usize_below(max_seq),
-                             rng.below(255) as i32);
+                    b.occupy(slot, step as u64, rng.usize_below(max_seq), rng.below(255) as i32);
                     occupied[slot] = true;
                 }
                 let (toks, pos) = b.decode_inputs();
@@ -157,12 +173,10 @@ mod tests {
                         prop_assert!(pos[i] == st.next_pos as i32);
                         prop_assert!(toks[i] == st.pending_token);
                     } else {
-                        prop_assert!(pos[i] == max_seq as i32,
-                                     "idle slot {i} pos {}", pos[i]);
+                        prop_assert!(pos[i] == max_seq as i32, "idle slot {i} pos {}", pos[i]);
                     }
                 }
-                prop_assert!(b.active()
-                             == occupied.iter().filter(|&&o| o).count());
+                prop_assert!(b.active() == occupied.iter().filter(|&&o| o).count());
             }
             Ok(())
         });

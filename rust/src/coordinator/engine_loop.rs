@@ -2,12 +2,17 @@
 //! one iteration at a time (so callers — CLI, server, benches — control
 //! pacing and can interleave with I/O).
 //!
-//! This is the "vLLM-like" runtime of Fig 13: continuous batching with
-//! slot-level admission, driven by the [`StepPlan`] a pluggable
+//! This is the "vLLM-like" runtime of Fig 13: continuous batching over a
+//! **paged KV cache**, driven by the [`StepPlan`] a pluggable
 //! [`crate::coordinator::scheduler::SchedulerPolicy`] emits each
-//! iteration. Several prefill jobs ride in flight concurrently (the
-//! [`PrefillSet`]), so one long prompt no longer serializes every prompt
-//! behind it. The "HF-like" sequential baseline is
+//! iteration. The engine owns two deterministic allocators — decode
+//! slots (batch rows) and fixed-size KV blocks — plus a per-slot
+//! [`BlockTable`] it mirrors into the model via
+//! [`StepModel::kv_map`]. A mixed plan carries admissions, prefill
+//! chunks and the decode batch in one iteration; under block pressure
+//! the scheduler preempts the lowest-priority decode, whose cache is
+//! saved to the host swap pool ([`StepModel::kv_save`]) and restored
+//! bitwise on re-admission. The "HF-like" sequential baseline is
 //! [`InferenceEngine::generate_sequential`], which runs one request at a
 //! time with batch occupancy 1 — the difference between the two is the
 //! serving-system contribution the paper piggybacks on.
@@ -21,15 +26,14 @@ use crate::util::rng::Rng;
 use crate::util::stats::Samples;
 
 use super::batcher::Batcher;
-use super::kv::SlotAllocator;
-use super::model::StepModel;
+use super::kv::{BlockAllocator, BlockTable, KvLayout};
+use super::model::{KvSwap, StepModel};
 use super::queue::{AdmissionQueue, QueueFull};
-use super::request::{FinishReason, Request, RequestId, RequestState,
-                     SamplingParams};
+use super::request::{FinishReason, Request, RequestId, RequestState, SamplingParams};
 use super::sampler::sample;
-use super::scheduler::{Admission, ChunkSpec, DecodeBatch, PrefillView,
-                       QueuedRequest, SchedView, Scheduler, SchedulerConfig,
-                       StepOutcome, StepPlan};
+use super::scheduler::{Abort, Admission, ChunkSpec, DecodeBatch, DecodeSlotView, Preemption};
+use super::scheduler::{PrefillView, QueuedRequest, Resume, SchedView, Scheduler};
+use super::scheduler::{SchedulerConfig, StepOutcome, StepPlan, SwappedView};
 
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -54,12 +58,24 @@ pub struct EngineStats {
     pub tokens_generated: u64,
     pub admitted: u64,
     pub finished: u64,
+    /// Decodes evicted under KV block pressure (cache swapped to host).
+    pub preemptions: u64,
+    /// Swapped requests restored into fresh blocks.
+    pub resumes: u64,
+    /// Prefill jobs aborted back to the queue under block pressure
+    /// (last-resort deadlock breaker; they re-prefill from scratch).
+    pub prefill_aborts: u64,
+    /// Iterations whose plan carried prefill chunks *and* a decode batch
+    /// (the chunked-prefill co-scheduling case).
+    pub mixed_steps: u64,
     /// Summed decode-batch occupancy over all decode steps (streaming —
     /// a long-running server's stats stay O(1) in time and space; the
     /// continuous-batching win is the mean, `occupancy_sum/decode_steps`)
     pub occupancy_sum: u64,
     /// High-water mark of concurrently in-flight prefill jobs.
     pub max_concurrent_prefills: usize,
+    /// High-water mark of KV blocks in use.
+    pub max_blocks_used: usize,
     /// Cumulative TARDIS row routing (0/0 unless the model runs a
     /// partially-linear FFN; see [`StepModel::ffn_telemetry`]).
     pub ffn_folded_rows: u64,
@@ -74,6 +90,16 @@ impl EngineStats {
             return 0.0;
         }
         self.occupancy_sum as f64 / self.decode_steps as f64
+    }
+
+    /// Fraction of decode steps that carried prefill chunks in the same
+    /// iteration; `None` before the first decode step.
+    pub fn mixed_step_ratio(&self) -> Option<f64> {
+        if self.decode_steps == 0 {
+            None
+        } else {
+            Some(self.mixed_steps as f64 / self.decode_steps as f64)
+        }
     }
 
     /// Cumulative fraction of FFN rows routed to the dense fallback
@@ -97,6 +123,18 @@ pub struct EngineSnapshot {
     pub active_slots: usize,
     pub inflight_prefills: usize,
     pub slots_total: usize,
+    /// Physical KV blocks in the pool.
+    pub kv_blocks_total: usize,
+    /// KV blocks currently allocated to block tables.
+    pub kv_blocks_used: usize,
+    /// `kv_blocks_used / kv_blocks_total`.
+    pub block_utilization: f64,
+    /// Requests currently swapped out awaiting re-admission.
+    pub swapped: usize,
+    /// Cumulative preemption count.
+    pub preemptions: u64,
+    /// Fraction of decode steps that also carried prefill chunks.
+    pub mixed_step_ratio: Option<f64>,
     pub mean_occupancy: f64,
     pub tokens_generated: u64,
     pub admitted: u64,
@@ -118,7 +156,7 @@ pub struct Completion {
     pub reason: FinishReason,
     /// Time spent waiting in the admission queue (enqueue → slot
     /// admission). Distinct from `first_token_ms`, which also includes
-    /// the prefill itself.
+    /// the prefill itself. Preemption does not reset it.
     pub queue_ms: f64,
     pub first_token_ms: f64,
     pub total_ms: f64,
@@ -132,10 +170,17 @@ struct PrefillJob {
     next: usize,
 }
 
+/// A preempted request parked in the host swap pool: its saved cache,
+/// plus the batcher state needed to re-occupy a slot on resume.
+struct SwappedRequest {
+    req: Request,
+    swap: KvSwap,
+    next_pos: usize,
+    pending_token: i32,
+}
+
 /// The concurrently in-flight prefill jobs, keyed by KV slot (sorted, so
-/// every traversal is deterministic). Replaces the seed's single
-/// `Option<PrefillJob>` — the scheduler may interleave chunks of several
-/// prompts.
+/// every traversal is deterministic).
 #[derive(Default)]
 pub struct PrefillSet {
     jobs: BTreeMap<usize, PrefillJob>,
@@ -143,8 +188,7 @@ pub struct PrefillSet {
 
 impl PrefillSet {
     fn insert(&mut self, job: PrefillJob) {
-        debug_assert!(!self.jobs.contains_key(&job.slot),
-                      "slot {} already prefilling", job.slot);
+        debug_assert!(!self.jobs.contains_key(&job.slot), "slot {} already prefilling", job.slot);
         self.jobs.insert(job.slot, job);
     }
 
@@ -159,31 +203,27 @@ impl PrefillSet {
     pub fn is_empty(&self) -> bool {
         self.jobs.is_empty()
     }
-
-    /// Scheduler-facing view, slot-sorted.
-    fn views(&self) -> Vec<PrefillView> {
-        self.jobs
-            .values()
-            .map(|j| PrefillView {
-                request: j.req.id,
-                slot: j.slot,
-                remaining: j.req.prompt.len() - j.next,
-            })
-            .collect()
-    }
 }
 
 pub struct InferenceEngine<M: StepModel> {
     pub model: M,
     cfg: EngineConfig,
     queue: AdmissionQueue,
-    slots: SlotAllocator,
+    /// Decode slots (batch rows).
+    slots: BlockAllocator,
+    /// KV blocks (paged cache units).
+    blocks: BlockAllocator,
+    layout: KvLayout,
+    /// Per-slot block tables, mirrored into the model via `kv_map`.
+    tables: Vec<BlockTable>,
     batcher: Batcher,
     scheduler: Scheduler,
     /// requests currently decoding, by slot
     active: HashMap<usize, Request>,
     /// concurrently in-flight multi-chunk prefills, by slot
     prefilling: PrefillSet,
+    /// preempted requests awaiting re-admission, FIFO by eviction time
+    swapped: VecDeque<SwappedRequest>,
     completions: VecDeque<Completion>,
     next_id: RequestId,
     rngs: HashMap<RequestId, Rng>,
@@ -195,13 +235,18 @@ impl<M: StepModel> InferenceEngine<M> {
     pub fn new(model: M, cfg: EngineConfig) -> Self {
         let batch = model.batch();
         let max_seq = model.max_seq();
+        let layout = model.kv_layout();
         InferenceEngine {
             queue: AdmissionQueue::new(cfg.queue_capacity),
-            slots: SlotAllocator::new(batch),
+            slots: BlockAllocator::new(batch),
+            blocks: BlockAllocator::new(layout.num_blocks),
+            tables: (0..batch).map(|_| BlockTable::new(layout.block_size)).collect(),
+            layout,
             batcher: Batcher::new(batch, max_seq),
             scheduler: Scheduler::new(cfg.scheduler.clone()),
             active: HashMap::new(),
             prefilling: PrefillSet::default(),
+            swapped: VecDeque::new(),
             completions: VecDeque::new(),
             next_id: 1,
             rngs: HashMap::new(),
@@ -216,7 +261,16 @@ impl<M: StepModel> InferenceEngine<M> {
         self.queue.pressure()
     }
 
+    /// The longest sequence a request can reach: the model's context,
+    /// clamped to what the block pool can hold — so a lone request can
+    /// always grow to its finish without deadlocking on blocks.
+    fn max_request_seq(&self) -> usize {
+        self.model.max_seq().min(self.layout.capacity_tokens())
+    }
+
     pub fn snapshot(&self) -> EngineSnapshot {
+        let kv_total = self.blocks.capacity();
+        let kv_used = self.blocks.used();
         EngineSnapshot {
             policy: self.scheduler.policy_name(),
             queue_depth: self.queue.len(),
@@ -224,6 +278,12 @@ impl<M: StepModel> InferenceEngine<M> {
             active_slots: self.active.len(),
             inflight_prefills: self.prefilling.len(),
             slots_total: self.slots.capacity(),
+            kv_blocks_total: kv_total,
+            kv_blocks_used: kv_used,
+            block_utilization: kv_used as f64 / kv_total.max(1) as f64,
+            swapped: self.swapped.len(),
+            preemptions: self.stats.preemptions,
+            mixed_step_ratio: self.stats.mixed_step_ratio(),
             mean_occupancy: self.stats.mean_occupancy(),
             tokens_generated: self.stats.tokens_generated,
             admitted: self.stats.admitted,
@@ -235,12 +295,10 @@ impl<M: StepModel> InferenceEngine<M> {
     }
 
     /// Submit a request; fails with backpressure when the queue is full.
-    pub fn submit(&mut self, prompt: Vec<i32>, params: SamplingParams)
-                  -> Result<RequestId> {
-        let max_prompt = self.model.max_seq().saturating_sub(1);
+    pub fn submit(&mut self, prompt: Vec<i32>, params: SamplingParams) -> Result<RequestId> {
+        let max_prompt = self.max_request_seq().saturating_sub(1);
         if prompt.is_empty() || prompt.len() > max_prompt {
-            return Err(anyhow!(
-                "prompt length {} not in 1..={max_prompt}", prompt.len()));
+            return Err(anyhow!("prompt length {} not in 1..={max_prompt}", prompt.len()));
         }
         let id = self.next_id;
         self.next_id += 1;
@@ -257,8 +315,10 @@ impl<M: StepModel> InferenceEngine<M> {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.active.is_empty()
+        self.queue.is_empty()
+            && self.active.is_empty()
             && self.prefilling.is_empty()
+            && self.swapped.is_empty()
     }
 
     /// Run one scheduler iteration: build a [`StepPlan`] from the current
@@ -292,16 +352,19 @@ impl<M: StepModel> InferenceEngine<M> {
 
     // -- internals ----------------------------------------------------------
 
+    /// Tokens the next prefill chunk for `remaining` prompt tokens runs.
+    fn next_chunk_len(&self, remaining: usize) -> usize {
+        remaining.min(self.model.bucket_for(remaining))
+    }
+
     fn make_plan(&mut self) -> StepPlan {
-        let free_slots = self.slots.free_slots();
+        let free_slots = self.slots.free_list();
         // Snapshotting (and policy-ranking) the queue is only worth it
         // when an admission could actually happen this iteration; under
         // a deep backlog with full slots this keeps the per-step cost
         // independent of queue depth.
-        let concurrency =
-            self.scheduler.config().max_concurrent_prefills.max(1);
-        let admissible =
-            !free_slots.is_empty() && self.prefilling.len() < concurrency;
+        let concurrency = self.scheduler.config().max_concurrent_prefills.max(1);
+        let admissible = !free_slots.is_empty() && self.prefilling.len() < concurrency;
         let queued: Vec<QueuedRequest> = if admissible {
             self.queue
                 .iter()
@@ -311,20 +374,74 @@ impl<M: StepModel> InferenceEngine<M> {
                     prompt_len: r.prompt.len(),
                     priority: r.params.priority,
                     arrival,
+                    first_chunk: self.next_chunk_len(r.prompt.len()),
                 })
                 .collect()
         } else {
             Vec::new()
         };
-        let inflight = self.prefilling.views();
-        let active_slots = self.batcher.active_slots();
+        let inflight = self.prefill_views();
+        let decoding = self.decode_views();
+        let swapped: Vec<SwappedView> = self
+            .swapped
+            .iter()
+            .map(|s| SwappedView {
+                request: s.req.id,
+                priority: s.req.params.priority,
+                tokens: s.next_pos,
+            })
+            .collect();
         let view = SchedView {
             queued: &queued,
             free_slots: &free_slots,
             inflight: &inflight,
-            active_slots: &active_slots,
+            decoding: &decoding,
+            swapped: &swapped,
+            free_blocks: self.blocks.available(),
+            block_size: self.layout.block_size,
+            can_preempt: self.model.supports_preemption(),
         };
         self.scheduler.plan(&view)
+    }
+
+    /// Scheduler-facing prefill snapshot, slot-sorted (the `PrefillSet`
+    /// is keyed by slot).
+    fn prefill_views(&self) -> Vec<PrefillView> {
+        self.prefilling
+            .jobs
+            .values()
+            .map(|j| {
+                let remaining = j.req.prompt.len() - j.next;
+                PrefillView {
+                    request: j.req.id,
+                    slot: j.slot,
+                    remaining,
+                    written: j.next,
+                    blocks_held: self.tables[j.slot].blocks().len(),
+                    next_chunk: self.next_chunk_len(remaining),
+                }
+            })
+            .collect()
+    }
+
+    /// Scheduler-facing decode snapshot, slot-ascending, with the block
+    /// pressure each slot exerts this iteration.
+    fn decode_views(&self) -> Vec<DecodeSlotView> {
+        self.batcher
+            .active_slots()
+            .into_iter()
+            .map(|slot| {
+                let st = self.batcher.state(slot).expect("active slot state");
+                let req = &self.active[&slot];
+                DecodeSlotView {
+                    slot,
+                    request: req.id,
+                    priority: req.params.priority,
+                    blocks_held: self.tables[slot].blocks().len(),
+                    needs_block: st.next_pos >= self.tables[slot].capacity(),
+                }
+            })
+            .collect()
     }
 
     fn execute_plan(&mut self, plan: StepPlan) -> Result<StepOutcome> {
@@ -336,8 +453,20 @@ impl<M: StepModel> InferenceEngine<M> {
                 .as_ref()
                 .map(|d| d.slots.len())
                 .unwrap_or(0),
+            preempted: plan.preemptions.len(),
+            resumed: plan.resumes.len(),
+            aborted: plan.aborts.len(),
         };
         self.model.plan_begin(&plan);
+        for p in &plan.preemptions {
+            self.preempt(p)?;
+        }
+        for a in &plan.aborts {
+            self.abort_prefill(a)?;
+        }
+        for r in &plan.resumes {
+            self.resume(r)?;
+        }
         for adm in &plan.admissions {
             self.admit(adm)?;
         }
@@ -351,18 +480,135 @@ impl<M: StepModel> InferenceEngine<M> {
         if let Some(batch) = &plan.decode {
             self.do_decode_step(batch)?;
         }
+        if plan.is_mixed() {
+            self.stats.mixed_steps += 1;
+        }
+        self.stats.max_blocks_used = self.stats.max_blocks_used.max(self.blocks.used());
         self.model.plan_end(&outcome);
         Ok(outcome)
     }
 
-    /// Move a queued request into the KV slot the plan assigned it.
+    /// Grow `slot`'s block table to `target_blocks` and mirror the new
+    /// mapping into the model.
+    fn grow_table(&mut self, slot: usize, target_blocks: usize) -> Result<()> {
+        let mut grew = false;
+        while self.tables[slot].blocks().len() < target_blocks {
+            let b = self.blocks.alloc().ok_or_else(|| {
+                anyhow!("scheduler bug: KV block pool exhausted growing slot {slot}")
+            })?;
+            self.tables[slot].push_block(b);
+            grew = true;
+        }
+        if grew {
+            self.model.kv_map(slot, &self.tables[slot]);
+        }
+        Ok(())
+    }
+
+    /// Release `slot`'s blocks back to the pool and clear its mapping.
+    fn release_kv(&mut self, slot: usize) {
+        for b in self.tables[slot].clear() {
+            self.blocks.release(b);
+        }
+        self.model.kv_map(slot, &self.tables[slot]);
+    }
+
+    /// Evict a decoding request: save its cache to the swap pool, free
+    /// its blocks and slot. Its RNG stream stays put, so the resumed
+    /// request samples exactly the tokens it would have uninterrupted.
+    fn preempt(&mut self, p: &Preemption) -> Result<()> {
+        let mut req = self.active.remove(&p.slot).ok_or_else(|| {
+            anyhow!("scheduler bug: preemption of idle slot {}", p.slot)
+        })?;
+        ensure!(
+            req.id == p.request,
+            "scheduler bug: slot {} runs request {} not {}",
+            p.slot,
+            req.id,
+            p.request
+        );
+        let st = self.batcher.vacate(p.slot).expect("decoding slot occupied");
+        let swap = self.model.kv_save(p.slot, st.next_pos)?;
+        self.release_kv(p.slot);
+        self.slots.release(p.slot);
+        req.state = RequestState::Preempted;
+        self.stats.preemptions += 1;
+        self.swapped.push_back(SwappedRequest {
+            req,
+            swap,
+            next_pos: st.next_pos,
+            pending_token: st.pending_token,
+        });
+        Ok(())
+    }
+
+    /// Abort an in-flight prefill back to the queue front (last-resort
+    /// deadlock breaker): release its blocks and slot, and let it
+    /// re-prefill from scratch later. No token was sampled yet and its
+    /// RNG reseeds identically on re-admission, so the eventual stream
+    /// is unchanged.
+    fn abort_prefill(&mut self, a: &Abort) -> Result<()> {
+        let job = self.prefilling.remove(a.slot).ok_or_else(|| {
+            anyhow!("scheduler bug: abort of idle slot {}", a.slot)
+        })?;
+        ensure!(
+            job.req.id == a.request,
+            "scheduler bug: slot {} runs request {} not {}",
+            a.slot,
+            job.req.id,
+            a.request
+        );
+        let mut req = job.req;
+        self.release_kv(a.slot);
+        self.slots.release(a.slot);
+        self.rngs.remove(&req.id);
+        req.state = RequestState::Queued;
+        self.queue.requeue_front(req);
+        self.stats.prefill_aborts += 1;
+        Ok(())
+    }
+
+    /// Re-admit a swapped request: fresh blocks (possibly different
+    /// physical ids), bitwise cache restore, back into the decode batch.
+    fn resume(&mut self, r: &Resume) -> Result<()> {
+        let idx = self
+            .swapped
+            .iter()
+            .position(|s| s.req.id == r.request)
+            .ok_or_else(|| {
+                anyhow!("scheduler bug: resume of unswapped request {}", r.request)
+            })?;
+        let SwappedRequest { mut req, swap, next_pos, pending_token } =
+            self.swapped.remove(idx).expect("indexed swap entry");
+        ensure!(
+            self.slots.claim(r.slot),
+            "scheduler bug: resume into unavailable slot {}",
+            r.slot
+        );
+        self.grow_table(r.slot, self.layout.blocks_to_resume(next_pos))?;
+        self.model.kv_restore(r.slot, &swap)?;
+        req.state = RequestState::Decoding { slot: r.slot };
+        self.batcher.occupy(r.slot, req.id, next_pos, pending_token);
+        self.active.insert(r.slot, req);
+        self.stats.resumes += 1;
+        Ok(())
+    }
+
+    /// Move a queued request into the decode slot the plan assigned it.
     fn admit(&mut self, adm: &Admission) -> Result<()> {
         let mut req = self.queue.take(adm.request).ok_or_else(|| {
-            anyhow!("scheduler bug: admission of unqueued request {}",
-                    adm.request)
+            anyhow!("scheduler bug: admission of unqueued request {}", adm.request)
         })?;
-        ensure!(self.slots.claim(adm.slot),
-                "scheduler bug: admission into unavailable slot {}", adm.slot);
+        ensure!(
+            self.slots.claim(adm.slot),
+            "scheduler bug: admission into unavailable slot {}",
+            adm.slot
+        );
+        debug_assert!(
+            self.tables[adm.slot].blocks().is_empty(),
+            "slot {} admitted with a live block table",
+            adm.slot
+        );
         req.state = RequestState::Prefilling { slot: adm.slot, next: 0 };
         req.admitted_at = Some(Instant::now());
         self.rngs.insert(req.id, Rng::new(req.params.seed ^ req.id));
@@ -379,22 +625,24 @@ impl<M: StepModel> InferenceEngine<M> {
         let mut job = self.prefilling.remove(spec.slot).ok_or_else(|| {
             anyhow!("scheduler bug: prefill chunk for idle slot {}", spec.slot)
         })?;
-        ensure!(job.req.id == spec.request,
-                "scheduler bug: slot {} runs request {} not {}",
-                spec.slot, job.req.id, spec.request);
-        let prompt = &job.req.prompt;
-        let remaining = prompt.len() - job.next;
+        ensure!(
+            job.req.id == spec.request,
+            "scheduler bug: slot {} runs request {} not {}",
+            spec.slot,
+            job.req.id,
+            spec.request
+        );
+        let remaining = job.req.prompt.len() - job.next;
         let bucket = self.model.bucket_for(remaining);
         let take = remaining.min(bucket);
-        let mut chunk = prompt[job.next..job.next + take].to_vec();
-        chunk.resize(bucket, 0); // pad; executable overwrites before reads
-        let logits =
-            self.model.prefill(bucket, &chunk, take, job.slot, job.next)?;
+        self.grow_table(spec.slot, self.layout.blocks_for(job.next + take))?;
+        let mut chunk = job.req.prompt[job.next..job.next + take].to_vec();
+        chunk.resize(bucket, 0); // pad; the model overwrites before reads
+        let logits = self.model.prefill(bucket, &chunk, take, job.slot, job.next)?;
         self.stats.prefill_chunks += 1;
         job.next += take;
         if job.next < job.req.prompt.len() {
-            job.req.state =
-                RequestState::Prefilling { slot: job.slot, next: job.next };
+            job.req.state = RequestState::Prefilling { slot: job.slot, next: job.next };
             self.prefilling.insert(job);
             return Ok(());
         }
@@ -405,7 +653,7 @@ impl<M: StepModel> InferenceEngine<M> {
         let tok = sample(&logits, &req.params, rng);
         req.record_token(tok);
         self.stats.tokens_generated += 1;
-        if let Some(reason) = req.stop_reason(self.model.max_seq()) {
+        if let Some(reason) = req.stop_reason(self.max_request_seq()) {
             self.finish(req, slot, reason, false);
             return Ok(());
         }
@@ -416,20 +664,35 @@ impl<M: StepModel> InferenceEngine<M> {
     }
 
     fn do_decode_step(&mut self, batch: &DecodeBatch) -> Result<()> {
-        let (tokens, pos) = self.batcher.decode_inputs();
+        // Grow the tables of planned slots whose next write crosses a
+        // block boundary (the scheduler budgeted these allocations).
+        for &slot in &batch.slots {
+            let next_pos = self
+                .batcher
+                .state(slot)
+                .ok_or_else(|| {
+                    anyhow!("scheduler bug: decode batch names idle slot {slot}")
+                })?
+                .next_pos;
+            self.grow_table(slot, self.layout.blocks_for(next_pos + 1))?;
+        }
+        // Only the planned slots feed real inputs; occupied-but-unplanned
+        // slots (stalled on a block) are masked so their cache state
+        // cannot advance.
+        let (tokens, pos) = self.batcher.decode_inputs_for(&batch.slots);
         let t0 = Instant::now();
         let logits = self.model.decode(&tokens, &pos)?;
         self.decode_latency_ms.push(t0.elapsed().as_secs_f64() * 1e3);
         self.stats.decode_steps += 1;
         self.stats.occupancy_sum += batch.slots.len() as u64;
         let vocab = self.model.vocab();
+        let max_seq = self.max_request_seq();
         // The plan's slot list is sorted: sampling order (and therefore
         // per-request RNG consumption) is deterministic, not HashMap
         // iteration order.
         for &slot in &batch.slots {
             let Some(req) = self.active.get_mut(&slot) else {
-                return Err(anyhow!(
-                    "scheduler bug: decode batch names idle slot {slot}"));
+                return Err(anyhow!("scheduler bug: decode batch names idle slot {slot}"));
             };
             let row = &logits[slot * vocab..(slot + 1) * vocab];
             let rng = self.rngs.get_mut(&req.id).expect("rng");
@@ -437,7 +700,7 @@ impl<M: StepModel> InferenceEngine<M> {
             req.record_token(tok);
             self.stats.tokens_generated += 1;
             self.batcher.advance(slot, tok);
-            if let Some(reason) = req.stop_reason(self.model.max_seq()) {
+            if let Some(reason) = req.stop_reason(max_seq) {
                 let req = self.active.remove(&slot).expect("req");
                 self.finish(req, slot, reason, true);
             }
@@ -445,12 +708,12 @@ impl<M: StepModel> InferenceEngine<M> {
         Ok(())
     }
 
-    fn finish(&mut self, mut req: Request, slot: usize, reason: FinishReason,
-              in_batcher: bool) {
+    fn finish(&mut self, mut req: Request, slot: usize, reason: FinishReason, in_batcher: bool) {
         req.finish(reason);
         if in_batcher {
             self.batcher.vacate(slot);
         }
+        self.release_kv(slot);
         self.slots.release(slot);
         self.rngs.remove(&req.id);
         self.stats.finished += 1;
@@ -477,8 +740,11 @@ impl<M: StepModel> InferenceEngine<M> {
     /// HF-like sequential baseline: run a single request start-to-finish
     /// with batch occupancy 1 (no continuous batching). Used by Fig 13 to
     /// compare runtimes.
-    pub fn generate_sequential(&mut self, prompt: Vec<i32>,
-                               params: SamplingParams) -> Result<Completion> {
+    pub fn generate_sequential(
+        &mut self,
+        prompt: Vec<i32>,
+        params: SamplingParams,
+    ) -> Result<Completion> {
         if !self.is_idle() {
             return Err(anyhow!("sequential generation requires an idle engine"));
         }
@@ -498,8 +764,7 @@ mod tests {
     use crate::coordinator::scheduler::PolicyKind;
 
     fn engine(batch: usize) -> InferenceEngine<MockModel> {
-        InferenceEngine::new(MockModel::new(batch, 64, 16, vec![4, 8]),
-                             EngineConfig::default())
+        InferenceEngine::new(MockModel::new(batch, 64, 16, vec![4, 8]), EngineConfig::default())
     }
 
     #[test]
@@ -507,10 +772,8 @@ mod tests {
         let mut e = engine(2);
         // prompt [1,2,3]: last tok 3 at pos 2 -> first gen (3+2)%16 = 5
         // then 5 at pos 3 -> 8; 8 at pos 4 -> 12
-        let id = e
-            .submit(vec![1, 2, 3],
-                    SamplingParams { max_tokens: 3, ..Default::default() })
-            .unwrap();
+        let params = SamplingParams { max_tokens: 3, ..Default::default() };
+        let id = e.submit(vec![1, 2, 3], params).unwrap();
         let done = e.run_to_completion().unwrap();
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].id, id);
@@ -525,10 +788,8 @@ mod tests {
         let model = MockModel::new(1, 64, 16, vec![4]);
         let mut e = InferenceEngine::new(model, EngineConfig::default());
         let prompt = vec![1, 2, 3, 4, 5, 6, 7];
-        let id = e
-            .submit(prompt.clone(),
-                    SamplingParams { max_tokens: 1, ..Default::default() })
-            .unwrap();
+        let params = SamplingParams { max_tokens: 1, ..Default::default() };
+        let id = e.submit(prompt.clone(), params).unwrap();
         let done = e.run_to_completion().unwrap();
         // last tok 7 at pos 6 -> (7+6)%16 = 13
         assert_eq!(done[0].tokens, vec![13]);
@@ -541,9 +802,8 @@ mod tests {
         let mut e = engine(4);
         let n = 4;
         for i in 0..n {
-            e.submit(vec![1 + i as i32, 2, 3],
-                     SamplingParams { max_tokens: 8, ..Default::default() })
-                .unwrap();
+            let params = SamplingParams { max_tokens: 8, ..Default::default() };
+            e.submit(vec![1 + i as i32, 2, 3], params).unwrap();
         }
         let done = e.run_to_completion().unwrap();
         assert_eq!(done.len(), n);
@@ -555,17 +815,30 @@ mod tests {
             "decode steps {} should be < total tokens {tokens}",
             e.stats.decode_steps
         );
-        assert!(e.stats.mean_occupancy() > 1.5,
-                "occupancy {}", e.stats.mean_occupancy());
+        assert!(e.stats.mean_occupancy() > 1.5, "occupancy {}", e.stats.mean_occupancy());
+    }
+
+    #[test]
+    fn mixed_iterations_carry_prefill_and_decode() {
+        // Long prompts keep prefilling while earlier requests decode: the
+        // default mixed planner must overlap them in single iterations.
+        let model = MockModel::new(4, 64, 16, vec![4]);
+        let mut e = InferenceEngine::new(model, EngineConfig::default());
+        for i in 0..4 {
+            let params = SamplingParams { max_tokens: 12, ..Default::default() };
+            e.submit(vec![1 + i; 12], params).unwrap();
+        }
+        e.run_to_completion().unwrap();
+        assert!(e.stats.mixed_steps > 0, "no mixed iterations despite prefill+decode overlap");
+        assert!(e.stats.mixed_step_ratio().unwrap() > 0.0);
     }
 
     #[test]
     fn more_requests_than_slots_queue_up() {
         let mut e = engine(2);
         for i in 0..6 {
-            e.submit(vec![1 + i, 2],
-                     SamplingParams { max_tokens: 4, ..Default::default() })
-                .unwrap();
+            let params = SamplingParams { max_tokens: 4, ..Default::default() };
+            e.submit(vec![1 + i, 2], params).unwrap();
         }
         let done = e.run_to_completion().unwrap();
         assert_eq!(done.len(), 6);
@@ -592,32 +865,103 @@ mod tests {
     }
 
     #[test]
+    fn prompt_limit_respects_block_pool() {
+        // 3 blocks of 8 tokens = 24-token effective context, though the
+        // model's max_seq is 64.
+        let model = MockModel::new(2, 64, 16, vec![4, 8]).with_kv_layout(3, 8);
+        let mut e = InferenceEngine::new(model, EngineConfig::default());
+        assert!(e.submit(vec![1; 24], SamplingParams::default()).is_err());
+        assert!(e.submit(vec![1; 23], SamplingParams::default()).is_ok());
+    }
+
+    #[test]
     fn context_overflow_finishes_request() {
         let model = MockModel::new(1, 16, 8, vec![4]);
         let mut e = InferenceEngine::new(model, EngineConfig::default());
-        e.submit(vec![1, 2, 3, 4],
-                 SamplingParams { max_tokens: 1000, ..Default::default() })
-            .unwrap();
+        let params = SamplingParams { max_tokens: 1000, ..Default::default() };
+        e.submit(vec![1, 2, 3, 4], params).unwrap();
         let done = e.run_to_completion().unwrap();
         assert_eq!(done[0].reason, FinishReason::ContextOverflow);
         assert_eq!(done[0].tokens.len() + 4, 16);
     }
 
     #[test]
+    fn overflow_clamps_to_block_pool_capacity() {
+        // Pool capacity 2*4 = 8 tokens < max_seq 16: a request stops at
+        // the pool limit instead of deadlocking on blocks.
+        let model = MockModel::new(1, 16, 8, vec![4]).with_kv_layout(2, 4);
+        let mut e = InferenceEngine::new(model, EngineConfig::default());
+        let params = SamplingParams { max_tokens: 1000, ..Default::default() };
+        e.submit(vec![1, 2, 3], params).unwrap();
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(done[0].reason, FinishReason::ContextOverflow);
+        assert_eq!(done[0].tokens.len() + 3, 8);
+    }
+
+    #[test]
+    fn blocks_released_on_finish() {
+        let model = MockModel::new(2, 64, 16, vec![4, 8]).with_kv_layout(16, 4);
+        let mut e = InferenceEngine::new(model, EngineConfig::default());
+        for i in 0..4 {
+            let params = SamplingParams { max_tokens: 4, ..Default::default() };
+            e.submit(vec![1 + i; 9], params).unwrap();
+        }
+        e.run_to_completion().unwrap();
+        assert_eq!(e.blocks.used(), 0, "finished requests leak KV blocks");
+        assert!(e.stats.max_blocks_used > 0);
+        let s = e.snapshot();
+        assert_eq!(s.kv_blocks_total, 16);
+        assert_eq!(s.kv_blocks_used, 0);
+        assert_eq!(s.block_utilization, 0.0);
+    }
+
+    #[test]
+    fn block_pressure_preempts_and_restores_exactly() {
+        // 2 slots but a pool of only 6 4-token blocks: two 9-token
+        // prompts decoding 12 tokens each grow to 6 blocks apiece at the
+        // tail (12 demanded, 6 exist), so someone must swap out and come
+        // back — with an unchanged token stream.
+        let reference = {
+            let model = MockModel::new(2, 64, 16, vec![4, 8]);
+            let mut e = InferenceEngine::new(model, EngineConfig::default());
+            for i in 0..2 {
+                let params = SamplingParams { max_tokens: 12, ..Default::default() };
+                e.submit(vec![1 + i; 9], params).unwrap();
+            }
+            let mut done = e.run_to_completion().unwrap();
+            done.sort_by_key(|c| c.id);
+            assert_eq!(e.stats.preemptions, 0, "reference run must not preempt");
+            done
+        };
+        let model = MockModel::new(2, 64, 16, vec![4, 8]).with_kv_layout(6, 4);
+        let mut e = InferenceEngine::new(model, EngineConfig::default());
+        for i in 0..2 {
+            let params = SamplingParams { max_tokens: 12, ..Default::default() };
+            e.submit(vec![1 + i; 9], params).unwrap();
+        }
+        let mut done = e.run_to_completion().unwrap();
+        done.sort_by_key(|c| c.id);
+        assert!(e.stats.preemptions > 0, "pool pressure must preempt");
+        assert_eq!(e.stats.resumes, e.stats.preemptions, "every preempted request resumed");
+        assert_eq!(e.blocks.used(), 0);
+        for (a, b) in reference.iter().zip(&done) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "preemption changed request {} output", a.id);
+        }
+        assert!(e.snapshot().preemptions > 0);
+    }
+
+    #[test]
     fn sequential_equals_batched_output() {
         let mut e1 = engine(4);
-        let c1 = e1
-            .generate_sequential(vec![2, 4, 6],
-                                 SamplingParams { max_tokens: 5, ..Default::default() })
-            .unwrap();
+        let params = SamplingParams { max_tokens: 5, ..Default::default() };
+        let c1 = e1.generate_sequential(vec![2, 4, 6], params).unwrap();
         let mut e2 = engine(4);
-        let id = e2
-            .submit(vec![2, 4, 6],
-                    SamplingParams { max_tokens: 5, ..Default::default() })
-            .unwrap();
+        let params = SamplingParams { max_tokens: 5, ..Default::default() };
+        let id = e2.submit(vec![2, 4, 6], params).unwrap();
         // add noise requests around it
-        e2.submit(vec![9, 9], SamplingParams { max_tokens: 5, ..Default::default() })
-            .unwrap();
+        let noise = SamplingParams { max_tokens: 5, ..Default::default() };
+        e2.submit(vec![9, 9], noise).unwrap();
         let done = e2.run_to_completion().unwrap();
         let c2 = done.iter().find(|c| c.id == id).unwrap();
         assert_eq!(c1.tokens, c2.tokens, "batching must not change outputs");
@@ -631,12 +975,10 @@ mod tests {
         let mut model = MockModel::new(1, 64, 16, vec![4]);
         model.spin_per_call = std::time::Duration::from_millis(2);
         let mut e = InferenceEngine::new(model, EngineConfig::default());
-        e.submit(vec![1; 12],
-                 SamplingParams { max_tokens: 2, ..Default::default() })
-            .unwrap();
-        e.submit(vec![2; 12],
-                 SamplingParams { max_tokens: 2, ..Default::default() })
-            .unwrap();
+        let params = SamplingParams { max_tokens: 2, ..Default::default() };
+        e.submit(vec![1; 12], params).unwrap();
+        let params = SamplingParams { max_tokens: 2, ..Default::default() };
+        e.submit(vec![2; 12], params).unwrap();
         let done = e.run_to_completion().unwrap();
         assert_eq!(done.len(), 2);
         for c in &done {
@@ -649,28 +991,34 @@ mod tests {
         // 2 decode steps (batch=1 serializes): its prefill alone takes
         // ~3 spins, so queue time must be clearly below first-token time.
         let second = done.iter().find(|c| c.prompt[0] == 2).unwrap();
-        assert!(second.first_token_ms > second.queue_ms,
-                "first token {} should exceed queue {}",
-                second.first_token_ms, second.queue_ms);
+        assert!(
+            second.first_token_ms > second.queue_ms,
+            "first token {} should exceed queue {}",
+            second.first_token_ms,
+            second.queue_ms
+        );
     }
 
     #[test]
     fn snapshot_reports_live_state() {
         let mut e = engine(2);
         for i in 0..4 {
-            e.submit(vec![1 + i, 2, 3],
-                     SamplingParams { max_tokens: 4, ..Default::default() })
-                .unwrap();
+            let params = SamplingParams { max_tokens: 4, ..Default::default() };
+            e.submit(vec![1 + i, 2, 3], params).unwrap();
         }
         let s = e.snapshot();
         assert_eq!(s.queue_depth, 4);
         assert_eq!(s.policy, "fifo");
         assert_eq!(s.slots_total, 2);
         assert_eq!(s.active_slots, 0);
+        // degenerate layout: one block per slot, spanning max_seq
+        assert_eq!(s.kv_blocks_total, 2);
         e.run_to_completion().unwrap();
         let s = e.snapshot();
         assert_eq!(s.queue_depth, 0);
         assert_eq!(s.finished, 4);
+        assert_eq!(s.swapped, 0);
+        assert_eq!(s.preemptions, 0);
         assert!(s.tokens_generated >= 16);
     }
 
@@ -680,8 +1028,8 @@ mod tests {
         use crate::coordinator::model::NativeModel;
         // Mock backend: no partially-linear FFN, no rate.
         let mut e = engine(2);
-        e.submit(vec![1, 2], SamplingParams { max_tokens: 2, ..Default::default() })
-            .unwrap();
+        let params = SamplingParams { max_tokens: 2, ..Default::default() };
+        e.submit(vec![1, 2], params).unwrap();
         e.run_to_completion().unwrap();
         assert!(e.snapshot().ffn_fallback_rate.is_none());
         // Native tardis backend: rate is reported after any routed row.
@@ -696,14 +1044,13 @@ mod tests {
             prefill_buckets: vec![4],
             seed: 5,
             threads: 0,
+            kv_block_size: 8,
+            kv_blocks: 0,
         };
-        let model = NativeModel::new(
-            cfg,
-            &FfnMode::Tardis(TardisFfnConfig::with_ratio(0.8)),
-        );
+        let model = NativeModel::new(cfg, &FfnMode::Tardis(TardisFfnConfig::with_ratio(0.8)));
         let mut e = InferenceEngine::new(model, EngineConfig::default());
-        e.submit(vec![1, 2, 3], SamplingParams { max_tokens: 4, ..Default::default() })
-            .unwrap();
+        let params = SamplingParams { max_tokens: 4, ..Default::default() };
+        e.submit(vec![1, 2, 3], params).unwrap();
         e.run_to_completion().unwrap();
         let s = e.snapshot();
         let rate = s.ffn_fallback_rate.expect("tardis backend reports a rate");
@@ -722,14 +1069,10 @@ mod tests {
         let mut e = InferenceEngine::new(model, cfg);
         // Long prompt first, short prompt second: SPF admits the short
         // one first, so it finishes first despite arriving later.
-        let long = e
-            .submit(vec![1; 20],
-                    SamplingParams { max_tokens: 1, ..Default::default() })
-            .unwrap();
-        let short = e
-            .submit(vec![2, 3],
-                    SamplingParams { max_tokens: 1, ..Default::default() })
-            .unwrap();
+        let params = SamplingParams { max_tokens: 1, ..Default::default() };
+        let long = e.submit(vec![1; 20], params).unwrap();
+        let params = SamplingParams { max_tokens: 1, ..Default::default() };
+        let short = e.submit(vec![2, 3], params).unwrap();
         let done = e.run_to_completion().unwrap();
         assert_eq!(done[0].id, short);
         assert_eq!(done[1].id, long);

@@ -1,22 +1,88 @@
-//! KV slot allocator.
+//! Paged KV cache accounting: fixed-size token blocks and per-request
+//! block tables (the vLLM paged-attention generalization; the old
+//! "one sequence = one block span" slot scheme is now just the
+//! degenerate [`KvLayout::degenerate`] case with `block_size == max_seq`).
 //!
-//! The decode executable runs at a fixed batch `B`; the KV cache is one
-//! device buffer `[L, 2, B, H, S, Dh]`. Each in-flight request owns one
-//! batch slot from prefill start to finish. (The paged-attention
-//! generalization would subdivide S; with a fixed S per slot this is the
-//! vLLM "one sequence = one block span" degenerate case, which is what
-//! our exported executables support.)
+//! * [`BlockAllocator`] — a free list over `n` interchangeable units.
+//!   The engine runs two of them: one over the decode-batch rows
+//!   ("slots") and one over the KV blocks. Its free-list order is
+//!   deterministic (LIFO pop, ascending [`BlockAllocator::free_list`]
+//!   snapshot), which is what makes [`super::scheduler::StepPlan`]
+//!   execution replayable: the same plan sequence always binds the same
+//!   physical blocks.
+//! * [`BlockTable`] — one request's logical-position → physical-block
+//!   mapping. Appending a token never moves data ("copy-free append"):
+//!   growth only pushes a fresh block id; the K/V rows already written
+//!   stay where they are.
+//! * [`KvLayout`] — the backend's paged geometry (how many blocks of
+//!   how many tokens), reported by
+//!   [`super::model::StepModel::kv_layout`].
+//!
+//! Swap contents for preempted requests live in the model layer (see
+//! [`super::model::KvSwap`]); this module only does the arithmetic.
 
+/// Blocks needed to hold `tokens` cache entries at `block_size` tokens
+/// per block. The single source of this arithmetic — the scheduler's
+/// planning ledger and the engine's allocations must agree on it.
+pub fn blocks_for(tokens: usize, block_size: usize) -> usize {
+    tokens.div_ceil(block_size.max(1))
+}
+
+/// Blocks a resumed request needs: its `tokens` resident entries *plus
+/// room for the next decode write*, so a resume can always make progress
+/// before the next block-pressure event (no zero-progress preempt/resume
+/// livelock). Planner and engine must use the same formula — hence one
+/// function.
+pub fn blocks_to_resume(tokens: usize, block_size: usize) -> usize {
+    blocks_for(tokens + 1, block_size)
+}
+
+/// Paged-KV geometry of a step model: `num_blocks` physical blocks of
+/// `block_size` tokens each, shared by every slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvLayout {
+    pub num_blocks: usize,
+    pub block_size: usize,
+}
+
+impl KvLayout {
+    /// The fixed-slot degenerate case: one block per decode slot, each
+    /// spanning the whole context. Backends without paged storage (mock,
+    /// pjrt) report this and ignore block tables entirely.
+    pub fn degenerate(batch: usize, max_seq: usize) -> KvLayout {
+        KvLayout { num_blocks: batch, block_size: max_seq.max(1) }
+    }
+
+    /// Total token capacity of the pool.
+    pub fn capacity_tokens(&self) -> usize {
+        self.num_blocks * self.block_size
+    }
+
+    /// Blocks needed to hold `tokens` cache entries.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        blocks_for(tokens, self.block_size)
+    }
+
+    /// See [`blocks_to_resume`].
+    pub fn blocks_to_resume(&self, tokens: usize) -> usize {
+        blocks_to_resume(tokens, self.block_size)
+    }
+}
+
+/// Free-list allocator over `n` interchangeable units (KV blocks, or
+/// decode slots). Deterministic: `alloc` pops LIFO, [`Self::free_list`]
+/// snapshots ascending, and [`Self::claim`] lets a plan bind a specific
+/// unit it saw in that snapshot.
 #[derive(Debug)]
-pub struct SlotAllocator {
+pub struct BlockAllocator {
     n: usize,
     free: Vec<usize>,
     in_use: Vec<bool>,
 }
 
-impl SlotAllocator {
+impl BlockAllocator {
     pub fn new(n: usize) -> Self {
-        SlotAllocator {
+        BlockAllocator {
             n,
             free: (0..n).rev().collect(),
             in_use: vec![false; n],
@@ -36,46 +102,108 @@ impl SlotAllocator {
     }
 
     pub fn alloc(&mut self) -> Option<usize> {
-        let slot = self.free.pop()?;
-        debug_assert!(!self.in_use[slot], "allocator invariant violated");
-        self.in_use[slot] = true;
-        Some(slot)
+        let unit = self.free.pop()?;
+        debug_assert!(!self.in_use[unit], "allocator invariant violated");
+        self.in_use[unit] = true;
+        Some(unit)
     }
 
-    /// Free slots in ascending order — the scheduler plans admissions
-    /// against this deterministic snapshot.
-    pub fn free_slots(&self) -> Vec<usize> {
+    /// Free units in ascending order — the scheduler plans against this
+    /// deterministic snapshot.
+    pub fn free_list(&self) -> Vec<usize> {
         let mut v = self.free.clone();
         v.sort_unstable();
         v
     }
 
-    /// Claim the specific slot a [`crate::coordinator::scheduler::StepPlan`]
-    /// assigned. Returns false if the slot is out of range or already in
-    /// use (a scheduler bug the engine turns into an error).
-    pub fn claim(&mut self, slot: usize) -> bool {
-        if slot >= self.n || self.in_use[slot] {
+    /// Claim the specific unit a [`super::scheduler::StepPlan`] assigned.
+    /// Returns false if it is out of range or already in use (a scheduler
+    /// bug the engine turns into an error).
+    pub fn claim(&mut self, unit: usize) -> bool {
+        if unit >= self.n || self.in_use[unit] {
             return false;
         }
         let idx = self
             .free
             .iter()
-            .position(|&s| s == slot)
+            .position(|&u| u == unit)
             .expect("free list inconsistent with in_use");
         self.free.swap_remove(idx);
-        self.in_use[slot] = true;
+        self.in_use[unit] = true;
         true
     }
 
-    pub fn release(&mut self, slot: usize) {
-        assert!(slot < self.n, "slot {slot} out of range");
-        assert!(self.in_use[slot], "double free of slot {slot}");
-        self.in_use[slot] = false;
-        self.free.push(slot);
+    pub fn release(&mut self, unit: usize) {
+        assert!(unit < self.n, "unit {unit} out of range");
+        assert!(self.in_use[unit], "double free of unit {unit}");
+        self.in_use[unit] = false;
+        self.free.push(unit);
     }
 
-    pub fn is_in_use(&self, slot: usize) -> bool {
-        self.in_use[slot]
+    pub fn is_in_use(&self, unit: usize) -> bool {
+        self.in_use[unit]
+    }
+}
+
+/// One request's block table: logical token positions `0..capacity()`
+/// map to cells of the physical blocks in order. Growth appends block
+/// ids; existing entries never move.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BlockTable {
+    block_size: usize,
+    blocks: Vec<usize>,
+}
+
+impl BlockTable {
+    pub fn new(block_size: usize) -> BlockTable {
+        assert!(block_size >= 1, "block_size must be >= 1");
+        BlockTable { block_size, blocks: Vec::new() }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn blocks(&self) -> &[usize] {
+        &self.blocks
+    }
+
+    /// Token capacity of the blocks held so far.
+    pub fn capacity(&self) -> usize {
+        self.blocks.len() * self.block_size
+    }
+
+    pub fn push_block(&mut self, block: usize) {
+        self.blocks.push(block);
+    }
+
+    /// Drop every block id (the caller releases them to the allocator).
+    pub fn clear(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.blocks)
+    }
+
+    /// Physical cell index of logical position `pos` (in token units;
+    /// multiply by the per-token stride for a flat buffer offset).
+    pub fn physical(&self, pos: usize) -> usize {
+        let (b, o) = (pos / self.block_size, pos % self.block_size);
+        assert!(b < self.blocks.len(), "position {pos} beyond block table");
+        self.blocks[b] * self.block_size + o
+    }
+
+    /// Iterate `(logical_start, physical_start, len)` runs covering
+    /// logical positions `0..len` — each run is contiguous in the backing
+    /// store, so gathers walk block-sized spans instead of per-token
+    /// indirection.
+    pub fn runs(&self, len: usize) -> impl Iterator<Item = (usize, usize, usize)> + '_ {
+        let bs = self.block_size;
+        self.blocks
+            .iter()
+            .enumerate()
+            .take_while(move |(i, _)| i * bs < len)
+            .map(move |(i, &blk)| {
+                let t0 = i * bs;
+                (t0, blk * bs, bs.min(len - t0))
+            })
     }
 }
 
@@ -88,7 +216,7 @@ mod tests {
 
     #[test]
     fn alloc_release_cycle() {
-        let mut a = SlotAllocator::new(3);
+        let mut a = BlockAllocator::new(3);
         assert_eq!(a.available(), 3);
         let s0 = a.alloc().unwrap();
         let s1 = a.alloc().unwrap();
@@ -101,15 +229,15 @@ mod tests {
     }
 
     #[test]
-    fn claim_specific_slots() {
-        let mut a = SlotAllocator::new(4);
-        assert_eq!(a.free_slots(), vec![0, 1, 2, 3]);
+    fn claim_specific_units() {
+        let mut a = BlockAllocator::new(4);
+        assert_eq!(a.free_list(), vec![0, 1, 2, 3]);
         assert!(a.claim(2));
         assert!(!a.claim(2), "double claim must fail");
         assert!(!a.claim(9), "out of range must fail");
-        assert_eq!(a.free_slots(), vec![0, 1, 3]);
+        assert_eq!(a.free_list(), vec![0, 1, 3]);
         assert!(a.is_in_use(2));
-        // alloc never hands out a claimed slot
+        // alloc never hands out a claimed unit
         let mut handed = Vec::new();
         while let Some(s) = a.alloc() {
             handed.push(s);
@@ -117,46 +245,161 @@ mod tests {
         handed.sort_unstable();
         assert_eq!(handed, vec![0, 1, 3]);
         a.release(2);
-        assert_eq!(a.free_slots(), vec![2]);
+        assert_eq!(a.free_list(), vec![2]);
     }
 
     #[test]
     #[should_panic(expected = "double free")]
     fn double_free_panics() {
-        let mut a = SlotAllocator::new(2);
+        let mut a = BlockAllocator::new(2);
         let s = a.alloc().unwrap();
         a.release(s);
         a.release(s);
     }
 
-    /// Property: under random alloc/release traffic the allocator never
-    /// hands out a slot that is already in use, and available+used == n.
     #[test]
-    fn prop_no_double_allocation() {
-        property("slot allocator soundness", 200, |rng: &mut Rng| {
+    fn layout_arithmetic() {
+        let l = KvLayout { num_blocks: 8, block_size: 4 };
+        assert_eq!(l.capacity_tokens(), 32);
+        assert_eq!(l.blocks_for(0), 0);
+        assert_eq!(l.blocks_for(1), 1);
+        assert_eq!(l.blocks_for(4), 1);
+        assert_eq!(l.blocks_for(5), 2);
+        // resume always reserves headroom for the next write
+        assert_eq!(l.blocks_to_resume(3), 1);
+        assert_eq!(l.blocks_to_resume(4), 2);
+        let d = KvLayout::degenerate(2, 64);
+        assert_eq!(d.num_blocks, 2);
+        assert_eq!(d.block_size, 64);
+    }
+
+    #[test]
+    fn block_table_maps_positions() {
+        let mut t = BlockTable::new(4);
+        assert_eq!(t.capacity(), 0);
+        t.push_block(7);
+        t.push_block(2);
+        assert_eq!(t.capacity(), 8);
+        assert_eq!(t.physical(0), 28);
+        assert_eq!(t.physical(3), 31);
+        assert_eq!(t.physical(4), 8);
+        assert_eq!(t.physical(6), 10);
+        let runs: Vec<_> = t.runs(6).collect();
+        assert_eq!(runs, vec![(0, 28, 4), (4, 8, 2)]);
+        let runs: Vec<_> = t.runs(4).collect();
+        assert_eq!(runs, vec![(0, 28, 4)]);
+        let freed = t.clear();
+        assert_eq!(freed, vec![7, 2]);
+        assert_eq!(t.capacity(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond block table")]
+    fn physical_out_of_range_panics() {
+        let mut t = BlockTable::new(4);
+        t.push_block(0);
+        let _ = t.physical(4);
+    }
+
+    /// Property: under random alloc/claim/release traffic the allocator
+    /// never hands out a unit that is already in use, available+used is
+    /// conserved, and the free snapshot stays sorted and consistent.
+    #[test]
+    fn prop_allocator_soundness() {
+        property("block allocator soundness", 200, |rng: &mut Rng| {
             let n = 1 + rng.usize_below(8);
-            let mut a = SlotAllocator::new(n);
+            let mut a = BlockAllocator::new(n);
             let mut held: Vec<usize> = Vec::new();
             for _ in 0..100 {
-                if rng.bool(0.5) {
-                    if let Some(s) = a.alloc() {
-                        prop_assert!(
-                            !held.contains(&s),
-                            "slot {s} double-allocated (held: {held:?})"
-                        );
-                        held.push(s);
-                    } else {
-                        prop_assert!(held.len() == n,
-                                     "alloc failed with {} held of {n}", held.len());
+                match rng.below(3) {
+                    0 => {
+                        if let Some(s) = a.alloc() {
+                            prop_assert!(
+                                !held.contains(&s),
+                                "unit {s} double-allocated (held: {held:?})"
+                            );
+                            held.push(s);
+                        } else {
+                            prop_assert!(
+                                held.len() == n,
+                                "alloc failed with {} held of {n}",
+                                held.len()
+                            );
+                        }
                     }
-                } else if !held.is_empty() {
-                    let i = rng.usize_below(held.len());
-                    let s = held.swap_remove(i);
-                    a.release(s);
+                    1 => {
+                        // claim a random unit; must succeed iff free
+                        let u = rng.usize_below(n);
+                        let was_free = !held.contains(&u);
+                        prop_assert!(a.claim(u) == was_free);
+                        if was_free {
+                            held.push(u);
+                        }
+                    }
+                    _ => {
+                        if !held.is_empty() {
+                            let i = rng.usize_below(held.len());
+                            let s = held.swap_remove(i);
+                            a.release(s);
+                        }
+                    }
                 }
                 prop_assert!(a.available() + a.used() == n);
                 prop_assert!(a.used() == held.len());
+                let free = a.free_list();
+                prop_assert!(free.windows(2).all(|w| w[0] < w[1]), "not ascending: {free:?}");
+                prop_assert!(free.iter().all(|u| !held.contains(u)));
             }
+            Ok(())
+        });
+    }
+
+    /// Property: a block table filled through random alloc/grow traffic
+    /// maps every logical position into the cell range of exactly the
+    /// block that holds it, with no two logical positions sharing a cell
+    /// (fragmented physical order included).
+    #[test]
+    fn prop_table_mapping_injective() {
+        property("block table mapping injective", 100, |rng: &mut Rng| {
+            let bs = 1 + rng.usize_below(6);
+            let n_blocks = 2 + rng.usize_below(10);
+            let mut alloc = BlockAllocator::new(n_blocks);
+            let mut t = BlockTable::new(bs);
+            let len = rng.usize_below(n_blocks * bs);
+            let needed = len.div_ceil(bs);
+            // Fragment the physical order: hold some blocks aside while
+            // the table grows, so its ids are neither contiguous nor
+            // ascending (LIFO would otherwise hand them out in order).
+            let mut held: Vec<usize> = Vec::new();
+            while t.blocks().len() < needed {
+                let left = needed - t.blocks().len();
+                if rng.bool(0.4) && alloc.available() > left {
+                    held.push(alloc.alloc().expect("headroom checked"));
+                }
+                t.push_block(alloc.alloc().expect("pool sized for len"));
+                if rng.bool(0.5) {
+                    if let Some(b) = held.pop() {
+                        alloc.release(b);
+                    }
+                }
+            }
+            let mut seen = std::collections::HashSet::new();
+            for pos in 0..len {
+                let cell = t.physical(pos);
+                let blk = t.blocks()[pos / bs];
+                prop_assert!(cell >= blk * bs && cell < (blk + 1) * bs);
+                prop_assert!(seen.insert(cell), "cell {cell} reused");
+            }
+            // runs cover 0..len exactly once, in logical order
+            let mut covered = 0usize;
+            for (t0, p0, rl) in t.runs(len) {
+                prop_assert!(t0 == covered, "runs out of order");
+                for k in 0..rl {
+                    prop_assert!(t.physical(t0 + k) == p0 + k);
+                }
+                covered += rl;
+            }
+            prop_assert!(covered == len);
             Ok(())
         });
     }

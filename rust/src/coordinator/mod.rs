@@ -2,18 +2,22 @@
 //! HuggingFace; this is our from-scratch equivalent).
 //!
 //! Components:
-//! * [`model`]       — the step-model abstraction (PJRT-backed or mock)
+//! * [`model`]       — the step-model abstraction (native / PJRT / mock),
+//!   including the paged-KV hooks (`kv_layout`/`kv_map`/`kv_save`/
+//!   `kv_restore`)
 //! * [`request`]     — request lifecycle + sampling params
 //! * [`queue`]       — bounded admission queue with backpressure
-//! * [`kv`]          — KV slot allocator over the fixed decode batch
+//! * [`kv`]          — paged KV accounting: [`kv::BlockAllocator`],
+//!   per-request [`kv::BlockTable`]s, [`kv::KvLayout`]
 //! * [`batcher`]     — continuous batching of decode steps
 //! * [`scheduler`]   — per-iteration [`scheduler::StepPlan`] assembly:
-//!   a pluggable [`scheduler::SchedulerPolicy`] ranks admissions, the
-//!   policy-independent driver interleaves concurrent prefills with
-//!   decode under a starvation guard
+//!   a pluggable [`scheduler::SchedulerPolicy`] ranks admissions; the
+//!   policy-independent driver co-schedules prefill chunks with the
+//!   decode batch under a token budget, and preempts/resumes decodes
+//!   under KV block pressure
 //! * [`sampler`]     — greedy / temperature / top-k token sampling
 //! * [`engine_loop`] — executes the plans: multi-prefill [`engine_loop::PrefillSet`],
-//!   decode batching, accounting
+//!   block-table growth, swap pool, decode batching, accounting
 //! * [`router`]      — routes requests across variants/replicas
 
 pub mod batcher;
@@ -26,11 +30,10 @@ pub mod router;
 pub mod sampler;
 pub mod scheduler;
 
-pub use engine_loop::{EngineConfig, EngineSnapshot, EngineStats,
-                      InferenceEngine};
-pub use model::{MockModel, StepModel};
+pub use engine_loop::{EngineConfig, EngineSnapshot, EngineStats, InferenceEngine};
+pub use kv::{BlockAllocator, BlockTable, KvLayout};
+pub use model::{KvSwap, MockModel, StepModel};
 #[cfg(feature = "pjrt")]
 pub use model::PjrtModel;
 pub use request::{FinishReason, Request, RequestId, SamplingParams};
-pub use scheduler::{PolicyKind, SchedulerConfig, SchedulerPolicy, StepOutcome,
-                    StepPlan};
+pub use scheduler::{PolicyKind, SchedulerConfig, SchedulerPolicy, StepOutcome, StepPlan};

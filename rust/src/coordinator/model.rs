@@ -7,12 +7,20 @@
 //!   `TINY_GELU` shape) executed std-only on the CPU, with either a
 //!   dense FFN or the TARDIS partially-linear fold from [`crate::ffn`];
 //!   the whole scheduler/policy machinery runs unchanged on top of it.
+//!   Its host KV cache is **paged**: K/V rows live in fixed-size blocks
+//!   and every cache access goes through the slot's [`BlockTable`], so
+//!   the engine can hand out fragmented blocks, swap a preempted
+//!   request's cache to the host pool, and restore it bitwise into
+//!   *different* physical blocks.
 //! * `PjrtModel`   — (behind the `pjrt` feature) wraps a loaded
-//!   [`crate::runtime::Variant`] and owns the device-resident KV cache,
-//!   threading it through prefill/decode calls.
+//!   [`crate::runtime::Variant`] and owns the device-resident KV cache.
+//!   Its exported executables address KV by slot, i.e. the degenerate
+//!   one-block-per-slot [`KvLayout`]; it ignores block tables and does
+//!   not support preemption.
 
 use anyhow::Result;
 
+use super::kv::{BlockTable, KvLayout};
 use super::scheduler::{StepOutcome, StepPlan};
 
 use crate::config::{FfnMode, NativeModelConfig, TardisFfnConfig};
@@ -27,6 +35,29 @@ use crate::util::threadpool::ThreadPool;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Engine, Variant};
 
+/// Host-side copy of one preempted request's KV cache, produced by
+/// [`StepModel::kv_save`] and consumed bitwise by
+/// [`StepModel::kv_restore`] — possibly into different physical blocks.
+/// Opaque to the engine beyond the token count; the payload is
+/// backend-private.
+#[derive(Debug, Clone)]
+pub struct KvSwap {
+    /// Cache entries (logical token positions) saved.
+    pub tokens: usize,
+    payload: SwapPayload,
+}
+
+/// What a backend actually stashed; a restore into a different backend
+/// kind is a hard error, not a silent no-op.
+#[derive(Debug, Clone)]
+enum SwapPayload {
+    /// Native backend: per layer, the K rows then the V rows, each
+    /// `[tokens * d_model]` in logical-position order.
+    Layers(Vec<Vec<f32>>),
+    /// Mock backend: the slot's (last token, position) state.
+    MockState(Option<(i32, usize)>),
+}
+
 pub trait StepModel {
     /// Fixed decode batch (number of KV slots).
     fn batch(&self) -> usize;
@@ -34,6 +65,40 @@ pub trait StepModel {
     fn vocab(&self) -> usize;
     /// Ascending prefill chunk sizes the model was exported with.
     fn prefill_buckets(&self) -> &[usize];
+
+    /// Paged-KV geometry of this backend. The default is the degenerate
+    /// one-block-per-slot layout (block tables carry no information and
+    /// may be ignored); paged backends override it.
+    fn kv_layout(&self) -> KvLayout {
+        KvLayout::degenerate(self.batch(), self.max_seq())
+    }
+
+    /// Install `slot`'s block table (called by the engine whenever the
+    /// table grows, clears, or is rebound on resume, before the next
+    /// prefill/decode touching the slot). Backends with slot-addressed
+    /// caches ignore it.
+    fn kv_map(&mut self, _slot: usize, _table: &BlockTable) {}
+
+    /// Whether [`Self::kv_save`]/[`Self::kv_restore`] work — i.e. the
+    /// scheduler may preempt this backend's decodes under block pressure.
+    fn supports_preemption(&self) -> bool {
+        false
+    }
+
+    /// Copy `slot`'s first `tokens` cache entries (through its current
+    /// block table) into a host swap buffer.
+    fn kv_save(&mut self, _slot: usize, _tokens: usize) -> Result<KvSwap> {
+        Err(anyhow::anyhow!("backend does not support KV save/restore"))
+    }
+
+    /// Write a saved cache back through `slot`'s *current* block table
+    /// (installed via [`Self::kv_map`] first; the physical blocks may
+    /// differ from the ones saved). Must be bitwise: a resumed request
+    /// continues exactly the token stream it would have produced
+    /// uninterrupted.
+    fn kv_restore(&mut self, _slot: usize, _swap: &KvSwap) -> Result<()> {
+        Err(anyhow::anyhow!("backend does not support KV save/restore"))
+    }
 
     /// Plan-level hook: called once per engine iteration with the
     /// [`StepPlan`] about to execute, before any prefill/decode dispatch.
@@ -47,8 +112,14 @@ pub trait StepModel {
     /// Prefill `tokens` (padded to `bucket`; the first `real_len` are
     /// real) into `slot` starting at absolute position `pos0`. Returns
     /// the logits of the last *real* token, `[vocab]`.
-    fn prefill(&mut self, bucket: usize, tokens: &[i32], real_len: usize,
-               slot: usize, pos0: usize) -> Result<Vec<f32>>;
+    fn prefill(
+        &mut self,
+        bucket: usize,
+        tokens: &[i32],
+        real_len: usize,
+        slot: usize,
+        pos0: usize,
+    ) -> Result<Vec<f32>>;
 
     /// One decode step over all slots. `tokens[b]`/`pos[b]` for inactive
     /// slots carry (0, max_seq) sentinels. Returns logits `[batch*vocab]`.
@@ -96,9 +167,14 @@ pub struct PjrtModel<'e> {
 
 #[cfg(feature = "pjrt")]
 impl<'e> PjrtModel<'e> {
-    pub fn new(engine: &'e Engine, variant: Variant, batch: usize,
-               max_seq: usize, vocab: usize, buckets: Vec<usize>)
-               -> Result<Self> {
+    pub fn new(
+        engine: &'e Engine,
+        variant: Variant,
+        batch: usize,
+        max_seq: usize,
+        vocab: usize,
+        buckets: Vec<usize>,
+    ) -> Result<Self> {
         let kv = variant.fresh_kv(engine)?;
         Ok(PjrtModel {
             engine,
@@ -155,12 +231,26 @@ impl<'e> StepModel for PjrtModel<'e> {
         }
     }
 
-    fn prefill(&mut self, bucket: usize, tokens: &[i32], real_len: usize,
-               slot: usize, pos0: usize) -> Result<Vec<f32>> {
-        anyhow::ensure!(real_len >= 1 && real_len <= bucket,
-                        "real_len {real_len} not in 1..={bucket}");
+    fn prefill(
+        &mut self,
+        bucket: usize,
+        tokens: &[i32],
+        real_len: usize,
+        slot: usize,
+        pos0: usize,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            real_len >= 1 && real_len <= bucket,
+            "real_len {real_len} not in 1..={bucket}"
+        );
         let (logits, kv) = self.variant.prefill(
-            self.engine, bucket, tokens, &self.kv, slot as i32, pos0 as i32)?;
+            self.engine,
+            bucket,
+            tokens,
+            &self.kv,
+            slot as i32,
+            pos0 as i32,
+        )?;
         self.kv = kv;
         self.prefill_chunks += 1;
         // The executable returns logits for every chunk row; pad-query
@@ -170,8 +260,7 @@ impl<'e> StepModel for PjrtModel<'e> {
     }
 
     fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
-        let (logits, kv) =
-            self.variant.decode(self.engine, tokens, pos, &self.kv)?;
+        let (logits, kv) = self.variant.decode(self.engine, tokens, pos, &self.kv)?;
         self.kv = kv;
         self.decode_steps += 1;
         Ok(logits)
@@ -190,8 +279,9 @@ struct RowCtx {
     pos: usize,
 }
 
-/// Host-resident K/V cache of one layer: `[batch, max_seq, d_model]`
-/// each, row-major.
+/// Host-resident paged K/V store of one layer:
+/// `[num_blocks, block_size, d_model]` each. A logical position of a
+/// slot resolves to a cell through the slot's [`BlockTable`].
 struct LayerKv {
     k: Vec<f32>,
     v: Vec<f32>,
@@ -208,6 +298,11 @@ pub struct NativeModel {
     mode_name: &'static str,
     weights: NativeWeights,
     ffns: Vec<FfnBackend>,
+    layout: KvLayout,
+    /// Per-slot block tables (installed via [`StepModel::kv_map`]; a
+    /// standalone model starts with the identity mapping when the pool
+    /// is large enough to give every slot a full span).
+    tables: Vec<BlockTable>,
     kv: Vec<LayerKv>,
     pool: Option<ThreadPool>,
     /// Reusable forward-pass buffers: once warm, the forward pass's
@@ -284,23 +379,35 @@ impl NativeModel {
                                 ))
                             }
                             None => {
-                                let lin = Linearization::fit_gelu(
-                                    t.linear_lo,
-                                    t.linear_hi,
-                                );
-                                FfnBackend::Dense(
-                                    dense.with_linearization(lin, units),
-                                )
+                                let lin = Linearization::fit_gelu(t.linear_lo, t.linear_hi);
+                                FfnBackend::Dense(dense.with_linearization(lin, units))
                             }
                         }
                     }
                 }
             })
             .collect();
+        let layout = cfg.resolved_kv_layout();
+        let layout = KvLayout { num_blocks: layout.0, block_size: layout.1 };
         let kv = (0..cfg.n_layers)
             .map(|_| LayerKv {
-                k: vec![0f32; cfg.batch * cfg.max_seq * cfg.d_model],
-                v: vec![0f32; cfg.batch * cfg.max_seq * cfg.d_model],
+                k: vec![0f32; layout.capacity_tokens() * cfg.d_model],
+                v: vec![0f32; layout.capacity_tokens() * cfg.d_model],
+            })
+            .collect();
+        // Standalone (engine-less) use gets the identity mapping when the
+        // pool spans every slot; an undersized pool starts unmapped and
+        // relies on the engine's kv_map calls.
+        let bps = cfg.max_seq.div_ceil(layout.block_size);
+        let tables = (0..cfg.batch)
+            .map(|s| {
+                let mut t = BlockTable::new(layout.block_size);
+                if layout.num_blocks >= cfg.batch * bps {
+                    for b in 0..bps {
+                        t.push_block(s * bps + b);
+                    }
+                }
+                t
             })
             .collect();
         let pool = if cfg.threads > 0 {
@@ -312,6 +419,8 @@ impl NativeModel {
             mode_name: mode.name(),
             weights,
             ffns,
+            layout,
+            tables,
             kv,
             pool,
             scratch: Scratch::new(),
@@ -355,7 +464,9 @@ impl NativeModel {
     /// is recycled before returning — the returned logits buffer (which
     /// the engine consumes) is the forward pass's only per-call heap
     /// allocation. All projections (attention, FFN, unembedding) run the
-    /// blocked kernels over weights packed at load time.
+    /// blocked kernels over weights packed at load time. K/V reads and
+    /// writes go through the per-slot block tables, walking whole-block
+    /// runs so the gather stays span-contiguous.
     fn forward(&mut self, rows: &[RowCtx], logit_rows: &[usize]) -> Vec<f32> {
         let n = rows.len();
         let d = self.cfg.d_model;
@@ -388,26 +499,30 @@ impl NativeModel {
             matmul(pool, &a, n, &lw.attn.wq_packed, Epilogue::Store, &mut q);
             matmul(pool, &a, n, &lw.attn.wk_packed, Epilogue::Store, &mut kb);
             matmul(pool, &a, n, &lw.attn.wv_packed, Epilogue::Store, &mut vb);
+            let tables = &self.tables;
             let kv = &mut self.kv[li];
             for (i, r) in rows.iter().enumerate() {
-                let off = (r.slot * max_seq + r.pos) * d;
+                let off = tables[r.slot].physical(r.pos) * d;
                 kv.k[off..off + d].copy_from_slice(&kb[i * d..(i + 1) * d]);
                 kv.v[off..off + d].copy_from_slice(&vb[i * d..(i + 1) * d]);
             }
-            // Causal attention per row over its slot's cache 0..=pos.
+            // Causal attention per row over its slot's cache 0..=pos,
+            // gathered block-run by block-run through the slot's table.
             // Rows never share a (slot, pos) cell and each attends only
             // up to its own position, so batch order cannot leak.
             ctx.fill(0.0);
             for (i, r) in rows.iter().enumerate() {
-                let base = r.slot * max_seq * d;
+                let table = &tables[r.slot];
                 for head in 0..n_heads {
                     let qh = &q[i * d + head * hd..i * d + (head + 1) * hd];
                     let mut max_s = f32::NEG_INFINITY;
-                    for (t, s) in scores.iter_mut().enumerate().take(r.pos + 1) {
-                        let koff = base + t * d + head * hd;
-                        let sv = dot(qh, &kv.k[koff..koff + hd]) * scale;
-                        max_s = max_s.max(sv);
-                        *s = sv;
+                    for (t0, p0, rl) in table.runs(r.pos + 1) {
+                        for (j, s) in scores[t0..t0 + rl].iter_mut().enumerate() {
+                            let koff = (p0 + j) * d + head * hd;
+                            let sv = dot(qh, &kv.k[koff..koff + hd]) * scale;
+                            max_s = max_s.max(sv);
+                            *s = sv;
+                        }
                     }
                     let mut denom = 0f32;
                     for s in scores[..=r.pos].iter_mut() {
@@ -415,12 +530,13 @@ impl NativeModel {
                         denom += *s;
                     }
                     let out = &mut ctx[i * d + head * hd..i * d + (head + 1) * hd];
-                    for (t, &w) in scores[..=r.pos].iter().enumerate() {
-                        let voff = base + t * d + head * hd;
-                        let p = w / denom;
-                        for (ov, &vv) in out.iter_mut().zip(&kv.v[voff..voff + hd])
-                        {
-                            *ov += p * vv;
+                    for (t0, p0, rl) in table.runs(r.pos + 1) {
+                        for (j, &w) in scores[t0..t0 + rl].iter().enumerate() {
+                            let voff = (p0 + j) * d + head * hd;
+                            let p = w / denom;
+                            for (ov, &vv) in out.iter_mut().zip(&kv.v[voff..voff + hd]) {
+                                *ov += p * vv;
+                            }
                         }
                     }
                 }
@@ -489,6 +605,73 @@ impl StepModel for NativeModel {
         &self.cfg.prefill_buckets
     }
 
+    fn kv_layout(&self) -> KvLayout {
+        self.layout
+    }
+
+    fn kv_map(&mut self, slot: usize, table: &BlockTable) {
+        assert!(slot < self.cfg.batch, "slot {slot} out of range");
+        assert_eq!(table.block_size(), self.layout.block_size);
+        assert!(
+            table.blocks().iter().all(|&b| b < self.layout.num_blocks),
+            "block table references blocks outside the pool"
+        );
+        self.tables[slot] = table.clone();
+    }
+
+    fn supports_preemption(&self) -> bool {
+        true
+    }
+
+    fn kv_save(&mut self, slot: usize, tokens: usize) -> Result<KvSwap> {
+        anyhow::ensure!(slot < self.cfg.batch, "slot {slot} out of range");
+        let table = self.tables[slot].clone();
+        anyhow::ensure!(
+            table.capacity() >= tokens,
+            "kv_save of {tokens} tokens beyond table capacity {}",
+            table.capacity()
+        );
+        let d = self.cfg.d_model;
+        let mut layers = Vec::with_capacity(self.kv.len() * 2);
+        for layer in &self.kv {
+            for buf in [&layer.k, &layer.v] {
+                let mut out = Vec::with_capacity(tokens * d);
+                for (_t0, p0, rl) in table.runs(tokens) {
+                    out.extend_from_slice(&buf[p0 * d..(p0 + rl) * d]);
+                }
+                layers.push(out);
+            }
+        }
+        Ok(KvSwap { tokens, payload: SwapPayload::Layers(layers) })
+    }
+
+    fn kv_restore(&mut self, slot: usize, swap: &KvSwap) -> Result<()> {
+        anyhow::ensure!(slot < self.cfg.batch, "slot {slot} out of range");
+        let table = self.tables[slot].clone();
+        anyhow::ensure!(
+            table.capacity() >= swap.tokens,
+            "kv_restore of {} tokens beyond table capacity {} (missing kv_map?)",
+            swap.tokens,
+            table.capacity()
+        );
+        let SwapPayload::Layers(layers) = &swap.payload else {
+            anyhow::bail!("kv swap payload is not native layer data");
+        };
+        anyhow::ensure!(layers.len() == self.kv.len() * 2, "kv swap layer count mismatch");
+        let d = self.cfg.d_model;
+        for (li, layer) in self.kv.iter_mut().enumerate() {
+            let ksrc = &layers[2 * li];
+            let vsrc = &layers[2 * li + 1];
+            for (t0, p0, rl) in table.runs(swap.tokens) {
+                layer.k[p0 * d..(p0 + rl) * d]
+                    .copy_from_slice(&ksrc[t0 * d..(t0 + rl) * d]);
+                layer.v[p0 * d..(p0 + rl) * d]
+                    .copy_from_slice(&vsrc[t0 * d..(t0 + rl) * d]);
+            }
+        }
+        Ok(())
+    }
+
     fn ffn_telemetry(&self) -> Option<FfnTelemetry> {
         let mut total = FfnTelemetry::default();
         let mut any = false;
@@ -505,13 +688,25 @@ impl StepModel for NativeModel {
         }
     }
 
-    fn prefill(&mut self, bucket: usize, tokens: &[i32], real_len: usize,
-               slot: usize, pos0: usize) -> Result<Vec<f32>> {
+    fn prefill(
+        &mut self,
+        bucket: usize,
+        tokens: &[i32],
+        real_len: usize,
+        slot: usize,
+        pos0: usize,
+    ) -> Result<Vec<f32>> {
         anyhow::ensure!(tokens.len() == bucket, "tokens not padded to bucket");
         anyhow::ensure!(slot < self.cfg.batch, "slot {slot} out of range");
         anyhow::ensure!(real_len >= 1 && real_len <= bucket);
-        anyhow::ensure!(pos0 + real_len <= self.cfg.max_seq,
-                        "prefill past max_seq");
+        anyhow::ensure!(pos0 + real_len <= self.cfg.max_seq, "prefill past max_seq");
+        anyhow::ensure!(
+            self.tables[slot].capacity() >= pos0 + real_len,
+            "slot {slot} block table holds {} tokens, prefill needs {} \
+             (missing kv_map?)",
+            self.tables[slot].capacity(),
+            pos0 + real_len
+        );
         let rows: Vec<RowCtx> = tokens[..real_len]
             .iter()
             .enumerate()
@@ -530,6 +725,12 @@ impl StepModel for NativeModel {
         for b in 0..batch {
             let p = pos[b];
             if p >= 0 && (p as usize) < self.cfg.max_seq {
+                anyhow::ensure!(
+                    self.tables[b].capacity() > p as usize,
+                    "slot {b} block table holds {} tokens, decode writes at \
+                     {p} (missing kv_map?)",
+                    self.tables[b].capacity()
+                );
                 rows.push(RowCtx { token: tokens[b], slot: b, pos: p as usize });
                 row_slots.push(b);
             }
@@ -557,12 +758,18 @@ impl StepModel for NativeModel {
 /// position): `argmax = (token + position) % vocab`. This makes generated
 /// sequences predictable so scheduler tests can assert exact outputs, and
 /// lets tests detect cross-slot contamination (a wrong slot's state would
-/// change the argmax).
+/// change the argmax). Its per-slot state swaps in and out through
+/// [`StepModel::kv_save`]/[`StepModel::kv_restore`], and an overridden
+/// [`KvLayout`] lets scheduler tests exercise block pressure and
+/// preemption without the native backend's compute cost.
 pub struct MockModel {
     batch: usize,
     max_seq: usize,
     vocab: usize,
     buckets: Vec<usize>,
+    /// Paged-geometry override ([`MockModel::with_kv_layout`]); the
+    /// default is the degenerate one-block-per-slot layout.
+    layout: Option<KvLayout>,
     /// last (token, pos) per slot — emulates per-slot KV state.
     state: Vec<Option<(i32, usize)>>,
     pub decode_steps: u64,
@@ -579,13 +786,13 @@ pub struct MockModel {
 }
 
 impl MockModel {
-    pub fn new(batch: usize, max_seq: usize, vocab: usize,
-               buckets: Vec<usize>) -> Self {
+    pub fn new(batch: usize, max_seq: usize, vocab: usize, buckets: Vec<usize>) -> Self {
         MockModel {
             batch,
             max_seq,
             vocab,
             buckets,
+            layout: None,
             state: vec![None; batch],
             decode_steps: 0,
             prefill_chunks: 0,
@@ -595,6 +802,14 @@ impl MockModel {
             plan_ends_seen: 0,
             spin_per_call: std::time::Duration::ZERO,
         }
+    }
+
+    /// Report a paged [`KvLayout`] so engine tests can put the block
+    /// allocator under pressure (the mock itself addresses state by slot
+    /// and ignores block tables).
+    pub fn with_kv_layout(mut self, num_blocks: usize, block_size: usize) -> Self {
+        self.layout = Some(KvLayout { num_blocks, block_size });
+        self
     }
 
     fn logits_for(&self, token: i32, pos: usize) -> Vec<f32> {
@@ -627,11 +842,31 @@ impl StepModel for MockModel {
         &self.buckets
     }
 
+    fn kv_layout(&self) -> KvLayout {
+        self.layout
+            .unwrap_or_else(|| KvLayout::degenerate(self.batch, self.max_seq))
+    }
+
+    fn supports_preemption(&self) -> bool {
+        true
+    }
+
+    fn kv_save(&mut self, slot: usize, tokens: usize) -> Result<KvSwap> {
+        Ok(KvSwap { tokens, payload: SwapPayload::MockState(self.state[slot]) })
+    }
+
+    fn kv_restore(&mut self, slot: usize, swap: &KvSwap) -> Result<()> {
+        let SwapPayload::MockState(state) = &swap.payload else {
+            anyhow::bail!("kv swap payload is not mock state");
+        };
+        self.state[slot] = *state;
+        Ok(())
+    }
+
     fn plan_begin(&mut self, plan: &StepPlan) {
         self.plans_seen += 1;
         let distinct = {
-            let mut slots: Vec<usize> =
-                plan.prefill_chunks.iter().map(|c| c.slot).collect();
+            let mut slots: Vec<usize> = plan.prefill_chunks.iter().map(|c| c.slot).collect();
             slots.sort_unstable();
             slots.dedup();
             slots.len()
@@ -643,8 +878,14 @@ impl StepModel for MockModel {
         self.plan_ends_seen += 1;
     }
 
-    fn prefill(&mut self, bucket: usize, tokens: &[i32], real_len: usize,
-               slot: usize, pos0: usize) -> Result<Vec<f32>> {
+    fn prefill(
+        &mut self,
+        bucket: usize,
+        tokens: &[i32],
+        real_len: usize,
+        slot: usize,
+        pos0: usize,
+    ) -> Result<Vec<f32>> {
         anyhow::ensure!(tokens.len() == bucket, "tokens not padded to bucket");
         anyhow::ensure!(slot < self.batch, "slot out of range");
         anyhow::ensure!(real_len >= 1 && real_len <= bucket);
@@ -696,6 +937,19 @@ mod tests {
     }
 
     #[test]
+    fn mock_state_swaps_in_and_out() {
+        let mut m = MockModel::new(2, 32, 16, vec![4]).with_kv_layout(4, 8);
+        assert_eq!(m.kv_layout(), KvLayout { num_blocks: 4, block_size: 8 });
+        assert!(m.supports_preemption());
+        let _ = m.prefill(4, &[1, 2, 3, 0], 3, 0, 0).unwrap();
+        let swap = m.kv_save(0, 3).unwrap();
+        // clobber the slot, then restore: decode continues identically
+        m.state[0] = Some((9, 9));
+        m.kv_restore(0, &swap).unwrap();
+        assert_eq!(m.state[0], Some((3, 2)));
+    }
+
+    #[test]
     fn bucket_for_picks_smallest_fit() {
         let m = MockModel::new(2, 32, 16, vec![4, 8, 16]);
         assert_eq!(m.bucket_for(1), 4);
@@ -725,7 +979,17 @@ mod tests {
             prefill_buckets: vec![4, 8],
             seed: 1234,
             threads: 0,
+            kv_block_size: 8,
+            kv_blocks: 0,
         }
+    }
+
+    #[test]
+    fn native_reports_paged_layout() {
+        let m = NativeModel::new(native_cfg(), &FfnMode::Dense);
+        // auto pool: batch 2 * ceil(32/8) = 8 blocks of 8 tokens
+        assert_eq!(m.kv_layout(), KvLayout { num_blocks: 8, block_size: 8 });
+        assert!(m.supports_preemption());
     }
 
     #[test]
@@ -775,6 +1039,68 @@ mod tests {
     }
 
     #[test]
+    fn native_fragmented_table_matches_identity_mapping() {
+        // The same token stream through an arbitrarily scrambled block
+        // table must produce bitwise the logits of the identity mapping:
+        // attention gathers by logical position, never physical order.
+        let cfg = native_cfg();
+        let mut ident = NativeModel::new(cfg.clone(), &FfnMode::Dense);
+        let mut paged = NativeModel::new(cfg, &FfnMode::Dense);
+        let mut t = BlockTable::new(8);
+        for b in [5, 1, 6, 3] {
+            t.push_block(b);
+        }
+        paged.kv_map(0, &t);
+        let lp_i = ident.prefill(8, &[3, 7, 11, 2, 5, 0, 0, 0], 5, 0, 0).unwrap();
+        let lp_p = paged.prefill(8, &[3, 7, 11, 2, 5, 0, 0, 0], 5, 0, 0).unwrap();
+        assert_eq!(
+            lp_i.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            lp_p.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        for s in 5..12 {
+            let di = ident.decode(&[s, 0], &[s, 32]).unwrap();
+            let dp = paged.decode(&[s, 0], &[s, 32]).unwrap();
+            assert_eq!(
+                di.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                dp.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "step {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn native_save_restore_is_bitwise_into_different_blocks() {
+        let cfg = native_cfg();
+        let mut base = NativeModel::new(cfg.clone(), &FfnMode::Dense);
+        let mut moved = NativeModel::new(cfg, &FfnMode::Dense);
+        let _ = base.prefill(8, &[3, 7, 11, 2, 5, 0, 0, 0], 5, 0, 0).unwrap();
+        let _ = moved.prefill(8, &[3, 7, 11, 2, 5, 0, 0, 0], 5, 0, 0).unwrap();
+        // Save 7 cached tokens (5 prompt + 2 decodes), rebind the slot to
+        // different physical blocks, restore, and continue decoding.
+        for s in 5..7 {
+            let _ = base.decode(&[s, 0], &[s, 32]).unwrap();
+            let _ = moved.decode(&[s, 0], &[s, 32]).unwrap();
+        }
+        let swap = moved.kv_save(0, 7).unwrap();
+        assert_eq!(swap.tokens, 7);
+        let mut t = BlockTable::new(8);
+        for b in [7, 4, 2, 6] {
+            t.push_block(b);
+        }
+        moved.kv_map(0, &t);
+        moved.kv_restore(0, &swap).unwrap();
+        for s in 7..12 {
+            let db = base.decode(&[s, 0], &[s, 32]).unwrap();
+            let dm = moved.decode(&[s, 0], &[s, 32]).unwrap();
+            assert_eq!(
+                db.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                dm.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "step {s}"
+            );
+        }
+    }
+
+    #[test]
     fn native_tardis_tracks_reference_and_reports_telemetry() {
         let cfg = native_cfg();
         // Wide linear range: pre-activations are ~N(0,1) post-LN, so
@@ -787,12 +1113,8 @@ mod tests {
             predictor_threshold: 1.05,
             ..Default::default()
         };
-        let mut tardis = NativeModel::new(
-            cfg.clone(),
-            &FfnMode::Tardis(t),
-        );
-        let mut reference =
-            NativeModel::new(cfg, &FfnMode::TardisReference(t));
+        let mut tardis = NativeModel::new(cfg.clone(), &FfnMode::Tardis(t));
+        let mut reference = NativeModel::new(cfg, &FfnMode::TardisReference(t));
         assert_eq!(tardis.ffn_mode_name(), "tardis");
         assert!(tardis.fold_compression_ratio().unwrap() > 0.3);
         assert!(reference.fold_compression_ratio().is_none());
@@ -810,8 +1132,7 @@ mod tests {
         }
         let tele = tardis.ffn_telemetry().expect("tardis has telemetry");
         assert!(tele.total_rows() > 0);
-        assert!(reference.ffn_telemetry().is_none(),
-                "reference path reports no fold telemetry");
+        assert!(reference.ffn_telemetry().is_none(), "reference path reports no fold telemetry");
     }
 
     #[test]
@@ -819,12 +1140,11 @@ mod tests {
         use crate::coordinator::scheduler::ChunkSpec;
         let mut m = MockModel::new(2, 8, 4, vec![4]);
         let plan = StepPlan {
-            admissions: vec![],
             prefill_chunks: vec![
                 ChunkSpec { request: 1, slot: 0 },
                 ChunkSpec { request: 2, slot: 1 },
             ],
-            decode: None,
+            ..Default::default()
         };
         m.plan_begin(&plan);
         m.plan_end(&StepOutcome::default());

@@ -39,6 +39,15 @@ impl AdmissionQueue {
         self.q.pop_front()
     }
 
+    /// Put an already-admitted request back at the *front* of the queue
+    /// (a last-resort prefill abort under KV block pressure; it restarts
+    /// from its prompt on re-admission). Bypasses the capacity check —
+    /// the request's slot in the system was already granted once, and
+    /// dropping it here would lose it.
+    pub fn requeue_front(&mut self, r: Request) {
+        self.q.push_front(r);
+    }
+
     pub fn peek(&self) -> Option<&Request> {
         self.q.front()
     }

@@ -1,6 +1,7 @@
 //! Request lifecycle: a request enters the admission queue, is prefilled
-//! chunk by chunk into a KV slot, decodes one token per engine iteration,
-//! and finishes on length / stop-token / cancellation.
+//! chunk by chunk into KV blocks, decodes one token per engine iteration
+//! (possibly swapping out and back in under block pressure), and finishes
+//! on length / stop-token / cancellation.
 
 use std::time::Instant;
 
@@ -50,6 +51,10 @@ pub enum RequestState {
     /// `next` = how many prompt tokens are already in the KV cache.
     Prefilling { slot: usize, next: usize },
     Decoding { slot: usize },
+    /// Evicted under KV block pressure: the cache sits in the host swap
+    /// pool until a [`crate::coordinator::scheduler::Resume`] restores it
+    /// bitwise into fresh blocks.
+    Preempted,
     Finished(FinishReason),
 }
 

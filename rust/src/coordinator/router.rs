@@ -79,8 +79,12 @@ impl<M: StepModel> Router<M> {
         Ok(idx)
     }
 
-    pub fn submit(&mut self, variant: Option<&str>, prompt: Vec<i32>,
-                  params: SamplingParams) -> Result<RouteTicket> {
+    pub fn submit(
+        &mut self,
+        variant: Option<&str>,
+        prompt: Vec<i32>,
+        params: SamplingParams,
+    ) -> Result<RouteTicket> {
         let idx = self.pick(variant)?;
         let id = self.replicas[idx].engine.submit(prompt, params)?;
         self.routed += 1;
@@ -161,10 +165,8 @@ mod tests {
         let mut r = router(2);
         let mut counts = [0usize; 2];
         for i in 0..8 {
-            let t = r
-                .submit(None, vec![1 + i],
-                        SamplingParams { max_tokens: 2, ..Default::default() })
-                .unwrap();
+            let params = SamplingParams { max_tokens: 2, ..Default::default() };
+            let t = r.submit(None, vec![1 + i], params).unwrap();
             counts[t.replica] += 1;
         }
         assert!(counts[0] >= 3 && counts[1] >= 3, "unbalanced {counts:?}");
@@ -173,9 +175,8 @@ mod tests {
     #[test]
     fn stats_snapshot_covers_every_replica() {
         let mut r = router(2);
-        r.submit(Some("v1"), vec![1, 2],
-                 SamplingParams { max_tokens: 2, ..Default::default() })
-            .unwrap();
+        let params = SamplingParams { max_tokens: 2, ..Default::default() };
+        r.submit(Some("v1"), vec![1, 2], params).unwrap();
         let stats = r.stats_snapshot();
         assert_eq!(stats.len(), 2);
         assert_eq!(stats[0].0, "v0");
@@ -192,9 +193,8 @@ mod tests {
     fn run_to_completion_drains_all() {
         let mut r = router(2);
         for i in 0..6 {
-            r.submit(None, vec![1 + i, 2],
-                     SamplingParams { max_tokens: 3, ..Default::default() })
-                .unwrap();
+            let params = SamplingParams { max_tokens: 3, ..Default::default() };
+            r.submit(None, vec![1 + i, 2], params).unwrap();
         }
         let done = r.run_to_completion().unwrap();
         assert_eq!(done.len(), 6);

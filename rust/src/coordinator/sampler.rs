@@ -21,8 +21,7 @@ pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> i32 {
     // Softmax with temperature over candidates (max-subtracted).
     let t = params.temperature;
     let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
-    let weights: Vec<f64> =
-        idx.iter().map(|&i| (((logits[i] - m) / t) as f64).exp()).collect();
+    let weights: Vec<f64> = idx.iter().map(|&i| (((logits[i] - m) / t) as f64).exp()).collect();
     let total: f64 = weights.iter().sum();
     let mut u = rng.f64() * total;
     for (k, w) in weights.iter().enumerate() {
@@ -91,8 +90,7 @@ mod tests {
     #[test]
     fn log_prob_normalizes() {
         let logits = vec![0.3, -1.2, 2.0, 0.0];
-        let total: f64 =
-            (0..4).map(|i| log_prob(&logits, i).exp()).sum();
+        let total: f64 = (0..4).map(|i| log_prob(&logits, i).exp()).sum();
         assert!((total - 1.0).abs() < 1e-9, "total {total}");
     }
 
@@ -100,8 +98,7 @@ mod tests {
     fn prop_sample_in_candidate_set() {
         property("sampled token is a valid top-k candidate", 200, |rng| {
             let v = 2 + rng.usize_below(30);
-            let logits: Vec<f32> =
-                (0..v).map(|_| rng.normal() as f32).collect();
+            let logits: Vec<f32> = (0..v).map(|_| rng.normal() as f32).collect();
             let k = 1 + rng.usize_below(v);
             let p = SamplingParams {
                 temperature: 0.1 + rng.f32(),

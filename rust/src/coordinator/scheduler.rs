@@ -1,25 +1,38 @@
-//! Iteration-level planning (Orca/vLLM-style continuous batching).
+//! Iteration-level planning (Orca/vLLM-style continuous batching with
+//! chunked-prefill co-scheduling).
 //!
 //! Every engine iteration the scheduler inspects a [`SchedView`] — the
-//! admission queue, free KV slots, in-flight prefill jobs, and active
-//! decodes — and emits one composite [`StepPlan`]:
+//! admission queue, free slots and KV blocks, in-flight prefill jobs,
+//! active decodes, and swapped-out (preempted) requests — and emits one
+//! composite [`StepPlan`]:
+//!  * `preemptions`     — decodes to evict under KV block pressure (their
+//!    cache is saved to the host swap pool and restored bitwise later);
+//!  * `resumes`         — swapped requests to re-admit into free slots;
 //!  * `admissions`      — queued requests to move into free slots now;
-//!  * `prefill_chunks`  — one prompt chunk per in-flight prefill job to
-//!    run this iteration (several jobs may be in flight concurrently, so
-//!    a short prompt is not serialized behind a long one);
+//!  * `prefill_chunks`  — one prompt chunk per selected in-flight prefill
+//!    job (several jobs ride in flight concurrently);
 //!  * `decode`          — one batched decode step over the active slots,
 //!    listed in sorted order so sampling is deterministic.
+//!
+//! In the default **mixed** mode a single plan carries admissions,
+//! prefill chunks *and* the decode batch at once, bounded by the
+//! `max_step_tokens` budget — the vLLM chunked-prefill regime where new
+//! prompts stream into the batch without stalling in-flight decodes.
+//! `mixed = false` reproduces the earlier segregated planner (prefill-only
+//! or decode-only iterations alternating under the starvation guard),
+//! kept as the measured baseline.
 //!
 //! Which queued requests are admitted first is the pluggable part: a
 //! [`SchedulerPolicy`] ranks the queue snapshot ([`Fifo`],
 //! [`ShortestPromptFirst`], [`PriorityFirst`]). Everything else — the
-//! prefill/decode interleaving and the starvation guard that caps
-//! consecutive prefill-only iterations so a flood of new prompts cannot
-//! stall in-flight decodes (the regime the paper's Fig 13 measures) — is
+//! co-scheduling, block accounting, preemption-victim choice (lowest
+//! priority, youngest first) and resume order (FIFO) — is
 //! policy-independent, which is what keeps batching invariance (same
-//! tokens for a request regardless of policy or batch-mates) easy to
-//! preserve: policies reorder *work*, never *sampling*.
+//! tokens for a request regardless of policy, batch-mates, or
+//! preemptions) easy to preserve: policies reorder *work*, never
+//! *sampling*, and a preempted request's cache restores bitwise.
 
+use super::kv;
 use super::request::RequestId;
 
 // ---------------------------------------------------------------------------
@@ -35,6 +48,9 @@ pub struct QueuedRequest {
     pub priority: i32,
     /// Position in the admission queue (0 = oldest): the FIFO key.
     pub arrival: usize,
+    /// Tokens the engine would run in this request's first prefill chunk
+    /// (prompt length clamped to the model's chunk bucket).
+    pub first_chunk: usize,
 }
 
 /// Snapshot of one in-flight prefill job.
@@ -44,6 +60,35 @@ pub struct PrefillView {
     pub slot: usize,
     /// Prompt tokens not yet written to the KV cache.
     pub remaining: usize,
+    /// Prompt tokens already written to the KV cache.
+    pub written: usize,
+    /// KV blocks this job's table currently holds.
+    pub blocks_held: usize,
+    /// Tokens the next chunk would run (remaining clamped to a bucket).
+    pub next_chunk: usize,
+}
+
+/// Snapshot of one actively decoding slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeSlotView {
+    pub slot: usize,
+    pub request: RequestId,
+    pub priority: i32,
+    /// KV blocks this request's table currently holds.
+    pub blocks_held: usize,
+    /// True when the next decode write falls past the table's capacity,
+    /// i.e. this step must allocate one fresh block for the slot.
+    pub needs_block: bool,
+}
+
+/// Snapshot of one preempted (swapped-out) request, FIFO by preemption
+/// time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SwappedView {
+    pub request: RequestId,
+    pub priority: i32,
+    /// KV entries resident when preempted (what a resume must restore).
+    pub tokens: usize,
 }
 
 /// Everything a plan is built from. Borrowed snapshots: the scheduler
@@ -51,20 +96,41 @@ pub struct PrefillView {
 #[derive(Debug, Clone, Copy)]
 pub struct SchedView<'a> {
     pub queued: &'a [QueuedRequest],
-    /// Free KV slots, ascending.
+    /// Free decode slots, ascending.
     pub free_slots: &'a [usize],
     /// In-flight prefill jobs, slot-ascending (the engine's `PrefillSet`
     /// is keyed by slot); the plan's chunk order follows this order.
     pub inflight: &'a [PrefillView],
-    /// Slots currently decoding, ascending.
-    pub active_slots: &'a [usize],
+    /// Slots currently decoding, slot-ascending.
+    pub decoding: &'a [DecodeSlotView],
+    /// Preempted requests awaiting re-admission, oldest first.
+    pub swapped: &'a [SwappedView],
+    /// Unallocated KV blocks in the pool.
+    pub free_blocks: usize,
+    /// Tokens per KV block (see [`super::kv::KvLayout`]).
+    pub block_size: usize,
+    /// Whether the backend supports KV save/restore (preemption).
+    pub can_preempt: bool,
+}
+
+impl SchedView<'_> {
+    /// Planner-side block arithmetic, delegating to [`kv::blocks_for`] /
+    /// [`kv::blocks_to_resume`] so the ledger can never diverge from the
+    /// engine's allocations.
+    fn blocks_for(&self, tokens: usize) -> usize {
+        kv::blocks_for(tokens, self.block_size)
+    }
+
+    fn blocks_to_resume(&self, tokens: usize) -> usize {
+        kv::blocks_to_resume(tokens, self.block_size)
+    }
 }
 
 // ---------------------------------------------------------------------------
 // What the scheduler emits.
 // ---------------------------------------------------------------------------
 
-/// Admit `request` from the queue into KV slot `slot`.
+/// Admit `request` from the queue into decode slot `slot`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Admission {
     pub request: RequestId,
@@ -78,6 +144,34 @@ pub struct ChunkSpec {
     pub slot: usize,
 }
 
+/// Evict the decode in `slot`: save its KV blocks to the host swap pool
+/// and release them (restored bitwise on a later [`Resume`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Preemption {
+    pub request: RequestId,
+    pub slot: usize,
+}
+
+/// Re-admit the swapped `request` into free slot `slot`, restoring its
+/// saved KV blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Resume {
+    pub request: RequestId,
+    pub slot: usize,
+}
+
+/// Abort the in-flight prefill in `slot` back to the *front* of the
+/// admission queue, releasing its blocks (recompute-style eviction: no
+/// token has been sampled yet, so re-prefilling from scratch cannot
+/// change the stream). Last-resort only — issued when every runnable
+/// piece of work is block-starved and freeing this job's blocks is the
+/// only way forward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Abort {
+    pub request: RequestId,
+    pub slot: usize,
+}
+
 /// One batched decode step; `slots` is sorted ascending and sampling
 /// follows that order (deterministic, not HashMap iteration order).
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
@@ -85,11 +179,16 @@ pub struct DecodeBatch {
     pub slots: Vec<usize>,
 }
 
-/// The composite plan for one engine iteration. Admissions execute
-/// first (so a chunk may target a request admitted by the same plan),
-/// then prefill chunks, then the decode step.
+/// The composite plan for one engine iteration. Execution order:
+/// preemptions and aborts (freeing blocks) → resumes → admissions →
+/// prefill chunks → the decode step, so a chunk may target a request
+/// admitted by the same plan and a resume may reuse blocks a preemption
+/// just freed.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct StepPlan {
+    pub preemptions: Vec<Preemption>,
+    pub aborts: Vec<Abort>,
+    pub resumes: Vec<Resume>,
     pub admissions: Vec<Admission>,
     pub prefill_chunks: Vec<ChunkSpec>,
     pub decode: Option<DecodeBatch>,
@@ -97,9 +196,19 @@ pub struct StepPlan {
 
 impl StepPlan {
     pub fn is_idle(&self) -> bool {
-        self.admissions.is_empty()
+        self.preemptions.is_empty()
+            && self.aborts.is_empty()
+            && self.resumes.is_empty()
+            && self.admissions.is_empty()
             && self.prefill_chunks.is_empty()
             && self.decode.is_none()
+    }
+
+    /// True when this plan carries both prefill work and a decode batch —
+    /// the chunked-prefill co-scheduling case the mixed planner exists
+    /// for.
+    pub fn is_mixed(&self) -> bool {
+        !self.prefill_chunks.is_empty() && self.decode.is_some()
     }
 }
 
@@ -109,11 +218,19 @@ pub struct StepOutcome {
     pub admitted: usize,
     pub prefill_chunks: usize,
     pub decoded_slots: usize,
+    pub preempted: usize,
+    pub resumed: usize,
+    pub aborted: usize,
 }
 
 impl StepOutcome {
     pub fn did_work(&self) -> bool {
-        self.admitted > 0 || self.prefill_chunks > 0 || self.decoded_slots > 0
+        self.admitted > 0
+            || self.prefill_chunks > 0
+            || self.decoded_slots > 0
+            || self.preempted > 0
+            || self.resumed > 0
+            || self.aborted > 0
     }
 }
 
@@ -122,8 +239,9 @@ impl StepOutcome {
 // ---------------------------------------------------------------------------
 
 /// Ranks queued requests for admission. Policies only order work — the
-/// plan assembly, chunking, and starvation guard live in [`Scheduler`] —
-/// so a request's token stream cannot depend on the policy in force.
+/// plan assembly, chunking, block accounting and preemption live in
+/// [`Scheduler`] — so a request's token stream cannot depend on the
+/// policy in force.
 pub trait SchedulerPolicy: Send {
     fn name(&self) -> &'static str;
     /// Request ids in admission order, most urgent first. Must be a
@@ -232,10 +350,21 @@ impl PolicyKind {
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
     pub policy: PolicyKind,
-    /// Starvation guard: max consecutive prefill *chunks* (model calls)
-    /// while decodes are pending — the same unit as the seed's
-    /// single-chunk iterations, so the decode-stall bound does not grow
-    /// with `chunk_budget`.
+    /// Mixed mode (default): one plan may carry admissions, prefill
+    /// chunks and the decode batch simultaneously, bounded by
+    /// `max_step_tokens`. `false` reproduces the earlier segregated
+    /// planner (prefill-only or decode-only iterations, alternating
+    /// under the starvation guard) — the measured baseline.
+    pub mixed: bool,
+    /// Token budget of one mixed iteration: decode rows count 1 each,
+    /// prefill chunks their chunk length. 0 = unbounded. The budget is
+    /// soft — a decode batch always runs whole, and one prefill chunk
+    /// always runs when prefill work exists (so neither side can starve);
+    /// it caps the chunks *beyond* the first.
+    pub max_step_tokens: usize,
+    /// Segregated-mode starvation guard: max consecutive prefill
+    /// *chunks* (model calls) while decodes are pending. Unused in mixed
+    /// mode, where decodes ride along every iteration.
     pub max_consecutive_prefills: usize,
     /// How many prefill jobs may be in flight at once (the PrefillSet
     /// size cap). 1 reproduces the seed single-prefill behavior.
@@ -248,6 +377,8 @@ impl Default for SchedulerConfig {
     fn default() -> Self {
         SchedulerConfig {
             policy: PolicyKind::Fifo,
+            mixed: true,
+            max_step_tokens: 0,
             max_consecutive_prefills: 4,
             max_concurrent_prefills: 2,
             chunk_budget: 2,
@@ -256,10 +387,18 @@ impl Default for SchedulerConfig {
 }
 
 impl SchedulerConfig {
-    /// The seed engine's behavior: FIFO, at most one prefill job in
-    /// flight, one chunk per iteration. Benchmarks use this baseline.
+    /// The pre-paged planner: prefill-only or decode-only iterations
+    /// alternating under the starvation guard. Benchmarks use this as
+    /// the mixed planner's baseline.
+    pub fn segregated() -> Self {
+        SchedulerConfig { mixed: false, ..Default::default() }
+    }
+
+    /// The seed engine's behavior: segregated, FIFO, at most one prefill
+    /// job in flight, one chunk per iteration.
     pub fn single_prefill() -> Self {
         SchedulerConfig {
+            mixed: false,
             max_concurrent_prefills: 1,
             chunk_budget: 1,
             ..Default::default()
@@ -274,10 +413,20 @@ impl SchedulerConfig {
 pub struct Scheduler {
     cfg: SchedulerConfig,
     policy: Box<dyn SchedulerPolicy>,
-    /// Prefill chunks issued since the last decode turn (guard counter).
+    /// Segregated mode: prefill chunks issued since the last decode turn.
     consecutive_prefills: usize,
     /// Round-robin cursor so jobs beyond the chunk budget are not starved.
     chunk_rr: usize,
+}
+
+/// One prefill job the planner may chunk this iteration (in-flight or
+/// freshly admitted).
+#[derive(Debug, Clone, Copy)]
+struct ChunkJob {
+    request: RequestId,
+    slot: usize,
+    chunk: usize,
+    new_blocks: usize,
 }
 
 impl Scheduler {
@@ -294,21 +443,266 @@ impl Scheduler {
         &self.cfg
     }
 
-    /// Build the next iteration's plan. Mirrors the seed decision tree:
-    /// prefill-bearing iterations are prioritized (slots fill fastest,
-    /// maximizing decode occupancy) until the starvation guard trips,
-    /// then the pending decodes get a turn.
+    /// Build the next iteration's plan.
     pub fn plan(&mut self, view: &SchedView) -> StepPlan {
+        if self.cfg.mixed {
+            self.plan_mixed(view)
+        } else {
+            self.plan_segregated(view)
+        }
+    }
+
+    // -- mixed: decode + prefill + admissions in one iteration --------------
+
+    fn plan_mixed(&mut self, view: &SchedView) -> StepPlan {
+        let mut plan = StepPlan::default();
+        let mut avail_blocks = view.free_blocks;
+        let decoding = self.plan_decode(view, &mut plan, &mut avail_blocks);
+        let budget = if self.cfg.max_step_tokens == 0 {
+            usize::MAX
+        } else {
+            self.cfg.max_step_tokens
+        };
+        let mut budget_left = budget.saturating_sub(decoding);
+
+        let mut free_slots = view.free_slots.iter().copied();
+        let resume_blocked = self.plan_resumes(view, &mut plan, &mut free_slots, &mut avail_blocks);
+
+        // Prefill jobs: in-flight first, then policy-ranked admissions
+        // into the slots the resumes left over (none while a swapped
+        // request is waiting on blocks — resumes outrank fresh prompts).
+        let mut jobs = self.inflight_jobs(view);
+        if !resume_blocked {
+            self.plan_admissions(
+                view,
+                &mut plan,
+                &mut jobs,
+                &mut free_slots,
+                &mut avail_blocks,
+                budget_left,
+            );
+        }
+        let cap = self.cfg.chunk_budget;
+        self.plan_chunks(&jobs, &mut plan, &mut avail_blocks, &mut budget_left, cap);
+        plan_last_resort(view, &mut plan);
+        plan
+    }
+
+    /// Decode batch with block-pressure preemption. Returns the number
+    /// of decode rows planned.
+    fn plan_decode(
+        &mut self,
+        view: &SchedView,
+        plan: &mut StepPlan,
+        avail_blocks: &mut usize,
+    ) -> usize {
+        let mut decoding: Vec<&DecodeSlotView> = view.decoding.iter().collect();
+        let mut need: usize = decoding.iter().filter(|d| d.needs_block).count();
+        if view.can_preempt {
+            while need > *avail_blocks {
+                // Victim: lowest priority, tie-broken youngest (largest
+                // id). Policy-independent; never the last decoder (its
+                // own eviction would free blocks no one else can use).
+                let Some(vi) = pick_victim(&decoding) else { break };
+                let v = decoding.remove(vi);
+                *avail_blocks += v.blocks_held;
+                if v.needs_block {
+                    need -= 1;
+                }
+                plan.preemptions.push(Preemption { request: v.request, slot: v.slot });
+            }
+        }
+        if need > *avail_blocks {
+            // No (further) preemption possible: stall the overflowing
+            // slots this iteration, lowest slot first keeps going.
+            let mut grant = *avail_blocks;
+            decoding.retain(|d| {
+                if !d.needs_block {
+                    true
+                } else if grant > 0 {
+                    grant -= 1;
+                    true
+                } else {
+                    false
+                }
+            });
+            need = *avail_blocks;
+        }
+        *avail_blocks -= need;
+        if decoding.is_empty() {
+            0
+        } else {
+            let slots: Vec<usize> = decoding.iter().map(|d| d.slot).collect();
+            debug_assert!(slots.windows(2).all(|w| w[0] < w[1]));
+            let n = slots.len();
+            plan.decode = Some(DecodeBatch { slots });
+            n
+        }
+    }
+
+    /// Resumes: preempted work takes free slots before fresh prompts,
+    /// FIFO with head-of-line blocking (no size-biased queue jumping).
+    /// Returns true when the head of the swap queue could not be placed
+    /// for lack of blocks — the caller must then hold off *fresh*
+    /// admissions, or a sustained arrival stream would consume every
+    /// freed block first and starve the preempted request indefinitely.
+    /// (In-flight prefills and decodes are not held back: draining them
+    /// is what frees the blocks the resume is waiting for.)
+    fn plan_resumes(
+        &self,
+        view: &SchedView,
+        plan: &mut StepPlan,
+        free_slots: &mut impl Iterator<Item = usize>,
+        avail_blocks: &mut usize,
+    ) -> bool {
+        for s in view.swapped {
+            let blocks = view.blocks_to_resume(s.tokens);
+            if blocks > *avail_blocks {
+                return true;
+            }
+            let Some(slot) = free_slots.next() else { break };
+            plan.resumes.push(Resume { request: s.request, slot });
+            *avail_blocks -= blocks;
+        }
+        false
+    }
+
+    fn inflight_jobs(&self, view: &SchedView) -> Vec<ChunkJob> {
+        view.inflight
+            .iter()
+            .map(|j| ChunkJob {
+                request: j.request,
+                slot: j.slot,
+                chunk: j.next_chunk,
+                new_blocks: view
+                    .blocks_for(j.written + j.next_chunk)
+                    .saturating_sub(j.blocks_held),
+            })
+            .collect()
+    }
+
+    fn plan_admissions(
+        &mut self,
+        view: &SchedView,
+        plan: &mut StepPlan,
+        jobs: &mut Vec<ChunkJob>,
+        free_slots: &mut impl Iterator<Item = usize>,
+        avail_blocks: &mut usize,
+        budget_left: usize,
+    ) {
+        let concurrency = self.cfg.max_concurrent_prefills.max(1);
+        if jobs.len() >= concurrency || view.queued.is_empty() {
+            return;
+        }
+        // Blocks and tokens the already-selected jobs may claim when they
+        // chunk this iteration (conservative: assumes every one of them
+        // does). The ledger itself is charged in plan_chunks — this only
+        // keeps the admission gate honest, so a request is not admitted
+        // against blocks or budget already promised to earlier jobs and
+        // then left sitting in a slot it cannot use.
+        let mut promised: usize = jobs.iter().map(|j| j.new_blocks).sum();
+        let mut budget =
+            budget_left.saturating_sub(jobs.iter().map(|j| j.chunk).sum::<usize>());
+        for id in self.policy.admission_order(view.queued) {
+            if jobs.len() >= concurrency {
+                break;
+            }
+            let q = view
+                .queued
+                .iter()
+                .find(|q| q.id == id)
+                .expect("policy must permute the queue snapshot");
+            let new_blocks = view.blocks_for(q.first_chunk);
+            // Admit only when the first chunk could run now; stop at the
+            // first misfit rather than skipping past the policy's choice.
+            if (q.first_chunk > budget && !jobs.is_empty())
+                || promised + new_blocks > *avail_blocks
+            {
+                break;
+            }
+            let Some(slot) = free_slots.next() else { break };
+            plan.admissions.push(Admission { request: id, slot });
+            jobs.push(ChunkJob { request: id, slot, chunk: q.first_chunk, new_blocks });
+            promised += new_blocks;
+            budget = budget.saturating_sub(q.first_chunk);
+        }
+    }
+
+    /// One chunk per selected job, up to `take_cap` chunks (the
+    /// chunk budget, clamped by the segregated starvation guard),
+    /// rotating the starting job across iterations so a wide PrefillSet
+    /// shares the budget fairly. The first block-feasible chunk always
+    /// runs, even over the token budget and even alongside a planned
+    /// decode batch (the budget caps the chunks *beyond* the first), so
+    /// a wide chunk can never starve behind a continuous decode stream —
+    /// meaning one mixed iteration may exceed `max_step_tokens` by up to
+    /// one chunk length.
+    fn plan_chunks(
+        &mut self,
+        jobs: &[ChunkJob],
+        plan: &mut StepPlan,
+        avail_blocks: &mut usize,
+        budget_left: &mut usize,
+        take_cap: usize,
+    ) {
+        if jobs.is_empty() {
+            return;
+        }
+        let n = jobs.len();
+        let take_max = take_cap.max(1).min(n);
+        let start = self.chunk_rr % n;
+        let mut taken = 0usize;
+        let mut advance = 0usize;
+        for k in 0..n {
+            if taken >= take_max {
+                break;
+            }
+            let j = &jobs[(start + k) % n];
+            if j.new_blocks > *avail_blocks {
+                continue;
+            }
+            // The first block-feasible chunk always runs, even over
+            // budget — otherwise a chunk wider than `max_step_tokens`
+            // could starve forever behind a continuous decode stream.
+            // The budget caps the chunks *beyond* the first.
+            let force = plan.prefill_chunks.is_empty();
+            if j.chunk > *budget_left && !force {
+                continue;
+            }
+            plan.prefill_chunks.push(ChunkSpec { request: j.request, slot: j.slot });
+            *avail_blocks -= j.new_blocks;
+            *budget_left = budget_left.saturating_sub(j.chunk);
+            taken += 1;
+            advance = k + 1;
+        }
+        if taken > 0 {
+            self.chunk_rr = (start + advance) % n;
+        }
+    }
+
+    // -- segregated: the pre-paged alternating planner ----------------------
+
+    /// Mirrors the seed decision tree: prefill-bearing iterations are
+    /// prioritized (slots fill fastest, maximizing decode occupancy)
+    /// until the starvation guard trips, then the pending decodes get a
+    /// turn. Block accounting still gates chunks and the decode batch —
+    /// and block-pressure preemption/resume works the same as in mixed
+    /// mode (a pressured segregated engine must not strand its swapped
+    /// requests) — but plans stay prefill-only or decode-only.
+    fn plan_segregated(&mut self, view: &SchedView) -> StepPlan {
         let concurrency = self.cfg.max_concurrent_prefills.max(1);
         let can_admit = !view.queued.is_empty()
             && !view.free_slots.is_empty()
             && view.inflight.len() < concurrency;
         let want_prefill = !view.inflight.is_empty() || can_admit;
-        let active = view.active_slots.len();
+        let active = view.decoding.len();
         let starving = active > 0
             && self.consecutive_prefills >= self.cfg.max_consecutive_prefills;
 
         let mut plan = StepPlan::default();
+        let mut avail_blocks = view.free_blocks;
+        let mut free_slots = view.free_slots.iter().copied();
+        let resume_blocked = self.plan_resumes(view, &mut plan, &mut free_slots, &mut avail_blocks);
         if want_prefill && !starving {
             // While decodes are pending, never issue more chunks than the
             // guard has left (so the stall bound is exactly the guard, not
@@ -321,10 +715,25 @@ impl Scheduler {
             } else {
                 usize::MAX
             };
-            self.fill_prefill(view, &mut plan, allowance);
-        } else if active > 0 {
-            plan.decode = Some(DecodeBatch { slots: view.active_slots.to_vec() });
+            let mut jobs = self.inflight_jobs(view);
+            if !resume_blocked && jobs.len() < concurrency && !view.queued.is_empty() {
+                self.plan_admissions(
+                    view,
+                    &mut plan,
+                    &mut jobs,
+                    &mut free_slots,
+                    &mut avail_blocks,
+                    usize::MAX,
+                );
+            }
+            let cap = self.cfg.chunk_budget.max(1).min(allowance.max(1));
+            let mut budget_left = usize::MAX;
+            self.plan_chunks(&jobs, &mut plan, &mut avail_blocks, &mut budget_left, cap);
         }
+        if plan.prefill_chunks.is_empty() && active > 0 {
+            self.plan_decode(view, &mut plan, &mut avail_blocks);
+        }
+        plan_last_resort(view, &mut plan);
 
         if !plan.prefill_chunks.is_empty() {
             self.consecutive_prefills += plan.prefill_chunks.len();
@@ -333,46 +742,59 @@ impl Scheduler {
         }
         plan
     }
+}
 
-    fn fill_prefill(&mut self, view: &SchedView, plan: &mut StepPlan,
-                    allowance: usize) {
-        let concurrency = self.cfg.max_concurrent_prefills.max(1);
-        let budget = self.cfg.chunk_budget.max(1).min(allowance.max(1));
+/// Preemption victim among the decoding slots: lowest priority, then
+/// youngest (largest request id). `None` when at most one decode remains
+/// — evicting the sole decoder frees blocks nothing else can use, it
+/// would only thrash the swap pool (see [`plan_last_resort`] for the
+/// one exception).
+fn pick_victim(decoding: &[&DecodeSlotView]) -> Option<usize> {
+    if decoding.len() <= 1 {
+        return None;
+    }
+    decoding
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, d)| (d.priority, std::cmp::Reverse(d.request)))
+        .map(|(i, _)| i)
+}
 
-        // Jobs to advance this iteration: in-flight first (the view's
-        // slot order — ascending per the SchedView contract — keeps this
-        // deterministic), then fresh admissions chosen by the policy.
-        let mut jobs: Vec<(RequestId, usize)> = view
+/// Deadlock breaker, run after plan assembly in both modes. An idle plan
+/// while work is in flight means every runnable piece is block-starved
+/// (e.g. a half-prefilled prompt holds blocks a stalled decode needs, or
+/// two concurrent prefills each hold half the pool) — without
+/// intervention the engine would spin forever. Freeing someone's blocks
+/// is the only way forward:
+///  * preferably swap out the lowest-priority decode — even the sole one
+///    — as long as another consumer (prefill job or swapped request) can
+///    use its blocks; its resume headroom guarantees it decodes again
+///    before the next pressure event, so this cannot livelock;
+///  * otherwise (no decodes) abort the *youngest* of ≥ 2 starved prefill
+///    jobs back to the queue front: nothing has been sampled yet, so the
+///    recompute changes no token stream. A lone starved prefill cannot
+///    happen (its whole prompt fits the pool by the admission clamp).
+fn plan_last_resort(view: &SchedView, plan: &mut StepPlan) {
+    if !plan.is_idle() {
+        return;
+    }
+    if view.can_preempt
+        && !view.decoding.is_empty()
+        && !(view.inflight.is_empty() && view.swapped.is_empty())
+    {
+        let d = view
+            .decoding
+            .iter()
+            .min_by_key(|d| (d.priority, std::cmp::Reverse(d.request)))
+            .expect("non-empty decoding");
+        plan.preemptions.push(Preemption { request: d.request, slot: d.slot });
+    } else if view.inflight.len() > 1 {
+        let j = view
             .inflight
             .iter()
-            .map(|j| (j.request, j.slot))
-            .collect();
-
-        let mut free = view.free_slots.iter().copied();
-        if jobs.len() < concurrency && !view.queued.is_empty() {
-            for id in self.policy.admission_order(view.queued) {
-                if jobs.len() >= concurrency {
-                    break;
-                }
-                let Some(slot) = free.next() else { break };
-                plan.admissions.push(Admission { request: id, slot });
-                jobs.push((id, slot));
-            }
-        }
-
-        // One chunk per job, up to the budget, rotating the starting job
-        // across iterations so a wide PrefillSet shares the budget fairly.
-        if jobs.is_empty() {
-            return;
-        }
-        let n = jobs.len();
-        let take = n.min(budget);
-        let start = self.chunk_rr % n;
-        for k in 0..take {
-            let (request, slot) = jobs[(start + k) % n];
-            plan.prefill_chunks.push(ChunkSpec { request, slot });
-        }
-        self.chunk_rr = (start + take) % n.max(1);
+            .max_by_key(|j| j.request)
+            .expect("non-empty inflight");
+        plan.aborts.push(Abort { request: j.request, slot: j.slot });
     }
 }
 
@@ -391,19 +813,62 @@ mod tests {
                 prompt_len,
                 priority,
                 arrival,
+                first_chunk: prompt_len.min(64),
             })
             .collect()
+    }
+
+    fn decoding(specs: &[(usize, RequestId, i32, usize, bool)]) -> Vec<DecodeSlotView> {
+        specs
+            .iter()
+            .map(|&(slot, request, priority, blocks_held, needs_block)| DecodeSlotView {
+                slot,
+                request,
+                priority,
+                blocks_held,
+                needs_block,
+            })
+            .collect()
+    }
+
+    fn inflight(specs: &[(RequestId, usize, usize)]) -> Vec<PrefillView> {
+        specs
+            .iter()
+            .map(|&(request, slot, remaining)| PrefillView {
+                request,
+                slot,
+                remaining,
+                written: 0,
+                blocks_held: 0,
+                next_chunk: remaining.min(64),
+            })
+            .collect()
+    }
+
+    /// A view with ample blocks so tests exercising slot/queue logic are
+    /// not perturbed by block accounting.
+    fn view<'a>(
+        queued: &'a [QueuedRequest],
+        free_slots: &'a [usize],
+        inflight: &'a [PrefillView],
+        decoding: &'a [DecodeSlotView],
+    ) -> SchedView<'a> {
+        SchedView {
+            queued,
+            free_slots,
+            inflight,
+            decoding,
+            swapped: &[],
+            free_blocks: 1 << 20,
+            block_size: 16,
+            can_preempt: true,
+        }
     }
 
     #[test]
     fn idle_when_nothing_to_do() {
         let mut s = Scheduler::new(SchedulerConfig::default());
-        let plan = s.plan(&SchedView {
-            queued: &[],
-            free_slots: &[0, 1],
-            inflight: &[],
-            active_slots: &[],
-        });
+        let plan = s.plan(&view(&[], &[0, 1], &[], &[]));
         assert!(plan.is_idle());
     }
 
@@ -411,18 +876,10 @@ mod tests {
     fn admits_multiple_requests_up_to_concurrency() {
         let mut s = Scheduler::new(SchedulerConfig::default()); // concurrency 2
         let q = queued(&[(1, 8, 0), (2, 8, 0), (3, 8, 0)]);
-        let plan = s.plan(&SchedView {
-            queued: &q,
-            free_slots: &[0, 1, 2, 3],
-            inflight: &[],
-            active_slots: &[],
-        });
+        let plan = s.plan(&view(&q, &[0, 1, 2, 3], &[], &[]));
         assert_eq!(
             plan.admissions,
-            vec![
-                Admission { request: 1, slot: 0 },
-                Admission { request: 2, slot: 1 }
-            ]
+            vec![Admission { request: 1, slot: 0 }, Admission { request: 2, slot: 1 }]
         );
         assert_eq!(plan.prefill_chunks.len(), 2);
         assert!(plan.decode.is_none());
@@ -431,41 +888,274 @@ mod tests {
     #[test]
     fn continues_inflight_even_with_no_free_slots() {
         let mut s = Scheduler::new(SchedulerConfig::default());
-        let inflight = [PrefillView { request: 7, slot: 3, remaining: 4 }];
-        let plan = s.plan(&SchedView {
-            queued: &[],
-            free_slots: &[],
-            inflight: &inflight,
-            active_slots: &[0, 1],
+        let inf = inflight(&[(7, 3, 4)]);
+        let dec = decoding(&[(0, 10, 0, 1, false), (1, 11, 0, 1, false)]);
+        let plan = s.plan(&view(&[], &[], &inf, &dec));
+        assert_eq!(plan.prefill_chunks, vec![ChunkSpec { request: 7, slot: 3 }]);
+        assert!(plan.admissions.is_empty());
+    }
+
+    #[test]
+    fn mixed_plan_carries_admissions_chunks_and_decode_together() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let q = queued(&[(5, 8, 0)]);
+        let inf = inflight(&[(7, 3, 32)]);
+        let dec = decoding(&[(0, 10, 0, 2, false), (1, 11, 0, 2, false)]);
+        let plan = s.plan(&view(&q, &[4, 5], &inf, &dec));
+        assert_eq!(plan.admissions, vec![Admission { request: 5, slot: 4 }]);
+        assert_eq!(plan.prefill_chunks.len(), 2, "{plan:?}");
+        assert_eq!(plan.decode, Some(DecodeBatch { slots: vec![0, 1] }));
+        assert!(plan.is_mixed());
+        assert!(plan.preemptions.is_empty());
+    }
+
+    #[test]
+    fn token_budget_caps_prefill_chunks_but_not_decode() {
+        // Budget 20: decode (2 rows) leaves 18 — only one 16-token chunk
+        // fits; the second job waits.
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_step_tokens: 20,
+            max_concurrent_prefills: 2,
+            ..Default::default()
         });
-        assert_eq!(plan.prefill_chunks,
-                   vec![ChunkSpec { request: 7, slot: 3 }]);
+        let mut inf = inflight(&[(7, 2, 40), (8, 3, 40)]);
+        for j in inf.iter_mut() {
+            j.next_chunk = 16;
+        }
+        let dec = decoding(&[(0, 10, 0, 1, false), (1, 11, 0, 1, false)]);
+        let plan = s.plan(&view(&[], &[], &inf, &dec));
+        assert_eq!(plan.decode.as_ref().unwrap().slots.len(), 2);
+        assert_eq!(plan.prefill_chunks.len(), 1, "{plan:?}");
+        // Next iteration the round-robin cursor reaches the other job.
+        let plan2 = s.plan(&view(&[], &[], &inf, &dec));
+        assert_ne!(
+            plan2.prefill_chunks[0].request, plan.prefill_chunks[0].request,
+            "budget-capped chunks rotate across jobs"
+        );
+    }
+
+    #[test]
+    fn budget_never_plans_idle_iterations() {
+        // Budget smaller than any chunk: the chunk is forced through
+        // anyway when the plan carries no other model work.
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_step_tokens: 2,
+            ..Default::default()
+        });
+        let inf = inflight(&[(7, 0, 64)]);
+        let plan = s.plan(&view(&[], &[], &inf, &[]));
+        assert_eq!(plan.prefill_chunks.len(), 1);
+    }
+
+    #[test]
+    fn block_pressure_preempts_lowest_priority_youngest() {
+        // Three decodes, two need a block, none free: the planner evicts
+        // the lowest-priority victim (ties: youngest id) until feasible.
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let dec = decoding(&[
+            (0, 10, 1, 4, true),
+            (1, 20, 0, 3, false), // lowest priority => first victim
+            (2, 30, 1, 4, true),
+        ]);
+        let mut v = view(&[], &[], &[], &dec);
+        v.free_blocks = 0;
+        let plan = s.plan(&v);
+        assert_eq!(plan.preemptions, vec![Preemption { request: 20, slot: 1 }]);
+        assert_eq!(plan.decode, Some(DecodeBatch { slots: vec![0, 2] }));
+    }
+
+    #[test]
+    fn preemption_tie_breaks_youngest_first() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let dec = decoding(&[
+            (0, 10, 0, 2, true),
+            (1, 99, 0, 1, false), // same priority, youngest id
+            (2, 11, 0, 1, false),
+        ]);
+        let mut v = view(&[], &[], &[], &dec);
+        v.free_blocks = 0;
+        let plan = s.plan(&v);
+        assert_eq!(plan.preemptions, vec![Preemption { request: 99, slot: 1 }]);
+    }
+
+    #[test]
+    fn sole_decoder_is_never_preempted() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let dec = decoding(&[(0, 10, 0, 4, true)]);
+        let mut v = view(&[], &[], &[], &dec);
+        v.free_blocks = 0;
+        let plan = s.plan(&v);
+        assert!(plan.preemptions.is_empty());
+        // The blocked slot stalls instead of thrashing the swap pool.
+        assert!(plan.decode.is_none());
+    }
+
+    #[test]
+    fn last_resort_swaps_sole_decoder_for_starved_prefill() {
+        // A half-prefilled job holds blocks the sole (stalled) decoder
+        // cannot take, and vice versa: the plan would be idle forever, so
+        // the deadlock breaker swaps the decoder out.
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let inf = inflight(&[(7, 1, 2)]);
+        let dec = decoding(&[(0, 10, 0, 2, true)]);
+        let mut v = view(&[], &[], &inf, &dec);
+        v.free_blocks = 0;
+        let plan = s.plan(&v);
+        assert_eq!(plan.preemptions, vec![Preemption { request: 10, slot: 0 }]);
+        assert!(plan.aborts.is_empty());
+        assert!(plan.decode.is_none() && plan.prefill_chunks.is_empty());
+        // Same shape in segregated mode.
+        let mut s = Scheduler::new(SchedulerConfig::segregated());
+        let plan = s.plan(&v);
+        assert_eq!(plan.preemptions, vec![Preemption { request: 10, slot: 0 }]);
+    }
+
+    #[test]
+    fn last_resort_aborts_youngest_of_competing_prefills() {
+        // Two concurrent prefills each hold half the pool and both need
+        // one more block: no decoders to swap, so the youngest job aborts
+        // back to the queue (recompute) to free its blocks.
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let mut inf = inflight(&[(7, 0, 2), (9, 1, 2)]);
+        for j in inf.iter_mut() {
+            j.written = 8;
+            j.blocks_held = 2;
+        }
+        let mut v = view(&[], &[], &inf, &[]);
+        v.block_size = 4; // tail chunk needs ceil(10/4)=3 blocks, 2 held
+        v.free_blocks = 0;
+        let plan = s.plan(&v);
+        assert_eq!(plan.aborts, vec![Abort { request: 9, slot: 1 }]);
+        assert!(plan.preemptions.is_empty());
+        assert!(!plan.is_idle());
+    }
+
+    #[test]
+    fn stalls_without_preemption_support() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let dec = decoding(&[(0, 10, 0, 2, true), (1, 11, 5, 2, false)]);
+        let mut v = view(&[], &[], &[], &dec);
+        v.free_blocks = 0;
+        v.can_preempt = false;
+        let plan = s.plan(&v);
+        assert!(plan.preemptions.is_empty());
+        assert_eq!(
+            plan.decode,
+            Some(DecodeBatch { slots: vec![1] }),
+            "block-starved slot is excluded, the rest decode"
+        );
+    }
+
+    #[test]
+    fn resumes_take_free_slots_before_admissions() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let q = queued(&[(1, 8, 0)]);
+        let swapped = [SwappedView { request: 42, priority: 0, tokens: 20 }];
+        let mut v = view(&q, &[3], &[], &[]);
+        v.swapped = &swapped;
+        let plan = s.plan(&v);
+        assert_eq!(plan.resumes, vec![Resume { request: 42, slot: 3 }]);
+        assert!(plan.admissions.is_empty(), "the only free slot went to the resume: {plan:?}");
+    }
+
+    #[test]
+    fn resume_waits_for_enough_blocks() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        // 20 resident tokens at block_size 16 need 2 blocks plus the
+        // next-write headroom => blocks_to_resume = 2.
+        let swapped = [SwappedView { request: 42, priority: 0, tokens: 20 }];
+        let mut v = view(&[], &[3], &[], &[]);
+        v.swapped = &swapped;
+        v.free_blocks = 1;
+        let plan = s.plan(&v);
+        assert!(plan.resumes.is_empty());
+        v.free_blocks = 2;
+        let plan = s.plan(&v);
+        assert_eq!(plan.resumes.len(), 1);
+    }
+
+    #[test]
+    fn blocked_resume_holds_off_fresh_admissions() {
+        // A swapped request waiting on blocks reserves the pipeline:
+        // fresh prompts are not admitted against the blocks it needs, or
+        // a sustained arrival stream would starve it indefinitely.
+        let q = queued(&[(1, 8, 0)]);
+        let swapped = [SwappedView { request: 42, priority: 0, tokens: 20 }];
+        let mut v = view(&q, &[2, 3], &[], &[]);
+        v.swapped = &swapped;
+        v.free_blocks = 1; // resume needs 2
+        let plan = Scheduler::new(SchedulerConfig::default()).plan(&v);
+        assert!(plan.resumes.is_empty());
+        assert!(plan.admissions.is_empty(), "admission starves the resume: {plan:?}");
+        // With blocks for both, the resume takes the first slot and the
+        // admission the next.
+        v.free_blocks = 3;
+        let plan = Scheduler::new(SchedulerConfig::default()).plan(&v);
+        assert_eq!(plan.resumes, vec![Resume { request: 42, slot: 2 }]);
+        assert_eq!(plan.admissions, vec![Admission { request: 1, slot: 3 }]);
+    }
+
+    #[test]
+    fn admission_waits_for_blocks() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let q = queued(&[(1, 40, 0)]); // first_chunk 40 => 3 blocks of 16
+        let mut v = view(&q, &[0], &[], &[]);
+        v.free_blocks = 2;
+        let plan = s.plan(&v);
+        assert!(plan.admissions.is_empty(), "{plan:?}");
+        v.free_blocks = 3;
+        let plan = s.plan(&v);
+        assert_eq!(plan.admissions.len(), 1);
+    }
+
+    #[test]
+    fn admissions_do_not_overpromise_blocks() {
+        // Two queued prompts whose first chunks need 3 blocks each, 4
+        // free: admitting both would grant the second against blocks
+        // already promised to the first, parking it in a slot it cannot
+        // use. Only the first is admitted.
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let q = queued(&[(1, 40, 0), (2, 40, 0)]);
+        let mut v = view(&q, &[0, 1], &[], &[]);
+        v.free_blocks = 4;
+        let plan = s.plan(&v);
+        assert_eq!(plan.admissions, vec![Admission { request: 1, slot: 0 }]);
+        assert_eq!(plan.prefill_chunks.len(), 1);
+        // With room for both, both are admitted.
+        v.free_blocks = 6;
+        let plan = Scheduler::new(SchedulerConfig::default()).plan(&v);
+        assert_eq!(plan.admissions.len(), 2);
+    }
+
+    #[test]
+    fn segregated_decode_when_no_prefill_possible() {
+        let mut s = Scheduler::new(SchedulerConfig::segregated());
+        let q = queued(&[(9, 4, 0)]);
+        let dec = decoding(&[(2, 1, 0, 1, false), (5, 2, 0, 1, false)]);
+        let plan = s.plan(&view(&q, &[], &[], &dec)); // queue deep, no slot
+        assert_eq!(plan.decode, Some(DecodeBatch { slots: vec![2, 5] }));
         assert!(plan.admissions.is_empty());
     }
 
     #[test]
     fn starvation_guard_gives_decodes_a_turn() {
-        // Guard of 4 *chunks* with 2-chunk plans: two prefill plans, then
-        // the pending decodes get a turn.
+        // Segregated mode, guard of 4 *chunks* with 2-chunk plans: two
+        // prefill plans, then the pending decodes get a turn.
         let mut s = Scheduler::new(SchedulerConfig {
             max_consecutive_prefills: 4,
-            ..Default::default()
+            ..SchedulerConfig::segregated()
         });
         let q = queued(&[(1, 64, 0), (2, 64, 0), (3, 64, 0), (4, 64, 0)]);
-        let view = SchedView {
-            queued: &q,
-            free_slots: &[4, 5, 6, 7],
-            inflight: &[],
-            active_slots: &[0, 1, 2],
-        };
-        assert_eq!(s.plan(&view).prefill_chunks.len(), 2);
-        assert_eq!(s.plan(&view).prefill_chunks.len(), 2);
+        let dec = decoding(&[(0, 90, 0, 1, false), (1, 91, 0, 1, false), (2, 92, 0, 1, false)]);
+        let v = view(&q, &[4, 5, 6, 7], &[], &dec);
+        assert_eq!(s.plan(&v).prefill_chunks.len(), 2);
+        assert_eq!(s.plan(&v).prefill_chunks.len(), 2);
         // Guard trips: decode-only plan, sorted slots.
-        let p3 = s.plan(&view);
+        let p3 = s.plan(&v);
         assert!(p3.prefill_chunks.is_empty());
         assert_eq!(p3.decode, Some(DecodeBatch { slots: vec![0, 1, 2] }));
         // Counter reset: prefill again.
-        assert!(!s.plan(&view).prefill_chunks.is_empty());
+        assert!(!s.plan(&v).prefill_chunks.is_empty());
     }
 
     #[test]
@@ -474,49 +1164,25 @@ mod tests {
         // decode-stall bound (in model calls) survives chunk_budget > 1.
         let mut s = Scheduler::new(SchedulerConfig {
             max_consecutive_prefills: 2,
-            ..Default::default()
+            ..SchedulerConfig::segregated()
         });
         let q = queued(&[(1, 64, 0), (2, 64, 0)]);
-        let view = SchedView {
-            queued: &q,
-            free_slots: &[4, 5],
-            inflight: &[],
-            active_slots: &[0],
-        };
-        assert_eq!(s.plan(&view).prefill_chunks.len(), 2);
-        assert!(s.plan(&view).decode.is_some(),
-                "2 chunks hit the guard of 2");
-    }
-
-    #[test]
-    fn decode_when_no_prefill_possible() {
-        let mut s = Scheduler::new(SchedulerConfig::default());
-        let q = queued(&[(9, 4, 0)]);
-        let plan = s.plan(&SchedView {
-            queued: &q,
-            free_slots: &[], // queue deep but no slot: decode
-            inflight: &[],
-            active_slots: &[2, 5],
-        });
-        assert_eq!(plan.decode, Some(DecodeBatch { slots: vec![2, 5] }));
-        assert!(plan.admissions.is_empty());
+        let dec = decoding(&[(0, 90, 0, 1, false)]);
+        let v = view(&q, &[4, 5], &[], &dec);
+        assert_eq!(s.plan(&v).prefill_chunks.len(), 2);
+        assert!(s.plan(&v).decode.is_some(), "2 chunks hit the guard of 2");
     }
 
     #[test]
     fn prefill_allowed_when_no_decodes_regardless_of_guard() {
         let mut s = Scheduler::new(SchedulerConfig {
             max_consecutive_prefills: 1,
-            ..Default::default()
+            ..SchedulerConfig::segregated()
         });
         let q = queued(&[(1, 4, 0), (2, 4, 0), (3, 4, 0)]);
         for _ in 0..5 {
-            let inflight = [PrefillView { request: 1, slot: 0, remaining: 64 }];
-            let plan = s.plan(&SchedView {
-                queued: &q,
-                free_slots: &[1, 2],
-                inflight: &inflight,
-                active_slots: &[],
-            });
+            let inf = inflight(&[(1, 0, 64)]);
+            let plan = s.plan(&view(&q, &[1, 2], &inf, &[]));
             assert!(!plan.prefill_chunks.is_empty());
         }
     }
@@ -535,10 +1201,11 @@ mod tests {
     #[test]
     fn policy_kind_parses() {
         assert_eq!(PolicyKind::parse("fifo"), Some(PolicyKind::Fifo));
-        assert_eq!(PolicyKind::parse("spf"),
-                   Some(PolicyKind::ShortestPromptFirst));
-        assert_eq!(PolicyKind::parse("shortest-prompt-first"),
-                   Some(PolicyKind::ShortestPromptFirst));
+        assert_eq!(PolicyKind::parse("spf"), Some(PolicyKind::ShortestPromptFirst));
+        assert_eq!(
+            PolicyKind::parse("shortest-prompt-first"),
+            Some(PolicyKind::ShortestPromptFirst)
+        );
         assert_eq!(PolicyKind::parse("priority"), Some(PolicyKind::Priority));
         assert_eq!(PolicyKind::parse("nope"), None);
         for kind in PolicyKind::all() {
@@ -558,20 +1225,11 @@ mod tests {
             chunk_budget: 2,
             ..Default::default()
         });
-        let inflight = [
-            PrefillView { request: 1, slot: 0, remaining: 64 },
-            PrefillView { request: 2, slot: 1, remaining: 64 },
-            PrefillView { request: 3, slot: 2, remaining: 64 },
-        ];
-        let view = SchedView {
-            queued: &[],
-            free_slots: &[],
-            inflight: &inflight,
-            active_slots: &[],
-        };
+        let inf = inflight(&[(1, 0, 64), (2, 1, 64), (3, 2, 64)]);
+        let v = view(&[], &[], &inf, &[]);
         let mut seen = std::collections::HashSet::new();
         for _ in 0..2 {
-            for c in s.plan(&view).prefill_chunks {
+            for c in s.plan(&v).prefill_chunks {
                 seen.insert(c.request);
             }
         }
@@ -579,7 +1237,7 @@ mod tests {
     }
 
     #[test]
-    fn prop_no_starvation() {
+    fn prop_no_starvation_segregated() {
         // Under any adversarial view stream with decodes always pending,
         // at most `guard` consecutive prefill-bearing plans occur between
         // decode plans, and the scheduler never goes idle.
@@ -589,7 +1247,7 @@ mod tests {
                 max_consecutive_prefills: guard,
                 max_concurrent_prefills: 1 + rng.usize_below(4),
                 chunk_budget: 1 + rng.usize_below(4),
-                ..Default::default()
+                ..SchedulerConfig::segregated()
             });
             let mut run = 0usize;
             for iter in 0..200u64 {
@@ -599,40 +1257,197 @@ mod tests {
                         prompt_len: 1 + rng.usize_below(64),
                         priority: rng.below(5) as i32,
                         arrival: i,
+                        first_chunk: 1 + rng.usize_below(16),
                     })
                     .collect();
-                let free: Vec<usize> =
-                    (8..8 + rng.usize_below(4)).collect();
-                let inflight: Vec<PrefillView> = (0..rng.usize_below(3))
+                let free: Vec<usize> = (8..8 + rng.usize_below(4)).collect();
+                let inf: Vec<PrefillView> = (0..rng.usize_below(3))
                     .map(|i| PrefillView {
                         request: iter * 100 + 50 + i as u64,
                         slot: 20 + i,
                         remaining: 1 + rng.usize_below(32),
+                        written: rng.usize_below(32),
+                        blocks_held: 2,
+                        next_chunk: 1 + rng.usize_below(16),
                     })
                     .collect();
                 let n_active = 1 + rng.usize_below(8); // always pending
-                let active: Vec<usize> = (0..n_active).collect();
-                let plan = s.plan(&SchedView {
-                    queued: &q,
-                    free_slots: &free,
-                    inflight: &inflight,
-                    active_slots: &active,
-                });
+                let dec: Vec<DecodeSlotView> = (0..n_active)
+                    .map(|slot| DecodeSlotView {
+                        slot,
+                        request: 9000 + slot as u64,
+                        priority: 0,
+                        blocks_held: 1,
+                        needs_block: false,
+                    })
+                    .collect();
+                let plan = s.plan(&view(&q, &free, &inf, &dec));
                 prop_assert!(!plan.is_idle(), "idle while decodes active");
                 if !plan.prefill_chunks.is_empty() {
                     // A prefill plan is only issued while the chunk count
                     // since the last decode is under the guard, and its
                     // chunks never push the total past the guard.
-                    prop_assert!(run < guard,
-                                 "prefill planned at {run} chunks >= guard {guard}");
+                    prop_assert!(run < guard, "prefill planned at {run} chunks >= guard {guard}");
                     run += plan.prefill_chunks.len();
-                    prop_assert!(run <= guard,
-                                 "{run} chunks since last decode > guard {guard}");
+                    prop_assert!(run <= guard, "{run} chunks since last decode > guard {guard}");
                 } else {
-                    prop_assert!(plan.decode.is_some(),
-                                 "plan neither prefills nor decodes");
+                    prop_assert!(plan.decode.is_some(), "plan neither prefills nor decodes");
                     run = 0;
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mixed_plans_respect_block_budget() {
+        // Under random pressure the mixed planner never plans more new
+        // blocks than are free (counting blocks freed by its own
+        // preemptions), never preempts the sole decoder, and always
+        // includes every feasible decode slot.
+        property("mixed block accounting sound", 150, |rng| {
+            let bs = 1 + rng.usize_below(8);
+            let mut s = Scheduler::new(SchedulerConfig {
+                max_step_tokens: rng.usize_below(64),
+                max_concurrent_prefills: 1 + rng.usize_below(3),
+                chunk_budget: 1 + rng.usize_below(3),
+                ..Default::default()
+            });
+            for iter in 0..100u64 {
+                let n_dec = rng.usize_below(5);
+                let dec: Vec<DecodeSlotView> = (0..n_dec)
+                    .map(|slot| DecodeSlotView {
+                        slot,
+                        request: iter * 100 + slot as u64,
+                        priority: rng.below(3) as i32,
+                        blocks_held: 1 + rng.usize_below(4),
+                        needs_block: rng.bool(0.5),
+                    })
+                    .collect();
+                let inf: Vec<PrefillView> = (0..rng.usize_below(3))
+                    .map(|i| {
+                        let written = rng.usize_below(20);
+                        PrefillView {
+                            request: iter * 100 + 50 + i as u64,
+                            slot: 10 + i,
+                            remaining: 1 + rng.usize_below(32),
+                            written,
+                            blocks_held: written.div_ceil(bs),
+                            next_chunk: 1 + rng.usize_below(16),
+                        }
+                    })
+                    .collect();
+                let q: Vec<QueuedRequest> = (0..rng.usize_below(4))
+                    .map(|i| QueuedRequest {
+                        id: iter * 100 + 80 + i as u64,
+                        prompt_len: 1 + rng.usize_below(64),
+                        priority: rng.below(3) as i32,
+                        arrival: i,
+                        first_chunk: 1 + rng.usize_below(16),
+                    })
+                    .collect();
+                let swapped: Vec<SwappedView> = (0..rng.usize_below(3))
+                    .map(|i| SwappedView {
+                        request: iter * 100 + 90 + i as u64,
+                        priority: 0,
+                        tokens: 1 + rng.usize_below(40),
+                    })
+                    .collect();
+                let free_slots: Vec<usize> = (20..20 + rng.usize_below(3)).collect();
+                let free_blocks = rng.usize_below(6);
+                let v = SchedView {
+                    queued: &q,
+                    free_slots: &free_slots,
+                    inflight: &inf,
+                    decoding: &dec,
+                    swapped: &swapped,
+                    free_blocks,
+                    block_size: bs,
+                    can_preempt: true,
+                };
+                let plan = s.plan(&v);
+                // Replay the block ledger the way the engine will.
+                let mut avail = free_blocks;
+                for p in &plan.preemptions {
+                    let d = dec.iter().find(|d| d.request == p.request).unwrap();
+                    prop_assert!(d.slot == p.slot);
+                    avail += d.blocks_held;
+                }
+                // The sole decoder may only go via the last-resort
+                // deadlock breaker: a plan that does nothing else, with
+                // another block consumer waiting.
+                let bare = plan.decode.is_none()
+                    && plan.prefill_chunks.is_empty()
+                    && plan.resumes.is_empty()
+                    && plan.admissions.is_empty()
+                    && plan.aborts.is_empty();
+                prop_assert!(
+                    plan.preemptions.len() < dec.len().max(1)
+                        || (bare
+                            && plan.preemptions.len() == 1
+                            && !(inf.is_empty() && swapped.is_empty())),
+                    "sole decoder preempted outside last resort: {plan:?}"
+                );
+                // Aborts are last-resort only: a lone abort in an
+                // otherwise-empty plan, naming one of >= 2 real jobs.
+                if !plan.aborts.is_empty() {
+                    prop_assert!(plan.aborts.len() == 1);
+                    prop_assert!(
+                        plan.preemptions.is_empty()
+                            && plan.decode.is_none()
+                            && plan.prefill_chunks.is_empty()
+                            && plan.resumes.is_empty()
+                            && plan.admissions.is_empty()
+                    );
+                    let a = plan.aborts[0];
+                    prop_assert!(inf.iter().any(|j| j.request == a.request && j.slot == a.slot));
+                    prop_assert!(inf.len() > 1, "lone prefill job aborted");
+                }
+                let mut spend = 0usize;
+                if let Some(b) = &plan.decode {
+                    prop_assert!(b.slots.windows(2).all(|w| w[0] < w[1]));
+                    for &slot in &b.slots {
+                        let d = dec.iter().find(|d| d.slot == slot).unwrap();
+                        prop_assert!(
+                            !plan.preemptions.iter().any(|p| p.slot == slot),
+                            "decoding a preempted slot"
+                        );
+                        if d.needs_block {
+                            spend += 1;
+                        }
+                    }
+                }
+                for r in &plan.resumes {
+                    let sv = swapped.iter().find(|s| s.request == r.request).unwrap();
+                    spend += (sv.tokens + 1).div_ceil(bs);
+                }
+                for a in &plan.admissions {
+                    let qv = q.iter().find(|q| q.id == a.request).unwrap();
+                    if plan.prefill_chunks.iter().any(|c| c.request == a.request) {
+                        spend += qv.first_chunk.div_ceil(bs);
+                    }
+                }
+                for c in &plan.prefill_chunks {
+                    if let Some(j) = inf.iter().find(|j| j.request == c.request) {
+                        spend += (j.written + j.next_chunk)
+                            .div_ceil(bs)
+                            .saturating_sub(j.blocks_held);
+                    }
+                }
+                prop_assert!(
+                    spend <= avail,
+                    "plan spends {spend} blocks with {avail} available: {plan:?}"
+                );
+                // Slot uniqueness across every plan component.
+                let mut slots: Vec<usize> = plan
+                    .resumes
+                    .iter()
+                    .map(|r| r.slot)
+                    .chain(plan.admissions.iter().map(|a| a.slot))
+                    .collect();
+                slots.sort_unstable();
+                slots.dedup();
+                prop_assert!(slots.len() == plan.resumes.len() + plan.admissions.len());
             }
             Ok(())
         });

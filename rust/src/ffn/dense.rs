@@ -366,12 +366,7 @@ mod tests {
     fn per_neuron_table_applies_each_units_own_range() {
         // unit 0: z=1 in range [-2,2) -> surrogate; unit 1: z=1 outside
         // its range [3,5) -> true gelu.
-        let t = RangeTable::from_calibration(
-            &[-2.0, 3.0],
-            &[2.0, 5.0],
-            &[0.5, 1.0],
-            &[0.1, 0.0],
-        );
+        let t = RangeTable::from_calibration(&[-2.0, 3.0], &[2.0, 5.0], &[0.5, 1.0], &[0.1, 0.0]);
         assert_eq!(t.units(), 2);
         assert!(t.in_range(0, 1.0));
         assert!(!t.in_range(1, 1.0));

@@ -168,8 +168,7 @@ impl FoldedFfn {
         // B[m] = Σ_{j<nf} (a_j·b_up[j] + c_j) · w_down[j][m] + b_down[m]
         let mut b = vec![0f64; d];
         for j in 0..nf {
-            let coef =
-                table.slope[j] as f64 * b_up[j] as f64 + table.intercept[j] as f64;
+            let coef = table.slope[j] as f64 * b_up[j] as f64 + table.intercept[j] as f64;
             for (bv, &wv) in b.iter_mut().zip(&w_down[j * d..(j + 1) * d]) {
                 *bv += coef * wv as f64;
             }
@@ -435,8 +434,7 @@ impl FoldedFfn {
                 if self.kind == PredictorKind::Norm {
                     // every fallback row is an observation for the
                     // online norm gate
-                    let in_range =
-                        (0..nf).all(|j| table.in_range(j, zrow[j]));
+                    let in_range = (0..nf).all(|j| table.in_range(j, zrow[j]));
                     self.predictor.observe(self.norms[i], in_range);
                 }
                 self.reference.activate_row(zrow);
@@ -650,14 +648,7 @@ mod tests {
         let b_up: Vec<f32> = (0..h).map(|_| rng.normal() as f32 * 0.1).collect();
         let w_down: Vec<f32> = (0..h * d).map(|_| rng.normal() as f32 * scale).collect();
         let b_down: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.1).collect();
-        DenseFfn::new(
-            Arc::new(w_up),
-            Arc::new(b_up),
-            Arc::new(w_down),
-            Arc::new(b_down),
-            d,
-            h,
-        )
+        DenseFfn::new(Arc::new(w_up), Arc::new(b_up), Arc::new(w_down), Arc::new(b_down), d, h)
     }
 
     fn cfg(ratio: f64) -> TardisFfnConfig {
@@ -693,10 +684,7 @@ mod tests {
         let got = f.forward(None, &mut scratch, &x, rows);
         let want = f.reference.forward(None, &mut scratch, &x, rows);
         for (g, w) in got.iter().zip(&want) {
-            assert!(
-                (g - w).abs() <= 1e-3 * w.abs().max(1.0),
-                "folded {g} vs reference {w}"
-            );
+            assert!((g - w).abs() <= 1e-3 * w.abs().max(1.0), "folded {g} vs reference {w}");
         }
         assert_eq!(f.telemetry.folded_rows, rows as u64);
         assert_eq!(f.telemetry.fallback_rows, 0);
@@ -861,8 +849,7 @@ mod tests {
             eye[i * d + i] = 0.5;
         }
         let mut rng = Rng::new(123);
-        let w_down: Vec<f32> =
-            (0..d * d).map(|_| rng.normal() as f32 * 0.3).collect();
+        let w_down: Vec<f32> = (0..d * d).map(|_| rng.normal() as f32 * 0.3).collect();
         DenseFfn::new(
             Arc::new(eye),
             Arc::new(vec![0.1; d]),
@@ -946,8 +933,7 @@ mod tests {
             b.push(fit.intercept);
         }
         let c = cfg(0.75);
-        let mut f =
-            FoldedFfn::with_calibration(dense, &c, &lo, &hi, &a, &b, None);
+        let mut f = FoldedFfn::with_calibration(dense, &c, &lo, &hi, &a, &b, None);
         assert_eq!(f.range_table().units(), 12);
         assert!((f.range_table().lo[3] + 4.3).abs() < 1e-6);
         // in-range rows reproduce the per-neuron reference

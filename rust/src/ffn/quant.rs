@@ -95,21 +95,90 @@ impl RoutingQuality {
     }
 }
 
+/// Physical storage of the panel-major code stream. Codes at `bits <= 4`
+/// fit a signed nibble, so they bit-pack **two per byte** (low nibble =
+/// even column, high nibble = odd column within the panel row — [`NR`]
+/// is even, so rows never straddle a byte); wider codes stay one `i8`
+/// each. Packing halves the proxy's resident weight traffic, which is
+/// the whole point of the low-bit predictor (§5.3).
+#[derive(Debug, Clone)]
+enum CodeStore {
+    /// One `i8` per code (`bits > 4`).
+    Wide(Vec<i8>),
+    /// Two 4-bit codes per byte (`bits <= 4`).
+    Packed(Vec<u8>),
+}
+
+/// Sign-extend the low nibble of `byte`.
+#[inline]
+fn nibble_lo(byte: u8) -> i8 {
+    ((byte << 4) as i8) >> 4
+}
+
+/// Sign-extend the high nibble of `byte`.
+#[inline]
+fn nibble_hi(byte: u8) -> i8 {
+    (byte as i8) >> 4
+}
+
+impl CodeStore {
+    /// Pack a panel-major `i8` stream for the given bit width.
+    fn pack(codes: Vec<i8>, bits: u8) -> CodeStore {
+        if bits > 4 {
+            return CodeStore::Wide(codes);
+        }
+        debug_assert!(codes.len() % 2 == 0, "NR is even");
+        let packed = codes
+            .chunks_exact(2)
+            .map(|pair| {
+                debug_assert!((-8..=7).contains(&pair[0]));
+                debug_assert!((-8..=7).contains(&pair[1]));
+                ((pair[0] as u8) & 0x0F) | ((pair[1] as u8) << 4)
+            })
+            .collect();
+        CodeStore::Packed(packed)
+    }
+
+    /// Code at flat panel-major index `idx` (`p*k*NR + kk*NR + j`).
+    #[inline]
+    fn code(&self, idx: usize) -> i8 {
+        match self {
+            CodeStore::Wide(c) => c[idx],
+            CodeStore::Packed(c) => {
+                let byte = c[idx / 2];
+                if idx % 2 == 0 {
+                    nibble_lo(byte)
+                } else {
+                    nibble_hi(byte)
+                }
+            }
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        match self {
+            CodeStore::Wide(c) => c.len(),
+            CodeStore::Packed(c) => c.len(),
+        }
+    }
+}
+
 /// A `[k, m]` weight matrix quantized to `bits` with one f32 scale per
 /// (`group` reduction rows, column), packed into [`NR`]-wide column
 /// panels like [`PackedMatrix`](super::kernels::PackedMatrix).
 ///
-/// Panel `p` holds columns `p*NR..p*NR+NR`: `k` rows of `NR` `i8` codes
-/// (zero-padded past column `m`), plus `n_groups` rows of `NR` f32
-/// scales. `w[kk][col] ≈ codes[kk][col] · scales[kk/group][col]`.
+/// Panel `p` holds columns `p*NR..p*NR+NR`: `k` rows of `NR` codes
+/// (zero-padded past column `m`; bit-packed 2-per-byte at `bits <= 4`,
+/// see [`CodeStore`]), plus `n_groups` rows of `NR` f32 scales.
+/// `w[kk][col] ≈ codes[kk][col] · scales[kk/group][col]`.
 #[derive(Debug, Clone)]
 pub struct QuantizedProxy {
     k: usize,
     m: usize,
     group: usize,
     bits: u8,
-    /// `n_panels * k * NR` codes, panel-major.
-    codes: Vec<i8>,
+    /// `n_panels * k * NR` codes, panel-major (possibly nibble-packed).
+    codes: CodeStore,
     /// `n_panels * n_groups * NR` scales, panel-major.
     scales: Vec<f32>,
 }
@@ -160,7 +229,14 @@ impl QuantizedProxy {
                 }
             }
         }
-        QuantizedProxy { k, m, group, bits, codes, scales }
+        QuantizedProxy {
+            k,
+            m,
+            group,
+            bits,
+            codes: CodeStore::pack(codes, bits),
+            scales,
+        }
     }
 
     /// Pack pre-quantized codes and scales (e.g. from a manifest): codes
@@ -207,7 +283,14 @@ impl QuantizedProxy {
                 }
             }
         }
-        QuantizedProxy { k, m, group, bits, codes: pcodes, scales: pscales }
+        QuantizedProxy {
+            k,
+            m,
+            group,
+            bits,
+            codes: CodeStore::pack(pcodes, bits),
+            scales: pscales,
+        }
     }
 
     pub fn k(&self) -> usize {
@@ -244,22 +327,45 @@ impl QuantizedProxy {
             for p in 0..n_panels {
                 let col0 = p * NR;
                 let ncols = (m - col0).min(NR);
-                let cpanel = &self.codes[p * k * NR..(p + 1) * k * NR];
                 let spanel = &self.scales[p * n_groups * NR..(p + 1) * n_groups * NR];
                 let mut acc = [0f32; NR];
                 for g in 0..n_groups {
                     let k0 = g * group;
                     let k1 = (k0 + group).min(k);
                     let mut gacc = [0f32; NR];
-                    for (kk, prow) in cpanel
-                        .chunks_exact(NR)
-                        .enumerate()
-                        .take(k1)
-                        .skip(k0)
-                    {
-                        let v = xr[kk];
-                        for (a, &c) in gacc.iter_mut().zip(prow) {
-                            *a += v * c as f32;
+                    match &self.codes {
+                        CodeStore::Wide(c) => {
+                            let cpanel = &c[p * k * NR..(p + 1) * k * NR];
+                            for (kk, prow) in cpanel
+                                .chunks_exact(NR)
+                                .enumerate()
+                                .take(k1)
+                                .skip(k0)
+                            {
+                                let v = xr[kk];
+                                for (a, &cv) in gacc.iter_mut().zip(prow) {
+                                    *a += v * cv as f32;
+                                }
+                            }
+                        }
+                        CodeStore::Packed(c) => {
+                            // Nibble-packed panel rows are NR/2 bytes:
+                            // unpack on the fly, two columns per byte.
+                            let cpanel = &c[p * k * (NR / 2)..(p + 1) * k * (NR / 2)];
+                            for (kk, prow) in cpanel
+                                .chunks_exact(NR / 2)
+                                .enumerate()
+                                .take(k1)
+                                .skip(k0)
+                            {
+                                let v = xr[kk];
+                                for (pair, &byte) in
+                                    gacc.chunks_exact_mut(2).zip(prow)
+                                {
+                                    pair[0] += v * nibble_lo(byte) as f32;
+                                    pair[1] += v * nibble_hi(byte) as f32;
+                                }
+                            }
                         }
                     }
                     let srow = &spanel[g * NR..(g + 1) * NR];
@@ -276,6 +382,12 @@ impl QuantizedProxy {
         }
     }
 
+    /// Code at panel-major position (panel `p`, reduction row `kk`,
+    /// panel column `j`), unpacking nibbles as needed.
+    fn code_at(&self, p: usize, kk: usize, j: usize) -> i8 {
+        self.codes.code(p * self.k * NR + kk * NR + j)
+    }
+
     /// Reconstructed row-major `[k, m]` f32 matrix (tests, error bounds).
     pub fn dequantize(&self) -> Vec<f32> {
         let (k, m, group) = (self.k, self.m, self.group);
@@ -284,22 +396,21 @@ impl QuantizedProxy {
         for p in 0..m.div_ceil(NR) {
             let col0 = p * NR;
             let ncols = (m - col0).min(NR);
-            let cpanel = &self.codes[p * k * NR..(p + 1) * k * NR];
             let spanel = &self.scales[p * n_groups * NR..(p + 1) * n_groups * NR];
             for kk in 0..k {
                 let g = kk / group;
                 for j in 0..ncols {
-                    w[kk * m + col0 + j] =
-                        cpanel[kk * NR + j] as f32 * spanel[g * NR + j];
+                    w[kk * m + col0 + j] = self.code_at(p, kk, j) as f32 * spanel[g * NR + j];
                 }
             }
         }
         w
     }
 
-    /// Resident bytes of the packed representation (padding included).
+    /// Resident bytes of the packed representation (padding included;
+    /// codes at `bits <= 4` occupy half a byte each).
     pub fn resident_bytes(&self) -> usize {
-        self.codes.len() + self.scales.len() * std::mem::size_of::<f32>()
+        self.codes.resident_bytes() + self.scales.len() * std::mem::size_of::<f32>()
     }
 
     /// Deployed size in f32-parameter equivalents (`bits` per code plus
@@ -539,13 +650,12 @@ mod tests {
             let ncols = (m_total - col0).min(NR);
             for kk in 0..k {
                 for j in 0..ncols {
-                    codes[kk * m_total + col0 + j] = q.codes[p * k * NR + kk * NR + j];
+                    codes[kk * m_total + col0 + j] = q.code_at(p, kk, j);
                 }
             }
             for g in 0..n_groups {
                 for j in 0..ncols {
-                    scales[g * m_total + col0 + j] =
-                        q.scales[p * n_groups * NR + g * NR + j];
+                    scales[g * m_total + col0 + j] = q.scales[p * n_groups * NR + g * NR + j];
                 }
             }
         }
@@ -556,6 +666,63 @@ mod tests {
             for j in 0..m {
                 assert_eq!(deq2[kk * m + j], deq[kk * m_total + j], "({kk},{j})");
             }
+        }
+    }
+
+    impl QuantizedProxy {
+        /// Test helper: the same proxy with its codes widened to one
+        /// `i8` each (the pre-packing layout), for layout-equivalence
+        /// checks.
+        fn unpacked_clone(&self) -> QuantizedProxy {
+            let n = self.m.div_ceil(NR) * self.k * NR;
+            let wide: Vec<i8> = (0..n).map(|i| self.codes.code(i)).collect();
+            QuantizedProxy { codes: CodeStore::Wide(wide), ..self.clone() }
+        }
+    }
+
+    #[test]
+    fn bitpacked_codes_roundtrip_against_unpacked_layout() {
+        // bits <= 4 stores two codes per byte; the packed store must be
+        // observationally identical to the wide layout — same dequantized
+        // matrix, bitwise the same proxy GEMM — at half the code bytes.
+        let mut rng = Rng::new(7);
+        for (k, m) in [(24, NR + 7), (5, 3), (16, 2 * NR), (9, NR - 1)] {
+            let w = random_w(&mut rng, k, m);
+            for bits in [2u8, 3, 4] {
+                let q = QuantizedProxy::quantize(&w, k, m, m, bits, 4);
+                assert!(matches!(q.codes, CodeStore::Packed(_)));
+                let wide = q.unpacked_clone();
+                assert_eq!(q.dequantize(), wide.dequantize(), "bits={bits}");
+                let rows = 3;
+                let x: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+                let bias: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+                let mut got = vec![0f32; rows * m];
+                let mut want = vec![0f32; rows * m];
+                q.forward_into(&x, rows, &bias, &mut got);
+                wide.forward_into(&x, rows, &bias, &mut want);
+                let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "k={k} m={m} bits={bits}");
+                // exactly half the code bytes (scales unchanged)
+                let scale_bytes = q.scales.len() * 4;
+                assert_eq!(
+                    q.resident_bytes() - scale_bytes,
+                    (wide.resident_bytes() - scale_bytes) / 2
+                );
+            }
+            // wider codes stay one byte each
+            let q8 = QuantizedProxy::quantize(&w, k, m, m, 8, 4);
+            assert!(matches!(q8.codes, CodeStore::Wide(_)));
+        }
+    }
+
+    #[test]
+    fn nibble_sign_extension() {
+        for v in -8i8..=7 {
+            let hi = -v - 1; // also spans -8..=7
+            let byte = ((v as u8) & 0x0F) | ((hi as u8) << 4);
+            assert_eq!(nibble_lo(byte), v);
+            assert_eq!(nibble_hi(byte), hi);
         }
     }
 

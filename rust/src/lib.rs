@@ -10,15 +10,18 @@
 //! * [`runtime`]     — weight init/loading (std-only) plus the PJRT
 //!   engine running the AOT artifacts behind the off-by-default `pjrt`
 //!   cargo feature
-//! * [`coordinator`] — the serving system. Each iteration a pluggable
-//!   [`coordinator::scheduler::SchedulerPolicy`] turns a
-//!   [`coordinator::scheduler::SchedView`] of the queue/slots/in-flight
-//!   work into one composite [`coordinator::scheduler::StepPlan`]
-//!   (admissions + concurrent prefill chunks + decode batch) that the
-//!   engine executes and accounts — vLLM/Orca-style continuous batching
-//!   with multiple prefills in flight. Step models span the backend
-//!   matrix: `MockModel` (deterministic), `NativeModel` (tiny GELU
-//!   transformer over [`ffn`], std-only) and `PjrtModel` (artifacts)
+//! * [`coordinator`] — the serving system over a paged KV cache. Each
+//!   iteration a pluggable [`coordinator::scheduler::SchedulerPolicy`]
+//!   turns a [`coordinator::scheduler::SchedView`] of the
+//!   queue/slots/blocks/in-flight work into one composite
+//!   [`coordinator::scheduler::StepPlan`] (preemptions + resumes +
+//!   admissions + concurrent prefill chunks + decode batch, mixed in a
+//!   single iteration under a token budget) that the engine executes
+//!   and accounts — vLLM/Orca-style continuous batching with chunked
+//!   prefill, block-table KV paging, and swap-based preemption. Step
+//!   models span the backend matrix: `MockModel` (deterministic),
+//!   `NativeModel` (tiny GELU transformer over [`ffn`], std-only,
+//!   paged host cache) and `PjrtModel` (artifacts)
 //! * [`costmodel`]   — analytic roofline reproduction of Fig 1b
 //! * [`config`]      — manifest contract with the python compile path +
 //!   the backend/variant configuration axis

@@ -59,6 +59,11 @@ fn usage() -> ! {
     --slots N              KV slots / decode batch (default 4)
     --max-seq N            context length (default 256)
     --threads N            matmul worker threads (default 0 = serial)
+    --block-size N         tokens per paged-KV block (default 16)
+    --kv-blocks N          KV blocks in the pool (default 0 = enough for
+                           every slot to span the full context; smaller
+                           pools oversubscribe the cache and trigger
+                           preemption/swap under load)
     --predictor KIND       outlier predictor: norm|quantized (default:
                            norm, or the manifest's choice)
     --pred-bits N          quantized-proxy bit width (2..=8, default 4)
@@ -69,6 +74,11 @@ fn usage() -> ! {
     --policy NAME          admission policy: fifo|spf|priority (default fifo)
     --max-prefills N       concurrent prefill jobs (default 2)
     --chunk-budget N       prefill chunks per iteration (default 2)
+    --max-step-tokens N    token budget of one mixed iteration (decode
+                           rows + prefill chunk lengths; default 0 =
+                           unbounded)
+    --segregated           disable mixed prefill+decode iterations (the
+                           pre-paged alternating planner, for baselines)
     --queue-capacity N     admission queue depth before backpressure (default 64)
   generate:
     --prompt TEXT          prompt (default: \"the quick \")
@@ -109,6 +119,11 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
         args.usize("max-prefills", cfg.scheduler.max_concurrent_prefills)?;
     cfg.scheduler.chunk_budget =
         args.usize("chunk-budget", cfg.scheduler.chunk_budget)?;
+    cfg.scheduler.max_step_tokens =
+        args.usize("max-step-tokens", cfg.scheduler.max_step_tokens)?;
+    if args.bool("segregated") {
+        cfg.scheduler.mixed = false;
+    }
     cfg.queue_capacity = args.usize("queue-capacity", cfg.queue_capacity)?;
     Ok(cfg)
 }
@@ -127,6 +142,8 @@ fn native_model_cfg(args: &Args) -> Result<NativeModelConfig> {
     cfg.batch = args.usize("slots", cfg.batch)?;
     cfg.max_seq = args.usize("max-seq", cfg.max_seq)?;
     cfg.threads = args.usize("threads", cfg.threads)?;
+    cfg.kv_block_size = args.usize("block-size", cfg.kv_block_size)?;
+    cfg.kv_blocks = args.usize("kv-blocks", cfg.kv_blocks)?;
     Ok(cfg)
 }
 
@@ -194,6 +211,8 @@ fn native_model_from_artifacts(
         prefill_buckets: manifest.prefill_buckets.clone(),
         seed: 0,
         threads: args.usize("threads", 0)?,
+        kv_block_size: args.usize("block-size", 16)?,
+        kv_blocks: args.usize("kv-blocks", 0)?,
     };
     let mode = match spec.tardis {
         Some(t) => FfnMode::Tardis(tardis_overrides(args, t)?),

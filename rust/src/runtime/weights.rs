@@ -412,6 +412,8 @@ mod tests {
             prefill_buckets: vec![4],
             seed: 99,
             threads: 0,
+            kv_block_size: 4,
+            kv_blocks: 0,
         }
     }
 

@@ -124,6 +124,13 @@ pub fn render_stats(replicas: &[(String, EngineSnapshot)]) -> String {
                     ("inflight_prefills",
                      Json::num(s.inflight_prefills as f64)),
                     ("slots_total", Json::num(s.slots_total as f64)),
+                    ("kv_blocks_total", Json::num(s.kv_blocks_total as f64)),
+                    ("kv_blocks_used", Json::num(s.kv_blocks_used as f64)),
+                    ("block_utilization", Json::num(s.block_utilization)),
+                    ("swapped", Json::num(s.swapped as f64)),
+                    ("preemptions", Json::num(s.preemptions as f64)),
+                    ("mixed_step_ratio",
+                     s.mixed_step_ratio.map(Json::num).unwrap_or(Json::Null)),
                     ("mean_occupancy", Json::num(s.mean_occupancy)),
                     ("tokens_generated",
                      Json::num(s.tokens_generated as f64)),
@@ -213,6 +220,12 @@ mod tests {
             active_slots: 2,
             inflight_prefills: 1,
             slots_total: 8,
+            kv_blocks_total: 64,
+            kv_blocks_used: 16,
+            block_utilization: 0.25,
+            swapped: 1,
+            preemptions: 7,
+            mixed_step_ratio: Some(0.5),
             mean_occupancy: 1.5,
             tokens_generated: 42,
             admitted: 6,
@@ -233,6 +246,24 @@ mod tests {
                    Some(3));
         assert_eq!(reps[0].get("tokens_generated").and_then(Json::as_usize),
                    Some(42));
+        // paged-KV serving metrics
+        assert_eq!(reps[0].get("kv_blocks_total").and_then(Json::as_usize),
+                   Some(64));
+        assert_eq!(reps[0].get("kv_blocks_used").and_then(Json::as_usize),
+                   Some(16));
+        let util = reps[0]
+            .get("block_utilization")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((util - 0.25).abs() < 1e-12);
+        assert_eq!(reps[0].get("preemptions").and_then(Json::as_usize),
+                   Some(7));
+        assert_eq!(reps[0].get("swapped").and_then(Json::as_usize), Some(1));
+        let mixed = reps[0]
+            .get("mixed_step_ratio")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((mixed - 0.5).abs() < 1e-12);
         // no partially-linear FFN -> explicit null
         assert_eq!(reps[0].get("ffn_fallback_rate"), Some(&Json::Null));
     }
@@ -246,6 +277,12 @@ mod tests {
             active_slots: 0,
             inflight_prefills: 0,
             slots_total: 4,
+            kv_blocks_total: 4,
+            kv_blocks_used: 0,
+            block_utilization: 0.0,
+            swapped: 0,
+            preemptions: 0,
+            mixed_step_ratio: None,
             mean_occupancy: 0.0,
             tokens_generated: 0,
             admitted: 0,

@@ -218,6 +218,10 @@ mod tests {
         assert!(resp.contains("\"policy\":\"fifo\""), "{resp}");
         assert!(resp.contains("\"queue_depth\":0"), "{resp}");
         assert!(resp.contains("\"slots_total\":2"), "{resp}");
+        // paged-KV metrics (mock = degenerate one-block-per-slot layout)
+        assert!(resp.contains("\"kv_blocks_total\":2"), "{resp}");
+        assert!(resp.contains("\"preemptions\":0"), "{resp}");
+        assert!(resp.contains("\"block_utilization\":"), "{resp}");
         // One generate terminates the server (stats don't count).
         let resp = client_roundtrip(
             &addr,

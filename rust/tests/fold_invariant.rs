@@ -232,6 +232,8 @@ fn native_cfg() -> NativeModelConfig {
         prefill_buckets: vec![4, 8],
         seed: 0xF01D,
         threads: 0,
+        kv_block_size: 16,
+        kv_blocks: 0,
     }
 }
 

@@ -40,6 +40,8 @@ fn fixture_cfg(m: &Manifest) -> NativeModelConfig {
         prefill_buckets: m.prefill_buckets.clone(),
         seed: 0,
         threads: 0,
+        kv_block_size: 16,
+        kv_blocks: 0,
     }
 }
 

@@ -1,0 +1,329 @@
+//! Std-only integration tests for the paged KV subsystem: block
+//! accounting under engine traffic, and the preemption contract — a
+//! request evicted to the host swap pool and restored into *different*
+//! physical blocks must produce exactly the token stream of an
+//! uninterrupted run, under every scheduler policy.
+
+use tardis::config::{FfnMode, NativeModelConfig};
+use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::model::{MockModel, NativeModel};
+use tardis::coordinator::request::SamplingParams;
+use tardis::coordinator::scheduler::PolicyKind;
+use tardis::coordinator::StepModel;
+use tardis::prop_assert;
+use tardis::testing::property;
+use tardis::util::rng::Rng;
+
+#[derive(Clone)]
+struct Spec {
+    prompt: Vec<i32>,
+    params: SamplingParams,
+}
+
+/// Mock engine over an undersized block pool: `blocks` blocks of
+/// `block_size` tokens shared by 4 slots.
+fn pressured_mock(blocks: usize, block_size: usize) -> InferenceEngine<MockModel> {
+    let model = MockModel::new(4, 64, 16, vec![4, 8]).with_kv_layout(blocks, block_size);
+    InferenceEngine::new(model, EngineConfig::default())
+}
+
+fn run_batched(
+    specs: &[Spec],
+    mut engine: InferenceEngine<MockModel>,
+) -> (Vec<Vec<i32>>, u64) {
+    let ids: Vec<u64> = specs
+        .iter()
+        .map(|s| engine.submit(s.prompt.clone(), s.params).unwrap())
+        .collect();
+    let done = engine.run_to_completion().unwrap();
+    let streams = ids
+        .iter()
+        .map(|id| {
+            done.iter()
+                .find(|c| c.id == *id)
+                .expect("request completed")
+                .tokens
+                .clone()
+        })
+        .collect();
+    (streams, engine.stats.preemptions)
+}
+
+/// Sequential reference over the SAME pressured layout (so context
+/// clamping matches), one request at a time — no batch-mates, and with a
+/// single request in flight the pool never forces a preemption.
+fn sequential_reference(specs: &[Spec], blocks: usize, block_size: usize) -> Vec<Vec<i32>> {
+    let mut engine = pressured_mock(blocks, block_size);
+    let mut out = Vec::new();
+    for s in specs {
+        let c = engine
+            .generate_sequential(s.prompt.clone(), s.params)
+            .unwrap();
+        out.push(c.tokens);
+    }
+    assert_eq!(
+        engine.stats.preemptions, 0,
+        "a lone request must never be preempted"
+    );
+    out
+}
+
+#[test]
+fn preempted_requests_replay_exactly_across_all_policies() {
+    // 4 slots, 6 blocks x 4 tokens: four requests growing to 15 tokens
+    // each demand 16 blocks of the 6 that exist, so the engine must
+    // preempt and restore continuously — without changing any stream.
+    let specs: Vec<Spec> = (0..4)
+        .map(|i| Spec {
+            prompt: vec![1 + i; 5],
+            params: SamplingParams { max_tokens: 10, ..Default::default() },
+        })
+        .collect();
+    let reference = sequential_reference(&specs, 6, 4);
+    for kind in PolicyKind::all() {
+        let mut cfg = EngineConfig::default();
+        cfg.scheduler.policy = kind;
+        let model = MockModel::new(4, 64, 16, vec![4, 8]).with_kv_layout(6, 4);
+        let (streams, preemptions) =
+            run_batched(&specs, InferenceEngine::new(model, cfg));
+        assert!(preemptions > 0, "policy {kind:?}: pool pressure must preempt");
+        assert_eq!(
+            streams, reference,
+            "policy {kind:?} changed outputs under preemption"
+        );
+    }
+}
+
+#[test]
+fn prop_preemption_is_invisible_to_token_streams() {
+    // Random traffic (mixed lengths, temperatures, priorities) over a
+    // random undersized pool: every policy, with however many
+    // preempt/swap/restore cycles, reproduces the sequential reference.
+    property("preemption replay invariance", 20, |rng: &mut Rng| {
+        let blocks = 5 + rng.usize_below(4); // 5..8 blocks of 4 => 20..32 tokens
+        let block_size = 4;
+        let eff = blocks * block_size; // engine clamps context to the pool
+        let n = 2 + rng.usize_below(4);
+        let specs: Vec<Spec> = (0..n)
+            .map(|_| {
+                let len = 1 + rng.usize_below(8);
+                let prompt: Vec<i32> =
+                    (0..len).map(|_| rng.below(16) as i32).collect();
+                let params = SamplingParams {
+                    temperature: if rng.bool(0.5) { 0.0 } else { 0.8 },
+                    top_k: if rng.bool(0.5) { 0 } else { 1 + rng.usize_below(8) },
+                    max_tokens: 1 + rng.usize_below(eff - 9),
+                    stop_token: None,
+                    seed: rng.next_u64(),
+                    priority: rng.below(5) as i32,
+                };
+                Spec { prompt, params }
+            })
+            .collect();
+        let reference = sequential_reference(&specs, blocks, block_size);
+        for kind in PolicyKind::all() {
+            // Both planners: mixed co-scheduling and the segregated
+            // baseline preempt/resume identically under pressure.
+            for mixed in [true, false] {
+                let mut cfg = EngineConfig::default();
+                cfg.scheduler.policy = kind;
+                cfg.scheduler.mixed = mixed;
+                let model = MockModel::new(4, 64, 16, vec![4, 8])
+                    .with_kv_layout(blocks, block_size);
+                let (streams, preemptions) =
+                    run_batched(&specs, InferenceEngine::new(model, cfg));
+                prop_assert!(
+                    streams == reference,
+                    "policy {kind:?} (mixed={mixed}) diverged under block \
+                     pressure ({preemptions} preemptions): {streams:?} vs \
+                     {reference:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_block_leaks_under_random_traffic() {
+    // After any drained workload the pool must be empty again, the
+    // high-water mark within capacity, and every completion accounted.
+    property("block pool conserved", 15, |rng: &mut Rng| {
+        let blocks = 4 + rng.usize_below(8);
+        let mut engine = pressured_mock(blocks, 4);
+        let n = 1 + rng.usize_below(8);
+        for _ in 0..n {
+            let len = 1 + rng.usize_below(10);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.below(16) as i32).collect();
+            engine
+                .submit(
+                    prompt,
+                    SamplingParams {
+                        max_tokens: 1 + rng.usize_below(12),
+                        priority: rng.below(3) as i32,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+        }
+        let done = engine.run_to_completion().unwrap();
+        prop_assert!(done.len() == n);
+        let s = engine.snapshot();
+        prop_assert!(s.kv_blocks_used == 0, "leaked {} blocks", s.kv_blocks_used);
+        prop_assert!(s.swapped == 0);
+        prop_assert!(engine.stats.max_blocks_used <= blocks);
+        prop_assert!(engine.stats.resumes == engine.stats.preemptions);
+        Ok(())
+    });
+}
+
+fn native_cfg(kv_blocks: usize) -> NativeModelConfig {
+    NativeModelConfig {
+        vocab: 32,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 32,
+        batch: 2,
+        prefill_buckets: vec![4, 8],
+        seed: 0x9A6ED,
+        threads: 0,
+        kv_block_size: 4,
+        kv_blocks,
+    }
+}
+
+#[test]
+fn native_preemption_replays_bitwise() {
+    // Real transformer math: a 6-block pool (24-token context for two
+    // requests that want 5 blocks each) forces swap-out/swap-in of live
+    // K/V data. Greedy decoding is argmax over logits, so identical
+    // token streams here mean the restored cache reproduced the logits
+    // bitwise; the dense FFN keeps every row's math independent of its
+    // batch-mates.
+    let specs: Vec<Vec<i32>> = vec![vec![3, 7, 11, 2, 5, 9], vec![8, 1, 4, 6, 2, 10]];
+    let run = |kv_blocks: usize, policy: PolicyKind| {
+        let model = NativeModel::new(native_cfg(kv_blocks), &FfnMode::Dense);
+        assert_eq!(model.kv_layout().block_size, 4);
+        let mut cfg = EngineConfig::default();
+        cfg.scheduler.policy = policy;
+        let mut e = InferenceEngine::new(model, cfg);
+        let ids: Vec<u64> = specs
+            .iter()
+            .map(|p| {
+                e.submit(
+                    p.clone(),
+                    SamplingParams { max_tokens: 12, ..Default::default() },
+                )
+                .unwrap()
+            })
+            .collect();
+        let done = e.run_to_completion().unwrap();
+        let streams: Vec<Vec<i32>> = ids
+            .iter()
+            .map(|id| done.iter().find(|c| c.id == *id).unwrap().tokens.clone())
+            .collect();
+        (streams, e.stats.preemptions)
+    };
+    // Reference: auto-sized pool (no pressure, no preemption).
+    let (reference, p0) = run(0, PolicyKind::Fifo);
+    assert_eq!(p0, 0, "auto pool must not preempt");
+    for kind in PolicyKind::all() {
+        let (streams, preemptions) = run(6, kind);
+        assert!(preemptions > 0, "policy {kind:?}: undersized pool must preempt");
+        assert_eq!(
+            streams, reference,
+            "policy {kind:?}: preemption changed native token streams"
+        );
+    }
+}
+
+#[test]
+fn half_prefilled_job_and_stalled_decoder_resolve_via_last_resort() {
+    // Deadlock regression: pool 4 blocks x 4 tokens, A = 10-token prompt
+    // (prefills 8 + 2; the 2-token tail chunk needs a third block), B =
+    // 5-token prompt that decodes past its table as the *sole* decoder.
+    // A's job and B's table jointly hold the whole pool; without the
+    // last-resort eviction neither can ever proceed and
+    // run_to_completion spins forever.
+    let specs: Vec<Spec> = vec![
+        Spec {
+            prompt: vec![1; 10],
+            params: SamplingParams { max_tokens: 10, ..Default::default() },
+        },
+        Spec {
+            prompt: vec![2; 5],
+            params: SamplingParams { max_tokens: 10, ..Default::default() },
+        },
+    ];
+    let reference = sequential_reference(&specs, 4, 4);
+    for mixed in [true, false] {
+        let mut cfg = EngineConfig::default();
+        cfg.scheduler.mixed = mixed;
+        let model = MockModel::new(4, 64, 16, vec![4, 8]).with_kv_layout(4, 4);
+        let (streams, preemptions) =
+            run_batched(&specs, InferenceEngine::new(model, cfg));
+        assert!(preemptions > 0, "mixed={mixed}: breaker must preempt");
+        assert_eq!(streams, reference, "mixed={mixed}");
+    }
+}
+
+#[test]
+fn competing_prefills_resolve_via_abort() {
+    // Deadlock regression: two 10-token prompts each hold 2 of the 4
+    // blocks after their first chunk, and both tail chunks need a third
+    // — no decoder exists to swap, so the youngest job must abort back
+    // to the queue front and re-prefill once blocks free up.
+    let specs: Vec<Spec> = (0..2)
+        .map(|i| Spec {
+            prompt: vec![1 + i; 10],
+            params: SamplingParams { max_tokens: 12, ..Default::default() },
+        })
+        .collect();
+    let reference = sequential_reference(&specs, 4, 4);
+    for mixed in [true, false] {
+        let mut cfg = EngineConfig::default();
+        cfg.scheduler.mixed = mixed;
+        let model = MockModel::new(4, 64, 16, vec![4, 8]).with_kv_layout(4, 4);
+        let mut engine = InferenceEngine::new(model, cfg);
+        let ids: Vec<u64> = specs
+            .iter()
+            .map(|s| engine.submit(s.prompt.clone(), s.params).unwrap())
+            .collect();
+        let done = engine.run_to_completion().unwrap();
+        assert!(engine.stats.prefill_aborts > 0, "mixed={mixed}: must abort");
+        let streams: Vec<Vec<i32>> = ids
+            .iter()
+            .map(|id| done.iter().find(|c| c.id == *id).unwrap().tokens.clone())
+            .collect();
+        assert_eq!(streams, reference, "mixed={mixed}");
+    }
+}
+
+#[test]
+fn mixed_planner_overlaps_prefill_with_decode_under_budget() {
+    // A token budget still overlaps chunked prefills with decodes; the
+    // segregated baseline never does.
+    let run = |mixed: bool| {
+        let model = MockModel::new(4, 64, 16, vec![4]);
+        let mut cfg = EngineConfig::default();
+        cfg.scheduler.mixed = mixed;
+        cfg.scheduler.max_step_tokens = 8;
+        let mut e = InferenceEngine::new(model, cfg);
+        for i in 0..4 {
+            e.submit(
+                vec![1 + i; 12],
+                SamplingParams { max_tokens: 12, ..Default::default() },
+            )
+            .unwrap();
+        }
+        e.run_to_completion().unwrap();
+        (e.stats.mixed_steps, e.stats.decode_steps)
+    };
+    let (mixed_steps, _) = run(true);
+    assert!(mixed_steps > 0, "mixed planner produced no mixed iterations");
+    let (segregated_mixed, segregated_decodes) = run(false);
+    assert_eq!(segregated_mixed, 0, "segregated planner must never mix");
+    assert!(segregated_decodes > 0);
+}
