@@ -8,11 +8,13 @@
 //! 3. model — full decode steps through the NativeModel, dense vs
 //!    tardis80, cross-validated against `costmodel::tardis_speedup`.
 //!
-//! Besides the human-readable table, the run writes
+//! Besides the human-readable table, the run merges its report into
 //! `BENCH_native_ffn.json` (override the path with `TARDIS_BENCH_JSON`)
-//! so the perf trajectory is tracked across PRs: GFLOP/s, packed/naive
-//! ratio, tokens/s, measured dense-vs-tardis ratio, fallback rate,
-//! scratch-arena misses.
+//! under the `"native_ffn"` key — sibling suites (`bench-decode`'s
+//! top-level record, `coordinator`) are preserved — so the perf
+//! trajectory is tracked across PRs: GFLOP/s per dispatch path,
+//! packed/naive ratio, tokens/s, measured dense-vs-tardis ratio,
+//! fallback rate, scratch-arena misses.
 //!
 //! Run: `cargo bench --bench native_ffn`
 
@@ -23,8 +25,10 @@ use tardis::bench::{black_box, Bench};
 use tardis::config::{FfnMode, NativeModelConfig, TardisFfnConfig};
 use tardis::coordinator::model::{NativeModel, StepModel};
 use tardis::costmodel;
-use tardis::ffn::kernels::{matmul, matmul_naive, norm, Epilogue, PackedMatrix, Scratch};
-use tardis::ffn::{DenseFfn, FoldedFfn};
+use tardis::ffn::kernels::{
+    matmul, matmul_naive, matmul_q, norm, Epilogue, KernelDispatch, PackedMatrix, Scratch,
+};
+use tardis::ffn::{DenseFfn, FoldedFfn, QuantizedProxy};
 use tardis::util::json::Json;
 use tardis::util::rng::Rng;
 
@@ -55,7 +59,8 @@ fn main() {
     let batch = 4;
     let mut rng = Rng::new(0xBEEF);
     let mut report = BTreeMap::new();
-    report.insert("suite".to_string(), Json::Str("native_ffn".to_string()));
+    let isa = KernelDispatch::active().name();
+    report.insert("isa".to_string(), Json::Str(isa.to_string()));
     {
         let mut shape = BTreeMap::new();
         shape.insert("d_model".to_string(), num(d as f64));
@@ -84,15 +89,31 @@ fn main() {
         matmul(None, &x[..d], 1, &packed, Epilogue::Bias(&bias), &mut y[..h]);
         black_box(&y);
     });
+    // fused k-bit dequant GEMM: the quantized-proxy inner loop at the
+    // decode (rows=1) shape, codes consumed in packed-panel form
+    let proxy = QuantizedProxy::quantize(&wraw, d, h, h, 4, 32);
+    b.run("gemm/fused_q4_b1", || {
+        matmul_q(None, &x[..d], 1, proxy.panels(), Epilogue::Bias(&bias), &mut y[..h]);
+        black_box(&y);
+    });
     let naive4 = gflops(batch, d, h, b.mean_ms("gemm/naive_b4").unwrap());
     let packed4 = gflops(batch, d, h, b.mean_ms("gemm/packed_b4").unwrap());
     let naive1 = gflops(1, d, h, b.mean_ms("gemm/naive_b1").unwrap());
     let packed1 = gflops(1, d, h, b.mean_ms("gemm/packed_b1").unwrap());
+    let fusedq1 = gflops(1, d, h, b.mean_ms("gemm/fused_q4_b1").unwrap());
+    let io_bytes = ((d + h) * 4) as f64;
+    let f32_bytes = packed.resident_bytes() as f64 + io_bytes;
+    let q_bytes = proxy.resident_bytes() as f64 + io_bytes;
+    let q_gbps = q_bytes / (b.mean_ms("gemm/fused_q4_b1").unwrap() * 1e-3) / 1e9;
     println!(
-        "gemm [{batch}x{d}]x[{d}x{h}]: naive {naive4:.2} GFLOP/s, packed {packed4:.2} \
-         GFLOP/s ({:.2}x); rows=1: naive {naive1:.2}, packed {packed1:.2} ({:.2}x)",
+        "gemm [{batch}x{d}]x[{d}x{h}] ({isa} path): naive {naive4:.2} GFLOP/s, \
+         packed {packed4:.2} GFLOP/s ({:.2}x); rows=1: naive {naive1:.2}, \
+         packed {packed1:.2} ({:.2}x); fused q4 {fusedq1:.2} GFLOP/s \
+         ({:.0} B/token, {:.2}x fewer than f32, {q_gbps:.2} GB/s)",
         packed4 / naive4,
         packed1 / naive1,
+        q_bytes,
+        f32_bytes / q_bytes,
     );
     {
         let mut g = BTreeMap::new();
@@ -102,6 +123,10 @@ fn main() {
         g.insert("naive_gflops_b1".to_string(), num(naive1));
         g.insert("packed_gflops_b1".to_string(), num(packed1));
         g.insert("packed_vs_naive_b1".to_string(), num(packed1 / naive1));
+        g.insert("fused_q4_gflops_b1".to_string(), num(fusedq1));
+        g.insert("fused_q4_bytes_per_token".to_string(), num(q_bytes));
+        g.insert("fused_q4_bytes_ratio".to_string(), num(f32_bytes / q_bytes));
+        g.insert("fused_q4_gbps".to_string(), num(q_gbps));
         report.insert("gemm".to_string(), Json::Obj(g));
     }
 
@@ -237,11 +262,22 @@ fn main() {
     }
     b.report();
 
+    // Merge under the "native_ffn" key: bench-decode owns the top
+    // level and the coordinator bench owns "coordinator"; clobbering
+    // the file would erase their latest records.
     let path = std::env::var("TARDIS_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_native_ffn.json".to_string());
-    let json = Json::Obj(report).to_string();
+    let mut root = match std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+    {
+        Some(Json::Obj(map)) => map,
+        _ => BTreeMap::new(),
+    };
+    root.insert("native_ffn".to_string(), Json::Obj(report));
+    let json = Json::Obj(root).to_string();
     match std::fs::write(&path, format!("{json}\n")) {
-        Ok(()) => println!("wrote {path}"),
+        Ok(()) => println!("merged native_ffn results into {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

@@ -14,7 +14,10 @@
 //! Both projections are pre-packed ([`PackedMatrix`]) at construction;
 //! the pure-GELU path fuses bias+activation into the up-projection's
 //! tile store, and `forward` draws every intermediate from the caller's
-//! [`Scratch`] arena.
+//! [`Scratch`] arena. The GEMMs run on whichever micro-kernel family
+//! the process-wide [`KernelDispatch`](super::KernelDispatch) selected
+//! (portable tiles or explicit AVX2/FMA) — this module never branches
+//! on ISA itself.
 
 use std::sync::Arc;
 

@@ -337,7 +337,7 @@ impl FoldedFfn {
                 let quant = self.quant.as_mut().expect("quantized router");
                 quant
                     .proxy
-                    .forward_into(x, rows, &self.reference.b_up[..nf], &mut z_hat);
+                    .forward_into(pool, x, rows, &self.reference.b_up[..nf], &mut z_hat);
                 for i in 0..rows {
                     let route = quant.decide_row(
                         &z_hat[i * nf..(i + 1) * nf],
@@ -537,7 +537,7 @@ impl FoldedFfn {
                 let mut z_hat = scratch.take(rows * nf);
                 quant
                     .proxy
-                    .forward_into(x, rows, &self.reference.b_up[..nf], &mut z_hat);
+                    .forward_into(None, x, rows, &self.reference.b_up[..nf], &mut z_hat);
                 for i in 0..rows {
                     let zh = &z_hat[i * nf..(i + 1) * nf];
                     let row_fallback = quant.count_flags(zh, table) > quant.top_k;

@@ -1,0 +1,109 @@
+//! Runtime ISA dispatch for the kernel tier.
+//!
+//! The micro-kernel family is selected **once** per process: the first
+//! call to [`KernelDispatch::active`] probes the CPU (via
+//! `is_x86_feature_detected!`) and caches the result, so the hot loops
+//! carry no per-call feature branches beyond one enum compare that the
+//! branch predictor retires for free. Every GEMM entry point also has a
+//! `*_with` variant taking an explicit [`KernelDispatch`], which is how
+//! the equivalence tests force both paths in one process.
+//!
+//! **Numerics contract.** Within one dispatch path, results are bitwise
+//! deterministic and thread-count invariant (see the `gemm` module
+//! docs). *Across* paths the portable tiles round every multiply and add
+//! separately while the AVX2/FMA tiles contract them into fused
+//! multiply-adds, so the two paths agree only to rounding — the
+//! fold-tolerance bound (`FOLD_TOL = 1e-3` relative, documented in
+//! `tests/fold_invariant.rs`) is the repo-wide budget for exactly this
+//! kind of reassociation/contraction noise, and the SIMD-vs-portable
+//! equivalence tests assert it.
+//!
+//! Setting `TARDIS_FORCE_SCALAR=1` (also `true`/`yes`) pins dispatch to
+//! the portable tiles regardless of hardware — the escape hatch for
+//! bit-exact cross-machine reproduction and the lane CI uses to keep the
+//! fallback path exercised on SIMD-capable runners.
+
+use std::sync::OnceLock;
+
+/// Which micro-kernel family the GEMM drivers hand their tiles to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelDispatch {
+    /// The portable `MR`×`NR` tiles: fixed-size-array accumulators
+    /// autovectorized by stable Rust. Always available; bit-exact across
+    /// machines and the reference the SIMD paths are tested against.
+    Portable,
+    /// Explicit AVX2 + FMA micro-kernels (x86-64 only, runtime-detected).
+    Avx2Fma,
+}
+
+impl KernelDispatch {
+    /// Probe the CPU and the `TARDIS_FORCE_SCALAR` override. Prefer
+    /// [`KernelDispatch::active`], which caches this answer.
+    pub fn detect() -> KernelDispatch {
+        if force_scalar() {
+            return KernelDispatch::Portable;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return KernelDispatch::Avx2Fma;
+            }
+        }
+        KernelDispatch::Portable
+    }
+
+    /// The process-wide dispatch decision, made once on first use.
+    pub fn active() -> KernelDispatch {
+        static ACTIVE: OnceLock<KernelDispatch> = OnceLock::new();
+        *ACTIVE.get_or_init(KernelDispatch::detect)
+    }
+
+    /// Every path executable on this machine, portable first. Reflects
+    /// hardware only — `TARDIS_FORCE_SCALAR` pins [`Self::active`] but
+    /// does not hide paths from tests that enumerate this list.
+    pub fn available() -> Vec<KernelDispatch> {
+        let mut paths = vec![KernelDispatch::Portable];
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                paths.push(KernelDispatch::Avx2Fma);
+            }
+        }
+        paths
+    }
+
+    /// Stable identifier for bench output and JSON reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelDispatch::Portable => "portable",
+            KernelDispatch::Avx2Fma => "avx2+fma",
+        }
+    }
+}
+
+fn force_scalar() -> bool {
+    matches!(
+        std::env::var("TARDIS_FORCE_SCALAR").ok().as_deref(),
+        Some("1") | Some("true") | Some("yes")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn available_starts_portable_and_contains_active_hardware_path() {
+        let paths = KernelDispatch::available();
+        assert_eq!(paths[0], KernelDispatch::Portable);
+        // detect() without the env override must be one of the
+        // executable paths (active() may be pinned by the env).
+        assert!(paths.contains(&KernelDispatch::detect()) || force_scalar());
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(KernelDispatch::Portable.name(), "portable");
+        assert_eq!(KernelDispatch::Avx2Fma.name(), "avx2+fma");
+    }
+}

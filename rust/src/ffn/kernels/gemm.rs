@@ -1,18 +1,24 @@
 //! Register-blocked GEMM over [`PackedMatrix`] panels.
 //!
-//! The hot loop is an `MR`×`NR` micro-kernel: `MR` accumulator rows of
-//! `NR` floats live in fixed-size arrays (autovectorized by stable Rust
-//! — no nightly `std::simd`), each step broadcasts `MR` input values and
-//! streams one packed panel row. Bias and bias+GELU epilogues are fused
-//! into the tile store, so the dense path never re-reads its output.
+//! The hot loop is an `MR`×`NR` micro-kernel. Two families implement it,
+//! selected once per process by [`KernelDispatch`]: the portable tiles
+//! (`MR` accumulator rows of `NR` floats in fixed-size arrays,
+//! autovectorized by stable Rust — no nightly `std::simd`) and the
+//! explicit AVX2/FMA tiles in the `x86` module. Each step broadcasts
+//! `MR` input values and streams one packed panel row. Bias and
+//! bias+GELU epilogues are fused into the tile store, so the dense path
+//! never re-reads its output.
 //!
 //! **Determinism.** Every output element is produced by exactly one tile
 //! job, and the `k`-accumulation order inside a tile is fixed and
 //! identical for every row-block width. Serial, row-parallel,
 //! column-parallel and row-sparse execution are therefore bitwise
-//! identical for any worker count — the parallel drivers only partition
-//! *which* tiles a worker computes (a deterministic contiguous schedule
-//! over row blocks or column panels), never the arithmetic inside one.
+//! identical for any worker count *within one dispatch path* — the
+//! parallel drivers only partition *which* tiles a worker computes (a
+//! deterministic contiguous schedule over row blocks or column-panel
+//! segments), never the arithmetic inside one. Across paths, portable
+//! and SIMD results agree to rounding only (FMA contraction; see the
+//! `dispatch` module docs for the documented `FOLD_TOL` contract).
 //!
 //! The pre-PR scalar kernel is kept as [`matmul_naive`]: it is the
 //! correctness reference for the property tests and the baseline the
@@ -22,8 +28,11 @@ use std::sync::Mutex;
 
 use crate::util::threadpool::ThreadPool;
 
+use super::dispatch::KernelDispatch;
 use super::elementwise::gelu;
 use super::pack::{PackedMatrix, MR, NR};
+#[cfg(target_arch = "x86_64")]
+use super::x86;
 
 /// Below this many multiply-adds the pool dispatch overhead dominates
 /// and the serial kernel wins.
@@ -45,12 +54,8 @@ pub enum Epilogue<'a> {
     Add,
 }
 
-/// One disjoint output span handed to one broadcast job: the span's
-/// first row-block (or panel) index plus the mutable view itself.
-type TileSlot<'a> = Mutex<Option<(usize, &'a mut [f32])>>;
-
 // ---------------------------------------------------------------------------
-// Micro-kernels: R×NR accumulator tiles in registers.
+// Portable micro-kernels: R×NR accumulator tiles in registers.
 // ---------------------------------------------------------------------------
 
 #[inline]
@@ -129,10 +134,67 @@ fn micro4(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], panel: &[f32]) -> [[f3
     [a0, a1, a2, a3]
 }
 
+// ---------------------------------------------------------------------------
+// Dispatch: one tile on the selected ISA path.
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn tile1(disp: KernelDispatch, x: &[f32], k: usize, panel: &[f32]) -> [[f32; NR]; 1] {
+    #[cfg(target_arch = "x86_64")]
+    if disp == KernelDispatch::Avx2Fma {
+        // SAFETY: `Avx2Fma` is only constructed after runtime feature
+        // detection (see dispatch.rs), so AVX2 and FMA are present.
+        return unsafe { x86::micro::<1>(x, k, panel) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = disp;
+    micro1(&x[..k], panel)
+}
+
+#[inline]
+fn tile2(disp: KernelDispatch, x: &[f32], k: usize, panel: &[f32]) -> [[f32; NR]; 2] {
+    #[cfg(target_arch = "x86_64")]
+    if disp == KernelDispatch::Avx2Fma {
+        // SAFETY: as in `tile1`.
+        return unsafe { x86::micro::<2>(x, k, panel) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = disp;
+    micro2(&x[..k], &x[k..2 * k], panel)
+}
+
+#[inline]
+fn tile3(disp: KernelDispatch, x: &[f32], k: usize, panel: &[f32]) -> [[f32; NR]; 3] {
+    #[cfg(target_arch = "x86_64")]
+    if disp == KernelDispatch::Avx2Fma {
+        // SAFETY: as in `tile1`.
+        return unsafe { x86::micro::<3>(x, k, panel) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = disp;
+    micro3(&x[..k], &x[k..2 * k], &x[2 * k..3 * k], panel)
+}
+
+#[inline]
+fn tile4(disp: KernelDispatch, x: &[f32], k: usize, panel: &[f32]) -> [[f32; NR]; 4] {
+    #[cfg(target_arch = "x86_64")]
+    if disp == KernelDispatch::Avx2Fma {
+        // SAFETY: as in `tile1`.
+        return unsafe { x86::micro::<4>(x, k, panel) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = disp;
+    micro4(&x[..k], &x[k..2 * k], &x[2 * k..3 * k], &x[3 * k..4 * k], panel)
+}
+
+// ---------------------------------------------------------------------------
+// Tile stores, shared with the fused quant GEMM (`qgemm`).
+// ---------------------------------------------------------------------------
+
 /// Write one accumulator row into `out` (`out.len() <= NR`), applying
 /// the epilogue. `col0` is the global column of `out[0]` (bias offset).
 #[inline]
-fn finish_row(acc: &[f32; NR], out: &mut [f32], col0: usize, epi: Epilogue<'_>) {
+pub(super) fn finish_row(acc: &[f32; NR], out: &mut [f32], col0: usize, epi: Epilogue<'_>) {
     let n = out.len();
     match epi {
         Epilogue::Store => out.copy_from_slice(&acc[..n]),
@@ -158,7 +220,7 @@ fn finish_row(acc: &[f32; NR], out: &mut [f32], col0: usize, epi: Epilogue<'_>) 
 
 /// Store one `R`-row accumulator tile at (`row0`, `col0`) of `out`.
 #[inline]
-fn store_acc<const R: usize>(
+pub(super) fn store_acc<const R: usize>(
     acc: &[[f32; NR]; R],
     row0: usize,
     m: usize,
@@ -173,10 +235,29 @@ fn store_acc<const R: usize>(
     }
 }
 
+/// Store one `R`-row tile into per-row column-segment views: row `r0+rr`
+/// of the tile goes to `segs[r0+rr][lcol..lcol+ncols]`, whose global
+/// column offset is `col0`.
+#[inline]
+pub(super) fn store_segs<const R: usize>(
+    acc: &[[f32; NR]; R],
+    r0: usize,
+    lcol: usize,
+    col0: usize,
+    ncols: usize,
+    segs: &mut [&mut [f32]],
+    epi: Epilogue<'_>,
+) {
+    for (rr, arow) in acc.iter().enumerate() {
+        finish_row(arow, &mut segs[r0 + rr][lcol..lcol + ncols], col0, epi);
+    }
+}
+
 /// Compute `r` (1..=MR) consecutive input rows (`x` holds exactly
 /// `r * w.k()` floats) across all panels, writing output rows
 /// `row0..row0+r` of `out` (stride `w.m()`).
 fn block_rows(
+    disp: KernelDispatch,
     r: usize,
     x: &[f32],
     w: &PackedMatrix,
@@ -190,24 +271,133 @@ fn block_rows(
         let ncols = (m - col0).min(NR);
         let panel = w.panel(p);
         match r {
-            4 => {
-                let acc = micro4(&x[..k], &x[k..2 * k], &x[2 * k..3 * k], &x[3 * k..4 * k], panel);
-                store_acc(&acc, row0, m, col0, ncols, out, epi);
-            }
-            3 => {
-                let acc = micro3(&x[..k], &x[k..2 * k], &x[2 * k..3 * k], panel);
-                store_acc(&acc, row0, m, col0, ncols, out, epi);
-            }
-            2 => {
-                let acc = micro2(&x[..k], &x[k..2 * k], panel);
-                store_acc(&acc, row0, m, col0, ncols, out, epi);
-            }
-            _ => {
-                let acc = micro1(&x[..k], panel);
-                store_acc(&acc, row0, m, col0, ncols, out, epi);
-            }
+            4 => store_acc(&tile4(disp, x, k, panel), row0, m, col0, ncols, out, epi),
+            3 => store_acc(&tile3(disp, x, k, panel), row0, m, col0, ncols, out, epi),
+            2 => store_acc(&tile2(disp, x, k, panel), row0, m, col0, ncols, out, epi),
+            _ => store_acc(&tile1(disp, x, k, panel), row0, m, col0, ncols, out, epi),
         }
     }
+}
+
+/// The column-segment walk of [`block_rows`]: all `rows` (blocked `MR`
+/// wide) over panels `p0..`, writing into per-row segment views handed
+/// out by [`fan_out_col_segments`]. Per-element arithmetic is identical
+/// to the serial kernel — only the panel range is restricted.
+fn block_rows_segments(
+    disp: KernelDispatch,
+    x: &[f32],
+    rows: usize,
+    w: &PackedMatrix,
+    p0: usize,
+    segs: &mut [&mut [f32]],
+    epi: Epilogue<'_>,
+) {
+    let (k, m) = (w.k(), w.m());
+    let seg_len = segs[0].len();
+    let mut r0 = 0;
+    while r0 < rows {
+        let r = (rows - r0).min(MR);
+        let xb = &x[r0 * k..(r0 + r) * k];
+        let mut lcol = 0;
+        let mut p = p0;
+        while lcol < seg_len {
+            let col0 = p * NR;
+            let ncols = (m - col0).min(NR).min(seg_len - lcol);
+            let panel = w.panel(p);
+            match r {
+                4 => store_segs(&tile4(disp, xb, k, panel), r0, lcol, col0, ncols, segs, epi),
+                3 => store_segs(&tile3(disp, xb, k, panel), r0, lcol, col0, ncols, segs, epi),
+                2 => store_segs(&tile2(disp, xb, k, panel), r0, lcol, col0, ncols, segs, epi),
+                _ => store_segs(&tile1(disp, xb, k, panel), r0, lcol, col0, ncols, segs, epi),
+            }
+            lcol += ncols;
+            p += 1;
+        }
+        r0 += r;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fan-out helpers: disjoint output views over the pool, shared with
+// `qgemm`. Both hand each broadcast job a deterministic contiguous span
+// of the output, so worker count never changes what any job computes.
+// ---------------------------------------------------------------------------
+
+/// One disjoint output span handed to one broadcast job.
+type ChunkSlot<'a> = Mutex<Option<(usize, &'a mut [f32])>>;
+type SegSlot<'a> = Mutex<Option<&'a mut [f32]>>;
+
+/// Partition `out` (`rows` × `m`) into contiguous `MR`-aligned row
+/// chunks and run `body(row0, n_rows, chunk)` for each across the pool.
+pub(super) fn fan_out_row_blocks<F>(
+    pool: &ThreadPool,
+    rows: usize,
+    m: usize,
+    out: &mut [f32],
+    body: F,
+) where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let n_blocks = rows.div_ceil(MR);
+    let jobs = pool.size().min(n_blocks);
+    let rows_per_job = n_blocks.div_ceil(jobs) * MR;
+    let slots: Vec<ChunkSlot<'_>> = out
+        .chunks_mut(rows_per_job * m)
+        .enumerate()
+        .map(|(i, c)| Mutex::new(Some((i * rows_per_job, c))))
+        .collect();
+    pool.broadcast(slots.len(), |i| {
+        let (row0, chunk) = slots[i]
+            .lock()
+            .expect("tile slot")
+            .take()
+            .expect("tile taken once");
+        let nr = chunk.len() / m;
+        body(row0, nr, chunk);
+    });
+}
+
+/// Partition the columns of `out` (`rows` × `m`) into contiguous
+/// panel-aligned segments and run `body(p0, segs)` for each across the
+/// pool, where `segs[r]` is row `r`'s view of the job's columns and
+/// `p0` its first panel. Every row splits into the same segment
+/// pattern, so each job sees all `rows` rows of its column span — the
+/// schedule that keeps 2..7-row decode batches parallel when there are
+/// too few row blocks to split.
+pub(super) fn fan_out_col_segments<F>(
+    pool: &ThreadPool,
+    rows: usize,
+    m: usize,
+    n_panels: usize,
+    out: &mut [f32],
+    body: F,
+) where
+    F: Fn(usize, &mut [&mut [f32]]) + Sync,
+{
+    let jobs = pool.size().min(n_panels);
+    let panels_per_job = n_panels.div_ceil(jobs);
+    let n_jobs = n_panels.div_ceil(panels_per_job);
+    let span = panels_per_job * NR;
+    // Row-major slot grid: slot r*n_jobs + i = row r's columns of job i.
+    let mut slots: Vec<SegSlot<'_>> = Vec::with_capacity(rows * n_jobs);
+    for row_out in out.chunks_mut(m) {
+        for c in row_out.chunks_mut(span) {
+            slots.push(Mutex::new(Some(c)));
+        }
+    }
+    debug_assert_eq!(slots.len(), rows * n_jobs);
+    pool.broadcast(n_jobs, |i| {
+        let mut segs: Vec<&mut [f32]> = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let seg = slots[r * n_jobs + i]
+                .lock()
+                .expect("tile slot")
+                .take()
+                .expect("tile taken once");
+            segs.push(seg);
+        }
+        body(i * panels_per_job, &mut segs);
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -215,7 +405,8 @@ fn block_rows(
 // ---------------------------------------------------------------------------
 
 /// Serial blocked GEMM: `out[rows, m] = epi(x[rows, k] · w)`.
-pub(crate) fn matmul_serial(
+fn matmul_serial(
+    disp: KernelDispatch,
     x: &[f32],
     rows: usize,
     w: &PackedMatrix,
@@ -226,18 +417,32 @@ pub(crate) fn matmul_serial(
     let mut r0 = 0;
     while r0 < rows {
         let r = (rows - r0).min(MR);
-        block_rows(r, &x[r0 * k..(r0 + r) * k], w, r0, out, epi);
+        block_rows(disp, r, &x[r0 * k..(r0 + r) * k], w, r0, out, epi);
         r0 += r;
     }
 }
 
-/// `out[rows, m] = epi(x[rows, k] · w)`.
+/// `out[rows, m] = epi(x[rows, k] · w)` on the active dispatch path.
 ///
 /// With a pool and enough work the tiles fan out over a deterministic
-/// contiguous schedule (row blocks for batches, column panels for the
-/// single-row decode case); results are bitwise identical to the serial
-/// kernel for any worker count.
+/// contiguous schedule (row blocks for full batches, column-panel
+/// segments for 1..7-row decode batches); results are bitwise identical
+/// to the serial kernel for any worker count within one dispatch path.
 pub fn matmul(
+    pool: Option<&ThreadPool>,
+    x: &[f32],
+    rows: usize,
+    w: &PackedMatrix,
+    epi: Epilogue<'_>,
+    out: &mut [f32],
+) {
+    matmul_with(KernelDispatch::active(), pool, x, rows, w, epi, out);
+}
+
+/// [`matmul`] on an explicit dispatch path (tests force both in one
+/// process; the bench measures them side by side).
+pub fn matmul_with(
+    disp: KernelDispatch,
     pool: Option<&ThreadPool>,
     x: &[f32],
     rows: usize,
@@ -250,18 +455,22 @@ pub fn matmul(
     debug_assert_eq!(out.len(), rows * m);
     if let Some(pool) = pool {
         if rows * k * m >= PARALLEL_THRESHOLD_OPS && pool.size() > 1 {
-            if rows.div_ceil(MR) >= 2 {
-                return rows_parallel(pool, x, rows, w, epi, out);
+            if rows >= 2 * MR {
+                return rows_parallel(disp, pool, x, rows, w, epi, out);
             }
-            if rows == 1 && w.n_panels() >= 2 {
-                return cols_parallel(pool, x, w, epi, out);
+            if w.n_panels() >= 2 {
+                return cols_parallel_rows(disp, pool, x, rows, w, epi, out);
+            }
+            if rows.div_ceil(MR) >= 2 {
+                return rows_parallel(disp, pool, x, rows, w, epi, out);
             }
         }
     }
-    matmul_serial(x, rows, w, epi, out);
+    matmul_serial(disp, x, rows, w, epi, out);
 }
 
 fn rows_parallel(
+    disp: KernelDispatch,
     pool: &ThreadPool,
     x: &[f32],
     rows: usize,
@@ -269,65 +478,28 @@ fn rows_parallel(
     epi: Epilogue<'_>,
     out: &mut [f32],
 ) {
-    let (k, m) = (w.k(), w.m());
-    let n_blocks = rows.div_ceil(MR);
-    let jobs = pool.size().min(n_blocks);
-    let rows_per_job = n_blocks.div_ceil(jobs) * MR;
-    let slots: Vec<TileSlot<'_>> = out
-        .chunks_mut(rows_per_job * m)
-        .enumerate()
-        .map(|(i, c)| Mutex::new(Some((i * rows_per_job, c))))
-        .collect();
-    pool.broadcast(slots.len(), |i| {
-        let (row0, chunk) = slots[i]
-            .lock()
-            .expect("tile slot")
-            .take()
-            .expect("tile taken once");
-        let nr = chunk.len() / m;
-        matmul_serial(&x[row0 * k..(row0 + nr) * k], nr, w, epi, chunk);
+    let k = w.k();
+    fan_out_row_blocks(pool, rows, w.m(), out, |row0, nr, chunk| {
+        matmul_serial(disp, &x[row0 * k..(row0 + nr) * k], nr, w, epi, chunk);
     });
 }
 
-fn cols_parallel(
+/// Column-parallel schedule for small-row batches (1..=2*MR-1 rows):
+/// each job computes *all* rows over its contiguous panel span. Covers
+/// the single-row decode case and the 2..7-row mixed decode batches
+/// that used to fall back to the serial kernel.
+fn cols_parallel_rows(
+    disp: KernelDispatch,
     pool: &ThreadPool,
     x: &[f32],
+    rows: usize,
     w: &PackedMatrix,
     epi: Epilogue<'_>,
     out: &mut [f32],
 ) {
-    let n_panels = w.n_panels();
-    let jobs = pool.size().min(n_panels);
-    let panels_per_job = n_panels.div_ceil(jobs);
-    let slots: Vec<TileSlot<'_>> = out
-        .chunks_mut(panels_per_job * NR)
-        .enumerate()
-        .map(|(i, c)| Mutex::new(Some((i * panels_per_job, c))))
-        .collect();
-    pool.broadcast(slots.len(), |i| {
-        let (p0, chunk) = slots[i]
-            .lock()
-            .expect("tile slot")
-            .take()
-            .expect("tile taken once");
-        row1_panels(x, w, p0, chunk, epi);
+    fan_out_col_segments(pool, rows, w.m(), w.n_panels(), out, |p0, segs| {
+        block_rows_segments(disp, x, rows, w, p0, segs, epi);
     });
-}
-
-/// One input row across panels `p0..`, writing global columns
-/// `p0*NR .. p0*NR + out.len()` of the single output row.
-fn row1_panels(x: &[f32], w: &PackedMatrix, p0: usize, out: &mut [f32], epi: Epilogue<'_>) {
-    let m = w.m();
-    let mut lcol = 0;
-    let mut p = p0;
-    while lcol < out.len() {
-        let col0 = p * NR;
-        let ncols = (m - col0).min(NR).min(out.len() - lcol);
-        let acc = micro1(x, w.panel(p));
-        finish_row(&acc[0], &mut out[lcol..lcol + ncols], col0, epi);
-        lcol += ncols;
-        p += 1;
-    }
 }
 
 /// Row-sparse GEMM: compute only the rows with `active[r]` (consecutive
@@ -350,6 +522,21 @@ pub fn matmul_sparse_rows(
     active: &[bool],
     out: &mut [f32],
 ) {
+    matmul_sparse_rows_with(KernelDispatch::active(), pool, x, rows, w, epi, active, out);
+}
+
+/// [`matmul_sparse_rows`] on an explicit dispatch path.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sparse_rows_with(
+    disp: KernelDispatch,
+    pool: Option<&ThreadPool>,
+    x: &[f32],
+    rows: usize,
+    w: &PackedMatrix,
+    epi: Epilogue<'_>,
+    active: &[bool],
+    out: &mut [f32],
+) {
     let (k, m) = (w.k(), w.m());
     debug_assert_eq!(active.len(), rows);
     debug_assert_eq!(x.len(), rows * k);
@@ -360,13 +547,24 @@ pub fn matmul_sparse_rows(
             && pool.size() > 1
             && rows.div_ceil(MR) >= 2
         {
-            return sparse_rows_parallel(pool, x, rows, w, epi, active, out);
+            return fan_out_row_blocks(pool, rows, m, out, |row0, nr, chunk| {
+                sparse_rows_serial(
+                    disp,
+                    &x[row0 * k..(row0 + nr) * k],
+                    nr,
+                    w,
+                    epi,
+                    &active[row0..row0 + nr],
+                    chunk,
+                );
+            });
         }
     }
-    sparse_rows_serial(x, rows, w, epi, active, out);
+    sparse_rows_serial(disp, x, rows, w, epi, active, out);
 }
 
 fn sparse_rows_serial(
+    disp: KernelDispatch,
     x: &[f32],
     rows: usize,
     w: &PackedMatrix,
@@ -385,45 +583,9 @@ fn sparse_rows_serial(
         while r < MR && r0 + r < rows && active[r0 + r] {
             r += 1;
         }
-        block_rows(r, &x[r0 * k..(r0 + r) * k], w, r0, out, epi);
+        block_rows(disp, r, &x[r0 * k..(r0 + r) * k], w, r0, out, epi);
         r0 += r;
     }
-}
-
-fn sparse_rows_parallel(
-    pool: &ThreadPool,
-    x: &[f32],
-    rows: usize,
-    w: &PackedMatrix,
-    epi: Epilogue<'_>,
-    active: &[bool],
-    out: &mut [f32],
-) {
-    let (k, m) = (w.k(), w.m());
-    let n_blocks = rows.div_ceil(MR);
-    let jobs = pool.size().min(n_blocks);
-    let rows_per_job = n_blocks.div_ceil(jobs) * MR;
-    let slots: Vec<TileSlot<'_>> = out
-        .chunks_mut(rows_per_job * m)
-        .enumerate()
-        .map(|(i, c)| Mutex::new(Some((i * rows_per_job, c))))
-        .collect();
-    pool.broadcast(slots.len(), |i| {
-        let (row0, chunk) = slots[i]
-            .lock()
-            .expect("tile slot")
-            .take()
-            .expect("tile taken once");
-        let nr = chunk.len() / m;
-        sparse_rows_serial(
-            &x[row0 * k..(row0 + nr) * k],
-            nr,
-            w,
-            epi,
-            &active[row0..row0 + nr],
-            chunk,
-        );
-    });
 }
 
 // ---------------------------------------------------------------------------
@@ -531,6 +693,27 @@ mod tests {
         let mut pooled = vec![0f32; m];
         matmul(Some(&pool), &x, 1, &w, Epilogue::Store, &mut pooled);
         assert_eq!(serial, pooled);
+    }
+
+    #[test]
+    fn small_batch_pooled_matches_serial_bitwise() {
+        // 2..7 rows with >= 2 panels: the column-segment schedule.
+        let mut rng = Rng::new(19);
+        let (k, m) = (256, 4 * NR + 11);
+        for rows in 2..2 * MR {
+            let x: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+            let wr: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
+            let w = PackedMatrix::pack(&wr, k, m);
+            let mut serial = vec![0f32; rows * m];
+            matmul(None, &x, rows, &w, Epilogue::Bias(&b), &mut serial);
+            for workers in [2, 3, 5] {
+                let pool = ThreadPool::new(workers);
+                let mut pooled = vec![0f32; rows * m];
+                matmul(Some(&pool), &x, rows, &w, Epilogue::Bias(&b), &mut pooled);
+                assert_eq!(serial, pooled, "rows={rows} workers={workers}");
+            }
+        }
     }
 
     #[test]

@@ -4,22 +4,43 @@
 //! * [`pack`]        — [`PackedMatrix`]: weights repacked once at load
 //!   time into `NR`-wide column panels (layout diagram in the module
 //!   docs)
+//! * [`dispatch`]    — [`KernelDispatch`]: the runtime ISA decision
+//!   (portable tiles vs explicit AVX2/FMA), made once per process and
+//!   overridable with `TARDIS_FORCE_SCALAR=1`
 //! * [`gemm`]        — the `MR`×`NR` register-blocked micro-kernel,
 //!   serial/row-parallel/column-parallel drivers with a deterministic
-//!   tile schedule (bitwise identical results for any worker count),
-//!   fused bias / bias+GELU / accumulate epilogues, the explicit
-//!   row-sparse variant [`matmul_sparse_rows`], and the pre-PR scalar
-//!   reference [`matmul_naive`]
+//!   tile schedule (bitwise identical results for any worker count
+//!   within one dispatch path), fused bias / bias+GELU / accumulate
+//!   epilogues, the explicit row-sparse variant
+//!   [`matmul_sparse_rows`], and the pre-PR scalar reference
+//!   [`matmul_naive`]
+//! * [`qgemm`]       — [`QuantPanels`] and the fused k-bit dequant GEMM
+//!   ([`matmul_q`]): codes and group scales consumed in their packed
+//!   panel layout, dequantized in-register inside the micro-kernel (no
+//!   widened f32 matrix is ever materialized)
+//! * `x86`           — the AVX2/FMA micro-kernel family (x86-64 only,
+//!   reached through [`KernelDispatch`])
 //! * [`scratch`]     — [`Scratch`], the reusable buffer arena threaded
 //!   through the forward pass (steady-state decode allocates nothing)
 //! * [`elementwise`] — GELU, dot, norm, single-pass Welford LayerNorm
 
+pub mod dispatch;
 pub mod elementwise;
 pub mod gemm;
 pub mod pack;
+pub mod qgemm;
 pub mod scratch;
+#[cfg(target_arch = "x86_64")]
+mod x86;
 
+pub use dispatch::KernelDispatch;
 pub use elementwise::{dot, gelu, layernorm_into, norm};
-pub use gemm::{matmul, matmul_naive, matmul_sparse_rows, Epilogue, PARALLEL_THRESHOLD_OPS};
+pub use gemm::{
+    matmul, matmul_naive, matmul_sparse_rows, matmul_sparse_rows_with, matmul_with, Epilogue,
+    PARALLEL_THRESHOLD_OPS,
+};
 pub use pack::{PackedMatrix, MR, NR};
+pub use qgemm::{
+    matmul_q, matmul_q_sparse_rows, matmul_q_sparse_rows_with, matmul_q_with, QuantPanels,
+};
 pub use scratch::Scratch;

@@ -18,7 +18,13 @@
 //! The micro-kernel streams one panel linearly (unit stride, one cache
 //! line per [`NR`]/16 rows) while broadcasting input values, instead of
 //! striding through `w` row-by-row once per output row as the old scalar
-//! kernel did.
+//! kernel did. Both micro-kernel families consume this layout unchanged:
+//! the portable tiles walk it with fixed-size-array accumulators, the
+//! AVX2/FMA tiles (see the `dispatch` module) load each panel row as
+//! four ymm vectors and issue prefetch hints a few rows ahead — one
+//! `NR`-wide f32 row is exactly two cache lines. The quantized sibling
+//! of this layout (`i8` codes + group scales, same panel walk) lives in
+//! `qgemm::QuantPanels`.
 
 use std::sync::Arc;
 
@@ -27,7 +33,9 @@ pub const MR: usize = 4;
 /// Columns per register tile (panel width). `MR`×`NR` f32 accumulators
 /// are held in fixed-size arrays so stable Rust autovectorizes them;
 /// `NR = 32` amortizes each input-value broadcast over 8 SSE (or 4 AVX)
-/// vectors, which measured fastest for the tiny-GELU shapes.
+/// vectors, which measured fastest for the tiny-GELU shapes. The
+/// explicit AVX2 tier keeps the same width: one panel row is 4 ymm
+/// loads, and its half-width variant two 16-column passes.
 pub const NR: usize = 32;
 
 /// A weight matrix pre-packed into [`NR`]-wide column panels.

@@ -1,0 +1,630 @@
+//! Fused k-bit dequant GEMM over packed code panels.
+//!
+//! [`QuantPanels`] is the quantized sibling of
+//! [`PackedMatrix`](super::pack::PackedMatrix): a `[k, m]` matrix stored
+//! as `i8` codes in [`NR`]-wide column panels (nibble-packed two per
+//! byte at `bits <= 4`) with one f32 scale per (reduction-group, column)
+//! panel-major alongside. The fused micro-kernels consume that layout
+//! *directly* — each panel row is decoded and scaled in registers
+//! (`w = code as f32 * scale`) and immediately multiply-accumulated, so
+//! no widened f32 proxy matrix is ever materialized and the weight-side
+//! memory traffic is the code bytes plus scales, `~bits/32` of the f32
+//! GEMM's.
+//!
+//! **Numerics.** The portable fused tile performs, per output element,
+//! exactly the multiply/add sequence of `dequantize()` followed by the
+//! portable f32 `matmul` — same widening, same products, same ascending
+//! `k` order — so fused-vs-dequantized equality is **bitwise** on the
+//! portable path (property-tested in `tests/kernel_equivalence.rs`).
+//! The AVX2 path adds only FMA contraction on top, bounded by the same
+//! `FOLD_TOL` contract as the f32 tiles (see the `dispatch` module
+//! docs). Drivers reuse the deterministic tile schedules of `gemm`, so
+//! thread-count invariance is bitwise within each dispatch path.
+//!
+//! Used today by `QuantizedProxy` (the §5.3 out-of-range predictor);
+//! the entry points take any [`QuantPanels`], so a fully-quantized `W1`
+//! path can reuse them unchanged.
+
+use crate::util::threadpool::ThreadPool;
+
+use super::dispatch::KernelDispatch;
+use super::gemm::{
+    fan_out_col_segments, fan_out_row_blocks, store_acc, store_segs, Epilogue,
+    PARALLEL_THRESHOLD_OPS,
+};
+use super::pack::{MR, NR};
+#[cfg(target_arch = "x86_64")]
+use super::x86;
+
+/// Physical storage of the panel-major code stream. Codes at `bits <= 4`
+/// fit a signed nibble, so they bit-pack **two per byte** (low nibble =
+/// even column, high nibble = odd column within the panel row — [`NR`]
+/// is even, so rows never straddle a byte); wider codes stay one `i8`
+/// each. Packing halves the resident weight traffic, which is the whole
+/// point of the low-bit predictor (§5.3).
+#[derive(Debug, Clone)]
+enum CodeStore {
+    /// One `i8` per code (`bits > 4`).
+    Wide(Vec<i8>),
+    /// Two 4-bit codes per byte (`bits <= 4`).
+    Packed(Vec<u8>),
+}
+
+/// Sign-extend the low nibble of `byte`.
+#[inline]
+pub(crate) fn nibble_lo(byte: u8) -> i8 {
+    ((byte << 4) as i8) >> 4
+}
+
+/// Sign-extend the high nibble of `byte`.
+#[inline]
+pub(crate) fn nibble_hi(byte: u8) -> i8 {
+    (byte as i8) >> 4
+}
+
+impl CodeStore {
+    /// Pack a panel-major `i8` stream for the given bit width.
+    fn pack(codes: Vec<i8>, bits: u8) -> CodeStore {
+        if bits > 4 {
+            return CodeStore::Wide(codes);
+        }
+        debug_assert!(codes.len() % 2 == 0, "NR is even");
+        let packed = codes
+            .chunks_exact(2)
+            .map(|pair| {
+                debug_assert!((-8..=7).contains(&pair[0]));
+                debug_assert!((-8..=7).contains(&pair[1]));
+                ((pair[0] as u8) & 0x0F) | ((pair[1] as u8) << 4)
+            })
+            .collect();
+        CodeStore::Packed(packed)
+    }
+
+    /// Code at flat panel-major index `idx` (`p*k*NR + kk*NR + j`).
+    #[inline]
+    fn code(&self, idx: usize) -> i8 {
+        match self {
+            CodeStore::Wide(c) => c[idx],
+            CodeStore::Packed(c) => {
+                let byte = c[idx / 2];
+                if idx % 2 == 0 {
+                    nibble_lo(byte)
+                } else {
+                    nibble_hi(byte)
+                }
+            }
+        }
+    }
+
+    fn resident_bytes(&self) -> usize {
+        match self {
+            CodeStore::Wide(c) => c.len(),
+            CodeStore::Packed(c) => c.len(),
+        }
+    }
+}
+
+/// Borrowed view of one panel's code rows, in whichever physical layout
+/// the store uses — what the micro-kernels decode from.
+#[derive(Clone, Copy)]
+pub(super) enum PanelCodes<'a> {
+    /// `k * NR` codes, one `i8` each.
+    Wide(&'a [i8]),
+    /// `k * NR / 2` bytes, two nibble codes each.
+    Packed(&'a [u8]),
+}
+
+/// A `[k, m]` matrix quantized to `bits` with one f32 scale per
+/// (`group` reduction rows, column), packed into [`NR`]-wide column
+/// panels mirroring [`PackedMatrix`](super::pack::PackedMatrix).
+///
+/// Panel `p` holds columns `p*NR..p*NR+NR`: `k` rows of `NR` codes
+/// (zero-padded past column `m`; bit-packed 2-per-byte at `bits <= 4`,
+/// see `CodeStore`), plus `n_groups` rows of `NR` f32 scales.
+/// `w[kk][col] ≈ codes[kk][col] · scales[kk/group][col]`.
+#[derive(Debug, Clone)]
+pub struct QuantPanels {
+    k: usize,
+    m: usize,
+    group: usize,
+    bits: u8,
+    /// `n_panels * k * NR` codes, panel-major (possibly nibble-packed).
+    codes: CodeStore,
+    /// `n_panels * n_groups * NR` scales, panel-major.
+    scales: Vec<f32>,
+}
+
+impl QuantPanels {
+    /// Take ownership of a panel-major `i8` code stream
+    /// (`n_panels * k * NR`, zero-padded past column `m`) and its
+    /// panel-major scales (`n_panels * ceil(k/group) * NR`), bit-packing
+    /// the codes when they fit a nibble.
+    pub fn pack(
+        codes: Vec<i8>,
+        scales: Vec<f32>,
+        k: usize,
+        m: usize,
+        group: usize,
+        bits: u8,
+    ) -> QuantPanels {
+        assert!((2..=8).contains(&bits), "code bits {bits} not in 2..=8");
+        assert!(group >= 1, "reduction group must be >= 1");
+        let n_panels = m.div_ceil(NR);
+        let n_groups = k.div_ceil(group);
+        assert_eq!(codes.len(), n_panels * k * NR, "panel-major code stream shape");
+        assert_eq!(scales.len(), n_panels * n_groups * NR, "panel-major scale shape");
+        QuantPanels { k, m, group, bits, codes: CodeStore::pack(codes, bits), scales }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    pub fn n_panels(&self) -> usize {
+        self.m.div_ceil(NR)
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.k.div_ceil(self.group)
+    }
+
+    /// Whether the codes are stored two per byte.
+    pub fn is_bitpacked(&self) -> bool {
+        matches!(self.codes, CodeStore::Packed(_))
+    }
+
+    /// Resident bytes of the packed representation (padding included;
+    /// codes at `bits <= 4` occupy half a byte each).
+    pub fn resident_bytes(&self) -> usize {
+        self.codes.resident_bytes() + self.scales.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Code at panel-major position (panel `p`, reduction row `kk`,
+    /// panel column `j`), unpacking nibbles as needed.
+    pub(crate) fn code_at(&self, p: usize, kk: usize, j: usize) -> i8 {
+        self.codes.code(p * self.k * NR + kk * NR + j)
+    }
+
+    /// Scale of (panel `p`, group `g`, panel column `j`).
+    pub(crate) fn scale_at(&self, p: usize, g: usize, j: usize) -> f32 {
+        self.scales[p * self.n_groups() * NR + g * NR + j]
+    }
+
+    /// Reconstructed row-major `[k, m]` f32 matrix (tests, error bounds,
+    /// and the bitwise reference of the fused kernels: the fused portable
+    /// path performs exactly `code as f32 * scale` per element).
+    pub fn dequantize(&self) -> Vec<f32> {
+        let (k, m, group) = (self.k, self.m, self.group);
+        let n_groups = self.n_groups();
+        let mut w = vec![0f32; k * m];
+        for p in 0..self.n_panels() {
+            let col0 = p * NR;
+            let ncols = (m - col0).min(NR);
+            let spanel = &self.scales[p * n_groups * NR..(p + 1) * n_groups * NR];
+            for kk in 0..k {
+                let g = kk / group;
+                for j in 0..ncols {
+                    w[kk * m + col0 + j] = self.code_at(p, kk, j) as f32 * spanel[g * NR + j];
+                }
+            }
+        }
+        w
+    }
+
+    /// Panel `p`'s code rows in their physical layout.
+    #[inline]
+    pub(super) fn codes_panel(&self, p: usize) -> PanelCodes<'_> {
+        match &self.codes {
+            CodeStore::Wide(c) => PanelCodes::Wide(&c[p * self.k * NR..(p + 1) * self.k * NR]),
+            CodeStore::Packed(c) => {
+                PanelCodes::Packed(&c[p * self.k * (NR / 2)..(p + 1) * self.k * (NR / 2)])
+            }
+        }
+    }
+
+    /// Panel `p`'s scale rows (`n_groups * NR` floats).
+    #[inline]
+    pub(super) fn scales_panel(&self, p: usize) -> &[f32] {
+        let n_groups = self.n_groups();
+        &self.scales[p * n_groups * NR..(p + 1) * n_groups * NR]
+    }
+
+    /// Test helper: the same panels with codes widened to one `i8` each
+    /// (the pre-packing layout), for layout-equivalence checks.
+    #[cfg(test)]
+    pub(crate) fn unpacked_clone(&self) -> QuantPanels {
+        let n = self.n_panels() * self.k * NR;
+        let wide: Vec<i8> = (0..n).map(|i| self.codes.code(i)).collect();
+        QuantPanels { codes: CodeStore::Wide(wide), ..self.clone() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Micro-kernels.
+// ---------------------------------------------------------------------------
+
+/// Portable fused dequant tile: decode one panel row into a register
+/// weight row (`w = code as f32 * scale`), then multiply-accumulate —
+/// per output element the exact op sequence of dequantize-then-portable
+/// `matmul`, so the two are bitwise equal.
+fn qmicro<const R: usize>(
+    x: &[f32],
+    k: usize,
+    group: usize,
+    codes: PanelCodes<'_>,
+    spanel: &[f32],
+) -> [[f32; NR]; R] {
+    let mut acc = [[0f32; NR]; R];
+    let mut g = 0;
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + group).min(k);
+        let srow = &spanel[g * NR..(g + 1) * NR];
+        for kk in k0..k1 {
+            let mut wrow = [0f32; NR];
+            match codes {
+                PanelCodes::Wide(c) => {
+                    let crow = &c[kk * NR..(kk + 1) * NR];
+                    for ((w, &cv), &s) in wrow.iter_mut().zip(crow).zip(srow) {
+                        *w = cv as f32 * s;
+                    }
+                }
+                PanelCodes::Packed(c) => {
+                    let crow = &c[kk * (NR / 2)..(kk + 1) * (NR / 2)];
+                    for ((pair, spair), &byte) in
+                        wrow.chunks_exact_mut(2).zip(srow.chunks_exact(2)).zip(crow)
+                    {
+                        pair[0] = nibble_lo(byte) as f32 * spair[0];
+                        pair[1] = nibble_hi(byte) as f32 * spair[1];
+                    }
+                }
+            }
+            for rr in 0..R {
+                let v = x[rr * k + kk];
+                for (a, &wv) in acc[rr].iter_mut().zip(&wrow) {
+                    *a += v * wv;
+                }
+            }
+        }
+        k0 = k1;
+        g += 1;
+    }
+    acc
+}
+
+/// One `R`-row fused tile of panel `p`, routed to the active ISA path.
+#[inline]
+fn qtile<const R: usize>(
+    disp: KernelDispatch,
+    x: &[f32],
+    w: &QuantPanels,
+    p: usize,
+) -> [[f32; NR]; R] {
+    let codes = w.codes_panel(p);
+    let spanel = w.scales_panel(p);
+    #[cfg(target_arch = "x86_64")]
+    if disp == KernelDispatch::Avx2Fma {
+        // SAFETY: `Avx2Fma` is only constructed after runtime feature
+        // detection (see dispatch.rs), so AVX2 and FMA are present.
+        return unsafe { x86::qmicro::<R>(x, w.k, w.group, codes, spanel) };
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = disp;
+    qmicro::<R>(x, w.k, w.group, codes, spanel)
+}
+
+/// Compute `r` (1..=MR) consecutive input rows across all panels,
+/// writing output rows `row0..row0+r` of `out` (stride `w.m()`).
+fn qblock_rows(
+    disp: KernelDispatch,
+    r: usize,
+    x: &[f32],
+    w: &QuantPanels,
+    row0: usize,
+    out: &mut [f32],
+    epi: Epilogue<'_>,
+) {
+    let m = w.m;
+    for p in 0..w.n_panels() {
+        let col0 = p * NR;
+        let ncols = (m - col0).min(NR);
+        match r {
+            4 => store_acc(&qtile::<4>(disp, x, w, p), row0, m, col0, ncols, out, epi),
+            3 => store_acc(&qtile::<3>(disp, x, w, p), row0, m, col0, ncols, out, epi),
+            2 => store_acc(&qtile::<2>(disp, x, w, p), row0, m, col0, ncols, out, epi),
+            _ => store_acc(&qtile::<1>(disp, x, w, p), row0, m, col0, ncols, out, epi),
+        }
+    }
+}
+
+/// The column-segment walk of `qblock_rows`: all `rows` over panels
+/// `p0..`, writing into per-row segment views (see
+/// `gemm::fan_out_col_segments`).
+fn qblock_rows_segments(
+    disp: KernelDispatch,
+    x: &[f32],
+    rows: usize,
+    w: &QuantPanels,
+    p0: usize,
+    segs: &mut [&mut [f32]],
+    epi: Epilogue<'_>,
+) {
+    let (k, m) = (w.k, w.m);
+    let seg_len = segs[0].len();
+    let mut r0 = 0;
+    while r0 < rows {
+        let r = (rows - r0).min(MR);
+        let xb = &x[r0 * k..(r0 + r) * k];
+        let mut lcol = 0;
+        let mut p = p0;
+        while lcol < seg_len {
+            let col0 = p * NR;
+            let ncols = (m - col0).min(NR).min(seg_len - lcol);
+            match r {
+                4 => store_segs(&qtile::<4>(disp, xb, w, p), r0, lcol, col0, ncols, segs, epi),
+                3 => store_segs(&qtile::<3>(disp, xb, w, p), r0, lcol, col0, ncols, segs, epi),
+                2 => store_segs(&qtile::<2>(disp, xb, w, p), r0, lcol, col0, ncols, segs, epi),
+                _ => store_segs(&qtile::<1>(disp, xb, w, p), r0, lcol, col0, ncols, segs, epi),
+            }
+            lcol += ncols;
+            p += 1;
+        }
+        r0 += r;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drivers: same deterministic schedules as the f32 GEMM.
+// ---------------------------------------------------------------------------
+
+/// Serial fused GEMM: `out[rows, m] = epi(x[rows, k] · deq(w))`, never
+/// materializing `deq(w)`.
+fn matmul_q_serial(
+    disp: KernelDispatch,
+    x: &[f32],
+    rows: usize,
+    w: &QuantPanels,
+    epi: Epilogue<'_>,
+    out: &mut [f32],
+) {
+    let k = w.k;
+    let mut r0 = 0;
+    while r0 < rows {
+        let r = (rows - r0).min(MR);
+        qblock_rows(disp, r, &x[r0 * k..(r0 + r) * k], w, r0, out, epi);
+        r0 += r;
+    }
+}
+
+/// `out[rows, m] = epi(x[rows, k] · deq(w))` on the active dispatch
+/// path, fusing dequantization into the tiles. Parallel schedules and
+/// their bitwise thread-count invariance mirror
+/// [`matmul`](super::gemm::matmul).
+pub fn matmul_q(
+    pool: Option<&ThreadPool>,
+    x: &[f32],
+    rows: usize,
+    w: &QuantPanels,
+    epi: Epilogue<'_>,
+    out: &mut [f32],
+) {
+    matmul_q_with(KernelDispatch::active(), pool, x, rows, w, epi, out);
+}
+
+/// [`matmul_q`] on an explicit dispatch path (tests force both in one
+/// process).
+pub fn matmul_q_with(
+    disp: KernelDispatch,
+    pool: Option<&ThreadPool>,
+    x: &[f32],
+    rows: usize,
+    w: &QuantPanels,
+    epi: Epilogue<'_>,
+    out: &mut [f32],
+) {
+    let (k, m) = (w.k, w.m);
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(out.len(), rows * m);
+    if let Some(pool) = pool {
+        if rows * k * m >= PARALLEL_THRESHOLD_OPS && pool.size() > 1 {
+            if rows >= 2 * MR {
+                return fan_out_row_blocks(pool, rows, m, out, |row0, nr, chunk| {
+                    matmul_q_serial(disp, &x[row0 * k..(row0 + nr) * k], nr, w, epi, chunk);
+                });
+            }
+            if w.n_panels() >= 2 {
+                return fan_out_col_segments(pool, rows, m, w.n_panels(), out, |p0, segs| {
+                    qblock_rows_segments(disp, x, rows, w, p0, segs, epi);
+                });
+            }
+            if rows.div_ceil(MR) >= 2 {
+                return fan_out_row_blocks(pool, rows, m, out, |row0, nr, chunk| {
+                    matmul_q_serial(disp, &x[row0 * k..(row0 + nr) * k], nr, w, epi, chunk);
+                });
+            }
+        }
+    }
+    matmul_q_serial(disp, x, rows, w, epi, out);
+}
+
+/// Row-sparse fused GEMM: compute only rows with `active[r]` (runs of
+/// active rows blocked up to `MR` wide); inactive rows of `out` are left
+/// untouched. Mirrors
+/// [`matmul_sparse_rows`](super::gemm::matmul_sparse_rows) — per-row
+/// results are bitwise identical to [`matmul_q`] for any worker count.
+pub fn matmul_q_sparse_rows(
+    pool: Option<&ThreadPool>,
+    x: &[f32],
+    rows: usize,
+    w: &QuantPanels,
+    epi: Epilogue<'_>,
+    active: &[bool],
+    out: &mut [f32],
+) {
+    matmul_q_sparse_rows_with(KernelDispatch::active(), pool, x, rows, w, epi, active, out);
+}
+
+/// [`matmul_q_sparse_rows`] on an explicit dispatch path.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_q_sparse_rows_with(
+    disp: KernelDispatch,
+    pool: Option<&ThreadPool>,
+    x: &[f32],
+    rows: usize,
+    w: &QuantPanels,
+    epi: Epilogue<'_>,
+    active: &[bool],
+    out: &mut [f32],
+) {
+    let (k, m) = (w.k, w.m);
+    debug_assert_eq!(active.len(), rows);
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(out.len(), rows * m);
+    if let Some(pool) = pool {
+        let n_active = active.iter().filter(|&&a| a).count();
+        if n_active * k * m >= PARALLEL_THRESHOLD_OPS
+            && pool.size() > 1
+            && rows.div_ceil(MR) >= 2
+        {
+            return fan_out_row_blocks(pool, rows, m, out, |row0, nr, chunk| {
+                q_sparse_rows_serial(
+                    disp,
+                    &x[row0 * k..(row0 + nr) * k],
+                    nr,
+                    w,
+                    epi,
+                    &active[row0..row0 + nr],
+                    chunk,
+                );
+            });
+        }
+    }
+    q_sparse_rows_serial(disp, x, rows, w, epi, active, out);
+}
+
+fn q_sparse_rows_serial(
+    disp: KernelDispatch,
+    x: &[f32],
+    rows: usize,
+    w: &QuantPanels,
+    epi: Epilogue<'_>,
+    active: &[bool],
+    out: &mut [f32],
+) {
+    let k = w.k;
+    let mut r0 = 0;
+    while r0 < rows {
+        if !active[r0] {
+            r0 += 1;
+            continue;
+        }
+        let mut r = 1;
+        while r < MR && r0 + r < rows && active[r0 + r] {
+            r += 1;
+        }
+        qblock_rows(disp, r, &x[r0 * k..(r0 + r) * k], w, r0, out, epi);
+        r0 += r;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn nibble_sign_extension() {
+        for v in -8i8..=7 {
+            let hi = -v - 1; // also spans -8..=7
+            let byte = ((v as u8) & 0x0F) | ((hi as u8) << 4);
+            assert_eq!(nibble_lo(byte), v);
+            assert_eq!(nibble_hi(byte), hi);
+        }
+    }
+
+    /// Hand-built 2-column panel: fused output must equal the scaled
+    /// integer dot products exactly.
+    #[test]
+    fn fused_known_values() {
+        let (k, m, group) = (2, 2, 2);
+        // codes [[1, -2], [3, 4]], scale 0.5 per (group, col)
+        let mut codes = vec![0i8; k * NR];
+        codes[0] = 1;
+        codes[1] = -2;
+        codes[NR] = 3;
+        codes[NR + 1] = 4;
+        let mut scales = vec![0f32; NR];
+        scales[0] = 0.5;
+        scales[1] = 0.5;
+        let w = QuantPanels::pack(codes, scales, k, m, group, 4);
+        assert!(w.is_bitpacked());
+        let x = vec![2.0f32, 1.0]; // row · deq(w) = [2*0.5 + 1*1.5, 2*-1.0 + 1*2.0]
+        let mut out = vec![0f32; m];
+        matmul_q_with(KernelDispatch::Portable, None, &x, 1, &w, Epilogue::Store, &mut out);
+        assert_eq!(out, vec![2.5, 0.0]);
+    }
+
+    #[test]
+    fn serial_matches_dequantized_matmul_bitwise_on_portable_path() {
+        let mut rng = Rng::new(41);
+        let (rows, k, m, group) = (5, 23, NR + 9, 7);
+        let wf: Vec<f32> = (0..k * m).map(|_| rng.normal() as f32 * 0.3).collect();
+        // quantize via the proxy-style symmetric scheme, inline
+        let qmax = 7.0f32;
+        let n_panels = m.div_ceil(NR);
+        let n_groups = k.div_ceil(group);
+        let mut codes = vec![0i8; n_panels * k * NR];
+        let mut scales = vec![0f32; n_panels * n_groups * NR];
+        for p in 0..n_panels {
+            let col0 = p * NR;
+            let ncols = (m - col0).min(NR);
+            for g in 0..n_groups {
+                let (k0, k1) = (g * group, (g * group + group).min(k));
+                for j in 0..ncols {
+                    let col = col0 + j;
+                    let mut absmax = 0f32;
+                    for kk in k0..k1 {
+                        absmax = absmax.max(wf[kk * m + col].abs());
+                    }
+                    let scale = (absmax / qmax).max(1e-12);
+                    scales[p * n_groups * NR + g * NR + j] = scale;
+                    for kk in k0..k1 {
+                        codes[p * k * NR + kk * NR + j] =
+                            (wf[kk * m + col] / scale).round_ties_even().clamp(-qmax, qmax) as i8;
+                    }
+                }
+            }
+        }
+        let w = QuantPanels::pack(codes, scales, k, m, group, 4);
+        let x: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
+        let mut fused = vec![0f32; rows * m];
+        matmul_q_with(KernelDispatch::Portable, None, &x, rows, &w, Epilogue::Store, &mut fused);
+        let deq = crate::ffn::kernels::PackedMatrix::pack(&w.dequantize(), k, m);
+        let mut want = vec![0f32; rows * m];
+        crate::ffn::kernels::gemm::matmul_with(
+            KernelDispatch::Portable,
+            None,
+            &x,
+            rows,
+            &deq,
+            Epilogue::Store,
+            &mut want,
+        );
+        assert_eq!(
+            fused.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}

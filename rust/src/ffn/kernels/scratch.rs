@@ -14,7 +14,9 @@
 //! buffer and could skip it, but the memset is a few KB against the
 //! megaflop GEMMs it sits between, and handing out deterministic zeroed
 //! buffers keeps accumulate-style consumers (`Epilogue::Add` targets,
-//! the attention context) safe by construction without `unsafe`.
+//! the attention context) safe by construction — the arena itself needs
+//! no `unsafe` (the kernel tier's only `unsafe` is the feature-gated
+//! SIMD in `x86.rs` and the scoped borrow erasure in the thread pool).
 
 /// Free-list of `f32` buffers.
 #[derive(Debug, Default)]

@@ -1,0 +1,201 @@
+//! Explicit AVX2/FMA micro-kernels (x86-64 only).
+//!
+//! Same `R`×[`NR`] tile shape and the same ascending-`k` per-element
+//! accumulation order as the portable micros in `gemm`/`qgemm`, so every
+//! driver-level invariant (deterministic tile schedule, thread-count
+//! invariance) carries over unchanged. The arithmetic differs in exactly
+//! one way: `_mm256_fmadd_ps` contracts each multiply-add into one
+//! rounding, so results diverge from the portable tiles by rounding
+//! noise only (bounded well inside `FOLD_TOL`; see the dispatch module
+//! docs and `tests/kernel_equivalence.rs`).
+//!
+//! Two f32 tile variants cover the register-pressure trade-off:
+//!
+//! * **full-width** — all 4 ymm column vectors of a panel row live at
+//!   once (`R*4` accumulators); best at `R <= 2` where accumulators fit
+//!   the 16 architectural ymm registers with room for the panel loads.
+//! * **half-width** — two independent 16-column passes (`R*2`
+//!   accumulators each); best at `R >= 3` where the full-width variant
+//!   would spill.
+//!
+//! The two are bitwise identical (per output element both execute the
+//! same FMA chain over `kk`), so [`micro`] picks per `R` freely.
+//!
+//! The fused dequant micro [`qmicro`] consumes `QuantPanels` codes in
+//! their packed form: nibbles are decoded to sign-extended i8 lanes with
+//! a mask/shift/unpack sequence, widened to f32 in-register, scaled by
+//! the group's scale vector and FMA'd — the widened weight row never
+//! exists in memory.
+//!
+//! # Safety
+//! Every function here is `unsafe fn` with
+//! `#[target_feature(enable = "avx2", enable = "fma")]`: callers must
+//! guarantee both features are present. The only callers are the
+//! `KernelDispatch::Avx2Fma` arms in `gemm`/`qgemm`, and that variant is
+//! only ever selected after `is_x86_feature_detected!` succeeds.
+
+use core::arch::x86_64::*;
+
+use super::pack::NR;
+use super::qgemm::PanelCodes;
+
+/// Panel rows to prefetch ahead of the current `kk` step. One `NR`-wide
+/// f32 panel row is two cache lines; staying a few rows ahead hides the
+/// stream's L2 latency without thrashing the L1 fill buffers.
+const PREFETCH_ROWS: usize = 4;
+
+/// `R`×`NR` f32 tile over one packed panel: the AVX2/FMA counterpart of
+/// the portable `micro1..micro4`.
+///
+/// # Safety
+/// AVX2 and FMA must be available, `x` must hold at least `R * k`
+/// floats and `panel` at least `k * NR`.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn micro<const R: usize>(x: &[f32], k: usize, panel: &[f32]) -> [[f32; NR]; R] {
+    debug_assert!((1..=4).contains(&R));
+    debug_assert!(x.len() >= R * k);
+    debug_assert!(panel.len() >= k * NR);
+    if R <= 2 {
+        micro_full::<R>(x, k, panel)
+    } else {
+        micro_half::<R>(x, k, panel)
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn micro_full<const R: usize>(x: &[f32], k: usize, panel: &[f32]) -> [[f32; NR]; R] {
+    let xp = x.as_ptr();
+    let pp = panel.as_ptr();
+    let mut acc = [[_mm256_setzero_ps(); 4]; R];
+    for kk in 0..k {
+        let prow = pp.add(kk * NR);
+        // wrapping_add: the hint may point past the final panel row.
+        _mm_prefetch::<_MM_HINT_T0>(pp.wrapping_add((kk + PREFETCH_ROWS) * NR) as *const i8);
+        let p0 = _mm256_loadu_ps(prow);
+        let p1 = _mm256_loadu_ps(prow.add(8));
+        let p2 = _mm256_loadu_ps(prow.add(16));
+        let p3 = _mm256_loadu_ps(prow.add(24));
+        for rr in 0..R {
+            let v = _mm256_set1_ps(*xp.add(rr * k + kk));
+            acc[rr][0] = _mm256_fmadd_ps(v, p0, acc[rr][0]);
+            acc[rr][1] = _mm256_fmadd_ps(v, p1, acc[rr][1]);
+            acc[rr][2] = _mm256_fmadd_ps(v, p2, acc[rr][2]);
+            acc[rr][3] = _mm256_fmadd_ps(v, p3, acc[rr][3]);
+        }
+    }
+    let mut out = [[0f32; NR]; R];
+    for rr in 0..R {
+        for (q, &a) in acc[rr].iter().enumerate() {
+            _mm256_storeu_ps(out[rr].as_mut_ptr().add(q * 8), a);
+        }
+    }
+    out
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn micro_half<const R: usize>(x: &[f32], k: usize, panel: &[f32]) -> [[f32; NR]; R] {
+    let xp = x.as_ptr();
+    let mut out = [[0f32; NR]; R];
+    for half in 0..2 {
+        let pp = panel.as_ptr().add(half * (NR / 2));
+        let mut acc = [[_mm256_setzero_ps(); 2]; R];
+        for kk in 0..k {
+            let prow = pp.add(kk * NR);
+            _mm_prefetch::<_MM_HINT_T0>(pp.wrapping_add((kk + PREFETCH_ROWS) * NR) as *const i8);
+            let p0 = _mm256_loadu_ps(prow);
+            let p1 = _mm256_loadu_ps(prow.add(8));
+            for rr in 0..R {
+                let v = _mm256_set1_ps(*xp.add(rr * k + kk));
+                acc[rr][0] = _mm256_fmadd_ps(v, p0, acc[rr][0]);
+                acc[rr][1] = _mm256_fmadd_ps(v, p1, acc[rr][1]);
+            }
+        }
+        for rr in 0..R {
+            let optr = out[rr].as_mut_ptr().add(half * (NR / 2));
+            _mm256_storeu_ps(optr, acc[rr][0]);
+            _mm256_storeu_ps(optr.add(8), acc[rr][1]);
+        }
+    }
+    out
+}
+
+/// Fused dequant `R`×`NR` tile over one quantized panel: decode codes,
+/// scale by the group's scales and FMA, all in registers. Half-width
+/// passes (one 16-code decode feeds two ymm weight vectors).
+///
+/// # Safety
+/// AVX2 and FMA must be available, `x` must hold at least `R * k`
+/// floats, `codes` one full panel (`k` rows of `NR` codes, nibble-packed
+/// or wide) and `spanel` all `ceil(k/group) * NR` scales of the panel.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn qmicro<const R: usize>(
+    x: &[f32],
+    k: usize,
+    group: usize,
+    codes: PanelCodes<'_>,
+    spanel: &[f32],
+) -> [[f32; NR]; R] {
+    debug_assert!((1..=4).contains(&R));
+    debug_assert!(x.len() >= R * k);
+    debug_assert!(spanel.len() >= k.div_ceil(group) * NR);
+    let xp = x.as_ptr();
+    let mut out = [[0f32; NR]; R];
+    for half in 0..2 {
+        let mut acc = [[_mm256_setzero_ps(); 2]; R];
+        let mut g = 0;
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + group).min(k);
+            let srow = spanel.as_ptr().add(g * NR + half * (NR / 2));
+            let s0 = _mm256_loadu_ps(srow);
+            let s1 = _mm256_loadu_ps(srow.add(8));
+            for kk in k0..k1 {
+                let (c0, c1) = decode16(codes, kk, half);
+                let w0 = _mm256_mul_ps(c0, s0);
+                let w1 = _mm256_mul_ps(c1, s1);
+                for rr in 0..R {
+                    let v = _mm256_set1_ps(*xp.add(rr * k + kk));
+                    acc[rr][0] = _mm256_fmadd_ps(v, w0, acc[rr][0]);
+                    acc[rr][1] = _mm256_fmadd_ps(v, w1, acc[rr][1]);
+                }
+            }
+            k0 = k1;
+            g += 1;
+        }
+        for rr in 0..R {
+            let optr = out[rr].as_mut_ptr().add(half * (NR / 2));
+            _mm256_storeu_ps(optr, acc[rr][0]);
+            _mm256_storeu_ps(optr.add(8), acc[rr][1]);
+        }
+    }
+    out
+}
+
+/// Decode the 16 codes at columns `half*16 .. half*16+16` of panel row
+/// `kk` into two f32 ymm vectors (exact integer-to-float conversion, so
+/// the values are identical to the portable `code as f32` widening).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn decode16(codes: PanelCodes<'_>, kk: usize, half: usize) -> (__m256, __m256) {
+    let bytes16 = match codes {
+        // Wide codes: 16 i8 loaded directly.
+        PanelCodes::Wide(c) => {
+            _mm_loadu_si128(c.as_ptr().add(kk * NR + half * (NR / 2)) as *const __m128i)
+        }
+        // Nibble-packed: 8 bytes hold 16 codes. Split nibbles (low =
+        // even column, high = odd), interleave back into column order,
+        // then sign-extend 4-bit two's-complement via (v ^ 8) - 8.
+        PanelCodes::Packed(c) => {
+            let b = _mm_loadl_epi64(c.as_ptr().add(kk * (NR / 2) + half * (NR / 4)) as *const __m128i);
+            let mask = _mm_set1_epi8(0x0F);
+            let lo = _mm_and_si128(b, mask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(b), mask);
+            let inter = _mm_unpacklo_epi8(lo, hi);
+            let eight = _mm_set1_epi8(8);
+            _mm_sub_epi8(_mm_xor_si128(inter, eight), eight)
+        }
+    };
+    let lo = _mm256_cvtepi8_epi32(bytes16);
+    let hi = _mm256_cvtepi8_epi32(_mm_srli_si128::<8>(bytes16));
+    (_mm256_cvtepi32_ps(lo), _mm256_cvtepi32_ps(hi))
+}

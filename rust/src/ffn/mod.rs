@@ -2,8 +2,11 @@
 //! executed in pure std-only Rust).
 //!
 //! * [`kernels`]   — blocked GEMM over pre-packed weights with fused
-//!   epilogues, deterministic parallel tile schedule, the explicit
-//!   row-sparse variant, and the [`kernels::Scratch`] zero-alloc arena
+//!   epilogues, runtime ISA dispatch ([`KernelDispatch`]: portable vs
+//!   explicit AVX2/FMA tiles), the fused k-bit dequant GEMM over
+//!   [`kernels::QuantPanels`], deterministic parallel tile schedules,
+//!   the explicit row-sparse variant, and the [`kernels::Scratch`]
+//!   zero-alloc arena
 //! * [`dense`]     — the dense FFN with optional per-unit linearized
 //!   activation ([`dense::RangeTable`]: uniform or per-neuron
 //!   calibrated; reference + fallback path)
@@ -30,7 +33,7 @@ pub use dense::{DenseFfn, Linearization, RangeTable};
 pub use folded::{
     compare_predictors, folded_units_for, FoldedFfn, PredictorComparison,
 };
-pub use kernels::{PackedMatrix, Scratch};
+pub use kernels::{KernelDispatch, PackedMatrix, Scratch};
 pub use predictor::{OutlierPredictor, PredictorStats, Route};
 pub use quant::{
     QuantRoute, QuantRouterStats, QuantizedProxy, QuantizedRouter, RoutingQuality,

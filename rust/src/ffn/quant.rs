@@ -23,18 +23,25 @@
 //! dense path wholesale, so correctness degrades to the same bitwise
 //! fallback the norm router uses.
 //!
-//! The quantized matrix reuses the [`kernels`](super::kernels)
-//! packed-panel layout: codes are `i8` in [`NR`]-wide column panels
-//! (streamed exactly like [`PackedMatrix`](super::kernels::PackedMatrix)
-//! panels), with one f32 scale per (reduction-group, column) stored
-//! panel-major alongside. Quantization is symmetric per (group, column)
-//! — the same scheme as `python/compile/tardis/predictor.py`, so
-//! manifest-exported codes and scales load verbatim.
+//! The quantized matrix lives in
+//! [`QuantPanels`](super::kernels::QuantPanels): codes are `i8` in
+//! [`NR`]-wide column panels (nibble-packed two per byte at
+//! `bits <= 4`, streamed exactly like
+//! [`PackedMatrix`](super::kernels::PackedMatrix) panels), with one f32
+//! scale per (reduction-group, column) stored panel-major alongside.
+//! The proxy GEMM runs through the **fused dequant kernels**
+//! ([`matmul_q`](super::kernels::matmul_q)): codes are decoded and
+//! scaled in registers inside the micro-kernel, so no widened f32 proxy
+//! matrix is ever materialized. Quantization is symmetric per (group,
+//! column) — the same scheme as `python/compile/tardis/predictor.py`,
+//! so manifest-exported codes and scales load verbatim.
 
 use super::dense::{DenseFfn, RangeTable};
 use super::kernels::norm;
 use super::kernels::pack::NR;
+use super::kernels::{matmul_q_with, Epilogue, KernelDispatch, QuantPanels};
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 
 /// Route of one batch row under the quantized per-neuron predictor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,92 +102,14 @@ impl RoutingQuality {
     }
 }
 
-/// Physical storage of the panel-major code stream. Codes at `bits <= 4`
-/// fit a signed nibble, so they bit-pack **two per byte** (low nibble =
-/// even column, high nibble = odd column within the panel row — [`NR`]
-/// is even, so rows never straddle a byte); wider codes stay one `i8`
-/// each. Packing halves the proxy's resident weight traffic, which is
-/// the whole point of the low-bit predictor (§5.3).
-#[derive(Debug, Clone)]
-enum CodeStore {
-    /// One `i8` per code (`bits > 4`).
-    Wide(Vec<i8>),
-    /// Two 4-bit codes per byte (`bits <= 4`).
-    Packed(Vec<u8>),
-}
-
-/// Sign-extend the low nibble of `byte`.
-#[inline]
-fn nibble_lo(byte: u8) -> i8 {
-    ((byte << 4) as i8) >> 4
-}
-
-/// Sign-extend the high nibble of `byte`.
-#[inline]
-fn nibble_hi(byte: u8) -> i8 {
-    (byte as i8) >> 4
-}
-
-impl CodeStore {
-    /// Pack a panel-major `i8` stream for the given bit width.
-    fn pack(codes: Vec<i8>, bits: u8) -> CodeStore {
-        if bits > 4 {
-            return CodeStore::Wide(codes);
-        }
-        debug_assert!(codes.len() % 2 == 0, "NR is even");
-        let packed = codes
-            .chunks_exact(2)
-            .map(|pair| {
-                debug_assert!((-8..=7).contains(&pair[0]));
-                debug_assert!((-8..=7).contains(&pair[1]));
-                ((pair[0] as u8) & 0x0F) | ((pair[1] as u8) << 4)
-            })
-            .collect();
-        CodeStore::Packed(packed)
-    }
-
-    /// Code at flat panel-major index `idx` (`p*k*NR + kk*NR + j`).
-    #[inline]
-    fn code(&self, idx: usize) -> i8 {
-        match self {
-            CodeStore::Wide(c) => c[idx],
-            CodeStore::Packed(c) => {
-                let byte = c[idx / 2];
-                if idx % 2 == 0 {
-                    nibble_lo(byte)
-                } else {
-                    nibble_hi(byte)
-                }
-            }
-        }
-    }
-
-    fn resident_bytes(&self) -> usize {
-        match self {
-            CodeStore::Wide(c) => c.len(),
-            CodeStore::Packed(c) => c.len(),
-        }
-    }
-}
-
 /// A `[k, m]` weight matrix quantized to `bits` with one f32 scale per
-/// (`group` reduction rows, column), packed into [`NR`]-wide column
-/// panels like [`PackedMatrix`](super::kernels::PackedMatrix).
-///
-/// Panel `p` holds columns `p*NR..p*NR+NR`: `k` rows of `NR` codes
-/// (zero-padded past column `m`; bit-packed 2-per-byte at `bits <= 4`,
-/// see [`CodeStore`]), plus `n_groups` rows of `NR` f32 scales.
-/// `w[kk][col] ≈ codes[kk][col] · scales[kk/group][col]`.
+/// (`group` reduction rows, column), stored as
+/// [`QuantPanels`](super::kernels::QuantPanels) (layout diagram and
+/// bit-packing rules in the `qgemm` module docs) and executed by the
+/// fused dequant GEMM.
 #[derive(Debug, Clone)]
 pub struct QuantizedProxy {
-    k: usize,
-    m: usize,
-    group: usize,
-    bits: u8,
-    /// `n_panels * k * NR` codes, panel-major (possibly nibble-packed).
-    codes: CodeStore,
-    /// `n_panels * n_groups * NR` scales, panel-major.
-    scales: Vec<f32>,
+    panels: QuantPanels,
 }
 
 impl QuantizedProxy {
@@ -229,14 +158,7 @@ impl QuantizedProxy {
                 }
             }
         }
-        QuantizedProxy {
-            k,
-            m,
-            group,
-            bits,
-            codes: CodeStore::pack(codes, bits),
-            scales,
-        }
+        QuantizedProxy { panels: QuantPanels::pack(codes, scales, k, m, group, bits) }
     }
 
     /// Pack pre-quantized codes and scales (e.g. from a manifest): codes
@@ -283,143 +205,81 @@ impl QuantizedProxy {
                 }
             }
         }
-        QuantizedProxy {
-            k,
-            m,
-            group,
-            bits,
-            codes: CodeStore::pack(pcodes, bits),
-            scales: pscales,
-        }
+        QuantizedProxy { panels: QuantPanels::pack(pcodes, pscales, k, m, group, bits) }
     }
 
     pub fn k(&self) -> usize {
-        self.k
+        self.panels.k()
     }
 
     pub fn m(&self) -> usize {
-        self.m
+        self.panels.m()
     }
 
     pub fn bits(&self) -> u8 {
-        self.bits
+        self.panels.bits()
     }
 
     pub fn group(&self) -> usize {
-        self.group
+        self.panels.group()
     }
 
-    /// Approximate pre-activations: `out[r][j] = Σ_g s[g][j] · Σ_{kk∈g}
-    /// x[r][kk]·codes[kk][j] + bias[j]`, for `j < m`.
-    ///
-    /// Group-blocked accumulation: each group's integer-code partial sum
-    /// accumulates in f32, then one multiply by the group's scale — the
-    /// deployed math of a grouped low-bit GEMM.
-    pub fn forward_into(&self, x: &[f32], rows: usize, bias: &[f32], out: &mut [f32]) {
-        let (k, m, group) = (self.k, self.m, self.group);
-        debug_assert_eq!(x.len(), rows * k);
-        debug_assert!(bias.len() >= m);
-        debug_assert_eq!(out.len(), rows * m);
-        let n_groups = k.div_ceil(group);
-        let n_panels = m.div_ceil(NR);
-        for r in 0..rows {
-            let xr = &x[r * k..(r + 1) * k];
-            for p in 0..n_panels {
-                let col0 = p * NR;
-                let ncols = (m - col0).min(NR);
-                let spanel = &self.scales[p * n_groups * NR..(p + 1) * n_groups * NR];
-                let mut acc = [0f32; NR];
-                for g in 0..n_groups {
-                    let k0 = g * group;
-                    let k1 = (k0 + group).min(k);
-                    let mut gacc = [0f32; NR];
-                    match &self.codes {
-                        CodeStore::Wide(c) => {
-                            let cpanel = &c[p * k * NR..(p + 1) * k * NR];
-                            for (kk, prow) in cpanel
-                                .chunks_exact(NR)
-                                .enumerate()
-                                .take(k1)
-                                .skip(k0)
-                            {
-                                let v = xr[kk];
-                                for (a, &cv) in gacc.iter_mut().zip(prow) {
-                                    *a += v * cv as f32;
-                                }
-                            }
-                        }
-                        CodeStore::Packed(c) => {
-                            // Nibble-packed panel rows are NR/2 bytes:
-                            // unpack on the fly, two columns per byte.
-                            let cpanel = &c[p * k * (NR / 2)..(p + 1) * k * (NR / 2)];
-                            for (kk, prow) in cpanel
-                                .chunks_exact(NR / 2)
-                                .enumerate()
-                                .take(k1)
-                                .skip(k0)
-                            {
-                                let v = xr[kk];
-                                for (pair, &byte) in
-                                    gacc.chunks_exact_mut(2).zip(prow)
-                                {
-                                    pair[0] += v * nibble_lo(byte) as f32;
-                                    pair[1] += v * nibble_hi(byte) as f32;
-                                }
-                            }
-                        }
-                    }
-                    let srow = &spanel[g * NR..(g + 1) * NR];
-                    for ((a, &ga), &s) in acc.iter_mut().zip(gacc.iter()).zip(srow) {
-                        *a += ga * s;
-                    }
-                }
-                let orow = &mut out[r * m + col0..r * m + col0 + ncols];
-                let brow = &bias[col0..col0 + ncols];
-                for ((o, &a), &b) in orow.iter_mut().zip(acc.iter()).zip(brow) {
-                    *o = a + b;
-                }
-            }
-        }
+    /// The packed code panels — the fused-GEMM operand, exposed so other
+    /// consumers (e.g. a fully-quantized `W1` path) can run
+    /// [`matmul_q`](super::kernels::matmul_q) against it directly.
+    pub fn panels(&self) -> &QuantPanels {
+        &self.panels
     }
 
-    /// Code at panel-major position (panel `p`, reduction row `kk`,
-    /// panel column `j`), unpacking nibbles as needed.
-    fn code_at(&self, p: usize, kk: usize, j: usize) -> i8 {
-        self.codes.code(p * self.k * NR + kk * NR + j)
+    /// Approximate pre-activations `out[r][j] = Σ_kk x[r][kk] ·
+    /// (codes[kk][j] · scales[kk/group][j]) + bias[j]` for `j < m`, via
+    /// the fused dequant GEMM: codes are decoded and scaled in registers
+    /// inside the micro-kernel (dequantize-in-register), never widened
+    /// to an f32 matrix in memory. On the portable path the result is
+    /// bitwise equal to `dequantize()` followed by the f32 `matmul`.
+    pub fn forward_into(
+        &self,
+        pool: Option<&ThreadPool>,
+        x: &[f32],
+        rows: usize,
+        bias: &[f32],
+        out: &mut [f32],
+    ) {
+        self.forward_into_with(KernelDispatch::active(), pool, x, rows, bias, out);
+    }
+
+    /// [`Self::forward_into`] on an explicit dispatch path.
+    pub fn forward_into_with(
+        &self,
+        disp: KernelDispatch,
+        pool: Option<&ThreadPool>,
+        x: &[f32],
+        rows: usize,
+        bias: &[f32],
+        out: &mut [f32],
+    ) {
+        debug_assert!(bias.len() >= self.m());
+        matmul_q_with(disp, pool, x, rows, &self.panels, Epilogue::Bias(bias), out);
     }
 
     /// Reconstructed row-major `[k, m]` f32 matrix (tests, error bounds).
     pub fn dequantize(&self) -> Vec<f32> {
-        let (k, m, group) = (self.k, self.m, self.group);
-        let n_groups = k.div_ceil(group);
-        let mut w = vec![0f32; k * m];
-        for p in 0..m.div_ceil(NR) {
-            let col0 = p * NR;
-            let ncols = (m - col0).min(NR);
-            let spanel = &self.scales[p * n_groups * NR..(p + 1) * n_groups * NR];
-            for kk in 0..k {
-                let g = kk / group;
-                for j in 0..ncols {
-                    w[kk * m + col0 + j] = self.code_at(p, kk, j) as f32 * spanel[g * NR + j];
-                }
-            }
-        }
-        w
+        self.panels.dequantize()
     }
 
     /// Resident bytes of the packed representation (padding included;
     /// codes at `bits <= 4` occupy half a byte each).
     pub fn resident_bytes(&self) -> usize {
-        self.codes.resident_bytes() + self.scales.len() * std::mem::size_of::<f32>()
+        self.panels.resident_bytes()
     }
 
     /// Deployed size in f32-parameter equivalents (`bits` per code plus
     /// one f16 scale per (group, column) — the python pipeline's §7.1
     /// accounting).
     pub fn size_params_f32(&self) -> f64 {
-        let n_groups = self.k.div_ceil(self.group);
-        (self.k * self.m) as f64 * self.bits as f64 / 32.0
-            + (n_groups * self.m) as f64 / 2.0
+        let (k, m) = (self.k(), self.m());
+        let n_groups = k.div_ceil(self.group());
+        (k * m) as f64 * self.bits() as f64 / 32.0 + (n_groups * m) as f64 / 2.0
     }
 }
 
@@ -614,9 +474,10 @@ mod tests {
         let x: Vec<f32> = (0..rows * k).map(|_| rng.normal() as f32).collect();
         let bias: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
         let mut got = vec![0f32; rows * m];
-        q.forward_into(&x, rows, &bias, &mut got);
-        // must match a plain matmul against the dequantized matrix (the
-        // group-blocked accumulation only reassociates the sum)
+        q.forward_into(None, &x, rows, &bias, &mut got);
+        // must match a plain matmul against the dequantized matrix
+        // (regardless of dispatch path: the fused kernel's panel walk
+        // and FMA contraction only reassociate/contract the sum)
         let deq = q.dequantize();
         for r in 0..rows {
             for j in 0..m {
@@ -650,12 +511,12 @@ mod tests {
             let ncols = (m_total - col0).min(NR);
             for kk in 0..k {
                 for j in 0..ncols {
-                    codes[kk * m_total + col0 + j] = q.code_at(p, kk, j);
+                    codes[kk * m_total + col0 + j] = q.panels().code_at(p, kk, j);
                 }
             }
             for g in 0..n_groups {
                 for j in 0..ncols {
-                    scales[g * m_total + col0 + j] = q.scales[p * n_groups * NR + g * NR + j];
+                    scales[g * m_total + col0 + j] = q.panels().scale_at(p, g, j);
                 }
             }
         }
@@ -674,9 +535,7 @@ mod tests {
         /// `i8` each (the pre-packing layout), for layout-equivalence
         /// checks.
         fn unpacked_clone(&self) -> QuantizedProxy {
-            let n = self.m.div_ceil(NR) * self.k * NR;
-            let wide: Vec<i8> = (0..n).map(|i| self.codes.code(i)).collect();
-            QuantizedProxy { codes: CodeStore::Wide(wide), ..self.clone() }
+            QuantizedProxy { panels: self.panels.unpacked_clone() }
         }
     }
 
@@ -690,7 +549,7 @@ mod tests {
             let w = random_w(&mut rng, k, m);
             for bits in [2u8, 3, 4] {
                 let q = QuantizedProxy::quantize(&w, k, m, m, bits, 4);
-                assert!(matches!(q.codes, CodeStore::Packed(_)));
+                assert!(q.panels().is_bitpacked());
                 let wide = q.unpacked_clone();
                 assert_eq!(q.dequantize(), wide.dequantize(), "bits={bits}");
                 let rows = 3;
@@ -698,13 +557,14 @@ mod tests {
                 let bias: Vec<f32> = (0..m).map(|_| rng.normal() as f32).collect();
                 let mut got = vec![0f32; rows * m];
                 let mut want = vec![0f32; rows * m];
-                q.forward_into(&x, rows, &bias, &mut got);
-                wide.forward_into(&x, rows, &bias, &mut want);
+                q.forward_into(None, &x, rows, &bias, &mut got);
+                wide.forward_into(None, &x, rows, &bias, &mut want);
                 let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
                 let want_bits: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
                 assert_eq!(got_bits, want_bits, "k={k} m={m} bits={bits}");
                 // exactly half the code bytes (scales unchanged)
-                let scale_bytes = q.scales.len() * 4;
+                let scale_bytes =
+                    q.panels().n_panels() * q.panels().n_groups() * NR * 4;
                 assert_eq!(
                     q.resident_bytes() - scale_bytes,
                     (wide.resident_bytes() - scale_bytes) / 2
@@ -712,17 +572,7 @@ mod tests {
             }
             // wider codes stay one byte each
             let q8 = QuantizedProxy::quantize(&w, k, m, m, 8, 4);
-            assert!(matches!(q8.codes, CodeStore::Wide(_)));
-        }
-    }
-
-    #[test]
-    fn nibble_sign_extension() {
-        for v in -8i8..=7 {
-            let hi = -v - 1; // also spans -8..=7
-            let byte = ((v as u8) & 0x0F) | ((hi as u8) << 4);
-            assert_eq!(nibble_lo(byte), v);
-            assert_eq!(nibble_hi(byte), hi);
+            assert!(!q8.panels().is_bitpacked());
         }
     }
 

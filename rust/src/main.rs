@@ -96,12 +96,17 @@ fn usage() -> ! {
     --assert-speedup R     exit non-zero unless a tardis variant reaches
                            a measured speedup of at least R vs dense
     --assert-gflops G      exit non-zero unless the packed single-thread
-                           GEMM kernel reaches G GFLOP/s (generous floor,
-                           catches order-of-magnitude regressions)
+                           GEMM kernel reaches G GFLOP/s; also requires
+                           the SIMD path (when active) to beat portable
+                           and the fused 4-bit proxy GEMM to move >= 2x
+                           fewer bytes/token than a widened f32 matrix
   both also print routing precision/recall of the norm and quantized
   predictors against ground-truth range violations on a seeded
-  direction-dependent-outlier workload; bench-decode writes everything
-  to BENCH_native_ffn.json (machine-readable per-PR perf record;
+  direction-dependent-outlier workload; bench-decode reports the active
+  kernel ISA (portable or avx2+fma; pin with TARDIS_FORCE_SCALAR=1),
+  GFLOP/s on both dispatch paths and bytes-moved/token with effective
+  GB/s at rows=1, and merges everything into BENCH_native_ffn.json
+  (machine-readable per-PR perf record, sibling suites' keys preserved;
   override the path with TARDIS_BENCH_JSON)"
     );
     std::process::exit(2);
@@ -627,18 +632,48 @@ fn print_routing_rows(reports: &[NativeDecodeReport]) {
     }
 }
 
-/// Single-thread GFLOP/s of the packed blocked GEMM kernel and the
-/// pre-PR scalar reference at the configured FFN up-projection shape.
-fn measure_gemm_gflops(cfg: &NativeModelConfig) -> (f64, f64) {
+/// Single-thread GEMM microbenchmarks at the configured FFN
+/// up-projection shape: GFLOP/s on the active and (forced) portable
+/// dispatch paths plus the pre-PR scalar reference, and — because
+/// single-token decode is bandwidth-bound — bytes-moved/token with
+/// effective GB/s for the rows=1 step, f32 panels vs the fused 4-bit
+/// proxy GEMM.
+struct GemmBench {
+    /// The dispatch path the process selected (`KernelDispatch::name`).
+    isa: &'static str,
+    /// Packed f32 GEMM on the active path, rows = batch.
+    packed_gflops: f64,
+    /// Same shape forced onto the portable tiles.
+    portable_gflops: f64,
+    /// The pre-PR scalar reference kernel.
+    naive_gflops: f64,
+    /// rows=1 f32: panel + x + y bytes touched per decoded token.
+    f32_bytes_per_token: f64,
+    f32_gbps: f64,
+    /// rows=1 fused 4-bit proxy GEMM (group 32), same accounting.
+    q_gflops: f64,
+    q_bytes_per_token: f64,
+    q_gbps: f64,
+    /// f32 bytes over fused bytes: the fused path's traffic advantage
+    /// vs widening the codes to an f32 matrix (shape-determined).
+    q_bytes_ratio: f64,
+}
+
+fn measure_gemm_bench(cfg: &NativeModelConfig) -> GemmBench {
     use tardis::bench::black_box;
-    use tardis::ffn::kernels::{matmul, matmul_naive, Epilogue, PackedMatrix};
+    use tardis::ffn::kernels::{
+        matmul_naive, matmul_q_with, matmul_with, Epilogue, KernelDispatch, PackedMatrix,
+    };
+    use tardis::ffn::QuantizedProxy;
     let (d, h) = (cfg.d_model, cfg.d_ff);
     let batch = cfg.batch.max(1);
+    let disp = KernelDispatch::active();
     let mut rng = tardis::util::rng::Rng::new(0xBE9C);
     let x: Vec<f32> = (0..batch * d).map(|_| rng.normal() as f32).collect();
     let w: Vec<f32> = (0..d * h).map(|_| rng.normal() as f32).collect();
     let bias: Vec<f32> = (0..h).map(|_| rng.normal() as f32).collect();
     let packed = PackedMatrix::pack(&w, d, h);
+    let proxy = QuantizedProxy::quantize(&w, d, h, h, 4, 32);
     let mut y = vec![0f32; batch * h];
     let flops = 2.0 * (batch * d * h) as f64;
     let time = |f: &mut dyn FnMut()| {
@@ -653,27 +688,70 @@ fn measure_gemm_gflops(cfg: &NativeModelConfig) -> (f64, f64) {
         t0.elapsed().as_secs_f64() / iters as f64
     };
     let t_packed = time(&mut || {
-        matmul(None, &x, batch, &packed, Epilogue::Bias(&bias), &mut y);
+        matmul_with(disp, None, &x, batch, &packed, Epilogue::Bias(&bias), &mut y);
+        black_box(&y);
+    });
+    let t_portable = time(&mut || {
+        let p = KernelDispatch::Portable;
+        matmul_with(p, None, &x, batch, &packed, Epilogue::Bias(&bias), &mut y);
         black_box(&y);
     });
     let t_naive = time(&mut || {
         black_box(matmul_naive(&x, batch, d, &w, h, Some(&bias)));
     });
-    (flops / t_packed / 1e9, flops / t_naive / 1e9)
+    // rows=1 decode-step bandwidth probes: one token streams the whole
+    // operand once, so bytes/token = resident operand + x + y.
+    let x1 = &x[..d];
+    let mut y1 = vec![0f32; h];
+    let t_f32_1 = time(&mut || {
+        matmul_with(disp, None, x1, 1, &packed, Epilogue::Bias(&bias), &mut y1);
+        black_box(&y1);
+    });
+    let t_q_1 = time(&mut || {
+        matmul_q_with(disp, None, x1, 1, proxy.panels(), Epilogue::Bias(&bias), &mut y1);
+        black_box(&y1);
+    });
+    let io = ((d + h) * 4) as f64;
+    let f32_bytes = packed.resident_bytes() as f64 + io;
+    let q_bytes = proxy.resident_bytes() as f64 + io;
+    GemmBench {
+        isa: disp.name(),
+        packed_gflops: flops / t_packed / 1e9,
+        portable_gflops: flops / t_portable / 1e9,
+        naive_gflops: flops / t_naive / 1e9,
+        f32_bytes_per_token: f32_bytes,
+        f32_gbps: f32_bytes / t_f32_1 / 1e9,
+        q_gflops: 2.0 * (d * h) as f64 / t_q_1 / 1e9,
+        q_bytes_per_token: q_bytes,
+        q_gbps: q_bytes / t_q_1 / 1e9,
+        q_bytes_ratio: f32_bytes / q_bytes,
+    }
 }
 
 /// Write the machine-readable per-PR perf record next to the printed
 /// table (BENCH_native_ffn.json, or $TARDIS_BENCH_JSON).
+///
+/// Merges into the existing file instead of clobbering it: other
+/// suites own sibling top-level keys (`coordinator`, `native_ffn`)
+/// and must survive a bench-decode rerun. Only the keys this suite
+/// owns are overwritten.
 fn write_bench_json(
     cfg: &NativeModelConfig,
     reports: &[NativeDecodeReport],
     dense_mean: Option<f64>,
-    packed_gflops: f64,
-    naive_gflops: f64,
+    g: &GemmBench,
 ) {
     use tardis::util::json::Json;
     let num = Json::Num;
-    let mut root = std::collections::BTreeMap::new();
+    let path = std::env::var("TARDIS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_native_ffn.json".to_string());
+    let mut root = match std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+    {
+        Some(Json::Obj(map)) => map,
+        _ => std::collections::BTreeMap::new(),
+    };
     root.insert("suite".to_string(), Json::Str("bench_decode".to_string()));
     let mut shape = std::collections::BTreeMap::new();
     shape.insert("d_model".to_string(), num(cfg.d_model as f64));
@@ -682,12 +760,26 @@ fn write_bench_json(
     shape.insert("batch".to_string(), num(cfg.batch as f64));
     root.insert("shape".to_string(), Json::Obj(shape));
     let mut gemm = std::collections::BTreeMap::new();
-    gemm.insert("packed_gflops".to_string(), num(packed_gflops));
-    gemm.insert("naive_gflops".to_string(), num(naive_gflops));
+    gemm.insert("isa".to_string(), Json::Str(g.isa.to_string()));
+    gemm.insert("packed_gflops".to_string(), num(g.packed_gflops));
+    gemm.insert("portable_gflops".to_string(), num(g.portable_gflops));
+    gemm.insert("naive_gflops".to_string(), num(g.naive_gflops));
     gemm.insert(
         "packed_vs_naive".to_string(),
-        num(packed_gflops / naive_gflops),
+        num(g.packed_gflops / g.naive_gflops),
     );
+    gemm.insert(
+        "f32_bytes_per_token".to_string(),
+        num(g.f32_bytes_per_token),
+    );
+    gemm.insert("f32_gbps".to_string(), num(g.f32_gbps));
+    gemm.insert("fused_q4_gflops".to_string(), num(g.q_gflops));
+    gemm.insert(
+        "fused_q4_bytes_per_token".to_string(),
+        num(g.q_bytes_per_token),
+    );
+    gemm.insert("fused_q4_gbps".to_string(), num(g.q_gbps));
+    gemm.insert("fused_q4_bytes_ratio".to_string(), num(g.q_bytes_ratio));
     root.insert("gemm".to_string(), Json::Obj(gemm));
     let mut rows = Vec::new();
     for r in reports {
@@ -730,8 +822,14 @@ fn write_bench_json(
         rows.push(Json::Obj(o));
     }
     root.insert("variants".to_string(), Json::Arr(rows));
-    let path = std::env::var("TARDIS_BENCH_JSON")
-        .unwrap_or_else(|_| "BENCH_native_ffn.json".to_string());
+    root.insert(
+        "note".to_string(),
+        Json::Str(
+            "measured by `tardis bench-decode --backend native`; gemm numbers are \
+             single-thread at the FFN up-projection shape, bandwidth at rows=1"
+                .to_string(),
+        ),
+    );
     let body = format!("{}\n", Json::Obj(root));
     match std::fs::write(&path, body) {
         Ok(()) => println!("wrote {path}"),
@@ -766,15 +864,33 @@ fn bench_native_table(args: &Args, names: &[String], emit_json: bool) -> Result<
         }
     }
     print_routing_rows(&reports);
-    let (packed_gflops, naive_gflops) = measure_gemm_gflops(&cfg);
+    let g = measure_gemm_bench(&cfg);
     println!(
-        "gemm single-thread [{}x{}]x[{}x{}]: packed {packed_gflops:.2} GFLOP/s, \
-         pre-PR scalar {naive_gflops:.2} GFLOP/s ({:.2}x)",
-        cfg.batch, cfg.d_model, cfg.d_model, cfg.d_ff,
-        packed_gflops / naive_gflops
+        "gemm single-thread [{}x{}]x[{}x{}] ({} path): packed {:.2} GFLOP/s, \
+         portable {:.2}, pre-PR scalar {:.2} ({:.2}x)",
+        cfg.batch,
+        cfg.d_model,
+        cfg.d_model,
+        cfg.d_ff,
+        g.isa,
+        g.packed_gflops,
+        g.portable_gflops,
+        g.naive_gflops,
+        g.packed_gflops / g.naive_gflops,
+    );
+    println!(
+        "decode rows=1 traffic: f32 {:.0} B/token ({:.2} GB/s effective), \
+         fused 4-bit proxy {:.0} B/token ({:.2} GB/s, {:.2} GFLOP/s) — \
+         {:.2}x fewer bytes than widened f32",
+        g.f32_bytes_per_token,
+        g.f32_gbps,
+        g.q_bytes_per_token,
+        g.q_gbps,
+        g.q_gflops,
+        g.q_bytes_ratio,
     );
     if emit_json {
-        write_bench_json(&cfg, &reports, dense_mean, packed_gflops, naive_gflops);
+        write_bench_json(&cfg, &reports, dense_mean, &g);
     }
     if let Some(min) = args.opt_str("assert-speedup") {
         let min: f64 = min
@@ -794,12 +910,35 @@ fn bench_native_table(args: &Args, names: &[String], emit_json: bool) -> Result<
         let min: f64 = min
             .parse()
             .map_err(|_| anyhow!("--assert-gflops expects a number"))?;
-        if packed_gflops < min {
+        if g.packed_gflops < min {
             return Err(anyhow!(
-                "packed GEMM {packed_gflops:.2} GFLOP/s below required {min:.2}"
+                "packed GEMM {:.2} GFLOP/s below required {min:.2}",
+                g.packed_gflops
             ));
         }
-        println!("gflops check: packed {packed_gflops:.2} >= required {min:.2}");
+        // On a SIMD path the explicit kernels must not lose to the
+        // portable tiles they replaced, and the fused proxy GEMM must
+        // keep its ≥2x traffic advantage over a widened f32 matrix.
+        if g.isa != "portable" && g.packed_gflops < g.portable_gflops {
+            return Err(anyhow!(
+                "{} path {:.2} GFLOP/s below portable {:.2}",
+                g.isa,
+                g.packed_gflops,
+                g.portable_gflops
+            ));
+        }
+        if g.q_bytes_ratio < 2.0 {
+            return Err(anyhow!(
+                "fused 4-bit proxy moves only {:.2}x fewer bytes than \
+                 widened f32 (need >= 2x)",
+                g.q_bytes_ratio
+            ));
+        }
+        println!(
+            "gflops check: packed {:.2} >= required {min:.2} on the {} path \
+             (portable {:.2}); fused bytes ratio {:.2}x >= 2x",
+            g.packed_gflops, g.isa, g.portable_gflops, g.q_bytes_ratio
+        );
     }
     Ok(())
 }

@@ -70,9 +70,8 @@ impl Engine {
     pub fn zeros_literal(&self, dims: &[usize]) -> Result<xla::Literal> {
         let n: usize = dims.iter().product();
         let bytes = vec![0u8; n * 4];
-        xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32, dims, &bytes)
-        .map_err(|e| anyhow!("zeros literal: {e}"))
+        xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, &bytes)
+            .map_err(|e| anyhow!("zeros literal: {e}"))
     }
 
     pub fn upload_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {

@@ -34,12 +34,22 @@ impl WeightFile {
         for p in &variant.params {
             let elems: usize = p.shape.iter().product();
             if elems * p.dtype.size() != p.nbytes {
-                bail!("param {} table inconsistent: shape {:?} x {}B != {}B",
-                      p.name, p.shape, p.dtype.size(), p.nbytes);
+                bail!(
+                    "param {} table inconsistent: shape {:?} x {}B != {}B",
+                    p.name,
+                    p.shape,
+                    p.dtype.size(),
+                    p.nbytes
+                );
             }
             if p.offset + p.nbytes > data.len() {
-                bail!("param {} overruns weight file ({} + {} > {})",
-                      p.name, p.offset, p.nbytes, data.len());
+                bail!(
+                    "param {} overruns weight file ({} + {} > {})",
+                    p.name,
+                    p.offset,
+                    p.nbytes,
+                    data.len()
+                );
             }
         }
         Ok(WeightFile { data })
@@ -370,8 +380,7 @@ mod tests {
         let dir = std::env::temp_dir().join("tardis_weights_test");
         std::fs::create_dir_all(&dir).unwrap();
         let vals: Vec<f32> = vec![1.0, -2.5, 3.25, 0.0];
-        let bytes: Vec<u8> =
-            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
         std::fs::write(dir.join("t.weights.bin"), &bytes).unwrap();
         let v = spec(vec![ParamEntry {
             name: "w".into(),
@@ -478,9 +487,7 @@ mod tests {
             let elems: usize = shape.iter().product();
             let offset = blob.len();
             for e in 0..elems {
-                blob.extend_from_slice(
-                    &((offset + e) as f32 * 0.5).to_le_bytes(),
-                );
+                blob.extend_from_slice(&((offset + e) as f32 * 0.5).to_le_bytes());
             }
             params.push(ParamEntry {
                 name: name.clone(),

@@ -54,9 +54,7 @@ impl Args {
                         }
                     }
                 }
-            } else if with_subcommand && out.subcommand.is_none()
-                && out.positional.is_empty()
-            {
+            } else if with_subcommand && out.subcommand.is_none() && out.positional.is_empty() {
                 out.subcommand = Some(arg);
             } else {
                 out.positional.push(arg);

@@ -223,7 +223,7 @@ mod tests {
             h.record(i as f64);
         }
         let q50 = h.quantile_upper(0.5);
-        assert!(q50 >= 500.0 && q50 <= 1024.0, "q50 {}", q50);
+        assert!((500.0..=1024.0).contains(&q50), "q50 {}", q50);
         assert_eq!(h.total(), 1000);
     }
 

@@ -9,10 +9,21 @@
 //! 3. The row-sparse variant computes exactly the active subset (bitwise
 //!    equal to the dense kernel row-for-row), leaves inactive rows
 //!    untouched, and handles the empty/full split edge cases.
+//! 4. The fused k-bit dequant GEMM ([`matmul_q_with`]) is bitwise equal
+//!    to dequantize-then-f32-matmul on the portable path, across code
+//!    widths {2,3,4,8}, odd group counts, decode-batch row counts 1..8
+//!    and tile-tail shapes — the in-register decode is exactly the
+//!    widened computation, minus the memory traffic.
+//! 5. ISA paths: every entry of [`KernelDispatch::available()`] keeps
+//!    thread-count invariance bitwise *within* that path; SIMD results
+//!    may differ from portable only by FMA contraction, bounded by the
+//!    same 1e-3 relative tolerance the fold-invariant suite uses.
 
 use tardis::ffn::kernels::{
-    gelu, matmul, matmul_naive, matmul_sparse_rows, Epilogue, PackedMatrix, MR, NR,
+    gelu, matmul, matmul_naive, matmul_q_sparse_rows_with, matmul_q_with, matmul_sparse_rows,
+    matmul_with, Epilogue, KernelDispatch, PackedMatrix, MR, NR,
 };
+use tardis::ffn::QuantizedProxy;
 use tardis::prop_assert;
 use tardis::testing::property;
 use tardis::util::rng::Rng;
@@ -191,4 +202,210 @@ fn sparse_rows_match_dense_subset_bitwise() {
         prop_assert!(full == dense, "full split diverged from dense kernel");
         Ok(())
     });
+}
+
+/// The fused dequant GEMM's defining property: decoding codes in
+/// registers is *exactly* the computation you would get by widening to
+/// an f32 matrix first — same values, same rounding, element for
+/// element — on the portable path. (SIMD relaxes this to the FMA
+/// tolerance; see `simd_paths_match_portable_within_tolerance`.)
+#[test]
+fn fused_qgemm_matches_dequantized_matmul_bitwise() {
+    property("fused k-bit GEMM vs dequantize+matmul", 60, |rng| {
+        let bits = [2u8, 3, 4, 8][rng.usize_below(4)];
+        // group=7 leaves a ragged final group whenever 7 ∤ k.
+        let group = [7usize, 16, 32][rng.usize_below(3)];
+        let rows = 1 + rng.usize_below(8); // every decode-batch size 1..8
+        let k = 1 + rng.usize_below(70);
+        let m = 1 + rng.usize_below(3 * NR + 9);
+        let (x, wr, b) = random_problem(rng, rows, k, m);
+        let proxy = QuantizedProxy::quantize(&wr, k, m, m, bits, group);
+        let panels = proxy.panels();
+
+        let widened = PackedMatrix::pack(&panels.dequantize(), k, m);
+        let mut want = vec![0f32; rows * m];
+        let disp = KernelDispatch::Portable;
+        matmul_with(disp, None, &x, rows, &widened, Epilogue::Bias(&b), &mut want);
+        let mut got = vec![0f32; rows * m];
+        matmul_q_with(disp, None, &x, rows, panels, Epilogue::Bias(&b), &mut got);
+        prop_assert!(
+            got == want,
+            "fused bits={bits} group={group} rows={rows} k={k} m={m} \
+             diverged from the widened reference"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn quant_sparse_rows_match_dense_subset_bitwise() {
+    property("quant sparse row splits", 40, |rng| {
+        let bits = [2u8, 4, 8][rng.usize_below(3)];
+        let (rows, k, m) = odd_shape(rng);
+        let (x, wr, b) = random_problem(rng, rows, k, m);
+        let proxy = QuantizedProxy::quantize(&wr, k, m, m, bits, 16);
+        let p = proxy.panels();
+        let disp = KernelDispatch::Portable;
+        let mut dense = vec![0f32; rows * m];
+        matmul_q_with(disp, None, &x, rows, p, Epilogue::Bias(&b), &mut dense);
+
+        let active: Vec<bool> = (0..rows).map(|_| rng.f64() < 0.6).collect();
+        let sentinel = -1234.5f32;
+        let mut sparse = vec![sentinel; rows * m];
+        matmul_q_sparse_rows_with(
+            disp,
+            None,
+            &x,
+            rows,
+            p,
+            Epilogue::Bias(&b),
+            &active,
+            &mut sparse,
+        );
+        for r in 0..rows {
+            let (got, want) = (&sparse[r * m..(r + 1) * m], &dense[r * m..(r + 1) * m]);
+            if active[r] {
+                prop_assert!(got == want, "active row {r} not bitwise-equal");
+            } else {
+                prop_assert!(
+                    got.iter().all(|&v| v == sentinel),
+                    "inactive row {r} was written"
+                );
+            }
+        }
+        // empty split: writes nothing
+        let mut untouched = vec![sentinel; rows * m];
+        let none = vec![false; rows];
+        matmul_q_sparse_rows_with(
+            disp,
+            None,
+            &x,
+            rows,
+            p,
+            Epilogue::Bias(&b),
+            &none,
+            &mut untouched,
+        );
+        prop_assert!(untouched.iter().all(|&v| v == sentinel), "empty split wrote");
+        // full split: bitwise equal to the dense fused kernel
+        let mut full = vec![sentinel; rows * m];
+        let all = vec![true; rows];
+        matmul_q_sparse_rows_with(disp, None, &x, rows, p, Epilogue::Bias(&b), &all, &mut full);
+        prop_assert!(full == dense, "full split diverged from dense fused kernel");
+        Ok(())
+    });
+}
+
+/// Bitwise thread-count invariance must hold separately on *every*
+/// executable dispatch path (the tile schedule is deterministic and
+/// each output element belongs to exactly one job, whichever family
+/// computes the tile) — for the f32 driver on row-parallel, the
+/// small-batch column-parallel schedule (rows 2..7), and the fused
+/// quant driver.
+#[test]
+fn thread_invariance_holds_on_every_dispatch_path() {
+    let mut rng = Rng::new(0xD15B);
+    for disp in KernelDispatch::available() {
+        // multi-row shape: row-parallel driver
+        let (rows, k, m) = (37, 128, 3 * NR + 5);
+        let (x, wr, b) = random_problem(&mut rng, rows, k, m);
+        let w = PackedMatrix::pack(&wr, k, m);
+        let mut serial = vec![0f32; rows * m];
+        matmul_with(disp, None, &x, rows, &w, Epilogue::Bias(&b), &mut serial);
+        for workers in [2, 3, 5] {
+            let pool = ThreadPool::new(workers);
+            let mut pooled = vec![0f32; rows * m];
+            matmul_with(disp, Some(&pool), &x, rows, &w, Epilogue::Bias(&b), &mut pooled);
+            assert_eq!(
+                serial,
+                pooled,
+                "{} row-parallel diverged at {workers} workers",
+                disp.name()
+            );
+        }
+        // small decode batch: multi-row column-parallel driver
+        let (rows2, k2, m2) = (3, 512, 17 * NR + 9);
+        let (x2, wr2, b2) = random_problem(&mut rng, rows2, k2, m2);
+        let w2 = PackedMatrix::pack(&wr2, k2, m2);
+        let mut serial2 = vec![0f32; rows2 * m2];
+        matmul_with(disp, None, &x2, rows2, &w2, Epilogue::Bias(&b2), &mut serial2);
+        for workers in [2, 4, 7] {
+            let pool = ThreadPool::new(workers);
+            let mut pooled2 = vec![0f32; rows2 * m2];
+            matmul_with(disp, Some(&pool), &x2, rows2, &w2, Epilogue::Bias(&b2), &mut pooled2);
+            assert_eq!(
+                serial2,
+                pooled2,
+                "{} col-parallel diverged at {workers} workers",
+                disp.name()
+            );
+        }
+        // fused quant driver over the multi-row shape
+        let proxy = QuantizedProxy::quantize(&wr, k, m, m, 4, 32);
+        let p = proxy.panels();
+        let mut qserial = vec![0f32; rows * m];
+        matmul_q_with(disp, None, &x, rows, p, Epilogue::Bias(&b), &mut qserial);
+        for workers in [2, 3, 6] {
+            let pool = ThreadPool::new(workers);
+            let mut qpooled = vec![0f32; rows * m];
+            matmul_q_with(disp, Some(&pool), &x, rows, p, Epilogue::Bias(&b), &mut qpooled);
+            assert_eq!(
+                qserial,
+                qpooled,
+                "{} fused quant diverged at {workers} workers",
+                disp.name()
+            );
+        }
+    }
+}
+
+/// SIMD paths agree with portable to the fold tolerance: the only
+/// permitted divergence is FMA contraction inside the micro-kernel
+/// (measured ~1e-6 relative on these shapes; budget is FOLD_TOL=1e-3,
+/// the same bound `tests/fold_invariant.rs` grants the fold itself).
+#[test]
+fn simd_paths_match_portable_within_tolerance() {
+    const SIMD_TOL: f32 = 1e-3;
+    let mut rng = Rng::new(0x51AD);
+    let shapes = [(1usize, 512usize, 17 * NR + 9), (5, 128, 3 * NR + 5), (37, 96, 2 * NR + 1)];
+    for (rows, k, m) in shapes {
+        let (x, wr, b) = random_problem(&mut rng, rows, k, m);
+        let w = PackedMatrix::pack(&wr, k, m);
+        let proxy = QuantizedProxy::quantize(&wr, k, m, m, 4, 32);
+        let mut base = vec![0f32; rows * m];
+        matmul_with(KernelDispatch::Portable, None, &x, rows, &w, Epilogue::Bias(&b), &mut base);
+        let mut qbase = vec![0f32; rows * m];
+        matmul_q_with(
+            KernelDispatch::Portable,
+            None,
+            &x,
+            rows,
+            proxy.panels(),
+            Epilogue::Bias(&b),
+            &mut qbase,
+        );
+        for disp in KernelDispatch::available() {
+            if disp == KernelDispatch::Portable {
+                continue;
+            }
+            let mut got = vec![0f32; rows * m];
+            matmul_with(disp, None, &x, rows, &w, Epilogue::Bias(&b), &mut got);
+            for (i, (g, p)) in got.iter().zip(&base).enumerate() {
+                assert!(
+                    close(*g, *p, SIMD_TOL),
+                    "{} f32 rows={rows} k={k} m={m} elem {i}: {g} vs {p}",
+                    disp.name()
+                );
+            }
+            let mut qgot = vec![0f32; rows * m];
+            matmul_q_with(disp, None, &x, rows, proxy.panels(), Epilogue::Bias(&b), &mut qgot);
+            for (i, (g, p)) in qgot.iter().zip(&qbase).enumerate() {
+                assert!(
+                    close(*g, *p, SIMD_TOL),
+                    "{} fused rows={rows} k={k} m={m} elem {i}: {g} vs {p}",
+                    disp.name()
+                );
+            }
+        }
+    }
 }
