@@ -26,7 +26,7 @@ use crate::util::rng::Rng;
 use crate::util::stats::Samples;
 
 use super::batcher::Batcher;
-use super::kv::{BlockAllocator, BlockTable, KvLayout};
+use super::kv::{BlockAllocator, BlockTable, KvLayout, PrefixMatch, RadixCache};
 use super::model::{KvSwap, StepModel};
 use super::queue::{AdmissionQueue, QueueFull};
 use super::request::{FinishReason, Request, RequestId, RequestState, SamplingParams};
@@ -39,6 +39,10 @@ use super::scheduler::{SchedulerConfig, StepOutcome, StepPlan, SwappedView};
 pub struct EngineConfig {
     pub queue_capacity: usize,
     pub scheduler: SchedulerConfig,
+    /// Share KV blocks across requests with common prompt prefixes
+    /// (radix cache + copy-on-write). Takes effect only on backends
+    /// whose [`StepModel::supports_block_sharing`] is true.
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -46,6 +50,7 @@ impl Default for EngineConfig {
         EngineConfig {
             queue_capacity: 64,
             scheduler: SchedulerConfig::default(),
+            prefix_cache: true,
         }
     }
 }
@@ -82,6 +87,14 @@ pub struct EngineStats {
     pub ffn_fallback_rows: u64,
     /// Fallback fraction of the most recent step that routed any rows.
     pub ffn_last_step_fallback_rate: Option<f64>,
+    /// Prompt tokens whose prefill was skipped via prefix-cache hits.
+    pub prefix_hit_tokens: u64,
+    /// Cached blocks mapped into admitted requests' tables (cumulative).
+    pub prefix_shared_blocks: u64,
+    /// Copy-on-write block copies (partial-tail hits diverging).
+    pub cow_copies: u64,
+    /// Cold cache leaves evicted to satisfy block allocation.
+    pub prefix_evictions: u64,
 }
 
 impl EngineStats {
@@ -145,6 +158,15 @@ pub struct EngineSnapshot {
     pub ffn_fallback_rate: Option<f64>,
     /// Same fraction over the most recent step that routed any rows.
     pub ffn_last_step_fallback_rate: Option<f64>,
+    /// Blocks currently indexed by the radix prefix cache.
+    pub prefix_cached_blocks: usize,
+    /// Cached blocks reclaimable right now by cold-leaf eviction.
+    pub prefix_evictable_blocks: usize,
+    /// Cumulative prefix-cache counters (see [`EngineStats`]).
+    pub prefix_hit_tokens: u64,
+    pub prefix_shared_blocks: u64,
+    pub cow_copies: u64,
+    pub prefix_evictions: u64,
 }
 
 /// A finished request handed back to the caller.
@@ -160,14 +182,20 @@ pub struct Completion {
     pub queue_ms: f64,
     pub first_token_ms: f64,
     pub total_ms: f64,
+    /// Prompt tokens served from the prefix cache (prefill skipped).
+    pub prefix_hit_tokens: usize,
 }
 
 /// An in-flight prefill: the prompt is written to the cache chunk by
-/// chunk; `next` counts tokens already written.
+/// chunk; `next` counts tokens already written (a prefix-cache hit
+/// starts `next` at the hit length — those tokens never run prefill).
 struct PrefillJob {
     req: Request,
     slot: usize,
     next: usize,
+    /// The hit's tail block is shared and only partially covered: it
+    /// must be copy-on-write'd before the first suffix chunk appends.
+    cow_pending: bool,
 }
 
 /// A preempted request parked in the host swap pool: its saved cache,
@@ -227,6 +255,19 @@ pub struct InferenceEngine<M: StepModel> {
     completions: VecDeque<Completion>,
     next_id: RequestId,
     rngs: HashMap<RequestId, Rng>,
+    /// Radix index over cached prefix blocks (empty while `sharing` is
+    /// off; each indexed block holds one cache reference).
+    prefix: RadixCache,
+    /// `cfg.prefix_cache && model.supports_block_sharing()`.
+    sharing: bool,
+    /// Pinned prefix matches for queued requests, refreshed every
+    /// admissible iteration so the planner's hit discounts stay valid
+    /// (pinned blocks cannot be evicted out from under an admission).
+    queue_pins: HashMap<RequestId, PrefixMatch>,
+    /// Set when an idle plan coincided with held pins (the pins may be
+    /// starving decode growth); suppresses repinning until a step does
+    /// work again.
+    pins_suspended: bool,
     pub stats: EngineStats,
     pub decode_latency_ms: Samples,
 }
@@ -236,6 +277,7 @@ impl<M: StepModel> InferenceEngine<M> {
         let batch = model.batch();
         let max_seq = model.max_seq();
         let layout = model.kv_layout();
+        let sharing = cfg.prefix_cache && model.supports_block_sharing();
         InferenceEngine {
             queue: AdmissionQueue::new(cfg.queue_capacity),
             slots: BlockAllocator::new(batch),
@@ -250,11 +292,21 @@ impl<M: StepModel> InferenceEngine<M> {
             completions: VecDeque::new(),
             next_id: 1,
             rngs: HashMap::new(),
+            prefix: RadixCache::new(layout.block_size),
+            sharing,
+            queue_pins: HashMap::new(),
+            pins_suspended: false,
             stats: EngineStats::default(),
             decode_latency_ms: Samples::new(),
             model,
             cfg,
         }
+    }
+
+    /// Whether prefix sharing is live (configured on *and* supported by
+    /// the backend).
+    pub fn prefix_sharing(&self) -> bool {
+        self.sharing
     }
 
     pub fn queue_pressure(&self) -> f64 {
@@ -271,6 +323,8 @@ impl<M: StepModel> InferenceEngine<M> {
     pub fn snapshot(&self) -> EngineSnapshot {
         let kv_total = self.blocks.capacity();
         let kv_used = self.blocks.used();
+        let evictable =
+            if self.sharing { self.prefix.evictable_blocks(&self.blocks) } else { 0 };
         EngineSnapshot {
             policy: self.scheduler.policy_name(),
             queue_depth: self.queue.len(),
@@ -291,6 +345,12 @@ impl<M: StepModel> InferenceEngine<M> {
             iterations: self.stats.iterations,
             ffn_fallback_rate: self.stats.ffn_fallback_rate(),
             ffn_last_step_fallback_rate: self.stats.ffn_last_step_fallback_rate,
+            prefix_cached_blocks: self.prefix.len(),
+            prefix_evictable_blocks: evictable,
+            prefix_hit_tokens: self.stats.prefix_hit_tokens,
+            prefix_shared_blocks: self.stats.prefix_shared_blocks,
+            cow_copies: self.stats.cow_copies,
+            prefix_evictions: self.stats.prefix_evictions,
         }
     }
 
@@ -327,7 +387,7 @@ impl<M: StepModel> InferenceEngine<M> {
         self.stats.iterations += 1;
         let before = self.model.ffn_telemetry();
         let plan = self.make_plan();
-        let outcome = self.execute_plan(plan);
+        let outcome = self.execute_plan(plan)?;
         if let Some(t) = self.model.ffn_telemetry() {
             let prev = before.unwrap_or_default();
             self.stats.ffn_folded_rows = t.folded_rows;
@@ -339,7 +399,36 @@ impl<M: StepModel> InferenceEngine<M> {
                     Some(fallback as f64 / (folded + fallback) as f64);
             }
         }
-        outcome
+        if outcome.did_work() {
+            self.pins_suspended = false;
+        } else if !self.is_idle() && !self.queue_pins.is_empty() {
+            // An idle plan while work exists means the pinned prefix
+            // blocks may be what's starving it (pins make their blocks
+            // non-evictable). Drop them and stop repinning until some
+            // step makes progress; affected requests fall back to full
+            // prefill cost, which always fits an otherwise-empty pool.
+            self.drop_queue_pins();
+            self.pins_suspended = true;
+        } else if !self.is_idle() && self.sharing && !self.prefix.is_empty() {
+            // Still idle with no pins left to drop: the cache itself can
+            // wedge the pool. A live table sharing a trie *descendant*
+            // keeps the trunk above it out of the all-free evictable set
+            // even at refcount 1, so those blocks are dead weight no
+            // allocation can reclaim — and with a single starved prefill
+            // the PR-5 abort breaker (which needs two) never fires.
+            // Prune cache references coldest-leaf-first until a block
+            // actually frees or the cache empties; an empty cache
+            // restores the pre-sharing invariants (any single prompt
+            // fits the pool).
+            let before = self.blocks.available();
+            while self.prefix.prune_one(&mut self.blocks).is_some() {
+                self.stats.prefix_evictions += 1;
+                if self.blocks.available() > before {
+                    break;
+                }
+            }
+        }
+        Ok(outcome)
     }
 
     /// Drive until every submitted request has finished.
@@ -365,16 +454,28 @@ impl<M: StepModel> InferenceEngine<M> {
         // independent of queue depth.
         let concurrency = self.scheduler.config().max_concurrent_prefills.max(1);
         let admissible = !free_slots.is_empty() && self.prefilling.len() < concurrency;
+        if admissible {
+            self.refresh_queue_pins();
+        }
         let queued: Vec<QueuedRequest> = if admissible {
             self.queue
                 .iter()
                 .enumerate()
-                .map(|(arrival, r)| QueuedRequest {
-                    id: r.id,
-                    prompt_len: r.prompt.len(),
-                    priority: r.params.priority,
-                    arrival,
-                    first_chunk: self.next_chunk_len(r.prompt.len()),
+                .map(|(arrival, r)| {
+                    let (hit_tokens, hit_blocks, cow) = self
+                        .queue_pins
+                        .get(&r.id)
+                        .map_or((0, 0, false), |p| (p.hit_tokens, p.blocks.len(), p.cow));
+                    QueuedRequest {
+                        id: r.id,
+                        prompt_len: r.prompt.len(),
+                        priority: r.params.priority,
+                        arrival,
+                        first_chunk: self.next_chunk_len(r.prompt.len() - hit_tokens),
+                        hit_tokens,
+                        hit_blocks,
+                        cow,
+                    }
                 })
                 .collect()
         } else {
@@ -391,17 +492,52 @@ impl<M: StepModel> InferenceEngine<M> {
                 tokens: s.next_pos,
             })
             .collect();
+        // The planner may budget against cold cache leaves: they are
+        // reclaimed on demand (`alloc_block` evicts), and pinning keeps
+        // the hits it was promised out of the evictable set.
+        let evictable =
+            if self.sharing { self.prefix.evictable_blocks(&self.blocks) } else { 0 };
         let view = SchedView {
             queued: &queued,
             free_slots: &free_slots,
             inflight: &inflight,
             decoding: &decoding,
             swapped: &swapped,
-            free_blocks: self.blocks.available(),
+            free_blocks: self.blocks.available() + evictable,
             block_size: self.layout.block_size,
             can_preempt: self.model.supports_preemption(),
         };
         self.scheduler.plan(&view)
+    }
+
+    /// Drop every queued-request pin, releasing the cache's promise
+    /// refs. The free list keeps blocks sorted, so release order cannot
+    /// perturb future allocation (bitwise history invariance).
+    fn drop_queue_pins(&mut self) {
+        for (_, pin) in self.queue_pins.drain() {
+            for &b in &pin.blocks {
+                self.blocks.release(b);
+            }
+        }
+    }
+
+    /// Re-match every queued request against the radix cache in queue
+    /// order, pinning hit blocks (one `retain` each) so eviction cannot
+    /// invalidate the discounts the planner is about to budget. Pins
+    /// are consumed by [`Self::admit`] and rebuilt next admissible
+    /// iteration — so a request enqueued behind a sibling picks up the
+    /// sibling's blocks as soon as its chunks land in the cache.
+    fn refresh_queue_pins(&mut self) {
+        self.drop_queue_pins();
+        if !self.sharing || self.pins_suspended {
+            return;
+        }
+        for r in self.queue.iter() {
+            let m = self.prefix.match_and_pin(&mut self.blocks, &r.prompt);
+            if m.is_hit() {
+                self.queue_pins.insert(r.id, m);
+            }
+        }
     }
 
     /// Scheduler-facing prefill snapshot, slot-sorted (the `PrefillSet`
@@ -419,6 +555,7 @@ impl<M: StepModel> InferenceEngine<M> {
                     written: j.next,
                     blocks_held: self.tables[j.slot].blocks().len(),
                     next_chunk: self.next_chunk_len(remaining),
+                    cow_pending: j.cow_pending,
                 }
             })
             .collect()
@@ -433,11 +570,19 @@ impl<M: StepModel> InferenceEngine<M> {
             .map(|slot| {
                 let st = self.batcher.state(slot).expect("active slot state");
                 let req = &self.active[&slot];
+                // Preempting this slot only reclaims blocks it holds
+                // alone; shared prefix blocks stay pinned by the cache
+                // and their other referents.
+                let owned = self.tables[slot]
+                    .blocks()
+                    .iter()
+                    .filter(|&&b| self.blocks.ref_count(b) == 1)
+                    .count();
                 DecodeSlotView {
                     slot,
                     request: req.id,
                     priority: req.params.priority,
-                    blocks_held: self.tables[slot].blocks().len(),
+                    blocks_held: owned,
                     needs_block: st.next_pos >= self.tables[slot].capacity(),
                 }
             })
@@ -488,14 +633,29 @@ impl<M: StepModel> InferenceEngine<M> {
         Ok(outcome)
     }
 
+    /// Allocate one KV block, evicting cold prefix-cache leaves on
+    /// demand when the free list is empty (the planner already counted
+    /// them as free).
+    fn alloc_block(&mut self, slot: usize) -> Result<usize> {
+        loop {
+            if let Some(b) = self.blocks.alloc() {
+                return Ok(b);
+            }
+            if self.prefix.evict_one(&mut self.blocks).is_none() {
+                return Err(anyhow!(
+                    "scheduler bug: KV block pool exhausted growing slot {slot}"
+                ));
+            }
+            self.stats.prefix_evictions += 1;
+        }
+    }
+
     /// Grow `slot`'s block table to `target_blocks` and mirror the new
     /// mapping into the model.
     fn grow_table(&mut self, slot: usize, target_blocks: usize) -> Result<()> {
         let mut grew = false;
         while self.tables[slot].blocks().len() < target_blocks {
-            let b = self.blocks.alloc().ok_or_else(|| {
-                anyhow!("scheduler bug: KV block pool exhausted growing slot {slot}")
-            })?;
+            let b = self.alloc_block(slot)?;
             self.tables[slot].push_block(b);
             grew = true;
         }
@@ -563,6 +723,7 @@ impl<M: StepModel> InferenceEngine<M> {
         self.slots.release(a.slot);
         self.rngs.remove(&req.id);
         req.state = RequestState::Queued;
+        req.prefix_hit = 0; // it will re-match (or not) on re-admission
         self.queue.requeue_front(req);
         self.stats.prefill_aborts += 1;
         Ok(())
@@ -609,12 +770,49 @@ impl<M: StepModel> InferenceEngine<M> {
             "slot {} admitted with a live block table",
             adm.slot
         );
-        req.state = RequestState::Prefilling { slot: adm.slot, next: 0 };
+        // Consume the request's prefix pin: the pinned blocks (and their
+        // promise refs) move into the block table, and prefill starts
+        // past the hit — those tokens never run a chunk.
+        let pin = self.queue_pins.remove(&adm.request).unwrap_or_default();
+        if pin.is_hit() {
+            for &b in &pin.blocks {
+                self.tables[adm.slot].push_block(b);
+            }
+            self.model.kv_map(adm.slot, &self.tables[adm.slot]);
+            req.prefix_hit = pin.hit_tokens;
+            self.stats.prefix_hit_tokens += pin.hit_tokens as u64;
+            self.stats.prefix_shared_blocks += pin.blocks.len() as u64;
+        }
+        req.state = RequestState::Prefilling { slot: adm.slot, next: pin.hit_tokens };
         req.admitted_at = Some(Instant::now());
         self.rngs.insert(req.id, Rng::new(req.params.seed ^ req.id));
         self.stats.admitted += 1;
-        self.prefilling
-            .insert(PrefillJob { req, slot: adm.slot, next: 0 });
+        self.prefilling.insert(PrefillJob {
+            req,
+            slot: adm.slot,
+            next: pin.hit_tokens,
+            cow_pending: pin.cow,
+        });
+        Ok(())
+    }
+
+    /// Copy-on-write the partially-covered tail block of a prefix hit
+    /// before the first suffix chunk appends into it: the hit cells
+    /// move to a block this request owns alone, the shared original
+    /// keeps serving the cache. (Full-block hits never append into
+    /// shared blocks, so this is the only COW site.)
+    fn cow_tail_block(&mut self, job: &mut PrefillJob) -> Result<()> {
+        let bs = self.layout.block_size;
+        let (idx, cells) = (job.next / bs, job.next % bs);
+        debug_assert!(cells > 0, "COW flagged on a block-aligned hit");
+        let shared = self.tables[job.slot].blocks()[idx];
+        let fresh = self.alloc_block(job.slot)?;
+        self.model.kv_copy_block(shared, fresh, cells)?;
+        self.tables[job.slot].replace_block(idx, fresh);
+        self.blocks.release(shared);
+        self.model.kv_map(job.slot, &self.tables[job.slot]);
+        job.cow_pending = false;
+        self.stats.cow_copies += 1;
         Ok(())
     }
 
@@ -632,6 +830,9 @@ impl<M: StepModel> InferenceEngine<M> {
             job.req.id,
             spec.request
         );
+        if job.cow_pending {
+            self.cow_tail_block(&mut job)?;
+        }
         let remaining = job.req.prompt.len() - job.next;
         let bucket = self.model.bucket_for(remaining);
         let take = remaining.min(bucket);
@@ -641,6 +842,15 @@ impl<M: StepModel> InferenceEngine<M> {
         let logits = self.model.prefill(bucket, &chunk, take, job.slot, job.next)?;
         self.stats.prefill_chunks += 1;
         job.next += take;
+        if self.sharing {
+            // Index every full prompt block written so far: a sibling
+            // request admitted next iteration hits them immediately.
+            self.prefix.insert(
+                &mut self.blocks,
+                &job.req.prompt[..job.next],
+                self.tables[spec.slot].blocks(),
+            );
+        }
         if job.next < job.req.prompt.len() {
             job.req.state = RequestState::Prefilling { slot: job.slot, next: job.next };
             self.prefilling.insert(job);
@@ -675,6 +885,15 @@ impl<M: StepModel> InferenceEngine<M> {
                 })?
                 .next_pos;
             self.grow_table(slot, self.layout.blocks_for(next_pos + 1))?;
+            // Decode writes only land in blocks the slot owns alone:
+            // partial prompt tails are never cache-indexed and resume
+            // restores into fresh blocks, so no COW is needed here.
+            debug_assert!(
+                self.blocks.ref_count(
+                    self.tables[slot].blocks()[next_pos / self.layout.block_size]
+                ) == 1,
+                "decode write into a shared KV block (slot {slot})"
+            );
         }
         // Only the planned slots feed real inputs; occupied-but-unplanned
         // slots (stalled on a block) are masked so their cache state
@@ -734,6 +953,7 @@ impl<M: StepModel> InferenceEngine<M> {
                 .finished_at
                 .map(|t| t.duration_since(req.enqueued_at).as_secs_f64() * 1e3)
                 .unwrap_or(f64::NAN),
+            prefix_hit_tokens: req.prefix_hit,
         });
     }
 
@@ -907,10 +1127,38 @@ mod tests {
             e.submit(vec![1 + i; 9], params).unwrap();
         }
         e.run_to_completion().unwrap();
-        assert_eq!(e.blocks.used(), 0, "finished requests leak KV blocks");
-        assert!(e.stats.max_blocks_used > 0);
+        // Finished requests keep only their cache-indexed full prompt
+        // blocks alive (2 per distinct 9-token prompt at block size 4);
+        // everything else returns to the pool.
         let s = e.snapshot();
+        assert_eq!(s.prefix_cached_blocks, 8);
+        assert_eq!(
+            e.blocks.used(),
+            s.prefix_cached_blocks,
+            "finished requests leak KV blocks"
+        );
+        assert!(e.stats.max_blocks_used > 0);
         assert_eq!(s.kv_blocks_total, 16);
+        assert_eq!(s.kv_blocks_used, s.prefix_cached_blocks);
+        // Nothing references the cached blocks: all of them are cold
+        // leaves an allocation could reclaim.
+        assert_eq!(s.prefix_evictable_blocks, s.prefix_cached_blocks);
+    }
+
+    #[test]
+    fn blocks_fully_released_when_sharing_is_off() {
+        let model = MockModel::new(2, 64, 16, vec![4, 8]).with_kv_layout(16, 4);
+        let cfg = EngineConfig { prefix_cache: false, ..Default::default() };
+        let mut e = InferenceEngine::new(model, cfg);
+        assert!(!e.prefix_sharing());
+        for i in 0..4 {
+            let params = SamplingParams { max_tokens: 4, ..Default::default() };
+            e.submit(vec![1 + i; 9], params).unwrap();
+        }
+        e.run_to_completion().unwrap();
+        assert_eq!(e.blocks.used(), 0, "finished requests leak KV blocks");
+        let s = e.snapshot();
+        assert_eq!(s.prefix_cached_blocks, 0);
         assert_eq!(s.kv_blocks_used, 0);
         assert_eq!(s.block_utilization, 0.0);
     }
@@ -943,7 +1191,10 @@ mod tests {
         done.sort_by_key(|c| c.id);
         assert!(e.stats.preemptions > 0, "pool pressure must preempt");
         assert_eq!(e.stats.resumes, e.stats.preemptions, "every preempted request resumed");
-        assert_eq!(e.blocks.used(), 0);
+        // 12-token tails on a 6-block pool force cold cached prompt
+        // blocks out; whatever survives is all the pool still holds.
+        assert!(e.stats.prefix_evictions > 0, "pool pressure must evict cache leaves");
+        assert_eq!(e.blocks.used(), e.snapshot().prefix_cached_blocks);
         for (a, b) in reference.iter().zip(&done) {
             assert_eq!(a.id, b.id);
             assert_eq!(a.tokens, b.tokens, "preemption changed request {} output", a.id);
@@ -1057,6 +1308,71 @@ mod tests {
         assert!((0.0..=1.0).contains(&rate), "rate {rate}");
         assert!(s.ffn_last_step_fallback_rate.is_some());
         assert!(e.stats.ffn_folded_rows + e.stats.ffn_fallback_rows > 0);
+    }
+
+    #[test]
+    fn prefix_hit_skips_prefill_for_shared_prompt() {
+        let model = MockModel::new(2, 64, 16, vec![4, 8]).with_kv_layout(16, 4);
+        let mut e = InferenceEngine::new(model, EngineConfig::default());
+        assert!(e.prefix_sharing());
+        let prompt: Vec<i32> = (1..=13).collect();
+        let params = SamplingParams { max_tokens: 4, ..Default::default() };
+        e.submit(prompt.clone(), params).unwrap();
+        e.run_to_completion().unwrap();
+        let mark = e.model.prefill_log.len();
+        e.submit(prompt.clone(), params).unwrap();
+        let second = e.run_to_completion().unwrap();
+        // The repeat request maps the 3 cached full blocks (12 tokens)
+        // and runs exactly one chunk, for the final prompt token.
+        let tail = &e.model.prefill_log[mark..];
+        assert_eq!(tail.len(), 1, "hit-covered tokens must not run prefill chunks");
+        assert_eq!(tail[0].1, 12, "suffix prefill must start at the hit length");
+        assert_eq!(e.stats.prefix_hit_tokens, 12);
+        assert_eq!(e.stats.prefix_shared_blocks, 3);
+        assert_eq!(e.stats.cow_copies, 0);
+        assert_eq!(second[0].prefix_hit_tokens, 12);
+        // Bitwise guarantee: the shared run emits exactly the stream an
+        // unshared engine produces for the same submission history.
+        let reference = {
+            let model = MockModel::new(2, 64, 16, vec![4, 8]).with_kv_layout(16, 4);
+            let cfg = EngineConfig { prefix_cache: false, ..Default::default() };
+            let mut e = InferenceEngine::new(model, cfg);
+            e.submit(prompt.clone(), params).unwrap();
+            e.run_to_completion().unwrap();
+            e.submit(prompt, params).unwrap();
+            let done = e.run_to_completion().unwrap();
+            assert_eq!(e.stats.prefix_hit_tokens, 0);
+            done
+        };
+        assert_eq!(second[0].tokens, reference[0].tokens);
+    }
+
+    #[test]
+    fn partial_hit_copies_on_write_and_matches_unshared_stream() {
+        let prompt_a: Vec<i32> = vec![5, 5, 5, 5, 7, 7, 7, 7, 9];
+        let prompt_b: Vec<i32> = vec![5, 5, 5, 5, 7, 7, 3, 3, 3];
+        let run = |share: bool| {
+            let model = MockModel::new(2, 64, 16, vec![4, 8]).with_kv_layout(16, 4);
+            let cfg = EngineConfig { prefix_cache: share, ..Default::default() };
+            let mut e = InferenceEngine::new(model, cfg);
+            let params = SamplingParams { max_tokens: 4, ..Default::default() };
+            e.submit(prompt_a.clone(), params).unwrap();
+            e.run_to_completion().unwrap();
+            e.submit(prompt_b.clone(), params).unwrap();
+            let done = e.run_to_completion().unwrap();
+            (done[0].tokens.clone(), e.stats.clone(), done[0].prefix_hit_tokens)
+        };
+        let (shared_tokens, stats, hit) = run(true);
+        // B matches A's [5,5,5,5] block in full and [7,7,7,7] for two of
+        // four tokens: a 6-token partial hit that must COW before the
+        // suffix appends into the shared tail block.
+        assert_eq!(hit, 6);
+        assert_eq!(stats.prefix_hit_tokens, 6);
+        assert_eq!(stats.prefix_shared_blocks, 2);
+        assert_eq!(stats.cow_copies, 1);
+        let (unshared_tokens, stats, _) = run(false);
+        assert_eq!(stats.cow_copies, 0);
+        assert_eq!(shared_tokens, unshared_tokens, "COW divergence changed the stream");
     }
 
     #[test]

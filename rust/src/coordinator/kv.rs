@@ -1,25 +1,45 @@
-//! Paged KV cache accounting: fixed-size token blocks and per-request
-//! block tables (the vLLM paged-attention generalization; the old
-//! "one sequence = one block span" slot scheme is now just the
-//! degenerate [`KvLayout::degenerate`] case with `block_size == max_seq`).
+//! Paged KV cache accounting: fixed-size token blocks, per-request
+//! block tables, and cross-request prefix sharing (the vLLM/SGLang
+//! paged-attention + radix-cache generalization; the old "one sequence
+//! = one block span" slot scheme is now just the degenerate
+//! [`KvLayout::degenerate`] case with `block_size == max_seq`).
 //!
-//! * [`BlockAllocator`] — a free list over `n` interchangeable units.
-//!   The engine runs two of them: one over the decode-batch rows
-//!   ("slots") and one over the KV blocks. Its free-list order is
-//!   deterministic (LIFO pop, ascending [`BlockAllocator::free_list`]
-//!   snapshot), which is what makes [`super::scheduler::StepPlan`]
-//!   execution replayable: the same plan sequence always binds the same
-//!   physical blocks.
+//! * [`BlockAllocator`] — a refcounted free list over `n`
+//!   interchangeable units. The engine runs two of them: one over the
+//!   decode-batch rows ("slots", refcount always 0/1) and one over the
+//!   KV blocks, where a block shared between live requests and the
+//!   prefix cache carries one reference per holder. Allocation order is
+//!   deterministic *and history-invariant*: the free list is kept
+//!   sorted and [`BlockAllocator::alloc`] always hands out the
+//!   lowest-numbered free unit, so the physical binding produced by a
+//!   plan depends only on the *set* of free blocks — not on the order
+//!   in which shared references were dropped. That is what keeps
+//!   [`super::scheduler::StepPlan`] execution bitwise replayable under
+//!   refcounted release.
 //! * [`BlockTable`] — one request's logical-position → physical-block
 //!   mapping. Appending a token never moves data ("copy-free append"):
 //!   growth only pushes a fresh block id; the K/V rows already written
-//!   stay where they are.
+//!   stay where they are. [`BlockTable::replace_block`] swaps a single
+//!   id in place — the copy-on-write hook for diverging from a shared
+//!   block.
+//! * [`RadixCache`] — the prefix index: a trie keyed on token IDs at
+//!   block granularity. Matching walks full-block chunks and finishes
+//!   with a longest-common-prefix probe into one more block (a partial
+//!   hit that the engine must copy-on-write before appending). Only
+//!   *full* prompt blocks are ever inserted, so cached cells are
+//!   immutable by construction. Eviction is leaf-only LRU over blocks
+//!   whose refcount is 1 (held by the cache alone): cold leaves go
+//!   first, shared trunks stay pinned while any request references
+//!   them, and interior nodes become evictable leaves once their
+//!   children are gone.
 //! * [`KvLayout`] — the backend's paged geometry (how many blocks of
 //!   how many tokens), reported by
 //!   [`super::model::StepModel::kv_layout`].
 //!
 //! Swap contents for preempted requests live in the model layer (see
-//! [`super::model::KvSwap`]); this module only does the arithmetic.
+//! [`super::model::KvSwap`]); this module only does the accounting.
+
+use std::collections::BTreeMap;
 
 /// Blocks needed to hold `tokens` cache entries at `block_size` tokens
 /// per block. The single source of this arithmetic — the scheduler's
@@ -69,24 +89,25 @@ impl KvLayout {
     }
 }
 
-/// Free-list allocator over `n` interchangeable units (KV blocks, or
-/// decode slots). Deterministic: `alloc` pops LIFO, [`Self::free_list`]
-/// snapshots ascending, and [`Self::claim`] lets a plan bind a specific
-/// unit it saw in that snapshot.
+/// Refcounted free-list allocator over `n` interchangeable units (KV
+/// blocks, or decode slots). `alloc`/`claim` hand out a unit with one
+/// reference; [`Self::retain`] adds a sharer, [`Self::release`] drops
+/// one, and the unit re-enters the free list only when the last
+/// reference is gone. The free list is kept sorted and `alloc` pops the
+/// lowest free unit, so allocation is a function of the free *set* —
+/// stable across release orderings (bitwise thread- and
+/// history-invariant plans).
 #[derive(Debug)]
 pub struct BlockAllocator {
     n: usize,
+    /// Free units, sorted descending so `pop` yields the lowest id.
     free: Vec<usize>,
-    in_use: Vec<bool>,
+    refs: Vec<u32>,
 }
 
 impl BlockAllocator {
     pub fn new(n: usize) -> Self {
-        BlockAllocator {
-            n,
-            free: (0..n).rev().collect(),
-            in_use: vec![false; n],
-        }
+        BlockAllocator { n, free: (0..n).rev().collect(), refs: vec![0; n] }
     }
 
     pub fn capacity(&self) -> usize {
@@ -101,10 +122,11 @@ impl BlockAllocator {
         self.n - self.free.len()
     }
 
+    /// Hand out the lowest-numbered free unit with refcount 1.
     pub fn alloc(&mut self) -> Option<usize> {
         let unit = self.free.pop()?;
-        debug_assert!(!self.in_use[unit], "allocator invariant violated");
-        self.in_use[unit] = true;
+        debug_assert!(self.refs[unit] == 0, "allocator invariant violated");
+        self.refs[unit] = 1;
         Some(unit)
     }
 
@@ -112,7 +134,7 @@ impl BlockAllocator {
     /// deterministic snapshot.
     pub fn free_list(&self) -> Vec<usize> {
         let mut v = self.free.clone();
-        v.sort_unstable();
+        v.reverse();
         v
     }
 
@@ -120,34 +142,54 @@ impl BlockAllocator {
     /// Returns false if it is out of range or already in use (a scheduler
     /// bug the engine turns into an error).
     pub fn claim(&mut self, unit: usize) -> bool {
-        if unit >= self.n || self.in_use[unit] {
+        if unit >= self.n || self.refs[unit] > 0 {
             return false;
         }
         let idx = self
             .free
-            .iter()
-            .position(|&u| u == unit)
-            .expect("free list inconsistent with in_use");
-        self.free.swap_remove(idx);
-        self.in_use[unit] = true;
+            .binary_search_by(|u| unit.cmp(u))
+            .expect("free list inconsistent with refcounts");
+        self.free.remove(idx);
+        self.refs[unit] = 1;
         true
     }
 
+    /// Add a reference to an already-live unit (prefix sharing).
+    pub fn retain(&mut self, unit: usize) {
+        assert!(unit < self.n, "unit {unit} out of range");
+        assert!(self.refs[unit] > 0, "retain of free unit {unit}");
+        self.refs[unit] += 1;
+    }
+
+    /// Drop one reference; the unit re-enters the free list (in sorted
+    /// position — release order never changes future allocations) when
+    /// the last holder lets go.
     pub fn release(&mut self, unit: usize) {
         assert!(unit < self.n, "unit {unit} out of range");
-        assert!(self.in_use[unit], "double free of unit {unit}");
-        self.in_use[unit] = false;
-        self.free.push(unit);
+        assert!(self.refs[unit] > 0, "double free of unit {unit}");
+        self.refs[unit] -= 1;
+        if self.refs[unit] == 0 {
+            let idx = self
+                .free
+                .binary_search_by(|u| unit.cmp(u))
+                .expect_err("freed unit already in free list");
+            self.free.insert(idx, unit);
+        }
+    }
+
+    pub fn ref_count(&self, unit: usize) -> u32 {
+        self.refs[unit]
     }
 
     pub fn is_in_use(&self, unit: usize) -> bool {
-        self.in_use[unit]
+        self.refs[unit] > 0
     }
 }
 
 /// One request's block table: logical token positions `0..capacity()`
 /// map to cells of the physical blocks in order. Growth appends block
-/// ids; existing entries never move.
+/// ids; existing entries never move (except an explicit copy-on-write
+/// [`Self::replace_block`]).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct BlockTable {
     block_size: usize,
@@ -175,6 +217,13 @@ impl BlockTable {
 
     pub fn push_block(&mut self, block: usize) {
         self.blocks.push(block);
+    }
+
+    /// Copy-on-write hook: swap the block id at table index `idx` for a
+    /// private copy. The caller moves the K/V cells and fixes refcounts.
+    pub fn replace_block(&mut self, idx: usize, block: usize) -> usize {
+        assert!(idx < self.blocks.len(), "replace beyond block table");
+        std::mem::replace(&mut self.blocks[idx], block)
     }
 
     /// Drop every block id (the caller releases them to the allocator).
@@ -207,6 +256,271 @@ impl BlockTable {
     }
 }
 
+/// A prefix-cache match: the shared physical blocks to map (in logical
+/// order), how many prompt tokens they cover, and whether the last
+/// block is only partially covered — in which case the engine must
+/// copy-on-write it before the first append.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PrefixMatch {
+    pub blocks: Vec<usize>,
+    pub hit_tokens: usize,
+    pub cow: bool,
+}
+
+impl PrefixMatch {
+    pub fn is_hit(&self) -> bool {
+        self.hit_tokens > 0
+    }
+}
+
+#[derive(Debug)]
+struct RadixNode {
+    /// The `block_size` token IDs whose K/V rows live in `block`.
+    key: Vec<i32>,
+    block: usize,
+    /// Logical LRU stamp (cache clock, not wall time).
+    last_use: u64,
+    parent: usize,
+    children: BTreeMap<Vec<i32>, usize>,
+}
+
+/// Radix/trie prefix index over cached KV blocks, keyed on token IDs at
+/// block granularity. Each node owns one cache reference on its block
+/// (so a cached block's refcount is `1 + live sharers`). Structure:
+/// node 0 is the blockless root; edges are exact `block_size`-token
+/// chunks kept in a `BTreeMap` so matching and eviction are
+/// deterministic. Divergence inside a block is handled at *match* time
+/// (longest-common-prefix probe → partial hit + COW) rather than by
+/// splitting stored nodes — two sibling keys sharing a token prefix
+/// hold bitwise-identical cells for the shared positions, because K/V
+/// at a position depends only on the token prefix up to it.
+#[derive(Debug)]
+pub struct RadixCache {
+    block_size: usize,
+    nodes: Vec<Option<RadixNode>>,
+    free_nodes: Vec<usize>,
+    clock: u64,
+    live: usize,
+}
+
+impl RadixCache {
+    pub fn new(block_size: usize) -> RadixCache {
+        let root = RadixNode {
+            key: Vec::new(),
+            block: usize::MAX,
+            last_use: 0,
+            parent: 0,
+            children: BTreeMap::new(),
+        };
+        RadixCache {
+            block_size: block_size.max(1),
+            nodes: vec![Some(root)],
+            free_nodes: Vec::new(),
+            clock: 0,
+            live: 0,
+        }
+    }
+
+    /// Number of blocks currently indexed (cache references held).
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    fn node(&self, id: usize) -> &RadixNode {
+        self.nodes[id].as_ref().expect("radix node id stale")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut RadixNode {
+        self.nodes[id].as_mut().expect("radix node id stale")
+    }
+
+    fn new_node(&mut self, n: RadixNode) -> usize {
+        self.live += 1;
+        match self.free_nodes.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(n);
+                id
+            }
+            None => {
+                self.nodes.push(Some(n));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Longest cached prefix of `prompt`, capped at `prompt.len() - 1`
+    /// so at least one token always runs through prefill (the sampler
+    /// needs its logits). Walks exact full-block matches, then probes
+    /// the children of the last matched node for a longest-common-prefix
+    /// partial hit (ties broken by key order). Every matched block gets
+    /// one caller reference via [`BlockAllocator::retain`]; the caller
+    /// owns releasing them (or handing them to a block table).
+    pub fn match_and_pin(&mut self, alloc: &mut BlockAllocator, prompt: &[i32]) -> PrefixMatch {
+        let bs = self.block_size;
+        let limit = prompt.len().saturating_sub(1);
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut m = PrefixMatch::default();
+        let mut at = 0usize;
+        while m.hit_tokens + bs <= limit {
+            let chunk = &prompt[m.hit_tokens..m.hit_tokens + bs];
+            let Some(&child) = self.node(at).children.get(chunk) else {
+                break;
+            };
+            at = child;
+            let n = self.node_mut(at);
+            n.last_use = stamp;
+            let block = n.block;
+            alloc.retain(block);
+            m.blocks.push(block);
+            m.hit_tokens += bs;
+        }
+        let cap = limit - m.hit_tokens;
+        if cap > 0 {
+            let rest = &prompt[m.hit_tokens..m.hit_tokens + cap];
+            let mut best: Option<(usize, usize)> = None;
+            for (key, &child) in &self.node(at).children {
+                let l = lcp(key, rest);
+                if l > 0 && best.is_none_or(|(bl, _)| l > bl) {
+                    best = Some((l, child));
+                }
+            }
+            if let Some((l, child)) = best {
+                let n = self.node_mut(child);
+                n.last_use = stamp;
+                let block = n.block;
+                alloc.retain(block);
+                m.blocks.push(block);
+                m.hit_tokens += l;
+                m.cow = true;
+            }
+        }
+        m
+    }
+
+    /// Index the *full* blocks of a (partially) prefilled prompt. For
+    /// each full `block_size` chunk of `prompt` not yet present, a node
+    /// is created referencing the request's own physical block from
+    /// `table_blocks` (the cache retains it); chunks already present
+    /// just refresh LRU. Partial tail blocks are never inserted — they
+    /// may later hold decode tokens. Returns the number of blocks newly
+    /// indexed. Idempotent per chunk.
+    pub fn insert(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        prompt: &[i32],
+        table_blocks: &[usize],
+    ) -> usize {
+        let bs = self.block_size;
+        debug_assert!(table_blocks.len() >= prompt.len() / bs, "table shorter than prompt");
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut at = 0usize;
+        let mut created = 0usize;
+        for (i, chunk) in prompt.chunks_exact(bs).enumerate() {
+            if let Some(&child) = self.node(at).children.get(chunk) {
+                at = child;
+                self.node_mut(at).last_use = stamp;
+                continue;
+            }
+            let block = table_blocks[i];
+            alloc.retain(block);
+            let id = self.new_node(RadixNode {
+                key: chunk.to_vec(),
+                block,
+                last_use: stamp,
+                parent: at,
+                children: BTreeMap::new(),
+            });
+            self.node_mut(at).children.insert(chunk.to_vec(), id);
+            at = id;
+            created += 1;
+        }
+        created
+    }
+
+    /// Blocks the engine could reclaim right now by cascading leaf
+    /// eviction: nodes whose whole subtree is held by the cache alone
+    /// (refcount 1 all the way down). The scheduler counts these as
+    /// free when budgeting plans; [`Self::evict_one`] makes good on it.
+    pub fn evictable_blocks(&self, alloc: &BlockAllocator) -> usize {
+        fn walk(c: &RadixCache, alloc: &BlockAllocator, id: usize) -> (usize, bool) {
+            let n = c.node(id);
+            let mut count = 0;
+            let mut all_free = true;
+            for &child in n.children.values() {
+                let (k, f) = walk(c, alloc, child);
+                count += k;
+                all_free &= f;
+            }
+            if id == 0 {
+                return (count, all_free);
+            }
+            let freeable = all_free && alloc.ref_count(n.block) == 1;
+            (count + freeable as usize, freeable)
+        }
+        walk(self, alloc, 0).0
+    }
+
+    /// Evict the coldest unreferenced leaf (LRU by cache clock, ties by
+    /// block id) and release its cache reference — the block re-enters
+    /// the allocator free list. Interior nodes become leaves as their
+    /// children go, so repeated calls drain whole cold subtrees.
+    /// Returns the freed block, or None if every leaf is pinned.
+    pub fn evict_one(&mut self, alloc: &mut BlockAllocator) -> Option<usize> {
+        self.drop_coldest_leaf(alloc, true)
+    }
+
+    /// Last-resort unpinning: drop the cache's reference on the coldest
+    /// leaf *even when live tables still share its block*. A trie leaf
+    /// can hold rc > 1 while its ancestors sit at rc == 1 — then the
+    /// ancestors are dead weight [`Self::evict_one`] refuses (their
+    /// subtree is not all-free) and the pool can wedge with work in
+    /// flight. Pruning shared leaves makes the trunk childless, after
+    /// which further prunes actually free blocks. The block is only
+    /// freed if the cache was its last holder; either way the returned
+    /// id names the dropped entry (None = cache empty).
+    pub fn prune_one(&mut self, alloc: &mut BlockAllocator) -> Option<usize> {
+        self.drop_coldest_leaf(alloc, false)
+    }
+
+    fn drop_coldest_leaf(
+        &mut self,
+        alloc: &mut BlockAllocator,
+        only_unshared: bool,
+    ) -> Option<usize> {
+        let mut best: Option<(u64, usize, usize)> = None;
+        for (id, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            if id == 0 || !n.children.is_empty() {
+                continue;
+            }
+            if only_unshared && alloc.ref_count(n.block) != 1 {
+                continue;
+            }
+            let cand = (n.last_use, n.block, id);
+            if best.is_none_or(|(lu, b, _)| (cand.0, cand.1) < (lu, b)) {
+                best = Some(cand);
+            }
+        }
+        let (_, block, id) = best?;
+        let node = self.nodes[id].take().expect("candidate vanished");
+        self.node_mut(node.parent).children.remove(&node.key);
+        self.free_nodes.push(id);
+        self.live -= 1;
+        alloc.release(block);
+        Some(block)
+    }
+}
+
+fn lcp(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +543,23 @@ mod tests {
     }
 
     #[test]
+    fn alloc_is_lowest_first_and_history_invariant() {
+        let mut a = BlockAllocator::new(4);
+        assert_eq!(a.alloc(), Some(0));
+        assert_eq!(a.alloc(), Some(1));
+        assert_eq!(a.alloc(), Some(2));
+        assert_eq!(a.alloc(), Some(3));
+        // release in scrambled order: next alloc is still the lowest id
+        a.release(2);
+        a.release(0);
+        a.release(3);
+        assert_eq!(a.free_list(), vec![0, 2, 3]);
+        assert_eq!(a.alloc(), Some(0));
+        assert_eq!(a.alloc(), Some(2));
+        assert_eq!(a.alloc(), Some(3));
+    }
+
+    #[test]
     fn claim_specific_units() {
         let mut a = BlockAllocator::new(4);
         assert_eq!(a.free_list(), vec![0, 1, 2, 3]);
@@ -246,6 +577,31 @@ mod tests {
         assert_eq!(handed, vec![0, 1, 3]);
         a.release(2);
         assert_eq!(a.free_list(), vec![2]);
+    }
+
+    #[test]
+    fn retain_release_refcounts() {
+        let mut a = BlockAllocator::new(2);
+        let b = a.alloc().unwrap();
+        assert_eq!(a.ref_count(b), 1);
+        a.retain(b);
+        a.retain(b);
+        assert_eq!(a.ref_count(b), 3);
+        a.release(b);
+        a.release(b);
+        // still referenced: not free yet
+        assert!(a.is_in_use(b));
+        assert!(!a.free_list().contains(&b));
+        a.release(b);
+        assert!(!a.is_in_use(b));
+        assert!(a.free_list().contains(&b));
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of free unit")]
+    fn retain_free_unit_panics() {
+        let mut a = BlockAllocator::new(2);
+        a.retain(0);
     }
 
     #[test]
@@ -288,8 +644,12 @@ mod tests {
         assert_eq!(runs, vec![(0, 28, 4), (4, 8, 2)]);
         let runs: Vec<_> = t.runs(4).collect();
         assert_eq!(runs, vec![(0, 28, 4)]);
+        let old = t.replace_block(0, 5);
+        assert_eq!(old, 7);
+        assert_eq!(t.physical(0), 20);
+        assert_eq!(t.physical(4), 8, "COW swap leaves other blocks alone");
         let freed = t.clear();
-        assert_eq!(freed, vec![7, 2]);
+        assert_eq!(freed, vec![5, 2]);
         assert_eq!(t.capacity(), 0);
     }
 
@@ -354,6 +714,54 @@ mod tests {
         });
     }
 
+    /// Property: with random retain/release interleavings, a unit frees
+    /// exactly when its model refcount hits zero, the allocator mirrors
+    /// the model count, and allocation order depends only on the free
+    /// set (history invariance).
+    #[test]
+    fn prop_refcount_conservation() {
+        property("refcount conservation", 200, |rng: &mut Rng| {
+            let n = 1 + rng.usize_below(6);
+            let mut a = BlockAllocator::new(n);
+            let mut model: Vec<u32> = vec![0; n];
+            for _ in 0..120 {
+                match rng.below(4) {
+                    0 => {
+                        if let Some(u) = a.alloc() {
+                            prop_assert!(model[u] == 0, "alloc of referenced unit {u}");
+                            model[u] = 1;
+                        } else {
+                            prop_assert!(model.iter().all(|&r| r > 0));
+                        }
+                    }
+                    1 => {
+                        let u = rng.usize_below(n);
+                        if model[u] > 0 {
+                            a.retain(u);
+                            model[u] += 1;
+                        }
+                    }
+                    _ => {
+                        let live: Vec<usize> =
+                            (0..n).filter(|&u| model[u] > 0).collect();
+                        if let Some(&u) = live.get(rng.usize_below(live.len().max(1))) {
+                            a.release(u);
+                            model[u] -= 1;
+                        }
+                    }
+                }
+                for u in 0..n {
+                    prop_assert!(a.ref_count(u) == model[u], "refcount mismatch on {u}");
+                    prop_assert!(a.is_in_use(u) == (model[u] > 0));
+                }
+                let free = a.free_list();
+                let expect: Vec<usize> = (0..n).filter(|&u| model[u] == 0).collect();
+                prop_assert!(free == expect, "free list {free:?} != {expect:?}");
+            }
+            Ok(())
+        });
+    }
+
     /// Property: a block table filled through random alloc/grow traffic
     /// maps every logical position into the cell range of exactly the
     /// block that holds it, with no two logical positions sharing a cell
@@ -369,7 +777,7 @@ mod tests {
             let needed = len.div_ceil(bs);
             // Fragment the physical order: hold some blocks aside while
             // the table grows, so its ids are neither contiguous nor
-            // ascending (LIFO would otherwise hand them out in order).
+            // ascending.
             let mut held: Vec<usize> = Vec::new();
             while t.blocks().len() < needed {
                 let left = needed - t.blocks().len();
@@ -400,6 +808,242 @@ mod tests {
                 covered += rl;
             }
             prop_assert!(covered == len);
+            Ok(())
+        });
+    }
+
+    fn fill_blocks(alloc: &mut BlockAllocator, k: usize) -> Vec<usize> {
+        (0..k).map(|_| alloc.alloc().expect("pool sized")).collect()
+    }
+
+    #[test]
+    fn radix_insert_then_match_full_blocks() {
+        let mut alloc = BlockAllocator::new(16);
+        let mut cache = RadixCache::new(4);
+        let prompt: Vec<i32> = (0..10).collect(); // 2 full blocks + tail
+        let blocks = fill_blocks(&mut alloc, 3);
+        let created = cache.insert(&mut alloc, &prompt, &blocks);
+        assert_eq!(created, 2, "only full blocks are indexed");
+        assert_eq!(cache.len(), 2);
+        assert_eq!(alloc.ref_count(blocks[0]), 2);
+        assert_eq!(alloc.ref_count(blocks[1]), 2);
+        assert_eq!(alloc.ref_count(blocks[2]), 1, "partial tail not cached");
+        // identical prompt: full-block hit clamped below prompt len
+        let m = cache.match_and_pin(&mut alloc, &prompt);
+        assert_eq!(m.hit_tokens, 8);
+        assert_eq!(m.blocks, vec![blocks[0], blocks[1]]);
+        assert!(!m.cow);
+        assert_eq!(alloc.ref_count(blocks[0]), 3, "match retains for caller");
+        // reinsertion is idempotent
+        assert_eq!(cache.insert(&mut alloc, &prompt, &blocks), 0);
+        assert_eq!(alloc.ref_count(blocks[0]), 3);
+    }
+
+    #[test]
+    fn radix_partial_hit_sets_cow() {
+        let mut alloc = BlockAllocator::new(16);
+        let mut cache = RadixCache::new(4);
+        let cached: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, 8];
+        let blocks = fill_blocks(&mut alloc, 2);
+        cache.insert(&mut alloc, &cached, &blocks);
+        // diverges inside the second block: LCP = 2 tokens into it
+        let query: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 9, 9, 9];
+        let m = cache.match_and_pin(&mut alloc, &query);
+        assert_eq!(m.hit_tokens, 6);
+        assert_eq!(m.blocks, vec![blocks[0], blocks[1]]);
+        assert!(m.cow, "partial block hit must flag copy-on-write");
+        // clamp: a fully-cached prompt still leaves one token to prefill
+        let m2 = cache.match_and_pin(&mut alloc, &cached);
+        assert_eq!(m2.hit_tokens, 7);
+        assert!(m2.cow);
+    }
+
+    #[test]
+    fn radix_eviction_is_leaf_lru_and_pins_shared_trunks() {
+        let mut alloc = BlockAllocator::new(16);
+        let mut cache = RadixCache::new(2);
+        // two chains sharing a trunk: [0,1]->[2,3] and [0,1]->[8,9]
+        let a: Vec<i32> = vec![0, 1, 2, 3, 7];
+        let b: Vec<i32> = vec![0, 1, 8, 9, 7];
+        let ba = fill_blocks(&mut alloc, 2);
+        let bb = fill_blocks(&mut alloc, 2);
+        cache.insert(&mut alloc, &a, &ba);
+        cache.insert(&mut alloc, &b, &[bb[0], bb[1]]);
+        // trunk deduped: b's first block was not indexed
+        assert_eq!(cache.len(), 3);
+        assert_eq!(alloc.ref_count(ba[0]), 2);
+        assert_eq!(alloc.ref_count(bb[0]), 1);
+        // drop the requests' own references: cache holds the rest
+        for &blk in ba.iter().chain(&bb) {
+            alloc.release(blk);
+        }
+        assert_eq!(cache.evictable_blocks(&alloc), 3);
+        // pin branch a's leaf (a live request maps it): trunk + that leaf
+        // are now both unevictable, branch b's leaf is not
+        alloc.retain(ba[1]);
+        assert_eq!(cache.evictable_blocks(&alloc), 1);
+        assert_eq!(cache.evict_one(&mut alloc), Some(bb[1]));
+        assert_eq!(cache.evict_one(&mut alloc), None, "trunk pinned by leaf");
+        // unpin: leaf goes first (LRU), then the trunk cascades
+        alloc.release(ba[1]);
+        assert_eq!(cache.evictable_blocks(&alloc), 2);
+        assert_eq!(cache.evict_one(&mut alloc), Some(ba[1]));
+        assert_eq!(cache.evict_one(&mut alloc), Some(ba[0]));
+        assert_eq!(cache.evict_one(&mut alloc), None);
+        assert!(cache.is_empty());
+        assert_eq!(alloc.used(), 0, "all cache references returned");
+    }
+
+    #[test]
+    fn prune_unwedges_trunks_pinned_by_shared_leaves() {
+        let mut alloc = BlockAllocator::new(8);
+        let mut cache = RadixCache::new(2);
+        // A live table holds the leaf [2,3] (rc 2); the rc-1 trunk [0,1]
+        // above it is dead weight `evict_one` refuses (its subtree is
+        // not all-free) — the wedge shape the engine's last-resort prune
+        // breaker exists for.
+        let blks = fill_blocks(&mut alloc, 2);
+        cache.insert(&mut alloc, &[0, 1, 2, 3], &blks);
+        alloc.release(blks[0]); // the table keeps only the leaf block
+        assert_eq!(alloc.ref_count(blks[0]), 1); // cache alone
+        assert_eq!(alloc.ref_count(blks[1]), 2); // cache + table
+        assert_eq!(cache.evictable_blocks(&alloc), 0);
+        assert_eq!(cache.evict_one(&mut alloc), None, "wedged");
+        let avail = alloc.available();
+        // Prune drops the shared leaf's cache ref — the block stays
+        // live with the table, nothing is freed yet...
+        assert_eq!(cache.prune_one(&mut alloc), Some(blks[1]));
+        assert_eq!(alloc.ref_count(blks[1]), 1);
+        assert_eq!(alloc.available(), avail);
+        // ...but the trunk is now a childless rc-1 leaf: the next prune
+        // actually frees its block.
+        assert_eq!(cache.prune_one(&mut alloc), Some(blks[0]));
+        assert_eq!(alloc.available(), avail + 1);
+        assert!(cache.is_empty());
+        assert_eq!(cache.prune_one(&mut alloc), None);
+        alloc.release(blks[1]);
+        assert_eq!(alloc.used(), 0, "all references returned");
+    }
+
+    /// Property: random insert/match/evict traffic conserves references
+    /// — every cached block holds exactly one cache reference, matches
+    /// retain exactly their block list, and draining the cache returns
+    /// the allocator to a zero-reference state (no leaks, no double
+    /// free).
+    #[test]
+    fn prop_radix_refcount_conservation() {
+        property("radix refcount conservation", 120, |rng: &mut Rng| {
+            let bs = 1 + rng.usize_below(3);
+            let pool = 24;
+            let mut alloc = BlockAllocator::new(pool);
+            let mut cache = RadixCache::new(bs);
+            // owned[i] = blocks a fake request still references
+            let mut owned: Vec<Vec<usize>> = Vec::new();
+            let mut pinned: Vec<Vec<usize>> = Vec::new();
+            for _ in 0..60 {
+                match rng.below(4) {
+                    0 => {
+                        // "prefill": alloc blocks for a short prompt, insert
+                        let len = 1 + rng.usize_below(3 * bs + 1);
+                        let need = len.div_ceil(bs);
+                        if alloc.available() >= need {
+                            let prompt: Vec<i32> =
+                                (0..len).map(|_| rng.below(3) as i32).collect();
+                            let blocks: Vec<usize> =
+                                (0..need).map(|_| alloc.alloc().unwrap()).collect();
+                            cache.insert(&mut alloc, &prompt, &blocks);
+                            owned.push(blocks);
+                        }
+                    }
+                    1 => {
+                        // "match": pin a random prompt's cached prefix
+                        let len = 1 + rng.usize_below(3 * bs + 1);
+                        let prompt: Vec<i32> =
+                            (0..len).map(|_| rng.below(3) as i32).collect();
+                        let m = cache.match_and_pin(&mut alloc, &prompt);
+                        prop_assert!(m.hit_tokens < prompt.len(), "hit must be clamped");
+                        if !m.blocks.is_empty() {
+                            pinned.push(m.blocks);
+                        }
+                    }
+                    2 => {
+                        // "finish": release a request's or a match's blocks
+                        let from_owned = rng.bool(0.5);
+                        let v = if from_owned { &mut owned } else { &mut pinned };
+                        if !v.is_empty() {
+                            let i = rng.usize_below(v.len());
+                            for b in v.swap_remove(i) {
+                                alloc.release(b);
+                            }
+                        }
+                    }
+                    _ => {
+                        let before = alloc.available();
+                        if let Some(blk) = cache.evict_one(&mut alloc) {
+                            prop_assert!(alloc.available() == before + 1);
+                            prop_assert!(!alloc.is_in_use(blk));
+                        }
+                    }
+                }
+                prop_assert!(alloc.available() + alloc.used() == pool);
+            }
+            // drain everything: refcounts must come back to zero exactly
+            for v in owned.into_iter().chain(pinned) {
+                for b in v {
+                    alloc.release(b);
+                }
+            }
+            while cache.evict_one(&mut alloc).is_some() {}
+            prop_assert!(cache.is_empty(), "unevictable residue in cache");
+            prop_assert!(alloc.used() == 0, "leaked references");
+            Ok(())
+        });
+    }
+
+    /// Property: a match result is always a true prefix of the query —
+    /// the concatenated keys along the matched path equal the first
+    /// `hit_tokens` tokens, and a full-block hit never exceeds the
+    /// clamp.
+    #[test]
+    fn prop_radix_match_is_true_prefix() {
+        property("radix match is true prefix", 120, |rng: &mut Rng| {
+            let bs = 1 + rng.usize_below(4);
+            let mut alloc = BlockAllocator::new(64);
+            let mut cache = RadixCache::new(bs);
+            // shared vocabulary of 2 symbols → heavy prefix collisions
+            let mut inserted: Vec<(Vec<i32>, Vec<usize>)> = Vec::new();
+            for _ in 0..8 {
+                let len = 1 + rng.usize_below(4 * bs);
+                let prompt: Vec<i32> = (0..len).map(|_| rng.below(2) as i32).collect();
+                let need = len.div_ceil(bs);
+                if alloc.available() < need {
+                    continue;
+                }
+                let blocks: Vec<usize> = (0..need).map(|_| alloc.alloc().unwrap()).collect();
+                cache.insert(&mut alloc, &prompt, &blocks);
+                inserted.push((prompt, blocks));
+            }
+            for _ in 0..8 {
+                let len = 1 + rng.usize_below(4 * bs);
+                let query: Vec<i32> = (0..len).map(|_| rng.below(2) as i32).collect();
+                let m = cache.match_and_pin(&mut alloc, &query);
+                prop_assert!(m.hit_tokens <= len.saturating_sub(1));
+                prop_assert!(m.blocks.len() == m.hit_tokens.div_ceil(bs));
+                prop_assert!(m.cow == (m.hit_tokens % bs != 0));
+                // the hit must be justified by some inserted prompt
+                if m.hit_tokens > 0 {
+                    let covered = &query[..m.hit_tokens];
+                    prop_assert!(
+                        inserted.iter().any(|(p, _)| {
+                            p.len() >= covered.len() && p[..covered.len()] == *covered
+                        }),
+                        "hit {covered:?} matches no inserted prompt"
+                    );
+                }
+                for b in m.blocks {
+                    alloc.release(b);
+                }
+            }
             Ok(())
         });
     }

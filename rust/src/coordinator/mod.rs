@@ -31,7 +31,7 @@ pub mod sampler;
 pub mod scheduler;
 
 pub use engine_loop::{EngineConfig, EngineSnapshot, EngineStats, InferenceEngine};
-pub use kv::{BlockAllocator, BlockTable, KvLayout};
+pub use kv::{BlockAllocator, BlockTable, KvLayout, PrefixMatch, RadixCache};
 pub use model::{KvSwap, MockModel, StepModel};
 #[cfg(feature = "pjrt")]
 pub use model::PjrtModel;

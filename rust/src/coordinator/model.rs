@@ -100,6 +100,23 @@ pub trait StepModel {
         Err(anyhow::anyhow!("backend does not support KV save/restore"))
     }
 
+    /// Whether one physical KV block may appear in several slots' block
+    /// tables at once (prefix sharing) and [`Self::kv_copy_block`]
+    /// works. Sharing requires truly paged storage: backends that
+    /// address cache state by slot and ignore block tables may also
+    /// return true (their state carries no per-block data to alias).
+    fn supports_block_sharing(&self) -> bool {
+        false
+    }
+
+    /// Copy the first `cells` token cells of physical block `src` into
+    /// block `dst` — the copy-on-write divergence step the engine runs
+    /// before appending into a partially-shared block. Backends with
+    /// slot-addressed caches no-op.
+    fn kv_copy_block(&mut self, _src: usize, _dst: usize, _cells: usize) -> Result<()> {
+        Err(anyhow::anyhow!("backend does not support shared KV blocks"))
+    }
+
     /// Plan-level hook: called once per engine iteration with the
     /// [`StepPlan`] about to execute, before any prefill/decode dispatch.
     /// Backends can stage uploads for the whole iteration or record
@@ -645,6 +662,27 @@ impl StepModel for NativeModel {
         Ok(KvSwap { tokens, payload: SwapPayload::Layers(layers) })
     }
 
+    fn supports_block_sharing(&self) -> bool {
+        true
+    }
+
+    fn kv_copy_block(&mut self, src: usize, dst: usize, cells: usize) -> Result<()> {
+        let bs = self.layout.block_size;
+        anyhow::ensure!(
+            src < self.layout.num_blocks && dst < self.layout.num_blocks,
+            "kv_copy_block {src}->{dst} outside pool of {}",
+            self.layout.num_blocks
+        );
+        anyhow::ensure!(cells <= bs, "kv_copy_block of {cells} cells > block size {bs}");
+        let d = self.cfg.d_model;
+        let (s0, d0, n) = (src * bs * d, dst * bs * d, cells * d);
+        for layer in &mut self.kv {
+            layer.k.copy_within(s0..s0 + n, d0);
+            layer.v.copy_within(s0..s0 + n, d0);
+        }
+        Ok(())
+    }
+
     fn kv_restore(&mut self, slot: usize, swap: &KvSwap) -> Result<()> {
         anyhow::ensure!(slot < self.cfg.batch, "slot {slot} out of range");
         let table = self.tables[slot].clone();
@@ -860,6 +898,16 @@ impl StepModel for MockModel {
             anyhow::bail!("kv swap payload is not mock state");
         };
         self.state[slot] = *state;
+        Ok(())
+    }
+
+    fn supports_block_sharing(&self) -> bool {
+        true
+    }
+
+    fn kv_copy_block(&mut self, _src: usize, _dst: usize, _cells: usize) -> Result<()> {
+        // State is slot-addressed: a prefix hit leaves the slot's
+        // (token, pos) exactly where suffix prefill will put it anyway.
         Ok(())
     }
 

@@ -71,6 +71,9 @@ pub struct Request {
     pub admitted_at: Option<Instant>,
     pub first_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
+    /// Prompt tokens served from the prefix cache at admission (their
+    /// prefill was skipped); 0 when sharing is off or nothing matched.
+    pub prefix_hit: usize,
 }
 
 impl Request {
@@ -86,6 +89,7 @@ impl Request {
             admitted_at: None,
             first_token_at: None,
             finished_at: None,
+            prefix_hit: 0,
         }
     }
 

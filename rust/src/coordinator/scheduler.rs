@@ -49,8 +49,31 @@ pub struct QueuedRequest {
     /// Position in the admission queue (0 = oldest): the FIFO key.
     pub arrival: usize,
     /// Tokens the engine would run in this request's first prefill chunk
-    /// (prompt length clamped to the model's chunk bucket).
+    /// — the *unshared suffix* clamped to the model's chunk bucket
+    /// (prefix-cache hits are skipped, not prefilled).
     pub first_chunk: usize,
+    /// Prompt tokens covered by a pinned prefix-cache hit. Admission
+    /// costs only the suffix: the hit blocks are already resident.
+    pub hit_tokens: usize,
+    /// Shared blocks the hit maps (pinned — they cost this request
+    /// nothing to admit).
+    pub hit_blocks: usize,
+    /// True when the hit ends inside a shared block: the first append
+    /// must copy-on-write it, which costs one extra block.
+    pub cow: bool,
+}
+
+impl QueuedRequest {
+    /// Fresh blocks admitting this request and running its first chunk
+    /// would allocate: the post-chunk table size minus the shared blocks
+    /// the hit already maps, plus the copy-on-write block for a partial
+    /// hit. This is the prefix-aware admission cost — a 95%-shared
+    /// prompt charges only its suffix.
+    pub fn admission_blocks(&self, block_size: usize) -> usize {
+        kv::blocks_for(self.hit_tokens + self.first_chunk, block_size)
+            .saturating_sub(self.hit_blocks)
+            + self.cow as usize
+    }
 }
 
 /// Snapshot of one in-flight prefill job.
@@ -62,10 +85,15 @@ pub struct PrefillView {
     pub remaining: usize,
     /// Prompt tokens already written to the KV cache.
     pub written: usize,
-    /// KV blocks this job's table currently holds.
+    /// KV blocks this job's table currently holds (owned *and* shared —
+    /// the growth arithmetic cares about capacity, not ownership).
     pub blocks_held: usize,
     /// Tokens the next chunk would run (remaining clamped to a bucket).
     pub next_chunk: usize,
+    /// True while the job's next append lands in a shared block it has
+    /// not yet copied: the next chunk costs one extra block (the COW
+    /// copy) on top of any growth.
+    pub cow_pending: bool,
 }
 
 /// Snapshot of one actively decoding slot.
@@ -74,7 +102,10 @@ pub struct DecodeSlotView {
     pub slot: usize,
     pub request: RequestId,
     pub priority: i32,
-    /// KV blocks this request's table currently holds.
+    /// KV blocks preempting this request would actually reclaim — its
+    /// solely-owned blocks. Blocks shared with the prefix cache or other
+    /// requests survive the release and must not be counted as
+    /// preemption gain (they only become cache-evictable).
     pub blocks_held: usize,
     /// True when the next decode write falls past the table's capacity,
     /// i.e. this step must allocate one fresh block for the slot.
@@ -105,7 +136,12 @@ pub struct SchedView<'a> {
     pub decoding: &'a [DecodeSlotView],
     /// Preempted requests awaiting re-admission, oldest first.
     pub swapped: &'a [SwappedView],
-    /// Unallocated KV blocks in the pool.
+    /// KV blocks the engine can hand out this iteration: the allocator's
+    /// free list *plus* cold prefix-cache leaves it would reclaim on
+    /// demand (leaf-LRU eviction). Pinned blocks — shared trunks still
+    /// referenced by live requests or queue pins — are excluded, which
+    /// is exactly the "evict cold leaves, never hot trunks" policy seen
+    /// from the planner's side.
     pub free_blocks: usize,
     /// Tokens per KV block (see [`super::kv::KvLayout`]).
     pub block_size: usize,
@@ -576,7 +612,8 @@ impl Scheduler {
                 chunk: j.next_chunk,
                 new_blocks: view
                     .blocks_for(j.written + j.next_chunk)
-                    .saturating_sub(j.blocks_held),
+                    .saturating_sub(j.blocks_held)
+                    + j.cow_pending as usize,
             })
             .collect()
     }
@@ -612,7 +649,7 @@ impl Scheduler {
                 .iter()
                 .find(|q| q.id == id)
                 .expect("policy must permute the queue snapshot");
-            let new_blocks = view.blocks_for(q.first_chunk);
+            let new_blocks = q.admission_blocks(view.block_size);
             // Admit only when the first chunk could run now; stop at the
             // first misfit rather than skipping past the policy's choice.
             if (q.first_chunk > budget && !jobs.is_empty())
@@ -814,6 +851,9 @@ mod tests {
                 priority,
                 arrival,
                 first_chunk: prompt_len.min(64),
+                hit_tokens: 0,
+                hit_blocks: 0,
+                cow: false,
             })
             .collect()
     }
@@ -841,6 +881,7 @@ mod tests {
                 written: 0,
                 blocks_held: 0,
                 next_chunk: remaining.min(64),
+                cow_pending: false,
             })
             .collect()
     }
@@ -1109,6 +1150,55 @@ mod tests {
     }
 
     #[test]
+    fn prefix_hit_discounts_admission_cost() {
+        // 40-token prompt, 32 tokens covered by a pinned full-block hit:
+        // the suffix chunk is 8 tokens, so admission needs only
+        // ceil(40/16) - 2 = 1 fresh block where a cold prompt needs 3.
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let mut q = queued(&[(1, 40, 0)]);
+        q[0].first_chunk = 8;
+        q[0].hit_tokens = 32;
+        q[0].hit_blocks = 2;
+        let mut v = view(&q, &[0], &[], &[]);
+        v.free_blocks = 1;
+        let plan = s.plan(&v);
+        assert_eq!(plan.admissions.len(), 1, "hit-covered blocks are free: {plan:?}");
+        // A partial hit costs one extra block for the copy-on-write.
+        q[0].hit_tokens = 30;
+        q[0].first_chunk = 10;
+        q[0].cow = true;
+        assert_eq!(q[0].admission_blocks(16), 2);
+        let mut v = view(&q, &[0], &[], &[]);
+        v.free_blocks = 1;
+        let plan = Scheduler::new(SchedulerConfig::default()).plan(&v);
+        assert!(plan.admissions.is_empty(), "COW block not budgeted: {plan:?}");
+        v.free_blocks = 2;
+        let plan = Scheduler::new(SchedulerConfig::default()).plan(&v);
+        assert_eq!(plan.admissions.len(), 1);
+    }
+
+    #[test]
+    fn cow_pending_charges_inflight_chunk() {
+        // An in-flight job whose next append still has to copy a shared
+        // block needs its COW block on top of growth: with 0 free the
+        // chunk cannot run, with 1 it can (no table growth here: written
+        // 8 + chunk 8 stays within the 1 block held at block_size 16).
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let mut inf = inflight(&[(7, 0, 8)]);
+        inf[0].written = 8;
+        inf[0].blocks_held = 1;
+        inf[0].next_chunk = 8;
+        inf[0].cow_pending = true;
+        let mut v = view(&[], &[], &inf, &[]);
+        v.free_blocks = 0;
+        let plan = s.plan(&v);
+        assert!(plan.prefill_chunks.is_empty(), "{plan:?}");
+        v.free_blocks = 1;
+        let plan = s.plan(&v);
+        assert_eq!(plan.prefill_chunks.len(), 1);
+    }
+
+    #[test]
     fn admissions_do_not_overpromise_blocks() {
         // Two queued prompts whose first chunks need 3 blocks each, 4
         // free: admitting both would grant the second against blocks
@@ -1258,6 +1348,9 @@ mod tests {
                         priority: rng.below(5) as i32,
                         arrival: i,
                         first_chunk: 1 + rng.usize_below(16),
+                        hit_tokens: 0,
+                        hit_blocks: 0,
+                        cow: false,
                     })
                     .collect();
                 let free: Vec<usize> = (8..8 + rng.usize_below(4)).collect();
@@ -1269,6 +1362,7 @@ mod tests {
                         written: rng.usize_below(32),
                         blocks_held: 2,
                         next_chunk: 1 + rng.usize_below(16),
+                        cow_pending: false,
                     })
                     .collect();
                 let n_active = 1 + rng.usize_below(8); // always pending
@@ -1334,16 +1428,28 @@ mod tests {
                             written,
                             blocks_held: written.div_ceil(bs),
                             next_chunk: 1 + rng.usize_below(16),
+                            cow_pending: rng.bool(0.3),
                         }
                     })
                     .collect();
                 let q: Vec<QueuedRequest> = (0..rng.usize_below(4))
-                    .map(|i| QueuedRequest {
-                        id: iter * 100 + 80 + i as u64,
-                        prompt_len: 1 + rng.usize_below(64),
-                        priority: rng.below(3) as i32,
-                        arrival: i,
-                        first_chunk: 1 + rng.usize_below(16),
+                    .map(|i| {
+                        let prompt_len = 1 + rng.usize_below(64);
+                        // a pinned prefix hit covers up to prompt_len - 1
+                        // tokens; hit_blocks/cow are derived the way the
+                        // engine derives them from a RadixCache match
+                        let hit_tokens = rng.usize_below(prompt_len);
+                        let suffix = prompt_len - hit_tokens;
+                        QueuedRequest {
+                            id: iter * 100 + 80 + i as u64,
+                            prompt_len,
+                            priority: rng.below(3) as i32,
+                            arrival: i,
+                            first_chunk: 1 + rng.usize_below(suffix.max(1)),
+                            hit_tokens,
+                            hit_blocks: hit_tokens.div_ceil(bs),
+                            cow: hit_tokens % bs != 0,
+                        }
                     })
                     .collect();
                 let swapped: Vec<SwappedView> = (0..rng.usize_below(3))
@@ -1424,14 +1530,17 @@ mod tests {
                 for a in &plan.admissions {
                     let qv = q.iter().find(|q| q.id == a.request).unwrap();
                     if plan.prefill_chunks.iter().any(|c| c.request == a.request) {
-                        spend += qv.first_chunk.div_ceil(bs);
+                        // prefix-aware: the hit blocks are already
+                        // resident, only suffix growth + COW is new
+                        spend += qv.admission_blocks(bs);
                     }
                 }
                 for c in &plan.prefill_chunks {
                     if let Some(j) = inf.iter().find(|j| j.request == c.request) {
                         spend += (j.written + j.next_chunk)
                             .div_ceil(bs)
-                            .saturating_sub(j.blocks_held);
+                            .saturating_sub(j.blocks_held)
+                            + j.cow_pending as usize;
                     }
                 }
                 prop_assert!(

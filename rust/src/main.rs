@@ -79,6 +79,9 @@ fn usage() -> ! {
                            unbounded)
     --segregated           disable mixed prefill+decode iterations (the
                            pre-paged alternating planner, for baselines)
+    --no-prefix-cache      disable cross-request KV prefix sharing (the
+                           radix cache + copy-on-write; on by default on
+                           backends that support block sharing)
     --queue-capacity N     admission queue depth before backpressure (default 64)
   generate:
     --prompt TEXT          prompt (default: \"the quick \")
@@ -128,6 +131,9 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
         args.usize("max-step-tokens", cfg.scheduler.max_step_tokens)?;
     if args.bool("segregated") {
         cfg.scheduler.mixed = false;
+    }
+    if args.bool("no-prefix-cache") {
+        cfg.prefix_cache = false;
     }
     cfg.queue_capacity = args.usize("queue-capacity", cfg.queue_capacity)?;
     Ok(cfg)
@@ -275,8 +281,8 @@ fn run_server<M: StepModel>(
 // ---------------------------------------------------------------------------
 
 fn cmd_costmodel(_args: &Args) -> Result<()> {
-    let b = costmodel::inference_breakdown(
-        &costmodel::FALCON_7B, &costmodel::RTX_4090, 1, 91, 178);
+    let b =
+        costmodel::inference_breakdown(&costmodel::FALCON_7B, &costmodel::RTX_4090, 1, 91, 178);
     println!("Fig 1b reproduction — Falcon-7B on RTX 4090, 91 prompt + 178 generated tokens");
     println!("  component      share of inference time");
     println!("  MHA I/O        {:5.1}%", b.attn_io * 100.0);
@@ -288,9 +294,14 @@ fn cmd_costmodel(_args: &Args) -> Result<()> {
     println!("TARDIS theoretical speedups (decode, ctx 128):");
     for ratio in [0.3, 0.5, 0.7, 0.8] {
         let (ffn, e2e) = costmodel::tardis_speedup(
-            &costmodel::FALCON_7B, &costmodel::RTX_4090, 1, 128, ratio, 0.05);
-        println!("  ratio {:.0}%: FFN {:.2}x, end-to-end {:.2}x",
-                 ratio * 100.0, ffn, e2e);
+            &costmodel::FALCON_7B,
+            &costmodel::RTX_4090,
+            1,
+            128,
+            ratio,
+            0.05,
+        );
+        println!("  ratio {:.0}%: FFN {:.2}x, end-to-end {:.2}x", ratio * 100.0, ffn, e2e);
     }
     Ok(())
 }
@@ -322,8 +333,11 @@ fn cmd_serve(args: &Args, forced: Option<BackendKind>) -> Result<()> {
                     )
                 })
                 .collect();
-            eprintln!("[serve] backend=mock policy={} replicas={names:?}",
-                      cfg.scheduler.policy.name());
+            eprintln!(
+                "[serve] backend=mock policy={} prefix_cache={} replicas={names:?}",
+                cfg.scheduler.policy.name(),
+                cfg.prefix_cache
+            );
             run_server(replicas, args, "serve")
         }
         BackendKind::Native => {
@@ -345,8 +359,11 @@ fn cmd_serve(args: &Args, forced: Option<BackendKind>) -> Result<()> {
                     InferenceEngine::new(model, cfg.clone()),
                 ));
             }
-            eprintln!("[serve] backend=native policy={} replicas={names:?}",
-                      cfg.scheduler.policy.name());
+            eprintln!(
+                "[serve] backend=native policy={} prefix_cache={} replicas={names:?}",
+                cfg.scheduler.policy.name(),
+                cfg.prefix_cache
+            );
             run_server(replicas, args, "serve")
         }
         BackendKind::Pjrt => cmd_serve_pjrt(args, cfg),
@@ -443,9 +460,13 @@ fn cmd_generate_pjrt(args: &Args) -> Result<()> {
     let variant = args.str("variant", "tardis80");
     let engine = Engine::cpu()?;
     eprintln!("[generate] platform={} variant={variant}", engine.platform());
-    let mut ie = load_engine(&engine, &manifest, &variant,
-                             Some(&main_exec_tags(&manifest)),
-                             engine_config(args)?)?;
+    let mut ie = load_engine(
+        &engine,
+        &manifest,
+        &variant,
+        Some(&main_exec_tags(&manifest)),
+        engine_config(args)?,
+    )?;
     let prompt = args.str("prompt", "the quick ");
     let params = sampling_params(args)?;
     let t0 = std::time::Instant::now();
@@ -969,10 +990,14 @@ fn cmd_bench_decode_pjrt(args: &Args) -> Result<()> {
     let mut dense_mean = None;
     for vname in &variants {
         let v = engine.load_variant(&manifest, vname, Some(&["decode"]))?;
-        let mut model = PjrtModel::new(&engine, v, manifest.batch,
-                                       manifest.model.max_seq,
-                                       manifest.model.vocab,
-                                       manifest.prefill_buckets.clone())?;
+        let mut model = PjrtModel::new(
+            &engine,
+            v,
+            manifest.batch,
+            manifest.model.max_seq,
+            manifest.model.vocab,
+            manifest.prefill_buckets.clone(),
+        )?;
         let tokens = vec![1i32; manifest.batch];
         let mut lat = Samples::new();
         for s in 0..steps {
@@ -986,8 +1011,13 @@ fn cmd_bench_decode_pjrt(args: &Args) -> Result<()> {
             dense_mean = Some(mean);
         }
         let speedup = dense_mean.map(|d| d / mean).unwrap_or(f64::NAN);
-        println!("  {:10} mean {:8.2} ms  p50 {:8.2}  speedup vs dense {:.2}x",
-                 vname, mean, lat.percentile(50.0), speedup);
+        println!(
+            "  {:10} mean {:8.2} ms  p50 {:8.2}  speedup vs dense {:.2}x",
+            vname,
+            mean,
+            lat.percentile(50.0),
+            speedup
+        );
     }
     Ok(())
 }
@@ -1016,9 +1046,14 @@ fn print_manifest_variants(args: &Args) {
         Ok(manifest) => {
             println!(
                 "model {} (d={}, L={}, h={}, act={}), batch {}, max_seq {}",
-                manifest.model.name, manifest.model.d_model,
-                manifest.model.n_layers, manifest.model.d_ff,
-                manifest.model.act, manifest.batch, manifest.model.max_seq);
+                manifest.model.name,
+                manifest.model.d_model,
+                manifest.model.n_layers,
+                manifest.model.d_ff,
+                manifest.model.act,
+                manifest.batch,
+                manifest.model.max_seq
+            );
             for v in &manifest.variants {
                 println!(
                     "  {:10} mode={:6} ratio={:5.1}% fix_capacity={:4} execs={}",

@@ -103,6 +103,7 @@ pub fn render_completion(c: &Completion, variant: &str) -> String {
         ("queue_ms", Json::num(c.queue_ms)),
         ("first_token_ms", Json::num(c.first_token_ms)),
         ("total_ms", Json::num(c.total_ms)),
+        ("prefix_hit_tokens", Json::num(c.prefix_hit_tokens as f64)),
     ])
     .render()
 }
@@ -121,28 +122,36 @@ pub fn render_stats(replicas: &[(String, EngineSnapshot)]) -> String {
                     ("queue_depth", Json::num(s.queue_depth as f64)),
                     ("queue_pressure", Json::num(s.queue_pressure)),
                     ("active_slots", Json::num(s.active_slots as f64)),
-                    ("inflight_prefills",
-                     Json::num(s.inflight_prefills as f64)),
+                    ("inflight_prefills", Json::num(s.inflight_prefills as f64)),
                     ("slots_total", Json::num(s.slots_total as f64)),
                     ("kv_blocks_total", Json::num(s.kv_blocks_total as f64)),
                     ("kv_blocks_used", Json::num(s.kv_blocks_used as f64)),
                     ("block_utilization", Json::num(s.block_utilization)),
                     ("swapped", Json::num(s.swapped as f64)),
                     ("preemptions", Json::num(s.preemptions as f64)),
-                    ("mixed_step_ratio",
-                     s.mixed_step_ratio.map(Json::num).unwrap_or(Json::Null)),
+                    ("mixed_step_ratio", s.mixed_step_ratio.map(Json::num).unwrap_or(Json::Null)),
                     ("mean_occupancy", Json::num(s.mean_occupancy)),
-                    ("tokens_generated",
-                     Json::num(s.tokens_generated as f64)),
+                    ("tokens_generated", Json::num(s.tokens_generated as f64)),
                     ("admitted", Json::num(s.admitted as f64)),
                     ("finished", Json::num(s.finished as f64)),
                     ("iterations", Json::num(s.iterations as f64)),
-                    ("ffn_fallback_rate",
-                     s.ffn_fallback_rate.map(Json::num).unwrap_or(Json::Null)),
-                    ("ffn_last_step_fallback_rate",
-                     s.ffn_last_step_fallback_rate
-                         .map(Json::num)
-                         .unwrap_or(Json::Null)),
+                    (
+                        "ffn_fallback_rate",
+                        s.ffn_fallback_rate.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "ffn_last_step_fallback_rate",
+                        s.ffn_last_step_fallback_rate.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                    ("prefix_cached_blocks", Json::num(s.prefix_cached_blocks as f64)),
+                    (
+                        "prefix_evictable_blocks",
+                        Json::num(s.prefix_evictable_blocks as f64),
+                    ),
+                    ("prefix_hit_tokens", Json::num(s.prefix_hit_tokens as f64)),
+                    ("prefix_shared_blocks", Json::num(s.prefix_shared_blocks as f64)),
+                    ("cow_copies", Json::num(s.cow_copies as f64)),
+                    ("prefix_evictions", Json::num(s.prefix_evictions as f64)),
                 ])
             })),
         ),
@@ -233,31 +242,31 @@ mod tests {
             iterations: 99,
             ffn_fallback_rate: None,
             ffn_last_step_fallback_rate: None,
+            prefix_cached_blocks: 5,
+            prefix_evictable_blocks: 2,
+            prefix_hit_tokens: 120,
+            prefix_shared_blocks: 9,
+            cow_copies: 3,
+            prefix_evictions: 4,
         };
         let s = render_stats(&[("dense".to_string(), snap)]);
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
         let reps = j.get("replicas").and_then(Json::as_arr).unwrap();
         assert_eq!(reps.len(), 1);
-        assert_eq!(reps[0].get("variant").and_then(Json::as_str),
-                   Some("dense"));
+        assert_eq!(reps[0].get("variant").and_then(Json::as_str), Some("dense"));
         assert_eq!(reps[0].get("policy").and_then(Json::as_str), Some("spf"));
-        assert_eq!(reps[0].get("queue_depth").and_then(Json::as_usize),
-                   Some(3));
-        assert_eq!(reps[0].get("tokens_generated").and_then(Json::as_usize),
-                   Some(42));
+        assert_eq!(reps[0].get("queue_depth").and_then(Json::as_usize), Some(3));
+        assert_eq!(reps[0].get("tokens_generated").and_then(Json::as_usize), Some(42));
         // paged-KV serving metrics
-        assert_eq!(reps[0].get("kv_blocks_total").and_then(Json::as_usize),
-                   Some(64));
-        assert_eq!(reps[0].get("kv_blocks_used").and_then(Json::as_usize),
-                   Some(16));
+        assert_eq!(reps[0].get("kv_blocks_total").and_then(Json::as_usize), Some(64));
+        assert_eq!(reps[0].get("kv_blocks_used").and_then(Json::as_usize), Some(16));
         let util = reps[0]
             .get("block_utilization")
             .and_then(Json::as_f64)
             .unwrap();
         assert!((util - 0.25).abs() < 1e-12);
-        assert_eq!(reps[0].get("preemptions").and_then(Json::as_usize),
-                   Some(7));
+        assert_eq!(reps[0].get("preemptions").and_then(Json::as_usize), Some(7));
         assert_eq!(reps[0].get("swapped").and_then(Json::as_usize), Some(1));
         let mixed = reps[0]
             .get("mixed_step_ratio")
@@ -266,6 +275,13 @@ mod tests {
         assert!((mixed - 0.5).abs() < 1e-12);
         // no partially-linear FFN -> explicit null
         assert_eq!(reps[0].get("ffn_fallback_rate"), Some(&Json::Null));
+        // prefix-cache counters
+        assert_eq!(reps[0].get("prefix_cached_blocks").and_then(Json::as_usize), Some(5));
+        assert_eq!(reps[0].get("prefix_evictable_blocks").and_then(Json::as_usize), Some(2));
+        assert_eq!(reps[0].get("prefix_hit_tokens").and_then(Json::as_usize), Some(120));
+        assert_eq!(reps[0].get("prefix_shared_blocks").and_then(Json::as_usize), Some(9));
+        assert_eq!(reps[0].get("cow_copies").and_then(Json::as_usize), Some(3));
+        assert_eq!(reps[0].get("prefix_evictions").and_then(Json::as_usize), Some(4));
     }
 
     #[test]
@@ -290,6 +306,12 @@ mod tests {
             iterations: 1,
             ffn_fallback_rate: Some(0.125),
             ffn_last_step_fallback_rate: Some(0.25),
+            prefix_cached_blocks: 0,
+            prefix_evictable_blocks: 0,
+            prefix_hit_tokens: 0,
+            prefix_shared_blocks: 0,
+            cow_copies: 0,
+            prefix_evictions: 0,
         };
         let s = render_stats(&[("tardis80".to_string(), snap)]);
         let j = Json::parse(&s).unwrap();

@@ -17,8 +17,9 @@ use crate::coordinator::model::StepModel;
 use crate::coordinator::router::Router;
 use crate::util::threadpool::ThreadPool;
 
-use super::protocol::{parse_request, render_completion, render_error,
-                      render_stats, ServerRequest};
+use super::protocol::{
+    parse_request, render_completion, render_error, render_stats, ServerRequest,
+};
 
 enum ToEngine {
     Generate {
@@ -177,8 +178,10 @@ mod tests {
     fn serves_generate_over_tcp() {
         let router = Router::new(vec![(
             "mock".to_string(),
-            InferenceEngine::new(MockModel::new(2, 64, 256, vec![4, 8]),
-                                 EngineConfig::default()),
+            InferenceEngine::new(
+                MockModel::new(2, 64, 256, vec![4, 8]),
+                EngineConfig::default(),
+            ),
         )]);
         // Port 0 = ephemeral; learn the port via a pre-bound listener.
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
@@ -202,8 +205,10 @@ mod tests {
     fn stats_over_tcp_reports_replicas() {
         let router = Router::new(vec![(
             "mock".to_string(),
-            InferenceEngine::new(MockModel::new(2, 64, 256, vec![4, 8]),
-                                 EngineConfig::default()),
+            InferenceEngine::new(
+                MockModel::new(2, 64, 256, vec![4, 8]),
+                EngineConfig::default(),
+            ),
         )]);
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();

@@ -1,0 +1,301 @@
+//! Integration tests for prefix sharing: radix-cache hits must skip
+//! prefill compute for the shared prefix, copy-on-write must isolate
+//! divergent tails, and sharing must never perturb token streams —
+//! across every scheduler policy, both planners, preemption pressure,
+//! and (bitwise, via greedy argmax) the native transformer backend.
+
+use tardis::config::{FfnMode, NativeModelConfig};
+use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::model::{MockModel, NativeModel};
+use tardis::coordinator::request::SamplingParams;
+use tardis::coordinator::scheduler::PolicyKind;
+use tardis::coordinator::StepModel;
+use tardis::prop_assert;
+use tardis::testing::property;
+use tardis::util::rng::Rng;
+
+#[derive(Clone)]
+struct Spec {
+    prompt: Vec<i32>,
+    params: SamplingParams,
+}
+
+fn mock_engine(blocks: usize, block_size: usize, cfg: EngineConfig) -> InferenceEngine<MockModel> {
+    let model = MockModel::new(4, 64, 16, vec![4, 8]).with_kv_layout(blocks, block_size);
+    InferenceEngine::new(model, cfg)
+}
+
+/// Ground truth: one request at a time with the prefix cache OFF, over
+/// the same pressured layout (so context clamping matches).
+fn sequential_unshared(specs: &[Spec], blocks: usize, block_size: usize) -> Vec<Vec<i32>> {
+    let cfg = EngineConfig { prefix_cache: false, ..Default::default() };
+    let mut engine = mock_engine(blocks, block_size, cfg);
+    let out = specs
+        .iter()
+        .map(|s| {
+            engine
+                .generate_sequential(s.prompt.clone(), s.params)
+                .unwrap()
+                .tokens
+        })
+        .collect();
+    assert_eq!(
+        engine.stats.preemptions, 0,
+        "a lone request must never be preempted"
+    );
+    out
+}
+
+#[test]
+fn shared_prompts_replay_identically_across_policies_and_planners() {
+    // Six requests sharing an 8-token prefix (plus distinct tails) over
+    // 6 blocks x 4 tokens and 4 slots: the pool forces preemptions and
+    // cold-leaf cache evictions while later admissions hit the cached
+    // trunk — no combination of policy x planner may change any stream
+    // relative to an unshared, uncontended run.
+    let specs: Vec<Spec> = (0..6)
+        .map(|i| {
+            let mut prompt = vec![9, 9, 9, 9, 3, 3, 3, 3];
+            prompt.extend(std::iter::repeat(1 + i).take(3));
+            Spec {
+                prompt,
+                params: SamplingParams { max_tokens: 8, ..Default::default() },
+            }
+        })
+        .collect();
+    let reference = sequential_unshared(&specs, 6, 4);
+    let mut total_preemptions = 0;
+    let mut total_hits = 0;
+    for kind in PolicyKind::all() {
+        for mixed in [true, false] {
+            let mut cfg = EngineConfig::default();
+            cfg.scheduler.policy = kind;
+            cfg.scheduler.mixed = mixed;
+            let mut engine = mock_engine(6, 4, cfg);
+            assert!(engine.prefix_sharing());
+            let ids: Vec<u64> = specs
+                .iter()
+                .map(|s| engine.submit(s.prompt.clone(), s.params).unwrap())
+                .collect();
+            let done = engine.run_to_completion().unwrap();
+            let streams: Vec<Vec<i32>> = ids
+                .iter()
+                .map(|id| done.iter().find(|c| c.id == *id).unwrap().tokens.clone())
+                .collect();
+            assert_eq!(
+                streams, reference,
+                "policy {kind:?} (mixed={mixed}) diverged with sharing on"
+            );
+            total_preemptions += engine.stats.preemptions;
+            total_hits += engine.stats.prefix_hit_tokens;
+        }
+    }
+    assert!(total_preemptions > 0, "pool pressure must preempt somewhere");
+    assert!(total_hits > 0, "shared prompts must hit the prefix cache");
+}
+
+#[test]
+fn cache_hit_skips_prefill_compute_for_the_shared_prefix() {
+    // Ample pool: a 14-token prompt caches 3 full blocks; re-submitting
+    // the identical prompt must prefill ONLY the 2-token tail (a single
+    // chunk at position 12) and report 12 hit tokens on the completion.
+    let mut engine = mock_engine(16, 4, EngineConfig::default());
+    let prompt: Vec<i32> = (0..14).collect();
+    let params = SamplingParams { max_tokens: 6, ..Default::default() };
+    engine.submit(prompt.clone(), params).unwrap();
+    let first = engine.run_to_completion().unwrap();
+    assert_eq!(first[0].prefix_hit_tokens, 0, "cold cache cannot hit");
+    let mark = engine.model.prefill_log.len();
+
+    engine.submit(prompt, params).unwrap();
+    let second = engine.run_to_completion().unwrap();
+    let tail = &engine.model.prefill_log[mark..];
+    assert_eq!(tail.len(), 1, "hit-covered tokens must not be prefilled");
+    assert_eq!(tail[0].1, 12, "the lone suffix chunk starts at the hit length");
+    assert_eq!(second[0].prefix_hit_tokens, 12);
+    assert_eq!(second[0].tokens, first[0].tokens);
+    assert_eq!(engine.stats.prefix_hit_tokens, 12);
+    assert_eq!(engine.stats.prefix_shared_blocks, 3);
+    assert_eq!(engine.stats.cow_copies, 0, "full-block hit needs no copy");
+}
+
+#[test]
+fn wedged_cache_trunk_cannot_deadlock_the_pool() {
+    // Regression: a live table that shares a trie *descendant* keeps the
+    // rc-1 trunk above it out of the all-free evictable set, and with a
+    // single starved prefill the abort breaker (which wants two) never
+    // fires — before the last-resort cache prune this layout could idle
+    // the pool forever. 7 blocks x 2 tokens: r1 caches a trunk, r2 hits
+    // 4 of its 5 prompt tokens (COW tail) and then needs nearly the
+    // whole pool for its long unique suffix.
+    let specs = [
+        Spec {
+            prompt: vec![9, 9, 9, 9, 9],
+            params: SamplingParams { max_tokens: 3, ..Default::default() },
+        },
+        Spec {
+            prompt: vec![9, 9, 9, 9, 3, 3, 3, 3, 7, 7, 6],
+            params: SamplingParams { max_tokens: 2, ..Default::default() },
+        },
+    ];
+    let reference = sequential_unshared(&specs, 7, 2);
+    let mut engine = mock_engine(7, 2, EngineConfig::default());
+    let ids: Vec<u64> = specs
+        .iter()
+        .map(|s| engine.submit(s.prompt.clone(), s.params).unwrap())
+        .collect();
+    let mut steps = 0usize;
+    while !engine.is_idle() {
+        engine.step().unwrap();
+        steps += 1;
+        assert!(steps < 10_000, "engine made no progress: pool is wedged");
+    }
+    let done = engine.take_completions();
+    let streams: Vec<Vec<i32>> = ids
+        .iter()
+        .map(|id| done.iter().find(|c| c.id == *id).unwrap().tokens.clone())
+        .collect();
+    assert_eq!(streams, reference, "prune breaker must not perturb streams");
+    let s = engine.snapshot();
+    assert_eq!(
+        s.kv_blocks_used, s.prefix_cached_blocks,
+        "a drained engine may hold blocks only through the cache"
+    );
+}
+
+fn native_cfg() -> NativeModelConfig {
+    NativeModelConfig {
+        vocab: 32,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 32,
+        batch: 2,
+        prefill_buckets: vec![4, 8],
+        seed: 0x9A6ED,
+        threads: 0,
+        kv_block_size: 4,
+        kv_blocks: 0, // auto-sized: no pressure, isolate the sharing math
+    }
+}
+
+#[test]
+fn native_cow_divergence_is_bitwise_identical_to_unshared_runs() {
+    // Real transformer math. A caches 2 full blocks; B shares 6 tokens
+    // — a partial hit into A's second block — so admission must COW
+    // that block before B's suffix lands in it. Greedy decoding is
+    // argmax over logits, so stream equality with the unshared engine
+    // means reads through shared blocks and the copied tail reproduced
+    // the logits bitwise (per-row kernel math is independent of chunk
+    // shape and batch-mates).
+    let a: Vec<i32> = vec![3, 7, 11, 2, 5, 9, 12, 8, 1];
+    let b: Vec<i32> = vec![3, 7, 11, 2, 5, 9, 2, 2, 4];
+    let params = SamplingParams { max_tokens: 10, ..Default::default() };
+    let run = |sharing: bool| {
+        let model = NativeModel::new(native_cfg(), &FfnMode::Dense);
+        assert_eq!(model.kv_layout().block_size, 4);
+        let cfg = EngineConfig { prefix_cache: sharing, ..Default::default() };
+        let mut e = InferenceEngine::new(model, cfg);
+        assert_eq!(e.prefix_sharing(), sharing);
+        // Drain between submissions so B's admission always sees A's
+        // blocks in the cache (when sharing is on).
+        let sa = e.generate_sequential(a.clone(), params).unwrap().tokens;
+        let sb = e.generate_sequential(b.clone(), params).unwrap().tokens;
+        (sa, sb, e.stats.clone())
+    };
+    let (ref_a, ref_b, off) = run(false);
+    assert_eq!(off.prefix_hit_tokens, 0);
+    let (shared_a, shared_b, on) = run(true);
+    assert_eq!(shared_a, ref_a, "first request has nothing to share");
+    assert_eq!(
+        shared_b, ref_b,
+        "COW divergence changed the native token stream"
+    );
+    assert_eq!(on.prefix_hit_tokens, 6, "4 full-block + 2 partial-tail tokens");
+    assert_eq!(on.prefix_shared_blocks, 2);
+    assert_eq!(on.cow_copies, 1, "the partial tail block must be copied");
+}
+
+#[test]
+fn native_full_resubmit_skips_all_but_one_prefill_token() {
+    // Identical re-submission: 9 tokens cache 2 full blocks, so the
+    // second run hits 8 tokens with no COW (the 9th must still run
+    // prefill — the sampler needs its logits) and decodes identically.
+    let prompt: Vec<i32> = vec![3, 7, 11, 2, 5, 9, 12, 8, 1];
+    let params = SamplingParams { max_tokens: 10, ..Default::default() };
+    let model = NativeModel::new(native_cfg(), &FfnMode::Dense);
+    let mut e = InferenceEngine::new(model, EngineConfig::default());
+    let first = e.generate_sequential(prompt.clone(), params).unwrap().tokens;
+    let again = e.generate_sequential(prompt, params).unwrap().tokens;
+    assert_eq!(again, first, "cache hit changed a native stream");
+    assert_eq!(e.stats.prefix_hit_tokens, 8);
+    assert_eq!(e.stats.cow_copies, 0);
+}
+
+#[test]
+fn prop_sharing_preserves_streams_and_conserves_blocks() {
+    // Random overlapping traffic (prompts drawn from a few shared
+    // prefix templates plus random tails) over random undersized pools:
+    // with sharing on, every policy reproduces the unshared sequential
+    // reference, and after draining the pool holds exactly the cache's
+    // blocks — all of them reclaimable.
+    property("prefix sharing invariance", 12, |rng: &mut Rng| {
+        let blocks = 5 + rng.usize_below(4);
+        let block_size = 4;
+        let templates: [&[i32]; 3] = [&[], &[9, 9, 9, 9], &[9, 9, 9, 9, 3, 3, 3, 3]];
+        let n = 2 + rng.usize_below(4);
+        let specs: Vec<Spec> = (0..n)
+            .map(|_| {
+                let mut prompt = templates[rng.usize_below(3)].to_vec();
+                let tail = 1 + rng.usize_below(5);
+                prompt.extend((0..tail).map(|_| rng.below(16) as i32));
+                let params = SamplingParams {
+                    temperature: if rng.bool(0.5) { 0.0 } else { 0.8 },
+                    max_tokens: 1 + rng.usize_below(6),
+                    seed: rng.next_u64(),
+                    priority: rng.below(5) as i32,
+                    ..Default::default()
+                };
+                Spec { prompt, params }
+            })
+            .collect();
+        let reference = sequential_unshared(&specs, blocks, block_size);
+        for kind in PolicyKind::all() {
+            for mixed in [true, false] {
+                let mut cfg = EngineConfig::default();
+                cfg.scheduler.policy = kind;
+                cfg.scheduler.mixed = mixed;
+                let mut engine = mock_engine(blocks, block_size, cfg);
+                let ids: Vec<u64> = specs
+                    .iter()
+                    .map(|s| engine.submit(s.prompt.clone(), s.params).unwrap())
+                    .collect();
+                let done = engine.run_to_completion().unwrap();
+                let streams: Vec<Vec<i32>> = ids
+                    .iter()
+                    .map(|id| {
+                        done.iter().find(|c| c.id == *id).unwrap().tokens.clone()
+                    })
+                    .collect();
+                prop_assert!(
+                    streams == reference,
+                    "policy {kind:?} (mixed={mixed}) diverged with sharing: \
+                     {streams:?} vs {reference:?}"
+                );
+                let s = engine.snapshot();
+                prop_assert!(
+                    s.kv_blocks_used == s.prefix_cached_blocks,
+                    "leaked {} blocks ({} cached)",
+                    s.kv_blocks_used,
+                    s.prefix_cached_blocks
+                );
+                prop_assert!(s.prefix_evictable_blocks == s.prefix_cached_blocks);
+                prop_assert!(s.swapped == 0);
+                prop_assert!(engine.stats.max_blocks_used <= blocks);
+                prop_assert!(engine.stats.resumes == engine.stats.preemptions);
+            }
+        }
+        Ok(())
+    });
+}
