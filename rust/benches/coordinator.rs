@@ -25,14 +25,18 @@
 //! Run: `cargo bench --bench coordinator`.
 
 use std::collections::BTreeMap;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use tardis::bench::{black_box, Bench};
 use tardis::coordinator::batcher::Batcher;
 use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::health::FaultPlan;
 use tardis::coordinator::kv::BlockAllocator;
 use tardis::coordinator::model::MockModel;
 use tardis::coordinator::request::SamplingParams;
+use tardis::coordinator::router::{
+    FrontDoor, FrontDoorConfig, FrontEnd, ReplicaFactory, SubmitOutcome,
+};
 use tardis::coordinator::sampler::sample;
 use tardis::coordinator::scheduler::{PolicyKind, SchedulerConfig};
 use tardis::server::protocol::{parse_request, render_error};
@@ -199,11 +203,111 @@ fn run_shared_prefix(sharing: bool) -> PrefixResult {
     }
 }
 
+const FRONT_REQUESTS: usize = 48;
+
+struct FrontDoorResult {
+    served: usize,
+    lost: usize,
+    wall_ms: f64,
+    throughput_rps: f64,
+    shed: u64,
+    replays: u64,
+    replica_failures: u64,
+    replica_restarts: u64,
+    journal_appends: u64,
+    journal_bytes: u64,
+    journal_errors: u64,
+}
+
+/// Drive the fault-tolerant front door (2 worker-thread replicas, tight
+/// per-replica cap, journal on) through a firehose of requests —
+/// optionally killing one replica mid-flight — and account for every
+/// admission. `lost` must be 0 in both modes: sheds are re-submitted
+/// until admitted, and killed-replica work replays onto the survivor.
+fn run_front_door(chaos: bool) -> FrontDoorResult {
+    let journal = std::env::temp_dir().join(format!(
+        "tardis-bench-front-{}-{}",
+        if chaos { "chaos" } else { "clean" },
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&journal);
+    let factory = || -> ReplicaFactory<MockModel> {
+        Box::new(|| {
+            let mut m = MockModel::new(8, 512, 256, vec![16, 64]);
+            m.spin_per_call = Duration::from_micros(150);
+            Ok(InferenceEngine::new(m, EngineConfig::default()))
+        })
+    };
+    let cfg = FrontDoorConfig {
+        queue_cap: 8,
+        journal: Some(journal.clone()),
+        fault_plan: if chaos {
+            FaultPlan::parse("kill:1@20").unwrap()
+        } else {
+            FaultPlan::default()
+        },
+        probe_base: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let mut front = FrontDoor::new(
+        vec![("mock".to_string(), factory()), ("mock".to_string(), factory())],
+        cfg,
+    )
+    .unwrap();
+    let mut rng = Rng::new(0xF90D);
+    let prompts: Vec<Vec<i32>> = (0..FRONT_REQUESTS)
+        .map(|_| {
+            let len = 4 + rng.usize_below(40);
+            (0..len).map(|i| 1 + (i % 200) as i32).collect()
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    while next < prompts.len() {
+        let outcome = front.submit_front(
+            None,
+            prompts[next].clone(),
+            SamplingParams { max_tokens: 16, ..Default::default() },
+            false,
+        );
+        match outcome {
+            SubmitOutcome::Admitted { .. } => next += 1,
+            SubmitOutcome::Shed { .. } => {
+                // Backpressure: make progress, then re-offer.
+                front.pump(Duration::from_millis(1)).unwrap();
+            }
+            SubmitOutcome::Rejected(e) => panic!("unexpected rejection: {e}"),
+        }
+    }
+    let replies = front.drain(Duration::from_secs(60)).unwrap();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let served = replies.iter().filter(|r| r.result.is_ok()).count();
+    let snap = front.front_snapshot();
+    let _ = std::fs::remove_file(&journal);
+    FrontDoorResult {
+        served,
+        lost: FRONT_REQUESTS - served,
+        wall_ms,
+        throughput_rps: served as f64 / (wall_ms / 1e3),
+        shed: snap.front.shed,
+        replays: snap.front.replays,
+        replica_failures: snap.front.replica_failures,
+        replica_restarts: snap.front.replica_restarts,
+        journal_appends: snap.front.journal_appends,
+        journal_bytes: snap.front.journal_bytes,
+        journal_errors: snap.front.journal_errors,
+    }
+}
+
 /// Merge the bursty and shared-prefix tables into BENCH_native_ffn.json
 /// (or $TARDIS_BENCH_JSON) under the `"coordinator"` key — one write, so
 /// neither table clobbers the other — preserving whatever `bench-decode`
 /// wrote at the top level.
-fn write_bench_json(rows: &[(&str, &BurstyResult)], prefix: &[(&str, &PrefixResult)]) {
+fn write_bench_json(
+    rows: &[(&str, &BurstyResult)],
+    prefix: &[(&str, &PrefixResult)],
+    fd: &[(&str, &FrontDoorResult)],
+) {
     let path = std::env::var("TARDIS_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_native_ffn.json".to_string());
     let mut root = match std::fs::read_to_string(&path)
@@ -266,6 +370,45 @@ fn write_bench_json(rows: &[(&str, &BurstyResult)], prefix: &[(&str, &PrefixResu
     );
     pshare.insert("cases".to_string(), Json::Obj(pcases));
     coord.insert("prefix_sharing".to_string(), Json::Obj(pshare));
+    let mut fcases = BTreeMap::new();
+    for (name, r) in fd {
+        let mut o = BTreeMap::new();
+        o.insert("served".to_string(), Json::Num(r.served as f64));
+        o.insert("lost".to_string(), Json::Num(r.lost as f64));
+        o.insert("wall_ms".to_string(), Json::Num(r.wall_ms));
+        o.insert("throughput_rps".to_string(), Json::Num(r.throughput_rps));
+        o.insert("shed".to_string(), Json::Num(r.shed as f64));
+        o.insert("replays".to_string(), Json::Num(r.replays as f64));
+        o.insert(
+            "replica_failures".to_string(),
+            Json::Num(r.replica_failures as f64),
+        );
+        o.insert(
+            "replica_restarts".to_string(),
+            Json::Num(r.replica_restarts as f64),
+        );
+        o.insert(
+            "journal_appends".to_string(),
+            Json::Num(r.journal_appends as f64),
+        );
+        o.insert("journal_bytes".to_string(), Json::Num(r.journal_bytes as f64));
+        o.insert(
+            "journal_errors".to_string(),
+            Json::Num(r.journal_errors as f64),
+        );
+        fcases.insert(name.to_string(), Json::Obj(o));
+    }
+    let mut fdoor = BTreeMap::new();
+    fdoor.insert(
+        "workload".to_string(),
+        Json::Str(format!(
+            "{FRONT_REQUESTS} requests firehosed at 2 worker-thread mock \
+             replicas (cap 8 each, journal on), 16 tokens each, \
+             150us/model-call mock; chaos case kills replica 1 at step 20"
+        )),
+    );
+    fdoor.insert("cases".to_string(), Json::Obj(fcases));
+    coord.insert("front_door".to_string(), Json::Obj(fdoor));
     root.insert("coordinator".to_string(), Json::Obj(coord));
     let body = format!("{}\n", Json::Obj(root));
     match std::fs::write(&path, body) {
@@ -463,9 +606,60 @@ fn main() {
         (prefix_rows[1].1.ttft_mean_ms / prefix_rows[0].1.ttft_mean_ms - 1.0) * 100.0
     );
 
+    // -- fault-tolerant front door: clean vs chaos -------------------------
+    println!();
+    println!(
+        "front door — {FRONT_REQUESTS} requests firehosed at 2 \
+         worker-thread replicas (cap 8 each, admission journal on), 16 \
+         generated tokens each, 150µs/model-call mock; the chaos case \
+         kills replica 1 at its 20th step:"
+    );
+    println!(
+        "  {:24} {:>7} {:>5} {:>10} {:>9} {:>6} {:>8} {:>6} {:>8} {:>11}",
+        "config", "served", "lost", "wall", "req/s", "shed", "replays", "fails",
+        "restarts", "journal"
+    );
+    let fd_rows: Vec<(&str, FrontDoorResult)> = vec![
+        ("clean", run_front_door(false)),
+        ("chaos (kill replica 1)", run_front_door(true)),
+    ];
+    for (name, r) in &fd_rows {
+        println!(
+            "  {name:24} {:>7} {:>5} {:>7.1} ms {:>9.1} {:>6} {:>8} {:>6} {:>8} \
+             {:>8} B",
+            r.served,
+            r.lost,
+            r.wall_ms,
+            r.throughput_rps,
+            r.shed,
+            r.replays,
+            r.replica_failures,
+            r.replica_restarts,
+            r.journal_bytes,
+        );
+    }
+
+    // CI chaos lane: no admitted request may be lost, in either mode.
+    // Without the env var a violation still prints loudly, but only the
+    // lane turns it into an exit code.
+    let lost: usize = fd_rows.iter().map(|(_, r)| r.lost).sum();
+    if std::env::var("TARDIS_ASSERT_ZERO_LOST").is_ok() {
+        if lost > 0 {
+            eprintln!("FAIL: front door lost {lost} admitted requests");
+            std::process::exit(1);
+        }
+        println!(
+            "zero-lost check: every admitted request completed in both the \
+             clean and chaos runs"
+        );
+    } else if lost > 0 {
+        eprintln!("WARNING: front door lost {lost} admitted requests");
+    }
+
     write_bench_json(
         &rows.iter().map(|(n, r)| (*n, r)).collect::<Vec<_>>(),
         &prefix_rows.iter().map(|(n, r)| (*n, r)).collect::<Vec<_>>(),
+        &fd_rows.iter().map(|(n, r)| (*n, r)).collect::<Vec<_>>(),
     );
 
     // CI lane: the mixed planner must not lose to the segregated

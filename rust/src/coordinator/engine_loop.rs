@@ -35,6 +35,37 @@ use super::scheduler::{Abort, Admission, ChunkSpec, DecodeBatch, DecodeSlotView,
 use super::scheduler::{PrefillView, QueuedRequest, Resume, SchedView, Scheduler};
 use super::scheduler::{SchedulerConfig, StepOutcome, StepPlan, SwappedView};
 
+/// Typed admission failure, so callers (the front door's shed path) can
+/// tell retryable backpressure from a permanently bad request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The admission queue is at capacity — back off and retry.
+    Backpressure { queue_depth: usize, capacity: usize },
+    /// Malformed request; retrying can never succeed.
+    Invalid(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Backpressure { .. } => write!(f, "queue full (backpressure)"),
+            SubmitError::Invalid(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// An injected one-shot step failure (the chaos harness's kill switch);
+/// see [`crate::coordinator::health::FaultPlan`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepFault {
+    /// `step()` panics — exercises the worker's `catch_unwind` isolation.
+    Panic,
+    /// `step()` returns an error.
+    Error,
+}
+
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub queue_capacity: usize,
@@ -268,6 +299,9 @@ pub struct InferenceEngine<M: StepModel> {
     /// starving decode growth); suppresses repinning until a step does
     /// work again.
     pins_suspended: bool,
+    /// One-shot injected step faults by iteration number (chaos
+    /// harness); consumed when fired.
+    step_faults: Vec<(u64, StepFault)>,
     pub stats: EngineStats,
     pub decode_latency_ms: Samples,
 }
@@ -296,6 +330,7 @@ impl<M: StepModel> InferenceEngine<M> {
             sharing,
             queue_pins: HashMap::new(),
             pins_suspended: false,
+            step_faults: Vec::new(),
             stats: EngineStats::default(),
             decode_latency_ms: Samples::new(),
             model,
@@ -356,17 +391,41 @@ impl<M: StepModel> InferenceEngine<M> {
 
     /// Submit a request; fails with backpressure when the queue is full.
     pub fn submit(&mut self, prompt: Vec<i32>, params: SamplingParams) -> Result<RequestId> {
+        self.try_submit(prompt, params).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// [`submit`](Self::submit) with a typed error, so the front door
+    /// can shed on backpressure and reject invalid requests outright.
+    pub fn try_submit(
+        &mut self,
+        prompt: Vec<i32>,
+        params: SamplingParams,
+    ) -> Result<RequestId, SubmitError> {
         let max_prompt = self.max_request_seq().saturating_sub(1);
         if prompt.is_empty() || prompt.len() > max_prompt {
-            return Err(anyhow!("prompt length {} not in 1..={max_prompt}", prompt.len()));
+            return Err(SubmitError::Invalid(format!(
+                "prompt length {} not in 1..={max_prompt}",
+                prompt.len()
+            )));
         }
         let id = self.next_id;
         self.next_id += 1;
         let req = Request::new(id, prompt, params);
-        self.queue
-            .push(req)
-            .map_err(|QueueFull(_)| anyhow!("queue full (backpressure)"))?;
+        self.queue.push(req).map_err(|QueueFull(_)| {
+            self.next_id -= 1;
+            SubmitError::Backpressure {
+                queue_depth: self.queue.len(),
+                capacity: self.queue.capacity(),
+            }
+        })?;
         Ok(id)
+    }
+
+    /// Arm a one-shot injected fault that fires when `step()` runs
+    /// iteration number `iteration` (1-based, matching
+    /// `stats.iterations`).
+    pub fn inject_step_fault(&mut self, iteration: u64, fault: StepFault) {
+        self.step_faults.push((iteration, fault));
     }
 
     /// Pop any completions produced so far.
@@ -385,6 +444,17 @@ impl<M: StepModel> InferenceEngine<M> {
     /// state and execute it. Returns what the plan actually did.
     pub fn step(&mut self) -> Result<StepOutcome> {
         self.stats.iterations += 1;
+        if let Some(pos) =
+            self.step_faults.iter().position(|&(it, _)| it == self.stats.iterations)
+        {
+            let (it, fault) = self.step_faults.swap_remove(pos);
+            match fault {
+                StepFault::Panic => panic!("injected fault: panic at iteration {it}"),
+                StepFault::Error => {
+                    return Err(anyhow!("injected fault: step error at iteration {it}"))
+                }
+            }
+        }
         let before = self.model.ffn_telemetry();
         let plan = self.make_plan();
         let outcome = self.execute_plan(plan)?;

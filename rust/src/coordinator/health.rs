@@ -1,0 +1,328 @@
+//! Replica health state machine + deterministic fault injection.
+//!
+//! [`HealthTracker`] is the per-replica half of the front door's failure
+//! isolation: a replica whose worker panics or errors goes
+//! Healthy→Degraded (and →Quarantined after repeated failures), is
+//! routed around while down, and is probed for restart on an
+//! exponential backoff. The first completion served by a restarted
+//! replica proves it out and returns it to Healthy.
+//!
+//! [`FaultPlan`] makes chaos scenarios reproducible unit tests: a parsed
+//! plan (`TARDIS_FAULT_PLAN` env or programmatic) injects one-shot
+//! faults — kill replica i at engine step k, fail a step with an error,
+//! drop a connection mid-stream, fail a journal append — at exact,
+//! deterministic points in the pipeline.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::engine_loop::StepFault;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Healthy,
+    /// Failed recently (or restarted and not yet proven); routed to
+    /// only when healthier replicas are busier.
+    Degraded,
+    /// Repeated failures; restart probes back off to the maximum pace.
+    Quarantined,
+}
+
+impl HealthState {
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Quarantined => "quarantined",
+        }
+    }
+
+    /// Routing preference rank (lower routes first at equal load).
+    pub fn rank(self) -> u8 {
+        match self {
+            HealthState::Healthy => 0,
+            HealthState::Degraded => 1,
+            HealthState::Quarantined => 2,
+        }
+    }
+}
+
+/// Failures before Degraded escalates to Quarantined.
+const QUARANTINE_AFTER: u32 = 3;
+
+#[derive(Debug, Clone)]
+pub struct HealthTracker {
+    state: HealthState,
+    alive: bool,
+    consecutive_failures: u32,
+    pub failures: u64,
+    pub restarts: u64,
+    next_probe: Option<Instant>,
+    probe_base: Duration,
+    probe_max: Duration,
+}
+
+impl HealthTracker {
+    pub fn new(probe_base: Duration, probe_max: Duration) -> HealthTracker {
+        HealthTracker {
+            state: HealthState::Healthy,
+            alive: true,
+            consecutive_failures: 0,
+            failures: 0,
+            restarts: 0,
+            next_probe: None,
+            probe_base,
+            probe_max,
+        }
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive
+    }
+
+    /// The worker died: mark down and schedule a restart probe at
+    /// `probe_base * 2^(failures-1)`, capped at `probe_max`.
+    pub fn on_failure(&mut self, now: Instant) {
+        self.failures += 1;
+        self.consecutive_failures += 1;
+        self.alive = false;
+        self.state = if self.consecutive_failures >= QUARANTINE_AFTER {
+            HealthState::Quarantined
+        } else {
+            HealthState::Degraded
+        };
+        let shift = self.consecutive_failures.saturating_sub(1).min(16);
+        let delay = self
+            .probe_base
+            .saturating_mul(1u32 << shift)
+            .min(self.probe_max);
+        self.next_probe = Some(now + delay);
+    }
+
+    pub fn probe_due(&self, now: Instant) -> bool {
+        !self.alive && self.next_probe.is_some_and(|t| now >= t)
+    }
+
+    /// Backoff remaining before the next restart probe (None when alive
+    /// or due now) — the basis for `retry_after_ms` when every candidate
+    /// replica is down.
+    pub fn backoff_remaining(&self, now: Instant) -> Option<Duration> {
+        if self.alive {
+            return None;
+        }
+        self.next_probe.map(|t| t.saturating_duration_since(now))
+    }
+
+    /// A fresh worker was spawned; stays Degraded/Quarantined until a
+    /// completion proves it out.
+    pub fn on_restart(&mut self) {
+        self.alive = true;
+        self.restarts += 1;
+        self.next_probe = None;
+    }
+
+    /// A completion was served by this replica.
+    pub fn on_success(&mut self) {
+        if self.alive {
+            self.consecutive_failures = 0;
+            self.state = HealthState::Healthy;
+        }
+    }
+}
+
+/// One injected fault. All faults are one-shot: consumed when armed or
+/// fired, so a restarted replica comes back clean.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic inside `engine.step()` when replica `replica` reaches
+    /// engine iteration `step` (exercises `catch_unwind` + replay).
+    Kill { replica: usize, step: u64 },
+    /// `engine.step()` returns an error instead of panicking.
+    FailStep { replica: usize, step: u64 },
+    /// Drop the reply channel of the `admit`-th accepted request
+    /// (0-based): the client vanishes mid-stream.
+    DropConn { admit: u64 },
+    /// Fail the `append`-th journal write (0-based).
+    JournalError { append: u64 },
+}
+
+/// A deterministic chaos scenario: a list of one-shot faults, parseable
+/// from `TARDIS_FAULT_PLAN`, e.g.
+/// `kill:1@40,fail:0@10,dropconn@3,journal@2`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Parse `TARDIS_FAULT_PLAN` (empty plan when unset).
+    pub fn from_env() -> Result<FaultPlan> {
+        match std::env::var("TARDIS_FAULT_PLAN") {
+            Ok(spec) if !spec.trim().is_empty() => FaultPlan::parse(&spec),
+            _ => Ok(FaultPlan::default()),
+        }
+    }
+
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            faults.push(parse_fault(part)?);
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Remove and return the step faults aimed at `replica` — armed into
+    /// the worker at spawn, so a restarted incarnation is clean.
+    pub fn take_step_faults(&mut self, replica: usize) -> Vec<(u64, StepFault)> {
+        let mut out = Vec::new();
+        self.faults.retain(|f| match *f {
+            Fault::Kill { replica: r, step } if r == replica => {
+                out.push((step, StepFault::Panic));
+                false
+            }
+            Fault::FailStep { replica: r, step } if r == replica => {
+                out.push((step, StepFault::Error));
+                false
+            }
+            _ => true,
+        });
+        out
+    }
+
+    /// Whether the reply of admission number `admit` should be dropped.
+    pub fn take_drop_conn(&mut self, admit: u64) -> bool {
+        let before = self.faults.len();
+        self.faults
+            .retain(|f| !matches!(*f, Fault::DropConn { admit: a } if a == admit));
+        self.faults.len() != before
+    }
+
+    /// Remove and return every injected journal-append failure index.
+    pub fn take_journal_errors(&mut self) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.faults.retain(|f| match *f {
+            Fault::JournalError { append } => {
+                out.push(append);
+                false
+            }
+            _ => true,
+        });
+        out
+    }
+}
+
+fn parse_fault(part: &str) -> Result<Fault> {
+    let bad = || anyhow!("bad fault {part:?} (expected kill:R@S, fail:R@S, dropconn@N, journal@N)");
+    if let Some(rest) = part.strip_prefix("kill:").or_else(|| part.strip_prefix("fail:")) {
+        let (r, s) = rest.split_once('@').ok_or_else(bad)?;
+        let replica = r.parse::<usize>().map_err(|_| bad())?;
+        let step = s.parse::<u64>().map_err(|_| bad())?;
+        return Ok(if part.starts_with("kill:") {
+            Fault::Kill { replica, step }
+        } else {
+            Fault::FailStep { replica, step }
+        });
+    }
+    if let Some(n) = part.strip_prefix("dropconn@") {
+        return Ok(Fault::DropConn { admit: n.parse().map_err(|_| bad())? });
+    }
+    if let Some(n) = part.strip_prefix("journal@") {
+        return Ok(Fault::JournalError { append: n.parse().map_err(|_| bad())? });
+    }
+    Err(bad())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracker() -> HealthTracker {
+        HealthTracker::new(Duration::from_millis(10), Duration::from_millis(80))
+    }
+
+    #[test]
+    fn degrades_then_quarantines() {
+        let mut h = tracker();
+        let t0 = Instant::now();
+        assert_eq!(h.state(), HealthState::Healthy);
+        h.on_failure(t0);
+        assert_eq!(h.state(), HealthState::Degraded);
+        assert!(!h.is_alive());
+        h.on_restart();
+        h.on_failure(t0);
+        h.on_restart();
+        h.on_failure(t0);
+        assert_eq!(h.state(), HealthState::Quarantined);
+        assert_eq!(h.failures, 3);
+        assert_eq!(h.restarts, 2);
+    }
+
+    #[test]
+    fn success_after_restart_returns_healthy() {
+        let mut h = tracker();
+        h.on_failure(Instant::now());
+        h.on_success(); // dead replicas cannot prove themselves
+        assert_eq!(h.state(), HealthState::Degraded);
+        h.on_restart();
+        h.on_success();
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert!(h.is_alive());
+    }
+
+    #[test]
+    fn probe_backoff_doubles_and_caps() {
+        let mut h = tracker();
+        let t0 = Instant::now();
+        h.on_failure(t0);
+        assert!(!h.probe_due(t0));
+        assert!(h.probe_due(t0 + Duration::from_millis(10)));
+        h.on_restart();
+        h.on_failure(t0);
+        assert!(!h.probe_due(t0 + Duration::from_millis(10)));
+        assert!(h.probe_due(t0 + Duration::from_millis(20)));
+        for _ in 0..6 {
+            h.on_restart();
+            h.on_failure(t0);
+        }
+        // Capped at probe_max.
+        assert!(h.probe_due(t0 + Duration::from_millis(80)));
+    }
+
+    #[test]
+    fn parses_fault_plan() {
+        let plan = FaultPlan::parse("kill:1@40, fail:0@10,dropconn@3,journal@2").unwrap();
+        assert_eq!(plan.faults.len(), 4);
+        assert_eq!(plan.faults[0], Fault::Kill { replica: 1, step: 40 });
+        assert_eq!(plan.faults[1], Fault::FailStep { replica: 0, step: 10 });
+        assert_eq!(plan.faults[2], Fault::DropConn { admit: 3 });
+        assert_eq!(plan.faults[3], Fault::JournalError { append: 2 });
+        assert!(FaultPlan::parse("explode@9").is_err());
+        assert!(FaultPlan::parse("kill:x@2").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn take_consumes_faults_once() {
+        let mut plan = FaultPlan::parse("kill:1@40,fail:1@50,journal@2,dropconn@0").unwrap();
+        let armed = plan.take_step_faults(1);
+        assert_eq!(armed, vec![(40, StepFault::Panic), (50, StepFault::Error)]);
+        assert!(plan.take_step_faults(1).is_empty());
+        assert!(plan.take_drop_conn(0));
+        assert!(!plan.take_drop_conn(0));
+        assert_eq!(plan.take_journal_errors(), vec![2]);
+        assert!(plan.is_empty());
+    }
+}

@@ -1,0 +1,327 @@
+//! Durable admission journal: an append-only JSONL write-ahead log.
+//!
+//! The front door records every admission (ticket, prompt tokens,
+//! sampling params, variant pin) *before* dispatching it to a replica,
+//! and every completion after it. Recovery replays the log and returns
+//! the admitted-but-not-completed set, so a crashed process (or a killed
+//! replica whose in-flight work the front door replays live) loses zero
+//! admitted requests.
+//!
+//! Format — one object per line, two event kinds:
+//!
+//! ```text
+//! {"e":"admit","ticket":7,"prompt":[104,105],"max_tokens":8,
+//!  "temperature":0,"top_k":0,"seed":0,"priority":0,"variant":"mock"}
+//! {"e":"done","ticket":7,"reason":"length"}
+//! ```
+//!
+//! A truncated or unparsable *final* line is tolerated silently — that is
+//! the normal artifact of dying mid-append. Unparsable lines anywhere
+//! else mean the file was corrupted at rest and recovery refuses to
+//! guess. Appends are flushed per line; an append failure degrades to a
+//! counter (`errors`) rather than refusing service — availability wins
+//! over durability for the tail of the log.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::request::SamplingParams;
+use crate::util::json::Json;
+
+/// An admission as recorded in (and recovered from) the journal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalEntry {
+    pub ticket: u64,
+    pub prompt: Vec<i32>,
+    pub params: SamplingParams,
+    /// Replica-variant pin, when the client asked for one.
+    pub variant: Option<String>,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JournalStats {
+    pub appends: u64,
+    pub bytes: u64,
+    /// Failed appends (I/O errors and injected faults). The admission
+    /// proceeds; only its durability is lost.
+    pub errors: u64,
+}
+
+/// What recovery found, for logs and tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    pub admits: u64,
+    pub dones: u64,
+    /// The final line was truncated/unparsable (normal crash artifact).
+    pub truncated_tail: bool,
+}
+
+pub struct Journal {
+    path: PathBuf,
+    file: File,
+    pub stats: JournalStats,
+    /// Injected fault: append indices (0-based) that fail without
+    /// writing. See [`crate::coordinator::health::FaultPlan`].
+    fail_appends: Vec<u64>,
+}
+
+impl Journal {
+    /// Open for appending (creating the file if needed).
+    pub fn open(path: &Path) -> Result<Journal> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open journal {}", path.display()))?;
+        Ok(Journal {
+            path: path.to_path_buf(),
+            file,
+            stats: JournalStats::default(),
+            fail_appends: Vec::new(),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Install injected append failures (chaos harness), by 0-based
+    /// append index counted over this handle's lifetime.
+    pub fn inject_fail_appends(&mut self, idxs: Vec<u64>) {
+        self.fail_appends = idxs;
+    }
+
+    /// Replay an existing journal: every admission without a matching
+    /// completion, sorted by ticket, plus the next unused ticket.
+    pub fn recover(path: &Path) -> Result<(Vec<JournalEntry>, u64, RecoveryReport)> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read journal {}", path.display()))?;
+        let lines: Vec<&str> = text.lines().collect();
+        let mut pending: Vec<JournalEntry> = Vec::new();
+        let mut report = RecoveryReport::default();
+        let mut max_ticket = 0u64;
+        for (i, line) in lines.iter().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let last = i + 1 == lines.len();
+            let parsed = Json::parse(line).ok().and_then(|j| parse_event(&j));
+            let Some(event) = parsed else {
+                if last {
+                    // Normal crash artifact: died mid-append.
+                    report.truncated_tail = true;
+                    continue;
+                }
+                return Err(anyhow!(
+                    "journal {} corrupt at line {}: {line:?}",
+                    path.display(),
+                    i + 1
+                ));
+            };
+            match event {
+                Event::Admit(e) => {
+                    max_ticket = max_ticket.max(e.ticket);
+                    report.admits += 1;
+                    // Idempotent on duplicate admits (re-journaled replays).
+                    pending.retain(|p| p.ticket != e.ticket);
+                    pending.push(e);
+                }
+                Event::Done(ticket) => {
+                    max_ticket = max_ticket.max(ticket);
+                    report.dones += 1;
+                    pending.retain(|p| p.ticket != ticket);
+                }
+            }
+        }
+        pending.sort_by_key(|e| e.ticket);
+        Ok((pending, max_ticket + 1, report))
+    }
+
+    pub fn append_admit(&mut self, e: &JournalEntry) -> Result<()> {
+        let mut fields = vec![
+            ("e", Json::str("admit")),
+            ("ticket", Json::num(e.ticket as f64)),
+            (
+                "prompt",
+                Json::arr(e.prompt.iter().map(|&t| Json::num(t as f64))),
+            ),
+            ("temperature", Json::num(e.params.temperature as f64)),
+            ("top_k", Json::num(e.params.top_k as f64)),
+            ("max_tokens", Json::num(e.params.max_tokens as f64)),
+            ("seed", Json::num(e.params.seed as f64)),
+            ("priority", Json::num(e.params.priority as f64)),
+        ];
+        if let Some(stop) = e.params.stop_token {
+            fields.push(("stop_token", Json::num(stop as f64)));
+        }
+        if let Some(v) = &e.variant {
+            fields.push(("variant", Json::str(v)));
+        }
+        self.append_line(Json::obj(fields).render())
+    }
+
+    pub fn append_done(&mut self, ticket: u64, reason: &str) -> Result<()> {
+        self.append_line(
+            Json::obj(vec![
+                ("e", Json::str("done")),
+                ("ticket", Json::num(ticket as f64)),
+                ("reason", Json::str(reason)),
+            ])
+            .render(),
+        )
+    }
+
+    fn append_line(&mut self, line: String) -> Result<()> {
+        let idx = self.stats.appends;
+        self.stats.appends += 1;
+        if let Some(pos) = self.fail_appends.iter().position(|&i| i == idx) {
+            self.fail_appends.swap_remove(pos);
+            self.stats.errors += 1;
+            return Err(anyhow!("injected journal write fault (append {idx})"));
+        }
+        let res = self
+            .file
+            .write_all(line.as_bytes())
+            .and_then(|()| self.file.write_all(b"\n"))
+            .and_then(|()| self.file.flush());
+        match res {
+            Ok(()) => {
+                self.stats.bytes += line.len() as u64 + 1;
+                Ok(())
+            }
+            Err(e) => {
+                self.stats.errors += 1;
+                Err(anyhow!("journal append failed: {e}"))
+            }
+        }
+    }
+}
+
+enum Event {
+    Admit(JournalEntry),
+    Done(u64),
+}
+
+fn parse_event(j: &Json) -> Option<Event> {
+    let ticket = j.get("ticket").and_then(Json::as_i64)? as u64;
+    match j.get("e").and_then(Json::as_str)? {
+        "done" => Some(Event::Done(ticket)),
+        "admit" => {
+            let prompt = j
+                .get("prompt")
+                .and_then(Json::as_arr)?
+                .iter()
+                .map(|v| v.as_i64().map(|x| x as i32))
+                .collect::<Option<Vec<i32>>>()?;
+            let params = SamplingParams {
+                temperature: j.get("temperature").and_then(Json::as_f64)? as f32,
+                top_k: j.get("top_k").and_then(Json::as_usize)?,
+                max_tokens: j.get("max_tokens").and_then(Json::as_usize)?,
+                stop_token: j.get("stop_token").and_then(Json::as_i64).map(|v| v as i32),
+                seed: j.get("seed").and_then(Json::as_i64)? as u64,
+                priority: j.get("priority").and_then(Json::as_i64)? as i32,
+            };
+            let variant = j.get("variant").and_then(Json::as_str).map(str::to_string);
+            Some(Event::Admit(JournalEntry { ticket, prompt, params, variant }))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("tardis-journal-{name}-{}", std::process::id()));
+        p
+    }
+
+    fn entry(ticket: u64, prompt: Vec<i32>) -> JournalEntry {
+        JournalEntry {
+            ticket,
+            prompt,
+            params: SamplingParams { max_tokens: 8, seed: 3, ..Default::default() },
+            variant: Some("mock".to_string()),
+        }
+    }
+
+    #[test]
+    fn roundtrip_pending_only() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut jr = Journal::open(&path).unwrap();
+            jr.append_admit(&entry(1, vec![10, 11])).unwrap();
+            jr.append_admit(&entry(2, vec![12])).unwrap();
+            jr.append_admit(&entry(3, vec![13, 14, 15])).unwrap();
+            jr.append_done(2, "length").unwrap();
+            assert_eq!(jr.stats.appends, 4);
+            assert!(jr.stats.bytes > 0);
+        }
+        let (pending, next, report) = Journal::recover(&path).unwrap();
+        assert_eq!(pending.len(), 2);
+        assert_eq!(pending[0], entry(1, vec![10, 11]));
+        assert_eq!(pending[1], entry(3, vec![13, 14, 15]));
+        assert_eq!(next, 4);
+        assert_eq!(report.admits, 3);
+        assert_eq!(report.dones, 1);
+        assert!(!report.truncated_tail);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tolerates_truncated_tail() {
+        let path = tmp("tail");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut jr = Journal::open(&path).unwrap();
+            jr.append_admit(&entry(5, vec![9])).unwrap();
+        }
+        // Crash mid-append: a half-written final line.
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"e\":\"admit\",\"tick").unwrap();
+        }
+        let (pending, next, report) = Journal::recover(&path).unwrap();
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].ticket, 5);
+        assert_eq!(next, 6);
+        assert!(report.truncated_tail);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_mid_file_corruption() {
+        let path = tmp("corrupt");
+        std::fs::write(&path, "not json\n{\"e\":\"done\",\"ticket\":1,\"reason\":\"x\"}\n")
+            .unwrap();
+        assert!(Journal::recover(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn injected_append_fault_counts_and_degrades() {
+        let path = tmp("fault");
+        let _ = std::fs::remove_file(&path);
+        let mut jr = Journal::open(&path).unwrap();
+        jr.inject_fail_appends(vec![1]);
+        jr.append_admit(&entry(1, vec![1])).unwrap();
+        assert!(jr.append_admit(&entry(2, vec![2])).is_err());
+        jr.append_admit(&entry(3, vec![3])).unwrap();
+        assert_eq!(jr.stats.errors, 1);
+        assert_eq!(jr.stats.appends, 3);
+        // Ticket 2 was never durably admitted; 1 and 3 recover.
+        let (pending, _, _) = Journal::recover(&path).unwrap();
+        assert_eq!(
+            pending.iter().map(|e| e.ticket).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -18,10 +18,20 @@
 //! * [`sampler`]     — greedy / temperature / top-k token sampling
 //! * [`engine_loop`] — executes the plans: multi-prefill [`engine_loop::PrefillSet`],
 //!   block-table growth, swap pool, decode batching, accounting
-//! * [`router`]      — routes requests across variants/replicas
+//! * [`router`]      — routes requests across variants/replicas: the
+//!   synchronous [`router::Router`] (single-thread, for non-Send
+//!   backends) and the fault-tolerant [`router::FrontDoor`] (one worker
+//!   thread per replica, `catch_unwind` failure isolation, journal
+//!   replay, backpressure shedding)
+//! * [`journal`]     — append-only JSONL admission journal + recovery
+//! * [`health`]      — replica health state machine (Healthy→Degraded→
+//!   Quarantined, backoff-paced restart probes) and the deterministic
+//!   [`health::FaultPlan`] chaos harness
 
 pub mod batcher;
 pub mod engine_loop;
+pub mod health;
+pub mod journal;
 pub mod kv;
 pub mod model;
 pub mod queue;
@@ -30,10 +40,18 @@ pub mod router;
 pub mod sampler;
 pub mod scheduler;
 
-pub use engine_loop::{EngineConfig, EngineSnapshot, EngineStats, InferenceEngine};
+pub use engine_loop::{
+    EngineConfig, EngineSnapshot, EngineStats, InferenceEngine, StepFault, SubmitError,
+};
+pub use health::{Fault, FaultPlan, HealthState, HealthTracker};
+pub use journal::{Journal, JournalEntry};
 pub use kv::{BlockAllocator, BlockTable, KvLayout, PrefixMatch, RadixCache};
 pub use model::{KvSwap, MockModel, StepModel};
 #[cfg(feature = "pjrt")]
 pub use model::PjrtModel;
 pub use request::{FinishReason, Request, RequestId, SamplingParams};
+pub use router::{
+    FrontDoor, FrontDoorConfig, FrontDoorStats, FrontEnd, FrontReply, FrontSnapshot,
+    ReplicaFactory, ReplicaView, Router, SubmitOutcome,
+};
 pub use scheduler::{PolicyKind, SchedulerConfig, SchedulerPolicy, StepOutcome, StepPlan};

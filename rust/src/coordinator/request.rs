@@ -45,6 +45,17 @@ pub enum FinishReason {
     Cancelled,
 }
 
+impl FinishReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::ContextOverflow => "context_overflow",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum RequestState {
     Queued,

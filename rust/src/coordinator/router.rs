@@ -1,16 +1,137 @@
-//! Request router: spreads requests across model replicas/variants.
+//! Request routing across model replicas/variants, at two service tiers:
 //!
-//! Each replica is its own [`InferenceEngine`] (own KV cache, own queue).
-//! Routing policy: an explicit variant tag on the request wins; otherwise
-//! least-queue-pressure, tie-broken round-robin. This is the multi-variant
-//! deployment story for TARDIS: e.g. a `dense` replica for quality-pinned
-//! traffic and a `tardis80` replica for latency-pinned traffic.
+//! * [`Router`] — the synchronous single-thread tier: every replica's
+//!   engine steps on the caller's thread. This is the only option for
+//!   backends whose buffers are not `Send` (PJRT), and the cheapest for
+//!   tests.
+//! * [`FrontDoor`] — the fault-tolerant tier: each replica's engine
+//!   steps on its own worker thread behind a command channel, with a
+//!   durable admission journal (replay on crash), `catch_unwind`
+//!   failure isolation + health-tracked restart probes, per-replica
+//!   backpressure with explicit shed signaling, and a deterministic
+//!   fault-injection harness.
+//!
+//! Both implement [`FrontEnd`], the contract the TCP server loop drives:
+//! submit → pump → take replies. Routing policy in both: an explicit
+//! variant tag on the request wins; otherwise healthiest-then-least-
+//! loaded (ties broken by replica index / round-robin).
+
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use super::engine_loop::{Completion, EngineSnapshot, InferenceEngine};
+use super::engine_loop::{Completion, EngineSnapshot, InferenceEngine, SubmitError};
+use super::health::{FaultPlan, HealthState, HealthTracker};
+use super::journal::{Journal, JournalEntry};
 use super::model::StepModel;
 use super::request::{RequestId, SamplingParams};
+
+// ---------------------------------------------------------------------------
+// The front-end contract (what the TCP serve loop drives)
+// ---------------------------------------------------------------------------
+
+/// Outcome of a front-end admission attempt.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    Admitted {
+        ticket: u64,
+        /// Injected `dropconn` fault: the serve loop must drop the reply
+        /// channel, simulating a client that vanished mid-stream.
+        drop_reply: bool,
+    },
+    /// Overloaded — the wire protocol's
+    /// `{"ok":false,"err":"overloaded","retry_after_ms":N}`.
+    Shed { retry_after_ms: u64 },
+    /// Permanently invalid (bad variant, bad prompt); never retryable.
+    Rejected(String),
+}
+
+/// A finished (or terminally failed) admission handed back to the serve
+/// loop, keyed by the front-end ticket it was admitted under.
+#[derive(Debug, Clone)]
+pub struct FrontReply {
+    pub ticket: u64,
+    /// Replica instance that served it.
+    pub replica: String,
+    pub result: Result<Completion, String>,
+    /// Replayed from the journal at startup: no live client is waiting.
+    pub recovered: bool,
+}
+
+/// Front-door robustness counters (zeros for the synchronous tier where
+/// the failure modes cannot occur).
+#[derive(Debug, Clone, Default)]
+pub struct FrontDoorStats {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Admissions refused with `overloaded` + `retry_after_ms`.
+    pub shed: u64,
+    /// Admitted requests that carried a client retry marker.
+    pub retries_honored: u64,
+    /// In-flight requests re-dispatched after their replica died.
+    pub replays: u64,
+    pub replica_failures: u64,
+    pub replica_restarts: u64,
+    /// Journaled admissions replayed at startup.
+    pub recovered: u64,
+    /// Completions whose client had disconnected.
+    pub replies_dropped: u64,
+    pub journal_appends: u64,
+    pub journal_bytes: u64,
+    pub journal_errors: u64,
+}
+
+/// Per-replica live view for the `stats` op.
+#[derive(Debug, Clone)]
+pub struct ReplicaView {
+    pub name: String,
+    /// Health-state machine name: healthy|degraded|quarantined.
+    pub health: &'static str,
+    pub alive: bool,
+    /// Front-door-tracked in-flight admissions on this replica.
+    pub inflight: usize,
+    pub snapshot: EngineSnapshot,
+}
+
+#[derive(Debug, Clone)]
+pub struct FrontSnapshot {
+    pub front: FrontDoorStats,
+    pub replicas: Vec<ReplicaView>,
+}
+
+/// What the serve loop needs from a front-end: admission with explicit
+/// shed/reject outcomes, a pump that advances work (blocking at most
+/// `max_wait` when idle), and completed replies.
+pub trait FrontEnd {
+    fn submit_front(
+        &mut self,
+        variant: Option<&str>,
+        prompt: Vec<i32>,
+        params: SamplingParams,
+        retry: bool,
+    ) -> SubmitOutcome;
+
+    /// Advance work. Returns whether anything progressed; may block up
+    /// to `max_wait` when there is nothing to do.
+    fn pump(&mut self, max_wait: Duration) -> Result<bool>;
+
+    fn take_replies(&mut self) -> Vec<FrontReply>;
+
+    fn front_snapshot(&mut self) -> FrontSnapshot;
+
+    /// A reply could not be delivered (client gone): account it.
+    fn note_reply_dropped(&mut self) {}
+}
+
+// ---------------------------------------------------------------------------
+// Synchronous tier
+// ---------------------------------------------------------------------------
 
 pub struct Replica<M: StepModel> {
     pub name: String,
@@ -21,6 +142,11 @@ pub struct Router<M: StepModel> {
     replicas: Vec<Replica<M>>,
     rr: usize,
     pub routed: u64,
+    next_ticket: u64,
+    /// (replica, engine request id) -> front-end ticket.
+    tickets: HashMap<(usize, RequestId), u64>,
+    replies: VecDeque<FrontReply>,
+    fstats: FrontDoorStats,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,6 +165,10 @@ impl<M: StepModel> Router<M> {
                 .collect(),
             rr: 0,
             routed: 0,
+            next_ticket: 1,
+            tickets: HashMap::new(),
+            replies: VecDeque::new(),
+            fstats: FrontDoorStats::default(),
         }
     }
 
@@ -128,6 +258,804 @@ impl<M: StepModel> Router<M> {
     }
 }
 
+impl<M: StepModel> FrontEnd for Router<M> {
+    fn submit_front(
+        &mut self,
+        variant: Option<&str>,
+        prompt: Vec<i32>,
+        params: SamplingParams,
+        retry: bool,
+    ) -> SubmitOutcome {
+        let idx = match self.pick(variant) {
+            Ok(i) => i,
+            Err(e) => return SubmitOutcome::Rejected(e.to_string()),
+        };
+        match self.replicas[idx].engine.try_submit(prompt, params) {
+            Ok(id) => {
+                self.routed += 1;
+                let ticket = self.next_ticket;
+                self.next_ticket += 1;
+                self.tickets.insert((idx, id), ticket);
+                self.fstats.submitted += 1;
+                if retry {
+                    self.fstats.retries_honored += 1;
+                }
+                SubmitOutcome::Admitted { ticket, drop_reply: false }
+            }
+            Err(SubmitError::Backpressure { queue_depth, .. }) => {
+                self.fstats.shed += 1;
+                SubmitOutcome::Shed {
+                    retry_after_ms: (10 + 2 * queue_depth as u64).min(500),
+                }
+            }
+            Err(SubmitError::Invalid(msg)) => SubmitOutcome::Rejected(msg),
+        }
+    }
+
+    fn pump(&mut self, max_wait: Duration) -> Result<bool> {
+        let busy = self.step_all()?;
+        let mut any = false;
+        for i in 0..self.replicas.len() {
+            let name = self.replicas[i].name.clone();
+            for c in self.replicas[i].engine.take_completions() {
+                let ticket = self.tickets.remove(&(i, c.id)).unwrap_or(0);
+                self.fstats.completed += 1;
+                self.replies.push_back(FrontReply {
+                    ticket,
+                    replica: name.clone(),
+                    result: Ok(c),
+                    recovered: false,
+                });
+                any = true;
+            }
+        }
+        if !busy && !any && !max_wait.is_zero() {
+            std::thread::sleep(max_wait.min(Duration::from_millis(1)));
+        }
+        Ok(busy || any)
+    }
+
+    fn take_replies(&mut self) -> Vec<FrontReply> {
+        self.replies.drain(..).collect()
+    }
+
+    fn front_snapshot(&mut self) -> FrontSnapshot {
+        FrontSnapshot {
+            front: self.fstats.clone(),
+            replicas: self
+                .replicas
+                .iter()
+                .map(|r| {
+                    let snapshot = r.engine.snapshot();
+                    ReplicaView {
+                        name: r.name.clone(),
+                        health: HealthState::Healthy.name(),
+                        alive: true,
+                        inflight: snapshot.queue_depth
+                            + snapshot.active_slots
+                            + snapshot.inflight_prefills,
+                        snapshot,
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    fn note_reply_dropped(&mut self) {
+        self.fstats.replies_dropped += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault-tolerant tier
+// ---------------------------------------------------------------------------
+
+/// Builds a fresh engine for a replica — called at spawn and on every
+/// restart probe, so a factory failure is a restartable fault, not a
+/// crash.
+pub type ReplicaFactory<M> = Box<dyn FnMut() -> Result<InferenceEngine<M>> + Send>;
+
+#[derive(Debug, Clone)]
+pub struct FrontDoorConfig {
+    /// Per-replica in-flight admission bound; beyond it, submissions are
+    /// shed with `retry_after_ms` (keep it at or below the engines' own
+    /// `queue_capacity` so the front door sheds before the engines do).
+    pub queue_cap: usize,
+    /// Admission journal path (None = durability off).
+    pub journal: Option<PathBuf>,
+    pub fault_plan: FaultPlan,
+    /// Restart-probe backoff: `probe_base * 2^(failures-1)`, capped at
+    /// `probe_max`.
+    pub probe_base: Duration,
+    pub probe_max: Duration,
+}
+
+impl Default for FrontDoorConfig {
+    fn default() -> Self {
+        FrontDoorConfig {
+            queue_cap: 64,
+            journal: None,
+            fault_plan: FaultPlan::default(),
+            probe_base: Duration::from_millis(25),
+            probe_max: Duration::from_secs(2),
+        }
+    }
+}
+
+enum ReplicaCmd {
+    Submit { ticket: u64, prompt: Vec<i32>, params: SamplingParams },
+}
+
+enum ReplicaEvent {
+    Done { replica: usize, generation: u64, ticket: u64, completion: Completion },
+    Rejected {
+        replica: usize,
+        generation: u64,
+        ticket: u64,
+        backpressure: bool,
+        error: String,
+    },
+    Died { replica: usize, generation: u64, reason: String },
+}
+
+struct ReplicaSlot<M: StepModel> {
+    name: String,
+    /// Base variant (instance names get `-k` suffixes when replicated).
+    variant: String,
+    factory: ReplicaFactory<M>,
+    cmd: Option<Sender<ReplicaCmd>>,
+    handle: Option<JoinHandle<()>>,
+    health: HealthTracker,
+    /// Incarnation counter: events from dead generations are ignored.
+    generation: u64,
+    /// Front-door-tracked in-flight admissions (dispatched, not done).
+    inflight: usize,
+    /// Published by the worker after every step.
+    snapshot: Arc<Mutex<EngineSnapshot>>,
+}
+
+struct Inflight {
+    prompt: Vec<i32>,
+    params: SamplingParams,
+    variant: Option<String>,
+    /// (replica, generation) currently executing it; None while parked.
+    assigned: Option<(usize, u64)>,
+    recovered: bool,
+}
+
+/// The fault-tolerant front door: owns N replicas on worker threads.
+///
+/// Every admission is journaled (when configured) and tracked in an
+/// in-flight table until its completion arrives. A worker that panics or
+/// errors mid-step dies as a *replica*, not a process: its in-flight
+/// admissions replay onto survivors, its health degrades, and backoff-
+/// paced probes restart it from the factory. Admissions beyond
+/// `queue_cap` per replica shed with an explicit `retry_after_ms`.
+pub struct FrontDoor<M: StepModel> {
+    slots: Vec<ReplicaSlot<M>>,
+    events_tx: Sender<ReplicaEvent>,
+    events_rx: Receiver<ReplicaEvent>,
+    inflight: HashMap<u64, Inflight>,
+    /// Admitted tickets awaiting a replica with capacity, FIFO.
+    parked: VecDeque<u64>,
+    replies: VecDeque<FrontReply>,
+    next_ticket: u64,
+    queue_cap: usize,
+    journal: Option<Journal>,
+    faults: FaultPlan,
+    /// Admissions accepted so far (the `dropconn@N` fault index).
+    admits_seen: u64,
+    probe_base: Duration,
+    probe_max: Duration,
+    pub stats: FrontDoorStats,
+}
+
+impl<M: StepModel + Send + 'static> FrontDoor<M> {
+    /// Build and start the replicas. `replicas` pairs a *variant* name
+    /// with an engine factory; repeated variants become distinct
+    /// instances (`name-0`, `name-1`, ...) sharing the variant for
+    /// pinned routing. An existing journal at `cfg.journal` is recovered
+    /// first: its un-completed admissions re-enter the dispatch queue.
+    pub fn new(replicas: Vec<(String, ReplicaFactory<M>)>, cfg: FrontDoorConfig) -> Result<Self> {
+        assert!(!replicas.is_empty());
+        let mut counts: HashMap<String, usize> = HashMap::new();
+        for (v, _) in &replicas {
+            *counts.entry(v.clone()).or_insert(0) += 1;
+        }
+        let mut seen: HashMap<String, usize> = HashMap::new();
+        let (events_tx, events_rx) = channel();
+        let slots = replicas
+            .into_iter()
+            .map(|(variant, factory)| {
+                let k = seen.entry(variant.clone()).or_insert(0);
+                let name = if counts[&variant] == 1 {
+                    variant.clone()
+                } else {
+                    let n = format!("{variant}-{k}");
+                    *k += 1;
+                    n
+                };
+                ReplicaSlot {
+                    name,
+                    variant,
+                    factory,
+                    cmd: None,
+                    handle: None,
+                    health: HealthTracker::new(cfg.probe_base, cfg.probe_max),
+                    generation: 0,
+                    inflight: 0,
+                    snapshot: Arc::new(Mutex::new(empty_snapshot())),
+                }
+            })
+            .collect();
+        let mut front = FrontDoor {
+            slots,
+            events_tx,
+            events_rx,
+            inflight: HashMap::new(),
+            parked: VecDeque::new(),
+            replies: VecDeque::new(),
+            next_ticket: 1,
+            queue_cap: cfg.queue_cap.max(1),
+            journal: None,
+            faults: cfg.fault_plan,
+            admits_seen: 0,
+            probe_base: cfg.probe_base,
+            probe_max: cfg.probe_max,
+            stats: FrontDoorStats::default(),
+        };
+        if let Some(path) = &cfg.journal {
+            let mut pending = Vec::new();
+            if path.exists() {
+                let (p, next_ticket, report) = Journal::recover(path)?;
+                front.next_ticket = next_ticket.max(1);
+                if report.admits > 0 {
+                    eprintln!(
+                        "[front] journal {}: {} admits / {} dones, replaying {}{}",
+                        path.display(),
+                        report.admits,
+                        report.dones,
+                        p.len(),
+                        if report.truncated_tail { " (truncated tail)" } else { "" },
+                    );
+                }
+                pending = p;
+            }
+            let mut journal = Journal::open(path)?;
+            journal.inject_fail_appends(front.faults.take_journal_errors());
+            front.journal = Some(journal);
+            for e in pending {
+                front.stats.recovered += 1;
+                front.inflight.insert(
+                    e.ticket,
+                    Inflight {
+                        prompt: e.prompt,
+                        params: e.params,
+                        variant: e.variant,
+                        assigned: None,
+                        recovered: true,
+                    },
+                );
+                front.parked.push_back(e.ticket);
+            }
+        }
+        for idx in 0..front.slots.len() {
+            front.spawn_replica(idx)?;
+        }
+        front.pump_parked();
+        Ok(front)
+    }
+
+    /// Admitted-but-not-finished requests (in flight + parked).
+    pub fn pending(&self) -> usize {
+        self.inflight.len()
+    }
+
+    pub fn replica_names(&self) -> Vec<&str> {
+        self.slots.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    pub fn replica_health(&self, idx: usize) -> (HealthState, bool) {
+        let h = &self.slots[idx].health;
+        (h.state(), h.is_alive())
+    }
+
+    /// Pump until every admitted request has a reply, or fail after
+    /// `deadline` (tests and benches; replica restarts happen inside).
+    pub fn drain(&mut self, deadline: Duration) -> Result<Vec<FrontReply>> {
+        let t0 = Instant::now();
+        let mut out = Vec::new();
+        loop {
+            out.extend(self.take_replies());
+            if self.inflight.is_empty() {
+                return Ok(out);
+            }
+            if t0.elapsed() > deadline {
+                return Err(anyhow!(
+                    "drain deadline exceeded with {} requests still pending",
+                    self.inflight.len()
+                ));
+            }
+            self.pump(Duration::from_millis(1))?;
+        }
+    }
+
+    fn spawn_replica(&mut self, idx: usize) -> Result<()> {
+        let step_faults = self.faults.take_step_faults(idx);
+        let slot = &mut self.slots[idx];
+        let mut engine = (slot.factory)()?;
+        for (step, fault) in step_faults {
+            engine.inject_step_fault(step, fault);
+        }
+        *slot.snapshot.lock().unwrap() = engine.snapshot();
+        let (cmd_tx, cmd_rx) = channel();
+        let events = self.events_tx.clone();
+        let snapshot = Arc::clone(&slot.snapshot);
+        let generation = slot.generation;
+        let handle = std::thread::Builder::new()
+            .name(format!("tardis-replica-{}", slot.name))
+            .spawn(move || worker_loop(engine, cmd_rx, events, snapshot, idx, generation))?;
+        slot.cmd = Some(cmd_tx);
+        slot.handle = Some(handle);
+        Ok(())
+    }
+
+    /// Healthiest-then-least-loaded alive replica with capacity, matching
+    /// the variant pin when present.
+    fn best_slot(&self, variant: Option<&str>) -> Option<usize> {
+        let mut best: Option<(u8, usize, usize)> = None;
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(v) = variant {
+                if s.variant != v {
+                    continue;
+                }
+            }
+            if !s.health.is_alive() || s.cmd.is_none() || s.inflight >= self.queue_cap {
+                continue;
+            }
+            let key = (s.health.state().rank(), s.inflight, i);
+            if best.is_none_or(|b| key < b) {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, _, i)| i)
+    }
+
+    fn retry_after_ms(&self, variant: Option<&str>) -> u64 {
+        let now = Instant::now();
+        let mut any_alive = false;
+        let mut min_inflight = usize::MAX;
+        let mut min_backoff: Option<Duration> = None;
+        for s in &self.slots {
+            if let Some(v) = variant {
+                if s.variant != v {
+                    continue;
+                }
+            }
+            if s.health.is_alive() {
+                any_alive = true;
+                min_inflight = min_inflight.min(s.inflight);
+            } else if let Some(b) = s.health.backoff_remaining(now) {
+                min_backoff = Some(min_backoff.map_or(b, |m| m.min(b)));
+            }
+        }
+        if any_alive {
+            (10 + 2 * min_inflight as u64).min(500)
+        } else {
+            min_backoff.map_or(50, |d| d.as_millis() as u64 + 10).min(1000)
+        }
+    }
+
+    fn dispatch(&mut self, ticket: u64, idx: usize) -> bool {
+        let (prompt, params) = match self.inflight.get(&ticket) {
+            Some(inf) => (inf.prompt.clone(), inf.params),
+            None => return true, // already resolved; nothing to send
+        };
+        let generation = self.slots[idx].generation;
+        let sent = self.slots[idx]
+            .cmd
+            .as_ref()
+            .is_some_and(|tx| tx.send(ReplicaCmd::Submit { ticket, prompt, params }).is_ok());
+        if sent {
+            self.slots[idx].inflight += 1;
+            if let Some(inf) = self.inflight.get_mut(&ticket) {
+                inf.assigned = Some((idx, generation));
+            }
+        }
+        sent
+    }
+
+    fn pump_parked(&mut self) -> bool {
+        let mut progressed = false;
+        let mut requeue = VecDeque::new();
+        while let Some(ticket) = self.parked.pop_front() {
+            let Some(inf) = self.inflight.get(&ticket) else { continue };
+            let variant = inf.variant.clone();
+            if let Some(v) = &variant {
+                if !self.slots.iter().any(|s| &s.variant == v) {
+                    // A recovered admission pinned to a variant this run
+                    // does not serve: fail it rather than wedge drain.
+                    let inf = self.inflight.remove(&ticket).unwrap();
+                    self.journal_done(ticket, "rejected");
+                    self.replies.push_back(FrontReply {
+                        ticket,
+                        replica: v.clone(),
+                        result: Err(format!("no replica for variant {v:?}")),
+                        recovered: inf.recovered,
+                    });
+                    progressed = true;
+                    continue;
+                }
+            }
+            match self.best_slot(variant.as_deref()) {
+                Some(idx) if self.dispatch(ticket, idx) => progressed = true,
+                _ => requeue.push_back(ticket),
+            }
+        }
+        self.parked = requeue;
+        progressed
+    }
+
+    fn journal_done(&mut self, ticket: u64, reason: &str) {
+        if let Some(j) = &mut self.journal {
+            let _ = j.append_done(ticket, reason);
+        }
+    }
+
+    fn on_event(&mut self, ev: ReplicaEvent) {
+        match ev {
+            ReplicaEvent::Done { replica, generation, ticket, completion } => {
+                let Some(inf) = self.inflight.remove(&ticket) else { return };
+                if inf.assigned == Some((replica, generation)) {
+                    let s = &mut self.slots[replica];
+                    s.inflight = s.inflight.saturating_sub(1);
+                }
+                self.slots[replica].health.on_success();
+                self.stats.completed += 1;
+                self.journal_done(ticket, completion.reason.as_str());
+                self.replies.push_back(FrontReply {
+                    ticket,
+                    replica: self.slots[replica].name.clone(),
+                    result: Ok(completion),
+                    recovered: inf.recovered,
+                });
+            }
+            ReplicaEvent::Rejected { replica, generation, ticket, backpressure, error } => {
+                let assigned = self.inflight.get(&ticket).map(|i| i.assigned);
+                let Some(assigned) = assigned else { return };
+                if assigned == Some((replica, generation)) {
+                    let s = &mut self.slots[replica];
+                    s.inflight = s.inflight.saturating_sub(1);
+                    if let Some(inf) = self.inflight.get_mut(&ticket) {
+                        inf.assigned = None;
+                    }
+                }
+                if backpressure {
+                    // The engine's own queue is tighter than our cap:
+                    // park and retry on the next capacity change.
+                    self.parked.push_back(ticket);
+                } else {
+                    let inf = self.inflight.remove(&ticket).unwrap();
+                    self.journal_done(ticket, "rejected");
+                    self.replies.push_back(FrontReply {
+                        ticket,
+                        replica: self.slots[replica].name.clone(),
+                        result: Err(error),
+                        recovered: inf.recovered,
+                    });
+                }
+            }
+            ReplicaEvent::Died { replica, generation, reason } => {
+                if self.slots[replica].generation != generation {
+                    return;
+                }
+                eprintln!("[front] replica {} died: {reason}", self.slots[replica].name);
+                self.stats.replica_failures += 1;
+                let slot = &mut self.slots[replica];
+                slot.cmd = None;
+                if let Some(h) = slot.handle.take() {
+                    let _ = h.join();
+                }
+                slot.health.on_failure(Instant::now());
+                slot.inflight = 0;
+                // Replay: everything the dead incarnation held goes back
+                // to the dispatch queue, in ticket order.
+                let mut orphans: Vec<u64> = self
+                    .inflight
+                    .iter()
+                    .filter(|(_, inf)| inf.assigned == Some((replica, generation)))
+                    .map(|(&t, _)| t)
+                    .collect();
+                orphans.sort_unstable();
+                for t in orphans {
+                    if let Some(inf) = self.inflight.get_mut(&t) {
+                        inf.assigned = None;
+                    }
+                    self.stats.replays += 1;
+                    self.parked.push_back(t);
+                }
+            }
+        }
+    }
+
+    fn run_probes(&mut self) -> bool {
+        let now = Instant::now();
+        let mut progressed = false;
+        for idx in 0..self.slots.len() {
+            if !self.slots[idx].health.probe_due(now) {
+                continue;
+            }
+            self.slots[idx].generation += 1;
+            self.slots[idx].health.on_restart();
+            self.stats.replica_restarts += 1;
+            match self.spawn_replica(idx) {
+                Ok(()) => progressed = true,
+                Err(e) => {
+                    eprintln!(
+                        "[front] replica {} restart failed: {e}",
+                        self.slots[idx].name
+                    );
+                    self.slots[idx].cmd = None;
+                    self.slots[idx].health.on_failure(Instant::now());
+                }
+            }
+        }
+        progressed
+    }
+}
+
+impl<M: StepModel + Send + 'static> FrontEnd for FrontDoor<M> {
+    fn submit_front(
+        &mut self,
+        variant: Option<&str>,
+        prompt: Vec<i32>,
+        params: SamplingParams,
+        retry: bool,
+    ) -> SubmitOutcome {
+        if let Some(v) = variant {
+            if !self.slots.iter().any(|s| s.variant == v) {
+                return SubmitOutcome::Rejected(format!("no replica for variant {v:?}"));
+            }
+        }
+        let Some(idx) = self.best_slot(variant) else {
+            self.stats.shed += 1;
+            return SubmitOutcome::Shed { retry_after_ms: self.retry_after_ms(variant) };
+        };
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        if self.journal.is_some() {
+            let entry = JournalEntry {
+                ticket,
+                prompt: prompt.clone(),
+                params,
+                variant: variant.map(str::to_string),
+            };
+            if let Some(j) = &mut self.journal {
+                let _ = j.append_admit(&entry);
+            }
+        }
+        self.stats.submitted += 1;
+        if retry {
+            self.stats.retries_honored += 1;
+        }
+        let drop_reply = self.faults.take_drop_conn(self.admits_seen);
+        self.admits_seen += 1;
+        self.inflight.insert(
+            ticket,
+            Inflight {
+                prompt,
+                params,
+                variant: variant.map(str::to_string),
+                assigned: None,
+                recovered: false,
+            },
+        );
+        if !self.dispatch(ticket, idx) {
+            self.parked.push_back(ticket);
+        }
+        SubmitOutcome::Admitted { ticket, drop_reply }
+    }
+
+    fn pump(&mut self, max_wait: Duration) -> Result<bool> {
+        let mut progressed = false;
+        let first = if max_wait.is_zero() {
+            self.events_rx.try_recv().ok()
+        } else {
+            match self.events_rx.recv_timeout(max_wait) {
+                Ok(ev) => Some(ev),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => None,
+            }
+        };
+        if let Some(ev) = first {
+            self.on_event(ev);
+            progressed = true;
+        }
+        while let Ok(ev) = self.events_rx.try_recv() {
+            self.on_event(ev);
+            progressed = true;
+        }
+        progressed |= self.run_probes();
+        progressed |= self.pump_parked();
+        Ok(progressed)
+    }
+
+    fn take_replies(&mut self) -> Vec<FrontReply> {
+        self.replies.drain(..).collect()
+    }
+
+    fn front_snapshot(&mut self) -> FrontSnapshot {
+        let mut front = self.stats.clone();
+        if let Some(j) = &self.journal {
+            front.journal_appends = j.stats.appends;
+            front.journal_bytes = j.stats.bytes;
+            front.journal_errors = j.stats.errors;
+        }
+        FrontSnapshot {
+            front,
+            replicas: self
+                .slots
+                .iter()
+                .map(|s| ReplicaView {
+                    name: s.name.clone(),
+                    health: s.health.state().name(),
+                    alive: s.health.is_alive(),
+                    inflight: s.inflight,
+                    snapshot: s.snapshot.lock().unwrap().clone(),
+                })
+                .collect(),
+        }
+    }
+
+    fn note_reply_dropped(&mut self) {
+        self.stats.replies_dropped += 1;
+    }
+}
+
+impl<M: StepModel> Drop for FrontDoor<M> {
+    fn drop(&mut self) {
+        for s in &mut self.slots {
+            s.cmd = None; // disconnect: workers drain and exit
+            if let Some(h) = s.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The per-replica worker: drains the command channel into the engine,
+/// steps it under `catch_unwind`, and streams completions back. Any
+/// panic or step error kills this incarnation only — the front door
+/// replays its in-flight work and probes for restart.
+fn worker_loop<M: StepModel>(
+    mut engine: InferenceEngine<M>,
+    cmd_rx: Receiver<ReplicaCmd>,
+    events: Sender<ReplicaEvent>,
+    snapshot: Arc<Mutex<EngineSnapshot>>,
+    replica: usize,
+    generation: u64,
+) {
+    // engine request id -> front-door ticket, for this incarnation.
+    let mut tickets: HashMap<RequestId, u64> = HashMap::new();
+    let mut handle_cmd = |engine: &mut InferenceEngine<M>,
+                          tickets: &mut HashMap<RequestId, u64>,
+                          cmd: ReplicaCmd| {
+        let ReplicaCmd::Submit { ticket, prompt, params } = cmd;
+        match engine.try_submit(prompt, params) {
+            Ok(id) => {
+                tickets.insert(id, ticket);
+            }
+            Err(e) => {
+                let backpressure = matches!(e, SubmitError::Backpressure { .. });
+                let _ = events.send(ReplicaEvent::Rejected {
+                    replica,
+                    generation,
+                    ticket,
+                    backpressure,
+                    error: e.to_string(),
+                });
+            }
+        }
+    };
+    loop {
+        let mut disconnected = false;
+        if engine.is_idle() {
+            match cmd_rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(cmd) => handle_cmd(&mut engine, &mut tickets, cmd),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+        }
+        loop {
+            match cmd_rx.try_recv() {
+                Ok(cmd) => handle_cmd(&mut engine, &mut tickets, cmd),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if engine.is_idle() {
+            if disconnected {
+                return;
+            }
+            continue;
+        }
+        match catch_unwind(AssertUnwindSafe(|| engine.step())) {
+            Ok(Ok(_)) => {}
+            Ok(Err(e)) => {
+                let _ = events.send(ReplicaEvent::Died {
+                    replica,
+                    generation,
+                    reason: format!("step error: {e}"),
+                });
+                return;
+            }
+            Err(panic) => {
+                let _ = events.send(ReplicaEvent::Died {
+                    replica,
+                    generation,
+                    reason: format!("panic: {}", panic_message(&panic)),
+                });
+                return;
+            }
+        }
+        for c in engine.take_completions() {
+            if let Some(ticket) = tickets.remove(&c.id) {
+                let _ = events.send(ReplicaEvent::Done {
+                    replica,
+                    generation,
+                    ticket,
+                    completion: c,
+                });
+            }
+        }
+        *snapshot.lock().unwrap() = engine.snapshot();
+    }
+}
+
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Placeholder published before a replica's first step.
+fn empty_snapshot() -> EngineSnapshot {
+    EngineSnapshot {
+        policy: "unstarted",
+        queue_depth: 0,
+        queue_pressure: 0.0,
+        active_slots: 0,
+        inflight_prefills: 0,
+        slots_total: 0,
+        kv_blocks_total: 0,
+        kv_blocks_used: 0,
+        block_utilization: 0.0,
+        swapped: 0,
+        preemptions: 0,
+        mixed_step_ratio: None,
+        mean_occupancy: 0.0,
+        tokens_generated: 0,
+        admitted: 0,
+        finished: 0,
+        iterations: 0,
+        ffn_fallback_rate: None,
+        ffn_last_step_fallback_rate: None,
+        prefix_cached_blocks: 0,
+        prefix_evictable_blocks: 0,
+        prefix_hit_tokens: 0,
+        prefix_shared_blocks: 0,
+        cow_copies: 0,
+        prefix_evictions: 0,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,5 +1127,123 @@ mod tests {
         let done = r.run_to_completion().unwrap();
         assert_eq!(done.len(), 6);
         assert!(done.iter().all(|(_, c)| c.tokens.len() == 3));
+    }
+
+    #[test]
+    fn router_front_end_sheds_on_backpressure() {
+        let mut r = Router::new(vec![(
+            "v0".to_string(),
+            InferenceEngine::new(
+                MockModel::new(2, 64, 16, vec![4, 8]),
+                EngineConfig { queue_capacity: 2, ..Default::default() },
+            ),
+        )]);
+        let params = SamplingParams { max_tokens: 2, ..Default::default() };
+        for _ in 0..2 {
+            let out = r.submit_front(None, vec![1, 2], params, false);
+            assert!(matches!(out, SubmitOutcome::Admitted { .. }), "{out:?}");
+        }
+        match r.submit_front(None, vec![1, 2], params, false) {
+            SubmitOutcome::Shed { retry_after_ms } => assert!(retry_after_ms > 0),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert_eq!(r.front_snapshot().front.shed, 1);
+    }
+
+    fn mock_factory(slow_us: u64) -> ReplicaFactory<MockModel> {
+        Box::new(move || {
+            let mut model = MockModel::new(4, 128, 256, vec![4, 16]);
+            model.spin_per_call = Duration::from_micros(slow_us);
+            Ok(InferenceEngine::new(model, EngineConfig::default()))
+        })
+    }
+
+    #[test]
+    fn front_door_serves_and_completes() {
+        let mut front = FrontDoor::new(
+            vec![
+                ("mock".to_string(), mock_factory(0)),
+                ("mock".to_string(), mock_factory(0)),
+            ],
+            FrontDoorConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(front.replica_names(), vec!["mock-0", "mock-1"]);
+        let params = SamplingParams { max_tokens: 4, ..Default::default() };
+        for i in 0..6 {
+            let out = front.submit_front(None, vec![1 + i], params, false);
+            assert!(matches!(out, SubmitOutcome::Admitted { .. }), "{out:?}");
+        }
+        let replies = front.drain(Duration::from_secs(10)).unwrap();
+        assert_eq!(replies.len(), 6);
+        assert!(replies.iter().all(|r| r.result.is_ok()));
+        let snap = front.front_snapshot();
+        assert_eq!(snap.front.submitted, 6);
+        assert_eq!(snap.front.completed, 6);
+        assert_eq!(snap.front.shed, 0);
+        assert_eq!(snap.replicas.len(), 2);
+    }
+
+    #[test]
+    fn front_door_sheds_past_queue_cap() {
+        let mut front = FrontDoor::new(
+            vec![("mock".to_string(), mock_factory(1000))],
+            FrontDoorConfig { queue_cap: 2, ..Default::default() },
+        )
+        .unwrap();
+        let params = SamplingParams { max_tokens: 8, ..Default::default() };
+        for _ in 0..2 {
+            let out = front.submit_front(None, vec![1, 2, 3], params, false);
+            assert!(matches!(out, SubmitOutcome::Admitted { .. }), "{out:?}");
+        }
+        // No pump between submits: both slots are still in flight, so
+        // the third submission sheds deterministically.
+        match front.submit_front(None, vec![1, 2, 3], params, true) {
+            SubmitOutcome::Shed { retry_after_ms } => assert!(retry_after_ms >= 10),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert_eq!(front.stats.shed, 1);
+        let replies = front.drain(Duration::from_secs(10)).unwrap();
+        assert_eq!(replies.len(), 2);
+    }
+
+    #[test]
+    fn front_door_pins_variants_and_rejects_unknown() {
+        let mut front = FrontDoor::new(
+            vec![
+                ("a".to_string(), mock_factory(0)),
+                ("b".to_string(), mock_factory(0)),
+            ],
+            FrontDoorConfig::default(),
+        )
+        .unwrap();
+        let params = SamplingParams { max_tokens: 2, ..Default::default() };
+        match front.submit_front(Some("nope"), vec![1], params, false) {
+            SubmitOutcome::Rejected(msg) => assert!(msg.contains("nope"), "{msg}"),
+            other => panic!("expected reject, got {other:?}"),
+        }
+        let out = front.submit_front(Some("b"), vec![1, 2], params, false);
+        assert!(matches!(out, SubmitOutcome::Admitted { .. }));
+        let replies = front.drain(Duration::from_secs(10)).unwrap();
+        assert_eq!(replies.len(), 1);
+        assert_eq!(replies[0].replica, "b");
+    }
+
+    #[test]
+    fn front_door_rejects_invalid_prompt_via_worker() {
+        let mut front = FrontDoor::new(
+            vec![("mock".to_string(), mock_factory(0))],
+            FrontDoorConfig::default(),
+        )
+        .unwrap();
+        // 4000-token prompt > mock max_seq 128: the engine rejects it as
+        // invalid and the reply is a terminal error, not a shed.
+        let params = SamplingParams { max_tokens: 2, ..Default::default() };
+        let out = front.submit_front(None, vec![7; 4000], params, false);
+        assert!(matches!(out, SubmitOutcome::Admitted { .. }));
+        let replies = front.drain(Duration::from_secs(10)).unwrap();
+        assert_eq!(replies.len(), 1);
+        let err = replies[0].result.as_ref().unwrap_err();
+        assert!(err.contains("prompt length"), "{err}");
     }
 }

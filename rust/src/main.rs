@@ -25,9 +25,10 @@ use tardis::config::{
     PredictorKind, TardisFfnConfig,
 };
 use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::health::FaultPlan;
 use tardis::coordinator::model::{MockModel, NativeModel, StepModel};
 use tardis::coordinator::request::SamplingParams;
-use tardis::coordinator::router::Router;
+use tardis::coordinator::router::{FrontDoor, FrontDoorConfig, ReplicaFactory, Router};
 use tardis::coordinator::scheduler::PolicyKind;
 use tardis::costmodel;
 use tardis::ffn::RoutingQuality;
@@ -90,9 +91,22 @@ fn usage() -> ! {
     --priority N           admission priority (default 0)
   serve / serve-mock:
     --addr HOST:PORT       listen address (default 127.0.0.1:7437)
-    --variants A,B         replicas to load (default dense,tardis80;
+    --variants A,B         variants to load (default dense,tardis80;
                            serve-mock default mock)
+    --replicas N           engine replicas per variant (default 1; mock
+                           and native backends run each replica on its
+                           own worker thread behind the fault-tolerant
+                           front door; pjrt stays single-threaded)
+    --journal PATH         append-only admission journal (JSONL); on
+                           restart, admitted-but-uncompleted requests
+                           replay onto live replicas
+    --queue-cap N          per-replica in-flight cap before the front
+                           door sheds with {{\"err\":\"overloaded\"}}
+                           (default 64)
     --max-requests N       exit after N served requests (for scripted runs)
+    TARDIS_FAULT_PLAN      deterministic fault injection, e.g.
+                           \"kill:1@12,fail:0@9,dropconn@3,journal@5\"
+                           (see docs/serving.md)
   variants / bench-decode:
     --steps N              decode steps to time (default 64)
     --warmup N             untimed predictor-warmup steps (default 8)
@@ -263,6 +277,8 @@ fn parse_max_requests(args: &Args) -> Result<Option<usize>> {
         .map_err(|_| anyhow!("--max-requests expects an integer"))
 }
 
+/// Serve through the synchronous [`Router`]: one shared thread steps
+/// every replica. Required for backends that are not `Send` (pjrt).
 fn run_server<M: StepModel>(
     replicas: Vec<(String, InferenceEngine<M>)>,
     args: &Args,
@@ -272,6 +288,34 @@ fn run_server<M: StepModel>(
     let addr = args.str("addr", "127.0.0.1:7437");
     let max_requests = parse_max_requests(args)?;
     let served = tardis::server::tcp::serve(router, &addr, max_requests)?;
+    eprintln!("[{label}] done, served {served} requests");
+    Ok(())
+}
+
+/// Front-door knobs from the CLI flags plus the `TARDIS_FAULT_PLAN` env.
+fn front_door_config(args: &Args) -> Result<FrontDoorConfig> {
+    let base = FrontDoorConfig::default();
+    Ok(FrontDoorConfig {
+        queue_cap: args.usize("queue-cap", base.queue_cap)?,
+        journal: args.opt_str("journal").map(std::path::PathBuf::from),
+        fault_plan: FaultPlan::from_env()?,
+        ..base
+    })
+}
+
+/// Serve through the fault-tolerant [`FrontDoor`]: each replica steps on
+/// its own worker thread; panics and step errors quarantine the replica
+/// and replay its journaled in-flight work onto survivors.
+fn run_front_door<M: StepModel + Send + 'static>(
+    replicas: Vec<(String, ReplicaFactory<M>)>,
+    args: &Args,
+    label: &str,
+) -> Result<()> {
+    let fd = front_door_config(args)?;
+    let front = FrontDoor::new(replicas, fd)?;
+    let addr = args.str("addr", "127.0.0.1:7437");
+    let max_requests = parse_max_requests(args)?;
+    let served = tardis::server::tcp::serve(front, &addr, max_requests)?;
     eprintln!("[{label}] done, served {served} requests");
     Ok(())
 }
@@ -320,51 +364,73 @@ fn cmd_serve(args: &Args, forced: Option<BackendKind>) -> Result<()> {
         BackendKind::Mock => {
             let slots = args.usize("slots", 4)?;
             let max_seq = args.usize("max-seq", 256)?;
+            let copies = args.usize("replicas", 1)?.max(1);
             let names = args.list("variants", &["mock"]);
-            let replicas = names
-                .iter()
-                .map(|name| {
-                    (
+            let mut replicas: Vec<(String, ReplicaFactory<MockModel>)> = Vec::new();
+            for name in &names {
+                for _ in 0..copies {
+                    let cfg = cfg.clone();
+                    replicas.push((
                         name.clone(),
-                        InferenceEngine::new(
-                            MockModel::new(slots, max_seq, 256, vec![16, 64]),
-                            cfg.clone(),
-                        ),
-                    )
-                })
-                .collect();
+                        Box::new(move || {
+                            Ok(InferenceEngine::new(
+                                MockModel::new(slots, max_seq, 256, vec![16, 64]),
+                                cfg.clone(),
+                            ))
+                        }),
+                    ));
+                }
+            }
             eprintln!(
-                "[serve] backend=mock policy={} prefix_cache={} replicas={names:?}",
+                "[serve] backend=mock policy={} prefix_cache={} \
+                 variants={names:?} replicas_per_variant={copies}",
                 cfg.scheduler.policy.name(),
                 cfg.prefix_cache
             );
-            run_server(replicas, args, "serve")
+            run_front_door(replicas, args, "serve")
         }
         BackendKind::Native => {
             let from_manifest = args.opt_str("artifacts").is_some();
             let model_cfg = native_model_cfg(args)?;
+            let copies = args.usize("replicas", 1)?.max(1);
             let names = args.list("variants", &["dense", "tardis80"]);
-            let mut replicas = Vec::new();
+            let mut replicas: Vec<(String, ReplicaFactory<NativeModel>)> = Vec::new();
             for name in &names {
-                let model = if from_manifest {
-                    let (model, label) = native_model_from_artifacts(args, name)?;
+                // Fail fast on bad variants/manifests before the front
+                // door treats construction errors as replica faults.
+                if from_manifest {
+                    let (_, label) = native_model_from_artifacts(args, name)?;
                     eprintln!("[serve] loading {name} from {label}");
-                    model
                 } else {
-                    let mode = mode_with_overrides(args, native_mode(name)?)?;
-                    NativeModel::new(model_cfg.clone(), &mode)
-                };
-                replicas.push((
-                    name.clone(),
-                    InferenceEngine::new(model, cfg.clone()),
-                ));
+                    mode_with_overrides(args, native_mode(name)?)?;
+                }
+                for _ in 0..copies {
+                    let args = args.clone();
+                    let name_in = name.clone();
+                    let cfg = cfg.clone();
+                    let model_cfg = model_cfg.clone();
+                    replicas.push((
+                        name.clone(),
+                        Box::new(move || {
+                            let model = if from_manifest {
+                                native_model_from_artifacts(&args, &name_in)?.0
+                            } else {
+                                let mode =
+                                    mode_with_overrides(&args, native_mode(&name_in)?)?;
+                                NativeModel::new(model_cfg.clone(), &mode)
+                            };
+                            Ok(InferenceEngine::new(model, cfg.clone()))
+                        }),
+                    ));
+                }
             }
             eprintln!(
-                "[serve] backend=native policy={} prefix_cache={} replicas={names:?}",
+                "[serve] backend=native policy={} prefix_cache={} \
+                 variants={names:?} replicas_per_variant={copies}",
                 cfg.scheduler.policy.name(),
                 cfg.prefix_cache
             );
-            run_server(replicas, args, "serve")
+            run_front_door(replicas, args, "serve")
         }
         BackendKind::Pjrt => cmd_serve_pjrt(args, cfg),
     }

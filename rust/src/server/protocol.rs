@@ -4,6 +4,7 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::engine_loop::{Completion, EngineSnapshot};
 use crate::coordinator::request::{FinishReason, SamplingParams};
+use crate::coordinator::router::FrontSnapshot;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -12,6 +13,9 @@ pub enum ServerRequest {
         prompt: Vec<i32>,
         params: SamplingParams,
         variant: Option<String>,
+        /// Client retry attempt number (0 = first try); set by the
+        /// retry helper when resending after an `overloaded` shed.
+        retry: u64,
     },
     Stats,
     Ping,
@@ -77,19 +81,15 @@ pub fn parse_request(line: &str) -> Result<ServerRequest> {
                 .get("variant")
                 .and_then(Json::as_str)
                 .map(str::to_string);
-            Ok(ServerRequest::Generate { prompt, params, variant })
+            let retry = j.get("retry").and_then(Json::as_i64).unwrap_or(0).max(0) as u64;
+            Ok(ServerRequest::Generate { prompt, params, variant, retry })
         }
         other => Err(anyhow!("unknown op {other:?}")),
     }
 }
 
 fn reason_str(r: FinishReason) -> &'static str {
-    match r {
-        FinishReason::Length => "length",
-        FinishReason::Stop => "stop",
-        FinishReason::ContextOverflow => "context_overflow",
-        FinishReason::Cancelled => "cancelled",
-    }
+    r.as_str()
 }
 
 pub fn render_completion(c: &Completion, variant: &str) -> String {
@@ -108,6 +108,48 @@ pub fn render_completion(c: &Completion, variant: &str) -> String {
     .render()
 }
 
+/// The per-replica engine fields shared by [`render_stats`] and
+/// [`render_front_stats`].
+fn replica_fields<'a>(name: &'a str, s: &EngineSnapshot) -> Vec<(&'a str, Json)> {
+    vec![
+        ("variant", Json::str(name)),
+        ("policy", Json::str(s.policy)),
+        ("queue_depth", Json::num(s.queue_depth as f64)),
+        ("queue_pressure", Json::num(s.queue_pressure)),
+        ("active_slots", Json::num(s.active_slots as f64)),
+        ("inflight_prefills", Json::num(s.inflight_prefills as f64)),
+        ("slots_total", Json::num(s.slots_total as f64)),
+        ("kv_blocks_total", Json::num(s.kv_blocks_total as f64)),
+        ("kv_blocks_used", Json::num(s.kv_blocks_used as f64)),
+        ("block_utilization", Json::num(s.block_utilization)),
+        ("swapped", Json::num(s.swapped as f64)),
+        ("preemptions", Json::num(s.preemptions as f64)),
+        ("mixed_step_ratio", s.mixed_step_ratio.map(Json::num).unwrap_or(Json::Null)),
+        ("mean_occupancy", Json::num(s.mean_occupancy)),
+        ("tokens_generated", Json::num(s.tokens_generated as f64)),
+        ("admitted", Json::num(s.admitted as f64)),
+        ("finished", Json::num(s.finished as f64)),
+        ("iterations", Json::num(s.iterations as f64)),
+        (
+            "ffn_fallback_rate",
+            s.ffn_fallback_rate.map(Json::num).unwrap_or(Json::Null),
+        ),
+        (
+            "ffn_last_step_fallback_rate",
+            s.ffn_last_step_fallback_rate.map(Json::num).unwrap_or(Json::Null),
+        ),
+        ("prefix_cached_blocks", Json::num(s.prefix_cached_blocks as f64)),
+        (
+            "prefix_evictable_blocks",
+            Json::num(s.prefix_evictable_blocks as f64),
+        ),
+        ("prefix_hit_tokens", Json::num(s.prefix_hit_tokens as f64)),
+        ("prefix_shared_blocks", Json::num(s.prefix_shared_blocks as f64)),
+        ("cow_copies", Json::num(s.cow_copies as f64)),
+        ("prefix_evictions", Json::num(s.prefix_evictions as f64)),
+    ]
+}
+
 /// Render the `stats` op response: one object per replica with live
 /// queue/slot/throughput numbers.
 pub fn render_stats(replicas: &[(String, EngineSnapshot)]) -> String {
@@ -115,46 +157,60 @@ pub fn render_stats(replicas: &[(String, EngineSnapshot)]) -> String {
         ("ok", Json::Bool(true)),
         (
             "replicas",
-            Json::arr(replicas.iter().map(|(name, s)| {
-                Json::obj(vec![
-                    ("variant", Json::str(name)),
-                    ("policy", Json::str(s.policy)),
-                    ("queue_depth", Json::num(s.queue_depth as f64)),
-                    ("queue_pressure", Json::num(s.queue_pressure)),
-                    ("active_slots", Json::num(s.active_slots as f64)),
-                    ("inflight_prefills", Json::num(s.inflight_prefills as f64)),
-                    ("slots_total", Json::num(s.slots_total as f64)),
-                    ("kv_blocks_total", Json::num(s.kv_blocks_total as f64)),
-                    ("kv_blocks_used", Json::num(s.kv_blocks_used as f64)),
-                    ("block_utilization", Json::num(s.block_utilization)),
-                    ("swapped", Json::num(s.swapped as f64)),
-                    ("preemptions", Json::num(s.preemptions as f64)),
-                    ("mixed_step_ratio", s.mixed_step_ratio.map(Json::num).unwrap_or(Json::Null)),
-                    ("mean_occupancy", Json::num(s.mean_occupancy)),
-                    ("tokens_generated", Json::num(s.tokens_generated as f64)),
-                    ("admitted", Json::num(s.admitted as f64)),
-                    ("finished", Json::num(s.finished as f64)),
-                    ("iterations", Json::num(s.iterations as f64)),
-                    (
-                        "ffn_fallback_rate",
-                        s.ffn_fallback_rate.map(Json::num).unwrap_or(Json::Null),
-                    ),
-                    (
-                        "ffn_last_step_fallback_rate",
-                        s.ffn_last_step_fallback_rate.map(Json::num).unwrap_or(Json::Null),
-                    ),
-                    ("prefix_cached_blocks", Json::num(s.prefix_cached_blocks as f64)),
-                    (
-                        "prefix_evictable_blocks",
-                        Json::num(s.prefix_evictable_blocks as f64),
-                    ),
-                    ("prefix_hit_tokens", Json::num(s.prefix_hit_tokens as f64)),
-                    ("prefix_shared_blocks", Json::num(s.prefix_shared_blocks as f64)),
-                    ("cow_copies", Json::num(s.cow_copies as f64)),
-                    ("prefix_evictions", Json::num(s.prefix_evictions as f64)),
-                ])
+            Json::arr(
+                replicas
+                    .iter()
+                    .map(|(name, s)| Json::obj(replica_fields(name, s))),
+            ),
+        ),
+    ])
+    .render()
+}
+
+/// Render the `stats` op for a fault-tolerant front end: the replica
+/// objects gain health/liveness fields, and a top-level `front_door`
+/// object carries the robustness counters.
+pub fn render_front_stats(snap: &FrontSnapshot) -> String {
+    let f = &snap.front;
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        (
+            "replicas",
+            Json::arr(snap.replicas.iter().map(|r| {
+                let mut fields = replica_fields(&r.name, &r.snapshot);
+                fields.push(("health", Json::str(r.health)));
+                fields.push(("alive", Json::Bool(r.alive)));
+                fields.push(("front_inflight", Json::num(r.inflight as f64)));
+                Json::obj(fields)
             })),
         ),
+        (
+            "front_door",
+            Json::obj(vec![
+                ("submitted", Json::num(f.submitted as f64)),
+                ("completed", Json::num(f.completed as f64)),
+                ("shed", Json::num(f.shed as f64)),
+                ("retries_honored", Json::num(f.retries_honored as f64)),
+                ("replays", Json::num(f.replays as f64)),
+                ("replica_failures", Json::num(f.replica_failures as f64)),
+                ("replica_restarts", Json::num(f.replica_restarts as f64)),
+                ("recovered", Json::num(f.recovered as f64)),
+                ("replies_dropped", Json::num(f.replies_dropped as f64)),
+                ("journal_appends", Json::num(f.journal_appends as f64)),
+                ("journal_bytes", Json::num(f.journal_bytes as f64)),
+                ("journal_errors", Json::num(f.journal_errors as f64)),
+            ]),
+        ),
+    ])
+    .render()
+}
+
+/// The overload shed response: retry after the given backoff.
+pub fn render_shed(retry_after_ms: u64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("err", Json::str("overloaded")),
+        ("retry_after_ms", Json::num(retry_after_ms as f64)),
     ])
     .render()
 }
@@ -174,14 +230,33 @@ mod tests {
         )
         .unwrap();
         match r {
-            ServerRequest::Generate { prompt, params, variant } => {
+            ServerRequest::Generate { prompt, params, variant, retry } => {
                 assert_eq!(prompt, vec![104, 105]);
                 assert_eq!(params.max_tokens, 4);
                 assert!((params.temperature - 0.5).abs() < 1e-6);
                 assert!(variant.is_none());
+                assert_eq!(retry, 0);
             }
             _ => panic!("wrong request"),
         }
+    }
+
+    #[test]
+    fn parses_retry_marker() {
+        let r = parse_request(r#"{"op":"generate","prompt":"hi","retry":2}"#).unwrap();
+        match r {
+            ServerRequest::Generate { retry, .. } => assert_eq!(retry, 2),
+            _ => panic!("wrong request"),
+        }
+    }
+
+    #[test]
+    fn renders_shed() {
+        let s = render_shed(40);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("err").and_then(Json::as_str), Some("overloaded"));
+        assert_eq!(j.get("retry_after_ms").and_then(Json::as_usize), Some(40));
     }
 
     #[test]
@@ -326,6 +401,73 @@ mod tests {
             .and_then(Json::as_f64)
             .unwrap();
         assert!((last - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn renders_front_stats_with_health_and_counters() {
+        use crate::coordinator::router::{FrontDoorStats, ReplicaView};
+        let snap = EngineSnapshot {
+            policy: "fifo",
+            queue_depth: 0,
+            queue_pressure: 0.0,
+            active_slots: 0,
+            inflight_prefills: 0,
+            slots_total: 4,
+            kv_blocks_total: 4,
+            kv_blocks_used: 0,
+            block_utilization: 0.0,
+            swapped: 0,
+            preemptions: 0,
+            mixed_step_ratio: None,
+            mean_occupancy: 0.0,
+            tokens_generated: 0,
+            admitted: 0,
+            finished: 0,
+            iterations: 0,
+            ffn_fallback_rate: None,
+            ffn_last_step_fallback_rate: None,
+            prefix_cached_blocks: 0,
+            prefix_evictable_blocks: 0,
+            prefix_hit_tokens: 0,
+            prefix_shared_blocks: 0,
+            cow_copies: 0,
+            prefix_evictions: 0,
+        };
+        let front = FrontSnapshot {
+            front: FrontDoorStats {
+                submitted: 9,
+                completed: 7,
+                shed: 2,
+                replays: 1,
+                replica_failures: 1,
+                replica_restarts: 1,
+                journal_appends: 16,
+                ..Default::default()
+            },
+            replicas: vec![ReplicaView {
+                name: "mock-0".to_string(),
+                health: "degraded",
+                alive: false,
+                inflight: 3,
+                snapshot: snap,
+            }],
+        };
+        let j = Json::parse(&render_front_stats(&front)).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        let reps = j.get("replicas").and_then(Json::as_arr).unwrap();
+        assert_eq!(reps[0].get("variant").and_then(Json::as_str), Some("mock-0"));
+        assert_eq!(reps[0].get("health").and_then(Json::as_str), Some("degraded"));
+        assert_eq!(reps[0].get("alive").and_then(Json::as_bool), Some(false));
+        assert_eq!(reps[0].get("front_inflight").and_then(Json::as_usize), Some(3));
+        let fd = j.get("front_door").unwrap();
+        assert_eq!(fd.get("submitted").and_then(Json::as_usize), Some(9));
+        assert_eq!(fd.get("completed").and_then(Json::as_usize), Some(7));
+        assert_eq!(fd.get("shed").and_then(Json::as_usize), Some(2));
+        assert_eq!(fd.get("replays").and_then(Json::as_usize), Some(1));
+        assert_eq!(fd.get("replica_failures").and_then(Json::as_usize), Some(1));
+        assert_eq!(fd.get("replica_restarts").and_then(Json::as_usize), Some(1));
+        assert_eq!(fd.get("journal_appends").and_then(Json::as_usize), Some(16));
+        assert_eq!(fd.get("journal_errors").and_then(Json::as_usize), Some(0));
     }
 
     #[test]

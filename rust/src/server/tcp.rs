@@ -1,50 +1,71 @@
-//! TCP front-end: accept loop on a worker pool, engine on its own thread.
+//! TCP front-end: accept loop on a worker pool, front-end on its own
+//! thread.
 //!
-//! The engine thread multiplexes: it drains the inbound channel into the
-//! router (admission), steps the router, and dispatches completions back
-//! to the originating connection's channel. PJRT buffers never cross a
-//! thread boundary.
+//! The serve thread multiplexes any [`FrontEnd`]: it drains the inbound
+//! channel (admission, with explicit shed/reject responses), pumps the
+//! front end, and dispatches completed replies back to the originating
+//! connection's channel. With the synchronous
+//! [`Router`](crate::coordinator::router::Router) the engines step on
+//! the serve thread itself (PJRT buffers never cross a thread
+//! boundary); with the fault-tolerant
+//! [`FrontDoor`](crate::coordinator::router::FrontDoor) the serve thread
+//! only routes, and replicas step on their own workers.
+//!
+//! Inbound frames are capped at [`MAX_LINE_BYTES`]; oversized frames get
+//! a protocol error and the connection is closed rather than buffering
+//! without bound.
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::coordinator::model::StepModel;
-use crate::coordinator::router::Router;
+use crate::coordinator::request::SamplingParams;
+use crate::coordinator::router::{FrontEnd, SubmitOutcome};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
 use super::protocol::{
-    parse_request, render_completion, render_error, render_stats, ServerRequest,
+    parse_request, render_completion, render_error, render_front_stats, render_shed,
+    ServerRequest,
 };
 
-enum ToEngine {
+/// Hard cap on one inbound request line (1 MiB). A line that exceeds it
+/// is answered with a protocol error and the connection is closed.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+enum FrontMsg {
     Generate {
-        line_req: ServerRequest,
+        prompt: Vec<i32>,
+        params: SamplingParams,
+        variant: Option<String>,
+        retry: u64,
         reply: Sender<String>,
     },
     Stats {
         reply: Sender<String>,
     },
-    Shutdown,
 }
 
-/// Serve `router` on `addr` until `max_requests` generate calls complete
-/// (None = forever). Returns the number of requests served.
-pub fn serve<M: StepModel>(
-    mut router: Router<M>,
+/// Serve `front` on `addr` until `max_requests` generate calls complete
+/// (None = forever). Returns the number of requests served. Stats calls,
+/// rejected requests, and journal-recovered replays don't count toward
+/// the target.
+pub fn serve<F: FrontEnd>(
+    mut front: F,
     addr: &str,
     max_requests: Option<usize>,
 ) -> Result<usize> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     eprintln!("[server] listening on {local}");
-    let (tx, rx): (Sender<ToEngine>, Receiver<ToEngine>) = channel();
+    let (tx, rx): (Sender<FrontMsg>, Receiver<FrontMsg>) = channel();
 
-    // Accept loop on the pool; engine loop on this thread.
+    // Accept loop on the pool; front-end loop on this thread.
     let pool = ThreadPool::new(4);
     let accept_tx = tx.clone();
     let served_target = max_requests;
@@ -57,41 +78,57 @@ pub fn serve<M: StepModel>(
     });
 
     let mut served = 0usize;
-    // ticket -> (reply channel, replica name)
-    let mut waiting: HashMap<(usize, u64), Sender<String>> = HashMap::new();
+    // front-end ticket -> reply channel
+    let mut waiting: HashMap<u64, Sender<String>> = HashMap::new();
     loop {
         // Admit whatever has arrived.
         while let Ok(msg) = rx.try_recv() {
             match msg {
-                ToEngine::Shutdown => return Ok(served),
-                ToEngine::Stats { reply } => {
-                    let _ = reply.send(render_stats(&router.stats_snapshot()));
+                FrontMsg::Stats { reply } => {
+                    let _ = reply.send(render_front_stats(&front.front_snapshot()));
                 }
-                ToEngine::Generate { line_req, reply } => {
-                    if let ServerRequest::Generate { prompt, params, variant } =
-                        line_req
+                FrontMsg::Generate { prompt, params, variant, retry, reply } => {
+                    match front.submit_front(variant.as_deref(), prompt, params, retry > 0)
                     {
-                        match router.submit(variant.as_deref(), prompt, params) {
-                            Ok(t) => {
-                                waiting.insert((t.replica, t.request), reply);
+                        SubmitOutcome::Admitted { ticket, drop_reply } => {
+                            if drop_reply {
+                                // Injected dropconn fault: the client
+                                // vanishes; the reply has nowhere to go.
+                                drop(reply);
+                            } else {
+                                waiting.insert(ticket, reply);
                             }
-                            Err(e) => {
-                                let _ = reply.send(render_error(&e.to_string()));
-                            }
+                        }
+                        SubmitOutcome::Shed { retry_after_ms } => {
+                            let _ = reply.send(render_shed(retry_after_ms));
+                        }
+                        SubmitOutcome::Rejected(msg) => {
+                            let _ = reply.send(render_error(&msg));
                         }
                     }
                 }
             }
         }
         // Make progress.
-        let busy = router.step_all()?;
-        for i in 0..router.n_replicas() {
-            let name = router.replica(i).name.clone();
-            for c in router.replica(i).engine.take_completions() {
-                if let Some(reply) = waiting.remove(&(i, c.id)) {
-                    let _ = reply.send(render_completion(&c, &name));
-                    served += 1;
+        front.pump(Duration::from_millis(1))?;
+        for r in front.take_replies() {
+            let rendered = match &r.result {
+                Ok(c) => render_completion(c, &r.replica),
+                Err(e) => render_error(e),
+            };
+            match waiting.remove(&r.ticket) {
+                Some(reply) => {
+                    if reply.send(rendered).is_err() {
+                        front.note_reply_dropped();
+                    }
                 }
+                // Recovered replays never had a live waiter; anything
+                // else missing means the client disconnected mid-stream.
+                None if !r.recovered => front.note_reply_dropped(),
+                None => {}
+            }
+            if !r.recovered && r.result.is_ok() {
+                served += 1;
             }
         }
         if let Some(target) = served_target {
@@ -99,21 +136,58 @@ pub fn serve<M: StepModel>(
                 return Ok(served);
             }
         }
-        if !busy && waiting.is_empty() {
-            std::thread::sleep(Duration::from_millis(1));
-        }
     }
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<ToEngine>) {
-    let peer = stream.peer_addr().ok();
+/// Read one `\n`-terminated frame, at most [`MAX_LINE_BYTES`] long.
+enum Frame {
+    Line(String),
+    /// EOF (clean, or a half-written final frame — dropped either way).
+    Eof,
+    Oversized,
+}
+
+fn read_frame(reader: &mut BufReader<TcpStream>) -> Frame {
+    let mut buf = Vec::new();
+    let n = match reader
+        .take((MAX_LINE_BYTES + 1) as u64)
+        .read_until(b'\n', &mut buf)
+    {
+        Ok(n) => n,
+        Err(_) => return Frame::Eof,
+    };
+    if n == 0 {
+        return Frame::Eof;
+    }
+    if buf.last() != Some(&b'\n') {
+        // No terminator: either the line kept going past the cap, or the
+        // peer closed mid-frame.
+        if buf.len() > MAX_LINE_BYTES {
+            return Frame::Oversized;
+        }
+        return Frame::Eof;
+    }
+    Frame::Line(String::from_utf8_lossy(&buf).into_owned())
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<FrontMsg>) {
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_frame(&mut reader) {
+            Frame::Eof => break,
+            Frame::Oversized => {
+                let msg =
+                    render_error(&format!("line exceeds {MAX_LINE_BYTES} byte limit"));
+                let _ = writer.write_all(msg.as_bytes());
+                let _ = writer.write_all(b"\n");
+                break;
+            }
+            Frame::Line(l) => l,
+        };
         if line.trim().is_empty() {
             continue;
         }
@@ -121,10 +195,10 @@ fn handle_conn(stream: TcpStream, tx: Sender<ToEngine>) {
             Err(e) => render_error(&e.to_string()),
             Ok(ServerRequest::Ping) => r#"{"ok":true,"pong":true}"#.to_string(),
             Ok(ServerRequest::Stats) => {
-                // The engine thread owns the router; ask it for a
+                // The serve thread owns the front end; ask it for a
                 // snapshot the same way generate results flow back.
                 let (reply_tx, reply_rx) = channel();
-                if tx.send(ToEngine::Stats { reply: reply_tx }).is_err() {
+                if tx.send(FrontMsg::Stats { reply: reply_tx }).is_err() {
                     render_error("engine shut down")
                 } else {
                     match reply_rx.recv_timeout(Duration::from_secs(10)) {
@@ -133,12 +207,11 @@ fn handle_conn(stream: TcpStream, tx: Sender<ToEngine>) {
                     }
                 }
             }
-            Ok(req @ ServerRequest::Generate { .. }) => {
+            Ok(ServerRequest::Generate { prompt, params, variant, retry }) => {
                 let (reply_tx, reply_rx) = channel();
-                if tx
-                    .send(ToEngine::Generate { line_req: req, reply: reply_tx })
-                    .is_err()
-                {
+                let msg =
+                    FrontMsg::Generate { prompt, params, variant, retry, reply: reply_tx };
+                if tx.send(msg).is_err() {
                     render_error("engine shut down")
                 } else {
                     match reply_rx.recv_timeout(Duration::from_secs(120)) {
@@ -154,7 +227,6 @@ fn handle_conn(stream: TcpStream, tx: Sender<ToEngine>) {
             break;
         }
     }
-    let _ = peer;
 }
 
 /// Minimal client for tests/examples: send one line, read one line.
@@ -168,11 +240,82 @@ pub fn client_roundtrip(addr: &str, line: &str) -> Result<String> {
     Ok(response.trim().to_string())
 }
 
+/// Outcome of [`client_roundtrip_with_retry`].
+#[derive(Debug, Clone)]
+pub struct RetryOutcome {
+    /// The final response line (possibly still an `overloaded` shed if
+    /// `max_attempts` ran out).
+    pub response: String,
+    /// Round trips performed (1 = no retries needed).
+    pub attempts: u32,
+}
+
+/// `overloaded` shed responses carry `retry_after_ms`; extract it.
+fn shed_backoff_ms(response: &str) -> Option<u64> {
+    let j = Json::parse(response).ok()?;
+    if j.get("err").and_then(Json::as_str) != Some("overloaded") {
+        return None;
+    }
+    Some(j.get("retry_after_ms").and_then(Json::as_i64).unwrap_or(25).max(0) as u64)
+}
+
+/// Re-render `line` with a `"retry":attempt` marker so the server can
+/// count honored retries. Non-object lines pass through untouched.
+fn with_retry_marker(line: &str, attempt: u32) -> String {
+    match Json::parse(line.trim()) {
+        Ok(Json::Obj(mut m)) => {
+            m.insert("retry".to_string(), Json::num(attempt as f64));
+            Json::Obj(m).render()
+        }
+        _ => line.to_string(),
+    }
+}
+
+/// [`client_roundtrip`] with shed-aware retry: on an `overloaded`
+/// response, sleep `retry_after_ms` plus deterministic jitter (seeded
+/// `Rng`, so tests reproduce) and resend with a `"retry":N` marker, up
+/// to `max_attempts` total round trips.
+pub fn client_roundtrip_with_retry(
+    addr: &str,
+    line: &str,
+    max_attempts: u32,
+    seed: u64,
+) -> Result<RetryOutcome> {
+    assert!(max_attempts >= 1);
+    let mut rng = Rng::new(seed);
+    let mut attempt = 0u32;
+    loop {
+        let sent = if attempt == 0 {
+            line.to_string()
+        } else {
+            with_retry_marker(line, attempt)
+        };
+        let response = client_roundtrip(addr, &sent)?;
+        attempt += 1;
+        match shed_backoff_ms(&response) {
+            Some(backoff_ms) if attempt < max_attempts => {
+                let jitter = rng.below(backoff_ms / 2 + 1);
+                std::thread::sleep(Duration::from_millis(backoff_ms + jitter));
+            }
+            _ => return Ok(RetryOutcome { response, attempts: attempt }),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::engine_loop::{EngineConfig, InferenceEngine};
     use crate::coordinator::model::MockModel;
+    use crate::coordinator::router::{FrontDoor, FrontDoorConfig, ReplicaFactory, Router};
+
+    fn ephemeral_addr() -> String {
+        // Port 0 = ephemeral; learn the port via a pre-bound listener.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        addr
+    }
 
     #[test]
     fn serves_generate_over_tcp() {
@@ -183,10 +326,7 @@ mod tests {
                 EngineConfig::default(),
             ),
         )]);
-        // Port 0 = ephemeral; learn the port via a pre-bound listener.
-        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap().to_string();
-        drop(listener);
+        let addr = ephemeral_addr();
         let addr2 = addr.clone();
         let h = std::thread::spawn(move || serve(router, &addr2, Some(1)));
         std::thread::sleep(Duration::from_millis(100));
@@ -210,9 +350,7 @@ mod tests {
                 EngineConfig::default(),
             ),
         )]);
-        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap().to_string();
-        drop(listener);
+        let addr = ephemeral_addr();
         let addr2 = addr.clone();
         let h = std::thread::spawn(move || serve(router, &addr2, Some(1)));
         std::thread::sleep(Duration::from_millis(100));
@@ -227,6 +365,9 @@ mod tests {
         assert!(resp.contains("\"kv_blocks_total\":2"), "{resp}");
         assert!(resp.contains("\"preemptions\":0"), "{resp}");
         assert!(resp.contains("\"block_utilization\":"), "{resp}");
+        // Front-door counters render for the synchronous tier too.
+        assert!(resp.contains("\"front_door\""), "{resp}");
+        assert!(resp.contains("\"health\":\"healthy\""), "{resp}");
         // One generate terminates the server (stats don't count).
         let resp = client_roundtrip(
             &addr,
@@ -236,5 +377,92 @@ mod tests {
         assert!(resp.contains("\"ok\":true"), "{resp}");
         let served = h.join().unwrap().unwrap();
         assert_eq!(served, 1);
+    }
+
+    fn mock_factory() -> ReplicaFactory<MockModel> {
+        Box::new(|| {
+            Ok(InferenceEngine::new(
+                MockModel::new(2, 64, 256, vec![4, 8]),
+                EngineConfig::default(),
+            ))
+        })
+    }
+
+    #[test]
+    fn serves_front_door_over_tcp() {
+        let front = FrontDoor::new(
+            vec![
+                ("mock".to_string(), mock_factory()),
+                ("mock".to_string(), mock_factory()),
+            ],
+            FrontDoorConfig::default(),
+        )
+        .unwrap();
+        let addr = ephemeral_addr();
+        let addr2 = addr.clone();
+        let h = std::thread::spawn(move || serve(front, &addr2, Some(2)));
+        std::thread::sleep(Duration::from_millis(100));
+        let stats = client_roundtrip(&addr, r#"{"op":"stats"}"#).unwrap();
+        assert!(stats.contains("\"variant\":\"mock-0\""), "{stats}");
+        assert!(stats.contains("\"variant\":\"mock-1\""), "{stats}");
+        assert!(stats.contains("\"alive\":true"), "{stats}");
+        assert!(stats.contains("\"front_door\""), "{stats}");
+        for _ in 0..2 {
+            let resp = client_roundtrip(
+                &addr,
+                r#"{"op":"generate","prompt":"ab","max_tokens":3}"#,
+            )
+            .unwrap();
+            assert!(resp.contains("\"ok\":true"), "{resp}");
+        }
+        let served = h.join().unwrap().unwrap();
+        assert_eq!(served, 2);
+    }
+
+    #[test]
+    fn rejects_oversized_and_survives_malformed_frames() {
+        let router = Router::new(vec![(
+            "mock".to_string(),
+            InferenceEngine::new(
+                MockModel::new(2, 64, 256, vec![4, 8]),
+                EngineConfig::default(),
+            ),
+        )]);
+        let addr = ephemeral_addr();
+        let addr2 = addr.clone();
+        let h = std::thread::spawn(move || serve(router, &addr2, Some(1)));
+        std::thread::sleep(Duration::from_millis(100));
+        // Oversized frame: error response, connection closed.
+        let big = format!("{{\"op\":\"generate\",\"prompt\":\"{}\"}}", "x".repeat(MAX_LINE_BYTES));
+        let resp = client_roundtrip(&addr, &big).unwrap();
+        assert!(resp.contains("byte limit"), "{resp}");
+        // Malformed json: error response, server keeps serving.
+        let resp = client_roundtrip(&addr, "this is not json").unwrap();
+        assert!(resp.contains("\"ok\":false"), "{resp}");
+        // Half-written frame (no newline, then close): dropped silently.
+        {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(b"{\"op\":\"gener").unwrap();
+        }
+        // The server is still healthy.
+        let resp = client_roundtrip(
+            &addr,
+            r#"{"op":"generate","prompt":"ab","max_tokens":2}"#,
+        )
+        .unwrap();
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+        let served = h.join().unwrap().unwrap();
+        assert_eq!(served, 1);
+    }
+
+    #[test]
+    fn retry_helper_marks_and_parses() {
+        let marked = with_retry_marker(r#"{"op":"generate","prompt":"hi"}"#, 2);
+        let j = Json::parse(&marked).unwrap();
+        assert_eq!(j.get("retry").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("op").and_then(Json::as_str), Some("generate"));
+        assert_eq!(shed_backoff_ms(&render_shed(40)), Some(40));
+        assert_eq!(shed_backoff_ms(r#"{"ok":true}"#), None);
+        assert_eq!(shed_backoff_ms("garbage"), None);
     }
 }

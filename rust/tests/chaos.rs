@@ -1,0 +1,367 @@
+//! Chaos-harness integration tests for the fault-tolerant front door:
+//! deterministic fault injection ([`FaultPlan`]) drives replica kills,
+//! step failures, dropped connections, and journal recovery end to end,
+//! asserting the robustness contract — zero lost admitted requests,
+//! bitwise-identical streams for unaffected requests, explicit shedding
+//! under overload — at the library and TCP layers.
+//!
+//! The CI chaos lane runs this suite with `TARDIS_ASSERT_ZERO_LOST=1`;
+//! the zero-lost property is asserted unconditionally here (the env var
+//! additionally gates the front-door bench in `benches/coordinator.rs`).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::health::{FaultPlan, HealthState};
+use tardis::coordinator::journal::{Journal, JournalEntry};
+use tardis::coordinator::model::MockModel;
+use tardis::coordinator::request::SamplingParams;
+use tardis::coordinator::router::{
+    FrontDoor, FrontDoorConfig, FrontEnd, ReplicaFactory, SubmitOutcome,
+};
+use tardis::server::tcp::{client_roundtrip, client_roundtrip_with_retry, serve};
+use tardis::util::json::Json;
+
+fn mock_factory(spin_us: u64) -> ReplicaFactory<MockModel> {
+    Box::new(move || {
+        let mut m = MockModel::new(4, 128, 256, vec![4, 16]);
+        m.spin_per_call = Duration::from_micros(spin_us);
+        Ok(InferenceEngine::new(m, EngineConfig::default()))
+    })
+}
+
+fn params(max_tokens: usize) -> SamplingParams {
+    SamplingParams { max_tokens, ..Default::default() }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("tardis-chaos-{name}-{}", std::process::id()));
+    p
+}
+
+fn ephemeral_addr() -> String {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    addr
+}
+
+fn admit<M: tardis::coordinator::model::StepModel + Send + 'static>(
+    front: &mut FrontDoor<M>,
+    prompt: Vec<i32>,
+    p: SamplingParams,
+) -> u64 {
+    match front.submit_front(None, prompt, p, false) {
+        SubmitOutcome::Admitted { ticket, .. } => ticket,
+        other => panic!("expected admission, got {other:?}"),
+    }
+}
+
+/// The headline chaos scenario: two replicas, one killed mid-flight by
+/// an injected panic. Every admitted request must still complete, with
+/// token streams bitwise identical to a fault-free run, and the journal
+/// must close out every admission.
+#[test]
+fn killed_replica_loses_no_admitted_requests() {
+    let prompts: Vec<Vec<i32>> =
+        (0..24).map(|i| vec![3 + i as i32, 7, 11 + (i % 5) as i32]).collect();
+    let p = params(6);
+
+    // Fault-free baseline: prompt -> generated tokens. The mock model
+    // decodes deterministically from (token, pos), so streams must not
+    // depend on which replica or batch composition served them.
+    let mut baseline: HashMap<Vec<i32>, Vec<i32>> = HashMap::new();
+    {
+        let mut front = FrontDoor::new(
+            vec![("mock".to_string(), mock_factory(0))],
+            FrontDoorConfig::default(),
+        )
+        .unwrap();
+        for prompt in &prompts {
+            admit(&mut front, prompt.clone(), p);
+        }
+        for r in front.drain(Duration::from_secs(30)).unwrap() {
+            let c = r.result.expect("baseline completion");
+            baseline.insert(c.prompt.clone(), c.tokens.clone());
+        }
+    }
+    assert_eq!(baseline.len(), prompts.len());
+
+    // Chaos run: kill replica 1 at its 6th engine iteration, with the
+    // admission journal on. The spin keeps work in flight at the kill.
+    let journal = tmp("kill");
+    let _ = std::fs::remove_file(&journal);
+    let cfg = FrontDoorConfig {
+        journal: Some(journal.clone()),
+        fault_plan: FaultPlan::parse("kill:1@6").unwrap(),
+        probe_base: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let mut front = FrontDoor::new(
+        vec![
+            ("mock".to_string(), mock_factory(200)),
+            ("mock".to_string(), mock_factory(200)),
+        ],
+        cfg,
+    )
+    .unwrap();
+    assert_eq!(front.replica_names(), vec!["mock-0", "mock-1"]);
+    for prompt in &prompts {
+        admit(&mut front, prompt.clone(), p);
+    }
+    let replies = front.drain(Duration::from_secs(30)).unwrap();
+
+    // Zero lost admitted requests (the TARDIS_ASSERT_ZERO_LOST
+    // contract), and every stream bitwise identical to the baseline.
+    assert_eq!(replies.len(), prompts.len());
+    for r in &replies {
+        let c = r.result.as_ref().expect("completion despite the kill");
+        assert_eq!(
+            baseline[&c.prompt], c.tokens,
+            "stream for prompt {:?} diverged after replay",
+            c.prompt
+        );
+    }
+    assert_eq!(front.stats.replica_failures, 1);
+    assert!(front.stats.replays >= 1, "the dead replica held in-flight work");
+    assert_eq!(front.stats.completed as usize, prompts.len());
+
+    // The backoff probe restarts the dead replica.
+    let t0 = Instant::now();
+    while front.stats.replica_restarts == 0 && t0.elapsed() < Duration::from_secs(5) {
+        front.pump(Duration::from_millis(5)).unwrap();
+    }
+    assert!(front.stats.replica_restarts >= 1);
+    let (_, alive) = front.replica_health(1);
+    assert!(alive);
+
+    // Journal accounting: one admit and one done per request, no errors.
+    let snap = front.front_snapshot();
+    assert_eq!(snap.front.journal_appends, 2 * prompts.len() as u64);
+    assert_eq!(snap.front.journal_errors, 0);
+    assert!(snap.front.journal_bytes > 0);
+    assert_eq!(snap.replicas.len(), 2);
+    drop(front);
+    let (pending, _, report) = Journal::recover(&journal).unwrap();
+    assert!(pending.is_empty(), "every admission was closed out");
+    assert_eq!(report.admits as usize, prompts.len());
+    assert_eq!(report.dones as usize, prompts.len());
+    let _ = std::fs::remove_file(&journal);
+}
+
+/// A step *error* (not a panic) on the only replica: the front door must
+/// restart it from the factory and replay the orphaned work onto the new
+/// incarnation, which then proves itself back to Healthy.
+#[test]
+fn failed_step_restarts_and_replays_on_same_replica() {
+    let cfg = FrontDoorConfig {
+        fault_plan: FaultPlan::parse("fail:0@4").unwrap(),
+        probe_base: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let mut front =
+        FrontDoor::new(vec![("mock".to_string(), mock_factory(100))], cfg).unwrap();
+    for i in 0..8 {
+        admit(&mut front, vec![40 + i, 2], params(6));
+    }
+    let replies = front.drain(Duration::from_secs(30)).unwrap();
+    assert_eq!(replies.len(), 8);
+    assert!(replies.iter().all(|r| r.result.is_ok()));
+    assert_eq!(front.stats.replica_failures, 1);
+    assert!(front.stats.replica_restarts >= 1);
+    assert!(front.stats.replays >= 1);
+    let (state, alive) = front.replica_health(0);
+    assert!(alive);
+    assert_eq!(state, HealthState::Healthy, "completions prove the restart out");
+}
+
+/// Crash-recovery round trip: admissions journaled by a previous process
+/// incarnation (minus the completed one) replay at construction, finish,
+/// and the ticket space continues past the journal's high-water mark.
+#[test]
+fn journal_recovery_replays_unfinished_admissions() {
+    let path = tmp("recover");
+    let _ = std::fs::remove_file(&path);
+    {
+        let mut j = Journal::open(&path).unwrap();
+        let p = params(4);
+        j.append_admit(&JournalEntry {
+            ticket: 1,
+            prompt: vec![5, 6],
+            params: p,
+            variant: None,
+        })
+        .unwrap();
+        j.append_admit(&JournalEntry {
+            ticket: 2,
+            prompt: vec![7],
+            params: p,
+            variant: Some("mock".to_string()),
+        })
+        .unwrap();
+        j.append_admit(&JournalEntry {
+            ticket: 3,
+            prompt: vec![9, 9],
+            params: p,
+            variant: None,
+        })
+        .unwrap();
+        j.append_done(2, "length").unwrap();
+    }
+    let cfg = FrontDoorConfig { journal: Some(path.clone()), ..Default::default() };
+    let mut front =
+        FrontDoor::new(vec![("mock".to_string(), mock_factory(0))], cfg).unwrap();
+    assert_eq!(front.stats.recovered, 2);
+    assert_eq!(front.pending(), 2);
+    let replies = front.drain(Duration::from_secs(10)).unwrap();
+    assert_eq!(replies.len(), 2);
+    assert!(replies.iter().all(|r| r.recovered && r.result.is_ok()));
+
+    let ticket = admit(&mut front, vec![4, 2], params(2));
+    assert!(ticket >= 4, "new tickets continue past the recovered ones");
+    front.drain(Duration::from_secs(10)).unwrap();
+    drop(front);
+
+    let (pending, _, report) = Journal::recover(&path).unwrap();
+    assert!(pending.is_empty());
+    assert_eq!(report.admits, 4); // 3 pre-crash + 1 new (replays are not re-admitted)
+    assert_eq!(report.dones, 4); // 1 pre-crash + 2 recovered + 1 new
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Past `queue_cap` in-flight per replica, submissions shed with an
+/// explicit `retry_after_ms`; a retried submission is admitted and
+/// counted once capacity frees up.
+#[test]
+fn overload_sheds_then_honors_retry() {
+    let cfg = FrontDoorConfig { queue_cap: 2, ..Default::default() };
+    let mut front =
+        FrontDoor::new(vec![("mock".to_string(), mock_factory(2000))], cfg).unwrap();
+    let p = params(2);
+    let mut shed_after = None;
+    for i in 0..3i32 {
+        match front.submit_front(None, vec![10 + i], p, false) {
+            SubmitOutcome::Admitted { .. } => assert!(i < 2),
+            SubmitOutcome::Shed { retry_after_ms } => {
+                assert_eq!(i, 2, "only the over-cap submission sheds");
+                shed_after = Some(retry_after_ms);
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+    }
+    let retry_after = shed_after.expect("third submission should shed");
+    assert!((1..=500).contains(&retry_after));
+    assert_eq!(front.stats.shed, 1);
+
+    front.drain(Duration::from_secs(10)).unwrap();
+    match front.submit_front(None, vec![13], p, true) {
+        SubmitOutcome::Admitted { .. } => {}
+        other => panic!("retry should be admitted, got {other:?}"),
+    }
+    assert_eq!(front.stats.retries_honored, 1);
+    front.drain(Duration::from_secs(10)).unwrap();
+    let snap = front.front_snapshot();
+    assert_eq!(snap.front.shed, 1);
+    assert_eq!(snap.front.completed, 3);
+}
+
+/// End-to-end overload over TCP: concurrent clients against one slow,
+/// cap-1 replica. The retry helper backs off on `overloaded` responses
+/// until every client is served.
+#[test]
+fn tcp_overload_retries_until_served() {
+    let addr = ephemeral_addr();
+    let cfg = FrontDoorConfig { queue_cap: 1, ..Default::default() };
+    let front =
+        FrontDoor::new(vec![("mock".to_string(), mock_factory(3000))], cfg).unwrap();
+    let srv = {
+        let addr = addr.clone();
+        thread::spawn(move || serve(front, &addr, Some(4)).unwrap())
+    };
+    thread::sleep(Duration::from_millis(100));
+    let clients: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let line = format!(
+                    r#"{{"op":"generate","prompt":[{}],"max_tokens":2}}"#,
+                    20 + i
+                );
+                client_roundtrip_with_retry(&addr, &line, 64, 42 + i as u64).unwrap()
+            })
+        })
+        .collect();
+    for c in clients {
+        let out = c.join().unwrap();
+        let j = Json::parse(&out.response).unwrap();
+        assert_eq!(
+            j.get("ok").and_then(Json::as_bool),
+            Some(true),
+            "client response after {} attempts: {}",
+            out.attempts,
+            out.response
+        );
+    }
+    assert_eq!(srv.join().unwrap(), 4);
+}
+
+/// The dropconn fault marks exactly the targeted admission for reply
+/// dropping; execution is unaffected (the request still completes and
+/// journals), only its reply path vanishes.
+#[test]
+fn dropconn_fault_targets_exact_admission() {
+    let cfg = FrontDoorConfig {
+        fault_plan: FaultPlan::parse("dropconn@1").unwrap(),
+        ..Default::default()
+    };
+    let mut front =
+        FrontDoor::new(vec![("mock".to_string(), mock_factory(0))], cfg).unwrap();
+    let p = params(2);
+    let mut drops = Vec::new();
+    for i in 0..3i32 {
+        match front.submit_front(None, vec![30 + i], p, false) {
+            SubmitOutcome::Admitted { drop_reply, .. } => drops.push(drop_reply),
+            other => panic!("expected admission, got {other:?}"),
+        }
+    }
+    assert_eq!(drops, vec![false, true, false]);
+    let replies = front.drain(Duration::from_secs(10)).unwrap();
+    assert_eq!(replies.len(), 3, "the front door still completes dropped requests");
+    assert!(replies.iter().all(|r| r.result.is_ok()));
+}
+
+/// Same fault over TCP: the dropped client gets a prompt error (its
+/// reply channel died), the others full completions — and the server
+/// keeps counting all three toward `max_requests`, so a vanished client
+/// cannot wedge a bounded serve.
+#[test]
+fn tcp_dropconn_does_not_wedge_bounded_serve() {
+    let addr = ephemeral_addr();
+    let cfg = FrontDoorConfig {
+        fault_plan: FaultPlan::parse("dropconn@1").unwrap(),
+        ..Default::default()
+    };
+    let front =
+        FrontDoor::new(vec![("mock".to_string(), mock_factory(0))], cfg).unwrap();
+    let srv = {
+        let addr = addr.clone();
+        thread::spawn(move || serve(front, &addr, Some(3)).unwrap())
+    };
+    thread::sleep(Duration::from_millis(100));
+    let mut oks = 0;
+    for i in 0..3 {
+        let line =
+            format!(r#"{{"op":"generate","prompt":[{}],"max_tokens":2}}"#, 50 + i);
+        let resp = client_roundtrip(&addr, &line).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        if j.get("ok").and_then(Json::as_bool) == Some(true) {
+            oks += 1;
+        }
+    }
+    assert_eq!(oks, 2, "exactly the dropped admission loses its reply");
+    assert_eq!(srv.join().unwrap(), 3);
+}
