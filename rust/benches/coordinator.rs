@@ -329,7 +329,12 @@ fn write_bench_json(
         o.insert("mixed_step_ratio".to_string(), Json::Num(r.mixed_ratio));
         cases.insert(name.to_string(), Json::Obj(o));
     }
-    let mut coord = BTreeMap::new();
+    // Start from the existing coordinator object: `bench-trace` owns the
+    // sibling `slo` key and must survive a rerun of this suite.
+    let mut coord = match root.get("coordinator") {
+        Some(Json::Obj(map)) => map.clone(),
+        _ => BTreeMap::new(),
+    };
     coord.insert(
         "workload".to_string(),
         Json::Str(format!(

@@ -66,6 +66,17 @@ pub enum StepFault {
     Error,
 }
 
+/// The engine's request-latency clock. `Wall` (default) reads real time
+/// relative to engine construction. `Virtual` is a replay clock advanced
+/// only by [`InferenceEngine::advance_clock_us`], which makes every
+/// µs stamp — and therefore TTFT/TPOT, EDF deadlines and goodput —
+/// bitwise reproducible across runs of the same trace.
+#[derive(Debug, Clone, Copy)]
+enum Clock {
+    Wall(Instant),
+    Virtual(u64),
+}
+
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub queue_capacity: usize,
@@ -213,6 +224,15 @@ pub struct Completion {
     pub queue_ms: f64,
     pub first_token_ms: f64,
     pub total_ms: f64,
+    /// Engine-clock TTFT in µs (enqueue → first token). On the virtual
+    /// replay clock this is bitwise deterministic; on the wall clock it
+    /// tracks `first_token_ms`. `None` if no token was produced.
+    pub ttft_us: Option<u64>,
+    /// Engine-clock total latency in µs (enqueue → finish).
+    pub total_us: Option<u64>,
+    /// Whether the request ran degraded (forced-fold FFN) — stamped at
+    /// the submission boundary by overload admission control.
+    pub degraded: bool,
     /// Prompt tokens served from the prefix cache (prefill skipped).
     pub prefix_hit_tokens: usize,
 }
@@ -302,6 +322,8 @@ pub struct InferenceEngine<M: StepModel> {
     /// One-shot injected step faults by iteration number (chaos
     /// harness); consumed when fired.
     step_faults: Vec<(u64, StepFault)>,
+    /// Source of the µs stamps on [`Request`] / [`Completion`].
+    clock: Clock,
     pub stats: EngineStats,
     pub decode_latency_ms: Samples,
 }
@@ -331,6 +353,7 @@ impl<M: StepModel> InferenceEngine<M> {
             queue_pins: HashMap::new(),
             pins_suspended: false,
             step_faults: Vec::new(),
+            clock: Clock::Wall(Instant::now()),
             stats: EngineStats::default(),
             decode_latency_ms: Samples::new(),
             model,
@@ -346,6 +369,30 @@ impl<M: StepModel> InferenceEngine<M> {
 
     pub fn queue_pressure(&self) -> f64 {
         self.queue.pressure()
+    }
+
+    /// Engine-clock reading in µs: elapsed wall time since construction,
+    /// or the virtual replay clock's current value.
+    pub fn now_us(&self) -> u64 {
+        match self.clock {
+            Clock::Wall(epoch) => epoch.elapsed().as_micros() as u64,
+            Clock::Virtual(now) => now,
+        }
+    }
+
+    /// Switch to the deterministic virtual clock (starting at 0). Time
+    /// then advances only via [`Self::advance_clock_us`] — the trace
+    /// harness charges a modeled cost per step, so latency stamps and
+    /// goodput become bitwise-reproducible functions of the trace.
+    pub fn enable_virtual_clock(&mut self) {
+        self.clock = Clock::Virtual(0);
+    }
+
+    /// Advance the virtual clock; no-op on the wall clock.
+    pub fn advance_clock_us(&mut self, us: u64) {
+        if let Clock::Virtual(now) = &mut self.clock {
+            *now = now.saturating_add(us);
+        }
     }
 
     /// The longest sequence a request can reach: the model's context,
@@ -410,7 +457,8 @@ impl<M: StepModel> InferenceEngine<M> {
         }
         let id = self.next_id;
         self.next_id += 1;
-        let req = Request::new(id, prompt, params);
+        let mut req = Request::new(id, prompt, params);
+        req.enqueued_us = self.now_us();
         self.queue.push(req).map_err(|QueueFull(_)| {
             self.next_id -= 1;
             SubmitError::Backpressure {
@@ -541,6 +589,7 @@ impl<M: StepModel> InferenceEngine<M> {
                         prompt_len: r.prompt.len(),
                         priority: r.params.priority,
                         arrival,
+                        deadline_us: r.deadline_us(),
                         first_chunk: self.next_chunk_len(r.prompt.len() - hit_tokens),
                         hit_tokens,
                         hit_blocks,
@@ -761,6 +810,7 @@ impl<M: StepModel> InferenceEngine<M> {
         let swap = self.model.kv_save(p.slot, st.next_pos)?;
         self.release_kv(p.slot);
         self.slots.release(p.slot);
+        self.model.set_slot_degrade(p.slot, false);
         req.state = RequestState::Preempted;
         self.stats.preemptions += 1;
         self.swapped.push_back(SwappedRequest {
@@ -791,6 +841,7 @@ impl<M: StepModel> InferenceEngine<M> {
         let mut req = job.req;
         self.release_kv(a.slot);
         self.slots.release(a.slot);
+        self.model.set_slot_degrade(a.slot, false);
         self.rngs.remove(&req.id);
         req.state = RequestState::Queued;
         req.prefix_hit = 0; // it will re-match (or not) on re-admission
@@ -818,6 +869,7 @@ impl<M: StepModel> InferenceEngine<M> {
         );
         self.grow_table(r.slot, self.layout.blocks_to_resume(next_pos))?;
         self.model.kv_restore(r.slot, &swap)?;
+        self.model.set_slot_degrade(r.slot, req.params.degrade);
         req.state = RequestState::Decoding { slot: r.slot };
         self.batcher.occupy(r.slot, req.id, next_pos, pending_token);
         self.active.insert(r.slot, req);
@@ -855,6 +907,7 @@ impl<M: StepModel> InferenceEngine<M> {
         }
         req.state = RequestState::Prefilling { slot: adm.slot, next: pin.hit_tokens };
         req.admitted_at = Some(Instant::now());
+        self.model.set_slot_degrade(adm.slot, req.params.degrade);
         self.rngs.insert(req.id, Rng::new(req.params.seed ^ req.id));
         self.stats.admitted += 1;
         self.prefilling.insert(PrefillJob {
@@ -928,10 +981,12 @@ impl<M: StepModel> InferenceEngine<M> {
         }
         // Prompt complete: sample the first generated token from the
         // prefill logits and move to decoding.
+        let now_us = self.now_us();
         let PrefillJob { mut req, slot, .. } = job;
         let rng = self.rngs.get_mut(&req.id).expect("rng");
         let tok = sample(&logits, &req.params, rng);
         req.record_token(tok);
+        req.first_token_us.get_or_insert(now_us);
         self.stats.tokens_generated += 1;
         if let Some(reason) = req.stop_reason(self.max_request_seq()) {
             self.finish(req, slot, reason, false);
@@ -976,6 +1031,7 @@ impl<M: StepModel> InferenceEngine<M> {
         self.stats.occupancy_sum += batch.slots.len() as u64;
         let vocab = self.model.vocab();
         let max_seq = self.max_request_seq();
+        let now_us = self.now_us();
         // The plan's slot list is sorted: sampling order (and therefore
         // per-request RNG consumption) is deterministic, not HashMap
         // iteration order.
@@ -987,6 +1043,7 @@ impl<M: StepModel> InferenceEngine<M> {
             let rng = self.rngs.get_mut(&req.id).expect("rng");
             let tok = sample(row, &req.params, rng);
             req.record_token(tok);
+            req.first_token_us.get_or_insert(now_us);
             self.stats.tokens_generated += 1;
             self.batcher.advance(slot, tok);
             if let Some(reason) = req.stop_reason(max_seq) {
@@ -999,11 +1056,13 @@ impl<M: StepModel> InferenceEngine<M> {
 
     fn finish(&mut self, mut req: Request, slot: usize, reason: FinishReason, in_batcher: bool) {
         req.finish(reason);
+        req.finished_us = Some(self.now_us());
         if in_batcher {
             self.batcher.vacate(slot);
         }
         self.release_kv(slot);
         self.slots.release(slot);
+        self.model.set_slot_degrade(slot, false);
         self.rngs.remove(&req.id);
         self.stats.finished += 1;
         self.completions.push_back(Completion {
@@ -1023,6 +1082,9 @@ impl<M: StepModel> InferenceEngine<M> {
                 .finished_at
                 .map(|t| t.duration_since(req.enqueued_at).as_secs_f64() * 1e3)
                 .unwrap_or(f64::NAN),
+            ttft_us: req.first_token_us.map(|t| t.saturating_sub(req.enqueued_us)),
+            total_us: req.finished_us.map(|t| t.saturating_sub(req.enqueued_us)),
+            degraded: req.params.degrade,
             prefix_hit_tokens: req.prefix_hit,
         });
     }
@@ -1443,6 +1505,98 @@ mod tests {
         let (unshared_tokens, stats, _) = run(false);
         assert_eq!(stats.cow_copies, 0);
         assert_eq!(shared_tokens, unshared_tokens, "COW divergence changed the stream");
+    }
+
+    #[test]
+    fn degrade_mark_armed_at_admission_and_cleared_at_finish() {
+        let mut e = engine(2);
+        let params = SamplingParams { max_tokens: 2, degrade: true, ..Default::default() };
+        e.submit(vec![1, 2], params).unwrap();
+        let done = e.run_to_completion().unwrap();
+        assert!(done[0].degraded);
+        assert_eq!(e.model.degrade_log.first(), Some(&(0, true)));
+        assert_eq!(e.model.degrade_log.last(), Some(&(0, false)));
+        // On a backend with no partially-linear FFN the flag is inert:
+        // the stream matches a full-quality run exactly.
+        let mut r = engine(2);
+        let params = SamplingParams { max_tokens: 2, ..Default::default() };
+        r.submit(vec![1, 2], params).unwrap();
+        let full = r.run_to_completion().unwrap();
+        assert!(!full[0].degraded);
+        assert_eq!(done[0].tokens, full[0].tokens);
+    }
+
+    #[test]
+    fn degraded_stream_matches_standalone_forced_fold() {
+        use crate::config::{FfnMode, NativeModelConfig, TardisFfnConfig};
+        use crate::coordinator::model::NativeModel;
+        let cfg = NativeModelConfig {
+            vocab: 32,
+            d_model: 32,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 64,
+            max_seq: 32,
+            batch: 2,
+            prefill_buckets: vec![4],
+            seed: 5,
+            threads: 0,
+            kv_block_size: 8,
+            kv_blocks: 0,
+        };
+        let mode = FfnMode::Tardis(TardisFfnConfig::with_ratio(0.8));
+        let params = SamplingParams { max_tokens: 6, degrade: true, ..Default::default() };
+        // Standalone forced-fold run: the degraded request alone.
+        let solo = {
+            let model = NativeModel::new(cfg.clone(), &mode);
+            let mut e = InferenceEngine::new(model, EngineConfig::default());
+            let id = e.submit(vec![1, 2, 3], params).unwrap();
+            let done = e.run_to_completion().unwrap();
+            done.into_iter().find(|c| c.id == id).unwrap()
+        };
+        // Same request co-batched with a full-quality neighbor: only its
+        // own rows are forced, and its stream must not change.
+        let model = NativeModel::new(cfg, &mode);
+        let mut e = InferenceEngine::new(model, EngineConfig::default());
+        let id = e.submit(vec![1, 2, 3], params).unwrap();
+        let noise = SamplingParams { max_tokens: 6, ..Default::default() };
+        e.submit(vec![9, 8, 7], noise).unwrap();
+        let done = e.run_to_completion().unwrap();
+        let batched = done.iter().find(|c| c.id == id).unwrap();
+        assert!(solo.degraded && batched.degraded);
+        let neighbor = done.iter().find(|c| c.id != id).unwrap();
+        assert!(!neighbor.degraded);
+        assert_eq!(solo.tokens, batched.tokens, "co-batching changed a degraded stream");
+    }
+
+    #[test]
+    fn virtual_clock_stamps_are_deterministic() {
+        let run = || {
+            let mut e = engine(2);
+            e.enable_virtual_clock();
+            let params = SamplingParams { max_tokens: 3, ..Default::default() };
+            e.advance_clock_us(100); // enqueue at t=100µs
+            e.submit(vec![1, 2, 3], params).unwrap();
+            while !e.is_idle() {
+                e.step().unwrap();
+                e.advance_clock_us(50); // modeled per-step cost
+            }
+            e.take_completions().remove(0)
+        };
+        let (a, b) = (run(), run());
+        let ttft = a.ttft_us.expect("first token stamped");
+        let total = a.total_us.expect("finish stamped");
+        assert_eq!(a.ttft_us, b.ttft_us, "virtual TTFT must be bitwise reproducible");
+        assert_eq!(a.total_us, b.total_us);
+        assert!(total >= ttft, "total {total} < ttft {ttft}");
+        assert!(!a.degraded);
+        // Wall-clock mode still stamps (non-deterministically).
+        let mut e = engine(2);
+        let params = SamplingParams { max_tokens: 2, ..Default::default() };
+        e.submit(vec![1, 2], params).unwrap();
+        let done = e.run_to_completion().unwrap();
+        assert!(done[0].ttft_us.is_some());
+        assert!(done[0].total_us.is_some());
     }
 
     #[test]

@@ -158,6 +158,18 @@ impl Journal {
         if let Some(stop) = e.params.stop_token {
             fields.push(("stop_token", Json::num(stop as f64)));
         }
+        // SLO/degrade fields are emitted only when set, so journals
+        // written without them stay byte-identical — and recovery
+        // tolerates their absence (old logs replay with no deadline).
+        if let Some(ms) = e.params.ttft_deadline_ms {
+            fields.push(("ttft_deadline_ms", Json::num(ms as f64)));
+        }
+        if let Some(ms) = e.params.tpot_deadline_ms {
+            fields.push(("tpot_deadline_ms", Json::num(ms as f64)));
+        }
+        if e.params.degrade {
+            fields.push(("degrade", Json::Bool(true)));
+        }
         if let Some(v) = &e.variant {
             fields.push(("variant", Json::str(v)));
         }
@@ -224,6 +236,16 @@ fn parse_event(j: &Json) -> Option<Event> {
                 stop_token: j.get("stop_token").and_then(Json::as_i64).map(|v| v as i32),
                 seed: j.get("seed").and_then(Json::as_i64)? as u64,
                 priority: j.get("priority").and_then(Json::as_i64)? as i32,
+                // Optional (PR 9 onward): absent in old journals.
+                ttft_deadline_ms: j
+                    .get("ttft_deadline_ms")
+                    .and_then(Json::as_i64)
+                    .map(|v| v as u64),
+                tpot_deadline_ms: j
+                    .get("tpot_deadline_ms")
+                    .and_then(Json::as_i64)
+                    .map(|v| v as u64),
+                degrade: j.get("degrade").and_then(Json::as_bool).unwrap_or(false),
             };
             let variant = j.get("variant").and_then(Json::as_str).map(str::to_string);
             Some(Event::Admit(JournalEntry { ticket, prompt, params, variant }))
@@ -293,6 +315,56 @@ mod tests {
         assert_eq!(pending[0].ticket, 5);
         assert_eq!(next, 6);
         assert!(report.truncated_tail);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn recovers_mixed_old_and_new_lines() {
+        // A journal written partly by a pre-SLO binary (no deadline or
+        // degrade fields) and partly by this one must recover fully:
+        // old lines replay with no deadline at full quality.
+        let path = tmp("mixed-slo");
+        let _ = std::fs::remove_file(&path);
+        std::fs::write(
+            &path,
+            concat!(
+                "{\"e\":\"admit\",\"ticket\":1,\"prompt\":[10,11],",
+                "\"temperature\":0,\"top_k\":0,\"max_tokens\":8,",
+                "\"seed\":3,\"priority\":0,\"variant\":\"mock\"}\n"
+            ),
+        )
+        .unwrap();
+        {
+            let mut jr = Journal::open(&path).unwrap();
+            let new = JournalEntry {
+                ticket: 2,
+                prompt: vec![12],
+                params: SamplingParams {
+                    max_tokens: 8,
+                    seed: 3,
+                    ttft_deadline_ms: Some(50),
+                    tpot_deadline_ms: Some(20),
+                    degrade: true,
+                    ..Default::default()
+                },
+                variant: None,
+            };
+            jr.append_admit(&new).unwrap();
+        }
+        let (pending, next, report) = Journal::recover(&path).unwrap();
+        assert_eq!(next, 3);
+        assert_eq!(report.admits, 2);
+        assert_eq!(pending.len(), 2);
+        // old line: no SLO, full quality
+        assert_eq!(pending[0].ticket, 1);
+        assert_eq!(pending[0].params.ttft_deadline_ms, None);
+        assert_eq!(pending[0].params.tpot_deadline_ms, None);
+        assert!(!pending[0].params.degrade);
+        // new line: round-trips its SLO and degrade mark
+        assert_eq!(pending[1].ticket, 2);
+        assert_eq!(pending[1].params.ttft_deadline_ms, Some(50));
+        assert_eq!(pending[1].params.tpot_deadline_ms, Some(20));
+        assert!(pending[1].params.degrade);
         let _ = std::fs::remove_file(&path);
     }
 

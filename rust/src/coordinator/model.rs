@@ -117,6 +117,17 @@ pub trait StepModel {
         Err(anyhow::anyhow!("backend does not support shared KV blocks"))
     }
 
+    /// Mark `slot` for degraded service: every FFN row the slot
+    /// contributes is forced through the folded path (predictor
+    /// bypassed, no per-neuron fixes — effectively `--fix-k 0`). The
+    /// engine sets it from [`SamplingParams::degrade`] at
+    /// admission/resume and clears it at finish/preempt/abort, so a
+    /// degraded request batched with full-quality neighbors degrades
+    /// only its own rows. Backends without a partially-linear FFN no-op.
+    ///
+    /// [`SamplingParams::degrade`]: super::request::SamplingParams
+    fn set_slot_degrade(&mut self, _slot: usize, _degraded: bool) {}
+
     /// Plan-level hook: called once per engine iteration with the
     /// [`StepPlan`] about to execute, before any prefill/decode dispatch.
     /// Backends can stage uploads for the whole iteration or record
@@ -326,6 +337,10 @@ pub struct NativeModel {
     /// intermediates allocate nothing (see [`Scratch`]; the returned
     /// logits and decode's small bookkeeping `Vec`s still allocate).
     scratch: Scratch,
+    /// Per-slot degraded-service marks (see
+    /// [`StepModel::set_slot_degrade`]): a marked slot's rows are forced
+    /// through the folded FFN path.
+    degraded: Vec<bool>,
     pub decode_steps: u64,
     pub prefill_chunks: u64,
 }
@@ -441,6 +456,7 @@ impl NativeModel {
             kv,
             pool,
             scratch: Scratch::new(),
+            degraded: vec![false; cfg.batch],
             decode_steps: 0,
             prefill_chunks: 0,
             cfg,
@@ -498,6 +514,15 @@ impl NativeModel {
             let t = r.token.rem_euclid(self.cfg.vocab as i32) as usize;
             xi.copy_from_slice(&self.weights.embed[t * d..(t + 1) * d]);
         }
+
+        // Degraded-service row mask: rows of marked slots take the
+        // forced-fold FFN path in every layer (None when nothing is
+        // degraded, so the common case allocates no mask).
+        let forced: Option<Vec<bool>> = if self.degraded.iter().any(|&on| on) {
+            Some(rows.iter().map(|r| self.degraded[r.slot]).collect())
+        } else {
+            None
+        };
 
         let mut a = self.scratch.take(n * d);
         let mut q = self.scratch.take(n * d);
@@ -564,7 +589,18 @@ impl NativeModel {
             }
             // -- FFN ----------------------------------------------------
             layernorm_into(&x, n, d, &lw.ln2_gain, &lw.ln2_bias, &mut f);
-            let y = self.ffns[li].forward(self.pool.as_ref(), &mut self.scratch, &f, n);
+            let y = match &forced {
+                Some(m) => self.ffns[li].forward_forced(
+                    self.pool.as_ref(),
+                    &mut self.scratch,
+                    &f,
+                    n,
+                    m,
+                ),
+                None => {
+                    self.ffns[li].forward(self.pool.as_ref(), &mut self.scratch, &f, n)
+                }
+            };
             for (xv, &yv) in x.iter_mut().zip(y.iter()) {
                 *xv += yv;
             }
@@ -638,6 +674,11 @@ impl StepModel for NativeModel {
 
     fn supports_preemption(&self) -> bool {
         true
+    }
+
+    fn set_slot_degrade(&mut self, slot: usize, degraded: bool) {
+        assert!(slot < self.cfg.batch, "slot {slot} out of range");
+        self.degraded[slot] = degraded;
     }
 
     fn kv_save(&mut self, slot: usize, tokens: usize) -> Result<KvSwap> {
@@ -819,6 +860,10 @@ pub struct MockModel {
     pub plans_seen: u64,
     pub max_planned_prefills: usize,
     pub plan_ends_seen: u64,
+    /// Every [`StepModel::set_slot_degrade`] call as (slot, on): engine
+    /// tests assert the degrade mark is armed at admission and cleared
+    /// when the slot frees.
+    pub degrade_log: Vec<(usize, bool)>,
     /// artificial per-call cost knob for scheduler benches
     pub spin_per_call: std::time::Duration,
 }
@@ -838,6 +883,7 @@ impl MockModel {
             plans_seen: 0,
             max_planned_prefills: 0,
             plan_ends_seen: 0,
+            degrade_log: Vec::new(),
             spin_per_call: std::time::Duration::ZERO,
         }
     }
@@ -903,6 +949,12 @@ impl StepModel for MockModel {
 
     fn supports_block_sharing(&self) -> bool {
         true
+    }
+
+    fn set_slot_degrade(&mut self, slot: usize, degraded: bool) {
+        // No FFN to degrade; the mock just records the call so tests can
+        // assert the engine arms and clears the mark at the right times.
+        self.degrade_log.push((slot, degraded));
     }
 
     fn kv_copy_block(&mut self, _src: usize, _dst: usize, _cells: usize) -> Result<()> {

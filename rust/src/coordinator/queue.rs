@@ -96,6 +96,66 @@ impl AdmissionQueue {
     }
 }
 
+/// What the overload admission controller decided for one submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverloadAction {
+    /// Serve at full quality.
+    Admit,
+    /// Serve, but force the request's FFN rows through the folded path
+    /// (`SamplingParams::degrade`) — cheaper tokens, same stream shape.
+    Degrade,
+    /// Refuse; the caller maps this to an overloaded/retry-later reply.
+    Shed,
+}
+
+/// Tiered overload admission control: as queue pressure climbs, the
+/// lowest priority tiers are *degraded* first (forced-fold FFN) and
+/// *shed* only past a higher watermark, so high-tier deadlines survive
+/// an overload instead of every deadline collapsing together. The
+/// decision is made once, at the submission boundary (front door or
+/// trace harness) **before** the admission is journaled, so a crash
+/// replay re-runs the same degraded request bitwise.
+///
+/// Disabled by default: thresholds above 1.0 can never trigger on a
+/// pressure signal that saturates at 1.0.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverloadPolicy {
+    /// Queue pressure in [0, 1] at which eligible tiers degrade.
+    pub degrade_at: f64,
+    /// Queue pressure at which eligible tiers shed (>= `degrade_at` to
+    /// keep the ladder ordered: degrade before you drop).
+    pub shed_at: f64,
+    /// Only requests with `priority <= tier_max` are degraded or shed;
+    /// higher tiers always admit at full quality.
+    pub tier_max: i32,
+}
+
+impl Default for OverloadPolicy {
+    fn default() -> Self {
+        OverloadPolicy { degrade_at: 2.0, shed_at: 2.0, tier_max: 0 }
+    }
+}
+
+impl OverloadPolicy {
+    pub fn enabled(&self) -> bool {
+        self.degrade_at <= 1.0 || self.shed_at <= 1.0
+    }
+
+    /// Decide for one submission given the current queue pressure.
+    pub fn action(&self, pressure: f64, priority: i32) -> OverloadAction {
+        if priority > self.tier_max {
+            return OverloadAction::Admit;
+        }
+        if pressure >= self.shed_at {
+            return OverloadAction::Shed;
+        }
+        if pressure >= self.degrade_at {
+            return OverloadAction::Degrade;
+        }
+        OverloadAction::Admit
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +214,35 @@ mod tests {
         assert_eq!(q.len(), 2);
         assert_eq!(q.pop().unwrap().id, 1);
         assert_eq!(q.pop().unwrap().id, 3);
+    }
+
+    #[test]
+    fn overload_policy_disabled_by_default() {
+        let p = OverloadPolicy::default();
+        assert!(!p.enabled());
+        // a saturated queue still admits everyone at full quality
+        assert_eq!(p.action(1.0, 0), OverloadAction::Admit);
+        assert_eq!(p.action(1.0, -5), OverloadAction::Admit);
+    }
+
+    #[test]
+    fn overload_ladder_degrades_before_shedding() {
+        let p = OverloadPolicy { degrade_at: 0.5, shed_at: 0.9, tier_max: 0 };
+        assert!(p.enabled());
+        assert_eq!(p.action(0.49, 0), OverloadAction::Admit);
+        assert_eq!(p.action(0.5, 0), OverloadAction::Degrade);
+        assert_eq!(p.action(0.89, 0), OverloadAction::Degrade);
+        assert_eq!(p.action(0.9, 0), OverloadAction::Shed);
+        assert_eq!(p.action(1.0, 0), OverloadAction::Shed);
+    }
+
+    #[test]
+    fn overload_spares_higher_tiers() {
+        let p = OverloadPolicy { degrade_at: 0.5, shed_at: 0.9, tier_max: 0 };
+        // tier 1 rides above tier_max: full quality even at saturation
+        assert_eq!(p.action(1.0, 1), OverloadAction::Admit);
+        // tier 0 and below take the ladder
+        assert_eq!(p.action(1.0, 0), OverloadAction::Shed);
+        assert_eq!(p.action(0.7, -3), OverloadAction::Degrade);
     }
 }

@@ -19,6 +19,18 @@ pub struct SamplingParams {
     /// Admission urgency: larger = sooner under the priority scheduling
     /// policy; ignored by FIFO. Never affects sampling, only ordering.
     pub priority: i32,
+    /// TTFT SLO: the first token must arrive within this many ms of
+    /// enqueue. `None` = no deadline (sorts last under the `edf` policy).
+    pub ttft_deadline_ms: Option<u64>,
+    /// TPOT SLO: mean inter-token time after the first token must stay
+    /// under this many ms. Scheduling ignores it (decode order is fixed);
+    /// it only feeds goodput accounting.
+    pub tpot_deadline_ms: Option<u64>,
+    /// Degraded service under overload: every FFN row of this request is
+    /// forced through the folded path (predictor bypassed, no per-neuron
+    /// fixes — effectively `--fix-k 0`). Never affects scheduling order,
+    /// only the numeric path, so degraded streams stay deterministic.
+    pub degrade: bool,
 }
 
 impl Default for SamplingParams {
@@ -30,6 +42,9 @@ impl Default for SamplingParams {
             stop_token: None,
             seed: 0,
             priority: 0,
+            ttft_deadline_ms: None,
+            tpot_deadline_ms: None,
+            degrade: false,
         }
     }
 }
@@ -82,6 +97,13 @@ pub struct Request {
     pub admitted_at: Option<Instant>,
     pub first_token_at: Option<Instant>,
     pub finished_at: Option<Instant>,
+    /// Engine-clock stamps in µs (wall epoch or virtual replay clock,
+    /// see [`crate::coordinator::engine_loop::InferenceEngine`]): set at
+    /// submit / first sampled token / finish. Basis for deterministic
+    /// TTFT/TPOT and for the `edf` policy's absolute deadline.
+    pub enqueued_us: u64,
+    pub first_token_us: Option<u64>,
+    pub finished_us: Option<u64>,
     /// Prompt tokens served from the prefix cache at admission (their
     /// prefill was skipped); 0 when sharing is off or nothing matched.
     pub prefix_hit: usize,
@@ -100,7 +122,19 @@ impl Request {
             admitted_at: None,
             first_token_at: None,
             finished_at: None,
+            enqueued_us: 0,
+            first_token_us: None,
+            finished_us: None,
             prefix_hit: 0,
+        }
+    }
+
+    /// Absolute TTFT deadline on the engine clock, for EDF ordering.
+    /// `u64::MAX` when the request carries no TTFT SLO (sorts last).
+    pub fn deadline_us(&self) -> u64 {
+        match self.params.ttft_deadline_ms {
+            Some(ms) => self.enqueued_us.saturating_add(ms.saturating_mul(1000)),
+            None => u64::MAX,
         }
     }
 
@@ -185,6 +219,15 @@ mod tests {
         r.record_token(2);
         assert_eq!(r.stop_reason(8), Some(FinishReason::ContextOverflow));
         assert_eq!(r.stop_reason(9), None);
+    }
+
+    #[test]
+    fn deadline_from_ttft_slo() {
+        let mut r = req(2, SamplingParams { ttft_deadline_ms: Some(50), ..Default::default() });
+        r.enqueued_us = 1_000;
+        assert_eq!(r.deadline_us(), 51_000);
+        let no_slo = req(2, SamplingParams::default());
+        assert_eq!(no_slo.deadline_us(), u64::MAX);
     }
 
     #[test]

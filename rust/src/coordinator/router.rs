@@ -30,6 +30,7 @@ use super::engine_loop::{Completion, EngineSnapshot, InferenceEngine, SubmitErro
 use super::health::{FaultPlan, HealthState, HealthTracker};
 use super::journal::{Journal, JournalEntry};
 use super::model::StepModel;
+use super::queue::{OverloadAction, OverloadPolicy};
 use super::request::{RequestId, SamplingParams};
 
 // ---------------------------------------------------------------------------
@@ -368,6 +369,11 @@ pub struct FrontDoorConfig {
     /// `probe_max`.
     pub probe_base: Duration,
     pub probe_max: Duration,
+    /// Overload admission ladder: degrade then shed the lowest tiers as
+    /// the chosen replica's queue pressure rises. Disabled by default.
+    /// Applied *before* the admission is journaled, so a crash replay
+    /// re-runs the same degraded request bitwise.
+    pub overload: OverloadPolicy,
 }
 
 impl Default for FrontDoorConfig {
@@ -378,6 +384,7 @@ impl Default for FrontDoorConfig {
             fault_plan: FaultPlan::default(),
             probe_base: Duration::from_millis(25),
             probe_max: Duration::from_secs(2),
+            overload: OverloadPolicy::default(),
         }
     }
 }
@@ -441,6 +448,7 @@ pub struct FrontDoor<M: StepModel> {
     replies: VecDeque<FrontReply>,
     next_ticket: u64,
     queue_cap: usize,
+    overload: OverloadPolicy,
     journal: Option<Journal>,
     faults: FaultPlan,
     /// Admissions accepted so far (the `dropconn@N` fault index).
@@ -497,6 +505,7 @@ impl<M: StepModel + Send + 'static> FrontDoor<M> {
             replies: VecDeque::new(),
             next_ticket: 1,
             queue_cap: cfg.queue_cap.max(1),
+            overload: cfg.overload,
             journal: None,
             faults: cfg.fault_plan,
             admits_seen: 0,
@@ -809,7 +818,7 @@ impl<M: StepModel + Send + 'static> FrontEnd for FrontDoor<M> {
         &mut self,
         variant: Option<&str>,
         prompt: Vec<i32>,
-        params: SamplingParams,
+        mut params: SamplingParams,
         retry: bool,
     ) -> SubmitOutcome {
         if let Some(v) = variant {
@@ -821,6 +830,19 @@ impl<M: StepModel + Send + 'static> FrontEnd for FrontDoor<M> {
             self.stats.shed += 1;
             return SubmitOutcome::Shed { retry_after_ms: self.retry_after_ms(variant) };
         };
+        // Overload ladder: decided before the journal append so a crash
+        // replay re-admits the identical (possibly degraded) request.
+        if self.overload.enabled() {
+            let pressure = self.slots[idx].inflight as f64 / self.queue_cap as f64;
+            match self.overload.action(pressure, params.priority) {
+                OverloadAction::Admit => {}
+                OverloadAction::Degrade => params.degrade = true,
+                OverloadAction::Shed => {
+                    self.stats.shed += 1;
+                    return SubmitOutcome::Shed { retry_after_ms: self.retry_after_ms(variant) };
+                }
+            }
+        }
         let ticket = self.next_ticket;
         self.next_ticket += 1;
         if self.journal.is_some() {
@@ -1205,6 +1227,59 @@ mod tests {
         assert_eq!(front.stats.shed, 1);
         let replies = front.drain(Duration::from_secs(10)).unwrap();
         assert_eq!(replies.len(), 2);
+    }
+
+    #[test]
+    fn front_door_overload_ladder_degrades_then_sheds() {
+        let mut front = FrontDoor::new(
+            vec![("mock".to_string(), mock_factory(0))],
+            FrontDoorConfig {
+                queue_cap: 4,
+                overload: OverloadPolicy { degrade_at: 0.25, shed_at: 0.75, tier_max: 0 },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let params = SamplingParams { max_tokens: 2, ..Default::default() };
+        // No pump between submits: inflight only decays in `pump`, so
+        // the pressure seen by each admission is deterministic.
+        // pressure 0/4: full quality
+        let a = front.submit_front(None, vec![1, 2], params, false);
+        let SubmitOutcome::Admitted { ticket: t_full, .. } = a else {
+            panic!("expected admit, got {a:?}")
+        };
+        // pressure 1/4 >= degrade_at: lowest tier degrades
+        let b = front.submit_front(None, vec![1, 2], params, false);
+        let SubmitOutcome::Admitted { ticket: t_degraded, .. } = b else {
+            panic!("expected admit, got {b:?}")
+        };
+        // higher tier rides above tier_max: full quality at any pressure
+        let hi = SamplingParams { priority: 1, ..params };
+        let c = front.submit_front(None, vec![1, 2], hi, false);
+        let SubmitOutcome::Admitted { ticket: t_hi, .. } = c else {
+            panic!("expected admit, got {c:?}")
+        };
+        // pressure 3/4 >= shed_at: lowest tier is refused outright
+        match front.submit_front(None, vec![1, 2], params, false) {
+            SubmitOutcome::Shed { retry_after_ms } => assert!(retry_after_ms > 0),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        assert_eq!(front.stats.shed, 1);
+        let replies = front.drain(Duration::from_secs(10)).unwrap();
+        assert_eq!(replies.len(), 3);
+        let degraded_of = |t: u64| {
+            replies
+                .iter()
+                .find(|r| r.ticket == t)
+                .unwrap()
+                .result
+                .as_ref()
+                .unwrap()
+                .degraded
+        };
+        assert!(!degraded_of(t_full), "first admit must be full quality");
+        assert!(degraded_of(t_degraded), "second admit must be degraded");
+        assert!(!degraded_of(t_hi), "high tier must never degrade");
     }
 
     #[test]

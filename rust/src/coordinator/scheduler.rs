@@ -24,7 +24,7 @@
 //!
 //! Which queued requests are admitted first is the pluggable part: a
 //! [`SchedulerPolicy`] ranks the queue snapshot ([`Fifo`],
-//! [`ShortestPromptFirst`], [`PriorityFirst`]). Everything else — the
+//! [`ShortestPromptFirst`], [`PriorityFirst`], [`Edf`]). Everything else — the
 //! co-scheduling, block accounting, preemption-victim choice (lowest
 //! priority, youngest first) and resume order (FIFO) — is
 //! policy-independent, which is what keeps batching invariance (same
@@ -61,6 +61,11 @@ pub struct QueuedRequest {
     /// True when the hit ends inside a shared block: the first append
     /// must copy-on-write it, which costs one extra block.
     pub cow: bool,
+    /// Absolute TTFT deadline on the engine clock in µs
+    /// ([`super::request::Request::deadline_us`]); `u64::MAX` when the
+    /// request carries no TTFT SLO, so deadline-free traffic sorts last
+    /// under [`Edf`] and the field is inert under every other policy.
+    pub deadline_us: u64,
 }
 
 impl QueuedRequest {
@@ -337,6 +342,28 @@ impl SchedulerPolicy for PriorityFirst {
     }
 }
 
+/// Earliest deadline first (ties broken by arrival): admissions are
+/// ranked by their absolute TTFT deadline, so under overload the work
+/// most about to miss its SLO runs first instead of waiting out older
+/// deadline-free traffic. Requests without a TTFT SLO carry
+/// `deadline_us == u64::MAX` and sort last (among themselves: FIFO), so
+/// an un-SLO'd workload behaves exactly like [`Fifo`] — the lowest tier
+/// is not starved when the system is not overloaded.
+#[derive(Debug, Default)]
+pub struct Edf;
+
+impl SchedulerPolicy for Edf {
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+
+    fn admission_order(&mut self, queued: &[QueuedRequest]) -> Vec<RequestId> {
+        let mut q: Vec<&QueuedRequest> = queued.iter().collect();
+        q.sort_by_key(|r| (r.deadline_us, r.arrival));
+        q.into_iter().map(|r| r.id).collect()
+    }
+}
+
 /// Config-friendly policy selector (the trait object itself is not
 /// Clone, so [`super::engine_loop::EngineConfig`] carries this instead).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -345,6 +372,7 @@ pub enum PolicyKind {
     Fifo,
     ShortestPromptFirst,
     Priority,
+    Edf,
 }
 
 impl PolicyKind {
@@ -353,6 +381,7 @@ impl PolicyKind {
             PolicyKind::Fifo => Box::new(Fifo),
             PolicyKind::ShortestPromptFirst => Box::new(ShortestPromptFirst),
             PolicyKind::Priority => Box::new(PriorityFirst),
+            PolicyKind::Edf => Box::new(Edf),
         }
     }
 
@@ -361,6 +390,7 @@ impl PolicyKind {
             PolicyKind::Fifo => "fifo",
             PolicyKind::ShortestPromptFirst => "spf",
             PolicyKind::Priority => "priority",
+            PolicyKind::Edf => "edf",
         }
     }
 
@@ -369,13 +399,14 @@ impl PolicyKind {
             "fifo" => Some(PolicyKind::Fifo),
             "spf" | "shortest-prompt-first" => Some(PolicyKind::ShortestPromptFirst),
             "priority" => Some(PolicyKind::Priority),
+            "edf" | "deadline" => Some(PolicyKind::Edf),
             _ => None,
         }
     }
 
     /// Every shipped policy (batching-invariance tests sweep this).
-    pub fn all() -> [PolicyKind; 3] {
-        [PolicyKind::Fifo, PolicyKind::ShortestPromptFirst, PolicyKind::Priority]
+    pub fn all() -> [PolicyKind; 4] {
+        [PolicyKind::Fifo, PolicyKind::ShortestPromptFirst, PolicyKind::Priority, PolicyKind::Edf]
     }
 }
 
@@ -854,6 +885,7 @@ mod tests {
                 hit_tokens: 0,
                 hit_blocks: 0,
                 cow: false,
+                deadline_us: u64::MAX,
             })
             .collect()
     }
@@ -1282,10 +1314,50 @@ mod tests {
         // id 1: long prompt, low priority, first in.
         // id 2: short prompt, mid priority.
         // id 3: mid prompt, high priority, last in.
-        let q = queued(&[(1, 32, 0), (2, 4, 1), (3, 16, 9)]);
+        let mut q = queued(&[(1, 32, 0), (2, 4, 1), (3, 16, 9)]);
         assert_eq!(Fifo.admission_order(&q), vec![1, 2, 3]);
         assert_eq!(ShortestPromptFirst.admission_order(&q), vec![2, 3, 1]);
         assert_eq!(PriorityFirst.admission_order(&q), vec![3, 2, 1]);
+        // EDF ranks by absolute deadline, not priority or length.
+        q[0].deadline_us = 9_000;
+        q[1].deadline_us = u64::MAX; // no SLO: last
+        q[2].deadline_us = 4_000;
+        assert_eq!(Edf.admission_order(&q), vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn edf_tie_breaks_by_arrival() {
+        // Equal deadlines (and the no-deadline bucket) resolve FIFO, so
+        // EDF is a deterministic total order over any snapshot.
+        let mut q = queued(&[(1, 8, 0), (2, 8, 0), (3, 8, 0), (4, 8, 0)]);
+        q[0].deadline_us = 5_000;
+        q[2].deadline_us = 5_000;
+        assert_eq!(Edf.admission_order(&q), vec![1, 3, 2, 4]);
+        assert_eq!(Edf.admission_order(&q), vec![1, 3, 2, 4], "stable across calls");
+    }
+
+    #[test]
+    fn edf_without_deadlines_is_fifo() {
+        // Deadline-free traffic (the lowest tier's usual shape) keeps its
+        // arrival order: EDF cannot starve it when nothing is urgent.
+        let q = queued(&[(4, 64, 0), (5, 2, 3), (6, 16, -1)]);
+        assert_eq!(Edf.admission_order(&q), Fifo.admission_order(&q));
+    }
+
+    #[test]
+    fn edf_admits_lowest_tier_when_not_overloaded() {
+        // One loose-deadline low-tier request behind a tight-deadline
+        // high-tier one: with slots and blocks for both, both are
+        // admitted in the same plan — EDF reorders, it does not shed.
+        let mut q = queued(&[(1, 8, 0), (2, 8, 9)]);
+        q[0].deadline_us = 800_000; // loose
+        q[1].deadline_us = 1_000; // tight
+        let mut s = Scheduler::new(SchedulerConfig::with_policy(PolicyKind::Edf));
+        let plan = s.plan(&view(&q, &[0, 1, 2], &[], &[]));
+        assert_eq!(
+            plan.admissions,
+            vec![Admission { request: 2, slot: 0 }, Admission { request: 1, slot: 1 }]
+        );
     }
 
     #[test]
@@ -1297,6 +1369,8 @@ mod tests {
             Some(PolicyKind::ShortestPromptFirst)
         );
         assert_eq!(PolicyKind::parse("priority"), Some(PolicyKind::Priority));
+        assert_eq!(PolicyKind::parse("edf"), Some(PolicyKind::Edf));
+        assert_eq!(PolicyKind::parse("deadline"), Some(PolicyKind::Edf));
         assert_eq!(PolicyKind::parse("nope"), None);
         for kind in PolicyKind::all() {
             assert_eq!(PolicyKind::parse(kind.name()), Some(kind));
@@ -1351,6 +1425,7 @@ mod tests {
                         hit_tokens: 0,
                         hit_blocks: 0,
                         cow: false,
+                        deadline_us: u64::MAX,
                     })
                     .collect();
                 let free: Vec<usize> = (8..8 + rng.usize_below(4)).collect();
@@ -1449,6 +1524,7 @@ mod tests {
                             hit_tokens,
                             hit_blocks: hit_tokens.div_ceil(bs),
                             cow: hit_tokens % bs != 0,
+                            deadline_us: u64::MAX,
                         }
                     })
                     .collect();

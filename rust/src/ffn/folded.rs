@@ -310,17 +310,46 @@ impl FoldedFfn {
         x: &[f32],
         rows: usize,
     ) -> Vec<f32> {
+        self.forward_forced(pool, scratch, x, rows, &[])
+    }
+
+    /// [`Self::forward`] with a per-row degraded-service mask (empty =
+    /// nothing forced). A forced row folds unconditionally: the
+    /// predictor is bypassed (no classification, no online observation)
+    /// and the quantized router issues no fixes for it — the row runs
+    /// the pure folded path, `--fix-k 0`. Because the row-sparse kernels
+    /// are bitwise row-independent, a forced row's output is identical
+    /// whatever mix of neighbors shares the batch.
+    pub fn forward_forced(
+        &mut self,
+        pool: Option<&ThreadPool>,
+        scratch: &mut Scratch,
+        x: &[f32],
+        rows: usize,
+        forced: &[bool],
+    ) -> Vec<f32> {
         let d = self.reference.d_model;
         debug_assert_eq!(x.len(), rows * d);
+        debug_assert!(forced.is_empty() || forced.len() == rows);
         let nf = self.folded_units;
         self.norms.clear();
         self.folded_mask.clear();
         self.fallback_mask.clear();
         self.fixes.clear();
+        let is_forced = |i: usize| forced.get(i).copied().unwrap_or(false);
         let mut n_folded = 0usize;
         match self.kind {
             PredictorKind::Norm => {
-                for row in x.chunks_exact(d).take(rows) {
+                for (i, row) in x.chunks_exact(d).take(rows).enumerate() {
+                    if is_forced(i) {
+                        // placeholder norm: never read (the row cannot
+                        // reach the fallback/observe loop)
+                        self.norms.push(0.0);
+                        self.folded_mask.push(true);
+                        self.fallback_mask.push(false);
+                        n_folded += 1;
+                        continue;
+                    }
                     let nrm = norm(row);
                     let folded = matches!(self.predictor.classify(nrm), Route::Folded);
                     self.norms.push(nrm);
@@ -339,6 +368,12 @@ impl FoldedFfn {
                     .proxy
                     .forward_into(pool, x, rows, &self.reference.b_up[..nf], &mut z_hat);
                 for i in 0..rows {
+                    if is_forced(i) {
+                        self.folded_mask.push(true);
+                        self.fallback_mask.push(false);
+                        n_folded += 1;
+                        continue;
+                    }
                     let route = quant.decide_row(
                         &z_hat[i * nf..(i + 1) * nf],
                         table,
@@ -723,6 +758,70 @@ mod tests {
         assert_eq!(f.telemetry.fallback_rows, 1);
         assert_eq!(f.telemetry.folded_rows, 1);
         assert_eq!(f.predictor.stats.observed_out_of_range, 1);
+    }
+
+    #[test]
+    fn forced_rows_take_pure_folded_path_bitwise() {
+        let mut rng = Rng::new(11);
+        let dense = random_dense(&mut rng, 8, 16, 0.3);
+        let mut mixed = FoldedFfn::new(dense.clone(), &cfg(0.5));
+        let mut all = FoldedFfn::new(dense, &cfg(0.5));
+        let r = mixed.predictor.safe_radius();
+        let (d, h) = (8, 16);
+        // two copies of a far outlier along folded column 0: the norm
+        // gate would route both dense
+        let mut x = vec![0f32; 2 * d];
+        for (l, v) in x[..d].iter_mut().enumerate() {
+            *v = mixed.reference.w_up[l * h];
+        }
+        let n0 = norm(&x[..d]);
+        let blow = 50.0 * r / n0;
+        for v in x[..d].iter_mut() {
+            *v *= blow;
+        }
+        let (head, tail) = x.split_at_mut(d);
+        tail.copy_from_slice(head);
+        let mut scratch = Scratch::new();
+        // Degrade only row 0 in one call, both rows in the other: the
+        // forced row must come out bitwise identical — the pure folded
+        // path, independent of what its batch neighbors do.
+        let got = mixed.forward_forced(None, &mut scratch, &x, 2, &[true, false]);
+        let want = all.forward_forced(None, &mut scratch, &x, 2, &[true, true]);
+        assert_eq!(&got[..d], &want[..d], "forced row output depends on batch mask");
+        // The unforced copy still routes dense (bitwise the reference),
+        // so forcing genuinely changed row 0's path.
+        let reference = mixed.reference.forward(None, &mut scratch, &x, 2);
+        assert_eq!(&got[d..], &reference[d..]);
+        assert_ne!(&got[..d], &reference[..d], "outlier fold must differ from dense");
+        // Forced rows bypass the predictor entirely: only the unforced
+        // outlier was observed, and the all-forced run observed nothing.
+        assert_eq!(mixed.telemetry.folded_rows, 1);
+        assert_eq!(mixed.telemetry.fallback_rows, 1);
+        assert_eq!(mixed.predictor.stats.observed_out_of_range, 1);
+        assert_eq!(all.telemetry.folded_rows, 2);
+        assert_eq!(all.telemetry.fallback_rows, 0);
+        assert_eq!(all.predictor.stats.observed_out_of_range, 0);
+    }
+
+    #[test]
+    fn forced_rows_skip_quantized_fixes() {
+        let d = 16;
+        let mut f = FoldedFfn::new(orthogonal_dense(d), &quant_cfg(0.75, 4));
+        // unit 1 far out of range: normally one top-K fix would land
+        let mut x = vec![0f32; d];
+        x[1] = 20.0;
+        let mut scratch = Scratch::new();
+        let y = f.forward_forced(None, &mut scratch, &x, 1, &[true]);
+        scratch.give(y);
+        assert_eq!(f.telemetry.folded_rows, 1);
+        assert_eq!(f.telemetry.fallback_rows, 0);
+        assert_eq!(f.telemetry.fixed_neurons, 0, "degraded rows run fix-k 0");
+        let q = f.quant.as_ref().unwrap();
+        assert_eq!(
+            q.stats.rows_fixed + q.stats.rows_clean + q.stats.rows_fallback,
+            0,
+            "forced rows never consult the router"
+        );
     }
 
     #[test]

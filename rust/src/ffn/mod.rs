@@ -100,6 +100,24 @@ impl FfnBackend {
         }
     }
 
+    /// [`Self::forward`] with a per-row degraded-service mask: rows with
+    /// `forced[i]` set bypass the outlier predictor and run the pure
+    /// folded path (no fallback, no fixes — `--fix-k 0` for that row).
+    /// A dense layer has nothing to degrade and ignores the mask.
+    pub fn forward_forced(
+        &mut self,
+        pool: Option<&ThreadPool>,
+        scratch: &mut Scratch,
+        x: &[f32],
+        rows: usize,
+        forced: &[bool],
+    ) -> Vec<f32> {
+        match self {
+            FfnBackend::Dense(f) => f.forward(pool, scratch, x, rows),
+            FfnBackend::Folded(f) => f.forward_forced(pool, scratch, x, rows, forced),
+        }
+    }
+
     pub fn telemetry(&self) -> FfnTelemetry {
         match self {
             FfnBackend::Dense(_) => FfnTelemetry::default(),

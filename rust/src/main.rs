@@ -17,6 +17,9 @@
 //!                  to the costmodel's theoretical tardis speedups (plus
 //!                  the artifact manifest under --features pjrt)
 //!   bench-decode — decode-step timing, dense vs tardis fold ratios
+//!   bench-trace  — trace-driven workload replay on the deterministic
+//!                  virtual clock: per-tier SLO goodput by policy, with
+//!                  the edf-vs-fifo goodput regression gate
 
 use anyhow::{anyhow, Result};
 
@@ -27,6 +30,7 @@ use tardis::config::{
 use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
 use tardis::coordinator::health::FaultPlan;
 use tardis::coordinator::model::{MockModel, NativeModel, StepModel};
+use tardis::coordinator::queue::OverloadPolicy;
 use tardis::coordinator::request::SamplingParams;
 use tardis::coordinator::router::{FrontDoor, FrontDoorConfig, ReplicaFactory, Router};
 use tardis::coordinator::scheduler::PolicyKind;
@@ -34,6 +38,7 @@ use tardis::costmodel;
 use tardis::ffn::RoutingQuality;
 use tardis::runtime::weights::NativeWeights;
 use tardis::server::protocol::{decode_tokens, encode_text};
+use tardis::testing::trace;
 use tardis::util::cli::Args;
 use tardis::util::stats::Samples;
 
@@ -44,7 +49,7 @@ use tardis::runtime::Engine;
 
 fn usage() -> ! {
     eprintln!(
-        "usage: tardis <costmodel|generate|serve|serve-mock|variants|bench-decode> [flags]
+        "usage: tardis <costmodel|generate|serve|serve-mock|variants|bench-decode|bench-trace> [flags]
   common flags:
     --backend KIND         native|mock|pjrt (default native; pjrt needs
                            a build with --features pjrt)
@@ -72,7 +77,7 @@ fn usage() -> ! {
                            (default 8); rows with more predicted
                            out-of-range neurons fall back densely
   scheduling flags (serve / serve-mock / generate):
-    --policy NAME          admission policy: fifo|spf|priority (default fifo)
+    --policy NAME          admission policy: fifo|spf|priority|edf (default fifo)
     --max-prefills N       concurrent prefill jobs (default 2)
     --chunk-budget N       prefill chunks per iteration (default 2)
     --max-step-tokens N    token budget of one mixed iteration (decode
@@ -89,6 +94,9 @@ fn usage() -> ! {
     --max-tokens N         tokens to generate (default 48)
     --temperature T        sampling temperature (default 0 = greedy)
     --priority N           admission priority (default 0)
+    --ttft-deadline-ms N   TTFT SLO (default: none); under --policy edf,
+                           tighter deadlines admit sooner
+    --tpot-deadline-ms N   per-token decode-gap SLO (default: none)
   serve / serve-mock:
     --addr HOST:PORT       listen address (default 127.0.0.1:7437)
     --variants A,B         variants to load (default dense,tardis80;
@@ -103,10 +111,42 @@ fn usage() -> ! {
     --queue-cap N          per-replica in-flight cap before the front
                            door sheds with {{\"err\":\"overloaded\"}}
                            (default 64)
+    --degrade-at X         queue pressure in [0,1] where the overload
+                           ladder force-folds the lowest tiers
+                           (default: disabled)
+    --shed-at X            queue pressure where the ladder sheds the
+                           lowest tiers outright (default: disabled)
+    --tier-max N           highest --priority the ladder may degrade
+                           or shed (default 0)
     --max-requests N       exit after N served requests (for scripted runs)
     TARDIS_FAULT_PLAN      deterministic fault injection, e.g.
                            \"kill:1@12,fail:0@9,dropconn@3,journal@5\"
                            (see docs/serving.md)
+  bench-trace:
+    --trace PATH           replay a JSONL trace fixture instead of
+                           generating one (see docs/serving.md for the
+                           schema)
+    --preset NAME          generated workload: overload|default
+                           (default overload — the committed-fixture
+                           shape: bulk tier vs tight-deadline tier)
+    --sessions N           sessions to generate (preset default)
+    --seed N               trace + sampler seed (preset default)
+    --trace-out PATH       dump the materialized trace as a JSONL
+                           fixture before replaying
+    --policies A,B         policies to replay (default fifo,edf)
+    --step-cost-us N       virtual microseconds per engine iteration
+                           (default 1000)
+    --degrade-at X         queue pressure where the lowest tier is
+                           force-folded (default 0.5; >1 disables)
+    --shed-at X            queue pressure where the lowest tier sheds
+                           (default 0.9; >1 disables)
+    --tier-max N           highest priority the ladder may touch
+                           (default 0)
+    --assert-goodput       (or TARDIS_ASSERT_GOODPUT=1) exit non-zero
+                           unless edf goodput strictly exceeds fifo's,
+                           with one re-measure on failure
+    results merge into BENCH_native_ffn.json under coordinator.slo
+    (sibling keys preserved; override path with TARDIS_BENCH_JSON)
   variants / bench-decode:
     --steps N              decode steps to time (default 64)
     --warmup N             untimed predictor-warmup steps (default 8)
@@ -134,7 +174,7 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     let mut cfg = EngineConfig::default();
     if let Some(p) = args.opt_str("policy") {
         cfg.scheduler.policy = PolicyKind::parse(&p).ok_or_else(|| {
-            anyhow!("unknown policy {p:?} (expected fifo|spf|priority)")
+            anyhow!("unknown policy {p:?} (expected fifo|spf|priority|edf)")
         })?;
     }
     cfg.scheduler.max_concurrent_prefills =
@@ -267,7 +307,19 @@ fn sampling_params(args: &Args) -> Result<SamplingParams> {
                 anyhow!("--priority expects an integer, got {s:?}")
             })?,
         },
+        ttft_deadline_ms: parse_deadline(args, "ttft-deadline-ms")?,
+        tpot_deadline_ms: parse_deadline(args, "tpot-deadline-ms")?,
+        degrade: false,
     })
+}
+
+fn parse_deadline(args: &Args, key: &str) -> Result<Option<u64>> {
+    args.opt_str(key)
+        .map(|s| {
+            s.parse::<u64>()
+                .map_err(|_| anyhow!("--{key} expects a non-negative integer, got {s:?}"))
+        })
+        .transpose()
 }
 
 fn parse_max_requests(args: &Args) -> Result<Option<usize>> {
@@ -299,6 +351,11 @@ fn front_door_config(args: &Args) -> Result<FrontDoorConfig> {
         queue_cap: args.usize("queue-cap", base.queue_cap)?,
         journal: args.opt_str("journal").map(std::path::PathBuf::from),
         fault_plan: FaultPlan::from_env()?,
+        overload: OverloadPolicy {
+            degrade_at: args.f64("degrade-at", base.overload.degrade_at)?,
+            shed_at: args.f64("shed-at", base.overload.shed_at)?,
+            tier_max: args.usize("tier-max", base.overload.tier_max as usize)? as i32,
+        },
         ..base
     })
 }
@@ -1094,6 +1151,193 @@ fn cmd_bench_decode_pjrt(_args: &Args) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// bench-trace
+// ---------------------------------------------------------------------------
+
+/// Trace-driven workload replay on the deterministic virtual clock:
+/// per-tier SLO goodput for each requested scheduler policy over one
+/// workload, merged into BENCH_native_ffn.json under `coordinator.slo`,
+/// plus the edf-vs-fifo goodput regression gate CI runs with
+/// `TARDIS_ASSERT_GOODPUT=1` on the committed overload fixture.
+fn cmd_bench_trace(args: &Args) -> Result<()> {
+    let (events, source) = match args.opt_str("trace") {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow!("could not read trace {path:?}: {e}"))?;
+            (trace::load_jsonl(&text)?, path)
+        }
+        None => {
+            let preset = args.str("preset", "overload");
+            let mut spec = match preset.as_str() {
+                "overload" => trace::TraceSpec::overload_preset(),
+                "default" => trace::TraceSpec::default(),
+                other => {
+                    return Err(anyhow!(
+                        "unknown preset {other:?} (expected overload|default)"
+                    ))
+                }
+            };
+            spec.seed = args.usize("seed", spec.seed as usize)? as u64;
+            spec.sessions = args.usize("sessions", spec.sessions)?;
+            (trace::generate(&spec), format!("generated:{preset}"))
+        }
+    };
+    if events.is_empty() {
+        return Err(anyhow!("trace contains no events"));
+    }
+    if let Some(out) = args.opt_str("trace-out") {
+        std::fs::write(&out, trace::dump_jsonl(&events))
+            .map_err(|e| anyhow!("could not write {out}: {e}"))?;
+        println!("wrote trace fixture {out} ({} events)", events.len());
+    }
+
+    let replay_cfg = trace::ReplayConfig {
+        overload: OverloadPolicy {
+            degrade_at: args.f64("degrade-at", 0.5)?,
+            shed_at: args.f64("shed-at", 0.9)?,
+            tier_max: args.usize("tier-max", 0)? as i32,
+        },
+        step_cost_us: args.usize("step-cost-us", 1000)? as u64,
+        seed: args.usize("seed", 0)? as u64,
+    };
+    let names = args.list("policies", &["fifo", "edf"]);
+    let mut policies = Vec::new();
+    for name in &names {
+        policies.push(PolicyKind::parse(name).ok_or_else(|| {
+            anyhow!("unknown policy {name:?} (expected fifo|spf|priority|edf)")
+        })?);
+    }
+
+    let base_cfg = engine_config(args)?;
+    let slots = args.usize("slots", 4)?;
+    let max_seq = args.usize("max-seq", 256)?;
+    let run = |policy: PolicyKind| -> Result<trace::ReplayReport> {
+        let mut cfg = base_cfg.clone();
+        cfg.scheduler.policy = policy;
+        let mut engine = InferenceEngine::new(
+            MockModel::new(slots, max_seq, 256, vec![16, 64]),
+            cfg,
+        );
+        trace::replay(&mut engine, &events, &replay_cfg)
+    };
+
+    println!(
+        "trace replay: {} events from {}, {}us/step, ladder degrade@{} \
+         shed@{} (tiers <= priority {})",
+        events.len(),
+        source,
+        replay_cfg.step_cost_us,
+        replay_cfg.overload.degrade_at,
+        replay_cfg.overload.shed_at,
+        replay_cfg.overload.tier_max,
+    );
+    println!("  policy     goodput   met/total   shed  degraded  makespan_ms");
+    let mut results: Vec<(PolicyKind, trace::ReplayReport)> = Vec::new();
+    for pk in &policies {
+        let report = run(*pk)?;
+        let met: usize = report.tiers.iter().map(|t| t.met).sum();
+        println!(
+            "  {:9} {:7.3}  {:5}/{:<5}  {:5}  {:8}  {:11.1}",
+            pk.name(),
+            report.goodput(),
+            met,
+            report.outcomes.len(),
+            report.shed(),
+            report.degraded(),
+            report.makespan_us as f64 / 1e3,
+        );
+        for t in &report.tiers {
+            println!(
+                "      tier {}: goodput {:.3} ({}/{} met, {} shed, {} degraded)",
+                t.tier,
+                t.goodput(),
+                t.met,
+                t.total,
+                t.shed,
+                t.degraded,
+            );
+        }
+        results.push((*pk, report));
+    }
+    write_slo_json(&source, &results);
+
+    let gate = args.bool("assert-goodput")
+        || std::env::var("TARDIS_ASSERT_GOODPUT").is_ok_and(|v| v == "1");
+    if gate {
+        let find = |kind: PolicyKind| {
+            results.iter().find(|(p, _)| *p == kind).map(|(_, r)| r.goodput())
+        };
+        let (Some(mut fifo), Some(mut edf)) =
+            (find(PolicyKind::Fifo), find(PolicyKind::Edf))
+        else {
+            return Err(anyhow!(
+                "--assert-goodput needs both fifo and edf in --policies"
+            ));
+        };
+        if edf <= fifo {
+            // Re-measure both once before failing. Replay is
+            // deterministic on the virtual clock, so a flip here means
+            // a real regression, but keep the shape of the other bench
+            // gates: loosen in both directions (best edf, worst fifo).
+            fifo = fifo.min(run(PolicyKind::Fifo)?.goodput());
+            edf = edf.max(run(PolicyKind::Edf)?.goodput());
+        }
+        if edf <= fifo {
+            eprintln!(
+                "FAIL: edf goodput {edf:.3} must strictly exceed fifo \
+                 {fifo:.3} on the overload trace"
+            );
+            std::process::exit(1);
+        }
+        println!("goodput check: edf {edf:.3} > fifo {fifo:.3}");
+    }
+    Ok(())
+}
+
+/// Merge the per-policy goodput summaries into the shared perf record
+/// under `coordinator.slo`. Sibling keys — including the rest of the
+/// `coordinator` object written by the scheduler bench — survive.
+fn write_slo_json(source: &str, results: &[(PolicyKind, trace::ReplayReport)]) {
+    use tardis::util::json::Json;
+    let path = std::env::var("TARDIS_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_native_ffn.json".to_string());
+    let mut root = match std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+    {
+        Some(Json::Obj(map)) => map,
+        _ => std::collections::BTreeMap::new(),
+    };
+    let mut coord = match root.get("coordinator") {
+        Some(Json::Obj(map)) => map.clone(),
+        _ => std::collections::BTreeMap::new(),
+    };
+    let mut slo = std::collections::BTreeMap::new();
+    slo.insert("trace".to_string(), Json::Str(source.to_string()));
+    let mut by_policy = std::collections::BTreeMap::new();
+    for (pk, report) in results {
+        by_policy.insert(pk.name().to_string(), report.summary_json());
+    }
+    slo.insert("policies".to_string(), Json::Obj(by_policy));
+    slo.insert(
+        "note".to_string(),
+        Json::Str(
+            "per-tier SLO goodput from `tardis bench-trace` on the virtual \
+             clock; goodput = fraction of requests served within both their \
+             TTFT and TPOT deadlines (shed requests count as missed)"
+                .to_string(),
+        ),
+    );
+    coord.insert("slo".to_string(), Json::Obj(slo));
+    root.insert("coordinator".to_string(), Json::Obj(coord));
+    let body = format!("{}\n", Json::Obj(root));
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
 // variants
 // ---------------------------------------------------------------------------
 
@@ -1188,6 +1432,7 @@ fn main() {
         Some("generate") => cmd_generate(&args),
         Some("variants") => cmd_variants(&args),
         Some("bench-decode") => cmd_bench_decode(&args),
+        Some("bench-trace") => cmd_bench_trace(&args),
         _ => usage(),
     };
     if let Err(e) = result {

@@ -76,6 +76,19 @@ pub fn parse_request(line: &str) -> Result<ServerRequest> {
                     .get("priority")
                     .and_then(Json::as_i64)
                     .unwrap_or(0) as i32,
+                ttft_deadline_ms: j
+                    .get("ttft_deadline_ms")
+                    .and_then(Json::as_i64)
+                    .filter(|&v| v >= 0)
+                    .map(|v| v as u64),
+                tpot_deadline_ms: j
+                    .get("tpot_deadline_ms")
+                    .and_then(Json::as_i64)
+                    .filter(|&v| v >= 0)
+                    .map(|v| v as u64),
+                // Never a client decision: only the front door's overload
+                // ladder (or the trace harness) may degrade a request.
+                degrade: false,
             };
             let variant = j
                 .get("variant")
@@ -104,6 +117,7 @@ pub fn render_completion(c: &Completion, variant: &str) -> String {
         ("first_token_ms", Json::num(c.first_token_ms)),
         ("total_ms", Json::num(c.total_ms)),
         ("prefix_hit_tokens", Json::num(c.prefix_hit_tokens as f64)),
+        ("degraded", Json::Bool(c.degraded)),
     ])
     .render()
 }
@@ -290,6 +304,31 @@ mod tests {
         match r {
             ServerRequest::Generate { params, .. } => {
                 assert_eq!(params.priority, 0, "priority defaults to 0");
+            }
+            _ => panic!("wrong request"),
+        }
+    }
+
+    #[test]
+    fn parses_deadlines() {
+        let r = parse_request(
+            r#"{"op":"generate","prompt":"hi","ttft_deadline_ms":50,"tpot_deadline_ms":20}"#,
+        )
+        .unwrap();
+        match r {
+            ServerRequest::Generate { params, .. } => {
+                assert_eq!(params.ttft_deadline_ms, Some(50));
+                assert_eq!(params.tpot_deadline_ms, Some(20));
+                assert!(!params.degrade, "wire can never request degrade");
+            }
+            _ => panic!("wrong request"),
+        }
+        let r = parse_request(r#"{"op":"generate","prompt":"hi","degrade":true}"#).unwrap();
+        match r {
+            ServerRequest::Generate { params, .. } => {
+                assert_eq!(params.ttft_deadline_ms, None, "no deadline by default");
+                assert_eq!(params.tpot_deadline_ms, None);
+                assert!(!params.degrade, "degrade on the wire is ignored");
             }
             _ => panic!("wrong request"),
         }

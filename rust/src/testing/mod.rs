@@ -1,3 +1,6 @@
+//! Test harnesses: proptest-lite property testing and the trace-driven
+//! workload generator/replayer ([`trace`]).
+//!
 //! Proptest-lite: seeded random-input property testing (the real proptest
 //! crate is not in the offline vendor set).
 //!
@@ -11,6 +14,8 @@
 //! ```
 //! On failure the seed of the failing case is printed so it can be
 //! replayed with `property_seeded`.
+
+pub mod trace;
 
 use crate::util::rng::Rng;
 

@@ -1,0 +1,854 @@
+//! Trace-driven workload harness.
+//!
+//! Three layers, each independently testable:
+//!
+//! 1. **Generation** — [`TraceSpec`] materializes a workload from a
+//!    seeded [`Rng`]: Poisson / bursty / heavy-tail arrivals, prompt and
+//!    output length distributions, a shared-prefix mix, weighted
+//!    priority tiers with per-tier TTFT/TPOT SLOs, and multi-turn
+//!    sessions whose follow-up prompts grow from the previous turn.
+//! 2. **Fixtures** — [`dump_jsonl`] / [`load_jsonl`] serialize the
+//!    materialized trace as one JSON object per line. Every field is an
+//!    integer, so `load(dump(t))` round-trips **bitwise**: a committed
+//!    trace is a frozen regression input, never regenerated in CI
+//!    (libm differences across toolchains could perturb the sampled
+//!    floats, so only the load path is exercised there).
+//! 3. **Replay** — [`replay`] drives a trace through an
+//!    [`InferenceEngine`] on its deterministic virtual clock: arrivals
+//!    release at their recorded microsecond, each engine step costs a
+//!    fixed virtual duration, and the overload ladder
+//!    ([`OverloadPolicy`]) degrades or sheds at the submission boundary
+//!    exactly like the TCP front door. The resulting
+//!    [`ReplayReport`] carries per-tier goodput — the fraction of
+//!    requests that met both their TTFT and TPOT SLOs.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::engine_loop::{InferenceEngine, SubmitError};
+use crate::coordinator::model::StepModel;
+use crate::coordinator::queue::{OverloadAction, OverloadPolicy};
+use crate::coordinator::request::{RequestId, SamplingParams};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Workload specification
+// ---------------------------------------------------------------------------
+
+/// Inter-arrival process for session starts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalModel {
+    /// Exponential gaps with the given mean (a Poisson process).
+    Poisson { mean_gap_us: u64 },
+    /// Poisson bursts: every arrival is a burst of `burst` sessions
+    /// spread uniformly over `within_us`.
+    Bursty { mean_gap_us: u64, burst: usize, within_us: u64 },
+    /// Pareto gaps `scale * (1-u)^(-1/alpha)`: rare long lulls between
+    /// packed stretches (`alpha` close to 1 = heavier tail).
+    HeavyTail { scale_us: u64, alpha: f64 },
+}
+
+/// Token-count distribution for prompts and outputs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LengthModel {
+    /// Uniform in `[lo, hi]` inclusive.
+    Uniform { lo: usize, hi: usize },
+    /// `median * exp(sigma * N(0,1))`, clamped to `[1, max]` — the
+    /// right-skewed shape of real prompt logs.
+    LogNormal { median: f64, sigma: f64, max: usize },
+}
+
+impl LengthModel {
+    fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LengthModel::Uniform { lo, hi } => {
+                rng.range_u64(lo as u64, hi.max(lo) as u64) as usize
+            }
+            LengthModel::LogNormal { median, sigma, max } => {
+                let v = median * (sigma * rng.normal()).exp();
+                (v as usize).clamp(1, max.max(1))
+            }
+        }
+    }
+}
+
+/// One service tier: a sampling weight, the scheduler priority, and the
+/// SLOs its requests are judged against (None = unconstrained).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierSpec {
+    pub weight: f64,
+    pub priority: i32,
+    pub ttft_deadline_ms: Option<u64>,
+    pub tpot_deadline_ms: Option<u64>,
+}
+
+/// Everything needed to materialize a workload from a seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    pub seed: u64,
+    /// Number of *sessions*; multi-turn follow-ups add further events.
+    pub sessions: usize,
+    pub arrivals: ArrivalModel,
+    pub prompt_len: LengthModel,
+    pub output_len: LengthModel,
+    /// Probability a session's first prompt starts with one of
+    /// `prefix_pool` shared prefixes of `prefix_len` tokens.
+    pub shared_prefix_p: f64,
+    pub prefix_pool: usize,
+    pub prefix_len: usize,
+    /// Weighted service tiers (index = `TraceEvent::tier`).
+    pub tiers: Vec<TierSpec>,
+    /// Probability each turn spawns a follow-up turn, up to `max_turns`
+    /// per session. Follow-ups re-send the grown conversation (previous
+    /// prompt + a synthesized response) after a think-time gap.
+    pub multi_turn_p: f64,
+    pub max_turns: usize,
+    pub think_gap_us: u64,
+    /// Token ids are drawn uniformly from `[0, vocab)`.
+    pub vocab: usize,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            seed: 0,
+            sessions: 32,
+            arrivals: ArrivalModel::Poisson { mean_gap_us: 2_000 },
+            prompt_len: LengthModel::Uniform { lo: 4, hi: 24 },
+            output_len: LengthModel::Uniform { lo: 2, hi: 8 },
+            shared_prefix_p: 0.3,
+            prefix_pool: 4,
+            prefix_len: 8,
+            tiers: vec![TierSpec {
+                weight: 1.0,
+                priority: 0,
+                ttft_deadline_ms: None,
+                tpot_deadline_ms: None,
+            }],
+            multi_turn_p: 0.2,
+            max_turns: 3,
+            think_gap_us: 10_000,
+            vocab: 256,
+        }
+    }
+}
+
+impl TraceSpec {
+    /// The spec behind the committed overload fixture
+    /// (`rust/tests/data/traces/overload.jsonl`): a burst-heavy backlog
+    /// where a latency-sensitive tier with tight TTFT/TPOT SLOs queues
+    /// behind a bulk tier with long prompts and no deadlines. FIFO makes
+    /// the interactive tier wait out the bulk prompts; EDF does not.
+    pub fn overload_preset() -> TraceSpec {
+        TraceSpec {
+            seed: 0x51_0,
+            sessions: 24,
+            arrivals: ArrivalModel::Bursty { mean_gap_us: 4_000, burst: 6, within_us: 500 },
+            prompt_len: LengthModel::Uniform { lo: 4, hi: 28 },
+            output_len: LengthModel::Uniform { lo: 2, hi: 8 },
+            shared_prefix_p: 0.25,
+            prefix_pool: 3,
+            prefix_len: 6,
+            tiers: vec![
+                // bulk: long prompts tolerated, no deadline, degradable
+                TierSpec {
+                    weight: 0.5,
+                    priority: 0,
+                    ttft_deadline_ms: None,
+                    tpot_deadline_ms: None,
+                },
+                // interactive: tight TTFT, modest TPOT
+                TierSpec {
+                    weight: 0.5,
+                    priority: 1,
+                    ttft_deadline_ms: Some(30),
+                    tpot_deadline_ms: Some(20),
+                },
+            ],
+            multi_turn_p: 0.2,
+            max_turns: 2,
+            think_gap_us: 8_000,
+            vocab: 64,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The materialized trace
+// ---------------------------------------------------------------------------
+
+/// One request of a materialized trace. All fields are integers so the
+/// JSONL form round-trips bitwise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub id: u64,
+    pub arrival_us: u64,
+    pub session: u64,
+    pub turn: u32,
+    /// Index into the generating spec's `tiers` (kept in the fixture so
+    /// replay can attribute goodput without the spec).
+    pub tier: usize,
+    pub priority: i32,
+    pub ttft_deadline_ms: Option<u64>,
+    pub tpot_deadline_ms: Option<u64>,
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+}
+
+impl TraceEvent {
+    /// Engine-facing sampling parameters: greedy decoding with a
+    /// per-request seed, deadlines from the tier, never pre-degraded
+    /// (degradation is the replay-time overload ladder's decision).
+    pub fn params(&self, seed: u64) -> SamplingParams {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            max_tokens: self.max_tokens,
+            stop_token: None,
+            seed: seed ^ self.id,
+            priority: self.priority,
+            ttft_deadline_ms: self.ttft_deadline_ms,
+            tpot_deadline_ms: self.tpot_deadline_ms,
+            degrade: false,
+        }
+    }
+}
+
+fn sample_tier(tiers: &[TierSpec], rng: &mut Rng) -> usize {
+    let total: f64 = tiers.iter().map(|t| t.weight.max(0.0)).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut x = rng.f64() * total;
+    for (i, t) in tiers.iter().enumerate() {
+        x -= t.weight.max(0.0);
+        if x < 0.0 {
+            return i;
+        }
+    }
+    tiers.len() - 1
+}
+
+/// Materialize the workload. Deterministic in `spec` (one fixed draw
+/// order from a single seeded stream); the result is sorted by
+/// `(arrival_us, id)`.
+pub fn generate(spec: &TraceSpec) -> Vec<TraceEvent> {
+    assert!(!spec.tiers.is_empty(), "need at least one tier");
+    assert!(spec.vocab > 0, "need a non-empty vocab");
+    let mut rng = Rng::new(spec.seed);
+    let vocab = spec.vocab as u64;
+    let token = |rng: &mut Rng| rng.below(vocab) as i32;
+    let prefixes: Vec<Vec<i32>> = (0..spec.prefix_pool)
+        .map(|_| (0..spec.prefix_len).map(|_| token(&mut rng)).collect())
+        .collect();
+    let mut events = Vec::new();
+    let mut id = 0u64;
+    let mut now_us = 0u64;
+    for session in 0..spec.sessions as u64 {
+        let gap = match spec.arrivals {
+            ArrivalModel::Poisson { mean_gap_us } => rng.exp(mean_gap_us as f64),
+            // the gap opens a burst; intra-burst offsets are drawn below
+            ArrivalModel::Bursty { mean_gap_us, .. } => rng.exp(mean_gap_us as f64),
+            ArrivalModel::HeavyTail { scale_us, alpha } => {
+                scale_us as f64 * (1.0 - rng.f64()).powf(-1.0 / alpha.max(0.1))
+            }
+        };
+        now_us = now_us.saturating_add(gap as u64);
+        let burst = match spec.arrivals {
+            ArrivalModel::Bursty { burst, .. } => burst.max(1),
+            _ => 1,
+        };
+        for b in 0..burst {
+            let offset = match spec.arrivals {
+                ArrivalModel::Bursty { within_us, .. } if b > 0 => rng.below(within_us.max(1)),
+                _ => 0,
+            };
+            let tier = sample_tier(&spec.tiers, &mut rng);
+            let t = &spec.tiers[tier];
+            let mut prompt: Vec<i32> = Vec::new();
+            if !prefixes.is_empty() && rng.bool(spec.shared_prefix_p) {
+                prompt.extend_from_slice(rng.choose(&prefixes));
+            }
+            let fresh = spec.prompt_len.sample(&mut rng).max(1);
+            prompt.extend((0..fresh).map(|_| token(&mut rng)));
+            let mut arrival = now_us.saturating_add(offset);
+            let mut turn = 0u32;
+            loop {
+                let max_tokens = spec.output_len.sample(&mut rng).max(1);
+                events.push(TraceEvent {
+                    id,
+                    arrival_us: arrival,
+                    session,
+                    turn,
+                    tier,
+                    priority: t.priority,
+                    ttft_deadline_ms: t.ttft_deadline_ms,
+                    tpot_deadline_ms: t.tpot_deadline_ms,
+                    prompt: prompt.clone(),
+                    max_tokens,
+                });
+                id += 1;
+                turn += 1;
+                if turn as usize >= spec.max_turns || !rng.bool(spec.multi_turn_p) {
+                    break;
+                }
+                // Follow-up: the conversation grows by a synthesized
+                // response plus the user's next utterance, and arrives
+                // after a think-time gap.
+                prompt.extend((0..max_tokens).map(|_| token(&mut rng)));
+                let next = spec.prompt_len.sample(&mut rng).max(1);
+                prompt.extend((0..next).map(|_| token(&mut rng)));
+                arrival = arrival
+                    .saturating_add(rng.exp(spec.think_gap_us as f64) as u64);
+            }
+        }
+    }
+    events.sort_by_key(|e| (e.arrival_us, e.id));
+    events
+}
+
+// ---------------------------------------------------------------------------
+// JSONL fixtures
+// ---------------------------------------------------------------------------
+
+/// One JSON object per line, trailing newline, optional fields omitted
+/// when absent. Keys render sorted (the JSON objects are BTreeMaps) and
+/// every value is integral, so dump∘load is the identity on bytes.
+pub fn dump_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        let mut fields = vec![
+            ("arrival_us", Json::num(e.arrival_us as f64)),
+            ("id", Json::num(e.id as f64)),
+            ("max_tokens", Json::num(e.max_tokens as f64)),
+            ("priority", Json::num(e.priority as f64)),
+            ("prompt", Json::arr(e.prompt.iter().map(|&t| Json::num(t as f64)))),
+            ("session", Json::num(e.session as f64)),
+            ("tier", Json::num(e.tier as f64)),
+            ("turn", Json::num(e.turn as f64)),
+        ];
+        if let Some(ms) = e.ttft_deadline_ms {
+            fields.push(("ttft_deadline_ms", Json::num(ms as f64)));
+        }
+        if let Some(ms) = e.tpot_deadline_ms {
+            fields.push(("tpot_deadline_ms", Json::num(ms as f64)));
+        }
+        out.push_str(&Json::obj(fields).render());
+        out.push('\n');
+    }
+    out
+}
+
+pub fn load_jsonl(text: &str) -> Result<Vec<TraceEvent>> {
+    let mut events = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| anyhow!("trace line {}: bad json: {e}", lineno + 1))?;
+        let req = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| anyhow!("trace line {}: missing {key:?}", lineno + 1))
+        };
+        let prompt = j
+            .get("prompt")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("trace line {}: missing \"prompt\"", lineno + 1))?
+            .iter()
+            .map(|v| {
+                v.as_i64()
+                    .map(|x| x as i32)
+                    .ok_or_else(|| anyhow!("trace line {}: non-integer token", lineno + 1))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        events.push(TraceEvent {
+            id: req("id")? as u64,
+            arrival_us: req("arrival_us")? as u64,
+            session: j.get("session").and_then(Json::as_i64).unwrap_or(0) as u64,
+            turn: j.get("turn").and_then(Json::as_i64).unwrap_or(0) as u32,
+            tier: j.get("tier").and_then(Json::as_usize).unwrap_or(0),
+            priority: j.get("priority").and_then(Json::as_i64).unwrap_or(0) as i32,
+            ttft_deadline_ms: j
+                .get("ttft_deadline_ms")
+                .and_then(Json::as_i64)
+                .map(|v| v as u64),
+            tpot_deadline_ms: j
+                .get("tpot_deadline_ms")
+                .and_then(Json::as_i64)
+                .map(|v| v as u64),
+            prompt,
+            max_tokens: req("max_tokens")?.max(1) as usize,
+        });
+    }
+    events.sort_by_key(|e| (e.arrival_us, e.id));
+    Ok(events)
+}
+
+// ---------------------------------------------------------------------------
+// Virtual-time replay
+// ---------------------------------------------------------------------------
+
+/// Replay knobs independent of the engine's own configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayConfig {
+    /// Overload ladder applied at the submission boundary (mirror of
+    /// the TCP front door). Disabled by default.
+    pub overload: OverloadPolicy,
+    /// Virtual microseconds one engine iteration costs. The absolute
+    /// value only scales the latency numbers; what matters is that it
+    /// is fixed, so two replays of one fixture are bitwise identical.
+    pub step_cost_us: u64,
+    /// Base sampler seed (combined with each event id).
+    pub seed: u64,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig { overload: OverloadPolicy::default(), step_cost_us: 1_000, seed: 0 }
+    }
+}
+
+/// What happened to one trace event during a replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayOutcome {
+    pub id: u64,
+    pub tier: usize,
+    /// false = shed by the overload ladder or rejected by the engine.
+    pub admitted: bool,
+    pub degraded: bool,
+    pub tokens: Vec<i32>,
+    pub ttft_us: u64,
+    pub total_us: u64,
+    /// Mean decode gap (total − ttft) / (tokens − 1), in µs.
+    pub tpot_us: u64,
+    pub met_slo: bool,
+}
+
+/// Per-tier goodput accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierGoodput {
+    pub tier: usize,
+    pub total: usize,
+    pub met: usize,
+    pub shed: usize,
+    pub degraded: usize,
+}
+
+impl TierGoodput {
+    pub fn goodput(&self) -> f64 {
+        if self.total == 0 {
+            1.0
+        } else {
+            self.met as f64 / self.total as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    /// One outcome per trace event, sorted by event id.
+    pub outcomes: Vec<ReplayOutcome>,
+    pub tiers: Vec<TierGoodput>,
+    /// Virtual time at which the last request finished.
+    pub makespan_us: u64,
+}
+
+impl ReplayReport {
+    /// Overall goodput: fraction of all requests that were served and
+    /// met every SLO they carried. A shed request never counts.
+    pub fn goodput(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 1.0;
+        }
+        let met = self.outcomes.iter().filter(|o| o.met_slo).count();
+        met as f64 / self.outcomes.len() as f64
+    }
+
+    pub fn shed(&self) -> usize {
+        self.outcomes.iter().filter(|o| !o.admitted).count()
+    }
+
+    pub fn degraded(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.degraded).count()
+    }
+
+    /// The `coordinator.slo` bench fragment for one (policy, trace) run.
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.outcomes.len() as f64)),
+            (
+                "met",
+                Json::num(self.outcomes.iter().filter(|o| o.met_slo).count() as f64),
+            ),
+            ("shed", Json::num(self.shed() as f64)),
+            ("degraded", Json::num(self.degraded() as f64)),
+            ("goodput", Json::num(self.goodput())),
+            ("makespan_us", Json::num(self.makespan_us as f64)),
+            (
+                "tiers",
+                Json::arr(self.tiers.iter().map(|t| {
+                    Json::obj(vec![
+                        ("tier", Json::num(t.tier as f64)),
+                        ("total", Json::num(t.total as f64)),
+                        ("met", Json::num(t.met as f64)),
+                        ("shed", Json::num(t.shed as f64)),
+                        ("degraded", Json::num(t.degraded as f64)),
+                        ("goodput", Json::num(t.goodput())),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Drive `events` through `engine` on the virtual clock and score every
+/// request against its SLOs.
+///
+/// The engine should be freshly built (policy and queue capacity are
+/// the caller's choice); this function switches it to the virtual
+/// clock. Admission order is strictly arrival order; the overload
+/// ladder decides degrade/shed *before* submission, exactly like the
+/// front door, so crash replays and re-runs see identical requests.
+pub fn replay<M: StepModel>(
+    engine: &mut InferenceEngine<M>,
+    events: &[TraceEvent],
+    cfg: &ReplayConfig,
+) -> Result<ReplayReport> {
+    engine.enable_virtual_clock();
+    let n_tiers = events.iter().map(|e| e.tier + 1).max().unwrap_or(0);
+    let mut tiers: Vec<TierGoodput> = (0..n_tiers)
+        .map(|tier| TierGoodput { tier, total: 0, met: 0, shed: 0, degraded: 0 })
+        .collect();
+    // index into `events` → outcome slot; engine id → event index
+    let mut outcomes: Vec<Option<ReplayOutcome>> = vec![None; events.len()];
+    let mut by_request: HashMap<RequestId, usize> = HashMap::new();
+    let mut ready: VecDeque<usize> = VecDeque::new();
+    let mut next = 0usize;
+    let mut makespan_us = 0u64;
+    loop {
+        let now = engine.now_us();
+        while next < events.len() && events[next].arrival_us <= now {
+            ready.push_back(next);
+            next += 1;
+        }
+        // Admit in arrival order until the engine pushes back.
+        while let Some(&i) = ready.front() {
+            let e = &events[i];
+            let mut params = e.params(cfg.seed);
+            if cfg.overload.enabled() {
+                match cfg.overload.action(engine.queue_pressure(), params.priority) {
+                    OverloadAction::Admit => {}
+                    OverloadAction::Degrade => params.degrade = true,
+                    OverloadAction::Shed => {
+                        tiers[e.tier].total += 1;
+                        tiers[e.tier].shed += 1;
+                        outcomes[i] = Some(ReplayOutcome {
+                            id: e.id,
+                            tier: e.tier,
+                            admitted: false,
+                            degraded: false,
+                            tokens: Vec::new(),
+                            ttft_us: 0,
+                            total_us: 0,
+                            tpot_us: 0,
+                            met_slo: false,
+                        });
+                        ready.pop_front();
+                        continue;
+                    }
+                }
+            }
+            match engine.try_submit(e.prompt.clone(), params) {
+                Ok(id) => {
+                    by_request.insert(id, i);
+                    ready.pop_front();
+                }
+                Err(SubmitError::Backpressure { .. }) => break, // full: retry after a step
+                Err(SubmitError::Invalid(_)) => {
+                    tiers[e.tier].total += 1;
+                    tiers[e.tier].shed += 1;
+                    outcomes[i] = Some(ReplayOutcome {
+                        id: e.id,
+                        tier: e.tier,
+                        admitted: false,
+                        degraded: false,
+                        tokens: Vec::new(),
+                        ttft_us: 0,
+                        total_us: 0,
+                        tpot_us: 0,
+                        met_slo: false,
+                    });
+                    ready.pop_front();
+                }
+            }
+        }
+        if engine.is_idle() && ready.is_empty() {
+            if next >= events.len() {
+                break;
+            }
+            // Nothing to do until the next arrival: jump straight there.
+            engine.advance_clock_us(events[next].arrival_us - engine.now_us());
+            continue;
+        }
+        // Charge the step *before* executing it: a token computed by
+        // this iteration becomes visible at its end, so even a
+        // single-chunk prefill pays one step of TTFT.
+        engine.advance_clock_us(cfg.step_cost_us);
+        engine.step()?;
+        for c in engine.take_completions() {
+            let Some(i) = by_request.remove(&c.id) else { continue };
+            let e = &events[i];
+            let ttft_us = c.ttft_us.unwrap_or(0);
+            let total_us = c.total_us.unwrap_or(ttft_us);
+            let tpot_us =
+                total_us.saturating_sub(ttft_us) / (c.tokens.len().max(2) as u64 - 1);
+            let ttft_ok = e
+                .ttft_deadline_ms
+                .is_none_or(|ms| ttft_us <= ms.saturating_mul(1000));
+            let tpot_ok = e
+                .tpot_deadline_ms
+                .is_none_or(|ms| tpot_us <= ms.saturating_mul(1000));
+            let met_slo = ttft_ok && tpot_ok;
+            tiers[e.tier].total += 1;
+            if met_slo {
+                tiers[e.tier].met += 1;
+            }
+            if c.degraded {
+                tiers[e.tier].degraded += 1;
+            }
+            makespan_us = makespan_us.max(engine.now_us());
+            outcomes[i] = Some(ReplayOutcome {
+                id: e.id,
+                tier: e.tier,
+                admitted: true,
+                degraded: c.degraded,
+                tokens: c.tokens,
+                ttft_us,
+                total_us,
+                tpot_us,
+                met_slo,
+            });
+        }
+    }
+    let outcomes: Vec<ReplayOutcome> = outcomes
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| o.ok_or_else(|| anyhow!("event {} never resolved", events[i].id)))
+        .collect::<Result<_>>()?;
+    Ok(ReplayReport { outcomes, tiers, makespan_us })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine_loop::EngineConfig;
+    use crate::coordinator::model::MockModel;
+    use crate::coordinator::scheduler::PolicyKind;
+
+    fn engine(policy: PolicyKind, queue_cap: usize) -> InferenceEngine<MockModel> {
+        let mut cfg = EngineConfig { queue_capacity: queue_cap, ..Default::default() };
+        cfg.scheduler.policy = policy;
+        InferenceEngine::new(MockModel::new(2, 96, 64, vec![4, 8]), cfg)
+    }
+
+    fn small_spec() -> TraceSpec {
+        TraceSpec {
+            seed: 7,
+            sessions: 10,
+            prompt_len: LengthModel::Uniform { lo: 2, hi: 10 },
+            output_len: LengthModel::Uniform { lo: 1, hi: 4 },
+            vocab: 64,
+            tiers: vec![
+                TierSpec {
+                    weight: 1.0,
+                    priority: 0,
+                    ttft_deadline_ms: None,
+                    tpot_deadline_ms: None,
+                },
+                TierSpec {
+                    weight: 1.0,
+                    priority: 1,
+                    ttft_deadline_ms: Some(50),
+                    tpot_deadline_ms: Some(30),
+                },
+            ],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_sorted() {
+        let spec = small_spec();
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a, b);
+        assert!(a.len() >= spec.sessions);
+        assert!(a.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+        let mut ids: Vec<u64> = a.iter().map(|e| e.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), a.len(), "duplicate event ids");
+        // a different seed gives a different trace
+        let c = generate(&TraceSpec { seed: 8, ..spec });
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn multi_turn_prompts_grow_from_previous_turn() {
+        let spec = TraceSpec { multi_turn_p: 1.0, max_turns: 3, ..small_spec() };
+        let events = generate(&spec);
+        let mut by_session: HashMap<u64, Vec<&TraceEvent>> = HashMap::new();
+        for e in &events {
+            by_session.entry(e.session).or_default().push(e);
+        }
+        let mut saw_followup = false;
+        for turns in by_session.values_mut() {
+            turns.sort_by_key(|e| e.turn);
+            for w in turns.windows(2) {
+                saw_followup = true;
+                assert!(w[1].arrival_us > w[0].arrival_us, "turns move forward in time");
+                assert!(
+                    w[1].prompt.starts_with(&w[0].prompt),
+                    "turn {} must extend turn {}'s prompt",
+                    w[1].turn,
+                    w[0].turn
+                );
+            }
+        }
+        assert!(saw_followup, "p=1.0 must produce follow-up turns");
+    }
+
+    #[test]
+    fn jsonl_round_trip_is_bitwise() {
+        let events = generate(&small_spec());
+        let dumped = dump_jsonl(&events);
+        let loaded = load_jsonl(&dumped).unwrap();
+        assert_eq!(loaded, events, "load(dump(t)) == t");
+        assert_eq!(dump_jsonl(&loaded), dumped, "dump(load(d)) == d, bitwise");
+    }
+
+    #[test]
+    fn load_rejects_garbage_and_tolerates_blank_lines() {
+        assert!(load_jsonl("{\"id\":1}\n").is_err(), "missing fields");
+        assert!(load_jsonl("not json\n").is_err());
+        let ok = load_jsonl(
+            "\n{\"arrival_us\":5,\"id\":0,\"max_tokens\":2,\"prompt\":[1,2]}\n\n",
+        )
+        .unwrap();
+        assert_eq!(ok.len(), 1);
+        assert_eq!(ok[0].tier, 0, "tier defaults to 0");
+        assert_eq!(ok[0].ttft_deadline_ms, None, "no deadline when absent");
+    }
+
+    #[test]
+    fn replay_is_bitwise_deterministic() {
+        let events = generate(&small_spec());
+        let cfg = ReplayConfig { step_cost_us: 700, ..Default::default() };
+        for policy in PolicyKind::all() {
+            let a = replay(&mut engine(policy, 64), &events, &cfg).unwrap();
+            let b = replay(&mut engine(policy, 64), &events, &cfg).unwrap();
+            assert_eq!(a.outcomes, b.outcomes, "{policy:?} replay must be bitwise");
+            assert_eq!(a.goodput(), b.goodput());
+            assert_eq!(a.outcomes.len(), events.len());
+            assert!(a.outcomes.iter().all(|o| o.admitted), "no overload configured");
+        }
+    }
+
+    #[test]
+    fn replay_policies_agree_on_streams_but_not_order() {
+        // Policies only permute admission: every request's token stream
+        // is identical across policies even though latencies differ.
+        let events = generate(&small_spec());
+        let cfg = ReplayConfig::default();
+        let fifo = replay(&mut engine(PolicyKind::Fifo, 64), &events, &cfg).unwrap();
+        let edf = replay(&mut engine(PolicyKind::Edf, 64), &events, &cfg).unwrap();
+        for (f, e) in fifo.outcomes.iter().zip(&edf.outcomes) {
+            assert_eq!(f.id, e.id);
+            assert_eq!(f.tokens, e.tokens, "streams are policy-invariant");
+        }
+    }
+
+    #[test]
+    fn overload_ladder_sheds_and_degrades_in_replay() {
+        // A tiny queue under a burst: the bulk tier degrades, then
+        // sheds; the interactive tier (priority 1 > tier_max 0) never
+        // does either.
+        let spec = TraceSpec {
+            arrivals: ArrivalModel::Bursty { mean_gap_us: 20_000, burst: 8, within_us: 100 },
+            sessions: 4,
+            multi_turn_p: 0.0,
+            ..small_spec()
+        };
+        let events = generate(&spec);
+        let cfg = ReplayConfig {
+            overload: OverloadPolicy { degrade_at: 0.25, shed_at: 0.75, tier_max: 0 },
+            step_cost_us: 2_000,
+            seed: 0,
+        };
+        let report = replay(&mut engine(PolicyKind::Fifo, 8), &events, &cfg).unwrap();
+        assert!(report.degraded() > 0, "burst must trigger degradation");
+        for o in &report.outcomes {
+            let tier = &spec.tiers[o.tier];
+            if tier.priority > 0 {
+                assert!(o.admitted, "high tier must never shed");
+                assert!(!o.degraded, "high tier must never degrade");
+            }
+        }
+        let shed_plus_served: usize = report.tiers.iter().map(|t| t.total).sum();
+        assert_eq!(shed_plus_served, events.len(), "every event accounted");
+    }
+
+    #[test]
+    fn goodput_scores_deadlines() {
+        // step_cost large enough that the tight tier cannot make TTFT.
+        let spec = TraceSpec {
+            tiers: vec![TierSpec {
+                weight: 1.0,
+                priority: 0,
+                ttft_deadline_ms: Some(1),
+                tpot_deadline_ms: None,
+            }],
+            sessions: 4,
+            multi_turn_p: 0.0,
+            ..small_spec()
+        };
+        let events = generate(&spec);
+        let cfg = ReplayConfig { step_cost_us: 5_000, ..Default::default() };
+        let strict = replay(&mut engine(PolicyKind::Fifo, 64), &events, &cfg).unwrap();
+        assert!(strict.goodput() < 1.0, "1ms TTFT at 5ms/step must miss");
+        // the same trace with no deadlines scores perfectly
+        let relaxed: Vec<TraceEvent> = events
+            .iter()
+            .map(|e| TraceEvent { ttft_deadline_ms: None, tpot_deadline_ms: None, ..e.clone() })
+            .collect();
+        let free = replay(&mut engine(PolicyKind::Fifo, 64), &relaxed, &cfg).unwrap();
+        assert_eq!(free.goodput(), 1.0);
+        assert_eq!(free.tiers[0].met, free.tiers[0].total);
+    }
+
+    #[test]
+    fn summary_json_carries_tier_breakdown() {
+        let events = generate(&small_spec());
+        let report =
+            replay(&mut engine(PolicyKind::Edf, 64), &events, &ReplayConfig::default())
+                .unwrap();
+        let j = report.summary_json();
+        assert_eq!(
+            j.get("requests").and_then(Json::as_usize),
+            Some(events.len())
+        );
+        let tiers = j.get("tiers").and_then(Json::as_arr).unwrap();
+        assert_eq!(tiers.len(), report.tiers.len());
+        let total: usize = tiers
+            .iter()
+            .map(|t| t.get("total").and_then(Json::as_usize).unwrap())
+            .sum();
+        assert_eq!(total, events.len());
+        assert!(j.get("goodput").and_then(Json::as_f64).is_some());
+    }
+}

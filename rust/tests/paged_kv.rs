@@ -116,6 +116,7 @@ fn prop_preemption_is_invisible_to_token_streams() {
                     stop_token: None,
                     seed: rng.next_u64(),
                     priority: rng.below(5) as i32,
+                    ..Default::default()
                 };
                 Spec { prompt, params }
             })

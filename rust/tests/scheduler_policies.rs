@@ -36,6 +36,7 @@ fn random_specs(rng: &mut Rng) -> Vec<Spec> {
                 stop_token: None,
                 seed: rng.next_u64(),
                 priority: rng.below(5) as i32,
+                ..Default::default()
             };
             Spec { prompt, params }
         })
