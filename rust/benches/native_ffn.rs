@@ -6,7 +6,10 @@
 //!    GFLOP/s;
 //! 2. FFN — dense vs TARDIS-folded forward at several fold ratios;
 //! 3. model — full decode steps through the NativeModel, dense vs
-//!    tardis80, cross-validated against `costmodel::tardis_speedup`.
+//!    tardis80, cross-validated against `costmodel::tardis_speedup`,
+//!    plus single-stream self-speculative decode (forced-fold drafts,
+//!    k=4) vs plain, with acceptance rate, merged under
+//!    `decode.speculative`.
 //!
 //! Besides the human-readable table, the run merges its report into
 //! `BENCH_native_ffn.json` (override the path with `TARDIS_BENCH_JSON`)
@@ -23,7 +26,9 @@ use std::sync::Arc;
 
 use tardis::bench::{black_box, Bench};
 use tardis::config::{FfnMode, NativeModelConfig, TardisFfnConfig};
+use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
 use tardis::coordinator::model::{NativeModel, StepModel};
+use tardis::coordinator::request::SamplingParams;
 use tardis::costmodel;
 use tardis::ffn::kernels::{
     matmul, matmul_naive, matmul_q, norm, Epilogue, KernelDispatch, PackedMatrix, Scratch,
@@ -239,6 +244,65 @@ fn main() {
         println!("decode-step speedup tardis80 vs dense: {ratio:.2}x");
         decode_json.insert("dense_vs_tardis".to_string(), num(ratio));
     }
+    // ---- model-level: single-stream self-speculative decode ------------
+    // One greedy request through the full engine, plain vs drafting k
+    // tokens per step through the forced-fold path; recorded under
+    // decode.speculative (k, acceptance, tokens/s per variant).
+    let spec_k = 4usize;
+    let mut spec_json = BTreeMap::new();
+    spec_json.insert("k".to_string(), num(spec_k as f64));
+    let mut spec_rows = Vec::new();
+    for (name, mode) in [
+        ("dense".to_string(), FfnMode::Dense),
+        (
+            "tardis80".to_string(),
+            FfnMode::Tardis(TardisFfnConfig::with_ratio(0.8)),
+        ),
+    ] {
+        let run = |k: usize| {
+            let model = NativeModel::new(model_cfg.clone(), &mode);
+            let ecfg = EngineConfig {
+                speculate_k: k,
+                prefix_cache: false,
+                ..Default::default()
+            };
+            let mut e = InferenceEngine::new(model, ecfg);
+            let prompt: Vec<i32> = (0..8i32)
+                .map(|t| (5 * t + 2) % model_cfg.vocab as i32)
+                .collect();
+            let warm = SamplingParams { max_tokens: 8, ..Default::default() };
+            e.generate_sequential(prompt.clone(), warm).unwrap();
+            let params = SamplingParams { max_tokens: 48, ..Default::default() };
+            let t0 = std::time::Instant::now();
+            let c = e.generate_sequential(prompt, params).unwrap();
+            let dt = t0.elapsed().as_secs_f64();
+            (c.tokens.len() as f64 / dt, e.stats.spec_acceptance())
+        };
+        let (plain_tok_s, _) = run(0);
+        let (spec_tok_s, acceptance) = run(spec_k);
+        println!(
+            "  [decode/speculative/{name}] plain {plain_tok_s:.1} tok/s, \
+             k={spec_k} speculative {spec_tok_s:.1} tok/s ({:.2}x), \
+             acceptance {:.1}%",
+            spec_tok_s / plain_tok_s,
+            acceptance.unwrap_or(0.0) * 100.0,
+        );
+        let mut o = BTreeMap::new();
+        o.insert("variant".to_string(), Json::Str(name));
+        if let Some(a) = acceptance {
+            o.insert("acceptance".to_string(), num(a));
+        }
+        o.insert("plain_tokens_per_s".to_string(), num(plain_tok_s));
+        o.insert("spec_tokens_per_s".to_string(), num(spec_tok_s));
+        o.insert(
+            "speedup_vs_plain".to_string(),
+            num(spec_tok_s / plain_tok_s),
+        );
+        spec_rows.push(Json::Obj(o));
+    }
+    spec_json.insert("variants".to_string(), Json::Arr(spec_rows));
+    decode_json.insert("speculative".to_string(), Json::Obj(spec_json));
+
     decode_json.insert("ffn_scratch_misses".to_string(), num(ffn_misses as f64));
     report.insert("decode".to_string(), Json::Obj(decode_json));
 

@@ -66,8 +66,7 @@ impl Bench {
         let mut samples = Samples::new();
         let started = Instant::now();
         let mut iters = 0usize;
-        while (iters < self.opts.min_iters
-            || started.elapsed() < self.opts.min_time)
+        while (iters < self.opts.min_iters || started.elapsed() < self.opts.min_time)
             && iters < self.opts.max_iters
         {
             let t0 = Instant::now();
@@ -76,7 +75,11 @@ impl Bench {
             iters += 1;
         }
         let summary = samples.summary();
-        let rate = if summary.mean > 0.0 { 1000.0 / summary.mean } else { f64::NAN };
+        let rate = if summary.mean > 0.0 {
+            1000.0 / summary.mean
+        } else {
+            f64::NAN
+        };
         println!(
             "{:40} mean {:9.4} ms  p50 {:9.4}  p99 {:9.4}  ({} iters, {:.1}/s)",
             name, summary.mean, summary.p50, summary.p99, summary.n, rate
@@ -114,8 +117,12 @@ impl Bench {
         {
             let _ = f.write_all(rows.as_bytes());
         }
-        println!("== {}: {} cases, rows appended to {} ==",
-                 self.suite, self.results.len(), path.display());
+        println!(
+            "== {}: {} cases, rows appended to {} ==",
+            self.suite,
+            self.results.len(),
+            path.display()
+        );
     }
 }
 
@@ -149,6 +156,6 @@ mod tests {
         });
         assert!(r.summary.n >= 5);
         assert!(r.summary.mean >= 0.0);
-        assert_eq!(b.mean_ms("spin").is_some(), true);
+        assert!(b.mean_ms("spin").is_some());
     }
 }

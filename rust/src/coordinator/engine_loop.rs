@@ -30,7 +30,7 @@ use super::kv::{BlockAllocator, BlockTable, KvLayout, PrefixMatch, RadixCache};
 use super::model::{KvSwap, StepModel};
 use super::queue::{AdmissionQueue, QueueFull};
 use super::request::{FinishReason, Request, RequestId, RequestState, SamplingParams};
-use super::sampler::sample;
+use super::sampler::{argmax, sample};
 use super::scheduler::{Abort, Admission, ChunkSpec, DecodeBatch, DecodeSlotView, Preemption};
 use super::scheduler::{PrefillView, QueuedRequest, Resume, SchedView, Scheduler};
 use super::scheduler::{SchedulerConfig, StepOutcome, StepPlan, SwappedView};
@@ -85,6 +85,21 @@ pub struct EngineConfig {
     /// (radix cache + copy-on-write). Takes effect only on backends
     /// whose [`StepModel::supports_block_sharing`] is true.
     pub prefix_cache: bool,
+    /// Self-speculative decoding: draft up to this many tokens per
+    /// decode step through the all-folded forced FFN path and verify
+    /// them with one batched multi-row forward, retiring the longest
+    /// agreeing prefix plus the verify's own token (0 = off). Greedy
+    /// token-match acceptance keeps accepted streams bitwise identical
+    /// to plain decode; requests sampling at temperature > 0 simply
+    /// decode one token at a time. Takes effect only on backends whose
+    /// [`StepModel::supports_speculation`] is true.
+    pub speculate_k: usize,
+    /// Adapt each request's draft window to its observed acceptance:
+    /// shrink toward 1 when a step rejects most drafts, recover toward
+    /// `speculate_k` when every draft lands — and let degraded-tier
+    /// requests (whose verify path IS the forced fold, so drafts always
+    /// agree) grow to `2 * speculate_k`.
+    pub speculate_adaptive: bool,
 }
 
 impl Default for EngineConfig {
@@ -93,6 +108,8 @@ impl Default for EngineConfig {
             queue_capacity: 64,
             scheduler: SchedulerConfig::default(),
             prefix_cache: true,
+            speculate_k: 0,
+            speculate_adaptive: false,
         }
     }
 }
@@ -137,6 +154,12 @@ pub struct EngineStats {
     pub cow_copies: u64,
     /// Cold cache leaves evicted to satisfy block allocation.
     pub prefix_evictions: u64,
+    /// Draft tokens proposed by the speculative decode loop.
+    pub spec_drafted: u64,
+    /// Drafted tokens the verify forward accepted (token-match).
+    pub spec_accepted: u64,
+    /// Decode steps that carried at least one draft token.
+    pub spec_steps: u64,
 }
 
 impl EngineStats {
@@ -165,6 +188,16 @@ impl EngineStats {
             None
         } else {
             Some(self.ffn_fallback_rows as f64 / total as f64)
+        }
+    }
+
+    /// Fraction of drafted tokens the verify accepted; `None` until the
+    /// speculative loop drafted anything.
+    pub fn spec_acceptance(&self) -> Option<f64> {
+        if self.spec_drafted == 0 {
+            None
+        } else {
+            Some(self.spec_accepted as f64 / self.spec_drafted as f64)
         }
     }
 }
@@ -324,6 +357,12 @@ pub struct InferenceEngine<M: StepModel> {
     step_faults: Vec<(u64, StepFault)>,
     /// Source of the µs stamps on [`Request`] / [`Completion`].
     clock: Clock,
+    /// `cfg.speculate_k`, zeroed when the backend lacks speculation
+    /// support — the engine-wide draft ceiling.
+    spec_k: usize,
+    /// Per-slot adaptive draft window (equal to `spec_k` when adaptation
+    /// is off); reset at admission/resume, updated per speculative step.
+    spec_win: Vec<usize>,
     pub stats: EngineStats,
     pub decode_latency_ms: Samples,
 }
@@ -334,6 +373,7 @@ impl<M: StepModel> InferenceEngine<M> {
         let max_seq = model.max_seq();
         let layout = model.kv_layout();
         let sharing = cfg.prefix_cache && model.supports_block_sharing();
+        let spec_k = if model.supports_speculation() { cfg.speculate_k } else { 0 };
         InferenceEngine {
             queue: AdmissionQueue::new(cfg.queue_capacity),
             slots: BlockAllocator::new(batch),
@@ -354,6 +394,8 @@ impl<M: StepModel> InferenceEngine<M> {
             pins_suspended: false,
             step_faults: Vec::new(),
             clock: Clock::Wall(Instant::now()),
+            spec_k,
+            spec_win: vec![spec_k; batch],
             stats: EngineStats::default(),
             decode_latency_ms: Samples::new(),
             model,
@@ -702,14 +744,36 @@ impl<M: StepModel> InferenceEngine<M> {
                     request: req.id,
                     priority: req.params.priority,
                     blocks_held: owned,
-                    needs_block: st.next_pos >= self.tables[slot].capacity(),
+                    next_pos: st.next_pos,
+                    table_blocks: self.tables[slot].blocks().len(),
+                    spec_window: self.spec_window_for(slot, st.next_pos, req),
                 }
             })
             .collect()
     }
 
+    /// Draft tokens the engine wants the planner to grant `slot` this
+    /// step: 0 when speculation is off (engine-wide or for this request
+    /// — non-greedy sampling consumes RNG per token, so drafting would
+    /// change the stream), otherwise the slot's adaptive window clamped
+    /// to the sequence-length and max-tokens room actually left.
+    fn spec_window_for(&self, slot: usize, next_pos: usize, req: &Request) -> usize {
+        if self.spec_k == 0 || req.params.temperature > 0.0 {
+            return 0;
+        }
+        // The verify writes rows at next_pos..=next_pos+w, all < max_seq.
+        let room = self.max_request_seq().saturating_sub(next_pos + 1);
+        // Tokens the request can still emit beyond the guaranteed one.
+        let want = req
+            .params
+            .max_tokens
+            .saturating_sub(req.generated.len())
+            .saturating_sub(1);
+        self.spec_win[slot].min(room).min(want)
+    }
+
     fn execute_plan(&mut self, plan: StepPlan) -> Result<StepOutcome> {
-        let outcome = StepOutcome {
+        let mut outcome = StepOutcome {
             admitted: plan.admissions.len(),
             prefill_chunks: plan.prefill_chunks.len(),
             decoded_slots: plan
@@ -717,6 +781,7 @@ impl<M: StepModel> InferenceEngine<M> {
                 .as_ref()
                 .map(|d| d.slots.len())
                 .unwrap_or(0),
+            decoded_tokens: 0,
             preempted: plan.preemptions.len(),
             resumed: plan.resumes.len(),
             aborted: plan.aborts.len(),
@@ -742,7 +807,7 @@ impl<M: StepModel> InferenceEngine<M> {
             self.run_prefill_chunk(chunk)?;
         }
         if let Some(batch) = &plan.decode {
-            self.do_decode_step(batch)?;
+            outcome.decoded_tokens = self.do_decode_step(batch)?;
         }
         if plan.is_mixed() {
             self.stats.mixed_steps += 1;
@@ -871,6 +936,7 @@ impl<M: StepModel> InferenceEngine<M> {
         self.model.kv_restore(r.slot, &swap)?;
         self.model.set_slot_degrade(r.slot, req.params.degrade);
         req.state = RequestState::Decoding { slot: r.slot };
+        self.spec_win[r.slot] = self.spec_k;
         self.batcher.occupy(r.slot, req.id, next_pos, pending_token);
         self.active.insert(r.slot, req);
         self.stats.resumes += 1;
@@ -993,15 +1059,20 @@ impl<M: StepModel> InferenceEngine<M> {
             return Ok(());
         }
         req.state = RequestState::Decoding { slot };
+        self.spec_win[slot] = self.spec_k;
         self.batcher.occupy(slot, req.id, req.prompt.len(), tok);
         self.active.insert(slot, req);
         Ok(())
     }
 
-    fn do_decode_step(&mut self, batch: &DecodeBatch) -> Result<()> {
-        // Grow the tables of planned slots whose next write crosses a
-        // block boundary (the scheduler budgeted these allocations).
-        for &slot in &batch.slots {
+    /// Run the plan's decode batch, plain or speculative, and return the
+    /// number of tokens actually retired.
+    fn do_decode_step(&mut self, batch: &DecodeBatch) -> Result<usize> {
+        debug_assert_eq!(batch.slots.len(), batch.draft.len(), "ragged decode batch");
+        // Grow the tables of planned slots to cover every write of this
+        // step — the base token plus any granted draft window (the
+        // scheduler budgeted these allocations).
+        for (i, &slot) in batch.slots.iter().enumerate() {
             let next_pos = self
                 .batcher
                 .state(slot)
@@ -1009,7 +1080,8 @@ impl<M: StepModel> InferenceEngine<M> {
                     anyhow!("scheduler bug: decode batch names idle slot {slot}")
                 })?
                 .next_pos;
-            self.grow_table(slot, self.layout.blocks_for(next_pos + 1))?;
+            let w = batch.draft.get(i).copied().unwrap_or(0);
+            self.grow_table(slot, self.layout.blocks_for(next_pos + 1 + w))?;
             // Decode writes only land in blocks the slot owns alone:
             // partial prompt tails are never cache-indexed and resume
             // restores into fresh blocks, so no COW is needed here.
@@ -1020,6 +1092,14 @@ impl<M: StepModel> InferenceEngine<M> {
                 "decode write into a shared KV block (slot {slot})"
             );
         }
+        if batch.draft.iter().sum::<usize>() == 0 {
+            self.plain_decode_step(batch)
+        } else {
+            self.speculative_decode_step(batch)
+        }
+    }
+
+    fn plain_decode_step(&mut self, batch: &DecodeBatch) -> Result<usize> {
         // Only the planned slots feed real inputs; occupied-but-unplanned
         // slots (stalled on a block) are masked so their cache state
         // cannot advance.
@@ -1051,7 +1131,168 @@ impl<M: StepModel> InferenceEngine<M> {
                 self.finish(req, slot, reason, true);
             }
         }
-        Ok(())
+        Ok(batch.slots.len())
+    }
+
+    /// One self-speculative decode step. `draft[i]` forced-fold draft
+    /// forwards propose greedy tokens for slot `slots[i]`; one batched
+    /// multi-row verify forward recomputes positions
+    /// `next_pos..=next_pos + draft[i]` exactly — overwriting the
+    /// approximate K/V rows the drafts wrote — and the longest agreeing
+    /// prefix plus the verify's own next token retire atomically.
+    /// Speculation is greedy-gated, and greedy sampling consumes no RNG,
+    /// so retired streams are bitwise identical to plain decode.
+    fn speculative_decode_step(&mut self, batch: &DecodeBatch) -> Result<usize> {
+        let n_slots = batch.slots.len();
+        let batch_n = self.model.batch();
+        let model_seq = self.model.max_seq();
+        let vocab = self.model.vocab();
+        let t0 = Instant::now();
+
+        // -- draft phase: one batched forced-fold forward per round -----
+        // cur[i] = (token, pos) the next draft round feeds for slot i.
+        let mut cur: Vec<(i32, usize)> = Vec::with_capacity(n_slots);
+        for &slot in &batch.slots {
+            let st = self.batcher.state(slot).ok_or_else(|| {
+                anyhow!("scheduler bug: decode batch names idle slot {slot}")
+            })?;
+            cur.push((st.pending_token, st.next_pos));
+        }
+        let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); n_slots];
+        let max_w = batch.draft.iter().copied().max().unwrap_or(0);
+        for round in 0..max_w {
+            let mut tokens = vec![0i32; batch_n];
+            let mut pos = vec![model_seq as i32; batch_n];
+            for (i, &slot) in batch.slots.iter().enumerate() {
+                if batch.draft[i] > round {
+                    tokens[slot] = cur[i].0;
+                    pos[slot] = cur[i].1 as i32;
+                }
+            }
+            let logits = self.model.decode_draft(&tokens, &pos)?;
+            for (i, &slot) in batch.slots.iter().enumerate() {
+                if batch.draft[i] > round {
+                    let t = argmax(&logits[slot * vocab..(slot + 1) * vocab]);
+                    drafts[i].push(t);
+                    cur[i] = (t, cur[i].1 + 1);
+                }
+            }
+        }
+
+        // -- verify phase: one batched multi-row forward ----------------
+        // Per slot: the pending token at next_pos, then its drafts —
+        // slot-ascending, positions consecutive.
+        let mut vtokens = Vec::new();
+        let mut vslots = Vec::new();
+        let mut vpos = Vec::new();
+        let mut row0 = Vec::with_capacity(n_slots);
+        for (i, &slot) in batch.slots.iter().enumerate() {
+            let st = self.batcher.state(slot).expect("planned slot state");
+            row0.push(vtokens.len());
+            vtokens.push(st.pending_token);
+            vslots.push(slot);
+            vpos.push(st.next_pos as i32);
+            for (j, &dt) in drafts[i].iter().enumerate() {
+                vtokens.push(dt);
+                vslots.push(slot);
+                vpos.push((st.next_pos + 1 + j) as i32);
+            }
+        }
+        let logits = self.model.decode_multi(&vtokens, &vslots, &vpos)?;
+        self.decode_latency_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        self.stats.decode_steps += 1;
+        self.stats.spec_steps += 1;
+        self.stats.occupancy_sum += n_slots as u64;
+
+        // -- retirement: atomic per slot, sorted slot order -------------
+        let max_seq = self.max_request_seq();
+        let now_us = self.now_us();
+        let mut retired_total = 0usize;
+        for (i, &slot) in batch.slots.iter().enumerate() {
+            let w = drafts[i].len();
+            self.stats.spec_drafted += w as u64;
+            let mut matched = 0usize;
+            let mut finish_reason = None;
+            let degrade;
+            {
+                let Some(req) = self.active.get_mut(&slot) else {
+                    return Err(anyhow!(
+                        "scheduler bug: decode batch names idle slot {slot}"
+                    ));
+                };
+                degrade = req.params.degrade;
+                let rng = self.rngs.get_mut(&req.id).expect("rng");
+                for r in 0..=w {
+                    let row = &logits[(row0[i] + r) * vocab..(row0[i] + r + 1) * vocab];
+                    // Greedy (speculation is gated on temperature 0), so
+                    // `sample` is argmax and consumes no RNG.
+                    let tok = sample(row, &req.params, rng);
+                    req.record_token(tok);
+                    req.first_token_us.get_or_insert(now_us);
+                    self.stats.tokens_generated += 1;
+                    self.batcher.advance(slot, tok);
+                    retired_total += 1;
+                    if let Some(reason) = req.stop_reason(max_seq) {
+                        finish_reason = Some(reason);
+                        break;
+                    }
+                    if r < w {
+                        if tok == drafts[i][r] {
+                            // The draft agreed: row r+1's input was this
+                            // very token, so its logits are valid too.
+                            matched += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                }
+            }
+            self.stats.spec_accepted += matched as u64;
+            if self.cfg.speculate_adaptive && w > 0 {
+                // Back off toward 1 when most drafts miss, recover when
+                // a whole window lands; degraded requests verify through
+                // the forced fold itself (drafts always agree), so their
+                // ceiling doubles.
+                let cap = if degrade { self.spec_k * 2 } else { self.spec_k }.max(1);
+                let win = &mut self.spec_win[slot];
+                if matched == w {
+                    *win = (*win + 1).min(cap);
+                } else if matched * 2 < w {
+                    *win = win.saturating_sub(1).max(1);
+                }
+            }
+            if let Some(reason) = finish_reason {
+                let req = self.active.remove(&slot).expect("req");
+                self.finish(req, slot, reason, true);
+            } else {
+                // Roll the block table back to exactly what the retired
+                // tokens need: the rejected tail's cells are unreachable
+                // (attention reads only 0..=pos) but its surplus blocks
+                // must return to the pool before the next plan.
+                let next_pos =
+                    self.batcher.state(slot).expect("planned slot state").next_pos;
+                self.truncate_kv(slot, next_pos);
+            }
+        }
+        Ok(retired_total)
+    }
+
+    /// Shrink `slot`'s block table to what `tokens` resident KV entries
+    /// need, releasing surplus (speculative-growth) blocks and mirroring
+    /// the new mapping into the model.
+    fn truncate_kv(&mut self, slot: usize, tokens: usize) {
+        let popped = self.tables[slot].truncate(self.layout.blocks_for(tokens));
+        if popped.is_empty() {
+            return;
+        }
+        for b in popped {
+            debug_assert!(
+                self.blocks.ref_count(b) == 1,
+                "speculative growth block {b} is shared"
+            );
+            self.blocks.release(b);
+        }
+        self.model.kv_map(slot, &self.tables[slot]);
     }
 
     fn finish(&mut self, mut req: Request, slot: usize, reason: FinishReason, in_batcher: bool) {
@@ -1348,6 +1589,136 @@ mod tests {
         let done = e2.run_to_completion().unwrap();
         let c2 = done.iter().find(|c| c.id == id).unwrap();
         assert_eq!(c1.tokens, c2.tokens, "batching must not change outputs");
+    }
+
+    fn spec_engine(batch: usize, k: usize, miss_period: usize) -> InferenceEngine<MockModel> {
+        let model = MockModel::new(batch, 64, 16, vec![4, 8]).with_draft_misses(miss_period);
+        let cfg = EngineConfig { speculate_k: k, ..Default::default() };
+        InferenceEngine::new(model, cfg)
+    }
+
+    #[test]
+    fn speculative_stream_matches_plain_decode() {
+        // Drafts diverge from the verifier every 3rd position, so both
+        // full acceptance and mid-window rejection are exercised — the
+        // retired stream must still be bitwise the plain stream.
+        let reference = {
+            let mut e = engine(2);
+            for i in 0..3 {
+                let params = SamplingParams { max_tokens: 10, ..Default::default() };
+                e.submit(vec![1 + i, 5, 9], params).unwrap();
+            }
+            let mut done = e.run_to_completion().unwrap();
+            done.sort_by_key(|c| c.id);
+            done
+        };
+        let mut e = spec_engine(2, 4, 3);
+        for i in 0..3 {
+            let params = SamplingParams { max_tokens: 10, ..Default::default() };
+            e.submit(vec![1 + i, 5, 9], params).unwrap();
+        }
+        let mut done = e.run_to_completion().unwrap();
+        done.sort_by_key(|c| c.id);
+        assert!(e.stats.spec_steps > 0, "speculation never engaged");
+        assert!(e.stats.spec_drafted > 0);
+        let acc = e.stats.spec_acceptance().unwrap();
+        assert!((0.0..=1.0).contains(&acc), "acceptance {acc}");
+        for (a, b) in reference.iter().zip(&done) {
+            assert_eq!(a.tokens, b.tokens, "speculation changed request {} output", a.id);
+            assert_eq!(a.reason, b.reason);
+        }
+    }
+
+    #[test]
+    fn speculation_retires_multiple_tokens_per_step() {
+        // Perfectly agreeing drafts (miss period 0): every verify accepts
+        // the whole window, so the decode-step count must drop well below
+        // the token count.
+        let mut e = spec_engine(1, 4, 0);
+        let params = SamplingParams { max_tokens: 16, ..Default::default() };
+        e.submit(vec![3, 1], params).unwrap();
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(done[0].tokens.len(), 16);
+        assert!((e.stats.spec_acceptance().unwrap() - 1.0).abs() < 1e-9);
+        assert!(
+            e.stats.decode_steps < 8,
+            "16 tokens should need far fewer than 16 decode steps, got {}",
+            e.stats.decode_steps
+        );
+    }
+
+    #[test]
+    fn sampled_requests_bypass_speculation() {
+        // temperature > 0 consumes RNG per token; speculation is greedy
+        // only, so sampled requests must take the plain path untouched.
+        let mut e = spec_engine(1, 4, 0);
+        let params = SamplingParams { max_tokens: 6, temperature: 0.8, ..Default::default() };
+        e.submit(vec![2, 7], params).unwrap();
+        e.run_to_completion().unwrap();
+        assert_eq!(e.stats.spec_steps, 0, "sampled request must not speculate");
+        assert_eq!(e.stats.spec_drafted, 0);
+        assert!(e.stats.spec_acceptance().is_none());
+    }
+
+    #[test]
+    fn speculative_rollback_conserves_blocks_under_pressure() {
+        // Tight pool + draft misses: rejected tails truncate KV and the
+        // pool must balance to zero once everything finishes.
+        let reference = {
+            let model = MockModel::new(2, 64, 16, vec![4, 8]).with_kv_layout(6, 4);
+            let cfg = EngineConfig { prefix_cache: false, ..Default::default() };
+            let mut e = InferenceEngine::new(model, cfg);
+            for i in 0..2 {
+                let params = SamplingParams { max_tokens: 12, ..Default::default() };
+                e.submit(vec![1 + i; 9], params).unwrap();
+            }
+            let mut done = e.run_to_completion().unwrap();
+            done.sort_by_key(|c| c.id);
+            done
+        };
+        let model = MockModel::new(2, 64, 16, vec![4, 8])
+            .with_kv_layout(6, 4)
+            .with_draft_misses(3);
+        let cfg =
+            EngineConfig { prefix_cache: false, speculate_k: 4, ..Default::default() };
+        let mut e = InferenceEngine::new(model, cfg);
+        for i in 0..2 {
+            let params = SamplingParams { max_tokens: 12, ..Default::default() };
+            e.submit(vec![1 + i; 9], params).unwrap();
+        }
+        let mut done = e.run_to_completion().unwrap();
+        done.sort_by_key(|c| c.id);
+        assert!(e.stats.spec_steps > 0);
+        assert_eq!(e.blocks.used(), 0, "speculative rollback leaked KV blocks");
+        for (a, b) in reference.iter().zip(&done) {
+            assert_eq!(a.tokens, b.tokens, "speculation under pressure changed outputs");
+        }
+    }
+
+    #[test]
+    fn adaptive_k_backs_off_and_recovers() {
+        // Frequent misses (every 2nd token) shrink the per-slot window;
+        // adaptive engines still match the plain stream bitwise.
+        let reference = {
+            let mut e = engine(1);
+            let params = SamplingParams { max_tokens: 14, ..Default::default() };
+            e.submit(vec![4, 2], params).unwrap();
+            e.run_to_completion().unwrap()
+        };
+        let model = MockModel::new(1, 64, 16, vec![4, 8]).with_draft_misses(2);
+        let cfg = EngineConfig {
+            speculate_k: 8,
+            speculate_adaptive: true,
+            ..Default::default()
+        };
+        let mut e = InferenceEngine::new(model, cfg);
+        let params = SamplingParams { max_tokens: 14, ..Default::default() };
+        e.submit(vec![4, 2], params).unwrap();
+        let done = e.run_to_completion().unwrap();
+        assert_eq!(reference[0].tokens, done[0].tokens);
+        let acc = e.stats.spec_acceptance().unwrap();
+        assert!(acc < 1.0, "miss period 2 must reject some drafts, acceptance {acc}");
+        assert!(e.spec_win[0] < 8, "window should have backed off from 8");
     }
 
     #[test]

@@ -231,6 +231,17 @@ impl BlockTable {
         std::mem::take(&mut self.blocks)
     }
 
+    /// Speculative-decode rollback: keep the first `keep` blocks and pop
+    /// the rest, returning the dropped ids in logical order (the caller
+    /// releases them). Cells inside the kept blocks are untouched — a
+    /// rejected draft tail never moves data, it only shrinks the mapping.
+    pub fn truncate(&mut self, keep: usize) -> Vec<usize> {
+        if keep >= self.blocks.len() {
+            return Vec::new();
+        }
+        self.blocks.split_off(keep)
+    }
+
     /// Physical cell index of logical position `pos` (in token units;
     /// multiply by the per-token stride for a flat buffer offset).
     pub fn physical(&self, pos: usize) -> usize {
@@ -650,6 +661,21 @@ mod tests {
         assert_eq!(t.physical(4), 8, "COW swap leaves other blocks alone");
         let freed = t.clear();
         assert_eq!(freed, vec![5, 2]);
+        assert_eq!(t.capacity(), 0);
+    }
+
+    #[test]
+    fn block_table_truncate_pops_tail_only() {
+        let mut t = BlockTable::new(4);
+        for b in [9, 3, 6] {
+            t.push_block(b);
+        }
+        assert_eq!(t.truncate(3), Vec::<usize>::new());
+        assert_eq!(t.truncate(4), Vec::<usize>::new(), "over-long keep is a no-op");
+        assert_eq!(t.truncate(1), vec![3, 6]);
+        assert_eq!(t.blocks(), &[9]);
+        assert_eq!(t.physical(2), 38, "kept cells keep their mapping");
+        assert_eq!(t.truncate(0), vec![9]);
         assert_eq!(t.capacity(), 0);
     }
 

@@ -153,6 +153,41 @@ pub trait StepModel {
     /// slots carry (0, max_seq) sentinels. Returns logits `[batch*vocab]`.
     fn decode(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>>;
 
+    /// Whether [`Self::decode_draft`] runs a genuinely cheaper path and
+    /// [`Self::decode_multi`] works — the pair the engine's
+    /// self-speculative decode loop needs. Default: no.
+    fn supports_speculation(&self) -> bool {
+        false
+    }
+
+    /// One *draft* decode step: identical contract to [`Self::decode`],
+    /// but every FFN row is forced through the all-folded no-fallback
+    /// path regardless of per-slot degrade marks — the zero-extra-weight
+    /// draft model. KV rows it writes are approximations; the verify
+    /// forward overwrites them with exact values. Default: the plain
+    /// decode path (drafts then always agree, speculation degenerates to
+    /// extra work but stays correct).
+    fn decode_draft(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        self.decode(tokens, pos)
+    }
+
+    /// Multi-token verify: run `tokens[i]` in slot `slots[i]` at absolute
+    /// position `pos[i]` — all rows in ONE batched forward — and return
+    /// logits for every row, `[tokens.len()*vocab]` in input order. Rows
+    /// of one slot must be listed at consecutive ascending positions;
+    /// attention for row `i` sees the cache plus the same-forward rows
+    /// before it, and every row's K/V cells are (re)written with exact
+    /// values, overwriting whatever the draft pass left there. Backends
+    /// without speculation support return Err.
+    fn decode_multi(
+        &mut self,
+        _tokens: &[i32],
+        _slots: &[usize],
+        _pos: &[i32],
+    ) -> Result<Vec<f32>> {
+        Err(anyhow::anyhow!("backend does not support multi-token verify"))
+    }
+
     /// Cumulative partially-linear FFN routing telemetry (how many batch
     /// rows ran the folded path vs the dense outlier fallback), if this
     /// backend runs a TARDIS fold. Default: none.
@@ -341,6 +376,11 @@ pub struct NativeModel {
     /// [`StepModel::set_slot_degrade`]): a marked slot's rows are forced
     /// through the folded FFN path.
     degraded: Vec<bool>,
+    /// While true, [`NativeModel::forward`] forces EVERY row through the
+    /// all-folded no-fallback FFN path regardless of per-slot degrade
+    /// marks — the self-speculative draft pass. Set only inside
+    /// [`StepModel::decode_draft`].
+    draft_pass: bool,
     pub decode_steps: u64,
     pub prefill_chunks: u64,
 }
@@ -457,6 +497,7 @@ impl NativeModel {
             pool,
             scratch: Scratch::new(),
             degraded: vec![false; cfg.batch],
+            draft_pass: false,
             decode_steps: 0,
             prefill_chunks: 0,
             cfg,
@@ -517,8 +558,11 @@ impl NativeModel {
 
         // Degraded-service row mask: rows of marked slots take the
         // forced-fold FFN path in every layer (None when nothing is
-        // degraded, so the common case allocates no mask).
-        let forced: Option<Vec<bool>> = if self.degraded.iter().any(|&on| on) {
+        // degraded, so the common case allocates no mask). A draft pass
+        // forces every row, whatever the per-slot marks say.
+        let forced: Option<Vec<bool>> = if self.draft_pass {
+            Some(vec![true; n])
+        } else if self.degraded.iter().any(|&on| on) {
             Some(rows.iter().map(|r| self.degraded[r.slot]).collect())
         } else {
             None
@@ -827,6 +871,50 @@ impl StepModel for NativeModel {
         self.decode_steps += 1;
         Ok(out)
     }
+
+    fn supports_speculation(&self) -> bool {
+        true
+    }
+
+    fn decode_draft(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        self.draft_pass = true;
+        let out = self.decode(tokens, pos);
+        self.draft_pass = false;
+        out
+    }
+
+    fn decode_multi(&mut self, tokens: &[i32], slots: &[usize], pos: &[i32]) -> Result<Vec<f32>> {
+        let n = tokens.len();
+        anyhow::ensure!(slots.len() == n && pos.len() == n, "decode_multi: ragged row arrays");
+        let mut rows = Vec::with_capacity(n);
+        let mut last: Option<(usize, usize)> = None;
+        for i in 0..n {
+            let (b, p) = (slots[i], pos[i]);
+            anyhow::ensure!(b < self.cfg.batch, "decode_multi: slot {b} out of range");
+            anyhow::ensure!(
+                p >= 0 && (p as usize) < self.cfg.max_seq,
+                "decode_multi: position {p} out of range"
+            );
+            let p = p as usize;
+            anyhow::ensure!(
+                self.tables[b].capacity() > p,
+                "slot {b} block table holds {} tokens, verify writes at {p} (missing kv_map?)",
+                self.tables[b].capacity()
+            );
+            if let Some((lb, lp)) = last {
+                anyhow::ensure!(
+                    b > lb || (b == lb && p == lp + 1),
+                    "decode_multi: rows must be slot-ascending and position-consecutive"
+                );
+            }
+            last = Some((b, p));
+            rows.push(RowCtx { token: tokens[i], slot: b, pos: p });
+        }
+        let logit_rows: Vec<usize> = (0..n).collect();
+        let logits = self.forward(&rows, &logit_rows);
+        self.decode_steps += 1;
+        Ok(logits)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -866,6 +954,11 @@ pub struct MockModel {
     pub degrade_log: Vec<(usize, bool)>,
     /// artificial per-call cost knob for scheduler benches
     pub spin_per_call: std::time::Duration,
+    /// Deterministic draft-divergence knob: every `period`-th position
+    /// (1-based `pos + 1`) the draft argmax is shifted off the dense one,
+    /// so speculative tests exercise the rejection/rollback path. 0 =
+    /// drafts always agree (the default).
+    draft_miss_period: usize,
 }
 
 impl MockModel {
@@ -885,6 +978,7 @@ impl MockModel {
             plan_ends_seen: 0,
             degrade_log: Vec::new(),
             spin_per_call: std::time::Duration::ZERO,
+            draft_miss_period: 0,
         }
     }
 
@@ -896,9 +990,28 @@ impl MockModel {
         self
     }
 
+    /// Make the mock's draft path disagree with the dense path at every
+    /// `period`-th position (0 = drafts always agree), so speculative
+    /// tests can hit the reject/rollback path deterministically.
+    pub fn with_draft_misses(mut self, period: usize) -> Self {
+        self.draft_miss_period = period;
+        self
+    }
+
     fn logits_for(&self, token: i32, pos: usize) -> Vec<f32> {
         let mut l = vec![0f32; self.vocab];
         let target = ((token as usize) + pos) % self.vocab;
+        l[target] = 10.0;
+        l
+    }
+
+    /// Draft-path logits: identical to the dense path except at the
+    /// configured miss positions, where the argmax shifts by one.
+    fn draft_logits_for(&self, token: i32, pos: usize) -> Vec<f32> {
+        let mut l = vec![0f32; self.vocab];
+        let miss = self.draft_miss_period > 0 && (pos + 1) % self.draft_miss_period == 0;
+        let shift = if miss { 1 } else { 0 };
+        let target = ((token as usize) + pos + shift) % self.vocab;
         l[target] = 10.0;
         l
     }
@@ -1013,6 +1126,42 @@ impl StepModel for MockModel {
             } else {
                 out.extend(std::iter::repeat(0f32).take(self.vocab));
             }
+        }
+        self.decode_steps += 1;
+        Ok(out)
+    }
+
+    fn supports_speculation(&self) -> bool {
+        true
+    }
+
+    fn decode_draft(&mut self, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == self.batch && pos.len() == self.batch);
+        let mut out = Vec::with_capacity(self.batch * self.vocab);
+        for b in 0..self.batch {
+            if (pos[b] as usize) < self.max_seq {
+                self.state[b] = Some((tokens[b], pos[b] as usize));
+                out.extend(self.draft_logits_for(tokens[b], pos[b] as usize));
+            } else {
+                out.extend(std::iter::repeat(0f32).take(self.vocab));
+            }
+        }
+        self.decode_steps += 1;
+        Ok(out)
+    }
+
+    fn decode_multi(&mut self, tokens: &[i32], slots: &[usize], pos: &[i32]) -> Result<Vec<f32>> {
+        let n = tokens.len();
+        anyhow::ensure!(slots.len() == n && pos.len() == n, "decode_multi: ragged row arrays");
+        let mut out = Vec::with_capacity(n * self.vocab);
+        for i in 0..n {
+            anyhow::ensure!(slots[i] < self.batch, "decode_multi: slot out of range");
+            anyhow::ensure!(
+                pos[i] >= 0 && (pos[i] as usize) < self.max_seq,
+                "decode_multi: position out of range"
+            );
+            self.state[slots[i]] = Some((tokens[i], pos[i] as usize));
+            out.extend(self.logits_for(tokens[i], pos[i] as usize));
         }
         self.decode_steps += 1;
         Ok(out)
@@ -1198,6 +1347,90 @@ mod tests {
                 "step {s}"
             );
         }
+    }
+
+    #[test]
+    fn native_decode_multi_matches_sequential_decode_bitwise() {
+        // Draft forwards write approximate KV at the drafted positions;
+        // the one batched verify forward must overwrite them with exact
+        // values and return, row for row, bitwise the logits of plain
+        // sequential decode — the invariant the speculative loop's
+        // bitwise-identity guarantee rests on.
+        let tardis = crate::config::TardisFfnConfig {
+            fold_ratio: 0.8,
+            linear_lo: -8.0,
+            linear_hi: 8.0,
+            predictor_threshold: 1.05,
+        };
+        for mode in [FfnMode::Dense, FfnMode::Tardis(tardis)] {
+            let cfg = native_cfg();
+            let mut seq = NativeModel::new(cfg.clone(), &mode);
+            let mut spec = NativeModel::new(cfg, &mode);
+            let _ = seq.prefill(8, &[3, 7, 11, 2, 5, 0, 0, 0], 5, 0, 0).unwrap();
+            let _ = spec.prefill(8, &[3, 7, 11, 2, 5, 0, 0, 0], 5, 0, 0).unwrap();
+            let mut want = Vec::new();
+            for s in 5..8 {
+                let d = seq.decode(&[s, 0], &[s, 32]).unwrap();
+                want.extend_from_slice(&d[..32]);
+            }
+            // Approximate draft writes at positions 5 and 6...
+            let _ = spec.decode_draft(&[5, 0], &[5, 32]).unwrap();
+            let _ = spec.decode_draft(&[6, 0], &[6, 32]).unwrap();
+            // ...then one multi-row verify over positions 5..=7.
+            let got = spec.decode_multi(&[5, 6, 7], &[0, 0, 0], &[5, 6, 7]).unwrap();
+            assert_eq!(
+                want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{} verify rows",
+                mode.name()
+            );
+            // The verify left exact KV behind: the next plain decode
+            // matches the sequential stream bitwise too.
+            let ds = seq.decode(&[8, 0], &[8, 32]).unwrap();
+            let dm = spec.decode(&[8, 0], &[8, 32]).unwrap();
+            assert_eq!(
+                ds.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                dm.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{} post-verify decode",
+                mode.name()
+            );
+        }
+    }
+
+    #[test]
+    fn native_draft_pass_is_forced_fold_and_resets() {
+        // decode_draft must equal a degraded (forced-fold) decode bitwise
+        // and must not leave the forcing armed for later plain decodes.
+        let tardis = crate::config::TardisFfnConfig {
+            fold_ratio: 0.8,
+            linear_lo: -2.0,
+            linear_hi: 2.0,
+            predictor_threshold: 1.05,
+        };
+        let cfg = native_cfg();
+        let mode = FfnMode::Tardis(tardis);
+        let mut drafted = NativeModel::new(cfg.clone(), &mode);
+        let mut degraded = NativeModel::new(cfg.clone(), &mode);
+        let mut plain = NativeModel::new(cfg, &mode);
+        for m in [&mut drafted, &mut degraded, &mut plain] {
+            let _ = m.prefill(4, &[3, 7, 11, 0], 3, 0, 0).unwrap();
+        }
+        degraded.set_slot_degrade(0, true);
+        let a = drafted.decode_draft(&[4, 0], &[3, 32]).unwrap();
+        let b = degraded.decode(&[4, 0], &[3, 32]).unwrap();
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // Forcing is gone afterwards: the drafted model's next decode is
+        // the plain (predictor-routed) path again.
+        let c = drafted.decode(&[4, 0], &[4, 32]).unwrap();
+        let _ = plain.decode_draft(&[4, 0], &[3, 32]).unwrap();
+        let e = plain.decode(&[4, 0], &[4, 32]).unwrap();
+        assert_eq!(
+            c.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            e.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

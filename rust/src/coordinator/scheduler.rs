@@ -112,9 +112,27 @@ pub struct DecodeSlotView {
     /// requests survive the release and must not be counted as
     /// preemption gain (they only become cache-evictable).
     pub blocks_held: usize,
-    /// True when the next decode write falls past the table's capacity,
-    /// i.e. this step must allocate one fresh block for the slot.
-    pub needs_block: bool,
+    /// Next KV write position (== tokens resident in the slot's cache).
+    pub next_pos: usize,
+    /// Blocks the slot's table currently maps — owned *and* shared —
+    /// i.e. its write capacity in block units, which is what growth
+    /// arithmetic must be measured against (not `blocks_held`).
+    pub table_blocks: usize,
+    /// Draft tokens the engine wants to speculate for this slot on top
+    /// of the one guaranteed decode token (0 = plain decode: speculation
+    /// off, non-greedy sampling, or no window left). The planner may
+    /// grant any width `0..=spec_window`; every granted draft token is
+    /// charged against the token budget and the block ledger, so
+    /// speculation stays visible to preemption and SLO accounting.
+    pub spec_window: usize,
+}
+
+impl DecodeSlotView {
+    /// Fresh blocks this slot must allocate to retire `1 + draft` tokens
+    /// this step (decode writes at `next_pos..=next_pos + draft`).
+    fn blocks_needed(&self, draft: usize, block_size: usize) -> usize {
+        kv::blocks_for(self.next_pos + 1 + draft, block_size).saturating_sub(self.table_blocks)
+    }
 }
 
 /// Snapshot of one preempted (swapped-out) request, FIFO by preemption
@@ -218,6 +236,24 @@ pub struct Abort {
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct DecodeBatch {
     pub slots: Vec<usize>,
+    /// Speculative draft tokens granted per slot, parallel to `slots`
+    /// (all zeros when speculation is off): slot `slots[i]` retires
+    /// `1..=1 + draft[i]` tokens this step — the extra writes are
+    /// already charged in the plan's block ledger and token budget.
+    pub draft: Vec<usize>,
+}
+
+impl DecodeBatch {
+    /// A plain (non-speculative) batch: one token per slot.
+    pub fn plain(slots: Vec<usize>) -> Self {
+        let draft = vec![0; slots.len()];
+        DecodeBatch { slots, draft }
+    }
+
+    /// Tokens this batch may retire at most (rows + draft tokens).
+    pub fn planned_tokens(&self) -> usize {
+        self.slots.len() + self.draft.iter().sum::<usize>()
+    }
 }
 
 /// The composite plan for one engine iteration. Execution order:
@@ -259,6 +295,10 @@ pub struct StepOutcome {
     pub admitted: usize,
     pub prefill_chunks: usize,
     pub decoded_slots: usize,
+    /// Tokens the decode step actually retired: equals `decoded_slots`
+    /// for plain decode, up to `1 + draft` per slot when the step ran
+    /// speculatively (accepted drafts + the verify's own token).
+    pub decoded_tokens: usize,
     pub preempted: usize,
     pub resumed: usize,
     pub aborted: usize,
@@ -524,13 +564,13 @@ impl Scheduler {
     fn plan_mixed(&mut self, view: &SchedView) -> StepPlan {
         let mut plan = StepPlan::default();
         let mut avail_blocks = view.free_blocks;
-        let decoding = self.plan_decode(view, &mut plan, &mut avail_blocks);
         let budget = if self.cfg.max_step_tokens == 0 {
             usize::MAX
         } else {
             self.cfg.max_step_tokens
         };
-        let mut budget_left = budget.saturating_sub(decoding);
+        let decode_tokens = self.plan_decode(view, &mut plan, &mut avail_blocks, budget);
+        let mut budget_left = budget.saturating_sub(decode_tokens);
 
         let mut free_slots = view.free_slots.iter().copied();
         let resume_blocked = self.plan_resumes(view, &mut plan, &mut free_slots, &mut avail_blocks);
@@ -555,16 +595,24 @@ impl Scheduler {
         plan
     }
 
-    /// Decode batch with block-pressure preemption. Returns the number
-    /// of decode rows planned.
+    /// Decode batch with block-pressure preemption. The guaranteed one
+    /// token per slot is planned first (preempting/stalling on block
+    /// pressure exactly as before); speculative draft widths are granted
+    /// per retained slot afterwards, strictly from leftover blocks and
+    /// leftover token budget, so drafts can never cause a preemption or
+    /// starve prefill of its budget share. Returns the number of decode
+    /// TOKENS planned (rows + granted draft tokens) for the caller's
+    /// token-budget ledger.
     fn plan_decode(
         &mut self,
         view: &SchedView,
         plan: &mut StepPlan,
         avail_blocks: &mut usize,
+        token_budget: usize,
     ) -> usize {
+        let bs = view.block_size;
         let mut decoding: Vec<&DecodeSlotView> = view.decoding.iter().collect();
-        let mut need: usize = decoding.iter().filter(|d| d.needs_block).count();
+        let mut need: usize = decoding.iter().map(|d| d.blocks_needed(0, bs)).sum();
         if view.can_preempt {
             while need > *avail_blocks {
                 // Victim: lowest priority, tie-broken youngest (largest
@@ -573,9 +621,7 @@ impl Scheduler {
                 let Some(vi) = pick_victim(&decoding) else { break };
                 let v = decoding.remove(vi);
                 *avail_blocks += v.blocks_held;
-                if v.needs_block {
-                    need -= 1;
-                }
+                need -= v.blocks_needed(0, bs);
                 plan.preemptions.push(Preemption { request: v.request, slot: v.slot });
             }
         }
@@ -583,28 +629,45 @@ impl Scheduler {
             // No (further) preemption possible: stall the overflowing
             // slots this iteration, lowest slot first keeps going.
             let mut grant = *avail_blocks;
+            need = 0;
             decoding.retain(|d| {
-                if !d.needs_block {
-                    true
-                } else if grant > 0 {
-                    grant -= 1;
+                let n = d.blocks_needed(0, bs);
+                if n <= grant {
+                    grant -= n;
+                    need += n;
                     true
                 } else {
                     false
                 }
             });
-            need = *avail_blocks;
         }
         *avail_blocks -= need;
         if decoding.is_empty() {
-            0
-        } else {
-            let slots: Vec<usize> = decoding.iter().map(|d| d.slot).collect();
-            debug_assert!(slots.windows(2).all(|w| w[0] < w[1]));
-            let n = slots.len();
-            plan.decode = Some(DecodeBatch { slots });
-            n
+            return 0;
         }
+        // Draft grants, slot-ascending: each retained slot may draft up
+        // to its requested window, paying the *marginal* blocks past its
+        // base reservation and one budget token per draft token.
+        let mut tokens = decoding.len();
+        let mut spec_budget = token_budget.saturating_sub(tokens);
+        let draft: Vec<usize> = decoding
+            .iter()
+            .map(|d| {
+                let base = d.blocks_needed(0, bs);
+                let mut w = d.spec_window.min(spec_budget);
+                while w > 0 && d.blocks_needed(w, bs) - base > *avail_blocks {
+                    w -= 1;
+                }
+                *avail_blocks -= d.blocks_needed(w, bs) - base;
+                spec_budget -= w;
+                tokens += w;
+                w
+            })
+            .collect();
+        let slots: Vec<usize> = decoding.iter().map(|d| d.slot).collect();
+        debug_assert!(slots.windows(2).all(|w| w[0] < w[1]));
+        plan.decode = Some(DecodeBatch { slots, draft });
+        tokens
     }
 
     /// Resumes: preempted work takes free slots before fresh prompts,
@@ -799,7 +862,9 @@ impl Scheduler {
             self.plan_chunks(&jobs, &mut plan, &mut avail_blocks, &mut budget_left, cap);
         }
         if plan.prefill_chunks.is_empty() && active > 0 {
-            self.plan_decode(view, &mut plan, &mut avail_blocks);
+            // Segregated steps carry no token budget — draft grants are
+            // bounded by the per-slot windows and the block ledger only.
+            self.plan_decode(view, &mut plan, &mut avail_blocks, usize::MAX);
         }
         plan_last_resort(view, &mut plan);
 
@@ -890,15 +955,28 @@ mod tests {
             .collect()
     }
 
+    /// Legacy-shaped helper: `needs_block` is encoded as a `next_pos` /
+    /// `table_blocks` pair (block size 16, matching [`view`]) so the
+    /// pre-speculation tests keep reading naturally. `spec_window` = 0.
     fn decoding(specs: &[(usize, RequestId, i32, usize, bool)]) -> Vec<DecodeSlotView> {
         specs
             .iter()
-            .map(|&(slot, request, priority, blocks_held, needs_block)| DecodeSlotView {
-                slot,
-                request,
-                priority,
-                blocks_held,
-                needs_block,
+            .map(|&(slot, request, priority, blocks_held, needs_block)| {
+                let table_blocks = blocks_held;
+                let next_pos = if needs_block {
+                    table_blocks * 16
+                } else {
+                    (table_blocks * 16).saturating_sub(1)
+                };
+                DecodeSlotView {
+                    slot,
+                    request,
+                    priority,
+                    blocks_held,
+                    next_pos,
+                    table_blocks,
+                    spec_window: 0,
+                }
             })
             .collect()
     }
@@ -977,7 +1055,7 @@ mod tests {
         let plan = s.plan(&view(&q, &[4, 5], &inf, &dec));
         assert_eq!(plan.admissions, vec![Admission { request: 5, slot: 4 }]);
         assert_eq!(plan.prefill_chunks.len(), 2, "{plan:?}");
-        assert_eq!(plan.decode, Some(DecodeBatch { slots: vec![0, 1] }));
+        assert_eq!(plan.decode, Some(DecodeBatch::plain(vec![0, 1])));
         assert!(plan.is_mixed());
         assert!(plan.preemptions.is_empty());
     }
@@ -1034,7 +1112,7 @@ mod tests {
         v.free_blocks = 0;
         let plan = s.plan(&v);
         assert_eq!(plan.preemptions, vec![Preemption { request: 20, slot: 1 }]);
-        assert_eq!(plan.decode, Some(DecodeBatch { slots: vec![0, 2] }));
+        assert_eq!(plan.decode, Some(DecodeBatch::plain(vec![0, 2])));
     }
 
     #[test]
@@ -1114,9 +1192,75 @@ mod tests {
         assert!(plan.preemptions.is_empty());
         assert_eq!(
             plan.decode,
-            Some(DecodeBatch { slots: vec![1] }),
+            Some(DecodeBatch::plain(vec![1])),
             "block-starved slot is excluded, the rest decode"
         );
+    }
+
+    #[test]
+    fn speculative_drafts_granted_from_leftover_blocks() {
+        // Slot 0 sits mid-block (its 4 drafts cost no new blocks); slot 1
+        // sits one write before a block boundary with nothing free, so
+        // its drafts — which would need a fresh block — are denied while
+        // its guaranteed token still runs. Drafts never trigger
+        // preemption: they only spend what the base plan left over.
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let dec = vec![
+            DecodeSlotView {
+                slot: 0,
+                request: 1,
+                priority: 0,
+                blocks_held: 1,
+                next_pos: 10,
+                table_blocks: 1,
+                spec_window: 4,
+            },
+            DecodeSlotView {
+                slot: 1,
+                request: 2,
+                priority: 0,
+                blocks_held: 1,
+                next_pos: 15,
+                table_blocks: 1,
+                spec_window: 4,
+            },
+        ];
+        let mut v = view(&[], &[], &[], &dec);
+        v.free_blocks = 0;
+        let plan = s.plan(&v);
+        assert_eq!(plan.decode, Some(DecodeBatch { slots: vec![0, 1], draft: vec![4, 0] }));
+        assert!(plan.preemptions.is_empty(), "drafts must never preempt: {plan:?}");
+    }
+
+    #[test]
+    fn speculative_drafts_capped_by_token_budget() {
+        // 4-token mixed budget, two guaranteed decode rows: 2 budget
+        // tokens remain for drafts, granted slot-ascending.
+        let mut s =
+            Scheduler::new(SchedulerConfig { max_step_tokens: 4, ..SchedulerConfig::default() });
+        let dec = vec![
+            DecodeSlotView {
+                slot: 0,
+                request: 1,
+                priority: 0,
+                blocks_held: 1,
+                next_pos: 4,
+                table_blocks: 1,
+                spec_window: 8,
+            },
+            DecodeSlotView {
+                slot: 1,
+                request: 2,
+                priority: 0,
+                blocks_held: 1,
+                next_pos: 4,
+                table_blocks: 1,
+                spec_window: 8,
+            },
+        ];
+        let v = view(&[], &[], &[], &dec);
+        let plan = s.plan(&v);
+        assert_eq!(plan.decode, Some(DecodeBatch { slots: vec![0, 1], draft: vec![2, 0] }));
     }
 
     #[test]
@@ -1255,7 +1399,7 @@ mod tests {
         let q = queued(&[(9, 4, 0)]);
         let dec = decoding(&[(2, 1, 0, 1, false), (5, 2, 0, 1, false)]);
         let plan = s.plan(&view(&q, &[], &[], &dec)); // queue deep, no slot
-        assert_eq!(plan.decode, Some(DecodeBatch { slots: vec![2, 5] }));
+        assert_eq!(plan.decode, Some(DecodeBatch::plain(vec![2, 5])));
         assert!(plan.admissions.is_empty());
     }
 
@@ -1275,7 +1419,7 @@ mod tests {
         // Guard trips: decode-only plan, sorted slots.
         let p3 = s.plan(&v);
         assert!(p3.prefill_chunks.is_empty());
-        assert_eq!(p3.decode, Some(DecodeBatch { slots: vec![0, 1, 2] }));
+        assert_eq!(p3.decode, Some(DecodeBatch::plain(vec![0, 1, 2])));
         // Counter reset: prefill again.
         assert!(!s.plan(&v).prefill_chunks.is_empty());
     }
@@ -1447,7 +1591,9 @@ mod tests {
                         request: 9000 + slot as u64,
                         priority: 0,
                         blocks_held: 1,
-                        needs_block: false,
+                        next_pos: 15,
+                        table_blocks: 1,
+                        spec_window: 0,
                     })
                     .collect();
                 let plan = s.plan(&view(&q, &free, &inf, &dec));
@@ -1485,12 +1631,24 @@ mod tests {
             for iter in 0..100u64 {
                 let n_dec = rng.usize_below(5);
                 let dec: Vec<DecodeSlotView> = (0..n_dec)
-                    .map(|slot| DecodeSlotView {
-                        slot,
-                        request: iter * 100 + slot as u64,
-                        priority: rng.below(3) as i32,
-                        blocks_held: 1 + rng.usize_below(4),
-                        needs_block: rng.bool(0.5),
+                    .map(|slot| {
+                        let table_blocks = 1 + rng.usize_below(4);
+                        // half the slots need a fresh block for the base
+                        // token; spec windows ask for 0..=3 draft tokens
+                        let next_pos = if rng.bool(0.5) {
+                            table_blocks * bs
+                        } else {
+                            table_blocks * bs - 1
+                        };
+                        DecodeSlotView {
+                            slot,
+                            request: iter * 100 + slot as u64,
+                            priority: rng.below(3) as i32,
+                            blocks_held: table_blocks,
+                            next_pos,
+                            table_blocks,
+                            spec_window: rng.usize_below(4),
+                        }
                     })
                     .collect();
                 let inf: Vec<PrefillView> = (0..rng.usize_below(3))
@@ -1588,15 +1746,23 @@ mod tests {
                 let mut spend = 0usize;
                 if let Some(b) = &plan.decode {
                     prop_assert!(b.slots.windows(2).all(|w| w[0] < w[1]));
-                    for &slot in &b.slots {
+                    prop_assert!(b.draft.len() == b.slots.len(), "ragged draft widths");
+                    for (i, &slot) in b.slots.iter().enumerate() {
                         let d = dec.iter().find(|d| d.slot == slot).unwrap();
                         prop_assert!(
                             !plan.preemptions.iter().any(|p| p.slot == slot),
                             "decoding a preempted slot"
                         );
-                        if d.needs_block {
-                            spend += 1;
-                        }
+                        let w = b.draft[i];
+                        prop_assert!(
+                            w <= d.spec_window,
+                            "granted draft {w} beyond requested window {}",
+                            d.spec_window
+                        );
+                        // Charge what the engine will allocate: growth to
+                        // cover the base write plus the granted drafts.
+                        spend += kv::blocks_for(d.next_pos + 1 + w, bs)
+                            .saturating_sub(d.table_blocks);
                     }
                 }
                 for r in &plan.resumes {

